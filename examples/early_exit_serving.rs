@@ -1,0 +1,67 @@
+//! Early-exit serving demo: the *dynamic* compression stage at work.
+//!
+//! Trains exit heads on a small model, then serves single-sample requests
+//! through the staged AOT graphs (stage1 -> maybe stage2 -> maybe stage3),
+//! so confident requests genuinely skip computation.  Reports the
+//! latency/throughput effect of the confidence threshold — the runtime
+//! knob the paper sweeps.
+//!
+//!     make artifacts && cargo run --release --example early_exit_serving
+
+use anyhow::Result;
+
+use coc::chain::{stages, Chain, StageCtx};
+use coc::data::{Dataset, DatasetKind};
+use coc::models::Manifest;
+use coc::runtime::Engine;
+use coc::serve::Server;
+use coc::train::{self, TrainOpts};
+
+fn main() -> Result<()> {
+    let engine = Engine::new(coc::DEFAULT_ARTIFACTS)?;
+    let manifest = Manifest::load(coc::DEFAULT_ARTIFACTS)?;
+    let arch = manifest.arch("mini_vgg")?;
+
+    let train_ds = Dataset::generate(DatasetKind::SynthSVHN, 512, 7, 0);
+    let test_ds = Dataset::generate(DatasetKind::SynthSVHN, 256, 7, 1);
+
+    // Base training + exit-head training.
+    let mut state = train::init_state(&engine, arch, 7)?;
+    let opts = TrainOpts { steps: 180, ..Default::default() };
+    train::train(&engine, &mut state, &train_ds, None, &opts)?;
+    let ctx = StageCtx {
+        engine: &engine,
+        train: &train_ds,
+        test: &test_ds,
+        base_steps: 180,
+        seed: 7,
+        verbose: false,
+    };
+    Chain::new()
+        .push(Box::new(stages::EarlyExit { threshold: 0.8, ..Default::default() }))
+        .run(&mut state, &ctx)?;
+    let acc = train::eval_accuracy(&engine, &state, &test_ds)?;
+    println!("model ready: main-head acc {:.1}%", acc * 100.0);
+
+    // Serve under different thresholds: lower threshold -> more requests
+    // exit early -> lower latency, possibly lower accuracy.
+    let server = Server::new(&engine, state)?;
+    println!(
+        "{:>9} {:>8} {:>7} {:>7} {:>10} {:>10} {:>9}",
+        "threshold", "acc", "exit1", "exit2", "p50 µs", "p95 µs", "rps"
+    );
+    for t in [0.99f32, 0.9, 0.8, 0.65, 0.5, 0.35] {
+        let rep = server.serve_dataset(&test_ds, 200, t, t)?;
+        println!(
+            "{:>9.2} {:>7.1}% {:>6.0}% {:>6.0}% {:>10.0} {:>10.0} {:>9.0}",
+            t,
+            rep.accuracy * 100.0,
+            rep.p_exit1 * 100.0,
+            rep.p_exit2 * 100.0,
+            rep.latency_us.p50(),
+            rep.latency_us.p95(),
+            rep.throughput_rps
+        );
+    }
+    Ok(())
+}

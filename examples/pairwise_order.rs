@@ -1,0 +1,87 @@
+//! Pairwise-order study in miniature (paper §3): measure one pair of
+//! compression techniques in both orders and print which order's Pareto
+//! frontier dominates.
+//!
+//!     cargo run --release --example pairwise_order [-- PQ]
+//!
+//! The argument names the pair by letters (default PQ = prune/quantize;
+//! fastest pair since neither trains a student from scratch).
+
+use anyhow::{anyhow, Result};
+
+use coc::chain::{StageCtx, Technique};
+use coc::data::{Dataset, DatasetKind};
+use coc::models::Manifest;
+use coc::runtime::Engine;
+use coc::sweep;
+use coc::train::{self, TrainOpts};
+use coc::util::stats;
+
+fn main() -> Result<()> {
+    let pair = std::env::args().nth(1).unwrap_or_else(|| "PQ".to_string());
+    let mut letters = pair.chars();
+    let a = letters
+        .next()
+        .and_then(Technique::from_letter)
+        .ok_or_else(|| anyhow!("bad pair `{pair}`"))?;
+    let b = letters
+        .next()
+        .and_then(Technique::from_letter)
+        .ok_or_else(|| anyhow!("bad pair `{pair}`"))?;
+
+    let engine = Engine::new(coc::DEFAULT_ARTIFACTS)?;
+    let manifest = Manifest::load(coc::DEFAULT_ARTIFACTS)?;
+    let arch = manifest.arch("mini_resnet")?;
+    let train_ds = Dataset::generate(DatasetKind::SynthC10, 512, 42, 0);
+    let test_ds = Dataset::generate(DatasetKind::SynthC10, 128, 42, 1);
+
+    println!("training base model...");
+    let mut base = train::init_state(&engine, arch, 42)?;
+    train::train(
+        &engine,
+        &mut base,
+        &train_ds,
+        None,
+        &TrainOpts { steps: 150, ..Default::default() },
+    )?;
+
+    let ctx = StageCtx {
+        engine: &engine,
+        train: &train_ds,
+        test: &test_ds,
+        base_steps: 100,
+        seed: 42,
+        verbose: false,
+    };
+    let ladder = 3;
+    println!("sweeping {}{} and {}{} ...", a.letter(), b.letter(), b.letter(), a.letter());
+    let ab = sweep::pairwise_points(&base, a, b, &ctx, ladder)?;
+    let ba = sweep::pairwise_points(&base, b, a, &ctx, ladder)?;
+
+    for (tag, pts) in [("AB", &ab), ("BA", &ba)] {
+        for p in pts.iter() {
+            println!(
+                "  {} {:<10} acc {:>6.2}%  BitOpsCR {:>8.1}x",
+                tag,
+                p.config,
+                p.measurement.accuracy * 100.0,
+                p.measurement.bitops_cr
+            );
+        }
+    }
+    let sab = stats::frontier_score(&ab.iter().map(|p| p.xy()).collect::<Vec<_>>());
+    let sba = stats::frontier_score(&ba.iter().map(|p| p.xy()).collect::<Vec<_>>());
+    let (w1, w2) = if sab >= sba { (a, b) } else { (b, a) };
+    println!(
+        "frontier scores: {}{}={:.4}  {}{}={:.4}  ->  apply {} before {}",
+        a.letter(),
+        b.letter(),
+        sab,
+        b.letter(),
+        a.letter(),
+        sba,
+        w1.letter(),
+        w2.letter()
+    );
+    Ok(())
+}

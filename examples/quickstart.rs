@@ -1,0 +1,57 @@
+//! Quickstart: load the AOT artifacts, train a small CNN, apply one
+//! compression stage, and print the paper's metrics.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use anyhow::Result;
+
+use coc::chain::{stages, Chain, StageCtx};
+use coc::data::{Dataset, DatasetKind};
+use coc::metrics::Measurement;
+use coc::models::Manifest;
+use coc::runtime::Engine;
+use coc::train::{self, TrainOpts};
+
+fn main() -> Result<()> {
+    // 1. Engine + manifest (produced by `make artifacts`).
+    let engine = Engine::new(coc::DEFAULT_ARTIFACTS)?;
+    let manifest = Manifest::load(coc::DEFAULT_ARTIFACTS)?;
+    let arch = manifest.arch("mini_vgg")?;
+    println!("platform {}, arch {} ({} layers)", engine.platform(), arch.name, arch.layers.len());
+
+    // 2. Synthetic CIFAR10-analog data (deterministic, seeded).
+    let train_ds = Dataset::generate(DatasetKind::SynthC10, 512, 42, 0);
+    let test_ds = Dataset::generate(DatasetKind::SynthC10, 128, 42, 1);
+
+    // 3. Train a base fp32 model via the AOT train graph.
+    let mut state = train::init_state(&engine, arch, 42)?;
+    let opts = TrainOpts { steps: 120, log_every: 30, ..Default::default() };
+    let log = train::train(&engine, &mut state, &train_ds, None, &opts)?;
+    let base = Measurement::take(&engine, &state, &test_ds)?;
+    println!("base model: loss {:.3}, test acc {:.1}%", log.final_loss(), base.accuracy * 100.0);
+
+    // 4. One compression stage: 2-bit weights / 8-bit activations QAT.
+    let ctx = StageCtx {
+        engine: &engine,
+        train: &train_ds,
+        test: &test_ds,
+        base_steps: 120,
+        seed: 42,
+        verbose: true,
+    };
+    let chain = Chain::new().push(Box::new(stages::Quantize {
+        bits_w: 2.0,
+        bits_a: 8.0,
+        ..Default::default()
+    }));
+    let reports = chain.run(&mut state, &ctx)?;
+    let m = &reports.last().unwrap().measurement;
+    println!(
+        "after {}: acc {:.1}%  BitOpsCR {:.1}x  storage CR {:.1}x",
+        reports.last().unwrap().stage,
+        m.accuracy * 100.0,
+        m.bitops_cr,
+        m.storage_cr
+    );
+    Ok(())
+}

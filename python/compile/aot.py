@@ -1,0 +1,191 @@
+"""AOT compile path: lower every graph to HLO *text* + write manifest.json.
+
+HLO text (NOT ``lowered.compile()`` / serialized protos) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which
+xla_extension 0.5.1 (the version behind the published ``xla`` rust crate)
+rejects; the text parser reassigns ids and round-trips cleanly.  See
+/opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+Python runs ONCE here; the rust binary is self-contained afterwards.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import archs, model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _write(out_dir, fname, text):
+    path = os.path.join(out_dir, fname)
+    with open(path, "w") as f:
+        f.write(text)
+    return fname, hashlib.sha256(text.encode()).hexdigest()[:16], len(text)
+
+
+def lower_arch(net, out_dir):
+    """Lower all graphs for one architecture; return manifest entries."""
+    f32 = jnp.float32
+    P = model.param_specs(net)
+    M = model.mask_specs(net)
+    S = model.scalar()
+    nclass = archs.NUM_CLASSES
+    img = jax.ShapeDtypeStruct(
+        (model.TRAIN_BATCH, archs.IMG_HW, archs.IMG_HW, archs.IMG_C), f32)
+    img_eval = jax.ShapeDtypeStruct(
+        (model.EVAL_BATCH, archs.IMG_HW, archs.IMG_HW, archs.IMG_C), f32)
+    img_stage = jax.ShapeDtypeStruct(
+        (model.STAGE_BATCH, archs.IMG_HW, archs.IMG_HW, archs.IMG_C), f32)
+    y1h = jax.ShapeDtypeStruct((model.TRAIN_BATCH, nclass), f32)
+    tlog = jax.ShapeDtypeStruct((model.TRAIN_BATCH, nclass), f32)
+    exit_w = jax.ShapeDtypeStruct((2,), f32)
+    hp = jax.ShapeDtypeStruct((3,), f32)
+    h1_stage, h2_stage = model.seg_out_shape(net, model.STAGE_BATCH)
+    h1s = jax.ShapeDtypeStruct(h1_stage, f32)
+    h2s = jax.ShapeDtypeStruct(h2_stage, f32)
+
+    graphs = {}
+
+    def lower(tag, fn, *specs):
+        # keep_unused: stage graphs consume only a subset of params; without
+        # this, XLA prunes unused operands from the signature and the rust
+        # side (which passes the full flat param list) trips a buffer-count
+        # mismatch at execute time.
+        low = jax.jit(fn, keep_unused=True).lower(*specs)
+        fname, sha, size = _write(out_dir, f"{net.name}_{tag}.hlo.txt",
+                                  to_hlo_text(low))
+        graphs[tag] = {"file": fname, "sha256": sha, "bytes": size}
+
+    # init: seed -> params ++ momenta
+    lower("init", model.make_init_fn(net), S)
+
+    # train: flat operand list (params*, momenta*, x, y, masks*, qbw, qba,
+    #         tlogits, kd_alpha, kd_tau, exit_w, hp)
+    train_step = model.make_train_step(net)
+    nP = len(P)
+
+    def train_flat(*ops):
+        i = 0
+        params = list(ops[i:i + nP]); i += nP
+        momenta = list(ops[i:i + nP]); i += nP
+        x = ops[i]; i += 1
+        y = ops[i]; i += 1
+        masks = list(ops[i:i + len(M)]); i += len(M)
+        qbw = ops[i]; i += 1
+        qba = ops[i]; i += 1
+        tl = ops[i]; i += 1
+        ka = ops[i]; i += 1
+        kt = ops[i]; i += 1
+        ew = ops[i]; i += 1
+        hps = ops[i]; i += 1
+        return train_step(params, momenta, x, y, masks, qbw, qba, tl, ka, kt, ew, hps)
+
+    lower("train", train_flat,
+          *P, *P, img, y1h, *M, S, S, tlog, S, S, exit_w, hp)
+
+    # eval: (params*, masks*, qbw, qba, x) -> (logits, e1, e2)
+    eval_step = model.make_eval_step(net)
+
+    def eval_flat(*ops):
+        params = list(ops[:nP])
+        masks = list(ops[nP:nP + len(M)])
+        qbw, qba, x = ops[nP + len(M):]
+        return eval_step(params, masks, x, qbw, qba)
+
+    lower("eval", eval_flat, *P, *M, S, S, img_eval)
+
+    # staged eval at batch 1 (serving path: genuinely skip later segments)
+    s1, s2, s3 = model.make_stage_fns(net)
+
+    def stage_flat(fn, xin):
+        def f(*ops):
+            params = list(ops[:nP])
+            masks = list(ops[nP:nP + len(M)])
+            qbw, qba, x = ops[nP + len(M):]
+            return fn(params, masks, x, qbw, qba)
+        return f, xin
+
+    f1, _ = stage_flat(lambda p, m, x, bw, ba: s1(p, m, x, bw, ba), img_stage)
+    lower("stage1", f1, *P, *M, S, S, img_stage)
+    f2, _ = stage_flat(lambda p, m, h, bw, ba: s2(p, m, h, bw, ba), h1s)
+    lower("stage2", f2, *P, *M, S, S, h1s)
+    f3, _ = stage_flat(lambda p, m, h, bw, ba: s3(p, m, h, bw, ba), h2s)
+    lower("stage3", f3, *P, *M, S, S, h2s)
+
+    entry = net.describe()
+    h1_eval, h2_eval = model.seg_out_shape(net, model.STAGE_BATCH)
+    entry.update({
+        "graphs": graphs,
+        "train_batch": model.TRAIN_BATCH,
+        "eval_batch": model.EVAL_BATCH,
+        "stage_batch": model.STAGE_BATCH,
+        "stage_h1_shape": list(h1_eval),
+        "stage_h2_shape": list(h2_eval),
+        "num_params": len(P),
+        "num_masks": len(M),
+    })
+    return entry
+
+
+def lower_kernel_bench(out_dir):
+    """Standalone qmatmul graphs for the rust-side kernel micro-bench."""
+    from .kernels import qmatmul, qmatmul_tiled
+    f32 = jnp.float32
+    out = {}
+    a = jax.ShapeDtypeStruct((128, 256), f32)
+    w = jax.ShapeDtypeStruct((256, 128), f32)
+    s = model.scalar()
+    low = jax.jit(lambda a, w, ba, bw: (qmatmul(a, w, ba, bw),)).lower(a, w, s, s)
+    fname, sha, size = _write(out_dir, "kernel_qmatmul.hlo.txt", to_hlo_text(low))
+    out["qmatmul"] = {"file": fname, "sha256": sha, "bytes": size,
+                      "m": 128, "k": 256, "n": 128}
+    for bm, bn, bk, tag in [(64, 64, 128, "t64"), (128, 128, 128, "t128")]:
+        low = jax.jit(
+            lambda a, w, ba, bw, bm=bm, bn=bn, bk=bk:
+            (qmatmul_tiled(a, w, ba, bw, bm=bm, bn=bn, bk=bk),)
+        ).lower(a, w, s, s)
+        fname, sha, size = _write(out_dir, f"kernel_qmatmul_{tag}.hlo.txt",
+                                  to_hlo_text(low))
+        out[f"qmatmul_{tag}"] = {"file": fname, "sha256": sha, "bytes": size,
+                                 "m": 128, "k": 256, "n": 128,
+                                 "bm": bm, "bn": bn, "bk": bk}
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--archs", default="mini_vgg,mini_resnet,mini_mobilenet")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {"version": 1, "num_classes": archs.NUM_CLASSES,
+                "input": {"h": archs.IMG_HW, "w": archs.IMG_HW, "c": archs.IMG_C},
+                "archs": {}, "kernels": {}}
+    for name in args.archs.split(","):
+        net = archs.build(name)
+        print(f"lowering {name} ...", flush=True)
+        manifest["archs"][name] = lower_arch(net, args.out)
+    print("lowering kernel benches ...", flush=True)
+    manifest["kernels"] = lower_kernel_bench(args.out)
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"wrote {args.out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

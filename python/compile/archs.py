@@ -1,0 +1,483 @@
+"""L2: architecture definitions — MiniVGG / MiniResNet / MiniMobileNet.
+
+These are CIFAR-family CNNs scaled to the testbed (see DESIGN.md
+§Substitutions): each keeps the structural signature of the full model the
+paper evaluates (plain deep VGG stack / residual basic blocks /
+depthwise-separable inverted bottlenecks) so the four compression axes —
+Distillation (architecture), Pruning (channel), Quantization (bit),
+Early-exit (depth) — act exactly where they act in the paper.
+
+Every architecture is expressed once, as a registry of layers plus
+explicit segment-forward functions; the same registry drives
+
+* parameter initialization (He / Kaiming),
+* the jitted forward/backward (via the L1 Pallas quantizers),
+* the ``manifest.json`` descriptors from which the rust coordinator does
+  all BitOps / storage accounting.
+
+Compression knobs are *runtime operands* (see DESIGN.md): channel ``masks``
+(one f32 vector per mask slot), ``qbits_w`` / ``qbits_a`` scalars.  A single
+AOT artifact therefore serves every state of the compression chain.
+
+Each net is split into three segments with an early-exit head after
+segment 1 and segment 2:
+
+    x -> seg1 -> [exit1 head]
+          `----> seg2 -> [exit2 head]
+                  `----> seg3 -> main logits
+
+Staged artifacts cut the graph at these boundaries so the rust serving
+loop can genuinely skip seg2/seg3 when an exit fires.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels import weight_quant, act_quant, qmatmul
+
+NUM_CLASSES = 20
+IMG_HW = 16
+IMG_C = 3
+
+
+def _rmsnorm(x, mask=None):
+    """Parameter-free per-sample RMS normalization over (H, W, C).
+
+    Stabilizes the deep fp32->low-bit transitions without batch statistics
+    (keeps graphs stateless — no running means to thread through PJRT).
+    Costs O(HWC) adds, negligible against conv BitOps; excluded from
+    BitOps accounting like the paper excludes normalization layers.
+
+    When ``mask`` (a per-channel 0/1 vector) is given, ``x`` is assumed
+    already masked and the statistic is computed over *live channels only*
+    — this keeps masked networks numerically identical to physically
+    pruned ones (see test_archs.py::TestMasks).
+    """
+    if mask is None:
+        ms = jnp.mean(jnp.square(x), axis=(1, 2, 3), keepdims=True)
+    else:
+        live = jnp.maximum(jnp.sum(mask), 1.0)
+        denom = x.shape[1] * x.shape[2] * live
+        ms = jnp.sum(jnp.square(x), axis=(1, 2, 3), keepdims=True) / denom
+    return x * lax.rsqrt(ms + 1e-6)
+
+
+def _dw_geom(H, W, stride):
+    """SAME-padding geometry shared by the depthwise fwd and bwd passes."""
+    ho = -(-H // stride)
+    wo = -(-W // stride)
+    # XLA SAME padding: total = (out-1)*stride + k - in, split low = total//2.
+    th = max((ho - 1) * stride + 3 - H, 0)
+    tw = max((wo - 1) * stride + 3 - W, 0)
+    return ho, wo, th, tw
+
+
+from functools import partial as _partial
+
+
+@_partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _depthwise3x3(x, w, stride):
+    """Depthwise 3x3 conv (SAME) as a sum of 9 shifted elementwise products.
+
+    ``x``: (B, H, W, C); ``w``: (3, 3, 1, C).  Equivalent to
+    ``lax.conv_general_dilated(..., feature_group_count=C)`` (tested against
+    it) but avoids XLA CPU's slow grouped-conv path.  The backward pass is
+    hand-written in the same shifted-elementwise form (pads and slices only
+    — no scatters), which is ~5x faster through XLA CPU than autodiff of
+    the strided slices.
+    """
+    H, W = x.shape[1], x.shape[2]
+    ho, wo, th, tw = _dw_geom(H, W, stride)
+    xp = jnp.pad(x, ((0, 0), (th // 2, th - th // 2), (tw // 2, tw - tw // 2), (0, 0)))
+    y = None
+    for dy in range(3):
+        for dx in range(3):
+            patch = xp[:, dy:dy + (ho - 1) * stride + 1:stride,
+                       dx:dx + (wo - 1) * stride + 1:stride, :] * w[dy, dx, 0, :]
+            y = patch if y is None else y + patch
+    return y
+
+
+def _depthwise3x3_fwd(x, w, stride):
+    return _depthwise3x3(x, w, stride), (x, w)
+
+
+def _depthwise3x3_bwd(stride, res, g):
+    x, w = res
+    B, H, W, C = x.shape
+    ho, wo, th, tw = _dw_geom(H, W, stride)
+    Hp, Wp = H + th, W + tw
+    gh, gw = (ho - 1) * stride + 1, (wo - 1) * stride + 1
+    xp = jnp.pad(x, ((0, 0), (th // 2, th - th // 2), (tw // 2, tw - tw // 2), (0, 0)))
+
+    # Dilate g to stride spacing with pads + reshape (no scatter).
+    if stride > 1:
+        gd = jnp.pad(g[:, :, None, :, None, :],
+                     ((0, 0), (0, 0), (0, stride - 1), (0, 0), (0, stride - 1), (0, 0)))
+        gd = gd.reshape(B, ho * stride, wo * stride, C)[:, :gh, :gw, :]
+    else:
+        gd = g
+
+    dw_rows = []
+    dxp = jnp.zeros((B, Hp, Wp, C), x.dtype)
+    for dy in range(3):
+        dw_cols = []
+        for dx in range(3):
+            patch = xp[:, dy:dy + gh:stride, dx:dx + gw:stride, :]
+            dw_cols.append(jnp.sum(patch * g, axis=(0, 1, 2)))
+            dxp = dxp + jnp.pad(gd * w[dy, dx, 0, :],
+                                ((0, 0), (dy, Hp - gh - dy), (dx, Wp - gw - dx), (0, 0)))
+        dw_rows.append(jnp.stack(dw_cols))
+    dw = jnp.stack(dw_rows)[:, :, None, :]
+    dx_ = dxp[:, th // 2:th // 2 + H, tw // 2:tw // 2 + W, :]
+    return dx_, dw
+
+
+_depthwise3x3.defvjp(_depthwise3x3_fwd, _depthwise3x3_bwd)
+
+
+class Net:
+    """Layer registry + manifest description for one architecture."""
+
+    def __init__(self, name):
+        self.name = name
+        self.layers = []       # descriptor dicts, one per parameterized layer
+        self.mask_slots = []   # {name, channels}
+
+    # ----- construction ---------------------------------------------------
+
+    def add_mask(self, name, channels):
+        self.mask_slots.append({"name": name, "channels": int(channels)})
+        return len(self.mask_slots) - 1
+
+    def conv(self, name, cin, cout, k, stride, hout, wout,
+             in_mask=-1, out_mask=-1, depthwise=False, segment="seg1"):
+        self.layers.append({
+            "name": name, "kind": "dwconv" if depthwise else "conv",
+            "k": k, "cin": int(cin), "cout": int(cout), "stride": stride,
+            "hout": int(hout), "wout": int(wout),
+            "in_mask": in_mask, "out_mask": out_mask, "segment": segment,
+        })
+        return len(self.layers) - 1
+
+    def dense(self, name, fin, fout, in_mask=-1, segment="seg3"):
+        self.layers.append({
+            "name": name, "kind": "dense", "k": 1,
+            "cin": int(fin), "cout": int(fout), "stride": 1,
+            "hout": 1, "wout": 1,
+            "in_mask": in_mask, "out_mask": -1, "segment": segment,
+        })
+        return len(self.layers) - 1
+
+    # ----- parameters -----------------------------------------------------
+
+    def param_shapes(self):
+        """Flat parameter list: (w, b) per layer, in registry order."""
+        shapes = []
+        for l in self.layers:
+            if l["kind"] == "dense":
+                shapes.append((l["cin"], l["cout"]))
+            elif l["kind"] == "dwconv":
+                shapes.append((l["k"], l["k"], 1, l["cout"]))
+            else:
+                shapes.append((l["k"], l["k"], l["cin"], l["cout"]))
+            shapes.append((l["cout"],))
+        return shapes
+
+    def init_params(self, key):
+        params = []
+        for l in self.layers:
+            key, sub = jax.random.split(key)
+            if l["kind"] == "dense":
+                fan_in = l["cin"]
+                w = jax.random.normal(sub, (l["cin"], l["cout"]), jnp.float32)
+            elif l["kind"] == "dwconv":
+                fan_in = l["k"] * l["k"]
+                w = jax.random.normal(sub, (l["k"], l["k"], 1, l["cout"]), jnp.float32)
+            else:
+                fan_in = l["k"] * l["k"] * l["cin"]
+                w = jax.random.normal(sub, (l["k"], l["k"], l["cin"], l["cout"]), jnp.float32)
+            params.append(w * jnp.sqrt(2.0 / fan_in))
+            params.append(jnp.zeros((l["cout"],), jnp.float32))
+        return params
+
+    # ----- forward helpers --------------------------------------------------
+
+    def _wb(self, params, idx):
+        return params[2 * idx], params[2 * idx + 1]
+
+    def apply_conv(self, idx, x, params, masks, qbw, qba,
+                   act=True, norm=True, mask=True, quant_act=True):
+        """conv -> (+bias) -> channel mask -> rmsnorm(live) -> relu -> act_quant.
+
+        The mask is applied *before* normalization and the RMS statistic is
+        taken over live channels only, so a masked network is numerically
+        identical to the physically-pruned network (same forward, zero
+        gradients into dead channels).  ``mask=False`` only skips the
+        redundant post-activation re-mask used by residual callers; the
+        pre-norm mask always applies when the layer has an ``out_mask``.
+        """
+        l = self.layers[idx]
+        w, b = self._wb(params, idx)
+        wq = weight_quant(w, qbw)
+        if l["kind"] == "dwconv":
+            # Depthwise 3x3 as 9 shifted elementwise MACs: XLA CPU lowers
+            # grouped convolutions to a slow per-group loop, while this
+            # form fuses into vectorized elementwise ops (~4x faster here);
+            # on TPU both map to the same VPU work.
+            y = _depthwise3x3(x, wq, l["stride"])
+        else:
+            y = lax.conv_general_dilated(
+                x, wq, (l["stride"], l["stride"]), "SAME",
+                dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        y = y + b
+        mvec = masks[l["out_mask"]] if l["out_mask"] >= 0 else None
+        if mvec is not None:
+            y = y * mvec
+        if norm:
+            y = _rmsnorm(y, mvec)
+        if act:
+            y = jax.nn.relu(y)
+            if quant_act:
+                y = act_quant(y, qba)
+        return y
+
+    def finish_block(self, y, skip, out_mask, masks, qba):
+        """Residual join: relu(y + skip) -> act_quant -> mask."""
+        y = jax.nn.relu(y + skip)
+        y = act_quant(y, qba)
+        if out_mask >= 0:
+            y = y * masks[out_mask]
+        return y
+
+    def apply_dense(self, idx, x, params, qbw, qba):
+        """Fused fake-quantized matmul head (L1 qmatmul kernel)."""
+        w, b = self._wb(params, idx)
+        return qmatmul(x, w, qba, qbw) + b
+
+    # ----- manifest ---------------------------------------------------------
+
+    def describe(self):
+        return {
+            "name": self.name,
+            "num_classes": NUM_CLASSES,
+            "input": {"h": IMG_HW, "w": IMG_HW, "c": IMG_C},
+            "mask_slots": self.mask_slots,
+            "layers": self.layers,
+            "param_shapes": [list(s) for s in self.param_shapes()],
+        }
+
+
+def _gap(x):
+    return jnp.mean(x, axis=(1, 2))
+
+
+# ===========================================================================
+# MiniVGG — plain deep stack (VGG19 analog).
+# ===========================================================================
+
+class MiniVGG(Net):
+    def __init__(self):
+        super().__init__("mini_vgg")
+        m = self.add_mask
+        self.m_c1 = m("c1", 16); self.m_c2 = m("c2", 16)
+        self.m_c3 = m("c3", 32); self.m_c4 = m("c4", 32)
+        self.m_c5 = m("c5", 64); self.m_c6 = m("c6", 64)
+        c = self.conv
+        self.c1 = c("c1", 3, 16, 3, 1, 16, 16, -1, self.m_c1, segment="seg1")
+        self.c2 = c("c2", 16, 16, 3, 1, 16, 16, self.m_c1, self.m_c2, segment="seg1")
+        self.c3 = c("c3", 16, 32, 3, 1, 8, 8, self.m_c2, self.m_c3, segment="seg2")
+        self.c4 = c("c4", 32, 32, 3, 1, 8, 8, self.m_c3, self.m_c4, segment="seg2")
+        self.c5 = c("c5", 32, 64, 3, 1, 4, 4, self.m_c4, self.m_c5, segment="seg3")
+        self.c6 = c("c6", 64, 64, 3, 1, 4, 4, self.m_c5, self.m_c6, segment="seg3")
+        self.fc = self.dense("fc", 64, NUM_CLASSES, self.m_c6, segment="seg3")
+        self.x1 = self.dense("exit1_fc", 16, NUM_CLASSES, self.m_c2, segment="exit1")
+        self.x2 = self.dense("exit2_fc", 32, NUM_CLASSES, self.m_c4, segment="exit2")
+
+    def seg1(self, params, masks, x, qbw, qba):
+        h = self.apply_conv(self.c1, x, params, masks, qbw, qba)
+        h = self.apply_conv(self.c2, h, params, masks, qbw, qba)
+        return lax.reduce_window(h, -jnp.inf, lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+    def seg2(self, params, masks, h, qbw, qba):
+        h = self.apply_conv(self.c3, h, params, masks, qbw, qba)
+        h = self.apply_conv(self.c4, h, params, masks, qbw, qba)
+        return lax.reduce_window(h, -jnp.inf, lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+    def seg3(self, params, masks, h, qbw, qba):
+        h = self.apply_conv(self.c5, h, params, masks, qbw, qba)
+        h = self.apply_conv(self.c6, h, params, masks, qbw, qba)
+        return self.apply_dense(self.fc, _gap(h), params, qbw, qba)
+
+    def exit1(self, params, h, qbw, qba):
+        return self.apply_dense(self.x1, _gap(h), params, qbw, qba)
+
+    def exit2(self, params, h, qbw, qba):
+        return self.apply_dense(self.x2, _gap(h), params, qbw, qba)
+
+
+# ===========================================================================
+# MiniResNet — residual basic blocks (ResNet34 analog).
+# ===========================================================================
+
+class MiniResNet(Net):
+    def __init__(self):
+        super().__init__("mini_resnet")
+        m = self.add_mask
+        # Stage masks are shared across every output feeding a residual sum
+        # (standard channel-pruning treatment of identity skips); block
+        # conv1 gets a private mask.
+        self.m_s1 = m("stage1", 16)
+        self.m_b11 = m("b11_mid", 16); self.m_b12 = m("b12_mid", 16)
+        self.m_s2 = m("stage2", 32)
+        self.m_b21 = m("b21_mid", 32); self.m_b22 = m("b22_mid", 32)
+        self.m_s3 = m("stage3", 64)
+        self.m_b31 = m("b31_mid", 64); self.m_b32 = m("b32_mid", 64)
+
+        c = self.conv
+        self.stem = c("stem", 3, 16, 3, 1, 16, 16, -1, self.m_s1, segment="seg1")
+        # stage1: two blocks @16ch, 16x16
+        self.b11a = c("b11a", 16, 16, 3, 1, 16, 16, self.m_s1, self.m_b11, segment="seg1")
+        self.b11b = c("b11b", 16, 16, 3, 1, 16, 16, self.m_b11, self.m_s1, segment="seg1")
+        self.b12a = c("b12a", 16, 16, 3, 1, 16, 16, self.m_s1, self.m_b12, segment="seg1")
+        self.b12b = c("b12b", 16, 16, 3, 1, 16, 16, self.m_b12, self.m_s1, segment="seg1")
+        # stage2: downsample block + identity block @32ch, 8x8
+        self.b21a = c("b21a", 16, 32, 3, 2, 8, 8, self.m_s1, self.m_b21, segment="seg2")
+        self.b21b = c("b21b", 32, 32, 3, 1, 8, 8, self.m_b21, self.m_s2, segment="seg2")
+        self.b21p = c("b21p", 16, 32, 1, 2, 8, 8, self.m_s1, self.m_s2, segment="seg2")
+        self.b22a = c("b22a", 32, 32, 3, 1, 8, 8, self.m_s2, self.m_b22, segment="seg2")
+        self.b22b = c("b22b", 32, 32, 3, 1, 8, 8, self.m_b22, self.m_s2, segment="seg2")
+        # stage3: downsample block + identity block @64ch, 4x4
+        self.b31a = c("b31a", 32, 64, 3, 2, 4, 4, self.m_s2, self.m_b31, segment="seg3")
+        self.b31b = c("b31b", 64, 64, 3, 1, 4, 4, self.m_b31, self.m_s3, segment="seg3")
+        self.b31p = c("b31p", 32, 64, 1, 2, 4, 4, self.m_s2, self.m_s3, segment="seg3")
+        self.b32a = c("b32a", 64, 64, 3, 1, 4, 4, self.m_s3, self.m_b32, segment="seg3")
+        self.b32b = c("b32b", 64, 64, 3, 1, 4, 4, self.m_b32, self.m_s3, segment="seg3")
+        self.fc = self.dense("fc", 64, NUM_CLASSES, self.m_s3, segment="seg3")
+        self.x1 = self.dense("exit1_fc", 16, NUM_CLASSES, self.m_s1, segment="exit1")
+        self.x2 = self.dense("exit2_fc", 32, NUM_CLASSES, self.m_s2, segment="exit2")
+
+    def _block(self, a_idx, b_idx, h, params, masks, qbw, qba, out_mask, proj_idx=None):
+        mid = self.apply_conv(a_idx, h, params, masks, qbw, qba)
+        out = self.apply_conv(b_idx, mid, params, masks, qbw, qba,
+                              act=False, mask=False)
+        skip = h if proj_idx is None else self.apply_conv(
+            proj_idx, h, params, masks, qbw, qba, act=False, mask=False)
+        return self.finish_block(out, skip, out_mask, masks, qba)
+
+    def seg1(self, params, masks, x, qbw, qba):
+        h = self.apply_conv(self.stem, x, params, masks, qbw, qba)
+        h = self._block(self.b11a, self.b11b, h, params, masks, qbw, qba, self.m_s1)
+        h = self._block(self.b12a, self.b12b, h, params, masks, qbw, qba, self.m_s1)
+        return h
+
+    def seg2(self, params, masks, h, qbw, qba):
+        h = self._block(self.b21a, self.b21b, h, params, masks, qbw, qba,
+                        self.m_s2, proj_idx=self.b21p)
+        h = self._block(self.b22a, self.b22b, h, params, masks, qbw, qba, self.m_s2)
+        return h
+
+    def seg3(self, params, masks, h, qbw, qba):
+        h = self._block(self.b31a, self.b31b, h, params, masks, qbw, qba,
+                        self.m_s3, proj_idx=self.b31p)
+        h = self._block(self.b32a, self.b32b, h, params, masks, qbw, qba, self.m_s3)
+        return self.apply_dense(self.fc, _gap(h), params, qbw, qba)
+
+    def exit1(self, params, h, qbw, qba):
+        return self.apply_dense(self.x1, _gap(h), params, qbw, qba)
+
+    def exit2(self, params, h, qbw, qba):
+        return self.apply_dense(self.x2, _gap(h), params, qbw, qba)
+
+
+# ===========================================================================
+# MiniMobileNet — inverted residual bottlenecks (MobileNetV2 analog).
+# ===========================================================================
+
+class MiniMobileNet(Net):
+    """Width-scaled MobileNetV2 analog: expand(1x1) -> depthwise(3x3) ->
+    project(1x1); residual when stride 1 and cin == cout.  The paper's
+    MobileNetV2 student scales width, which is exactly what the expansion
+    and output masks express."""
+
+    def __init__(self):
+        super().__init__("mini_mobilenet")
+        m = self.add_mask
+        self.m_stem = m("stem", 16)
+        self.m_e1 = m("b1_exp", 32); self.m_o1 = m("b1_out", 24)
+        self.m_e2 = m("b2_exp", 48); self.m_o2 = m("b2_out", 32)
+        self.m_e3 = m("b3_exp", 64); self.m_o3 = m("b3_out", 64)
+        self.m_e4 = m("b4_exp", 128); self.m_o4 = m("b4_out", 96)
+        self.m_e5 = m("b5_exp", 192)  # block5 output shares m_o4 (residual)
+
+        c = self.conv
+        self.stem = c("stem", 3, 16, 3, 1, 16, 16, -1, self.m_stem, segment="seg1")
+        # block1: 16 -> 24, s1, 16x16
+        self.b1e = c("b1e", 16, 32, 1, 1, 16, 16, self.m_stem, self.m_e1, segment="seg1")
+        self.b1d = c("b1d", 32, 32, 3, 1, 16, 16, self.m_e1, self.m_e1, depthwise=True, segment="seg1")
+        self.b1p = c("b1p", 32, 24, 1, 1, 16, 16, self.m_e1, self.m_o1, segment="seg1")
+        # block2: 24 -> 32, s2, 8x8   (exit1 after this)
+        self.b2e = c("b2e", 24, 48, 1, 1, 16, 16, self.m_o1, self.m_e2, segment="seg1")
+        self.b2d = c("b2d", 48, 48, 3, 2, 8, 8, self.m_e2, self.m_e2, depthwise=True, segment="seg1")
+        self.b2p = c("b2p", 48, 32, 1, 1, 8, 8, self.m_e2, self.m_o2, segment="seg1")
+        # block3: 32 -> 64, s2, 4x4   (exit2 after this)
+        self.b3e = c("b3e", 32, 64, 1, 1, 8, 8, self.m_o2, self.m_e3, segment="seg2")
+        self.b3d = c("b3d", 64, 64, 3, 2, 4, 4, self.m_e3, self.m_e3, depthwise=True, segment="seg2")
+        self.b3p = c("b3p", 64, 64, 1, 1, 4, 4, self.m_e3, self.m_o3, segment="seg2")
+        # block4: 64 -> 96, s1, 4x4
+        self.b4e = c("b4e", 64, 128, 1, 1, 4, 4, self.m_o3, self.m_e4, segment="seg3")
+        self.b4d = c("b4d", 128, 128, 3, 1, 4, 4, self.m_e4, self.m_e4, depthwise=True, segment="seg3")
+        self.b4p = c("b4p", 128, 96, 1, 1, 4, 4, self.m_e4, self.m_o4, segment="seg3")
+        # block5: 96 -> 96, s1, residual, 4x4
+        self.b5e = c("b5e", 96, 192, 1, 1, 4, 4, self.m_o4, self.m_e5, segment="seg3")
+        self.b5d = c("b5d", 192, 192, 3, 1, 4, 4, self.m_e5, self.m_e5, depthwise=True, segment="seg3")
+        self.b5p = c("b5p", 192, 96, 1, 1, 4, 4, self.m_e5, self.m_o4, segment="seg3")
+        self.fc = self.dense("fc", 96, NUM_CLASSES, self.m_o4, segment="seg3")
+        self.x1 = self.dense("exit1_fc", 32, NUM_CLASSES, self.m_o2, segment="exit1")
+        self.x2 = self.dense("exit2_fc", 64, NUM_CLASSES, self.m_o3, segment="exit2")
+
+    def _ir_block(self, e, d, p, h, params, masks, qbw, qba, out_mask, residual=False):
+        y = self.apply_conv(e, h, params, masks, qbw, qba)
+        y = self.apply_conv(d, y, params, masks, qbw, qba)
+        y = self.apply_conv(p, y, params, masks, qbw, qba, act=False, mask=False)
+        if residual:
+            return self.finish_block(y, h, out_mask, masks, qba)
+        # Linear bottleneck output (no relu on project, as in MBv2);
+        # quantize and mask directly.
+        y = act_quant(y, qba)
+        if out_mask >= 0:
+            y = y * masks[out_mask]
+        return y
+
+    def seg1(self, params, masks, x, qbw, qba):
+        h = self.apply_conv(self.stem, x, params, masks, qbw, qba)
+        h = self._ir_block(self.b1e, self.b1d, self.b1p, h, params, masks, qbw, qba, self.m_o1)
+        h = self._ir_block(self.b2e, self.b2d, self.b2p, h, params, masks, qbw, qba, self.m_o2)
+        return h
+
+    def seg2(self, params, masks, h, qbw, qba):
+        return self._ir_block(self.b3e, self.b3d, self.b3p, h, params, masks, qbw, qba, self.m_o3)
+
+    def seg3(self, params, masks, h, qbw, qba):
+        h = self._ir_block(self.b4e, self.b4d, self.b4p, h, params, masks, qbw, qba, self.m_o4)
+        h = self._ir_block(self.b5e, self.b5d, self.b5p, h, params, masks, qbw, qba,
+                           self.m_o4, residual=True)
+        return self.apply_dense(self.fc, _gap(h), params, qbw, qba)
+
+    def exit1(self, params, h, qbw, qba):
+        return self.apply_dense(self.x1, _gap(h), params, qbw, qba)
+
+    def exit2(self, params, h, qbw, qba):
+        return self.apply_dense(self.x2, _gap(h), params, qbw, qba)
+
+
+ARCHS = {
+    "mini_vgg": MiniVGG,
+    "mini_resnet": MiniResNet,
+    "mini_mobilenet": MiniMobileNet,
+}
+
+
+def build(name):
+    return ARCHS[name]()

@@ -1,0 +1,10 @@
+"""L1: Pallas kernels for the Chain of Compression QAT hot-spot."""
+
+from .fake_quant import quantize_k, weight_quant, act_quant
+from .qmatmul import qmatmul, qmatmul_tiled
+from . import ref
+
+__all__ = [
+    "quantize_k", "weight_quant", "act_quant",
+    "qmatmul", "qmatmul_tiled", "ref",
+]

@@ -1,0 +1,105 @@
+"""L1 Pallas kernel: uniform fixed-point fake-quantization with runtime bit-width.
+
+This is the inner primitive of quantization-aware training (QAT) in the
+Chain of Compression: every weight and activation in a quantized network
+passes through ``quantize_k`` (DoReFa-style ``quantize_k`` from Zhou et al.
+2016).  The bit-width is a *runtime scalar operand* so a single AOT-lowered
+graph serves every point of the chain (``bits == 0`` disables quantization,
+i.e. the fp32 path).
+
+The kernel is written for TPU-style execution (elementwise VPU op over a
+VMEM-resident block) but is lowered with ``interpret=True`` so the emitted
+HLO runs on any PJRT backend, including the rust CPU client on the request
+path.  See DESIGN.md §Hardware-Adaptation.
+
+Straight-through estimation (STE) lives here too: ``quantize_k`` carries a
+``jax.custom_vjp`` whose backward pass is the identity w.r.t. ``x`` — the
+classic STE of DoReFa-Net.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _quantize_kernel(x_ref, bits_ref, o_ref):
+    """Pallas kernel body: o = round(x * n) / n with n = 2**bits - 1.
+
+    ``bits`` arrives as a (1, 1) f32 scalar block.  ``n`` is clamped to >= 1
+    so the ``bits == 0`` (quantization off) case stays finite; the caller
+    selects the un-quantized input in that case (see ``quantize_k``).
+    """
+    x = x_ref[...]
+    bits = bits_ref[0, 0]
+    n = jnp.maximum(jnp.exp2(bits) - 1.0, 1.0)
+    o_ref[...] = jnp.round(x * n) / n
+
+
+def _quantize_pallas(x2d, bits11):
+    """Single-block elementwise quantize over a 2-D view of ``x``.
+
+    Model tensors here are small (<= a few MB) so a single VMEM block
+    suffices; the tiled variant for large operands is ``qmatmul`` which
+    fuses quantization into the matmul block loop.
+    """
+    return pl.pallas_call(
+        _quantize_kernel,
+        out_shape=jax.ShapeDtypeStruct(x2d.shape, x2d.dtype),
+        interpret=True,
+    )(x2d, bits11)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=())
+def quantize_k(x, bits):
+    """DoReFa ``quantize_k``: uniform quantization of ``x`` in [0, 1] to
+    ``2**bits`` levels; identity when ``bits == 0``.  STE backward."""
+    shape = x.shape
+    x2d = x.reshape(1, -1) if x.ndim != 2 else x
+    bits11 = jnp.reshape(bits.astype(jnp.float32), (1, 1))
+    q = _quantize_pallas(x2d, bits11).reshape(shape)
+    return jnp.where(bits > 0, q, x)
+
+
+def _quantize_k_fwd(x, bits):
+    return quantize_k(x, bits), None
+
+
+def _quantize_k_bwd(_, g):
+    # Straight-through: d quantize_k / d x := 1.  No gradient to bits.
+    return g, jnp.zeros(())
+
+
+quantize_k.defvjp(_quantize_k_fwd, _quantize_k_bwd)
+
+
+def weight_quant(w, bits):
+    """DoReFa-style weight fake-quantization with magnitude rescale.
+
+    tanh-normalize to [0, 1], quantize to ``bits`` levels, map back to
+    [-s, s] where ``s = max|w|`` (stop-grad) so the quantized weights keep
+    the tensor's dynamic range — this keeps the ``bits on/off`` switch a
+    perturbation QAT can recover from, mirroring the paper's
+    quantize-then-fine-tune protocol.
+    """
+    t = jnp.tanh(w)
+    m = jnp.maximum(jnp.max(jnp.abs(t)), 1e-8)
+    tn = t / (2.0 * m) + 0.5
+    s = jax.lax.stop_gradient(jnp.maximum(jnp.max(jnp.abs(w)), 1e-8))
+    wq = (2.0 * quantize_k(tn, bits) - 1.0) * s
+    return jnp.where(bits > 0, wq, w)
+
+
+def act_quant(a, bits):
+    """Activation fake-quantization with per-tensor dynamic scale.
+
+    Post-ReLU activations are >= 0; scale by the (stop-grad) tensor max,
+    clip to [0, 1], quantize, rescale.  This is fixed-point uniform
+    activation quantization with a dynamic per-tensor scale — the
+    hardware-friendly scheme the paper adopts.
+    """
+    s = jax.lax.stop_gradient(jnp.maximum(jnp.max(jnp.abs(a)), 1e-8))
+    an = jnp.clip(a / s, 0.0, 1.0)
+    aq = quantize_k(an, bits) * s
+    return jnp.where(bits > 0, aq, a)

@@ -1,0 +1,178 @@
+"""L1 Pallas kernel: fused fake-quantized matmul — the QAT hot-spot.
+
+``C = Q_a(A) @ Q_w(W)`` with both operand quantizations fused into the
+matmul kernel so quantized values never round-trip through HBM.  Two
+variants:
+
+* ``qmatmul`` — single-block kernel with in-kernel per-tensor scales; used
+  by the L2 model for classifier / early-exit heads (operands are small
+  enough for one VMEM block).
+* ``qmatmul_tiled`` — grid-tiled (bm, bk) x (bk, bn) variant with
+  precomputed scales passed as scalar operands and an accumulator carried
+  across the K grid dimension.  This is the TPU/MXU-shaped path: blocks are
+  chosen as multiples of the 128x128 systolic tile, the BlockSpec expresses
+  the HBM->VMEM schedule, and quantization happens on the VMEM-resident
+  block right before it feeds the MXU.  See DESIGN.md §Hardware-Adaptation
+  and §Perf for the footprint/utilization analysis.
+
+Both are lowered with ``interpret=True`` (CPU-PJRT executable HLO).
+Backward pass: straight-through through the quantizers, standard matmul
+cotangents against the *quantized* operands (recomputed with the pure-jnp
+reference — cheap, and keeps the fwd kernel single-purpose).
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _qmatmul_kernel(a_ref, w_ref, ba_ref, bw_ref, o_ref):
+    """Single-block fused kernel: in-kernel scales, quantize, matmul."""
+    a = a_ref[...]
+    w = w_ref[...]
+    ba = ba_ref[0, 0]
+    bw = bw_ref[0, 0]
+
+    na = jnp.maximum(jnp.exp2(ba) - 1.0, 1.0)
+    nw = jnp.maximum(jnp.exp2(bw) - 1.0, 1.0)
+
+    # Activation: dynamic per-tensor scale, clip [0,1], quantize.
+    sa = jnp.maximum(jnp.max(jnp.abs(a)), 1e-8)
+    an = jnp.clip(a / sa, 0.0, 1.0)
+    aq = jnp.round(an * na) / na * sa
+    aq = jnp.where(ba > 0, aq, a)
+
+    # Weight: tanh-normalize, quantize, rescale to max|w|.
+    t = jnp.tanh(w)
+    m = jnp.maximum(jnp.max(jnp.abs(t)), 1e-8)
+    tn = t / (2.0 * m) + 0.5
+    sw = jnp.maximum(jnp.max(jnp.abs(w)), 1e-8)
+    wq = (2.0 * (jnp.round(tn * nw) / nw) - 1.0) * sw
+    wq = jnp.where(bw > 0, wq, w)
+
+    o_ref[...] = jnp.dot(aq, wq, preferred_element_type=jnp.float32)
+
+
+@partial(jax.custom_vjp)
+def qmatmul(a, w, bits_a, bits_w):
+    """Fused fake-quantized matmul ``(M,K) @ (K,N) -> (M,N)``.
+
+    ``bits_* == 0`` disables the corresponding quantization (fp32 path).
+    Backward is straight-through to ``a`` and ``w``.
+    """
+    ba = jnp.reshape(bits_a.astype(jnp.float32), (1, 1))
+    bw = jnp.reshape(bits_w.astype(jnp.float32), (1, 1))
+    return pl.pallas_call(
+        _qmatmul_kernel,
+        out_shape=jax.ShapeDtypeStruct((a.shape[0], w.shape[1]), jnp.float32),
+        interpret=True,
+    )(a, w, ba, bw)
+
+
+def _qmatmul_fwd(a, w, bits_a, bits_w):
+    out = qmatmul(a, w, bits_a, bits_w)
+    return out, (a, w, bits_a, bits_w)
+
+
+def _qmatmul_bwd(res, g):
+    a, w, bits_a, bits_w = res
+    # Recompute quantized operands with the jnp reference (cheap at these
+    # sizes); cotangents flow straight-through the quantizers.
+    aq = ref.act_quant_ref(a, bits_a)
+    wq = ref.weight_quant_ref(w, bits_w)
+    da = g @ wq.T
+    dw = aq.T @ g
+    return da, dw, jnp.zeros(()), jnp.zeros(())
+
+
+qmatmul.defvjp(_qmatmul_fwd, _qmatmul_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Tiled variant (TPU/MXU-shaped; exercised by tests and the kernel bench).
+# ---------------------------------------------------------------------------
+
+def _qmatmul_tiled_kernel(a_ref, w_ref, scal_ref, o_ref):
+    """Grid-tiled kernel: grid = (M/bm, N/bn, K/bk); K is the innermost
+    (minor) grid dimension so the f32 accumulator in ``o_ref`` is carried
+    across K steps for a fixed (i, j) output block.
+
+    ``scal_ref`` is a (1, 4) block: [bits_a, bits_w, scale_a, scale_w] —
+    per-tensor scales are precomputed by the caller because a block kernel
+    cannot see the global max.
+    """
+    k = pl.program_id(2)
+    ba = scal_ref[0, 0]
+    bw = scal_ref[0, 1]
+    sa = scal_ref[0, 2]
+    swt = scal_ref[0, 3]  # max|tanh(w)| — tn normalization
+    sww = scal_ref[0, 4]  # max|w|      — rescale, matches weight_quant
+
+    a = a_ref[...]
+    w = w_ref[...]
+
+    na = jnp.maximum(jnp.exp2(ba) - 1.0, 1.0)
+    nw = jnp.maximum(jnp.exp2(bw) - 1.0, 1.0)
+
+    an = jnp.clip(a / sa, 0.0, 1.0)
+    aq = jnp.where(ba > 0, jnp.round(an * na) / na * sa, a)
+
+    t = jnp.tanh(w)
+    tn = t / (2.0 * jnp.maximum(swt, 1e-8)) + 0.5
+    wq = jnp.where(bw > 0, (2.0 * (jnp.round(tn * nw) / nw) - 1.0) * sww, w)
+
+    acc = jnp.dot(aq, wq, preferred_element_type=jnp.float32)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = acc
+
+    @pl.when(k > 0)
+    def _acc():
+        o_ref[...] += acc
+
+
+def qmatmul_tiled(a, w, bits_a, bits_w, bm=128, bn=128, bk=128):
+    """Tiled fused fake-quantized matmul for MXU-aligned operands.
+
+    Requires ``M % bm == K % bk == N % bn == 0`` (callers pad).  VMEM
+    footprint per grid step = (bm*bk + bk*bn + bm*bn) * 4 bytes — e.g.
+    128^2 * 3 * 4 = 192 KiB, comfortably under the ~16 MiB VMEM budget,
+    leaving room for double-buffering the HBM->VMEM pipeline.
+    """
+    M, K = a.shape
+    K2, N = w.shape
+    assert K == K2 and M % bm == 0 and K % bk == 0 and N % bn == 0
+
+    # Per-tensor scales (global reductions happen outside the block kernel).
+    sa = jnp.maximum(jnp.max(jnp.abs(a)), 1e-8)
+    # Weight path folds max|tanh(w)| into the scalar so the kernel's
+    # normalization matches weight_quant: sw_norm for tn, max|w| for rescale.
+    swt = jnp.maximum(jnp.max(jnp.abs(jnp.tanh(w))), 1e-8)
+    sww = jnp.maximum(jnp.max(jnp.abs(w)), 1e-8)
+    scal = jnp.stack([
+        bits_a.astype(jnp.float32),
+        bits_w.astype(jnp.float32),
+        sa,
+        swt,
+        sww,
+    ]).reshape(1, 5)
+
+    grid = (M // bm, N // bn, K // bk)
+    out = pl.pallas_call(
+        _qmatmul_tiled_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, 5), lambda i, j, k: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        interpret=True,
+    )(a, w, scal)
+    return out

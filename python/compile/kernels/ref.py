@@ -1,0 +1,37 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the ground truth the kernels are tested against (pytest +
+hypothesis) and the recomputation path of the qmatmul backward pass.
+No pallas imports here — this module must stay a plain-jnp reference.
+"""
+
+import jax.numpy as jnp
+
+
+def quantize_k_ref(x, bits):
+    """round(x * n) / n with n = 2**bits - 1; identity when bits == 0."""
+    n = jnp.maximum(jnp.exp2(jnp.asarray(bits, jnp.float32)) - 1.0, 1.0)
+    return jnp.where(bits > 0, jnp.round(x * n) / n, x)
+
+
+def weight_quant_ref(w, bits):
+    """DoReFa weight fake-quant with max|w| rescale (see fake_quant.py)."""
+    t = jnp.tanh(w)
+    m = jnp.maximum(jnp.max(jnp.abs(t)), 1e-8)
+    tn = t / (2.0 * m) + 0.5
+    s = jnp.maximum(jnp.max(jnp.abs(w)), 1e-8)
+    wq = (2.0 * quantize_k_ref(tn, bits) - 1.0) * s
+    return jnp.where(bits > 0, wq, w)
+
+
+def act_quant_ref(a, bits):
+    """Dynamic per-tensor-scale activation fake-quant (see fake_quant.py)."""
+    s = jnp.maximum(jnp.max(jnp.abs(a)), 1e-8)
+    an = jnp.clip(a / s, 0.0, 1.0)
+    aq = quantize_k_ref(an, bits) * s
+    return jnp.where(bits > 0, aq, a)
+
+
+def qmatmul_ref(a, w, bits_a, bits_w):
+    """act_quant(a) @ weight_quant(w) in plain jnp."""
+    return act_quant_ref(a, bits_a) @ weight_quant_ref(w, bits_w)

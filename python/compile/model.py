@@ -1,0 +1,154 @@
+"""L2: training / evaluation graphs for the Chain of Compression.
+
+Every compression knob is a runtime operand so one AOT artifact per
+architecture serves the whole chain (see DESIGN.md):
+
+* ``masks``      — channel masks (pruning + width-scaled distillation)
+* ``qbw, qba``   — weight / activation fake-quant bit-widths (0 = fp32)
+* ``tlogits``    — teacher logits; ``kd_alpha``/``kd_tau`` gate classic
+                   Hinton KD (alpha 0 = plain CE)
+* ``exit_w``     — per-exit loss weights (0 = exits untrained)
+* ``hp``         — [lr, momentum, weight_decay] packed scalars
+
+Graphs emitted per arch (all lowered by aot.py to HLO text):
+
+  init    : seed                                  -> params ++ momenta
+  train   : params ++ momenta ++ batch ++ knobs   -> params' ++ momenta' ++ [loss, acc]
+  eval    : params ++ masks ++ bits ++ x          -> (logits, exit1, exit2)
+  stage1  : params ++ masks ++ bits ++ x          -> (exit1 logits, h1)
+  stage2  : params ++ masks ++ bits ++ h1         -> (exit2 logits, h2)
+  stage3  : params ++ masks ++ bits ++ h2         -> main logits
+
+The SGD-with-momentum update is fused into the train graph so the rust
+hot loop is a single PJRT execute per step.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import archs
+
+TRAIN_BATCH = 32
+EVAL_BATCH = 64
+STAGE_BATCH = 1
+
+
+def _log_softmax(z):
+    zm = z - jax.lax.stop_gradient(jnp.max(z, axis=-1, keepdims=True))
+    return zm - jnp.log(jnp.sum(jnp.exp(zm), axis=-1, keepdims=True))
+
+
+def cross_entropy(logits, y1h):
+    return -jnp.mean(jnp.sum(y1h * _log_softmax(logits), axis=-1))
+
+
+def kd_loss(student_logits, teacher_logits, tau):
+    """Classic Hinton distillation: tau^2 * KL(p_t^tau || p_s^tau)."""
+    t = jax.nn.softmax(teacher_logits / tau)
+    ls = _log_softmax(student_logits / tau)
+    lt = _log_softmax(teacher_logits / tau)
+    return (tau ** 2) * jnp.mean(jnp.sum(t * (lt - ls), axis=-1))
+
+
+def forward_all(net, params, masks, x, qbw, qba):
+    """Full forward with both exit heads."""
+    h1 = net.seg1(params, masks, x, qbw, qba)
+    e1 = net.exit1(params, h1, qbw, qba)
+    h2 = net.seg2(params, masks, h1, qbw, qba)
+    e2 = net.exit2(params, h2, qbw, qba)
+    logits = net.seg3(params, masks, h2, qbw, qba)
+    return logits, e1, e2
+
+
+def make_loss_fn(net):
+    def loss_fn(params, masks, x, y1h, qbw, qba,
+                tlogits, kd_alpha, kd_tau, exit_w, wd):
+        logits, e1, e2 = forward_all(net, params, masks, x, qbw, qba)
+        ce = cross_entropy(logits, y1h)
+        kd = kd_loss(logits, tlogits, kd_tau)
+        main = (1.0 - kd_alpha) * ce + kd_alpha * kd
+        # Exits learn from the data (the paper's DE finding: the student's
+        # own body, not the teacher, is the right signal for exit heads).
+        lexit = exit_w[0] * cross_entropy(e1, y1h) + exit_w[1] * cross_entropy(e2, y1h)
+        l2 = sum(jnp.sum(jnp.square(p)) for p in params[::2])  # weights only
+        loss = main + lexit + wd * l2
+        acc = jnp.mean(
+            (jnp.argmax(logits, -1) == jnp.argmax(y1h, -1)).astype(jnp.float32))
+        return loss, acc
+    return loss_fn
+
+
+def make_train_step(net):
+    """(params, momenta, batch, knobs) -> (params', momenta', loss, acc)."""
+    loss_fn = make_loss_fn(net)
+
+    def train_step(params, momenta, x, y1h, masks, qbw, qba,
+                   tlogits, kd_alpha, kd_tau, exit_w, hp):
+        lr, mu, wd = hp[0], hp[1], hp[2]
+        (loss, acc), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, masks, x, y1h, qbw, qba, tlogits, kd_alpha, kd_tau, exit_w, wd)
+        new_m = [mu * v + g for v, g in zip(momenta, grads)]
+        new_p = [p - lr * v for p, v in zip(params, new_m)]
+        return tuple(new_p) + tuple(new_m) + (loss, acc)
+
+    return train_step
+
+
+def make_eval_step(net):
+    def eval_step(params, masks, x, qbw, qba):
+        return forward_all(net, params, masks, x, qbw, qba)
+    return eval_step
+
+
+def make_stage_fns(net):
+    def stage1(params, masks, x, qbw, qba):
+        h1 = net.seg1(params, masks, x, qbw, qba)
+        return net.exit1(params, h1, qbw, qba), h1
+
+    def stage2(params, masks, h1, qbw, qba):
+        h2 = net.seg2(params, masks, h1, qbw, qba)
+        return net.exit2(params, h2, qbw, qba), h2
+
+    def stage3(params, masks, h2, qbw, qba):
+        return net.seg3(params, masks, h2, qbw, qba)
+
+    return stage1, stage2, stage3
+
+
+def make_init_fn(net):
+    """seed (f32 scalar) -> params ++ zero momenta."""
+    def init(seed):
+        key = jax.random.PRNGKey(seed.astype(jnp.uint32))
+        params = net.init_params(key)
+        momenta = [jnp.zeros_like(p) for p in params]
+        return tuple(params) + tuple(momenta)
+    return init
+
+
+# ---------------------------------------------------------------------------
+# Shape helpers shared with aot.py / tests.
+# ---------------------------------------------------------------------------
+
+def mask_specs(net):
+    return [jax.ShapeDtypeStruct((s["channels"],), jnp.float32)
+            for s in net.mask_slots]
+
+
+def param_specs(net):
+    return [jax.ShapeDtypeStruct(tuple(s), jnp.float32) for s in net.param_shapes()]
+
+
+def seg_out_shape(net, batch):
+    """(h1, h2) feature-map shapes at the exit cut points, NHWC."""
+    name = net.name
+    if name == "mini_vgg":
+        return (batch, 8, 8, 16), (batch, 4, 4, 32)
+    if name == "mini_resnet":
+        return (batch, 16, 16, 16), (batch, 8, 8, 32)
+    if name == "mini_mobilenet":
+        return (batch, 8, 8, 32), (batch, 4, 4, 64)
+    raise ValueError(name)
+
+
+def scalar():
+    return jax.ShapeDtypeStruct((), jnp.float32)

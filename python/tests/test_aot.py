@@ -1,0 +1,80 @@
+"""AOT path tests: HLO-text lowering of a small graph + manifest schema.
+
+Full-arch lowering takes minutes and is exercised by `make artifacts`;
+here we verify the interchange path itself (jit -> stablehlo -> HLO text)
+and the manifest contract on a toy function, fast.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import archs, aot
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+class TestHloText:
+    def test_lower_tiny_fn(self):
+        def f(x, y):
+            return (x @ y + 1.0,)
+
+        spec = jax.ShapeDtypeStruct((4, 4), jnp.float32)
+        low = jax.jit(f).lower(spec, spec)
+        txt = aot.to_hlo_text(low)
+        assert txt.startswith("HloModule")
+        assert "f32[4,4]" in txt
+        # text interchange must not be the 64-bit-id proto path
+        assert "parameter(0)" in txt
+
+    def test_lower_pallas_kernel_graph(self):
+        from compile.kernels import qmatmul
+
+        a = jax.ShapeDtypeStruct((8, 16), jnp.float32)
+        w = jax.ShapeDtypeStruct((16, 4), jnp.float32)
+        s = jax.ShapeDtypeStruct((), jnp.float32)
+        low = jax.jit(lambda a, w, ba, bw: (qmatmul(a, w, ba, bw),)).lower(a, w, s, s)
+        txt = aot.to_hlo_text(low)
+        assert txt.startswith("HloModule")
+        assert "f32[8,4]" in txt
+
+
+class TestManifest:
+    @pytest.fixture()
+    def manifest(self):
+        path = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "manifest.json")
+        if not os.path.exists(path):
+            pytest.skip("artifacts not built (run `make artifacts`)")
+        with open(path) as f:
+            return json.load(f)
+
+    def test_schema(self, manifest):
+        assert manifest["num_classes"] == archs.NUM_CLASSES
+        assert set(manifest["archs"]) == set(archs.ARCHS)
+        for name, a in manifest["archs"].items():
+            assert a["num_params"] == len(a["param_shapes"])
+            assert a["num_masks"] == len(a["mask_slots"])
+            for tag in ["init", "train", "eval", "stage1", "stage2", "stage3"]:
+                assert tag in a["graphs"], f"{name} missing graph {tag}"
+
+    def test_manifest_matches_live_archs(self, manifest):
+        """The manifest on disk must match what archs.py would emit now —
+        guards against stale artifacts."""
+        for name, a in manifest["archs"].items():
+            net = archs.build(name)
+            desc = net.describe()
+            assert a["param_shapes"] == desc["param_shapes"], f"{name} stale artifacts?"
+            assert a["mask_slots"] == desc["mask_slots"]
+            assert a["layers"] == desc["layers"]
+
+    def test_artifact_files_exist(self, manifest):
+        root = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+        for a in manifest["archs"].values():
+            for g in a["graphs"].values():
+                p = os.path.join(root, g["file"])
+                assert os.path.exists(p), f"missing {g['file']}"
+                with open(p) as f:
+                    assert f.read(9) == "HloModule"

@@ -1,0 +1,222 @@
+"""L2 architecture tests: shapes, masks, depthwise rewrite, manifest."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax import lax
+
+from compile import archs, model
+from compile.archs import _depthwise3x3
+
+jax.config.update("jax_platform_name", "cpu")
+
+ARCH_NAMES = list(archs.ARCHS)
+B0 = jnp.float32(0.0)
+
+
+def setup_net(name, seed=0):
+    net = archs.build(name)
+    params = net.init_params(jax.random.PRNGKey(seed))
+    masks = [jnp.ones((s["channels"],)) for s in net.mask_slots]
+    return net, params, masks
+
+
+class TestDepthwise:
+    @pytest.mark.parametrize("stride", [1, 2])
+    @pytest.mark.parametrize("hw", [7, 8, 16])
+    def test_forward_matches_lax(self, stride, hw):
+        k = jax.random.PRNGKey(0)
+        x = jax.random.normal(k, (2, hw, hw, 6))
+        w = jax.random.normal(jax.random.PRNGKey(1), (3, 3, 1, 6))
+        want = lax.conv_general_dilated(
+            x, w, (stride, stride), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"), feature_group_count=6)
+        got = _depthwise3x3(x, w, stride)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("stride", [1, 2])
+    def test_custom_vjp_matches_autodiff_of_lax(self, stride):
+        k = jax.random.PRNGKey(2)
+        x = jax.random.normal(k, (3, 8, 8, 5))
+        w = jax.random.normal(jax.random.PRNGKey(3), (3, 3, 1, 5))
+
+        def loss_ref(x, w):
+            y = lax.conv_general_dilated(
+                x, w, (stride, stride), "SAME",
+                dimension_numbers=("NHWC", "HWIO", "NHWC"), feature_group_count=5)
+            return jnp.sum(jnp.sin(y))
+
+        def loss_ours(x, w):
+            return jnp.sum(jnp.sin(_depthwise3x3(x, w, stride)))
+
+        gx_r, gw_r = jax.grad(loss_ref, argnums=(0, 1))(x, w)
+        gx, gw = jax.grad(loss_ours, argnums=(0, 1))(x, w)
+        np.testing.assert_allclose(gx, gx_r, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(gw, gw_r, rtol=1e-4, atol=1e-5)
+
+
+class TestForward:
+    @pytest.mark.parametrize("name", ARCH_NAMES)
+    def test_output_shapes(self, name):
+        net, params, masks = setup_net(name)
+        x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, 16, 3))
+        logits, e1, e2 = model.forward_all(net, params, masks, x, B0, B0)
+        assert logits.shape == (4, archs.NUM_CLASSES)
+        assert e1.shape == (4, archs.NUM_CLASSES)
+        assert e2.shape == (4, archs.NUM_CLASSES)
+        assert not np.any(np.isnan(np.asarray(logits)))
+
+    @pytest.mark.parametrize("name", ARCH_NAMES)
+    def test_staged_equals_full(self, name):
+        """stage1→stage2→stage3 must reproduce forward_all exactly."""
+        net, params, masks = setup_net(name)
+        x = jax.random.normal(jax.random.PRNGKey(2), (2, 16, 16, 3))
+        s1, s2, s3 = model.make_stage_fns(net)
+        e1s, h1 = s1(params, masks, x, B0, B0)
+        e2s, h2 = s2(params, masks, h1, B0, B0)
+        lo = s3(params, masks, h2, B0, B0)
+        l_full, e1f, e2f = model.forward_all(net, params, masks, x, B0, B0)
+        np.testing.assert_allclose(lo, l_full, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(e1s, e1f, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(e2s, e2f, rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("name", ARCH_NAMES)
+    def test_stage_shapes_match_manifest(self, name):
+        net, params, masks = setup_net(name)
+        x = jax.random.normal(jax.random.PRNGKey(3), (1, 16, 16, 3))
+        s1, s2, _ = model.make_stage_fns(net)
+        _, h1 = s1(params, masks, x, B0, B0)
+        _, h2 = s2(params, masks, h1, B0, B0)
+        h1_want, h2_want = model.seg_out_shape(net, 1)
+        assert h1.shape == h1_want
+        assert h2.shape == h2_want
+
+    @pytest.mark.parametrize("name", ARCH_NAMES)
+    def test_quantized_forward_finite(self, name):
+        net, params, masks = setup_net(name)
+        x = jax.random.normal(jax.random.PRNGKey(4), (2, 16, 16, 3))
+        for bw, ba in [(1.0, 8.0), (2.0, 2.0), (8.0, 8.0)]:
+            logits, _, _ = model.forward_all(
+                net, params, masks, x, jnp.float32(bw), jnp.float32(ba))
+            assert np.all(np.isfinite(np.asarray(logits)))
+
+
+class TestMasks:
+    @pytest.mark.parametrize("name", ARCH_NAMES)
+    def test_zero_mask_kills_channel_influence(self, name):
+        """Zeroing a mask slot must change logits vs. ones (channels used),
+        and perturbing the masked channels' weights must NOT change logits
+        (channels truly dead) — the physical-removal equivalence."""
+        net, params, masks = setup_net(name)
+        x = jax.random.normal(jax.random.PRNGKey(5), (2, 16, 16, 3))
+        base, _, _ = model.forward_all(net, params, masks, x, B0, B0)
+
+        slot = 0
+        masked = list(masks)
+        m = np.ones(masks[slot].shape, np.float32)
+        m[: len(m) // 2] = 0.0
+        masked[slot] = jnp.asarray(m)
+        out_masked, _, _ = model.forward_all(net, params, masked, x, B0, B0)
+        assert not np.allclose(base, out_masked)
+
+        # find a conv whose out_mask is this slot; perturb its masked-out
+        # output channels — logits must be identical.
+        li = next(i for i, l in enumerate(net.layers) if l["out_mask"] == slot)
+        pert = list(params)
+        w = np.asarray(pert[2 * li]).copy()
+        w[..., : len(m) // 2] += 7.0
+        pert[2 * li] = jnp.asarray(w)
+        out_pert, _, _ = model.forward_all(net, pert, masked, x, B0, B0)
+        np.testing.assert_allclose(out_masked, out_pert, rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("name", ARCH_NAMES)
+    def test_masked_channels_get_zero_gradient(self, name):
+        net, params, masks = setup_net(name)
+        x = jax.random.normal(jax.random.PRNGKey(6), (2, 16, 16, 3))
+        y = jax.nn.one_hot(jnp.array([1, 2]), archs.NUM_CLASSES)
+        slot = 0
+        masked = list(masks)
+        m = np.ones(masks[slot].shape, np.float32)
+        dead = len(m) // 2
+        m[:dead] = 0.0
+        masked[slot] = jnp.asarray(m)
+        loss_fn = model.make_loss_fn(net)
+        grads = jax.grad(
+            lambda p: loss_fn(p, masked, x, y, B0, B0,
+                              jnp.zeros_like(y), jnp.float32(0.0), jnp.float32(4.0),
+                              jnp.zeros(2), 0.0)[0])(params)
+        li = next(i for i, l in enumerate(net.layers) if l["out_mask"] == slot)
+        gw = np.asarray(grads[2 * li])
+        assert np.allclose(gw[..., :dead], 0.0, atol=1e-7), \
+            "masked-out channels must receive zero gradient"
+
+
+class TestManifestConsistency:
+    @pytest.mark.parametrize("name", ARCH_NAMES)
+    def test_param_shapes_match_init(self, name):
+        net, params, _ = setup_net(name)
+        shapes = net.param_shapes()
+        assert len(shapes) == len(params)
+        for s, p in zip(shapes, params):
+            assert tuple(s) == p.shape
+
+    @pytest.mark.parametrize("name", ARCH_NAMES)
+    def test_mask_slots_cover_layers(self, name):
+        net = archs.build(name)
+        nslots = len(net.mask_slots)
+        for l in net.layers:
+            assert -1 <= l["in_mask"] < nslots
+            assert -1 <= l["out_mask"] < nslots
+            if l["out_mask"] >= 0:
+                assert net.mask_slots[l["out_mask"]]["channels"] == l["cout"]
+            if l["in_mask"] >= 0:
+                assert net.mask_slots[l["in_mask"]]["channels"] == l["cin"]
+
+    @pytest.mark.parametrize("name", ARCH_NAMES)
+    def test_describe_is_json_serializable(self, name):
+        import json
+        net = archs.build(name)
+        json.dumps(net.describe())
+
+
+class TestTraining:
+    @pytest.mark.parametrize("name", ARCH_NAMES)
+    def test_overfits_tiny_batch(self, name):
+        """A few SGD steps on one batch must reduce the loss by >30%."""
+        net, params, masks = setup_net(name)
+        k = jax.random.PRNGKey(7)
+        x = jax.random.normal(k, (model.TRAIN_BATCH, 16, 16, 3))
+        y = jax.nn.one_hot(
+            jax.random.randint(k, (model.TRAIN_BATCH,), 0, archs.NUM_CLASSES),
+            archs.NUM_CLASSES)
+        ts = jax.jit(model.make_train_step(net))
+        mom = [jnp.zeros_like(p) for p in params]
+        tl = jnp.zeros_like(y)
+        ew = jnp.array([0.0, 0.0])  # main head only: cleanest overfit signal
+        hp = jnp.array([0.03, 0.9, 1e-4])
+        n = len(params)
+        first = None
+        for i in range(40):
+            out = ts(params, mom, x, y, masks, B0, B0, tl,
+                     jnp.float32(0.0), jnp.float32(4.0), ew, hp)
+            params, mom = list(out[:n]), list(out[n:2 * n])
+            if first is None:
+                first = float(out[2 * n])
+        last = float(out[2 * n])
+        assert last < 0.7 * first, f"{name}: loss {first} -> {last}"
+
+    def test_kd_loss_zero_when_matching(self):
+        z = jax.random.normal(jax.random.PRNGKey(8), (4, 20))
+        assert abs(float(model.kd_loss(z, z, jnp.float32(4.0)))) < 1e-5
+
+    def test_kd_loss_positive(self):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(9))
+        s = jax.random.normal(k1, (4, 20))
+        t = jax.random.normal(k2, (4, 20))
+        assert float(model.kd_loss(s, t, jnp.float32(4.0))) > 0
+
+    def test_cross_entropy_perfect_prediction(self):
+        y = jax.nn.one_hot(jnp.array([0, 1]), 20)
+        logits = 50.0 * y
+        assert float(model.cross_entropy(logits, y)) < 1e-4

@@ -1,0 +1,176 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+The hypothesis sweeps are the core correctness signal for the fused
+fake-quant matmul: random shapes / bit-widths / value ranges, always
+compared against ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels as K
+from compile.kernels import ref as R
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(key, shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape) * scale
+
+
+BITS = [0.0, 1.0, 2.0, 3.0, 4.0, 8.0]
+
+
+class TestQuantizeK:
+    @pytest.mark.parametrize("bits", BITS)
+    def test_matches_ref(self, bits):
+        x = jnp.abs(_rand(0, (33, 17)))
+        x = x / jnp.max(x)
+        got = K.quantize_k(x, jnp.float32(bits))
+        want = R.quantize_k_ref(x, jnp.float32(bits))
+        np.testing.assert_allclose(got, want, atol=1e-6)
+
+    def test_bits_zero_is_identity(self):
+        x = jnp.abs(_rand(1, (8, 8)))
+        np.testing.assert_allclose(K.quantize_k(x, jnp.float32(0.0)), x)
+
+    @pytest.mark.parametrize("bits", [1.0, 2.0, 4.0])
+    def test_level_count(self, bits):
+        """quantize_k output takes at most 2**bits distinct values."""
+        x = jnp.linspace(0, 1, 1000).reshape(10, 100)
+        q = np.unique(np.asarray(K.quantize_k(x, jnp.float32(bits))))
+        assert len(q) <= 2 ** int(bits)
+
+    def test_idempotent(self):
+        x = jnp.abs(_rand(2, (16, 16)))
+        x = x / jnp.max(x)
+        q1 = K.quantize_k(x, jnp.float32(3.0))
+        q2 = K.quantize_k(q1, jnp.float32(3.0))
+        np.testing.assert_allclose(q1, q2, atol=1e-6)
+
+    def test_ste_gradient_is_identity(self):
+        x = jnp.abs(_rand(3, (4, 4))) / 3.0
+        g = jax.grad(lambda v: jnp.sum(K.quantize_k(v, jnp.float32(2.0))))(x)
+        np.testing.assert_allclose(g, jnp.ones_like(x), atol=1e-6)
+
+    def test_non_2d_shapes(self):
+        x = jnp.abs(_rand(4, (2, 3, 5, 7)))
+        x = x / jnp.max(x)
+        got = K.quantize_k(x, jnp.float32(4.0))
+        want = R.quantize_k_ref(x, jnp.float32(4.0))
+        np.testing.assert_allclose(got, want, atol=1e-6)
+
+
+class TestWeightActQuant:
+    @pytest.mark.parametrize("bits", BITS)
+    def test_weight_matches_ref(self, bits):
+        w = _rand(5, (3, 3, 8, 16), scale=0.2)
+        got = K.weight_quant(w, jnp.float32(bits))
+        want = R.weight_quant_ref(w, jnp.float32(bits))
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+    @pytest.mark.parametrize("bits", BITS)
+    def test_act_matches_ref(self, bits):
+        a = jax.nn.relu(_rand(6, (32, 64)))
+        got = K.act_quant(a, jnp.float32(bits))
+        want = R.act_quant_ref(a, jnp.float32(bits))
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+    def test_weight_preserves_range(self):
+        w = _rand(7, (64, 64), scale=0.5)
+        for bits in [1.0, 4.0, 8.0]:
+            wq = K.weight_quant(w, jnp.float32(bits))
+            assert float(jnp.max(jnp.abs(wq))) <= float(jnp.max(jnp.abs(w))) * 1.001
+
+    def test_binary_weight_two_levels_per_sign(self):
+        w = _rand(8, (128,), scale=0.3)
+        wq = np.asarray(K.weight_quant(w, jnp.float32(1.0)))
+        assert len(np.unique(np.round(wq, 6))) <= 2
+
+    def test_quant_error_shrinks_with_bits(self):
+        w = _rand(9, (64, 64), scale=0.3)
+        errs = [float(jnp.mean(jnp.abs(K.weight_quant(w, jnp.float32(b)) - w)))
+                for b in [1.0, 2.0, 4.0, 8.0]]
+        assert errs == sorted(errs, reverse=True)
+        a = jax.nn.relu(_rand(10, (64, 64)))
+        errs = [float(jnp.mean(jnp.abs(K.act_quant(a, jnp.float32(b)) - a)))
+                for b in [1.0, 2.0, 4.0, 8.0]]
+        assert errs == sorted(errs, reverse=True)
+
+
+class TestQMatmul:
+    @pytest.mark.parametrize("ba", [0.0, 2.0, 8.0])
+    @pytest.mark.parametrize("bw", [0.0, 1.0, 4.0])
+    def test_matches_ref(self, ba, bw):
+        a = jax.nn.relu(_rand(11, (16, 24)))
+        w = _rand(12, (24, 10), scale=0.3)
+        got = K.qmatmul(a, w, jnp.float32(ba), jnp.float32(bw))
+        want = R.qmatmul_ref(a, w, jnp.float32(ba), jnp.float32(bw))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_fp32_path_is_plain_matmul(self):
+        a = _rand(13, (8, 8))
+        w = _rand(14, (8, 8))
+        got = K.qmatmul(a, w, jnp.float32(0.0), jnp.float32(0.0))
+        np.testing.assert_allclose(got, a @ w, rtol=1e-5, atol=1e-5)
+
+    def test_gradients_flow(self):
+        a = jax.nn.relu(_rand(15, (4, 6)))
+        w = _rand(16, (6, 3), scale=0.3)
+        da, dw = jax.grad(
+            lambda a, w: jnp.sum(K.qmatmul(a, w, jnp.float32(4.0), jnp.float32(2.0))),
+            argnums=(0, 1))(a, w)
+        # STE backward = plain matmul cotangents against quantized operands.
+        aq = R.act_quant_ref(a, jnp.float32(4.0))
+        wq = R.weight_quant_ref(w, jnp.float32(2.0))
+        np.testing.assert_allclose(da, jnp.ones((4, 3)) @ wq.T, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(dw, aq.T @ jnp.ones((4, 3)), rtol=1e-4, atol=1e-5)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        m=st.integers(1, 48), k=st.integers(1, 48), n=st.integers(1, 24),
+        ba=st.sampled_from([0.0, 1.0, 2.0, 4.0, 8.0]),
+        bw=st.sampled_from([0.0, 1.0, 2.0, 4.0, 8.0]),
+        seed=st.integers(0, 2 ** 16),
+    )
+    def test_hypothesis_shapes_bits(self, m, k, n, ba, bw, seed):
+        key = jax.random.PRNGKey(seed)
+        k1, k2 = jax.random.split(key)
+        a = jax.nn.relu(jax.random.normal(k1, (m, k)))
+        w = jax.random.normal(k2, (k, n)) * 0.3
+        got = K.qmatmul(a, w, jnp.float32(ba), jnp.float32(bw))
+        want = R.qmatmul_ref(a, w, jnp.float32(ba), jnp.float32(bw))
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+class TestQMatmulTiled:
+    @pytest.mark.parametrize("bm,bn,bk", [(64, 64, 128), (128, 128, 128), (64, 128, 64)])
+    def test_matches_ref(self, bm, bn, bk):
+        a = jax.nn.relu(_rand(17, (128, 256)))
+        w = _rand(18, (256, 128), scale=0.2)
+        got = K.qmatmul_tiled(a, w, jnp.float32(8.0), jnp.float32(4.0),
+                              bm=bm, bn=bn, bk=bk)
+        want = R.qmatmul_ref(a, w, jnp.float32(8.0), jnp.float32(4.0))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_matches_single_block_kernel(self):
+        a = jax.nn.relu(_rand(19, (128, 128)))
+        w = _rand(20, (128, 128), scale=0.2)
+        t = K.qmatmul_tiled(a, w, jnp.float32(4.0), jnp.float32(2.0))
+        s = K.qmatmul(a, w, jnp.float32(4.0), jnp.float32(2.0))
+        np.testing.assert_allclose(t, s, rtol=1e-4, atol=1e-4)
+
+    def test_rejects_misaligned(self):
+        a = jnp.ones((100, 128))
+        w = jnp.ones((128, 128))
+        with pytest.raises(AssertionError):
+            K.qmatmul_tiled(a, w, jnp.float32(2.0), jnp.float32(2.0))
+
+    def test_fp32_path(self):
+        a = _rand(21, (128, 128))
+        w = _rand(22, (128, 128))
+        got = K.qmatmul_tiled(a, w, jnp.float32(0.0), jnp.float32(0.0))
+        np.testing.assert_allclose(got, a @ w, rtol=1e-4, atol=1e-4)

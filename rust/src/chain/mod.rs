@@ -1,0 +1,164 @@
+//! The Chain of Compression: composable compression stages applied in
+//! sequence to a ModelState — the paper's central abstraction (Fig. 1).
+//!
+//! Each technique is a standard building block implementing
+//! [`CompressionStage`]; a [`Chain`] is an ordered list of blocks.  The
+//! coordinator measures (accuracy, BitOpsCR, CR) after every stage, which
+//! is exactly the data behind the paper's figures and tables.
+
+use anyhow::Result;
+
+use crate::data::Dataset;
+use crate::metrics::Measurement;
+use crate::models::ModelState;
+use crate::runtime::Engine;
+
+pub mod stages;
+
+pub use stages::{Distill, EarlyExit, HuffmanCoding, Prune, Quantize, WeightCluster};
+
+/// Technique tags, used by the order-search machinery.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Technique {
+    Distill,
+    Prune,
+    Quantize,
+    EarlyExit,
+}
+
+impl Technique {
+    pub fn letter(&self) -> char {
+        match self {
+            Technique::Distill => 'D',
+            Technique::Prune => 'P',
+            Technique::Quantize => 'Q',
+            Technique::EarlyExit => 'E',
+        }
+    }
+
+    pub fn from_letter(c: char) -> Option<Technique> {
+        match c.to_ascii_uppercase() {
+            'D' => Some(Technique::Distill),
+            'P' => Some(Technique::Prune),
+            'Q' => Some(Technique::Quantize),
+            'E' => Some(Technique::EarlyExit),
+            _ => None,
+        }
+    }
+
+    /// Static (offline) vs dynamic (runtime) compression — one of the two
+    /// ordering principles the paper extracts.
+    pub fn is_dynamic(&self) -> bool {
+        matches!(self, Technique::EarlyExit)
+    }
+
+    /// Granularity rank: architecture(0) > neuron(1) > sub-neuron(2);
+    /// dynamic-architecture early exit ranks after all static stages.
+    pub fn granularity_rank(&self) -> u8 {
+        match self {
+            Technique::Distill => 0,
+            Technique::Prune => 1,
+            Technique::Quantize => 2,
+            Technique::EarlyExit => 3,
+        }
+    }
+}
+
+/// Everything a stage needs from the outside world.
+pub struct StageCtx<'e> {
+    pub engine: &'e Engine,
+    pub train: &'e Dataset,
+    pub test: &'e Dataset,
+    /// Steps for a "full" training stage; fine-tunes get a fraction.
+    pub base_steps: usize,
+    pub seed: u64,
+    pub verbose: bool,
+}
+
+/// Per-stage outcome, for logs and the fig15 waterfall.
+#[derive(Debug, Clone)]
+pub struct StageReport {
+    pub stage: String,
+    pub technique: Technique,
+    pub measurement: Measurement,
+}
+
+pub trait CompressionStage {
+    fn name(&self) -> String;
+    fn technique(&self) -> Technique;
+    /// Apply the stage (including its fine-tuning) to `state` in place.
+    fn apply(&self, state: &mut ModelState, ctx: &StageCtx) -> Result<()>;
+}
+
+/// An ordered chain of compression stages.
+pub struct Chain {
+    pub stages: Vec<Box<dyn CompressionStage>>,
+}
+
+impl Chain {
+    pub fn new() -> Chain {
+        Chain { stages: Vec::new() }
+    }
+
+    pub fn push(mut self, s: Box<dyn CompressionStage>) -> Chain {
+        self.stages.push(s);
+        self
+    }
+
+    pub fn sequence_letters(&self) -> String {
+        self.stages.iter().map(|s| s.technique().letter()).collect()
+    }
+
+    /// Run every stage, measuring after each one.
+    pub fn run(&self, state: &mut ModelState, ctx: &StageCtx) -> Result<Vec<StageReport>> {
+        let mut reports = Vec::with_capacity(self.stages.len());
+        for stage in &self.stages {
+            if ctx.verbose {
+                eprintln!("[chain] applying {}", stage.name());
+            }
+            stage.apply(state, ctx)?;
+            state.history.push(stage.name());
+            let m = Measurement::take(ctx.engine, state, ctx.test)?;
+            if ctx.verbose {
+                eprintln!(
+                    "[chain]   acc {:.4}  BitOpsCR {:.1}x  CR {:.1}x",
+                    m.accuracy, m.bitops_cr, m.storage_cr
+                );
+            }
+            reports.push(StageReport {
+                stage: stage.name(),
+                technique: stage.technique(),
+                measurement: m,
+            });
+        }
+        Ok(reports)
+    }
+}
+
+impl Default for Chain {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn technique_letters_roundtrip() {
+        for t in [Technique::Distill, Technique::Prune, Technique::Quantize, Technique::EarlyExit] {
+            assert_eq!(Technique::from_letter(t.letter()), Some(t));
+        }
+        assert_eq!(Technique::from_letter('x'), None);
+    }
+
+    #[test]
+    fn ordering_principles() {
+        use Technique::*;
+        assert!(!Distill.is_dynamic() && !Prune.is_dynamic() && !Quantize.is_dynamic());
+        assert!(EarlyExit.is_dynamic());
+        assert!(Distill.granularity_rank() < Prune.granularity_rank());
+        assert!(Prune.granularity_rank() < Quantize.granularity_rank());
+    }
+}

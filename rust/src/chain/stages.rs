@@ -1,0 +1,418 @@
+//! The four compression building blocks (classic variants, per the paper's
+//! §2 rule: no scenario-specific tricks, so the extracted ordering law is
+//! general).
+//!
+//! * [`Distill`]  — classic Hinton KD into a width-scaled student.
+//! * [`Prune`]    — uniform channel pruning by L2 importance + fine-tune.
+//! * [`Quantize`] — fixed-point uniform QAT (DoReFa-style) at given bits.
+//! * [`EarlyExit`]— train exit heads (+ joint fine-tune), set thresholds.
+
+use anyhow::{ensure, Result};
+
+use super::{CompressionStage, StageCtx, Technique};
+use crate::models::{ModelState, QBits};
+use crate::train::{self, TrainOpts};
+
+fn base_opts(ctx: &StageCtx) -> TrainOpts {
+    TrainOpts { steps: ctx.base_steps, seed: ctx.seed, ..Default::default() }
+}
+
+// ---------------------------------------------------------------------------
+// Distillation
+// ---------------------------------------------------------------------------
+
+/// Knowledge distillation: the current state becomes the teacher; a fresh
+/// student with `width` of the channels (uniform width scaling, as in the
+/// paper's MobileNetV2 student) is trained on data + teacher logits.
+///
+/// If the teacher already carries compression state, the student inherits
+/// it the way the paper's pipelines do: a pruned teacher (PD) hands the
+/// student its *width budget* only (pruning decisions don't transfer
+/// across re-initialization); a quantized teacher (QD) hands the student
+/// its bit-widths so the student trains under the same arithmetic.
+#[derive(Debug, Clone)]
+pub struct Distill {
+    /// Fraction of channels the student keeps (0 < width <= 1).
+    pub width: f32,
+    pub alpha: f32,
+    pub tau: f32,
+    /// Multiplier on ctx.base_steps for student training (distillation is
+    /// a from-scratch training, not a fine-tune).
+    pub steps_mult: f32,
+}
+
+impl Default for Distill {
+    fn default() -> Self {
+        Distill { width: 0.5, alpha: 0.7, tau: 4.0, steps_mult: 1.0 }
+    }
+}
+
+impl CompressionStage for Distill {
+    fn name(&self) -> String {
+        format!("distill(width={:.2},alpha={:.1})", self.width, self.alpha)
+    }
+
+    fn technique(&self) -> Technique {
+        Technique::Distill
+    }
+
+    fn apply(&self, state: &mut ModelState, ctx: &StageCtx) -> Result<()> {
+        ensure!(self.width > 0.0 && self.width <= 1.0, "bad student width {}", self.width);
+        // 1. Teacher logits over the training set (teacher = current state).
+        let teacher = train::teacher_logits(ctx.engine, state, ctx.train)?;
+
+        // 2. Fresh student: same graph, uniformly narrower via masks.
+        //    Student width composes with the teacher's existing pruning
+        //    budget (a 0.5-width student of a 0.5-kept teacher keeps 0.25).
+        let mut student = train::init_state(ctx.engine, state.arch.clone(), ctx.seed ^ 0x57d)?;
+        for (slot, mask) in student.masks.iter_mut().enumerate() {
+            let teacher_live = state.masks[slot].count_nonzero();
+            let keep = ((teacher_live as f32 * self.width).round() as usize).max(2);
+            for c in keep..mask.len() {
+                mask.data[c] = 0.0;
+            }
+        }
+        // Quantized teacher (QD): student trains under the same arithmetic.
+        student.qbits = state.qbits;
+
+        // 3. Train the student with KD.  If the teacher had trained exits
+        //    the student keeps exit heads learning from *data* (the paper's
+        //    finding: teacher exits make bad teachers for student exits).
+        let had_exits = state.exits.trained;
+        let mut opts = base_opts(ctx);
+        opts.steps = ((ctx.base_steps as f32) * self.steps_mult) as usize;
+        opts.kd_alpha = self.alpha;
+        opts.kd_tau = self.tau;
+        if had_exits {
+            opts.exit_w = [0.3, 0.3];
+        }
+        train::train(ctx.engine, &mut student, ctx.train, Some(&teacher), &opts)?;
+
+        // 4. The student replaces the teacher on the chain.
+        student.exits = state.exits.clone();
+        student.exits.trained = had_exits;
+        student.history = state.history.clone();
+        *state = student;
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pruning
+// ---------------------------------------------------------------------------
+
+/// Channel-importance criterion (L2 is the paper's classic choice; Random
+/// exists for the ablation bench — see `coc exp ablation_prune`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Importance {
+    L2,
+    Random,
+}
+
+/// Uniform channel pruning: in every mask slot, remove `ratio` of the
+/// currently-live channels with the smallest aggregate L2 weight norm,
+/// then fine-tune at 1/10 LR (the paper's protocol).
+#[derive(Debug, Clone)]
+pub struct Prune {
+    /// Fraction of live channels to remove per slot (0 <= ratio < 1).
+    pub ratio: f32,
+    /// Fine-tune budget as a fraction of ctx.base_steps.
+    pub finetune_frac: f32,
+    pub importance: Importance,
+}
+
+impl Default for Prune {
+    fn default() -> Self {
+        Prune { ratio: 0.5, finetune_frac: 0.5, importance: Importance::L2 }
+    }
+}
+
+impl Prune {
+    /// Aggregate per-channel importance for one mask slot: the L2 norm of
+    /// each channel's outgoing weights across every layer writing into the
+    /// slot (residual stages have several writers).
+    fn slot_importance(state: &ModelState, slot: usize) -> Vec<f32> {
+        let channels = state.arch.mask_slots[slot].channels;
+        let mut imp = vec![0.0f32; channels];
+        for (li, l) in state.arch.layers.iter().enumerate() {
+            if l.out_mask == slot as i64 {
+                let w = &state.params[state.arch.weight_index(li)];
+                for (c, n) in w.channel_l2().into_iter().enumerate() {
+                    imp[c] += n * n;
+                }
+            }
+        }
+        imp.iter().map(|v| v.sqrt()).collect()
+    }
+}
+
+impl CompressionStage for Prune {
+    fn name(&self) -> String {
+        format!("prune(ratio={:.2})", self.ratio)
+    }
+
+    fn technique(&self) -> Technique {
+        Technique::Prune
+    }
+
+    fn apply(&self, state: &mut ModelState, ctx: &StageCtx) -> Result<()> {
+        ensure!((0.0..1.0).contains(&self.ratio), "bad prune ratio {}", self.ratio);
+        let mut rng = crate::util::rng::Rng::new(ctx.seed ^ 0x9121e);
+        for slot in 0..state.arch.mask_slots.len() {
+            let imp = match self.importance {
+                Importance::L2 => Self::slot_importance(state, slot),
+                Importance::Random => (0..state.arch.mask_slots[slot].channels)
+                    .map(|_| rng.f32())
+                    .collect(),
+            };
+            let live: Vec<usize> =
+                (0..imp.len()).filter(|&c| state.masks[slot].data[c] != 0.0).collect();
+            let remove = ((live.len() as f32) * self.ratio) as usize;
+            let keep_min = 2;
+            let remove = remove.min(live.len().saturating_sub(keep_min));
+            // Lowest-importance live channels go first.
+            let mut order = live;
+            order.sort_by(|&a, &b| imp[a].partial_cmp(&imp[b]).unwrap());
+            for &c in order.iter().take(remove) {
+                state.masks[slot].data[c] = 0.0;
+            }
+        }
+        // Fine-tune at 1/10 LR; momenta restart (masked channels froze).
+        state.reset_momenta();
+        let base = base_opts(ctx);
+        let mut ft =
+            TrainOpts::fine_tune_of(&base, ((ctx.base_steps as f32) * self.finetune_frac) as usize);
+        if state.exits.trained {
+            ft.exit_w = [0.3, 0.3];
+        }
+        train::train(ctx.engine, state, ctx.train, None, &ft)?;
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Quantization
+// ---------------------------------------------------------------------------
+
+/// Fixed-point uniform QAT: switch the graph's fake-quant operands to the
+/// target bit-widths and fine-tune (quantization-aware training at 1/10
+/// LR).  `bits == 0` would mean fp32; both fields must be >= 1 here.
+#[derive(Debug, Clone)]
+pub struct Quantize {
+    pub bits_w: f32,
+    pub bits_a: f32,
+    pub finetune_frac: f32,
+}
+
+impl Default for Quantize {
+    fn default() -> Self {
+        Quantize { bits_w: 1.0, bits_a: 8.0, finetune_frac: 0.5 }
+    }
+}
+
+impl CompressionStage for Quantize {
+    fn name(&self) -> String {
+        format!("quantize({}w{}a)", self.bits_w, self.bits_a)
+    }
+
+    fn technique(&self) -> Technique {
+        Technique::Quantize
+    }
+
+    fn apply(&self, state: &mut ModelState, ctx: &StageCtx) -> Result<()> {
+        ensure!(self.bits_w >= 1.0 && self.bits_a >= 1.0, "quantize needs bits >= 1");
+        state.qbits = QBits { weight: self.bits_w, act: self.bits_a };
+        state.reset_momenta();
+        let base = base_opts(ctx);
+        let mut ft =
+            TrainOpts::fine_tune_of(&base, ((ctx.base_steps as f32) * self.finetune_frac) as usize);
+        if state.exits.trained {
+            // QE rule from the paper: exit layers accept quantized
+            // activations and do QAT from the start.
+            ft.exit_w = [0.3, 0.3];
+        }
+        train::train(ctx.engine, state, ctx.train, None, &ft)?;
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Early exit
+// ---------------------------------------------------------------------------
+
+/// Train the two exit heads (joint fine-tune of body + exits with exit
+/// losses enabled) and set confidence thresholds.  The threshold pair is a
+/// *runtime* knob: sweeps vary it without retraining (each trained E model
+/// yields several (accuracy, BitOpsCR) samples, as in the paper).
+#[derive(Debug, Clone)]
+pub struct EarlyExit {
+    pub exit_w: [f32; 2],
+    pub threshold: f32,
+    /// Training budget as a fraction of ctx.base_steps.
+    pub train_frac: f32,
+}
+
+impl Default for EarlyExit {
+    fn default() -> Self {
+        EarlyExit { exit_w: [0.4, 0.4], threshold: 0.8, train_frac: 0.5 }
+    }
+}
+
+impl CompressionStage for EarlyExit {
+    fn name(&self) -> String {
+        format!("early_exit(t={:.2})", self.threshold)
+    }
+
+    fn technique(&self) -> Technique {
+        Technique::EarlyExit
+    }
+
+    fn apply(&self, state: &mut ModelState, ctx: &StageCtx) -> Result<()> {
+        let base = base_opts(ctx);
+        // Exit-head training is a fine-tune of the whole network with exit
+        // losses on (EP/PE/QE semantics from the paper's captions).
+        let mut ft =
+            TrainOpts::fine_tune_of(&base, ((ctx.base_steps as f32) * self.train_frac) as usize);
+        ft.exit_w = self.exit_w;
+        state.reset_momenta();
+        train::train(ctx.engine, state, ctx.train, None, &ft)?;
+        state.exits.trained = true;
+        state.exits.thresholds = Some((self.threshold, self.threshold));
+        // Measure the exit distribution on the *training* set (calibration
+        // data); Measurement::take refreshes it on test.
+        let ev = crate::exits::evaluate(ctx.engine, state, ctx.train, self.threshold, self.threshold)?;
+        state.exits.exit_probs = (ev.p_exit1, ev.p_exit2);
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Deep-Compression baseline stages (Han et al. 2015): trained weight
+// clustering + Huffman coding.  These are the "other combination methods"
+// rows of Table 5 that can be rebuilt from first principles in this
+// framework.
+// ---------------------------------------------------------------------------
+
+/// Weight clustering ("trained quantization" of Deep Compression): k-means
+/// each weight tensor's values to `1 << index_bits` shared centroids,
+/// fine-tune, then re-cluster so the deployed weights really are k-valued.
+/// Storage: index_bits per weight + a per-layer fp32 codebook (accounted
+/// in `Accountant::storage_bits`).  Compute (BitOps) is unchanged — the
+/// centroids are still fp32 arithmetic, which is exactly why the paper's
+/// fixed-point Q dominates on BitOpsCR while clustering shines on CR.
+#[derive(Debug, Clone)]
+pub struct WeightCluster {
+    pub index_bits: u32,
+    pub finetune_frac: f32,
+}
+
+impl Default for WeightCluster {
+    fn default() -> Self {
+        WeightCluster { index_bits: 4, finetune_frac: 0.4 }
+    }
+}
+
+impl WeightCluster {
+    fn cluster_params(state: &mut ModelState, k: usize) {
+        for li in 0..state.arch.layers.len() {
+            let wi = state.arch.weight_index(li);
+            let w = &state.params[wi];
+            let (q, _, _) = crate::util::kmeans::quantize_to_clusters(&w.data, k, 12);
+            state.params[wi] = crate::tensor::Tensor::new(w.shape.clone(), q);
+        }
+    }
+}
+
+impl CompressionStage for WeightCluster {
+    fn name(&self) -> String {
+        format!("weight_cluster(k={})", 1u64 << self.index_bits)
+    }
+
+    fn technique(&self) -> Technique {
+        Technique::Quantize // storage-side quantization family
+    }
+
+    fn apply(&self, state: &mut ModelState, ctx: &StageCtx) -> Result<()> {
+        ensure!((1..=8).contains(&self.index_bits), "index_bits must be 1..=8");
+        let k = 1usize << self.index_bits;
+        Self::cluster_params(state, k);
+        state.reset_momenta();
+        let base = base_opts(ctx);
+        let ft = TrainOpts::fine_tune_of(
+            &base,
+            ((ctx.base_steps as f32) * self.finetune_frac) as usize,
+        );
+        train::train(ctx.engine, state, ctx.train, None, &ft)?;
+        // Re-cluster so deployment really has k distinct values per layer.
+        Self::cluster_params(state, k);
+        state.extras.cluster_bits = Some(self.index_bits as f32);
+        Ok(())
+    }
+}
+
+/// Huffman coding of the discrete weight symbols (cluster indices, or
+/// fake-quant levels when the model is fixed-point quantized).  Pure
+/// storage accounting — no retraining, no accuracy change.
+#[derive(Debug, Clone, Default)]
+pub struct HuffmanCoding;
+
+impl CompressionStage for HuffmanCoding {
+    fn name(&self) -> String {
+        "huffman_coding".into()
+    }
+
+    fn technique(&self) -> Technique {
+        Technique::Quantize
+    }
+
+    fn apply(&self, state: &mut ModelState, _ctx: &StageCtx) -> Result<()> {
+        ensure!(
+            state.extras.cluster_bits.is_some() || state.qbits.weight > 0.0,
+            "huffman coding needs discrete weights: cluster or quantize first"
+        );
+        let mut total_bits = 0u64;
+        for li in 0..state.arch.layers.len() {
+            let wi = state.arch.weight_index(li);
+            // Deployed (discrete) weight values.
+            let deployed = if state.extras.cluster_bits.is_some() {
+                state.params[wi].clone()
+            } else {
+                crate::models::host_weight_quant(&state.params[wi], state.qbits.weight)
+            };
+            // Symbolize by value (discrete by construction).
+            let mut values: Vec<f32> = deployed.data.clone();
+            values.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            values.dedup();
+            let mut freqs = vec![0u64; values.len()];
+            for v in &deployed.data {
+                let idx = values.partition_point(|x| x < v).min(values.len() - 1);
+                freqs[idx] += 1;
+            }
+            let code = crate::util::huffman::HuffmanCode::from_freqs(&freqs);
+            total_bits += code.coded_bits(&freqs) + code.table_bits();
+        }
+        state.extras.coded_weight_bits = Some(total_bits as f64);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_sane() {
+        assert!(Distill::default().width <= 1.0);
+        assert!((0.0..1.0).contains(&Prune::default().ratio));
+        assert!(Quantize::default().bits_w >= 1.0);
+        assert!(EarlyExit::default().threshold > 0.0);
+    }
+
+    #[test]
+    fn names_embed_hypers() {
+        assert!(Distill { width: 0.25, ..Default::default() }.name().contains("0.25"));
+        assert!(Quantize { bits_w: 2.0, bits_a: 8.0, ..Default::default() }
+            .name()
+            .contains("2w8a"));
+    }
+}

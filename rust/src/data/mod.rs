@@ -1,0 +1,401 @@
+//! Synthetic dataset generators — the CIFAR10 / CIFAR100 / SVHN / CINIC10
+//! analogs (see DESIGN.md §Substitutions: no dataset downloads in this
+//! environment, and the paper's claims ride on task *difficulty ordering*,
+//! which these generators preserve).
+//!
+//! Each class is a deterministic texture program: an oriented sinusoidal
+//! grating + a class-colored blob + a polarity pattern, perturbed per
+//! sample by random phase, shift, amplitude and pixel noise.  Difficulty
+//! knobs: number of classes, noise level, intra-class jitter.
+//!
+//! Generators are seeded and pure: the same (dataset, seed, index) always
+//! yields the same sample, so experiments replay exactly.
+
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+pub const IMG_HW: usize = 16;
+pub const IMG_C: usize = 3;
+pub const NUM_CLASSES_MAX: usize = 20;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DatasetKind {
+    /// CIFAR10 analog: 10 classes, moderate noise.
+    SynthC10,
+    /// CIFAR100 analog: 20 classes, higher intra-class variation — the
+    /// "hard" task on which compression ratios shrink (paper Tables 2-4).
+    SynthC100,
+    /// SVHN analog: 10 digit-glyph classes, low noise (easiest).
+    SynthSVHN,
+    /// CINIC10 analog: C10 textures under distribution shift (brightness /
+    /// contrast jitter + extra noise).
+    SynthCINIC,
+}
+
+impl DatasetKind {
+    pub fn parse(s: &str) -> Option<DatasetKind> {
+        match s {
+            "synth_c10" | "c10" | "cifar10" => Some(DatasetKind::SynthC10),
+            "synth_c100" | "c100" | "cifar100" => Some(DatasetKind::SynthC100),
+            "synth_svhn" | "svhn" => Some(DatasetKind::SynthSVHN),
+            "synth_cinic" | "cinic" | "cinic10" => Some(DatasetKind::SynthCINIC),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DatasetKind::SynthC10 => "synth_c10",
+            DatasetKind::SynthC100 => "synth_c100",
+            DatasetKind::SynthSVHN => "synth_svhn",
+            DatasetKind::SynthCINIC => "synth_cinic",
+        }
+    }
+
+    pub fn num_classes(&self) -> usize {
+        match self {
+            DatasetKind::SynthC100 => 20,
+            _ => 10,
+        }
+    }
+
+    fn noise(&self) -> f32 {
+        match self {
+            DatasetKind::SynthSVHN => 0.10,
+            DatasetKind::SynthC10 => 0.22,
+            DatasetKind::SynthC100 => 0.30,
+            DatasetKind::SynthCINIC => 0.30,
+        }
+    }
+
+    fn jitter(&self) -> f32 {
+        match self {
+            DatasetKind::SynthSVHN => 0.3,
+            DatasetKind::SynthC10 => 0.6,
+            DatasetKind::SynthC100 => 1.0,
+            DatasetKind::SynthCINIC => 0.8,
+        }
+    }
+
+    fn distribution_shift(&self) -> bool {
+        matches!(self, DatasetKind::SynthCINIC)
+    }
+}
+
+/// 5x7 bitmap digit glyphs for the SVHN analog.
+const DIGITS: [u64; 10] = [
+    0b01110_10001_10011_10101_11001_10001_01110, // 0
+    0b00100_01100_00100_00100_00100_00100_01110, // 1
+    0b01110_10001_00001_00010_00100_01000_11111, // 2
+    0b01110_10001_00001_00110_00001_10001_01110, // 3
+    0b00010_00110_01010_10010_11111_00010_00010, // 4
+    0b11111_10000_11110_00001_00001_10001_01110, // 5
+    0b00110_01000_10000_11110_10001_10001_01110, // 6
+    0b11111_00001_00010_00100_01000_01000_01000, // 7
+    0b01110_10001_10001_01110_10001_10001_01110, // 8
+    0b01110_10001_10001_01111_00001_00010_01100, // 9
+];
+
+/// One dataset split held in memory as a single batch-major tensor pair.
+pub struct Dataset {
+    pub kind: DatasetKind,
+    pub images: Tensor, // [n, 16, 16, 3]
+    pub labels: Vec<usize>,
+    pub num_classes: usize,
+}
+
+impl Dataset {
+    /// Generate `n` samples.  `split_salt` decouples train/test streams.
+    pub fn generate(kind: DatasetKind, n: usize, seed: u64, split_salt: u64) -> Dataset {
+        let mut rng = Rng::new(seed ^ split_salt.wrapping_mul(0x9e3779b97f4a7c15));
+        let mut images = Vec::with_capacity(n * IMG_HW * IMG_HW * IMG_C);
+        let mut labels = Vec::with_capacity(n);
+        for _ in 0..n {
+            let label = rng.below(kind.num_classes());
+            let img = gen_image(kind, label, &mut rng);
+            images.extend_from_slice(&img);
+            labels.push(label);
+        }
+        Dataset {
+            kind,
+            images: Tensor::new(vec![n, IMG_HW, IMG_HW, IMG_C], images),
+            labels,
+            num_classes: kind.num_classes(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    /// Copy a batch by indices into (x, one-hot y with NUM_CLASSES_MAX cols).
+    pub fn batch(&self, idx: &[usize]) -> (Tensor, Tensor) {
+        let spl = IMG_HW * IMG_HW * IMG_C;
+        let mut x = Vec::with_capacity(idx.len() * spl);
+        let mut y = vec![0.0f32; idx.len() * NUM_CLASSES_MAX];
+        for (bi, &i) in idx.iter().enumerate() {
+            x.extend_from_slice(&self.images.data[i * spl..(i + 1) * spl]);
+            y[bi * NUM_CLASSES_MAX + self.labels[i]] = 1.0;
+        }
+        (
+            Tensor::new(vec![idx.len(), IMG_HW, IMG_HW, IMG_C], x),
+            Tensor::new(vec![idx.len(), NUM_CLASSES_MAX], y),
+        )
+    }
+}
+
+/// Deterministic per-class texture parameters.
+fn class_program(label: usize) -> (f32, f32, [f32; 3], f32) {
+    // Golden-angle spacing decorrelates neighbouring classes.
+    let g = label as f32 * 2.39996;
+    let freq = 1.2 + (label % 5) as f32 * 0.55;
+    let theta = g;
+    let color = [
+        0.5 + 0.5 * (g * 1.3).sin(),
+        0.5 + 0.5 * (g * 2.1 + 1.0).sin(),
+        0.5 + 0.5 * (g * 3.7 + 2.0).sin(),
+    ];
+    let polarity = if label % 2 == 0 { 1.0 } else { -1.0 };
+    (freq, theta, color, polarity)
+}
+
+fn gen_image(kind: DatasetKind, label: usize, rng: &mut Rng) -> Vec<f32> {
+    let (freq, theta, color, polarity) = class_program(label);
+    let jit = kind.jitter();
+    let phase = rng.range_f32(0.0, std::f32::consts::TAU) * jit;
+    let dth = rng.range_f32(-0.25, 0.25) * jit;
+    let amp = 1.0 + rng.range_f32(-0.3, 0.3) * jit;
+    let cx = 8.0 + rng.range_f32(-3.0, 3.0) * jit;
+    let cy = 8.0 + rng.range_f32(-3.0, 3.0) * jit;
+    let noise = kind.noise();
+    let (gain, bias) = if kind.distribution_shift() {
+        (rng.range_f32(0.6, 1.4), rng.range_f32(-0.3, 0.3))
+    } else {
+        (1.0, 0.0)
+    };
+
+    let ct = (theta + dth).cos();
+    let st_ = (theta + dth).sin();
+    let mut out = Vec::with_capacity(IMG_HW * IMG_HW * IMG_C);
+    let glyph = if kind == DatasetKind::SynthSVHN { Some(DIGITS[label % 10]) } else { None };
+    for y in 0..IMG_HW {
+        for x in 0..IMG_HW {
+            let xf = x as f32;
+            let yf = y as f32;
+            // Oriented grating.
+            let u = (xf * ct + yf * st_) * freq * 0.5 + phase;
+            let grating = u.sin() * amp * polarity;
+            // Class-colored radial blob.
+            let d2 = ((xf - cx) * (xf - cx) + (yf - cy) * (yf - cy)) / 18.0;
+            let blob = (-d2).exp();
+            // Digit glyph overlay for SVHN (5x7 centered, 2x scale).
+            let mut glyph_v = 0.0;
+            if let Some(bits) = glyph {
+                let gx = (x as i32 - 3) / 2;
+                let gy = (y as i32 - 1) / 2;
+                if (0..5).contains(&gx) && (0..7).contains(&gy) {
+                    let bit = 34 - (gy * 5 + gx); // bit 34 = top-left
+                    if bits >> bit & 1 == 1 {
+                        glyph_v = 1.6;
+                    }
+                }
+            }
+            for c in 0..IMG_C {
+                let v = 0.45 * grating + 1.1 * blob * (color[c] - 0.5) + glyph_v
+                    + noise * rng.normal();
+                out.push((v * gain + bias).clamp(-3.0, 3.0));
+            }
+        }
+    }
+    out
+}
+
+/// Epoch iterator: reshuffles indices each epoch, yields fixed-size batches
+/// (drops the ragged tail — batch shape is baked into the AOT graph).
+pub struct Batcher {
+    n: usize,
+    batch: usize,
+    order: Vec<usize>,
+    pos: usize,
+    rng: Rng,
+}
+
+impl Batcher {
+    pub fn new(n: usize, batch: usize, seed: u64) -> Batcher {
+        assert!(batch <= n, "batch {batch} > dataset {n}");
+        let mut b = Batcher { n, batch, order: (0..n).collect(), pos: 0, rng: Rng::new(seed) };
+        b.rng.shuffle(&mut b.order);
+        b
+    }
+
+    /// Next batch of indices, reshuffling at epoch boundaries.
+    pub fn next_indices(&mut self) -> &[usize] {
+        if self.pos + self.batch > self.n {
+            self.rng.shuffle(&mut self.order);
+            self.pos = 0;
+        }
+        let s = &self.order[self.pos..self.pos + self.batch];
+        self.pos += self.batch;
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_generation() {
+        let a = Dataset::generate(DatasetKind::SynthC10, 32, 7, 0);
+        let b = Dataset::generate(DatasetKind::SynthC10, 32, 7, 0);
+        assert_eq!(a.images.data, b.images.data);
+        assert_eq!(a.labels, b.labels);
+        let c = Dataset::generate(DatasetKind::SynthC10, 32, 8, 0);
+        assert_ne!(a.images.data, c.images.data);
+    }
+
+    #[test]
+    fn split_salt_decouples() {
+        let tr = Dataset::generate(DatasetKind::SynthC10, 16, 7, 0);
+        let te = Dataset::generate(DatasetKind::SynthC10, 16, 7, 1);
+        assert_ne!(tr.images.data, te.images.data);
+    }
+
+    #[test]
+    fn shapes_and_labels() {
+        for kind in [
+            DatasetKind::SynthC10,
+            DatasetKind::SynthC100,
+            DatasetKind::SynthSVHN,
+            DatasetKind::SynthCINIC,
+        ] {
+            let d = Dataset::generate(kind, 64, 3, 0);
+            assert_eq!(d.images.shape, vec![64, IMG_HW, IMG_HW, IMG_C]);
+            assert!(d.labels.iter().all(|&l| l < kind.num_classes()));
+            // All classes should appear in 64 draws with high probability
+            // for the 10-class sets.
+            if kind.num_classes() == 10 {
+                let mut seen = [false; 10];
+                for &l in &d.labels {
+                    seen[l] = true;
+                }
+                assert!(seen.iter().filter(|&&s| s).count() >= 8);
+            }
+        }
+    }
+
+    #[test]
+    fn images_bounded_and_varied() {
+        let d = Dataset::generate(DatasetKind::SynthC10, 16, 5, 0);
+        assert!(d.images.data.iter().all(|v| v.is_finite() && v.abs() <= 3.0));
+        let mean: f32 = d.images.data.iter().sum::<f32>() / d.images.len() as f32;
+        let var: f32 =
+            d.images.data.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / d.images.len() as f32;
+        assert!(var > 0.05, "images look constant, var={var}");
+    }
+
+    #[test]
+    fn classes_are_separable_by_template_distance() {
+        // Nearest-class-mean classification on clean-ish samples should be
+        // far above chance — the datasets must be learnable.
+        let kind = DatasetKind::SynthC10;
+        let train = Dataset::generate(kind, 400, 11, 0);
+        let test = Dataset::generate(kind, 100, 11, 1);
+        let spl = IMG_HW * IMG_HW * IMG_C;
+        let mut means = vec![vec![0.0f32; spl]; 10];
+        let mut counts = vec![0usize; 10];
+        for i in 0..train.len() {
+            let l = train.labels[i];
+            counts[l] += 1;
+            for (m, v) in means[l].iter_mut().zip(train.images.row(i)) {
+                *m += v;
+            }
+        }
+        for (m, &c) in means.iter_mut().zip(&counts) {
+            for v in m.iter_mut() {
+                *v /= c.max(1) as f32;
+            }
+        }
+        let mut correct = 0;
+        for i in 0..test.len() {
+            let row = test.images.row(i);
+            let pred = (0..10)
+                .min_by(|&a, &b| {
+                    let da: f32 = means[a].iter().zip(row).map(|(m, v)| (m - v) * (m - v)).sum();
+                    let db: f32 = means[b].iter().zip(row).map(|(m, v)| (m - v) * (m - v)).sum();
+                    da.partial_cmp(&db).unwrap()
+                })
+                .unwrap();
+            if pred == test.labels[i] {
+                correct += 1;
+            }
+        }
+        assert!(correct >= 40, "nearest-mean accuracy {correct}/100 — dataset not learnable");
+    }
+
+    #[test]
+    fn svhn_easier_than_c100() {
+        // Confirm the difficulty ordering the evaluation relies on, via
+        // within-class variance relative to between-class distance.
+        fn spread(kind: DatasetKind) -> f32 {
+            let d = Dataset::generate(kind, 200, 13, 0);
+            let spl = IMG_HW * IMG_HW * IMG_C;
+            let k = kind.num_classes();
+            let mut means = vec![vec![0.0f32; spl]; k];
+            let mut counts = vec![0usize; k];
+            for i in 0..d.len() {
+                counts[d.labels[i]] += 1;
+                for (m, v) in means[d.labels[i]].iter_mut().zip(d.images.row(i)) {
+                    *m += v;
+                }
+            }
+            for (m, &c) in means.iter_mut().zip(&counts) {
+                for v in m.iter_mut() {
+                    *v /= c.max(1) as f32;
+                }
+            }
+            let mut within = 0.0f32;
+            for i in 0..d.len() {
+                let m = &means[d.labels[i]];
+                within += m
+                    .iter()
+                    .zip(d.images.row(i))
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum::<f32>();
+            }
+            within / d.len() as f32
+        }
+        assert!(spread(DatasetKind::SynthSVHN) < spread(DatasetKind::SynthC100));
+    }
+
+    #[test]
+    fn batcher_covers_epoch() {
+        let mut b = Batcher::new(10, 3, 1);
+        let mut seen = vec![0usize; 10];
+        for _ in 0..3 {
+            for &i in b.next_indices() {
+                seen[i] += 1;
+            }
+        }
+        // 9 of 10 indices per epoch (tail dropped); over one epoch no
+        // index repeats more than once.
+        assert!(seen.iter().all(|&c| c <= 1 || c <= 2));
+        assert_eq!(seen.iter().sum::<usize>(), 9);
+    }
+
+    #[test]
+    fn batch_one_hot() {
+        let d = Dataset::generate(DatasetKind::SynthC10, 8, 3, 0);
+        let (x, y) = d.batch(&[0, 1, 2]);
+        assert_eq!(x.shape, vec![3, IMG_HW, IMG_HW, IMG_C]);
+        assert_eq!(y.shape, vec![3, NUM_CLASSES_MAX]);
+        for (bi, row) in y.data.chunks_exact(NUM_CLASSES_MAX).enumerate() {
+            assert_eq!(row.iter().sum::<f32>(), 1.0);
+            assert_eq!(row[d.labels[bi]], 1.0);
+        }
+    }
+}

@@ -1,0 +1,176 @@
+//! Early-exit policy evaluation and threshold calibration.
+//!
+//! The exit rule is the classic confidence gate: a sample exits at head k
+//! if its max-softmax confidence is >= the head's threshold.  Everything
+//! here runs on the *full* eval graph (all heads computed) — perfect for
+//! measurement because we see every head's prediction for every sample.
+//! The serving loop (`serve`) uses the staged graphs instead to actually
+//! skip the computation.
+
+use anyhow::Result;
+
+use crate::data::Dataset;
+use crate::models::ModelState;
+use crate::runtime::Engine;
+use crate::tensor::Tensor;
+use crate::train;
+
+/// Outcome of evaluating an exit policy on a dataset.
+#[derive(Debug, Clone)]
+pub struct ExitEval {
+    pub accuracy: f64,
+    pub p_exit1: f64,
+    pub p_exit2: f64,
+    /// Accuracy of each head over the samples that used it.
+    pub acc_exit1: f64,
+    pub acc_exit2: f64,
+    pub acc_main: f64,
+}
+
+fn max_conf(row: &[f32]) -> f32 {
+    // max softmax == softmax of max logit; compute stably.
+    let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let denom: f32 = row.iter().map(|x| (x - m).exp()).sum();
+    1.0 / denom
+}
+
+/// Evaluate the (t1, t2) confidence-threshold policy.
+pub fn evaluate(
+    engine: &Engine,
+    state: &ModelState,
+    ds: &Dataset,
+    t1: f32,
+    t2: f32,
+) -> Result<ExitEval> {
+    let (main, e1, e2) = train::eval_logits(engine, state, ds)?;
+    Ok(evaluate_from_logits(&main, &e1, &e2, &ds.labels, t1, t2))
+}
+
+/// Policy evaluation from precomputed logits (lets sweeps vary thresholds
+/// without re-running the network — the paper's "several samples per
+/// trained case").
+pub fn evaluate_from_logits(
+    main: &Tensor,
+    e1: &Tensor,
+    e2: &Tensor,
+    labels: &[usize],
+    t1: f32,
+    t2: f32,
+) -> ExitEval {
+    let nc = main.shape[1];
+    let n = labels.len();
+    let (mut n1, mut n2, mut nm) = (0usize, 0usize, 0usize);
+    let (mut c1, mut c2, mut cm) = (0usize, 0usize, 0usize);
+    for i in 0..n {
+        let r1 = &e1.data[i * nc..(i + 1) * nc];
+        let r2 = &e2.data[i * nc..(i + 1) * nc];
+        let rm = &main.data[i * nc..(i + 1) * nc];
+        let (row, bucket) = if max_conf(r1) >= t1 {
+            (r1, 0)
+        } else if max_conf(r2) >= t2 {
+            (r2, 1)
+        } else {
+            (rm, 2)
+        };
+        let pred = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(j, _)| j)
+            .unwrap();
+        let ok = pred == labels[i];
+        match bucket {
+            0 => {
+                n1 += 1;
+                c1 += ok as usize;
+            }
+            1 => {
+                n2 += 1;
+                c2 += ok as usize;
+            }
+            _ => {
+                nm += 1;
+                cm += ok as usize;
+            }
+        }
+    }
+    let frac = |c: usize, n: usize| if n == 0 { 0.0 } else { c as f64 / n as f64 };
+    ExitEval {
+        accuracy: (c1 + c2 + cm) as f64 / n.max(1) as f64,
+        p_exit1: n1 as f64 / n.max(1) as f64,
+        p_exit2: n2 as f64 / n.max(1) as f64,
+        acc_exit1: frac(c1, n1),
+        acc_exit2: frac(c2, n2),
+        acc_main: frac(cm, nm),
+    }
+}
+
+/// Sweep thresholds on fixed logits: the runtime knob of a trained
+/// early-exit model.  Returns (t, ExitEval) pairs.
+pub fn threshold_sweep(
+    main: &Tensor,
+    e1: &Tensor,
+    e2: &Tensor,
+    labels: &[usize],
+    thresholds: &[f32],
+) -> Vec<(f32, ExitEval)> {
+    thresholds
+        .iter()
+        .map(|&t| (t, evaluate_from_logits(main, e1, e2, labels, t, t)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(rows: Vec<Vec<f32>>) -> Tensor {
+        let n = rows.len();
+        let c = rows[0].len();
+        Tensor::new(vec![n, c], rows.into_iter().flatten().collect())
+    }
+
+    #[test]
+    fn confident_exit1_takes_all() {
+        // exit1 very confident and correct on both samples.
+        let e1 = t(vec![vec![10.0, -10.0], vec![-10.0, 10.0]]);
+        let e2 = t(vec![vec![0.0, 0.0], vec![0.0, 0.0]]);
+        let main = t(vec![vec![0.0, 1.0], vec![1.0, 0.0]]); // wrong!
+        let ev = evaluate_from_logits(&main, &e1, &e2, &[0, 1], 0.9, 0.9);
+        assert_eq!(ev.p_exit1, 1.0);
+        assert_eq!(ev.accuracy, 1.0);
+    }
+
+    #[test]
+    fn threshold_one_routes_to_main() {
+        let e1 = t(vec![vec![10.0, -10.0]]);
+        let e2 = t(vec![vec![10.0, -10.0]]);
+        let main = t(vec![vec![-5.0, 5.0]]);
+        // thresholds above max confidence 1.0 are unreachable.
+        let ev = evaluate_from_logits(&main, &e1, &e2, &[1], 1.01, 1.01);
+        assert_eq!(ev.p_exit1 + ev.p_exit2, 0.0);
+        assert_eq!(ev.accuracy, 1.0);
+    }
+
+    #[test]
+    fn lower_threshold_exits_more(){
+        let mk = |conf: f32| {
+            // logit gap controls confidence
+            t(vec![vec![conf, 0.0]; 8])
+        };
+        let e1 = mk(1.0);
+        let e2 = mk(3.0);
+        let main = mk(9.0);
+        let labels = [0usize; 8];
+        let lo = evaluate_from_logits(&main, &e1, &e2, &labels, 0.55, 0.55);
+        let hi = evaluate_from_logits(&main, &e1, &e2, &labels, 0.99, 0.99);
+        assert!(lo.p_exit1 > hi.p_exit1);
+    }
+
+    #[test]
+    fn max_conf_is_softmax_max() {
+        let c = max_conf(&[2.0, 0.0, 0.0]);
+        let want = (2.0f32).exp() / ((2.0f32).exp() + 2.0);
+        assert!((c - want).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,41 @@
+//! # Chain of Compression
+//!
+//! A rust + JAX/Pallas reproduction of *"Chain of Compression: A Systematic
+//! Approach to Combinationally Compress Convolutional Neural Networks"*
+//! (a.k.a. "Order of Compression", Shen et al., 2024).
+//!
+//! Three layers (see DESIGN.md):
+//!
+//! * **L1** — Pallas fake-quant / qmatmul kernels (`python/compile/kernels/`),
+//! * **L2** — JAX CNN train/eval graphs with all four compression knobs as
+//!   runtime operands (`python/compile/`), AOT-lowered to HLO text once,
+//! * **L3** — this crate: the coordinator that owns datasets, training
+//!   loops, the four compression stages, order search, metrics, experiment
+//!   drivers and the early-exit serving loop, executing the AOT graphs via
+//!   PJRT (`xla` crate).  Python never runs at experiment time.
+//!
+//! Quickstart: see `examples/quickstart.rs`; experiments: `coc exp <id>`.
+
+pub mod chain;
+pub mod data;
+pub mod exits;
+pub mod exp;
+pub mod metrics;
+pub mod models;
+pub mod order;
+pub mod report;
+pub mod runtime;
+pub mod serve;
+pub mod sweep;
+pub mod tensor;
+pub mod train;
+pub mod util;
+
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}
+
+/// Default artifacts directory (relative to the repo root).
+pub const DEFAULT_ARTIFACTS: &str = "artifacts";
+/// Default results directory.
+pub const DEFAULT_RESULTS: &str = "results";

@@ -1,0 +1,195 @@
+//! `coc` — Chain of Compression CLI (L3 leader entrypoint).
+//!
+//! Subcommands:
+//!   info                         — manifest + platform summary
+//!   train   --arch A --dataset D — train a base model, report accuracy
+//!   chain   --seq DPQE ...       — run a compression chain end-to-end
+//!   exp     <id>                 — regenerate a paper table/figure
+//!   serve   --arch A ...         — early-exit serving loop demo
+//!   toposort                     — measure pairwise orders, derive the law
+//!
+//! Common flags: --artifacts DIR (default artifacts), --out DIR (default
+//! results), --scale smoke|default|paper, --seed N, --verbose.
+
+use anyhow::{anyhow, Result};
+
+use coc::chain::{stages, Chain};
+use coc::data::DatasetKind;
+use coc::exp::{self, ExpCtx};
+use coc::metrics::Measurement;
+use coc::order;
+use coc::serve::Server;
+use coc::sweep::Scale;
+use coc::train::{self, TrainOpts};
+use coc::util::cli::Args;
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn ctx_from(args: &Args) -> Result<ExpCtx> {
+    let scale = Scale::parse(args.get_or("scale", "default"))
+        .ok_or_else(|| anyhow!("--scale must be smoke|default|paper"))?;
+    ExpCtx::new(
+        args.get_or("artifacts", coc::DEFAULT_ARTIFACTS),
+        args.get_or("out", coc::DEFAULT_RESULTS),
+        scale,
+        args.get_u64("seed", 42)?,
+        args.flag("verbose"),
+    )
+}
+
+fn real_main() -> Result<()> {
+    let args = Args::parse_env();
+    match args.subcommand.as_deref() {
+        Some("info") => cmd_info(&args),
+        Some("train") => cmd_train(&args),
+        Some("chain") => cmd_chain(&args),
+        Some("exp") => {
+            let ctx = ctx_from(&args)?;
+            let id = args
+                .positional
+                .first()
+                .ok_or_else(|| anyhow!("usage: coc exp <id> (fig6..fig15, table1..table5, toposort, all)"))?;
+            exp::run(&ctx, id)
+        }
+        Some("toposort") => {
+            let ctx = ctx_from(&args)?;
+            exp::run(&ctx, "toposort")
+        }
+        Some("serve") => cmd_serve(&args),
+        other => {
+            if let Some(o) = other {
+                eprintln!("unknown subcommand `{o}`\n");
+            }
+            print_usage();
+            Ok(())
+        }
+    }
+}
+
+fn print_usage() {
+    println!("coc {} — Chain of Compression coordinator", coc::version());
+    println!("usage: coc <info|train|chain|exp|serve|toposort> [flags]");
+    println!("  coc exp all --scale default     # regenerate every table/figure");
+    println!("  coc chain --seq DPQE --arch mini_resnet --dataset c10");
+    println!("  coc serve --arch mini_resnet --requests 200 --threshold 0.8");
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let ctx = ctx_from(args)?;
+    println!("platform: {}", ctx.engine.platform());
+    println!("artifacts: {}", ctx.engine.artifacts_dir().display());
+    for (name, arch) in &ctx.manifest.archs {
+        let base = coc::models::Accountant::baseline_bitops(arch);
+        let params: usize = arch.param_shapes.iter().map(|s| s.iter().product::<usize>()).sum();
+        println!(
+            "arch {name}: {} layers, {} mask slots, {params} params, baseline {base:.3e} BitOps",
+            arch.layers.len(),
+            arch.mask_slots.len()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let ctx = ctx_from(args)?;
+    let arch = args.get_or("arch", "mini_resnet");
+    let kind = DatasetKind::parse(args.get_or("dataset", "c10"))
+        .ok_or_else(|| anyhow!("--dataset must be c10|c100|svhn|cinic"))?;
+    let (train_ds, test_ds) = ctx.datasets(kind);
+    let arch_m = ctx.manifest.arch(arch)?;
+    let mut st = train::init_state(&ctx.engine, arch_m, ctx.seed)?;
+    let opts = TrainOpts {
+        steps: args.get_usize("steps", ctx.scale.base_steps())?,
+        lr: args.get_f32("lr", 0.05)?,
+        seed: ctx.seed,
+        log_every: if args.flag("verbose") { 20 } else { 0 },
+        ..Default::default()
+    };
+    let log = train::train(&ctx.engine, &mut st, &train_ds, None, &opts)?;
+    let acc = train::eval_accuracy(&ctx.engine, &st, &test_ds)?;
+    println!(
+        "trained {arch} on {} for {} steps: final loss {:.4}, test acc {:.2}%",
+        kind.name(),
+        opts.steps,
+        log.final_loss(),
+        acc * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_chain(args: &Args) -> Result<()> {
+    let ctx = ctx_from(args)?;
+    let arch = args.get_or("arch", "mini_resnet");
+    let kind = DatasetKind::parse(args.get_or("dataset", "c10"))
+        .ok_or_else(|| anyhow!("--dataset must be c10|c100|svhn|cinic"))?;
+    let seq = order::parse_sequence(args.get_or("seq", "DPQE"))?;
+    let rung = args.get_usize("rung", 1)?;
+    let ladder = ctx.scale.ladder();
+
+    let (train_ds, test_ds) = ctx.datasets(kind);
+    let base = ctx.base_model(arch, kind, &train_ds)?;
+    let orig = train::eval_accuracy(&ctx.engine, &base, &test_ds)?;
+    println!("base {arch}/{}: acc {:.2}%", kind.name(), orig * 100.0);
+
+    let sctx = ctx.stage_ctx(&train_ds, &test_ds);
+    let mut state = base.clone();
+    let chain = exp::chain_for_sequence(&seq, rung.min(ladder - 1), ladder);
+    let reports = chain.run(&mut state, &sctx)?;
+    for r in &reports {
+        println!(
+            "  after {:<24} acc {:.2}%  BitOpsCR {:>8.1}x  CR {:>7.1}x",
+            r.stage,
+            r.measurement.accuracy * 100.0,
+            r.measurement.bitops_cr,
+            r.measurement.storage_cr
+        );
+    }
+    let m = Measurement::take(&ctx.engine, &state, &test_ds)?;
+    println!(
+        "chain {}: acc {:.2}% ({:+.2}%)  BitOpsCR {:.1}x  CR {:.1}x",
+        order::sequence_string(&seq),
+        m.accuracy * 100.0,
+        (m.accuracy - orig) * 100.0,
+        m.bitops_cr,
+        m.storage_cr
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let ctx = ctx_from(args)?;
+    let arch = args.get_or("arch", "mini_resnet");
+    let kind = DatasetKind::parse(args.get_or("dataset", "c10"))
+        .ok_or_else(|| anyhow!("--dataset must be c10|c100|svhn|cinic"))?;
+    let threshold = args.get_f32("threshold", 0.8)?;
+    let requests = args.get_usize("requests", 200)?;
+
+    let (train_ds, test_ds) = ctx.datasets(kind);
+    let mut state = ctx.base_model(arch, kind, &train_ds)?;
+    // Ensure exits are trained before serving.
+    let sctx = ctx.stage_ctx(&train_ds, &test_ds);
+    let chain = Chain::new().push(Box::new(stages::EarlyExit {
+        threshold,
+        ..Default::default()
+    }));
+    chain.run(&mut state, &sctx)?;
+
+    let server = Server::new(&ctx.engine, state)?;
+    let rep = server.serve_dataset(&test_ds, requests, threshold, threshold)?;
+    println!(
+        "served {} requests: acc {:.2}%  exit1 {:.0}%  exit2 {:.0}%  p50 {:.0}µs  p95 {:.0}µs  {:.0} rps",
+        rep.requests,
+        rep.accuracy * 100.0,
+        rep.p_exit1 * 100.0,
+        rep.p_exit2 * 100.0,
+        rep.latency_us.p50(),
+        rep.latency_us.p95(),
+        rep.throughput_rps
+    );
+    Ok(())
+}

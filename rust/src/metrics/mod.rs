@@ -1,0 +1,51 @@
+//! Measurement bookkeeping: the (accuracy, BitOpsCR, CR) triples every
+//! experiment reports, in the paper's units.
+
+use anyhow::Result;
+
+use crate::data::Dataset;
+use crate::exits;
+use crate::models::{Accountant, ModelState};
+use crate::runtime::Engine;
+
+/// One measured point: what every scatter plot / table row is made of.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub accuracy: f64,
+    pub bitops_cr: f64,
+    pub storage_cr: f64,
+    pub bitops: f64,
+    pub storage_bits: f64,
+    /// Exit distribution at measurement time (0, 0 if exits unused).
+    pub exit_probs: (f64, f64),
+}
+
+impl Measurement {
+    /// Measure the state on the given dataset.  If exits are trained and
+    /// thresholds set, accuracy and BitOps use the early-exit policy;
+    /// otherwise the main head.
+    pub fn take(engine: &Engine, state: &ModelState, test: &Dataset) -> Result<Measurement> {
+        let state = &mut state.clone();
+        let accuracy = if state.exits.trained && state.exits.thresholds.is_some() {
+            let (t1, t2) = state.exits.thresholds.unwrap();
+            let ev = exits::evaluate(engine, state, test, t1, t2)?;
+            state.exits.exit_probs = (ev.p_exit1, ev.p_exit2);
+            ev.accuracy
+        } else {
+            crate::train::eval_accuracy(engine, state, test)?
+        };
+        let acct = Accountant::new(state);
+        Ok(Measurement {
+            accuracy,
+            bitops_cr: acct.bitops_cr(),
+            storage_cr: acct.storage_cr(),
+            bitops: acct.expected_bitops(),
+            storage_bits: acct.storage_bits(),
+            exit_probs: state.exits.exit_probs,
+        })
+    }
+
+    pub fn as_point(&self) -> (f64, f64) {
+        (self.bitops_cr, self.accuracy)
+    }
+}

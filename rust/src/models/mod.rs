@@ -1,0 +1,821 @@
+//! Model manifest (emitted by python/compile/aot.py) + host-side model
+//! state + BitOps / storage accounting.
+//!
+//! The manifest is the single source of truth the coordinator shares with
+//! the L2 graphs: parameter order/shapes, mask slots, per-layer geometry.
+//! All compression metrics (BitOpsCR, CR) are computed here from layer
+//! descriptors + the current masks/bit-widths — the same *analytic*
+//! accounting the paper uses (BitOps are counted, not measured).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+pub const FP_BITS: f64 = 32.0;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerKind {
+    Conv,
+    DwConv,
+    Dense,
+}
+
+#[derive(Debug, Clone)]
+pub struct LayerDesc {
+    pub name: String,
+    pub kind: LayerKind,
+    pub k: usize,
+    pub cin: usize,
+    pub cout: usize,
+    pub stride: usize,
+    pub hout: usize,
+    pub wout: usize,
+    /// Mask slot feeding this layer's input channels (-1 = unmasked).
+    pub in_mask: i64,
+    /// Mask slot over this layer's output channels (-1 = unmasked).
+    pub out_mask: i64,
+    /// "seg1" | "seg2" | "seg3" | "exit1" | "exit2".
+    pub segment: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct MaskSlot {
+    pub name: String,
+    pub channels: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArchManifest {
+    pub name: String,
+    pub num_classes: usize,
+    pub layers: Vec<LayerDesc>,
+    pub mask_slots: Vec<MaskSlot>,
+    pub param_shapes: Vec<Vec<usize>>,
+    /// graph tag ("train", "eval", "init", "stage1"...) -> artifact file.
+    pub graphs: BTreeMap<String, String>,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    pub stage_batch: usize,
+    pub stage_h1_shape: Vec<usize>,
+    pub stage_h2_shape: Vec<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub num_classes: usize,
+    pub input_hw: usize,
+    pub input_c: usize,
+    pub archs: BTreeMap<String, Rc<ArchManifest>>,
+    /// kernel bench name -> artifact file.
+    pub kernels: BTreeMap<String, String>,
+}
+
+impl Manifest {
+    pub fn load<P: AsRef<Path>>(artifacts_dir: P) -> Result<Manifest> {
+        let path = artifacts_dir.as_ref().join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`?)", path.display()))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        Self::from_json(&j)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Manifest> {
+        let input = j.req("input")?;
+        let mut archs = BTreeMap::new();
+        for (name, aj) in j.req("archs")?.as_obj().ok_or_else(|| anyhow!("archs not an object"))? {
+            archs.insert(name.clone(), Rc::new(parse_arch(aj)?));
+        }
+        let mut kernels = BTreeMap::new();
+        if let Some(kj) = j.get("kernels").and_then(|k| k.as_obj()) {
+            for (name, v) in kj {
+                if let Some(f) = v.get("file").and_then(|f| f.as_str()) {
+                    kernels.insert(name.clone(), f.to_string());
+                }
+            }
+        }
+        Ok(Manifest {
+            num_classes: j.req("num_classes")?.as_usize().unwrap_or(20),
+            input_hw: input.req("h")?.as_usize().unwrap_or(16),
+            input_c: input.req("c")?.as_usize().unwrap_or(3),
+            archs,
+            kernels,
+        })
+    }
+
+    pub fn arch(&self, name: &str) -> Result<Rc<ArchManifest>> {
+        self.archs
+            .get(name)
+            .cloned()
+            .ok_or_else(|| anyhow!("unknown arch `{name}` (have: {:?})", self.archs.keys()))
+    }
+}
+
+fn parse_arch(j: &Json) -> Result<ArchManifest> {
+    let layers = j
+        .req("layers")?
+        .as_arr()
+        .ok_or_else(|| anyhow!("layers not an array"))?
+        .iter()
+        .map(parse_layer)
+        .collect::<Result<Vec<_>>>()?;
+    let mask_slots = j
+        .req("mask_slots")?
+        .as_arr()
+        .ok_or_else(|| anyhow!("mask_slots not an array"))?
+        .iter()
+        .map(|m| {
+            Ok(MaskSlot {
+                name: m.req("name")?.as_str().unwrap_or("").to_string(),
+                channels: m.req("channels")?.as_usize().unwrap_or(0),
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let param_shapes = j
+        .req("param_shapes")?
+        .as_arr()
+        .ok_or_else(|| anyhow!("param_shapes not an array"))?
+        .iter()
+        .map(|s| {
+            s.as_arr()
+                .ok_or_else(|| anyhow!("param shape not an array"))
+                .map(|dims| dims.iter().filter_map(|d| d.as_usize()).collect())
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let mut graphs = BTreeMap::new();
+    for (tag, g) in j.req("graphs")?.as_obj().ok_or_else(|| anyhow!("graphs not an object"))? {
+        graphs.insert(
+            tag.clone(),
+            g.req("file")?.as_str().unwrap_or("").to_string(),
+        );
+    }
+    let usz_arr = |key: &str| -> Result<Vec<usize>> {
+        Ok(j.req(key)?
+            .as_arr()
+            .ok_or_else(|| anyhow!("{key} not an array"))?
+            .iter()
+            .filter_map(|d| d.as_usize())
+            .collect())
+    };
+    Ok(ArchManifest {
+        name: j.req("name")?.as_str().unwrap_or("").to_string(),
+        num_classes: j.req("num_classes")?.as_usize().unwrap_or(20),
+        layers,
+        mask_slots,
+        param_shapes,
+        graphs,
+        train_batch: j.req("train_batch")?.as_usize().unwrap_or(32),
+        eval_batch: j.req("eval_batch")?.as_usize().unwrap_or(64),
+        stage_batch: j.req("stage_batch")?.as_usize().unwrap_or(1),
+        stage_h1_shape: usz_arr("stage_h1_shape")?,
+        stage_h2_shape: usz_arr("stage_h2_shape")?,
+    })
+}
+
+fn parse_layer(j: &Json) -> Result<LayerDesc> {
+    let kind = match j.req("kind")?.as_str() {
+        Some("conv") => LayerKind::Conv,
+        Some("dwconv") => LayerKind::DwConv,
+        Some("dense") => LayerKind::Dense,
+        other => return Err(anyhow!("unknown layer kind {other:?}")),
+    };
+    Ok(LayerDesc {
+        name: j.req("name")?.as_str().unwrap_or("").to_string(),
+        kind,
+        k: j.req("k")?.as_usize().unwrap_or(1),
+        cin: j.req("cin")?.as_usize().unwrap_or(0),
+        cout: j.req("cout")?.as_usize().unwrap_or(0),
+        stride: j.req("stride")?.as_usize().unwrap_or(1),
+        hout: j.req("hout")?.as_usize().unwrap_or(1),
+        wout: j.req("wout")?.as_usize().unwrap_or(1),
+        in_mask: j.req("in_mask")?.as_i64().unwrap_or(-1),
+        out_mask: j.req("out_mask")?.as_i64().unwrap_or(-1),
+        segment: j.req("segment")?.as_str().unwrap_or("seg1").to_string(),
+    })
+}
+
+impl ArchManifest {
+    pub fn graph(&self, tag: &str) -> Result<&str> {
+        self.graphs
+            .get(tag)
+            .map(|s| s.as_str())
+            .ok_or_else(|| anyhow!("arch `{}` has no graph `{tag}`", self.name))
+    }
+
+    pub fn num_params(&self) -> usize {
+        self.param_shapes.len()
+    }
+
+    /// Index of the (weight) param for layer `li`: params are (w, b) pairs
+    /// in layer order.
+    pub fn weight_index(&self, li: usize) -> usize {
+        2 * li
+    }
+
+    pub fn layer_index(&self, name: &str) -> Option<usize> {
+        self.layers.iter().position(|l| l.name == name)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Model state: everything that evolves along the compression chain.
+// ---------------------------------------------------------------------------
+
+/// Quantization setting: 0 bits = fp32 path.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QBits {
+    pub weight: f32,
+    pub act: f32,
+}
+
+impl QBits {
+    pub const FP32: QBits = QBits { weight: 0.0, act: 0.0 };
+
+    pub fn effective_w(&self) -> f64 {
+        if self.weight <= 0.0 {
+            FP_BITS
+        } else {
+            self.weight as f64
+        }
+    }
+
+    pub fn effective_a(&self) -> f64 {
+        if self.act <= 0.0 {
+            FP_BITS
+        } else {
+            self.act as f64
+        }
+    }
+}
+
+/// Early-exit deployment state: thresholds on max-softmax confidence plus
+/// the measured exit distribution (filled in by exits::calibrate).
+#[derive(Debug, Clone, Default)]
+pub struct ExitState {
+    pub trained: bool,
+    pub thresholds: Option<(f32, f32)>,
+    /// Measured P(exit at 1), P(exit at 2) on the calibration set.
+    pub exit_probs: (f64, f64),
+}
+
+/// Storage-side compression applied host-side (Deep-Compression baseline
+/// stages): weight clustering (codebook) and entropy coding.  These change
+/// the *storage* accounting; compute (BitOps) is governed by qbits/masks.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct StorageExtras {
+    /// log2(#centroids) bits/weight after clustering (None = unclustered).
+    pub cluster_bits: Option<f32>,
+    /// Measured entropy-coded total weight bits (None = uncoded).  Set by
+    /// the HuffmanCoding stage; includes code-table side information.
+    pub coded_weight_bits: Option<f64>,
+}
+
+#[derive(Clone)]
+pub struct ModelState {
+    pub arch: Rc<ArchManifest>,
+    pub params: Vec<Tensor>,
+    pub momenta: Vec<Tensor>,
+    pub masks: Vec<Tensor>,
+    pub qbits: QBits,
+    pub exits: ExitState,
+    pub extras: StorageExtras,
+    /// Human-readable provenance: compression stages applied so far.
+    pub history: Vec<String>,
+}
+
+impl ModelState {
+    /// Host-side init (unit tests / no-artifact paths): He-normal weights,
+    /// zero biases — mirrors `Net.init_params` in archs.py.
+    pub fn init_host(arch: Rc<ArchManifest>, seed: u64) -> ModelState {
+        let mut rng = Rng::new(seed);
+        let mut params = Vec::with_capacity(arch.param_shapes.len());
+        for (li, l) in arch.layers.iter().enumerate() {
+            let wshape = &arch.param_shapes[2 * li];
+            let fan_in = match l.kind {
+                LayerKind::Dense => l.cin,
+                LayerKind::DwConv => l.k * l.k,
+                LayerKind::Conv => l.k * l.k * l.cin,
+            };
+            params.push(Tensor::he_normal(wshape, fan_in, &mut rng));
+            params.push(Tensor::zeros(&arch.param_shapes[2 * li + 1]));
+        }
+        let momenta = params.iter().map(|p| Tensor::zeros(&p.shape)).collect();
+        let masks = arch
+            .mask_slots
+            .iter()
+            .map(|m| Tensor::ones(&[m.channels]))
+            .collect();
+        ModelState {
+            arch,
+            params,
+            momenta,
+            masks,
+            qbits: QBits::FP32,
+            exits: ExitState::default(),
+            extras: StorageExtras::default(),
+            history: Vec::new(),
+        }
+    }
+
+    pub fn reset_momenta(&mut self) {
+        for m in &mut self.momenta {
+            m.data.iter_mut().for_each(|v| *v = 0.0);
+        }
+    }
+
+    /// Active (unmasked) channel count for a mask slot id; `-1` = `full`.
+    pub fn active_channels(&self, slot: i64, full: usize) -> usize {
+        if slot < 0 {
+            full
+        } else {
+            self.masks[slot as usize].count_nonzero()
+        }
+    }
+
+    /// Fraction of channels kept across all mask slots (1.0 = unpruned).
+    pub fn keep_fraction(&self) -> f64 {
+        let total: usize = self.arch.mask_slots.iter().map(|m| m.channels).sum();
+        let live: usize = self.masks.iter().map(|m| m.count_nonzero()).sum();
+        live as f64 / total.max(1) as f64
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Persistence: cache trained states (base teachers) across experiments.
+// Format: one JSON header line (shapes + metadata), then raw little-endian
+// f32 for params ++ momenta ++ masks.
+// ---------------------------------------------------------------------------
+
+impl ModelState {
+    pub fn save<P: AsRef<Path>>(&self, path: P) -> Result<()> {
+        use crate::util::json::{num, obj, s, Json};
+        let shapes = |ts: &[Tensor]| {
+            Json::Arr(
+                ts.iter()
+                    .map(|t| Json::Arr(t.shape.iter().map(|&d| num(d as f64)).collect()))
+                    .collect(),
+            )
+        };
+        let header = obj(vec![
+            ("arch", s(&self.arch.name)),
+            ("params", shapes(&self.params)),
+            ("momenta", shapes(&self.momenta)),
+            ("masks", shapes(&self.masks)),
+            ("qbits_w", num(self.qbits.weight as f64)),
+            ("qbits_a", num(self.qbits.act as f64)),
+            ("exits_trained", Json::Bool(self.exits.trained)),
+            ("exit_t1", num(self.exits.thresholds.map(|t| t.0).unwrap_or(-1.0) as f64)),
+            ("exit_t2", num(self.exits.thresholds.map(|t| t.1).unwrap_or(-1.0) as f64)),
+            ("exit_p1", num(self.exits.exit_probs.0)),
+            ("exit_p2", num(self.exits.exit_probs.1)),
+            ("cluster_bits", num(self.extras.cluster_bits.unwrap_or(-1.0) as f64)),
+            ("coded_weight_bits", num(self.extras.coded_weight_bits.unwrap_or(-1.0))),
+            (
+                "history",
+                Json::Arr(self.history.iter().map(|h| s(h)).collect()),
+            ),
+        ]);
+        let mut bytes = header.to_string().into_bytes();
+        bytes.push(b'\n');
+        for t in self.params.iter().chain(&self.momenta).chain(&self.masks) {
+            for v in &t.data {
+                bytes.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir).ok();
+        }
+        std::fs::write(path.as_ref(), bytes)
+            .with_context(|| format!("saving state to {}", path.as_ref().display()))
+    }
+
+    pub fn load<P: AsRef<Path>>(path: P, arch: Rc<ArchManifest>) -> Result<ModelState> {
+        let bytes = std::fs::read(path.as_ref())
+            .with_context(|| format!("loading state from {}", path.as_ref().display()))?;
+        let nl = bytes
+            .iter()
+            .position(|&b| b == b'\n')
+            .ok_or_else(|| anyhow!("corrupt state file: no header"))?;
+        let header = Json::parse(std::str::from_utf8(&bytes[..nl])?)
+            .map_err(|e| anyhow!("corrupt state header: {e}"))?;
+        let got_arch = header.req("arch")?.as_str().unwrap_or("");
+        if got_arch != arch.name {
+            return Err(anyhow!("state file is for arch `{got_arch}`, expected `{}`", arch.name));
+        }
+        let shapes = |key: &str| -> Result<Vec<Vec<usize>>> {
+            Ok(header
+                .req(key)?
+                .as_arr()
+                .ok_or_else(|| anyhow!("bad shapes"))?
+                .iter()
+                .map(|s| s.as_arr().unwrap_or(&[]).iter().filter_map(|d| d.as_usize()).collect())
+                .collect())
+        };
+        let mut off = nl + 1;
+        let mut read_group = |shapes: Vec<Vec<usize>>| -> Result<Vec<Tensor>> {
+            let mut out = Vec::with_capacity(shapes.len());
+            for shape in shapes {
+                let n: usize = shape.iter().product();
+                let end = off + n * 4;
+                if end > bytes.len() {
+                    return Err(anyhow!("corrupt state file: truncated data"));
+                }
+                let data = bytes[off..end]
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect();
+                off = end;
+                out.push(Tensor::new(shape, data));
+            }
+            Ok(out)
+        };
+        let params = read_group(shapes("params")?)?;
+        let momenta = read_group(shapes("momenta")?)?;
+        let masks = read_group(shapes("masks")?)?;
+        let t1 = header.req("exit_t1")?.as_f64().unwrap_or(-1.0) as f32;
+        let t2 = header.req("exit_t2")?.as_f64().unwrap_or(-1.0) as f32;
+        Ok(ModelState {
+            arch,
+            params,
+            momenta,
+            masks,
+            qbits: QBits {
+                weight: header.req("qbits_w")?.as_f64().unwrap_or(0.0) as f32,
+                act: header.req("qbits_a")?.as_f64().unwrap_or(0.0) as f32,
+            },
+            exits: ExitState {
+                trained: header.req("exits_trained")?.as_bool().unwrap_or(false),
+                thresholds: if t1 >= 0.0 { Some((t1, t2)) } else { None },
+                exit_probs: (
+                    header.req("exit_p1")?.as_f64().unwrap_or(0.0),
+                    header.req("exit_p2")?.as_f64().unwrap_or(0.0),
+                ),
+            },
+            extras: StorageExtras {
+                cluster_bits: header
+                    .get("cluster_bits")
+                    .and_then(|v| v.as_f64())
+                    .filter(|&v| v >= 0.0)
+                    .map(|v| v as f32),
+                coded_weight_bits: header
+                    .get("coded_weight_bits")
+                    .and_then(|v| v.as_f64())
+                    .filter(|&v| v >= 0.0),
+            },
+            history: header
+                .get("history")
+                .and_then(|h| h.as_arr())
+                .map(|a| a.iter().filter_map(|s| s.as_str().map(String::from)).collect())
+                .unwrap_or_default(),
+        })
+    }
+}
+
+/// Host-side replica of the L1 `weight_quant` (DoReFa + max|w| rescale) —
+/// used to materialize *deployed* weight values for entropy-coding
+/// analysis.  Must match python/compile/kernels/fake_quant.py.
+pub fn host_weight_quant(w: &Tensor, bits: f32) -> Tensor {
+    if bits <= 0.0 {
+        return w.clone();
+    }
+    let n = (2f32.powf(bits) - 1.0).max(1.0);
+    let mut tmax = 1e-8f32;
+    let mut wmax = 1e-8f32;
+    for &v in &w.data {
+        tmax = tmax.max(v.tanh().abs());
+        wmax = wmax.max(v.abs());
+    }
+    let data = w
+        .data
+        .iter()
+        .map(|&v| {
+            let tn = v.tanh() / (2.0 * tmax) + 0.5;
+            (2.0 * ((tn * n).round() / n) - 1.0) * wmax
+        })
+        .collect();
+    Tensor::new(w.shape.clone(), data)
+}
+
+// ---------------------------------------------------------------------------
+// BitOps / storage accounting.
+// ---------------------------------------------------------------------------
+
+/// MACs for one layer given active channel counts.
+pub fn layer_macs(l: &LayerDesc, cin_active: usize, cout_active: usize) -> f64 {
+    let spatial = (l.hout * l.wout) as f64;
+    match l.kind {
+        LayerKind::Conv => spatial * (l.k * l.k) as f64 * cin_active as f64 * cout_active as f64,
+        // Depthwise: one filter per channel.
+        LayerKind::DwConv => spatial * (l.k * l.k) as f64 * cout_active as f64,
+        LayerKind::Dense => cin_active as f64 * cout_active as f64,
+    }
+}
+
+/// Weight-parameter count for one layer given active channels (bias excluded).
+pub fn layer_weight_count(l: &LayerDesc, cin_active: usize, cout_active: usize) -> f64 {
+    match l.kind {
+        LayerKind::Conv => (l.k * l.k) as f64 * cin_active as f64 * cout_active as f64,
+        LayerKind::DwConv => (l.k * l.k) as f64 * cout_active as f64,
+        LayerKind::Dense => cin_active as f64 * cout_active as f64,
+    }
+}
+
+pub struct Accountant<'a> {
+    pub state: &'a ModelState,
+}
+
+impl<'a> Accountant<'a> {
+    pub fn new(state: &'a ModelState) -> Self {
+        Accountant { state }
+    }
+
+    fn active(&self, slot: i64, full: usize) -> usize {
+        self.state.active_channels(slot, full)
+    }
+
+    /// BitOps for one layer under the current masks/bits.  The stem layer
+    /// (raw image input) always pays fp32 activation bits — the first
+    /// layer's input is never quantized (standard QAT practice and the
+    /// paper's setup).
+    pub fn layer_bitops(&self, l: &LayerDesc) -> f64 {
+        let cin = self.active(l.in_mask, l.cin);
+        let cout = self.active(l.out_mask, l.cout);
+        let q = &self.state.qbits;
+        let ba = if l.in_mask < 0 && l.cin <= 4 { FP_BITS } else { q.effective_a() };
+        layer_macs(l, cin, cout) * q.effective_w() * ba
+    }
+
+    fn segment_bitops(&self, segment: &str) -> f64 {
+        self.state
+            .arch
+            .layers
+            .iter()
+            .filter(|l| l.segment == segment)
+            .map(|l| self.layer_bitops(l))
+            .sum()
+    }
+
+    /// Expected BitOps per inference under the current exit policy.
+    ///
+    /// Without exits: seg1+seg2+seg3.  With exits enabled, exit heads are
+    /// always evaluated on the path that reaches them and the expectation
+    /// is taken over the measured exit distribution.
+    pub fn expected_bitops(&self) -> f64 {
+        let s1 = self.segment_bitops("seg1");
+        let s2 = self.segment_bitops("seg2");
+        let s3 = self.segment_bitops("seg3");
+        let e1 = self.segment_bitops("exit1");
+        let e2 = self.segment_bitops("exit2");
+        if !self.state.exits.trained || self.state.exits.thresholds.is_none() {
+            return s1 + s2 + s3;
+        }
+        let (p1, p2) = self.state.exits.exit_probs;
+        let p3 = (1.0 - p1 - p2).max(0.0);
+        p1 * (s1 + e1) + p2 * (s1 + e1 + s2 + e2) + p3 * (s1 + e1 + s2 + e2 + s3)
+    }
+
+    /// Total storage bits for deployable parameters: weights at the weight
+    /// bit-width (active channels only), biases at fp32.  Exit-head
+    /// parameters count only when exits are deployed.
+    ///
+    /// Deep-Compression-style extras override the per-weight cost:
+    /// clustering stores log2(k) bits/weight + a k-entry fp32 codebook per
+    /// layer; Huffman coding replaces the whole weight payload with the
+    /// measured coded size.
+    pub fn storage_bits(&self) -> f64 {
+        if let Some(coded) = self.state.extras.coded_weight_bits {
+            // Coded payload covers all weights; biases stay fp32.
+            let bias_bits: f64 = self
+                .deployable_layers()
+                .map(|l| self.active(l.out_mask, l.cout) as f64 * FP_BITS)
+                .sum();
+            return coded + bias_bits;
+        }
+        let q = &self.state.qbits;
+        let per_weight = self.state.extras.cluster_bits.map(|b| b as f64);
+        let mut bits = 0.0;
+        for l in self.deployable_layers() {
+            let cin = self.active(l.in_mask, l.cin);
+            let cout = self.active(l.out_mask, l.cout);
+            let w = layer_weight_count(l, cin, cout);
+            match per_weight {
+                Some(cb) => {
+                    // index bits + per-layer codebook (2^cb centroids).
+                    bits += w * cb + (2f64.powf(cb)) * FP_BITS;
+                }
+                None => bits += w * q.effective_w(),
+            }
+            bits += cout as f64 * FP_BITS; // bias
+        }
+        bits
+    }
+
+    fn deployable_layers(&self) -> impl Iterator<Item = &LayerDesc> {
+        let exits_deployed = self.state.exits.trained;
+        self.state
+            .arch
+            .layers
+            .iter()
+            .filter(move |l| exits_deployed || !l.segment.starts_with("exit"))
+    }
+
+    /// fp32, unpruned, exit-free single-pass cost — the paper's baseline.
+    pub fn baseline_bitops(arch: &ArchManifest) -> f64 {
+        arch.layers
+            .iter()
+            .filter(|l| !l.segment.starts_with("exit"))
+            .map(|l| {
+                let ba = if l.in_mask < 0 && l.cin <= 4 { FP_BITS } else { FP_BITS };
+                layer_macs(l, l.cin, l.cout) * FP_BITS * ba
+            })
+            .sum()
+    }
+
+    pub fn baseline_storage(arch: &ArchManifest) -> f64 {
+        arch.layers
+            .iter()
+            .filter(|l| !l.segment.starts_with("exit"))
+            .map(|l| {
+                layer_weight_count(l, l.cin, l.cout) * FP_BITS + l.cout as f64 * FP_BITS
+            })
+            .sum()
+    }
+
+    /// The paper's headline metrics.
+    pub fn bitops_cr(&self) -> f64 {
+        Self::baseline_bitops(&self.state.arch) / self.expected_bitops().max(1.0)
+    }
+
+    pub fn storage_cr(&self) -> f64 {
+        Self::baseline_storage(&self.state.arch) / self.storage_bits().max(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_arch() -> Rc<ArchManifest> {
+        let layers = vec![
+            LayerDesc {
+                name: "c1".into(),
+                kind: LayerKind::Conv,
+                k: 3,
+                cin: 3,
+                cout: 8,
+                stride: 1,
+                hout: 8,
+                wout: 8,
+                in_mask: -1,
+                out_mask: 0,
+                segment: "seg1".into(),
+            },
+            LayerDesc {
+                name: "fc".into(),
+                kind: LayerKind::Dense,
+                k: 1,
+                cin: 8,
+                cout: 4,
+                stride: 1,
+                hout: 1,
+                wout: 1,
+                in_mask: 0,
+                out_mask: -1,
+                segment: "seg3".into(),
+            },
+            LayerDesc {
+                name: "exit1_fc".into(),
+                kind: LayerKind::Dense,
+                k: 1,
+                cin: 8,
+                cout: 4,
+                stride: 1,
+                hout: 1,
+                wout: 1,
+                in_mask: 0,
+                out_mask: -1,
+                segment: "exit1".into(),
+            },
+        ];
+        Rc::new(ArchManifest {
+            name: "toy".into(),
+            num_classes: 4,
+            param_shapes: vec![
+                vec![3, 3, 3, 8],
+                vec![8],
+                vec![8, 4],
+                vec![4],
+                vec![8, 4],
+                vec![4],
+            ],
+            mask_slots: vec![MaskSlot { name: "m0".into(), channels: 8 }],
+            layers,
+            graphs: BTreeMap::new(),
+            train_batch: 2,
+            eval_batch: 2,
+            stage_batch: 1,
+            stage_h1_shape: vec![1, 8, 8, 8],
+            stage_h2_shape: vec![1, 8, 8, 8],
+        })
+    }
+
+    #[test]
+    fn baseline_macs() {
+        let arch = toy_arch();
+        // c1: 8*8 * 9 * 3 * 8 = 13824 MACs; fc: 8*4 = 32.
+        let want = (13824.0 + 32.0) * 32.0 * 32.0;
+        assert_eq!(Accountant::baseline_bitops(&arch), want);
+    }
+
+    #[test]
+    fn quantization_reduces_bitops() {
+        let arch = toy_arch();
+        let mut st = ModelState::init_host(arch, 0);
+        let base = Accountant::new(&st).expected_bitops();
+        st.qbits = QBits { weight: 1.0, act: 8.0 };
+        let q = Accountant::new(&st).expected_bitops();
+        // conv input is the image (fp32 acts); fc gets 1x8.
+        assert!(q < base / 30.0, "q={q} base={base}");
+        assert!(Accountant::new(&st).bitops_cr() > 30.0);
+    }
+
+    #[test]
+    fn pruning_reduces_bitops_linearly() {
+        let arch = toy_arch();
+        let mut st = ModelState::init_host(arch, 0);
+        let full = Accountant::new(&st).expected_bitops();
+        // Kill half the channels in slot 0.
+        for i in 0..4 {
+            st.masks[0].data[i] = 0.0;
+        }
+        let half = Accountant::new(&st).expected_bitops();
+        assert!((half / full - 0.5).abs() < 0.01, "{half} vs {full}");
+    }
+
+    #[test]
+    fn exits_reduce_expected_bitops() {
+        let arch = toy_arch();
+        let mut st = ModelState::init_host(arch, 0);
+        let no_exit = Accountant::new(&st).expected_bitops();
+        st.exits = ExitState {
+            trained: true,
+            thresholds: Some((0.8, 0.8)),
+            exit_probs: (0.9, 0.05),
+        };
+        let with_exit = Accountant::new(&st).expected_bitops();
+        // 90% of traffic stops after seg1+exit head; fc (seg3) is tiny here
+        // compared to c1, so expectation barely exceeds seg1 cost.
+        assert!(with_exit < no_exit * 1.01);
+        // and the exit head itself is accounted:
+        assert!(with_exit > 0.0);
+    }
+
+    #[test]
+    fn storage_counts_exits_only_when_deployed() {
+        let arch = toy_arch();
+        let mut st = ModelState::init_host(arch, 0);
+        let without = Accountant::new(&st).storage_bits();
+        st.exits.trained = true;
+        let with = Accountant::new(&st).storage_bits();
+        assert!(with > without);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let arch = toy_arch();
+        let mut st = ModelState::init_host(arch.clone(), 3);
+        st.qbits = QBits { weight: 2.0, act: 8.0 };
+        st.masks[0].data[1] = 0.0;
+        st.exits = ExitState {
+            trained: true,
+            thresholds: Some((0.8, 0.7)),
+            exit_probs: (0.4, 0.3),
+        };
+        st.history.push("quantize(2w8a)".into());
+        let path = std::env::temp_dir().join(format!("coc_state_{}.bin", std::process::id()));
+        st.save(&path).unwrap();
+        let st2 = ModelState::load(&path, arch).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(st.params, st2.params);
+        assert_eq!(st.momenta, st2.momenta);
+        assert_eq!(st.masks, st2.masks);
+        assert_eq!(st.qbits, st2.qbits);
+        assert_eq!(st2.exits.thresholds, Some((0.8, 0.7)));
+        assert!(st2.exits.trained);
+        assert_eq!(st2.history, vec!["quantize(2w8a)".to_string()]);
+    }
+
+    #[test]
+    fn keep_fraction() {
+        let arch = toy_arch();
+        let mut st = ModelState::init_host(arch, 0);
+        assert_eq!(st.keep_fraction(), 1.0);
+        st.masks[0].data[0] = 0.0;
+        assert!((st.keep_fraction() - 7.0 / 8.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,241 @@
+//! The Combinational Sequence Law machinery (paper §3–§5).
+//!
+//! Pairwise preferences between techniques form a directed graph; the
+//! paper's claim is that the graph is a DAG with a *unique* topological
+//! order — D → P → Q → E — matching two principles: static before dynamic,
+//! coarse granularity before fine.  This module turns measured pairwise
+//! preferences into that order and exposes enumeration helpers for the
+//! order-comparison experiments (Table 1).
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::chain::Technique;
+
+/// A measured pairwise preference: applying `first` then `second` beat the
+/// reverse order with the given score margin.
+#[derive(Debug, Clone)]
+pub struct Preference {
+    pub first: Technique,
+    pub second: Technique,
+    /// frontier_score(first,second) - frontier_score(second,first); > 0
+    /// means the (first, second) order wins.
+    pub margin: f64,
+}
+
+/// Preference graph over the four techniques.
+#[derive(Debug, Default, Clone)]
+pub struct PreferenceGraph {
+    /// edge (a -> b) = "apply a before b", with margin.
+    pub edges: BTreeMap<(Technique, Technique), f64>,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SortOutcome {
+    /// A unique topological order exists (the paper's combinational law).
+    Unique(Vec<Technique>),
+    /// A valid order exists but is not unique (missing comparisons).
+    Ambiguous(Vec<Technique>),
+    /// The preferences contain a cycle — no consistent order.
+    Cycle(Vec<Technique>),
+}
+
+impl PreferenceGraph {
+    pub fn add(&mut self, p: Preference) {
+        if p.margin >= 0.0 {
+            self.edges.insert((p.first, p.second), p.margin);
+        } else {
+            self.edges.insert((p.second, p.first), -p.margin);
+        }
+    }
+
+    pub fn nodes(&self) -> Vec<Technique> {
+        let mut ns: Vec<Technique> = self
+            .edges
+            .keys()
+            .flat_map(|&(a, b)| [a, b])
+            .collect();
+        ns.sort();
+        ns.dedup();
+        ns
+    }
+
+    /// Kahn's algorithm with uniqueness detection: the order is unique iff
+    /// at every step exactly one node has zero in-degree.
+    pub fn toposort(&self) -> SortOutcome {
+        let nodes = self.nodes();
+        let mut indeg: BTreeMap<Technique, usize> =
+            nodes.iter().map(|&n| (n, 0)).collect();
+        for (_, b) in self.edges.keys() {
+            *indeg.get_mut(b).unwrap() += 1;
+        }
+        let mut order = Vec::new();
+        let mut unique = true;
+        let mut remaining = indeg.clone();
+        while !remaining.is_empty() {
+            let zero: Vec<Technique> = remaining
+                .iter()
+                .filter(|(_, &d)| d == 0)
+                .map(|(&n, _)| n)
+                .collect();
+            if zero.is_empty() {
+                return SortOutcome::Cycle(order);
+            }
+            if zero.len() > 1 {
+                unique = false;
+            }
+            let n = zero[0];
+            order.push(n);
+            remaining.remove(&n);
+            for (&(a, b), _) in &self.edges {
+                if a == n {
+                    if let Some(d) = remaining.get_mut(&b) {
+                        *d = d.saturating_sub(1);
+                    }
+                }
+            }
+        }
+        if unique {
+            SortOutcome::Unique(order)
+        } else {
+            SortOutcome::Ambiguous(order)
+        }
+    }
+}
+
+/// The paper's derived law, for assertions and defaults.
+pub fn paper_law() -> Vec<Technique> {
+    vec![Technique::Distill, Technique::Prune, Technique::Quantize, Technique::EarlyExit]
+}
+
+/// All orderings of the four techniques that start with Distillation —
+/// the Table 1 comparison set (DPQE, DQPE, DPEQ, DQEP, DEPQ, DEQP).
+pub fn distill_started_orders() -> Vec<Vec<Technique>> {
+    use Technique::*;
+    let rest = [Prune, Quantize, EarlyExit];
+    let mut out = Vec::new();
+    // All permutations of the remaining three.
+    let idx = [[0, 1, 2], [0, 2, 1], [1, 0, 2], [1, 2, 0], [2, 0, 1], [2, 1, 0]];
+    for p in idx {
+        let mut o = vec![Distill];
+        o.extend(p.iter().map(|&i| rest[i]));
+        out.push(o);
+    }
+    out
+}
+
+pub fn sequence_string(seq: &[Technique]) -> String {
+    seq.iter().map(|t| t.letter()).collect()
+}
+
+pub fn parse_sequence(s: &str) -> Result<Vec<Technique>> {
+    s.chars()
+        .map(|c| Technique::from_letter(c).ok_or_else(|| anyhow!("bad technique letter `{c}`")))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chain::Technique::*;
+    use crate::util::prop;
+
+    fn pref(a: Technique, b: Technique) -> Preference {
+        Preference { first: a, second: b, margin: 1.0 }
+    }
+
+    #[test]
+    fn paper_preferences_give_unique_dpqe() {
+        // The six measured pairwise orders from §3.
+        let mut g = PreferenceGraph::default();
+        for (a, b) in [
+            (Distill, Prune),
+            (Distill, Quantize),
+            (Distill, EarlyExit),
+            (Prune, Quantize),
+            (Prune, EarlyExit),
+            (Quantize, EarlyExit),
+        ] {
+            g.add(pref(a, b));
+        }
+        assert_eq!(g.toposort(), SortOutcome::Unique(paper_law()));
+    }
+
+    #[test]
+    fn negative_margin_flips_edge() {
+        let mut g = PreferenceGraph::default();
+        g.add(Preference { first: Prune, second: Distill, margin: -2.0 });
+        assert!(g.edges.contains_key(&(Distill, Prune)));
+    }
+
+    #[test]
+    fn missing_edges_ambiguous() {
+        let mut g = PreferenceGraph::default();
+        g.add(pref(Distill, Prune));
+        g.add(pref(Quantize, EarlyExit));
+        match g.toposort() {
+            SortOutcome::Ambiguous(o) => assert_eq!(o.len(), 4),
+            other => panic!("want ambiguous, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn cycle_detected() {
+        let mut g = PreferenceGraph::default();
+        g.add(pref(Distill, Prune));
+        g.add(pref(Prune, Quantize));
+        g.add(pref(Quantize, Distill));
+        assert!(matches!(g.toposort(), SortOutcome::Cycle(_)));
+    }
+
+    #[test]
+    fn distill_orders_enumeration() {
+        let orders = distill_started_orders();
+        assert_eq!(orders.len(), 6);
+        let strings: Vec<String> = orders.iter().map(|o| sequence_string(o)).collect();
+        for want in ["DPQE", "DQPE", "DPEQ", "DQEP", "DEPQ", "DEQP"] {
+            assert!(strings.contains(&want.to_string()), "missing {want}");
+        }
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        let seq = parse_sequence("DPQE").unwrap();
+        assert_eq!(sequence_string(&seq), "DPQE");
+        assert!(parse_sequence("DPX").is_err());
+    }
+
+    /// Property: any complete, acyclic preference set over the 4 techniques
+    /// yields a unique topological order consistent with every edge.
+    #[test]
+    fn prop_complete_acyclic_is_unique_and_consistent() {
+        prop::check(
+            "toposort complete acyclic",
+            200,
+            |rng| {
+                // Random linear order of the 4 techniques; derive all 6 edges.
+                let mut ts = [Distill, Prune, Quantize, EarlyExit];
+                for i in (1..4).rev() {
+                    ts.swap(i, rng.below(i + 1));
+                }
+                ts.to_vec()
+            },
+            |ts| {
+                let mut g = PreferenceGraph::default();
+                for i in 0..4 {
+                    for j in (i + 1)..4 {
+                        g.add(Preference { first: ts[i], second: ts[j], margin: 1.0 });
+                    }
+                }
+                match g.toposort() {
+                    SortOutcome::Unique(o) if o == *ts => Ok(()),
+                    other => Err(format!("want Unique({ts:?}), got {other:?}")),
+                }
+            },
+        );
+    }
+}
+
+// `Technique` has no Shrink impl needed beyond default.
+impl crate::util::prop::Shrink for Technique {}

@@ -1,0 +1,116 @@
+//! Result emitters: CSV files (one per paper table/figure) + markdown
+//! summaries, written under `results/`.
+
+use std::fmt::Write as _;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::sweep::SweepPoint;
+
+pub struct Reporter {
+    dir: PathBuf,
+}
+
+impl Reporter {
+    pub fn new<P: AsRef<Path>>(dir: P) -> Result<Reporter> {
+        fs::create_dir_all(dir.as_ref()).context("creating results dir")?;
+        Ok(Reporter { dir: dir.as_ref().to_path_buf() })
+    }
+
+    pub fn path(&self, name: &str) -> PathBuf {
+        self.dir.join(name)
+    }
+
+    pub fn write(&self, name: &str, contents: &str) -> Result<PathBuf> {
+        let p = self.path(name);
+        fs::write(&p, contents).with_context(|| format!("writing {}", p.display()))?;
+        println!("wrote {}", p.display());
+        Ok(p)
+    }
+
+    /// Scatter-point CSV shared by all figure experiments.
+    pub fn write_points(&self, name: &str, points: &[SweepPoint]) -> Result<PathBuf> {
+        let mut s = String::from(
+            "series,config,accuracy,bitops_cr,storage_cr,bitops,storage_bits,p_exit1,p_exit2\n",
+        );
+        for p in points {
+            let m = &p.measurement;
+            writeln!(
+                s,
+                "{},{},{:.5},{:.4},{:.4},{:.4e},{:.4e},{:.4},{:.4}",
+                csv_escape(&p.label),
+                csv_escape(&p.config),
+                m.accuracy,
+                m.bitops_cr,
+                m.storage_cr,
+                m.bitops,
+                m.storage_bits,
+                m.exit_probs.0,
+                m.exit_probs.1
+            )
+            .unwrap();
+        }
+        self.write(name, &s)
+    }
+
+    /// Generic table CSV.
+    pub fn write_table(&self, name: &str, header: &[&str], rows: &[Vec<String>]) -> Result<PathBuf> {
+        let mut s = header.join(",");
+        s.push('\n');
+        for row in rows {
+            s.push_str(
+                &row.iter().map(|c| csv_escape(c)).collect::<Vec<_>>().join(","),
+            );
+            s.push('\n');
+        }
+        self.write(name, &s)
+    }
+
+    /// Markdown table for EXPERIMENTS.md-style summaries.
+    pub fn markdown_table(header: &[&str], rows: &[Vec<String>]) -> String {
+        let mut s = format!("| {} |\n", header.join(" | "));
+        s.push_str(&format!("|{}\n", "---|".repeat(header.len())));
+        for row in rows {
+            s.push_str(&format!("| {} |\n", row.join(" | ")));
+        }
+        s
+    }
+}
+
+fn csv_escape(s: &str) -> String {
+    if s.contains(',') || s.contains('"') || s.contains('\n') {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_escaping() {
+        assert_eq!(csv_escape("plain"), "plain");
+        assert_eq!(csv_escape("a,b"), "\"a,b\"");
+        assert_eq!(csv_escape("q\"q"), "\"q\"\"q\"");
+    }
+
+    #[test]
+    fn markdown_shape() {
+        let md = Reporter::markdown_table(&["a", "b"], &[vec!["1".into(), "2".into()]]);
+        assert!(md.contains("| a | b |"));
+        assert!(md.contains("| 1 | 2 |"));
+    }
+
+    #[test]
+    fn writes_files() {
+        let dir = std::env::temp_dir().join(format!("coc_report_test_{}", std::process::id()));
+        let r = Reporter::new(&dir).unwrap();
+        let p = r.write("x.csv", "a,b\n1,2\n").unwrap();
+        assert!(p.exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,176 @@
+//! PJRT runtime: load AOT-compiled HLO text, compile once, execute from the
+//! coordinator hot loop.
+//!
+//! Python/JAX only runs in the compile path (`make artifacts`); at
+//! experiment time this module is the only bridge to XLA.  Interchange is
+//! HLO *text* — see DESIGN.md and python/compile/aot.py for why.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::tensor::Tensor;
+
+/// Cumulative runtime counters (single-threaded coordinator; a RefCell is
+/// plenty).  Used by EXPERIMENTS.md §Perf to split dispatch overhead from
+/// XLA execute time.
+#[derive(Debug, Default, Clone)]
+pub struct RuntimeStats {
+    pub executions: u64,
+    pub execute_ns: u64,
+    pub upload_ns: u64,
+    pub download_ns: u64,
+}
+
+/// A compiled executable plus IO bookkeeping.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+    stats: Rc<RefCell<RuntimeStats>>,
+}
+
+impl Executable {
+    /// Execute with host tensors; returns the flattened output tuple.
+    ///
+    /// All our graphs are lowered with `return_tuple=True`, so PJRT hands
+    /// back a single tuple buffer which we decompose into leaves.
+    pub fn run(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let mut st = self.stats.borrow_mut();
+        let t0 = Instant::now();
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|t| tensor_to_literal(t)).collect::<Result<_>>()?;
+        let t1 = Instant::now();
+        st.upload_ns += (t1 - t0).as_nanos() as u64;
+
+        let out = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing `{}`", self.name))?;
+        let t2 = Instant::now();
+        st.executions += 1;
+        st.execute_ns += (t2 - t1).as_nanos() as u64;
+
+        let lit = out[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of `{}`", self.name))?;
+        let leaves = lit.to_tuple().context("decomposing result tuple")?;
+        let tensors = leaves
+            .into_iter()
+            .map(|l| literal_to_tensor(&l))
+            .collect::<Result<Vec<_>>>()?;
+        st.download_ns += t2.elapsed().as_nanos() as u64;
+        Ok(tensors)
+    }
+}
+
+/// The PJRT engine: one CPU client + an executable cache keyed by artifact
+/// file name (compilation is seconds; every experiment reuses the cache).
+pub struct Engine {
+    client: xla::PjRtClient,
+    artifacts_dir: PathBuf,
+    cache: RefCell<HashMap<String, Rc<Executable>>>,
+    stats: Rc<RefCell<RuntimeStats>>,
+}
+
+impl Engine {
+    pub fn new<P: AsRef<Path>>(artifacts_dir: P) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine {
+            client,
+            artifacts_dir: artifacts_dir.as_ref().to_path_buf(),
+            cache: RefCell::new(HashMap::new()),
+            stats: Rc::new(RefCell::new(RuntimeStats::default())),
+        })
+    }
+
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.artifacts_dir
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn stats(&self) -> RuntimeStats {
+        self.stats.borrow().clone()
+    }
+
+    pub fn reset_stats(&self) {
+        *self.stats.borrow_mut() = RuntimeStats::default();
+    }
+
+    /// Load + compile an HLO-text artifact (cached).
+    pub fn load(&self, file: &str) -> Result<Rc<Executable>> {
+        if let Some(e) = self.cache.borrow().get(file) {
+            return Ok(e.clone());
+        }
+        let path = self.artifacts_dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text `{}` (run `make artifacts`?)", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let t0 = Instant::now();
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling `{file}`"))?;
+        let dt = t0.elapsed();
+        if dt.as_millis() > 500 {
+            eprintln!("[runtime] compiled {file} in {:.1}s", dt.as_secs_f64());
+        }
+        let exec = Rc::new(Executable {
+            exe,
+            name: file.to_string(),
+            stats: self.stats.clone(),
+        });
+        self.cache.borrow_mut().insert(file.to_string(), exec.clone());
+        Ok(exec)
+    }
+}
+
+// ----- literal <-> tensor ----------------------------------------------------
+
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(&t.data);
+    if t.shape.is_empty() {
+        // Scalar: reshape to rank 0.
+        Ok(lit.reshape(&[])?)
+    } else {
+        let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+        Ok(lit.reshape(&dims)?)
+    }
+}
+
+pub fn literal_to_tensor(l: &xla::Literal) -> Result<Tensor> {
+    let shape = l.array_shape().context("literal has no array shape")?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = l.to_vec::<f32>().context("literal is not f32")?;
+    Ok(Tensor::new(dims, data))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_literal_roundtrip() {
+        let t = Tensor::new(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let l = tensor_to_literal(&t).unwrap();
+        let t2 = literal_to_tensor(&l).unwrap();
+        assert_eq!(t, t2);
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let t = Tensor::scalar(3.5);
+        let l = tensor_to_literal(&t).unwrap();
+        let t2 = literal_to_tensor(&l).unwrap();
+        assert_eq!(t2.shape, Vec::<usize>::new());
+        assert_eq!(t2.data, vec![3.5]);
+    }
+}

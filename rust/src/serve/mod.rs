@@ -1,0 +1,117 @@
+//! Early-exit serving loop: the *dynamic* half of the chain, running on
+//! the staged AOT graphs so an exiting request genuinely skips the rest of
+//! the network (batch-1 stage graphs; see aot.py).
+//!
+//! This is the runtime component the paper's early-exit technique implies:
+//! compression decisions happen per-request at inference time, in the
+//! coordinator, with the confidence thresholds as the knob.
+
+use std::time::Instant;
+
+use anyhow::{ensure, Result};
+
+use crate::data::Dataset;
+use crate::models::ModelState;
+use crate::runtime::Engine;
+use crate::tensor::Tensor;
+use crate::util::stats::Summary;
+
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub requests: usize,
+    pub accuracy: f64,
+    pub p_exit1: f64,
+    pub p_exit2: f64,
+    /// Per-request wall latency (µs).
+    pub latency_us: Summary,
+    pub throughput_rps: f64,
+}
+
+fn max_conf(row: &[f32]) -> f32 {
+    let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let denom: f32 = row.iter().map(|x| (x - m).exp()).sum();
+    1.0 / denom
+}
+
+pub struct Server<'e> {
+    engine: &'e Engine,
+    state: ModelState,
+    stage1: std::rc::Rc<crate::runtime::Executable>,
+    stage2: std::rc::Rc<crate::runtime::Executable>,
+    stage3: std::rc::Rc<crate::runtime::Executable>,
+    qbw: Tensor,
+    qba: Tensor,
+}
+
+impl<'e> Server<'e> {
+    pub fn new(engine: &'e Engine, state: ModelState) -> Result<Server<'e>> {
+        let arch = state.arch.clone();
+        Ok(Server {
+            stage1: engine.load(arch.graph("stage1")?)?,
+            stage2: engine.load(arch.graph("stage2")?)?,
+            stage3: engine.load(arch.graph("stage3")?)?,
+            qbw: Tensor::scalar(state.qbits.weight),
+            qba: Tensor::scalar(state.qbits.act),
+            engine,
+            state,
+        })
+    }
+
+    fn stage_inputs<'a>(&'a self, x: &'a Tensor) -> Vec<&'a Tensor> {
+        let mut v: Vec<&Tensor> = Vec::with_capacity(self.state.params.len() + 8);
+        v.extend(self.state.params.iter());
+        v.extend(self.state.masks.iter());
+        v.push(&self.qbw);
+        v.push(&self.qba);
+        v.push(x);
+        v
+    }
+
+    /// Serve one request; returns (prediction, exit_stage 1|2|3).
+    pub fn infer(&self, x: &Tensor, t1: f32, t2: f32) -> Result<(usize, u8)> {
+        let outs = self.stage1.run(&self.stage_inputs(x))?;
+        ensure!(outs.len() == 2, "stage1 returned {} outputs", outs.len());
+        let (e1, h1) = (&outs[0], &outs[1]);
+        if max_conf(&e1.data) >= t1 {
+            return Ok((e1.argmax(), 1));
+        }
+        let outs = self.stage2.run(&self.stage_inputs(h1))?;
+        ensure!(outs.len() == 2, "stage2 returned {} outputs", outs.len());
+        let (e2, h2) = (&outs[0], &outs[1]);
+        if max_conf(&e2.data) >= t2 {
+            return Ok((e2.argmax(), 2));
+        }
+        let outs = self.stage3.run(&self.stage_inputs(h2))?;
+        Ok((outs[0].argmax(), 3))
+    }
+
+    /// Run a synchronous request stream drawn from `ds`.
+    pub fn serve_dataset(&self, ds: &Dataset, n_requests: usize, t1: f32, t2: f32) -> Result<ServeReport> {
+        let _ = self.engine; // engine lifetime anchors executables
+        let mut lat = Summary::default();
+        let (mut c, mut n1, mut n2) = (0usize, 0usize, 0usize);
+        let start = Instant::now();
+        for r in 0..n_requests {
+            let i = r % ds.len();
+            let (x, _) = ds.batch(&[i]);
+            let t = Instant::now();
+            let (pred, stage) = self.infer(&x, t1, t2)?;
+            lat.push(t.elapsed().as_micros() as f64);
+            c += (pred == ds.labels[i]) as usize;
+            match stage {
+                1 => n1 += 1,
+                2 => n2 += 1,
+                _ => {}
+            }
+        }
+        let wall = start.elapsed().as_secs_f64();
+        Ok(ServeReport {
+            requests: n_requests,
+            accuracy: c as f64 / n_requests.max(1) as f64,
+            p_exit1: n1 as f64 / n_requests.max(1) as f64,
+            p_exit2: n2 as f64 / n_requests.max(1) as f64,
+            latency_us: lat,
+            throughput_rps: n_requests as f64 / wall.max(1e-9),
+        })
+    }
+}

@@ -1,0 +1,235 @@
+//! Hyper-parameter sweep driver: the §3.1 protocol — per technique, a
+//! ladder of aggressiveness settings; per combination, the cross product
+//! (or a diagonal of it at smoke scale); early-exit models additionally
+//! yield one sample per runtime threshold.
+
+use anyhow::Result;
+
+use crate::chain::{stages, Chain, CompressionStage, StageCtx, Technique};
+use crate::exits;
+use crate::metrics::Measurement;
+use crate::models::{Accountant, ModelState};
+use crate::train;
+
+/// Experiment scale profiles (single-core testbed; see DESIGN.md
+/// §Substitutions on budget parity).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scale {
+    /// CI-speed: tiny budgets, 2-point ladders.
+    Smoke,
+    /// The scale EXPERIMENTS.md numbers are recorded at.
+    Default,
+    /// Closer to the paper's budgets (hours on this box).
+    Paper,
+}
+
+impl Scale {
+    pub fn parse(s: &str) -> Option<Scale> {
+        match s {
+            "smoke" => Some(Scale::Smoke),
+            "default" => Some(Scale::Default),
+            "paper" => Some(Scale::Paper),
+            _ => None,
+        }
+    }
+
+    /// Steps for one full training stage.
+    pub fn base_steps(&self) -> usize {
+        match self {
+            Scale::Smoke => 40,
+            Scale::Default => 220,
+            Scale::Paper => 1200,
+        }
+    }
+
+    /// Train / test set sizes.
+    pub fn dataset_sizes(&self) -> (usize, usize) {
+        match self {
+            Scale::Smoke => (256, 128),
+            Scale::Default => (1024, 256),
+            Scale::Paper => (4096, 512),
+        }
+    }
+
+    /// Ladder length per technique in pairwise sweeps.
+    pub fn ladder(&self) -> usize {
+        match self {
+            Scale::Smoke => 2,
+            Scale::Default => 4,
+            Scale::Paper => 6,
+        }
+    }
+}
+
+/// Aggressiveness ladders (index 0 = mildest).  These are the tunable
+/// hyper-parameters behind every scatter point.
+pub fn distill_ladder(n: usize) -> Vec<stages::Distill> {
+    let widths = [0.75f32, 0.5, 0.35, 0.25, 0.18, 0.12];
+    widths.iter().take(n).map(|&width| stages::Distill { width, ..Default::default() }).collect()
+}
+
+pub fn prune_ladder(n: usize) -> Vec<stages::Prune> {
+    let ratios = [0.25f32, 0.4, 0.55, 0.7, 0.8, 0.88];
+    ratios.iter().take(n).map(|&ratio| stages::Prune { ratio, ..Default::default() }).collect()
+}
+
+pub fn quantize_ladder(n: usize) -> Vec<stages::Quantize> {
+    let bits = [(8.0f32, 8.0f32), (4.0, 8.0), (2.0, 8.0), (1.0, 8.0), (2.0, 4.0), (1.0, 4.0)];
+    bits.iter()
+        .take(n)
+        .map(|&(bits_w, bits_a)| stages::Quantize { bits_w, bits_a, ..Default::default() })
+        .collect()
+}
+
+pub fn exit_ladder(n: usize) -> Vec<stages::EarlyExit> {
+    let ts = [0.95f32, 0.85, 0.7, 0.55, 0.45, 0.35];
+    ts.iter().take(n).map(|&threshold| stages::EarlyExit { threshold, ..Default::default() }).collect()
+}
+
+/// One boxed stage at ladder position i for a technique.
+pub fn stage_at(t: Technique, i: usize, n: usize) -> Box<dyn CompressionStage> {
+    let i = i.min(n - 1);
+    match t {
+        Technique::Distill => Box::new(distill_ladder(n)[i].clone()),
+        Technique::Prune => Box::new(prune_ladder(n)[i].clone()),
+        Technique::Quantize => Box::new(quantize_ladder(n)[i].clone()),
+        Technique::EarlyExit => Box::new(exit_ladder(n)[i].clone()),
+    }
+}
+
+/// A labelled measured point.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub label: String,
+    pub config: String,
+    pub measurement: Measurement,
+}
+
+impl SweepPoint {
+    pub fn xy(&self) -> (f64, f64) {
+        self.measurement.as_point()
+    }
+}
+
+/// Run one chain from a shared pretrained base model, returning the final
+/// measurement.  If the chain ends in a trained early-exit model, the
+/// runtime threshold sweep adds extra points (paper §3.1 rule 3).
+pub fn run_chain_points(
+    base: &ModelState,
+    chain: &Chain,
+    ctx: &StageCtx,
+    label: &str,
+    config: &str,
+) -> Result<Vec<SweepPoint>> {
+    let mut state = base.clone();
+    let reports = chain.run(&mut state, ctx)?;
+    let last = reports
+        .last()
+        .map(|r| r.measurement.clone())
+        .unwrap_or(Measurement::take(ctx.engine, &state, ctx.test)?);
+    let mut points = vec![SweepPoint {
+        label: label.to_string(),
+        config: config.to_string(),
+        measurement: last,
+    }];
+
+    if state.exits.trained {
+        // Extra samples from runtime thresholds, no retraining.
+        let (main, e1, e2) = train::eval_logits(ctx.engine, &state, ctx.test)?;
+        for (t, ev) in
+            exits::threshold_sweep(&main, &e1, &e2, &ctx.test.labels, &[0.35, 0.5, 0.65, 0.8, 0.9, 0.97])
+        {
+            let mut st = state.clone();
+            st.exits.thresholds = Some((t, t));
+            st.exits.exit_probs = (ev.p_exit1, ev.p_exit2);
+            let acct = Accountant::new(&st);
+            points.push(SweepPoint {
+                label: label.to_string(),
+                config: format!("{config},t={t:.2}"),
+                measurement: Measurement {
+                    accuracy: ev.accuracy,
+                    bitops_cr: acct.bitops_cr(),
+                    storage_cr: acct.storage_cr(),
+                    bitops: acct.expected_bitops(),
+                    storage_bits: acct.storage_bits(),
+                    exit_probs: (ev.p_exit1, ev.p_exit2),
+                },
+            });
+        }
+    }
+    Ok(points)
+}
+
+/// Pairwise sweep for techniques (a, b) in that order: a diagonal ladder
+/// (matched aggressiveness) — the protocol that maximizes coverage per
+/// training run on a single-core budget.
+pub fn pairwise_points(
+    base: &ModelState,
+    a: Technique,
+    b: Technique,
+    ctx: &StageCtx,
+    ladder: usize,
+) -> Result<Vec<SweepPoint>> {
+    let label = format!("{}{}", a.letter(), b.letter());
+    let mut out = Vec::new();
+    for i in 0..ladder {
+        let chain = Chain::new().push(stage_at(a, i, ladder)).push(stage_at(b, i, ladder));
+        let cfg = format!("rung{i}");
+        out.extend(run_chain_points(base, &chain, ctx, &label, &cfg)?);
+    }
+    Ok(out)
+}
+
+/// Single-technique sweep (the "D alone" / "P alone" curves).
+pub fn single_points(
+    base: &ModelState,
+    t: Technique,
+    ctx: &StageCtx,
+    ladder: usize,
+) -> Result<Vec<SweepPoint>> {
+    let label = t.letter().to_string();
+    let mut out = Vec::new();
+    for i in 0..ladder {
+        let chain = Chain::new().push(stage_at(t, i, ladder));
+        out.extend(run_chain_points(base, &chain, ctx, &label, &format!("rung{i}"))?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ladders_monotone_aggressiveness() {
+        let d = distill_ladder(6);
+        assert!(d.windows(2).all(|w| w[0].width > w[1].width));
+        let p = prune_ladder(6);
+        assert!(p.windows(2).all(|w| w[0].ratio < w[1].ratio));
+        let q = quantize_ladder(6);
+        // Effective bits product must not increase along the ladder.
+        assert!(q
+            .windows(2)
+            .all(|w| w[0].bits_w * w[0].bits_a >= w[1].bits_w * w[1].bits_a));
+        let e = exit_ladder(6);
+        assert!(e.windows(2).all(|w| w[0].threshold > w[1].threshold));
+    }
+
+    #[test]
+    fn scales_parse() {
+        assert_eq!(Scale::parse("smoke"), Some(Scale::Smoke));
+        assert_eq!(Scale::parse("default"), Some(Scale::Default));
+        assert_eq!(Scale::parse("paper"), Some(Scale::Paper));
+        assert_eq!(Scale::parse("x"), None);
+        assert!(Scale::Smoke.base_steps() < Scale::Default.base_steps());
+    }
+
+    #[test]
+    fn stage_at_covers_all() {
+        for t in [Technique::Distill, Technique::Prune, Technique::Quantize, Technique::EarlyExit]
+        {
+            let s = stage_at(t, 1, 4);
+            assert_eq!(s.technique(), t);
+        }
+    }
+}

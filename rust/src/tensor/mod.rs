@@ -1,0 +1,189 @@
+//! Host-side f32 tensor: the coordinator's working representation of model
+//! parameters, masks and batches.  Conversion to/from `xla::Literal`
+//! happens in `runtime`; everything else (init, norms, reductions used by
+//! pruning importance) lives here.
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} does not match data length {}",
+            data.len()
+        );
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn ones(shape: &[usize]) -> Self {
+        Tensor { shape: shape.to_vec(), data: vec![1.0; shape.iter().product()] }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        Tensor { shape: shape.to_vec(), data: vec![v; shape.iter().product()] }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn from_vec(data: Vec<f32>) -> Self {
+        Tensor { shape: vec![data.len()], data }
+    }
+
+    /// He/Kaiming-normal init for a conv/dense weight with given fan-in.
+    pub fn he_normal(shape: &[usize], fan_in: usize, rng: &mut Rng) -> Self {
+        let std = (2.0 / fan_in as f32).sqrt();
+        let data = (0..shape.iter().product::<usize>())
+            .map(|_| rng.normal() * std)
+            .collect();
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// L2 norm of the whole tensor.
+    pub fn l2(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    /// Per-output-channel L2 norms for a weight tensor whose LAST axis is
+    /// the output-channel axis (HWIO conv weights and [in, out] dense
+    /// weights both satisfy this) — the channel-importance signal used by
+    /// the pruning stage.
+    pub fn channel_l2(&self) -> Vec<f32> {
+        let c = *self.shape.last().expect("channel_l2 on rank-0 tensor");
+        let mut out = vec![0.0f32; c];
+        for (i, &v) in self.data.iter().enumerate() {
+            out[i % c] += v * v;
+        }
+        for v in &mut out {
+            *v = v.sqrt();
+        }
+        out
+    }
+
+    /// Number of non-zero entries (mask occupancy).
+    pub fn count_nonzero(&self) -> usize {
+        self.data.iter().filter(|&&x| x != 0.0).count()
+    }
+
+    pub fn argmax(&self) -> usize {
+        self.data
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+
+    /// Row-wise argmax for a [n, c] tensor.
+    pub fn argmax_rows(&self) -> Vec<usize> {
+        assert_eq!(self.rank(), 2);
+        let c = self.shape[1];
+        self.data
+            .chunks_exact(c)
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap()
+            })
+            .collect()
+    }
+
+    /// Row-wise softmax for a [n, c] tensor (used for exit confidences).
+    pub fn softmax_rows(&self) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        let c = self.shape[1];
+        let mut out = Vec::with_capacity(self.data.len());
+        for row in self.data.chunks_exact(c) {
+            let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let exps: Vec<f32> = row.iter().map(|x| (x - m).exp()).collect();
+            let sum: f32 = exps.iter().sum();
+            out.extend(exps.into_iter().map(|e| e / sum));
+        }
+        Tensor::new(self.shape.clone(), out)
+    }
+
+    /// Flattened view of one row of a [n, ...] batch tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        let stride: usize = self.shape[1..].iter().product();
+        &self.data[i * stride..(i + 1) * stride]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_shape_check() {
+        let t = Tensor::new(vec![2, 3], vec![1.0; 6]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.rank(), 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_shape_panics() {
+        Tensor::new(vec![2, 3], vec![1.0; 5]);
+    }
+
+    #[test]
+    fn he_normal_scale() {
+        let mut rng = Rng::new(3);
+        let t = Tensor::he_normal(&[3, 3, 64, 64], 3 * 3 * 64, &mut rng);
+        let var = t.data.iter().map(|x| x * x).sum::<f32>() / t.len() as f32;
+        let want = 2.0 / (3.0 * 3.0 * 64.0);
+        assert!((var - want).abs() < want * 0.2, "var {var} want {want}");
+    }
+
+    #[test]
+    fn channel_l2_last_axis() {
+        // shape [2, 3]: columns are channels.
+        let t = Tensor::new(vec![2, 3], vec![1.0, 0.0, 2.0, 1.0, 0.0, 2.0]);
+        let n = t.channel_l2();
+        assert!((n[0] - (2.0f32).sqrt()).abs() < 1e-6);
+        assert_eq!(n[1], 0.0);
+        assert!((n[2] - (8.0f32).sqrt()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn softmax_rows_normalized() {
+        let t = Tensor::new(vec![2, 3], vec![0.0, 1.0, 2.0, 5.0, 5.0, 5.0]);
+        let s = t.softmax_rows();
+        for row in s.data.chunks_exact(3) {
+            assert!((row.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        }
+        assert!((s.data[3] - 1.0 / 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn argmax_rows() {
+        let t = Tensor::new(vec![2, 3], vec![0.1, 0.9, 0.2, 3.0, 1.0, 2.0]);
+        assert_eq!(t.argmax_rows(), vec![1, 0]);
+    }
+}

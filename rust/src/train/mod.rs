@@ -1,0 +1,273 @@
+//! Training-loop driver: marshals ModelState + batches into the AOT train
+//! graph, applies the paper's fine-tuning protocol (fresh training vs
+//! fine-tune at 1/10 LR), and evaluates via the eval graph.
+//!
+//! Graph operand orders are fixed by python/compile/aot.py:
+//!   train : params*, momenta*, x, y, masks*, qbw, qba, tlogits,
+//!           kd_alpha, kd_tau, exit_w[2], hp[3]      -> params*, momenta*, loss, acc
+//!   eval  : params*, masks*, qbw, qba, x            -> logits, e1, e2
+//!   init  : seed                                    -> params*, momenta*
+
+use std::rc::Rc;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::data::{Batcher, Dataset};
+use crate::models::{ArchManifest, ModelState};
+use crate::runtime::Engine;
+use crate::tensor::Tensor;
+
+/// Hyper-parameters for one training run (one chain stage).
+#[derive(Debug, Clone)]
+pub struct TrainOpts {
+    pub steps: usize,
+    pub lr: f32,
+    pub momentum: f32,
+    pub weight_decay: f32,
+    /// KD mixing weight (0 = plain CE) and temperature.
+    pub kd_alpha: f32,
+    pub kd_tau: f32,
+    /// Per-exit loss weights (0 = exits untrained).
+    pub exit_w: [f32; 2],
+    pub seed: u64,
+    pub log_every: usize,
+}
+
+impl Default for TrainOpts {
+    fn default() -> Self {
+        TrainOpts {
+            steps: 200,
+            lr: 0.05,
+            momentum: 0.9,
+            weight_decay: 1e-4,
+            kd_alpha: 0.0,
+            kd_tau: 4.0,
+            exit_w: [0.0, 0.0],
+            seed: 0,
+            log_every: 0,
+        }
+    }
+}
+
+impl TrainOpts {
+    /// The paper's fine-tune rule: same budget discipline, 1/10 LR.
+    pub fn fine_tune_of(base: &TrainOpts, steps: usize) -> TrainOpts {
+        TrainOpts { steps, lr: base.lr / 10.0, ..base.clone() }
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct TrainLog {
+    pub losses: Vec<f32>,
+    pub accs: Vec<f32>,
+}
+
+impl TrainLog {
+    pub fn final_loss(&self) -> f32 {
+        self.losses.last().copied().unwrap_or(f32::NAN)
+    }
+
+    /// Mean training accuracy over the last quarter of the run.
+    pub fn settled_acc(&self) -> f32 {
+        let n = self.accs.len();
+        if n == 0 {
+            return f32::NAN;
+        }
+        let tail = &self.accs[n - (n / 4).max(1)..];
+        tail.iter().sum::<f32>() / tail.len() as f32
+    }
+}
+
+/// Precomputed teacher logits over a dataset, row-gatherable per batch.
+pub struct TeacherLogits {
+    pub rows: Tensor, // [n, num_classes]
+}
+
+impl TeacherLogits {
+    pub fn gather(&self, idx: &[usize]) -> Tensor {
+        let c = self.rows.shape[1];
+        let mut out = Vec::with_capacity(idx.len() * c);
+        for &i in idx {
+            out.extend_from_slice(self.rows.row(i));
+        }
+        Tensor::new(vec![idx.len(), c], out)
+    }
+}
+
+/// Initialize a fresh ModelState by running the AOT init graph (keeps rust
+/// and jax initialization identical by construction).
+pub fn init_state(engine: &Engine, arch: Rc<ArchManifest>, seed: u64) -> Result<ModelState> {
+    let exe = engine.load(arch.graph("init")?)?;
+    let seed_t = Tensor::scalar(seed as f32);
+    let outs = exe.run(&[&seed_t]).context("running init graph")?;
+    let np = arch.num_params();
+    ensure!(outs.len() == 2 * np, "init graph returned {} outputs, want {}", outs.len(), 2 * np);
+    let params = outs[..np].to_vec();
+    let momenta = outs[np..].to_vec();
+    let masks = arch.mask_slots.iter().map(|m| Tensor::ones(&[m.channels])).collect();
+    Ok(ModelState {
+        arch,
+        params,
+        momenta,
+        masks,
+        qbits: crate::models::QBits::FP32,
+        exits: Default::default(),
+        extras: Default::default(),
+        history: Vec::new(),
+    })
+}
+
+/// Run `opts.steps` SGD steps on `state` in place.
+pub fn train(
+    engine: &Engine,
+    state: &mut ModelState,
+    ds: &Dataset,
+    teacher: Option<&TeacherLogits>,
+    opts: &TrainOpts,
+) -> Result<TrainLog> {
+    let arch = state.arch.clone();
+    let exe = engine.load(arch.graph("train")?)?;
+    let bs = arch.train_batch;
+    let np = arch.num_params();
+    let mut batcher = Batcher::new(ds.len(), bs, opts.seed ^ 0xbadc0de);
+    let mut log = TrainLog::default();
+
+    let qbw = Tensor::scalar(state.qbits.weight);
+    let qba = Tensor::scalar(state.qbits.act);
+    let kd_alpha = Tensor::scalar(if teacher.is_some() { opts.kd_alpha } else { 0.0 });
+    let kd_tau = Tensor::scalar(opts.kd_tau);
+    let exit_w = Tensor::from_vec(opts.exit_w.to_vec());
+    let hp = Tensor::from_vec(vec![opts.lr, opts.momentum, opts.weight_decay]);
+    let zero_teacher = Tensor::zeros(&[bs, arch.num_classes]);
+
+    for step in 0..opts.steps {
+        let idx = batcher.next_indices().to_vec();
+        let (x, y) = ds.batch(&idx);
+        let tl = teacher.map(|t| t.gather(&idx));
+
+        let mut inputs: Vec<&Tensor> = Vec::with_capacity(2 * np + 10);
+        inputs.extend(state.params.iter());
+        inputs.extend(state.momenta.iter());
+        inputs.push(&x);
+        inputs.push(&y);
+        inputs.extend(state.masks.iter());
+        inputs.push(&qbw);
+        inputs.push(&qba);
+        inputs.push(tl.as_ref().unwrap_or(&zero_teacher));
+        inputs.push(&kd_alpha);
+        inputs.push(&kd_tau);
+        inputs.push(&exit_w);
+        inputs.push(&hp);
+
+        let mut outs = exe.run(&inputs).with_context(|| format!("train step {step}"))?;
+        ensure!(
+            outs.len() == 2 * np + 2,
+            "train graph returned {} outputs, want {}",
+            outs.len(),
+            2 * np + 2
+        );
+        let acc = outs.pop().unwrap().data[0];
+        let loss = outs.pop().unwrap().data[0];
+        state.momenta = outs.split_off(np);
+        state.params = outs;
+        log.losses.push(loss);
+        log.accs.push(acc);
+        if opts.log_every > 0 && step % opts.log_every == 0 {
+            eprintln!("  step {step:>4}  loss {loss:.4}  acc {acc:.3}");
+        }
+        ensure!(loss.is_finite(), "training diverged at step {step} (loss={loss})");
+    }
+    Ok(log)
+}
+
+/// Full-dataset forward: returns (main logits, exit1 logits, exit2 logits)
+/// stacked over the dataset (padding batches internally).
+pub fn eval_logits(
+    engine: &Engine,
+    state: &ModelState,
+    ds: &Dataset,
+) -> Result<(Tensor, Tensor, Tensor)> {
+    let arch = &state.arch;
+    let exe = engine.load(arch.graph("eval")?)?;
+    let bs = arch.eval_batch;
+    let nc = arch.num_classes;
+    let n = ds.len();
+    let qbw = Tensor::scalar(state.qbits.weight);
+    let qba = Tensor::scalar(state.qbits.act);
+
+    let mut main = Vec::with_capacity(n * nc);
+    let mut e1 = Vec::with_capacity(n * nc);
+    let mut e2 = Vec::with_capacity(n * nc);
+    let mut i = 0;
+    while i < n {
+        let take = bs.min(n - i);
+        // Pad the final ragged batch by repeating the last index.
+        let mut idx: Vec<usize> = (i..i + take).collect();
+        while idx.len() < bs {
+            idx.push(n - 1);
+        }
+        let (x, _) = ds.batch(&idx);
+        let mut inputs: Vec<&Tensor> = Vec::with_capacity(arch.num_params() + 8);
+        inputs.extend(state.params.iter());
+        inputs.extend(state.masks.iter());
+        inputs.push(&qbw);
+        inputs.push(&qba);
+        inputs.push(&x);
+        let outs = exe.run(&inputs).context("eval batch")?;
+        ensure!(outs.len() == 3, "eval graph returned {} outputs", outs.len());
+        main.extend_from_slice(&outs[0].data[..take * nc]);
+        e1.extend_from_slice(&outs[1].data[..take * nc]);
+        e2.extend_from_slice(&outs[2].data[..take * nc]);
+        i += take;
+    }
+    Ok((
+        Tensor::new(vec![n, nc], main),
+        Tensor::new(vec![n, nc], e1),
+        Tensor::new(vec![n, nc], e2),
+    ))
+}
+
+/// Top-1 accuracy of the main head.
+pub fn eval_accuracy(engine: &Engine, state: &ModelState, ds: &Dataset) -> Result<f64> {
+    let (logits, _, _) = eval_logits(engine, state, ds)?;
+    Ok(accuracy_of(&logits, &ds.labels))
+}
+
+pub fn accuracy_of(logits: &Tensor, labels: &[usize]) -> f64 {
+    let preds = logits.argmax_rows();
+    let correct = preds.iter().zip(labels).filter(|(p, l)| p == l).count();
+    correct as f64 / labels.len().max(1) as f64
+}
+
+/// Teacher logits over a dataset (for distillation): the teacher is run
+/// once; students gather rows per batch.
+pub fn teacher_logits(engine: &Engine, state: &ModelState, ds: &Dataset) -> Result<TeacherLogits> {
+    let (logits, _, _) = eval_logits(engine, state, ds)?;
+    Ok(TeacherLogits { rows: logits })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_of_counts() {
+        let logits = Tensor::new(vec![3, 2], vec![0.9, 0.1, 0.2, 0.8, 0.6, 0.4]);
+        assert!((accuracy_of(&logits, &[0, 1, 1]) - 2.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fine_tune_tenth_lr() {
+        let base = TrainOpts { lr: 0.05, ..Default::default() };
+        let ft = TrainOpts::fine_tune_of(&base, 10);
+        assert!((ft.lr - 0.005).abs() < 1e-9);
+        assert_eq!(ft.steps, 10);
+    }
+
+    #[test]
+    fn teacher_gather() {
+        let t = TeacherLogits { rows: Tensor::new(vec![3, 2], vec![1., 2., 3., 4., 5., 6.]) };
+        let g = t.gather(&[2, 0]);
+        assert_eq!(g.data, vec![5., 6., 1., 2.]);
+    }
+}

@@ -1,0 +1,113 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! `cargo bench` runs `rust/benches/bench_main.rs` with `harness = false`;
+//! that binary uses this module.  Methodology: warmup runs, then timed
+//! iterations until both a minimum iteration count and a minimum wall time
+//! are reached; reports mean / p50 / p95 and a throughput line.
+
+use std::time::{Duration, Instant};
+
+use super::stats;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) {
+        println!(
+            "bench {:<44} {:>10} iters  mean {:>12}  p50 {:>12}  p95 {:>12}",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p95_ns),
+        );
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+pub struct Bencher {
+    /// Minimum number of timed iterations.
+    pub min_iters: usize,
+    /// Minimum total measurement time.
+    pub min_time: Duration,
+    /// Warmup iterations before measurement.
+    pub warmup_iters: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { min_iters: 10, min_time: Duration::from_millis(300), warmup_iters: 2 }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher { min_iters: 3, min_time: Duration::from_millis(50), warmup_iters: 1 }
+    }
+
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while samples.len() < self.min_iters || start.elapsed() < self.min_time {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_nanos() as f64);
+            if samples.len() > 10_000 {
+                break;
+            }
+        }
+        let res = BenchResult {
+            name: name.to_string(),
+            iters: samples.len(),
+            mean_ns: stats::mean(&samples),
+            p50_ns: stats::percentile(&samples, 50.0),
+            p95_ns: stats::percentile(&samples, 95.0),
+        };
+        res.report();
+        res
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let b = Bencher::quick();
+        let mut acc = 0u64;
+        let r = b.run("noop-ish", || {
+            acc = acc.wrapping_add(std::hint::black_box(1));
+        });
+        assert!(r.iters >= 3);
+        assert!(r.mean_ns >= 0.0);
+    }
+
+    #[test]
+    fn formats_units() {
+        assert!(fmt_ns(500.0).ends_with("ns"));
+        assert!(fmt_ns(5_000.0).ends_with("µs"));
+        assert!(fmt_ns(5_000_000.0).ends_with("ms"));
+        assert!(fmt_ns(5e9).ends_with("s"));
+    }
+}

@@ -1,0 +1,164 @@
+//! Canonical Huffman coding — the third stage of Deep Compression (Han et
+//! al. 2015), one of the combination baselines the paper compares against.
+//! Used by the `HuffmanCoding` chain stage to measure the entropy-coded
+//! storage of clustered / quantized weights.
+
+use std::collections::BinaryHeap;
+
+/// Code-length assignment for each symbol (0 = symbol absent).
+#[derive(Debug, Clone)]
+pub struct HuffmanCode {
+    pub lengths: Vec<u8>,
+}
+
+impl HuffmanCode {
+    /// Build from symbol frequencies.
+    pub fn from_freqs(freqs: &[u64]) -> HuffmanCode {
+        #[derive(PartialEq, Eq)]
+        struct Node {
+            weight: u64,
+            id: usize, // tie-break for determinism
+        }
+        impl Ord for Node {
+            fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+                // Min-heap via reversed compare.
+                other.weight.cmp(&self.weight).then(other.id.cmp(&self.id))
+            }
+        }
+        impl PartialOrd for Node {
+            fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+                Some(self.cmp(other))
+            }
+        }
+
+        let present: Vec<usize> = (0..freqs.len()).filter(|&i| freqs[i] > 0).collect();
+        let mut lengths = vec![0u8; freqs.len()];
+        match present.len() {
+            0 => return HuffmanCode { lengths },
+            1 => {
+                lengths[present[0]] = 1;
+                return HuffmanCode { lengths };
+            }
+            _ => {}
+        }
+
+        // parent pointers over a forest of (symbols + internal nodes).
+        let mut parent: Vec<usize> = vec![usize::MAX; present.len() * 2 - 1];
+        let mut heap: BinaryHeap<Node> = present
+            .iter()
+            .enumerate()
+            .map(|(slot, &sym)| Node { weight: freqs[sym], id: slot })
+            .collect();
+        let mut next_id = present.len();
+        while heap.len() > 1 {
+            let a = heap.pop().unwrap();
+            let b = heap.pop().unwrap();
+            parent[a.id] = next_id;
+            parent[b.id] = next_id;
+            heap.push(Node { weight: a.weight + b.weight, id: next_id });
+            next_id += 1;
+        }
+        for (slot, &sym) in present.iter().enumerate() {
+            let mut depth = 0u8;
+            let mut n = slot;
+            while parent[n] != usize::MAX {
+                n = parent[n];
+                depth += 1;
+            }
+            lengths[sym] = depth.max(1);
+        }
+        HuffmanCode { lengths }
+    }
+
+    /// Total coded size in bits for the given frequencies.
+    pub fn coded_bits(&self, freqs: &[u64]) -> u64 {
+        freqs
+            .iter()
+            .zip(&self.lengths)
+            .map(|(&f, &l)| f * l as u64)
+            .sum()
+    }
+
+    /// Codebook side-information cost: one length byte per possible symbol
+    /// plus the symbol-value table (32-bit values), canonical coding.
+    pub fn table_bits(&self) -> u64 {
+        let present = self.lengths.iter().filter(|&&l| l > 0).count() as u64;
+        8 * self.lengths.len() as u64 + 32 * present
+    }
+}
+
+/// Shannon entropy (bits/symbol) of a frequency table — the lower bound
+/// Huffman approaches; used in tests and reports.
+pub fn entropy_bits(freqs: &[u64]) -> f64 {
+    let total: u64 = freqs.iter().sum();
+    if total == 0 {
+        return 0.0;
+    }
+    let mut h = 0.0;
+    for &f in freqs {
+        if f > 0 {
+            let p = f as f64 / total as f64;
+            h -= p * p.log2();
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classic_example() {
+        // freqs for 4 symbols: skewed -> shorter code for frequent symbol.
+        let freqs = [45u64, 13, 12, 30];
+        let code = HuffmanCode::from_freqs(&freqs);
+        assert!(code.lengths[0] <= code.lengths[1]);
+        assert!(code.lengths[0] <= code.lengths[2]);
+        // Kraft inequality (complete codes satisfy equality <= 1).
+        let kraft: f64 = code
+            .lengths
+            .iter()
+            .filter(|&&l| l > 0)
+            .map(|&l| 2f64.powi(-(l as i32)))
+            .sum();
+        assert!(kraft <= 1.0 + 1e-9, "kraft {kraft}");
+    }
+
+    #[test]
+    fn beats_or_matches_fixed_width_on_skew() {
+        let freqs = [1000u64, 10, 10, 10, 5, 5, 3, 2];
+        let code = HuffmanCode::from_freqs(&freqs);
+        let coded = code.coded_bits(&freqs);
+        let fixed = 3 * freqs.iter().sum::<u64>(); // 3 bits for 8 symbols
+        assert!(coded < fixed, "huffman {coded} vs fixed {fixed}");
+    }
+
+    #[test]
+    fn within_one_bit_of_entropy() {
+        let freqs = [7u64, 21, 2, 40, 9, 1, 0, 13];
+        let code = HuffmanCode::from_freqs(&freqs);
+        let total: u64 = freqs.iter().sum();
+        let avg = code.coded_bits(&freqs) as f64 / total as f64;
+        let h = entropy_bits(&freqs);
+        assert!(avg >= h - 1e-9, "avg {avg} below entropy {h}");
+        assert!(avg < h + 1.0, "avg {avg} not within 1 bit of entropy {h}");
+    }
+
+    #[test]
+    fn degenerate_cases() {
+        let empty = HuffmanCode::from_freqs(&[0, 0, 0]);
+        assert_eq!(empty.coded_bits(&[0, 0, 0]), 0);
+        let single = HuffmanCode::from_freqs(&[0, 42, 0]);
+        assert_eq!(single.lengths[1], 1);
+        assert_eq!(single.coded_bits(&[0, 42, 0]), 42);
+    }
+
+    #[test]
+    fn deterministic() {
+        let freqs = [5u64, 5, 5, 5, 5];
+        let a = HuffmanCode::from_freqs(&freqs);
+        let b = HuffmanCode::from_freqs(&freqs);
+        assert_eq!(a.lengths, b.lengths);
+    }
+}

@@ -1,0 +1,139 @@
+//! 1-D k-means (Lloyd's algorithm) for weight clustering — the "trained
+//! quantization" stage of Deep Compression (Han et al. 2015).
+
+/// Cluster `values` into `k` centroids.  Returns (centroids, assignment).
+/// Deterministic: centroids initialize at evenly-spaced quantiles.
+pub fn kmeans_1d(values: &[f32], k: usize, iters: usize) -> (Vec<f32>, Vec<u32>) {
+    assert!(k >= 1);
+    if values.is_empty() {
+        return (vec![0.0; k], Vec::new());
+    }
+    let mut sorted = values.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut centroids: Vec<f32> = (0..k)
+        .map(|i| {
+            let pos = (i as f64 + 0.5) / k as f64 * (sorted.len() - 1) as f64;
+            sorted[pos.round() as usize]
+        })
+        .collect();
+    // Deduplicate identical initial centroids by nudging.
+    for i in 1..k {
+        if centroids[i] <= centroids[i - 1] {
+            centroids[i] = centroids[i - 1] + 1e-7;
+        }
+    }
+
+    let mut assign = vec![0u32; values.len()];
+    for _ in 0..iters {
+        // Assignment: nearest centroid (centroids stay sorted; binary
+        // search would be O(log k) but k <= 256 so linear is fine).
+        for (i, &v) in values.iter().enumerate() {
+            let mut best = 0usize;
+            let mut bd = f32::INFINITY;
+            for (c, &cv) in centroids.iter().enumerate() {
+                let d = (v - cv).abs();
+                if d < bd {
+                    bd = d;
+                    best = c;
+                }
+            }
+            assign[i] = best as u32;
+        }
+        // Update.
+        let mut sums = vec![0f64; k];
+        let mut counts = vec![0u64; k];
+        for (&a, &v) in assign.iter().zip(values) {
+            sums[a as usize] += v as f64;
+            counts[a as usize] += 1;
+        }
+        let mut moved = 0.0f32;
+        for c in 0..k {
+            if counts[c] > 0 {
+                let nc = (sums[c] / counts[c] as f64) as f32;
+                moved += (nc - centroids[c]).abs();
+                centroids[c] = nc;
+            }
+        }
+        if moved < 1e-7 {
+            break;
+        }
+    }
+    (centroids, assign)
+}
+
+/// Replace each value with its centroid; returns cluster frequencies too.
+pub fn quantize_to_clusters(values: &[f32], k: usize, iters: usize) -> (Vec<f32>, Vec<u64>, Vec<f32>) {
+    let (centroids, assign) = kmeans_1d(values, k, iters);
+    let mut freqs = vec![0u64; k];
+    let out = assign
+        .iter()
+        .map(|&a| {
+            freqs[a as usize] += 1;
+            centroids[a as usize]
+        })
+        .collect();
+    (out, freqs, centroids)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn separates_two_clear_clusters() {
+        let mut v = vec![];
+        for i in 0..50 {
+            v.push(1.0 + (i as f32) * 1e-3);
+            v.push(5.0 + (i as f32) * 1e-3);
+        }
+        let (c, assign) = kmeans_1d(&v, 2, 20);
+        let mut cs = c.clone();
+        cs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!((cs[0] - 1.025).abs() < 0.05, "{cs:?}");
+        assert!((cs[1] - 5.025).abs() < 0.05, "{cs:?}");
+        // Same-cluster values agree.
+        assert_eq!(assign[0], assign[2]);
+        assert_ne!(assign[0], assign[1]);
+    }
+
+    #[test]
+    fn at_most_k_distinct_values() {
+        let mut rng = Rng::new(1);
+        let v: Vec<f32> = (0..5000).map(|_| rng.normal()).collect();
+        for k in [2, 4, 16] {
+            let (q, freqs, _) = quantize_to_clusters(&v, k, 15);
+            let mut uniq = q.clone();
+            uniq.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            uniq.dedup();
+            assert!(uniq.len() <= k);
+            assert_eq!(freqs.iter().sum::<u64>(), v.len() as u64);
+        }
+    }
+
+    #[test]
+    fn error_decreases_with_k() {
+        let mut rng = Rng::new(2);
+        let v: Vec<f32> = (0..2000).map(|_| rng.normal()).collect();
+        let err = |k: usize| {
+            let (q, _, _) = quantize_to_clusters(&v, k, 20);
+            v.iter().zip(&q).map(|(a, b)| (a - b) * (a - b)).sum::<f32>()
+        };
+        let (e2, e8, e32) = (err(2), err(8), err(32));
+        assert!(e2 > e8 && e8 > e32, "{e2} {e8} {e32}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let v: Vec<f32> = (0..100).map(|i| (i as f32 * 0.7).sin()).collect();
+        assert_eq!(kmeans_1d(&v, 8, 10), kmeans_1d(&v, 8, 10));
+    }
+
+    #[test]
+    fn k_one_collapses_to_mean() {
+        let v = [1.0f32, 2.0, 3.0];
+        let (c, a) = kmeans_1d(&v, 1, 5);
+        assert!((c[0] - 2.0).abs() < 1e-6);
+        assert_eq!(a, vec![0, 0, 0]);
+    }
+}

@@ -1,0 +1,16 @@
+//! In-repo substrates.
+//!
+//! The build environment is fully offline and its crate set is exactly the
+//! `xla` crate's dependency closure, so the usual ecosystem crates (serde,
+//! clap, rand, criterion, proptest, rayon) are unavailable.  Everything the
+//! coordinator needs beyond `xla`/`anyhow`/`thiserror` is implemented here
+//! from scratch (see DESIGN.md "Substrates built from scratch").
+
+pub mod bench;
+pub mod cli;
+pub mod huffman;
+pub mod json;
+pub mod kmeans;
+pub mod prop;
+pub mod rng;
+pub mod stats;

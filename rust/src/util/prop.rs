@@ -1,0 +1,172 @@
+//! Minimal property-testing harness (proptest is unavailable offline).
+//!
+//! `check(name, cases, gen, prop)` draws `cases` random inputs from `gen`,
+//! asserts `prop` on each, and on failure performs greedy shrinking via the
+//! input's `Shrink` implementation before panicking with the minimal
+//! counter-example.  Deterministic: the seed is fixed per property name so
+//! CI failures replay.
+
+use super::rng::Rng;
+
+/// Types that can propose smaller versions of themselves.
+pub trait Shrink: Sized + Clone + std::fmt::Debug {
+    /// Candidate strictly-smaller values, roughly ordered most-aggressive
+    /// first.  Default: no shrinking.
+    fn shrink(&self) -> Vec<Self> {
+        Vec::new()
+    }
+}
+
+impl Shrink for usize {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self > 0 {
+            out.push(0);
+            out.push(self / 2);
+            out.push(self - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+impl Shrink for f32 {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self != 0.0 {
+            out.push(0.0);
+            out.push(self / 2.0);
+        }
+        out
+    }
+}
+
+impl Shrink for f64 {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self != 0.0 {
+            out.push(0.0);
+            out.push(self / 2.0);
+        }
+        out
+    }
+}
+
+impl Shrink for u64 {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self > 0 {
+            out.push(0);
+            out.push(self / 2);
+        }
+        out
+    }
+}
+
+impl<T: Shrink> Shrink for Vec<T> {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if !self.is_empty() {
+            out.push(self[..self.len() / 2].to_vec());
+            let mut tail = self.clone();
+            tail.remove(0);
+            out.push(tail);
+            // Element-wise shrink of the first element.
+            if let Some(smaller) = self[0].shrink().into_iter().next() {
+                let mut v = self.clone();
+                v[0] = smaller;
+                out.push(v);
+            }
+        }
+        out
+    }
+}
+
+impl<A: Shrink, B: Shrink> Shrink for (A, B) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self.0.shrink().into_iter().map(|a| (a, self.1.clone())).collect();
+        out.extend(self.1.shrink().into_iter().map(|b| (self.0.clone(), b)));
+        out
+    }
+}
+
+fn seed_from_name(name: &str) -> u64 {
+    // FNV-1a.
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Run a property over `cases` random inputs; shrink on failure.
+pub fn check<T, G, P>(name: &str, cases: usize, mut gen: G, prop: P)
+where
+    T: Shrink,
+    G: FnMut(&mut Rng) -> T,
+    P: Fn(&T) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed_from_name(name));
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            // Greedy shrink: repeatedly take the first failing candidate.
+            let mut cur = input;
+            let mut cur_msg = msg;
+            let mut budget = 200;
+            'shrinking: while budget > 0 {
+                budget -= 1;
+                for cand in cur.shrink() {
+                    if let Err(m) = prop(&cand) {
+                        cur = cand;
+                        cur_msg = m;
+                        continue 'shrinking;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property `{name}` failed (case {case}):\n  input: {cur:?}\n  error: {cur_msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check("add commutes", 100, |r| (r.below(1000), r.below(1000)), |&(a, b)| {
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("math broke".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always fails`")]
+    fn failing_property_panics() {
+        check("always fails", 10, |r| r.below(100), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn shrinks_to_small_counterexample() {
+        let got = std::panic::catch_unwind(|| {
+            check("fails above 10", 200, |r| r.below(1000), |&x| {
+                if x <= 10 {
+                    Ok(())
+                } else {
+                    Err(format!("{x} > 10"))
+                }
+            });
+        });
+        let msg = *got.unwrap_err().downcast::<String>().unwrap();
+        // Greedy shrink must land at 11 (minimal failing value).
+        assert!(msg.contains("input: 11"), "{msg}");
+    }
+}

@@ -1,0 +1,172 @@
+//! Small statistics helpers shared by metrics, benches and the serve loop.
+
+/// Mean of a slice (0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Sample standard deviation (0 for n < 2).
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Percentile by linear interpolation, q in [0, 100].
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = (q / 100.0) * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (v[hi] - v[lo]) * (pos - lo as f64)
+    }
+}
+
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+/// Running summary for streaming latency measurements.
+#[derive(Debug, Default, Clone)]
+pub struct Summary {
+    samples: Vec<f64>,
+}
+
+impl Summary {
+    pub fn push(&mut self, x: f64) {
+        self.samples.push(x);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        mean(&self.samples)
+    }
+
+    pub fn p50(&self) -> f64 {
+        percentile(&self.samples, 50.0)
+    }
+
+    pub fn p95(&self) -> f64 {
+        percentile(&self.samples, 95.0)
+    }
+
+    pub fn p99(&self) -> f64 {
+        percentile(&self.samples, 99.0)
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+    }
+}
+
+/// Pareto frontier of (x=compression ratio, y=accuracy) points:
+/// a point survives if no other point has both >= x and >= y (strictly
+/// better in at least one).  Returned sorted by x ascending.
+pub fn pareto_frontier(points: &[(f64, f64)]) -> Vec<(f64, f64)> {
+    let mut keep = Vec::new();
+    'outer: for (i, &(x, y)) in points.iter().enumerate() {
+        for (j, &(x2, y2)) in points.iter().enumerate() {
+            if i != j && x2 >= x && y2 >= y && (x2 > x || y2 > y) {
+                continue 'outer;
+            }
+        }
+        keep.push((x, y));
+    }
+    keep.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    keep.dedup();
+    keep
+}
+
+/// Area-under-frontier proxy: mean accuracy of the frontier weighted by
+/// log-compression span — a scalar "who wins" score used to compare two
+/// orderings of the same pair (higher is better).
+pub fn frontier_score(points: &[(f64, f64)]) -> f64 {
+    let f = pareto_frontier(points);
+    if f.len() < 2 {
+        return f.first().map(|p| p.1).unwrap_or(0.0);
+    }
+    let mut area = 0.0;
+    let mut span = 0.0;
+    for w in f.windows(2) {
+        let dx = (w[1].0.ln() - w[0].0.ln()).max(0.0);
+        area += dx * 0.5 * (w[0].1 + w[1].1);
+        span += dx;
+    }
+    if span == 0.0 {
+        f[0].1
+    } else {
+        area / span
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_moments() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert!((stddev(&xs) - 1.2909944).abs() < 1e-5);
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs = [4.0, 1.0, 3.0, 2.0];
+        assert_eq!(median(&xs), 2.5);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+    }
+
+    #[test]
+    fn pareto_drops_dominated() {
+        let pts = [(1.0, 0.9), (2.0, 0.8), (1.5, 0.7), (3.0, 0.5)];
+        let f = pareto_frontier(&pts);
+        assert_eq!(f, vec![(1.0, 0.9), (2.0, 0.8), (3.0, 0.5)]);
+    }
+
+    #[test]
+    fn frontier_score_orders_dominance() {
+        // Frontier B dominates A everywhere -> higher score.
+        let a = [(10.0, 0.80), (100.0, 0.60)];
+        let b = [(10.0, 0.90), (100.0, 0.85)];
+        assert!(frontier_score(&b) > frontier_score(&a));
+    }
+
+    #[test]
+    fn summary_quantiles() {
+        let mut s = Summary::default();
+        for i in 1..=100 {
+            s.push(i as f64);
+        }
+        assert_eq!(s.len(), 100);
+        assert!((s.p50() - 50.5).abs() < 1.0);
+        assert!(s.p99() > 98.0);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 100.0);
+    }
+}

@@ -1,0 +1,345 @@
+//! Property-based tests on coordinator invariants — no PJRT needed, so
+//! these run fast and exercise the accounting / ordering / data machinery
+//! over randomized inputs (in-repo prop harness; proptest is unavailable
+//! offline).
+
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+use coc::chain::Technique;
+use coc::data::{Batcher, Dataset, DatasetKind};
+use coc::exits;
+use coc::models::{Accountant, ArchManifest, LayerDesc, LayerKind, MaskSlot, ModelState, QBits};
+use coc::order::{Preference, PreferenceGraph, SortOutcome};
+use coc::tensor::Tensor;
+use coc::util::prop::{check, Shrink};
+use coc::util::stats;
+
+fn rand_arch(rng: &mut coc::util::rng::Rng) -> Rc<ArchManifest> {
+    let nconv = 1 + rng.below(4);
+    let mut layers = Vec::new();
+    let mut mask_slots = Vec::new();
+    let mut param_shapes = Vec::new();
+    let mut cin = 3usize;
+    let mut in_mask = -1i64;
+    let mut hw = 16usize;
+    for i in 0..nconv {
+        let cout = 4 + rng.below(28);
+        mask_slots.push(MaskSlot { name: format!("m{i}"), channels: cout });
+        layers.push(LayerDesc {
+            name: format!("c{i}"),
+            kind: LayerKind::Conv,
+            k: 3,
+            cin,
+            cout,
+            stride: 1,
+            hout: hw,
+            wout: hw,
+            in_mask,
+            out_mask: i as i64,
+            segment: if i < nconv / 2 { "seg1" } else { "seg2" }.into(),
+        });
+        param_shapes.push(vec![3, 3, cin, cout]);
+        param_shapes.push(vec![cout]);
+        in_mask = i as i64;
+        cin = cout;
+        if i % 2 == 1 && hw > 4 {
+            hw /= 2;
+        }
+    }
+    layers.push(LayerDesc {
+        name: "fc".into(),
+        kind: LayerKind::Dense,
+        k: 1,
+        cin,
+        cout: 20,
+        stride: 1,
+        hout: 1,
+        wout: 1,
+        in_mask,
+        out_mask: -1,
+        segment: "seg3".into(),
+    });
+    param_shapes.push(vec![cin, 20]);
+    param_shapes.push(vec![20]);
+    Rc::new(ArchManifest {
+        name: "rand".into(),
+        num_classes: 20,
+        layers,
+        mask_slots,
+        param_shapes,
+        graphs: BTreeMap::new(),
+        train_batch: 8,
+        eval_batch: 8,
+        stage_batch: 1,
+        stage_h1_shape: vec![1],
+        stage_h2_shape: vec![1],
+    })
+}
+
+#[derive(Clone, Debug)]
+struct ArchCase {
+    seed: u64,
+    prune: Vec<usize>, // channels to kill in slot 0
+    bits: (u8, u8),
+}
+
+impl Shrink for ArchCase {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if !self.prune.is_empty() {
+            out.push(ArchCase { prune: self.prune[..self.prune.len() / 2].to_vec(), ..self.clone() });
+        }
+        out
+    }
+}
+
+/// BitOps must decrease monotonically under more pruning and under fewer
+/// bits, and never go negative.
+#[test]
+fn prop_accounting_monotone() {
+    check(
+        "accounting monotone",
+        120,
+        |rng| ArchCase {
+            seed: rng.next_u64(),
+            prune: {
+                let n = rng.below(4);
+                (0..n).map(|_| rng.below(32)).collect()
+            },
+            bits: ([0u8, 1, 2, 4, 8][rng.below(5)], [0u8, 2, 8][rng.below(3)]),
+        },
+        |case| {
+            let mut rng = coc::util::rng::Rng::new(case.seed);
+            let arch = rand_arch(&mut rng);
+            let mut st = ModelState::init_host(arch.clone(), case.seed);
+            let full = Accountant::new(&st).expected_bitops();
+            if full <= 0.0 {
+                return Err("baseline bitops not positive".into());
+            }
+            // prune some channels of slot 0
+            let c0 = arch.mask_slots[0].channels;
+            for &p in &case.prune {
+                st.masks[0].data[p % c0] = 0.0;
+            }
+            let pruned = Accountant::new(&st).expected_bitops();
+            if pruned > full + 1e-6 {
+                return Err(format!("pruning increased bitops {full} -> {pruned}"));
+            }
+            st.qbits = QBits { weight: case.bits.0 as f32, act: case.bits.1 as f32 };
+            let quant = Accountant::new(&st).expected_bitops();
+            if quant > pruned + 1e-6 {
+                return Err(format!("quantizing increased bitops {pruned} -> {quant}"));
+            }
+            let cr = Accountant::new(&st).bitops_cr();
+            if !(cr >= 1.0 - 1e-9 && cr.is_finite()) {
+                return Err(format!("CR {cr} out of range"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Storage accounting: pruning + quantization never increase storage, and
+/// the fp32 unpruned state matches the baseline exactly.
+#[test]
+fn prop_storage_consistent() {
+    check(
+        "storage consistent",
+        100,
+        |rng| rng.next_u64(),
+        |&seed| {
+            let mut rng = coc::util::rng::Rng::new(seed);
+            let arch = rand_arch(&mut rng);
+            let st = ModelState::init_host(arch.clone(), seed);
+            let base = Accountant::baseline_storage(&arch);
+            let now = Accountant::new(&st).storage_bits();
+            if (base - now).abs() > 1e-6 {
+                return Err(format!("fp32 storage {now} != baseline {base}"));
+            }
+            let mut q = st.clone();
+            q.qbits = QBits { weight: 2.0, act: 8.0 };
+            if Accountant::new(&q).storage_bits() >= now {
+                return Err("quantized storage not smaller".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Any complete preference set (random margins, random directions) either
+/// toposorts or reports a cycle — never panics, never loses techniques.
+#[test]
+fn prop_toposort_total() {
+    check(
+        "toposort total",
+        300,
+        |rng| {
+            (0..6).map(|_| (rng.f32() - 0.5) * 2.0).collect::<Vec<f32>>()
+        },
+        |margins| {
+            use Technique::*;
+            let pairs =
+                [(Distill, Prune), (Distill, Quantize), (Distill, EarlyExit), (Prune, Quantize), (Prune, EarlyExit), (Quantize, EarlyExit)];
+            let mut g = PreferenceGraph::default();
+            for (i, &(a, b)) in pairs.iter().enumerate() {
+                g.add(Preference { first: a, second: b, margin: margins[i] as f64 });
+            }
+            match g.toposort() {
+                SortOutcome::Unique(o) | SortOutcome::Ambiguous(o) => {
+                    if o.len() != 4 {
+                        return Err(format!("lost techniques: {o:?}"));
+                    }
+                    // Every edge must be respected.
+                    let pos: BTreeMap<Technique, usize> =
+                        o.iter().enumerate().map(|(i, &t)| (t, i)).collect();
+                    for (&(a, b), _) in &g.edges {
+                        if pos[&a] > pos[&b] {
+                            return Err(format!("order {o:?} violates edge {a:?}->{b:?}"));
+                        }
+                    }
+                    Ok(())
+                }
+                SortOutcome::Cycle(_) => Ok(()),
+            }
+        },
+    );
+}
+
+/// Batcher: over any epoch, no index repeats; all batches full-size.
+#[test]
+fn prop_batcher_epoch_partition() {
+    check(
+        "batcher epoch partition",
+        100,
+        |rng| (8 + rng.below(200), 1 + rng.below(16)),
+        |&(n, b)| {
+            if b > n {
+                return Ok(());
+            }
+            let mut batcher = Batcher::new(n, b, 99);
+            let per_epoch = n / b;
+            let mut seen = vec![0u8; n];
+            for _ in 0..per_epoch {
+                for &i in batcher.next_indices() {
+                    if i >= n {
+                        return Err(format!("index {i} out of range {n}"));
+                    }
+                    seen[i] += 1;
+                    if seen[i] > 1 {
+                        return Err(format!("index {i} repeated within epoch"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Exit-policy accounting: exit probabilities sum to <= 1, accuracy in
+/// [0,1], and raising thresholds never increases exit rates.
+#[test]
+fn prop_exit_policy_monotone() {
+    check(
+        "exit policy monotone",
+        60,
+        |rng| rng.next_u64(),
+        |&seed| {
+            let mut r = coc::util::rng::Rng::new(seed);
+            let n = 40;
+            let nc = 10;
+            let mk = |r: &mut coc::util::rng::Rng| {
+                Tensor::new(
+                    vec![n, nc],
+                    (0..n * nc).map(|_| r.normal() * 2.0).collect(),
+                )
+            };
+            let (main, e1, e2) = (mk(&mut r), mk(&mut r), mk(&mut r));
+            let labels: Vec<usize> = (0..n).map(|_| r.below(nc)).collect();
+            let lo = exits::evaluate_from_logits(&main, &e1, &e2, &labels, 0.3, 0.3);
+            let hi = exits::evaluate_from_logits(&main, &e1, &e2, &labels, 0.9, 0.9);
+            for ev in [&lo, &hi] {
+                if ev.p_exit1 + ev.p_exit2 > 1.0 + 1e-9 {
+                    return Err("exit probs exceed 1".into());
+                }
+                if !(0.0..=1.0).contains(&ev.accuracy) {
+                    return Err("accuracy out of range".into());
+                }
+            }
+            if hi.p_exit1 > lo.p_exit1 + 1e-9 {
+                return Err(format!(
+                    "raising threshold increased exit1 rate {} -> {}",
+                    lo.p_exit1, hi.p_exit1
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Pareto frontier: every input point is dominated-by-or-equal-to some
+/// frontier point, and the frontier is strictly increasing in x with
+/// decreasing-or-equal y ordering violations.
+#[test]
+fn prop_pareto_frontier_sound() {
+    check(
+        "pareto frontier sound",
+        200,
+        |rng| {
+            let n = 1 + rng.below(30);
+            (0..n)
+                .map(|_| (1.0 + rng.f32() as f64 * 100.0, rng.f32() as f64))
+                .collect::<Vec<(f64, f64)>>()
+        },
+        |pts| {
+            let f = stats::pareto_frontier(
+                &pts.iter().map(|&(a, b)| (a, b)).collect::<Vec<_>>(),
+            );
+            if f.is_empty() {
+                return Err("empty frontier from non-empty points".into());
+            }
+            for &(x, y) in pts {
+                let covered = f.iter().any(|&(fx, fy)| fx >= x && fy >= y);
+                if !covered {
+                    return Err(format!("point ({x},{y}) not dominated by frontier"));
+                }
+            }
+            for w in f.windows(2) {
+                if w[1].0 <= w[0].0 {
+                    return Err("frontier x not increasing".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Dataset determinism + label/shape invariants across all four analogs.
+#[test]
+fn prop_dataset_invariants() {
+    check(
+        "dataset invariants",
+        40,
+        |rng| (rng.next_u64(), rng.below(4)),
+        |&(seed, kid)| {
+            let kind = [
+                DatasetKind::SynthC10,
+                DatasetKind::SynthC100,
+                DatasetKind::SynthSVHN,
+                DatasetKind::SynthCINIC,
+            ][kid];
+            let a = Dataset::generate(kind, 24, seed, 0);
+            let b = Dataset::generate(kind, 24, seed, 0);
+            if a.images.data != b.images.data || a.labels != b.labels {
+                return Err("generation not deterministic".into());
+            }
+            if a.labels.iter().any(|&l| l >= kind.num_classes()) {
+                return Err("label out of range".into());
+            }
+            if a.images.data.iter().any(|v| !v.is_finite()) {
+                return Err("non-finite pixel".into());
+            }
+            Ok(())
+        },
+    );
+}
