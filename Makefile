@@ -1,0 +1,27 @@
+# Chain of Compression — build entrypoints.
+#
+#   make artifacts   lower all AOT graphs + manifest (python runs ONCE here)
+#   make build       release build of the rust coordinator
+#   make test        python unit tests + rust test suite
+#   make bench       rust micro/e2e benches (needs artifacts)
+
+ARTIFACTS := artifacts
+
+.PHONY: artifacts build test bench
+
+artifacts:
+	cd python && python -m compile.aot --out ../$(ARTIFACTS)
+	@# cargo test/bench/run execute with cwd=rust/ and resolve ./artifacts
+	@# relative to it; python tests resolve the repo-root copy.  One real
+	@# directory, one symlink.
+	ln -sfn ../$(ARTIFACTS) rust/artifacts
+
+build:
+	cd rust && cargo build --release
+
+test:
+	cd python && python -m pytest tests -q
+	cd rust && cargo test -q
+
+bench: build
+	cd rust && cargo bench

@@ -1,12 +1,19 @@
 //! Early-exit serving demo: the *dynamic* compression stage at work.
 //!
-//! Trains exit heads on a small model, then serves single-sample requests
-//! through the staged AOT graphs (stage1 -> maybe stage2 -> maybe stage3),
-//! so confident requests genuinely skip computation.  Reports the
-//! latency/throughput effect of the confidence threshold — the runtime
-//! knob the paper sweeps.
+//! Part 1 trains exit heads on a small model and serves single-sample
+//! requests through the staged AOT graphs (stage1 -> maybe stage2 ->
+//! maybe stage3), sweeping the confidence threshold — the runtime knob
+//! the paper sweeps.
+//!
+//! Part 2 puts the same model behind the concurrent serving subsystem:
+//! a bounded request queue, dynamic micro-batching, and a pool of workers
+//! each owning its own PJRT engine, driven closed-loop — the production
+//! shape of the same early-exit policy.
 //!
 //!     make artifacts && cargo run --release --example early_exit_serving
+
+use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::Result;
 
@@ -14,6 +21,10 @@ use coc::chain::{stages, Chain, StageCtx};
 use coc::data::{Dataset, DatasetKind};
 use coc::models::Manifest;
 use coc::runtime::Engine;
+use coc::serve::batcher::BatchPolicy;
+use coc::serve::loadgen::{self, LoadMode, LoadOpts};
+use coc::serve::slo::Slo;
+use coc::serve::worker::{PoolOpts, WorkerPool};
 use coc::serve::Server;
 use coc::train::{self, TrainOpts};
 
@@ -43,9 +54,10 @@ fn main() -> Result<()> {
     let acc = train::eval_accuracy(&engine, &state, &test_ds)?;
     println!("model ready: main-head acc {:.1}%", acc * 100.0);
 
-    // Serve under different thresholds: lower threshold -> more requests
-    // exit early -> lower latency, possibly lower accuracy.
-    let server = Server::new(&engine, state)?;
+    // ---- Part 1: single-stream threshold sweep --------------------------
+    // Lower threshold -> more requests exit early -> lower latency,
+    // possibly lower accuracy.
+    let server = Server::new(&engine, state.clone())?;
     println!(
         "{:>9} {:>8} {:>7} {:>7} {:>10} {:>10} {:>9}",
         "threshold", "acc", "exit1", "exit2", "p50 µs", "p95 µs", "rps"
@@ -61,6 +73,44 @@ fn main() -> Result<()> {
             rep.latency_us.p50(),
             rep.latency_us.p95(),
             rep.throughput_rps
+        );
+    }
+
+    // ---- Part 2: concurrent load through the worker pool ----------------
+    let t = 0.8f32;
+    let baseline = server.serve_dataset(&test_ds, 400, t, t)?;
+    println!("\nsingle stream baseline: {:.0} rps", baseline.throughput_rps);
+
+    for workers in [2usize, 4] {
+        let mut pool_opts = PoolOpts::new(coc::DEFAULT_ARTIFACTS, workers, (t, t));
+        pool_opts.batch = BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(500) };
+        let pool = WorkerPool::start(Arc::new(state.clone()), pool_opts);
+        let up = pool.wait_ready(Duration::from_secs(300))?;
+        let rep = loadgen::run(
+            &pool,
+            &test_ds,
+            &LoadOpts {
+                mode: LoadMode::Closed { concurrency: 4 * workers },
+                requests: 800,
+                seed: 7,
+                slo: Slo { latency_ms: 20.0 },
+                ..Default::default()
+            },
+        )?;
+        let outcome = pool.shutdown();
+        for e in &outcome.errors {
+            eprintln!("worker error: {e}");
+        }
+        println!(
+            "{up} workers: {:.0} rps ({:.2}x single stream)  acc {:.1}%  p99 {:.0}µs  \
+             goodput {:.0} rps @ {:.0}ms  queue depth max {}",
+            rep.throughput_rps,
+            rep.throughput_rps / baseline.throughput_rps.max(1e-9),
+            rep.accuracy * 100.0,
+            rep.latency_us.p99(),
+            rep.slo.goodput_rps,
+            rep.slo.slo_ms,
+            rep.queue.max_depth
         );
     }
     Ok(())

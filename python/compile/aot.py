@@ -36,7 +36,7 @@ def _write(out_dir, fname, text):
     return fname, hashlib.sha256(text.encode()).hexdigest()[:16], len(text)
 
 
-def lower_arch(net, out_dir):
+def lower_arch(net, out_dir, stage_batches=model.STAGE_BATCHES):
     """Lower all graphs for one architecture; return manifest entries."""
     f32 = jnp.float32
     P = model.param_specs(net)
@@ -47,15 +47,11 @@ def lower_arch(net, out_dir):
         (model.TRAIN_BATCH, archs.IMG_HW, archs.IMG_HW, archs.IMG_C), f32)
     img_eval = jax.ShapeDtypeStruct(
         (model.EVAL_BATCH, archs.IMG_HW, archs.IMG_HW, archs.IMG_C), f32)
-    img_stage = jax.ShapeDtypeStruct(
-        (model.STAGE_BATCH, archs.IMG_HW, archs.IMG_HW, archs.IMG_C), f32)
     y1h = jax.ShapeDtypeStruct((model.TRAIN_BATCH, nclass), f32)
     tlog = jax.ShapeDtypeStruct((model.TRAIN_BATCH, nclass), f32)
     exit_w = jax.ShapeDtypeStruct((2,), f32)
     hp = jax.ShapeDtypeStruct((3,), f32)
-    h1_stage, h2_stage = model.seg_out_shape(net, model.STAGE_BATCH)
-    h1s = jax.ShapeDtypeStruct(h1_stage, f32)
-    h2s = jax.ShapeDtypeStruct(h2_stage, f32)
+    stage_batches = sorted(set(int(b) for b in stage_batches) | {1})
 
     graphs = {}
 
@@ -107,23 +103,33 @@ def lower_arch(net, out_dir):
 
     lower("eval", eval_flat, *P, *M, S, S, img_eval)
 
-    # staged eval at batch 1 (serving path: genuinely skip later segments)
+    # staged eval (serving path: genuinely skip later segments), lowered at
+    # every serving batch size: batch 1 is the single-stream contract, the
+    # larger sizes are what the rust micro-batcher pads request groups to.
     s1, s2, s3 = model.make_stage_fns(net)
 
-    def stage_flat(fn, xin):
+    def stage_flat(fn):
         def f(*ops):
             params = list(ops[:nP])
             masks = list(ops[nP:nP + len(M)])
             qbw, qba, x = ops[nP + len(M):]
             return fn(params, masks, x, qbw, qba)
-        return f, xin
+        return f
 
-    f1, _ = stage_flat(lambda p, m, x, bw, ba: s1(p, m, x, bw, ba), img_stage)
-    lower("stage1", f1, *P, *M, S, S, img_stage)
-    f2, _ = stage_flat(lambda p, m, h, bw, ba: s2(p, m, h, bw, ba), h1s)
-    lower("stage2", f2, *P, *M, S, S, h1s)
-    f3, _ = stage_flat(lambda p, m, h, bw, ba: s3(p, m, h, bw, ba), h2s)
-    lower("stage3", f3, *P, *M, S, S, h2s)
+    f1 = stage_flat(lambda p, m, x, bw, ba: s1(p, m, x, bw, ba))
+    f2 = stage_flat(lambda p, m, h, bw, ba: s2(p, m, h, bw, ba))
+    f3 = stage_flat(lambda p, m, h, bw, ba: s3(p, m, h, bw, ba))
+
+    for sb in stage_batches:
+        suffix = "" if sb == 1 else f"_b{sb}"
+        img_sb = jax.ShapeDtypeStruct(
+            (sb, archs.IMG_HW, archs.IMG_HW, archs.IMG_C), f32)
+        h1_sb, h2_sb = model.seg_out_shape(net, sb)
+        lower(f"stage1{suffix}", f1, *P, *M, S, S, img_sb)
+        lower(f"stage2{suffix}", f2, *P, *M, S, S,
+              jax.ShapeDtypeStruct(h1_sb, f32))
+        lower(f"stage3{suffix}", f3, *P, *M, S, S,
+              jax.ShapeDtypeStruct(h2_sb, f32))
 
     entry = net.describe()
     h1_eval, h2_eval = model.seg_out_shape(net, model.STAGE_BATCH)
@@ -132,6 +138,7 @@ def lower_arch(net, out_dir):
         "train_batch": model.TRAIN_BATCH,
         "eval_batch": model.EVAL_BATCH,
         "stage_batch": model.STAGE_BATCH,
+        "stage_batches": sorted(stage_batches),
         "stage_h1_shape": list(h1_eval),
         "stage_h2_shape": list(h2_eval),
         "num_params": len(P),
@@ -169,16 +176,27 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="../artifacts")
     ap.add_argument("--archs", default="mini_vgg,mini_resnet,mini_mobilenet")
+    ap.add_argument("--stage-batches",
+                    default=",".join(str(b) for b in model.STAGE_BATCHES),
+                    help="comma-separated serving batch sizes to lower the "
+                         "staged graphs at (1 is always included)")
     args = ap.parse_args()
     os.makedirs(args.out, exist_ok=True)
 
+    try:
+        stage_batches = [int(b) for b in args.stage_batches.split(",") if b]
+    except ValueError:
+        ap.error(f"--stage-batches expects comma-separated integers, "
+                 f"got {args.stage_batches!r}")
+    if any(b < 1 for b in stage_batches):
+        ap.error(f"--stage-batches entries must be >= 1, got {stage_batches}")
     manifest = {"version": 1, "num_classes": archs.NUM_CLASSES,
                 "input": {"h": archs.IMG_HW, "w": archs.IMG_HW, "c": archs.IMG_C},
                 "archs": {}, "kernels": {}}
     for name in args.archs.split(","):
         net = archs.build(name)
         print(f"lowering {name} ...", flush=True)
-        manifest["archs"][name] = lower_arch(net, args.out)
+        manifest["archs"][name] = lower_arch(net, args.out, stage_batches)
     print("lowering kernel benches ...", flush=True)
     manifest["kernels"] = lower_kernel_bench(args.out)
 

@@ -144,6 +144,17 @@ class Net:
         self.name = name
         self.layers = []       # descriptor dicts, one per parameterized layer
         self.mask_slots = []   # {name, channels}
+        # (H, W, C) feature-map shapes at the two exit cut points; set by
+        # each subclass so staged graphs can be lowered at any batch size
+        # (the serving micro-batcher needs batched stage artifacts).
+        self.exit_cuts = None  # ((h1, w1, c1), (h2, w2, c2))
+
+    def exit_shapes(self, batch):
+        """NHWC shapes of (h1, h2) at the exit cut points for ``batch``."""
+        if self.exit_cuts is None:
+            raise ValueError(f"{self.name} does not declare exit_cuts")
+        (h1, h2) = self.exit_cuts
+        return (batch,) + tuple(h1), (batch,) + tuple(h2)
 
     # ----- construction ---------------------------------------------------
 
@@ -280,6 +291,7 @@ def _gap(x):
 class MiniVGG(Net):
     def __init__(self):
         super().__init__("mini_vgg")
+        self.exit_cuts = ((8, 8, 16), (4, 4, 32))
         m = self.add_mask
         self.m_c1 = m("c1", 16); self.m_c2 = m("c2", 16)
         self.m_c3 = m("c3", 32); self.m_c4 = m("c4", 32)
@@ -324,6 +336,7 @@ class MiniVGG(Net):
 class MiniResNet(Net):
     def __init__(self):
         super().__init__("mini_resnet")
+        self.exit_cuts = ((16, 16, 16), (8, 8, 32))
         m = self.add_mask
         # Stage masks are shared across every output feeding a residual sum
         # (standard channel-pruning treatment of identity skips); block
@@ -403,6 +416,7 @@ class MiniMobileNet(Net):
 
     def __init__(self):
         super().__init__("mini_mobilenet")
+        self.exit_cuts = ((8, 8, 32), (4, 4, 64))
         m = self.add_mask
         self.m_stem = m("stem", 16)
         self.m_e1 = m("b1_exp", 32); self.m_o1 = m("b1_out", 24)

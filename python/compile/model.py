@@ -31,6 +31,11 @@ from . import archs
 TRAIN_BATCH = 32
 EVAL_BATCH = 64
 STAGE_BATCH = 1
+# Batch sizes the staged serving graphs are lowered at.  Batch 1 is the
+# contract the single-stream server relies on; larger sizes feed the
+# serving micro-batcher (rust serve::batcher pads request groups to the
+# largest lowered batch and falls back to batch 1 when absent).
+STAGE_BATCHES = (1, 8)
 
 
 def _log_softmax(z):
@@ -139,15 +144,12 @@ def param_specs(net):
 
 
 def seg_out_shape(net, batch):
-    """(h1, h2) feature-map shapes at the exit cut points, NHWC."""
-    name = net.name
-    if name == "mini_vgg":
-        return (batch, 8, 8, 16), (batch, 4, 4, 32)
-    if name == "mini_resnet":
-        return (batch, 16, 16, 16), (batch, 8, 8, 32)
-    if name == "mini_mobilenet":
-        return (batch, 8, 8, 32), (batch, 4, 4, 64)
-    raise ValueError(name)
+    """(h1, h2) feature-map shapes at the exit cut points, NHWC.
+
+    Delegates to the architecture's declared ``exit_cuts`` so new archs
+    (and new stage batch sizes) need no edits here.
+    """
+    return net.exit_shapes(batch)
 
 
 def scalar():

@@ -59,6 +59,15 @@ class TestManifest:
             assert a["num_masks"] == len(a["mask_slots"])
             for tag in ["init", "train", "eval", "stage1", "stage2", "stage3"]:
                 assert tag in a["graphs"], f"{name} missing graph {tag}"
+            # Micro-batched stage graphs: every declared batch > 1 must have
+            # all three staged artifacts (rust falls back to batch 1 only
+            # when a batch is absent entirely, not half-lowered).
+            for b in a.get("stage_batches", [1]):
+                assert b >= 1
+                if b > 1:
+                    for stage in [1, 2, 3]:
+                        tag = f"stage{stage}_b{b}"
+                        assert tag in a["graphs"], f"{name} missing graph {tag}"
 
     def test_manifest_matches_live_archs(self, manifest):
         """The manifest on disk must match what archs.py would emit now —

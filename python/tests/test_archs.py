@@ -93,6 +93,29 @@ class TestForward:
         assert h2.shape == h2_want
 
     @pytest.mark.parametrize("name", ARCH_NAMES)
+    @pytest.mark.parametrize("batch", [1, 4, 8])
+    def test_exit_cuts_match_traced_shapes(self, name, batch):
+        """The declared exit_cuts (used to lower batched stage graphs for
+        the serving micro-batcher) must match the actual traced shapes at
+        every serving batch size — checked via eval_shape (no compile)."""
+        net, params, masks = setup_net(name)
+        s1, s2, _ = model.make_stage_fns(net)
+        x = jax.ShapeDtypeStruct((batch, 16, 16, 3), jnp.float32)
+        _, h1 = jax.eval_shape(s1, params, masks, x, B0, B0)
+        _, h2 = jax.eval_shape(
+            s2, params, masks,
+            jax.ShapeDtypeStruct(h1.shape, jnp.float32), B0, B0)
+        h1_want, h2_want = net.exit_shapes(batch)
+        assert h1.shape == h1_want
+        assert h2.shape == h2_want
+        # seg_out_shape is the same contract, via the model module.
+        assert model.seg_out_shape(net, batch) == (h1_want, h2_want)
+
+    def test_stage_batches_include_one(self):
+        assert 1 in model.STAGE_BATCHES
+        assert all(b >= 1 for b in model.STAGE_BATCHES)
+
+    @pytest.mark.parametrize("name", ARCH_NAMES)
     def test_quantized_forward_finite(self, name):
         net, params, masks = setup_net(name)
         x = jax.random.normal(jax.random.PRNGKey(4), (2, 16, 16, 3))

@@ -11,10 +11,13 @@
 //!   runtime operands (`python/compile/`), AOT-lowered to HLO text once,
 //! * **L3** — this crate: the coordinator that owns datasets, training
 //!   loops, the four compression stages, order search, metrics, experiment
-//!   drivers and the early-exit serving loop, executing the AOT graphs via
-//!   PJRT (`xla` crate).  Python never runs at experiment time.
+//!   drivers and the concurrent early-exit serving subsystem (request
+//!   queue, dynamic micro-batching, multi-worker PJRT engines — see
+//!   `serve`), executing the AOT graphs via PJRT (`xla` crate).  Python
+//!   never runs at experiment time.
 //!
-//! Quickstart: see `examples/quickstart.rs`; experiments: `coc exp <id>`.
+//! Quickstart: see `examples/quickstart.rs`; experiments: `coc exp <id>`;
+//! serving benchmark: `coc serve-bench --workers 4`.
 
 pub mod chain;
 pub mod data;

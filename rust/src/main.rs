@@ -6,10 +6,15 @@
 //!   chain   --seq DPQE ...       — run a compression chain end-to-end
 //!   exp     <id>                 — regenerate a paper table/figure
 //!   serve   --arch A ...         — early-exit serving loop demo
+//!   serve-bench --workers N ...  — concurrent serving benchmark (queue +
+//!                                  micro-batching + worker pool + loadgen)
 //!   toposort                     — measure pairwise orders, derive the law
 //!
 //! Common flags: --artifacts DIR (default artifacts), --out DIR (default
 //! results), --scale smoke|default|paper, --seed N, --verbose.
+
+use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
@@ -18,10 +23,15 @@ use coc::data::DatasetKind;
 use coc::exp::{self, ExpCtx};
 use coc::metrics::Measurement;
 use coc::order;
+use coc::serve::batcher::BatchPolicy;
+use coc::serve::loadgen::{self, LoadMode, LoadOpts};
+use coc::serve::slo::Slo;
+use coc::serve::worker::{PoolOpts, WorkerPool};
 use coc::serve::Server;
 use coc::sweep::Scale;
 use coc::train::{self, TrainOpts};
 use coc::util::cli::Args;
+use coc::util::json::{num, obj, s, Json};
 
 fn main() {
     if let Err(e) = real_main() {
@@ -61,6 +71,7 @@ fn real_main() -> Result<()> {
             exp::run(&ctx, "toposort")
         }
         Some("serve") => cmd_serve(&args),
+        Some("serve-bench") => cmd_serve_bench(&args),
         other => {
             if let Some(o) = other {
                 eprintln!("unknown subcommand `{o}`\n");
@@ -73,10 +84,12 @@ fn real_main() -> Result<()> {
 
 fn print_usage() {
     println!("coc {} — Chain of Compression coordinator", coc::version());
-    println!("usage: coc <info|train|chain|exp|serve|toposort> [flags]");
+    println!("usage: coc <info|train|chain|exp|serve|serve-bench|toposort> [flags]");
     println!("  coc exp all --scale default     # regenerate every table/figure");
     println!("  coc chain --seq DPQE --arch mini_resnet --dataset c10");
     println!("  coc serve --arch mini_resnet --requests 200 --threshold 0.8");
+    println!("  coc serve-bench --workers 4 --mode closed --concurrency 16 --requests 2000");
+    println!("  coc serve-bench --workers 4 --mode open --rate 500 --slo-ms 50 --baseline");
 }
 
 fn cmd_info(args: &Args) -> Result<()> {
@@ -191,5 +204,138 @@ fn cmd_serve(args: &Args) -> Result<()> {
         rep.latency_us.p95(),
         rep.throughput_rps
     );
+    Ok(())
+}
+
+/// `coc serve-bench`: the concurrent serving benchmark — request queue +
+/// dynamic micro-batching + a pool of workers with per-worker PJRT
+/// engines, driven by an open- or closed-loop load generator.  Writes a
+/// JSON report (latency percentiles, exit distribution, goodput under
+/// SLO, queue depth) under `--out`.
+fn cmd_serve_bench(args: &Args) -> Result<()> {
+    let ctx = ctx_from(args)?;
+    let arch = args.get_or("arch", "mini_resnet");
+    let kind = DatasetKind::parse(args.get_or("dataset", "c10"))
+        .ok_or_else(|| anyhow!("--dataset must be c10|c100|svhn|cinic"))?;
+    let threshold = args.get_f32("threshold", 0.8)?;
+    let requests = args.get_usize("requests", 2000)?;
+    let workers = args.get_usize("workers", 4)?.max(1);
+    let queue_capacity = args.get_usize("queue", 256)?.max(1);
+    let max_batch = args.get_usize("batch", 8)?.max(1);
+    let batch_wait_us = args.get_u64("batch-wait-us", 2000)?;
+    let slo_ms = args.get_f64("slo-ms", 50.0)?;
+    let mode = match args.get_or("mode", "closed") {
+        "open" => LoadMode::Open { rate_rps: args.get_f64("rate", 500.0)? },
+        "closed" => LoadMode::Closed {
+            concurrency: args.get_usize("concurrency", 4 * workers)?,
+        },
+        other => return Err(anyhow!("--mode must be open|closed, got `{other}`")),
+    };
+
+    // Same model preparation as `coc serve`, so the two are comparable.
+    let (train_ds, test_ds) = ctx.datasets(kind);
+    let mut state = ctx.base_model(arch, kind, &train_ds)?;
+    let sctx = ctx.stage_ctx(&train_ds, &test_ds);
+    Chain::new()
+        .push(Box::new(stages::EarlyExit { threshold, ..Default::default() }))
+        .run(&mut state, &sctx)?;
+
+    // Optional synchronous single-stream baseline (the `coc serve` path)
+    // for an apples-to-apples speedup figure in the same report.
+    let baseline = if args.flag("baseline") {
+        let server = Server::new(&ctx.engine, state.clone())?;
+        let n = requests.min(512).max(1);
+        let rep = server.serve_dataset(&test_ds, n, threshold, threshold)?;
+        println!(
+            "baseline (1 stream): {:.0} rps  acc {:.2}%  exit1 {:.0}% exit2 {:.0}%  p50 {:.0}µs",
+            rep.throughput_rps,
+            rep.accuracy * 100.0,
+            rep.p_exit1 * 100.0,
+            rep.p_exit2 * 100.0,
+            rep.latency_us.p50()
+        );
+        Some(rep)
+    } else {
+        None
+    };
+
+    let mut pool_opts = PoolOpts::new(ctx.engine.artifacts_dir(), workers, (threshold, threshold));
+    pool_opts.queue_capacity = queue_capacity;
+    pool_opts.batch =
+        BatchPolicy { max_batch, max_wait: Duration::from_micros(batch_wait_us) };
+    let pool = WorkerPool::start(Arc::new(state), pool_opts);
+    let up = pool.wait_ready(Duration::from_secs(600))?;
+    if up < workers {
+        eprintln!("warning: only {up}/{workers} workers came up");
+    }
+    let load_opts = LoadOpts {
+        mode,
+        requests,
+        seed: ctx.seed,
+        slo: Slo { latency_ms: slo_ms },
+        ..Default::default()
+    };
+    let report = loadgen::run(&pool, &test_ds, &load_opts)?;
+    let outcome = pool.shutdown();
+    for e in &outcome.errors {
+        eprintln!("worker error: {e}");
+    }
+
+    println!("{}", report.summary_line());
+    if let Some(base) = &baseline {
+        println!(
+            "speedup vs single stream: {:.2}x ({:.0} rps vs {:.0} rps)",
+            report.throughput_rps / base.throughput_rps.max(1e-9),
+            report.throughput_rps,
+            base.throughput_rps
+        );
+    }
+
+    let worker_stats = Json::Arr(
+        outcome
+            .stats
+            .iter()
+            .map(|w| {
+                obj(vec![
+                    ("worker", num(w.worker as f64)),
+                    ("processed", num(w.processed as f64)),
+                    ("drains", num(w.drains as f64)),
+                    ("max_chunk", num(w.max_chunk as f64)),
+                    ("stage_batch", num(w.stage_batch as f64)),
+                    ("padding_waste", num(w.padding_waste())),
+                ])
+            })
+            .collect(),
+    );
+    let mut fields = vec![
+        ("model", s(arch)),
+        ("dataset", s(kind.name())),
+        ("threshold", num(threshold as f64)),
+        ("queue_capacity", num(queue_capacity as f64)),
+        ("max_batch", num(max_batch as f64)),
+        ("batch_wait_us", num(batch_wait_us as f64)),
+        ("bench", report.to_json()),
+        ("worker_stats", worker_stats),
+    ];
+    if let Some(base) = &baseline {
+        fields.push((
+            "baseline",
+            obj(vec![
+                ("requests", num(base.requests as f64)),
+                ("accuracy", num(base.accuracy)),
+                ("p_exit1", num(base.p_exit1)),
+                ("p_exit2", num(base.p_exit2)),
+                ("p50_us", num(base.latency_us.p50())),
+                ("p95_us", num(base.latency_us.p95())),
+                ("p99_us", num(base.latency_us.p99())),
+                ("throughput_rps", num(base.throughput_rps)),
+            ]),
+        ));
+        fields.push((
+            "speedup_vs_single_stream",
+            num(report.throughput_rps / base.throughput_rps.max(1e-9)),
+        ));
+    }
+    ctx.reporter.write("serve_bench.json", &obj(fields).to_string())?;
     Ok(())
 }

@@ -9,7 +9,7 @@
 
 use std::collections::BTreeMap;
 use std::path::Path;
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::{anyhow, Context, Result};
 
@@ -62,6 +62,10 @@ pub struct ArchManifest {
     pub train_batch: usize,
     pub eval_batch: usize,
     pub stage_batch: usize,
+    /// All batch sizes the staged serving graphs were lowered at (always
+    /// contains 1; larger entries are the micro-batched variants with
+    /// graph tags like `stage1_b8`).
+    pub stage_batches: Vec<usize>,
     pub stage_h1_shape: Vec<usize>,
     pub stage_h2_shape: Vec<usize>,
 }
@@ -71,7 +75,7 @@ pub struct Manifest {
     pub num_classes: usize,
     pub input_hw: usize,
     pub input_c: usize,
-    pub archs: BTreeMap<String, Rc<ArchManifest>>,
+    pub archs: BTreeMap<String, Arc<ArchManifest>>,
     /// kernel bench name -> artifact file.
     pub kernels: BTreeMap<String, String>,
 }
@@ -89,7 +93,7 @@ impl Manifest {
         let input = j.req("input")?;
         let mut archs = BTreeMap::new();
         for (name, aj) in j.req("archs")?.as_obj().ok_or_else(|| anyhow!("archs not an object"))? {
-            archs.insert(name.clone(), Rc::new(parse_arch(aj)?));
+            archs.insert(name.clone(), Arc::new(parse_arch(aj)?));
         }
         let mut kernels = BTreeMap::new();
         if let Some(kj) = j.get("kernels").and_then(|k| k.as_obj()) {
@@ -108,7 +112,7 @@ impl Manifest {
         })
     }
 
-    pub fn arch(&self, name: &str) -> Result<Rc<ArchManifest>> {
+    pub fn arch(&self, name: &str) -> Result<Arc<ArchManifest>> {
         self.archs
             .get(name)
             .cloned()
@@ -172,6 +176,12 @@ fn parse_arch(j: &Json) -> Result<ArchManifest> {
         train_batch: j.req("train_batch")?.as_usize().unwrap_or(32),
         eval_batch: j.req("eval_batch")?.as_usize().unwrap_or(64),
         stage_batch: j.req("stage_batch")?.as_usize().unwrap_or(1),
+        // Absent in pre-micro-batching manifests: batch-1 only.
+        stage_batches: j
+            .get("stage_batches")
+            .and_then(|a| a.as_arr())
+            .map(|a| a.iter().filter_map(|d| d.as_usize()).collect())
+            .unwrap_or_else(|| vec![1]),
         stage_h1_shape: usz_arr("stage_h1_shape")?,
         stage_h2_shape: usz_arr("stage_h2_shape")?,
     })
@@ -205,6 +215,28 @@ impl ArchManifest {
             .get(tag)
             .map(|s| s.as_str())
             .ok_or_else(|| anyhow!("arch `{}` has no graph `{tag}`", self.name))
+    }
+
+    /// Tag of a staged serving graph at the given batch size (`stage1` at
+    /// batch 1, `stage1_b8` at batch 8, ...).
+    pub fn stage_graph_tag(stage: u8, batch: usize) -> String {
+        if batch <= 1 {
+            format!("stage{stage}")
+        } else {
+            format!("stage{stage}_b{batch}")
+        }
+    }
+
+    /// Largest lowered stage batch size that is <= `cap` (1 when only the
+    /// batch-1 graphs exist).
+    pub fn best_stage_batch(&self, cap: usize) -> usize {
+        self.stage_batches
+            .iter()
+            .copied()
+            .filter(|&b| b <= cap && self.graphs.contains_key(&Self::stage_graph_tag(1, b)))
+            .max()
+            .unwrap_or(1)
+            .max(1)
     }
 
     pub fn num_params(&self) -> usize {
@@ -277,7 +309,7 @@ pub struct StorageExtras {
 
 #[derive(Clone)]
 pub struct ModelState {
-    pub arch: Rc<ArchManifest>,
+    pub arch: Arc<ArchManifest>,
     pub params: Vec<Tensor>,
     pub momenta: Vec<Tensor>,
     pub masks: Vec<Tensor>,
@@ -291,7 +323,7 @@ pub struct ModelState {
 impl ModelState {
     /// Host-side init (unit tests / no-artifact paths): He-normal weights,
     /// zero biases — mirrors `Net.init_params` in archs.py.
-    pub fn init_host(arch: Rc<ArchManifest>, seed: u64) -> ModelState {
+    pub fn init_host(arch: Arc<ArchManifest>, seed: u64) -> ModelState {
         let mut rng = Rng::new(seed);
         let mut params = Vec::with_capacity(arch.param_shapes.len());
         for (li, l) in arch.layers.iter().enumerate() {
@@ -394,7 +426,7 @@ impl ModelState {
             .with_context(|| format!("saving state to {}", path.as_ref().display()))
     }
 
-    pub fn load<P: AsRef<Path>>(path: P, arch: Rc<ArchManifest>) -> Result<ModelState> {
+    pub fn load<P: AsRef<Path>>(path: P, arch: Arc<ArchManifest>) -> Result<ModelState> {
         let bytes = std::fs::read(path.as_ref())
             .with_context(|| format!("loading state from {}", path.as_ref().display()))?;
         let nl = bytes
@@ -660,7 +692,7 @@ impl<'a> Accountant<'a> {
 mod tests {
     use super::*;
 
-    fn toy_arch() -> Rc<ArchManifest> {
+    fn toy_arch() -> Arc<ArchManifest> {
         let layers = vec![
             LayerDesc {
                 name: "c1".into(),
@@ -702,7 +734,7 @@ mod tests {
                 segment: "exit1".into(),
             },
         ];
-        Rc::new(ArchManifest {
+        Arc::new(ArchManifest {
             name: "toy".into(),
             num_classes: 4,
             param_shapes: vec![
@@ -719,6 +751,7 @@ mod tests {
             train_batch: 2,
             eval_batch: 2,
             stage_batch: 1,
+            stage_batches: vec![1],
             stage_h1_shape: vec![1, 8, 8, 8],
             stage_h2_shape: vec![1, 8, 8, 8],
         })
@@ -808,6 +841,32 @@ mod tests {
         assert_eq!(st2.exits.thresholds, Some((0.8, 0.7)));
         assert!(st2.exits.trained);
         assert_eq!(st2.history, vec!["quantize(2w8a)".to_string()]);
+    }
+
+    #[test]
+    fn model_state_is_send_and_sync() {
+        // Compile-enforced: worker threads in serve::worker move ModelState
+        // (and everything it holds) across threads.
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<ModelState>();
+        assert_send_sync::<ArchManifest>();
+        assert_send_sync::<Manifest>();
+    }
+
+    #[test]
+    fn stage_graph_tags_and_best_batch() {
+        assert_eq!(ArchManifest::stage_graph_tag(1, 1), "stage1");
+        assert_eq!(ArchManifest::stage_graph_tag(2, 8), "stage2_b8");
+        let mut arch = (*toy_arch()).clone();
+        arch.stage_batches = vec![1, 4, 8];
+        arch.graphs.insert("stage1_b4".into(), "f4".into());
+        arch.graphs.insert("stage1_b8".into(), "f8".into());
+        assert_eq!(arch.best_stage_batch(16), 8);
+        assert_eq!(arch.best_stage_batch(7), 4);
+        assert_eq!(arch.best_stage_batch(1), 1);
+        // A declared batch without a lowered graph is ignored.
+        arch.graphs.remove("stage1_b8");
+        assert_eq!(arch.best_stage_batch(16), 4);
     }
 
     #[test]

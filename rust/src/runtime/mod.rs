@@ -4,20 +4,31 @@
 //! Python/JAX only runs in the compile path (`make artifacts`); at
 //! experiment time this module is the only bridge to XLA.  Interchange is
 //! HLO *text* — see DESIGN.md and python/compile/aot.py for why.
+//!
+//! # Threading model (see DESIGN.md §Serving)
+//!
+//! The PJRT client and its loaded executables are raw FFI handles and are
+//! *not* `Send`: an [`Engine`] is therefore a **per-thread** object.  All
+//! host-side state around it — [`RuntimeStats`] snapshots, the executable
+//! cache, tensors, `ModelState`, the manifest — is `Arc`-based and
+//! thread-safe, so the multi-worker serving pool (`serve::worker`) gives
+//! each worker thread its own `Engine` over the shared artifacts directory
+//! and moves only `Send` data (jobs, tensors, model state) across threads.
+//! Within one engine, stats counters are atomics and the cache is behind a
+//! `Mutex`, so nothing in this module assumes single-threaded use.
 
-use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::rc::Rc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::{Context, Result};
 
 use crate::tensor::Tensor;
 
-/// Cumulative runtime counters (single-threaded coordinator; a RefCell is
-/// plenty).  Used by EXPERIMENTS.md §Perf to split dispatch overhead from
-/// XLA execute time.
+/// Cumulative runtime counters (snapshot form).  Used by EXPERIMENTS.md
+/// §Perf to split dispatch overhead from XLA execute time.
 #[derive(Debug, Default, Clone)]
 pub struct RuntimeStats {
     pub executions: u64,
@@ -26,11 +37,39 @@ pub struct RuntimeStats {
     pub download_ns: u64,
 }
 
+/// Shared mutable counters: atomics so executables can record from any
+/// thread that owns their engine without locks on the hot path.
+#[derive(Debug, Default)]
+struct StatsCell {
+    executions: AtomicU64,
+    execute_ns: AtomicU64,
+    upload_ns: AtomicU64,
+    download_ns: AtomicU64,
+}
+
+impl StatsCell {
+    fn snapshot(&self) -> RuntimeStats {
+        RuntimeStats {
+            executions: self.executions.load(Ordering::Relaxed),
+            execute_ns: self.execute_ns.load(Ordering::Relaxed),
+            upload_ns: self.upload_ns.load(Ordering::Relaxed),
+            download_ns: self.download_ns.load(Ordering::Relaxed),
+        }
+    }
+
+    fn reset(&self) {
+        self.executions.store(0, Ordering::Relaxed);
+        self.execute_ns.store(0, Ordering::Relaxed);
+        self.upload_ns.store(0, Ordering::Relaxed);
+        self.download_ns.store(0, Ordering::Relaxed);
+    }
+}
+
 /// A compiled executable plus IO bookkeeping.
 pub struct Executable {
     exe: xla::PjRtLoadedExecutable,
     pub name: String,
-    stats: Rc<RefCell<RuntimeStats>>,
+    stats: Arc<StatsCell>,
 }
 
 impl Executable {
@@ -39,20 +78,23 @@ impl Executable {
     /// All our graphs are lowered with `return_tuple=True`, so PJRT hands
     /// back a single tuple buffer which we decompose into leaves.
     pub fn run(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
-        let mut st = self.stats.borrow_mut();
         let t0 = Instant::now();
         let literals: Vec<xla::Literal> =
             inputs.iter().map(|t| tensor_to_literal(t)).collect::<Result<_>>()?;
         let t1 = Instant::now();
-        st.upload_ns += (t1 - t0).as_nanos() as u64;
+        self.stats
+            .upload_ns
+            .fetch_add((t1 - t0).as_nanos() as u64, Ordering::Relaxed);
 
         let out = self
             .exe
             .execute::<xla::Literal>(&literals)
             .with_context(|| format!("executing `{}`", self.name))?;
         let t2 = Instant::now();
-        st.executions += 1;
-        st.execute_ns += (t2 - t1).as_nanos() as u64;
+        self.stats.executions.fetch_add(1, Ordering::Relaxed);
+        self.stats
+            .execute_ns
+            .fetch_add((t2 - t1).as_nanos() as u64, Ordering::Relaxed);
 
         let lit = out[0][0]
             .to_literal_sync()
@@ -62,18 +104,22 @@ impl Executable {
             .into_iter()
             .map(|l| literal_to_tensor(&l))
             .collect::<Result<Vec<_>>>()?;
-        st.download_ns += t2.elapsed().as_nanos() as u64;
+        self.stats
+            .download_ns
+            .fetch_add(t2.elapsed().as_nanos() as u64, Ordering::Relaxed);
         Ok(tensors)
     }
 }
 
 /// The PJRT engine: one CPU client + an executable cache keyed by artifact
 /// file name (compilation is seconds; every experiment reuses the cache).
+///
+/// One engine per thread — see the module-level threading notes.
 pub struct Engine {
     client: xla::PjRtClient,
     artifacts_dir: PathBuf,
-    cache: RefCell<HashMap<String, Rc<Executable>>>,
-    stats: Rc<RefCell<RuntimeStats>>,
+    cache: Mutex<HashMap<String, Arc<Executable>>>,
+    stats: Arc<StatsCell>,
 }
 
 impl Engine {
@@ -82,8 +128,8 @@ impl Engine {
         Ok(Engine {
             client,
             artifacts_dir: artifacts_dir.as_ref().to_path_buf(),
-            cache: RefCell::new(HashMap::new()),
-            stats: Rc::new(RefCell::new(RuntimeStats::default())),
+            cache: Mutex::new(HashMap::new()),
+            stats: Arc::new(StatsCell::default()),
         })
     }
 
@@ -96,16 +142,16 @@ impl Engine {
     }
 
     pub fn stats(&self) -> RuntimeStats {
-        self.stats.borrow().clone()
+        self.stats.snapshot()
     }
 
     pub fn reset_stats(&self) {
-        *self.stats.borrow_mut() = RuntimeStats::default();
+        self.stats.reset();
     }
 
     /// Load + compile an HLO-text artifact (cached).
-    pub fn load(&self, file: &str) -> Result<Rc<Executable>> {
-        if let Some(e) = self.cache.borrow().get(file) {
+    pub fn load(&self, file: &str) -> Result<Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(file) {
             return Ok(e.clone());
         }
         let path = self.artifacts_dir.join(file);
@@ -123,12 +169,12 @@ impl Engine {
         if dt.as_millis() > 500 {
             eprintln!("[runtime] compiled {file} in {:.1}s", dt.as_secs_f64());
         }
-        let exec = Rc::new(Executable {
+        let exec = Arc::new(Executable {
             exe,
             name: file.to_string(),
             stats: self.stats.clone(),
         });
-        self.cache.borrow_mut().insert(file.to_string(), exec.clone());
+        self.cache.lock().unwrap().insert(file.to_string(), exec.clone());
         Ok(exec)
     }
 }
@@ -172,5 +218,14 @@ mod tests {
         let t2 = literal_to_tensor(&l).unwrap();
         assert_eq!(t2.shape, Vec::<usize>::new());
         assert_eq!(t2.data, vec![3.5]);
+    }
+
+    #[test]
+    fn stats_snapshot_starts_zero() {
+        let c = StatsCell::default();
+        c.executions.fetch_add(3, Ordering::Relaxed);
+        assert_eq!(c.snapshot().executions, 3);
+        c.reset();
+        assert_eq!(c.snapshot().executions, 0);
     }
 }

@@ -1,0 +1,183 @@
+//! Dynamic micro-batching: group requests that are waiting on the same
+//! stage into one padded PJRT execute.
+//!
+//! The policy is the classic serving trade-off: wait up to `max_wait` for
+//! up to `max_batch` requests, then run with whatever arrived.  At low
+//! load a request goes straight through at batch 1 (no added latency
+//! beyond `max_wait`); at high load batches fill instantly and throughput
+//! scales with the batched graphs' efficiency.
+//!
+//! Stage graphs are AOT-lowered at *fixed* batch sizes (batch shape is
+//! baked into the HLO), so a drained group is chunked to the lowered stage
+//! batch and the last partial chunk is padded by repeating its final row;
+//! padded rows are computed and discarded.  When no batched artifacts
+//! exist the planner degrades to batch-1 chunks — the scheduler never
+//! requires re-lowering to run.
+
+use std::time::{Duration, Instant};
+
+use super::queue::{Pop, Queue};
+
+/// Micro-batching knobs.
+#[derive(Debug, Clone)]
+pub struct BatchPolicy {
+    /// Most requests grouped into one drain (>= 1).
+    pub max_batch: usize,
+    /// How long the drain waits for stragglers after the first request.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// Block for the next request, then accumulate up to `policy.max_batch`
+/// items or until `policy.max_wait` elapses.  Empty result means the queue
+/// closed and drained.
+pub fn drain_batch<T>(q: &Queue<T>, policy: &BatchPolicy) -> Vec<T> {
+    let mut out = Vec::with_capacity(policy.max_batch.min(64));
+    match q.pop() {
+        Some(t) => out.push(t),
+        None => return out,
+    }
+    let deadline = Instant::now() + policy.max_wait;
+    while out.len() < policy.max_batch {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match q.pop_timeout(deadline - now) {
+            Pop::Item(t) => out.push(t),
+            Pop::TimedOut | Pop::Closed => break,
+        }
+    }
+    out
+}
+
+/// Split `n` same-stage requests into executable chunks given the lowered
+/// stage batch `b`: full chunks of `b`, then one padded partial chunk
+/// (its true occupancy is returned; padding = b - occupancy), except a
+/// trailing single request which runs on the cheaper batch-1 graph.
+///
+/// With `b == 1` (no batched artifacts) every chunk is a singleton.
+pub fn plan_chunks(n: usize, b: usize) -> Vec<usize> {
+    assert!(b >= 1, "stage batch must be >= 1");
+    if b == 1 {
+        return vec![1; n];
+    }
+    let mut chunks = Vec::new();
+    let mut left = n;
+    while left > 0 {
+        let take = left.min(b);
+        chunks.push(take);
+        left -= take;
+    }
+    chunks
+}
+
+/// (useful, executed) row counts of a plan at stage batch `b`: useful rows
+/// carry real requests; executed rows include padding (a chunk of 1 runs
+/// on the batch-1 graph, everything else pads to `b`).  Workers accumulate
+/// these into `WorkerStats` so batching overhead is visible, not hidden.
+pub fn plan_rows(chunks: &[usize], b: usize) -> (usize, usize) {
+    let useful: usize = chunks.iter().sum();
+    let executed: usize = if b <= 1 {
+        useful
+    } else {
+        chunks.iter().map(|&c| if c == 1 { 1 } else { b }).sum()
+    };
+    (useful, executed)
+}
+
+/// Padding waste of a plan: rows computed then discarded, as a fraction of
+/// all rows executed.
+pub fn padding_waste(chunks: &[usize], b: usize) -> f64 {
+    let (useful, executed) = plan_rows(chunks, b);
+    if executed == 0 {
+        0.0
+    } else {
+        (executed - useful) as f64 / executed as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn plan_batch1_is_all_singletons() {
+        assert_eq!(plan_chunks(3, 1), vec![1, 1, 1]);
+        assert_eq!(plan_chunks(0, 1), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn plan_chunks_full_and_partial() {
+        assert_eq!(plan_chunks(8, 8), vec![8]);
+        assert_eq!(plan_chunks(10, 8), vec![8, 2]);
+        assert_eq!(plan_chunks(17, 8), vec![8, 8, 1]);
+        assert_eq!(plan_chunks(5, 8), vec![5]);
+    }
+
+    #[test]
+    fn padding_waste_accounts_batch1_fallback() {
+        // [8, 2]: executes 8 + 8 rows for 10 useful -> 6/16 waste.
+        assert_eq!(plan_rows(&[8, 2], 8), (10, 16));
+        assert!((padding_waste(&[8, 2], 8) - 6.0 / 16.0).abs() < 1e-12);
+        // Trailing singleton runs on the batch-1 graph: zero waste.
+        assert_eq!(plan_rows(&[8, 1], 8), (9, 9));
+        assert!((padding_waste(&[8, 1], 8) - 0.0).abs() < 1e-12);
+        assert_eq!(plan_rows(&[4], 1), (4, 4));
+        assert_eq!(padding_waste(&[4], 1), 0.0);
+        assert_eq!(padding_waste(&[], 8), 0.0);
+    }
+
+    #[test]
+    fn drain_collects_up_to_max_batch() {
+        let q = Queue::bounded(64);
+        for i in 0..10 {
+            q.try_push(i).unwrap();
+        }
+        let policy = BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(50) };
+        let got = drain_batch(&q, &policy);
+        assert_eq!(got, vec![0, 1, 2, 3]);
+        assert_eq!(q.len(), 6);
+    }
+
+    #[test]
+    fn drain_returns_partial_after_wait() {
+        let q = Queue::bounded(64);
+        q.try_push(1u32).unwrap();
+        let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(5) };
+        let t0 = Instant::now();
+        let got = drain_batch(&q, &policy);
+        assert_eq!(got, vec![1]);
+        assert!(t0.elapsed() >= Duration::from_millis(5));
+    }
+
+    #[test]
+    fn drain_empty_closed_queue_is_empty() {
+        let q: Queue<u32> = Queue::bounded(4);
+        q.close();
+        let got = drain_batch(&q, &BatchPolicy::default());
+        assert!(got.is_empty());
+    }
+
+    #[test]
+    fn drain_sees_items_from_other_threads() {
+        let q: Arc<Queue<u32>> = Arc::new(Queue::bounded(64));
+        let qc = q.clone();
+        let h = std::thread::spawn(move || {
+            for i in 0..3 {
+                std::thread::sleep(Duration::from_millis(2));
+                qc.try_push(i).unwrap();
+            }
+        });
+        let policy = BatchPolicy { max_batch: 3, max_wait: Duration::from_millis(200) };
+        let got = drain_batch(&q, &policy);
+        h.join().unwrap();
+        assert_eq!(got.len(), 3);
+    }
+}

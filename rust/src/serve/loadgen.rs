@@ -1,0 +1,389 @@
+//! Load generation against a [`WorkerPool`]: open-loop (Poisson arrivals
+//! at a target rate, with admission-control shedding) and closed-loop (a
+//! fixed concurrency window, the classic saturation probe).
+//!
+//! Open loop measures what users experience at a given offered rate —
+//! queueing delay shows up in the latency tail and overload shows up as
+//! shed requests, not as a silently slowed generator.  Closed loop
+//! measures capacity: the sustained requests/sec at a given concurrency.
+//! Both report per-request latency (p50/p95/p99), the exit distribution,
+//! accuracy against ground-truth labels, goodput under the SLO, and the
+//! request-queue depth distribution.
+
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use super::queue::{Pop, QueueStats};
+use super::slo::{self, Slo, SloReport};
+use super::worker::{ServeJob, ServeOutcome, WorkerPool};
+use crate::data::Dataset;
+use crate::util::json::{num, obj, s, Json};
+use crate::util::rng::Rng;
+use crate::util::stats::Summary;
+
+#[derive(Debug, Clone, Copy)]
+pub enum LoadMode {
+    /// Arrivals from a Poisson process at `rate_rps`, shed when the queue
+    /// is full.
+    Open { rate_rps: f64 },
+    /// `concurrency` requests kept in flight at all times.
+    Closed { concurrency: usize },
+}
+
+impl LoadMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            LoadMode::Open { .. } => "open",
+            LoadMode::Closed { .. } => "closed",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct LoadOpts {
+    pub mode: LoadMode,
+    pub requests: usize,
+    pub seed: u64,
+    pub slo: Slo,
+    /// Give up waiting for stragglers after this much silence (covers
+    /// worker death without hanging the bench).
+    pub drain_timeout: Duration,
+}
+
+impl Default for LoadOpts {
+    fn default() -> Self {
+        LoadOpts {
+            mode: LoadMode::Closed { concurrency: 16 },
+            requests: 1000,
+            seed: 42,
+            slo: Slo::default(),
+            drain_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// Everything one load run measured.
+#[derive(Debug, Clone)]
+pub struct BenchReport {
+    pub mode: String,
+    /// Workers that were actually alive for the run (not the configured
+    /// pool size — see `WorkerPool::live_workers`).
+    pub workers: usize,
+    pub offered: usize,
+    pub accepted: usize,
+    pub rejected: usize,
+    pub completed: usize,
+    /// Accepted but never completed (a worker died mid-run).
+    pub lost: usize,
+    pub accuracy: f64,
+    pub p_exit1: f64,
+    pub p_exit2: f64,
+    pub latency_us: Summary,
+    pub wall_secs: f64,
+    /// Completed requests per second of wall time.
+    pub throughput_rps: f64,
+    pub queue: QueueStats,
+    pub slo: SloReport,
+}
+
+impl BenchReport {
+    pub fn to_json(&self) -> Json {
+        let lat = obj(vec![
+            ("count", num(self.latency_us.len() as f64)),
+            ("mean_us", num(self.latency_us.mean())),
+            ("p50_us", num(self.latency_us.p50())),
+            ("p95_us", num(self.latency_us.p95())),
+            ("p99_us", num(self.latency_us.p99())),
+            ("min_us", num(self.latency_us.min())),
+            ("max_us", num(self.latency_us.max())),
+        ]);
+        let queue = obj(vec![
+            ("accepted", num(self.queue.accepted as f64)),
+            ("rejected", num(self.queue.rejected as f64)),
+            ("mean_depth", num(self.queue.mean_depth)),
+            ("max_depth", num(self.queue.max_depth as f64)),
+        ]);
+        let slo = obj(vec![
+            ("latency_ms", num(self.slo.slo_ms)),
+            ("attained", num(self.slo.attained as f64)),
+            ("attainment", num(self.slo.attainment)),
+            ("goodput_rps", num(self.slo.goodput_rps)),
+        ]);
+        obj(vec![
+            ("mode", s(&self.mode)),
+            ("workers", num(self.workers as f64)),
+            ("offered", num(self.offered as f64)),
+            ("accepted", num(self.accepted as f64)),
+            ("rejected", num(self.rejected as f64)),
+            ("completed", num(self.completed as f64)),
+            ("lost", num(self.lost as f64)),
+            ("accuracy", num(self.accuracy)),
+            ("p_exit1", num(self.p_exit1)),
+            ("p_exit2", num(self.p_exit2)),
+            ("wall_secs", num(self.wall_secs)),
+            ("throughput_rps", num(self.throughput_rps)),
+            ("latency", lat),
+            ("queue", queue),
+            ("slo", slo),
+        ])
+    }
+
+    pub fn summary_line(&self) -> String {
+        format!(
+            "{} load, {} workers: {}/{} ok ({} shed, {} lost)  acc {:.2}%  exit1 {:.0}% exit2 {:.0}%  \
+             p50 {:.0}µs p95 {:.0}µs p99 {:.0}µs  {:.0} rps  goodput {:.0} rps @ {:.0}ms SLO  \
+             queue depth mean {:.1} max {}",
+            self.mode,
+            self.workers,
+            self.completed,
+            self.offered,
+            self.rejected,
+            self.lost,
+            self.accuracy * 100.0,
+            self.p_exit1 * 100.0,
+            self.p_exit2 * 100.0,
+            self.latency_us.p50(),
+            self.latency_us.p95(),
+            self.latency_us.p99(),
+            self.throughput_rps,
+            self.slo.goodput_rps,
+            self.slo.slo_ms,
+            self.queue.mean_depth,
+            self.queue.max_depth,
+        )
+    }
+}
+
+struct Recorder {
+    latency_us: Summary,
+    completed: usize,
+    correct: usize,
+    labelled: usize,
+    n1: usize,
+    n2: usize,
+}
+
+impl Recorder {
+    fn new() -> Recorder {
+        Recorder { latency_us: Summary::default(), completed: 0, correct: 0, labelled: 0, n1: 0, n2: 0 }
+    }
+
+    fn record(&mut self, o: &ServeOutcome) {
+        self.completed += 1;
+        self.latency_us.push(o.latency_us);
+        if let Some(label) = o.label {
+            self.labelled += 1;
+            self.correct += (o.pred == label) as usize;
+        }
+        match o.stage {
+            1 => self.n1 += 1,
+            2 => self.n2 += 1,
+            _ => {}
+        }
+    }
+}
+
+/// Drive `opts.requests` requests drawn from `ds` through the pool.
+/// Call after `pool.wait_ready(..)` so compile time doesn't pollute the
+/// measurement.
+pub fn run(pool: &WorkerPool, ds: &Dataset, opts: &LoadOpts) -> Result<BenchReport> {
+    if ds.is_empty() {
+        return Err(anyhow!("load generation needs a non-empty dataset"));
+    }
+    let mut rng = Rng::new(opts.seed ^ 0x10adc0de);
+    let mut rec = Recorder::new();
+    let mut accepted = 0usize;
+    let mut rejected = 0usize;
+    // Reports must be per-run even on a reused pool (benches warm up on
+    // the same pool): window the queue stats between two snapshots, and
+    // discard stale outcomes a previous run gave up waiting for — counting
+    // them here would underflow this run's in-flight accounting.
+    let queue_start = pool.queue_stats();
+    while let Pop::Item(_) = pool.outcomes().pop_timeout(Duration::ZERO) {}
+    let mut gave_up = false;
+    let start = Instant::now();
+
+    match opts.mode {
+        LoadMode::Open { rate_rps } => {
+            let rate = rate_rps.max(1e-3);
+            let mut next = Instant::now();
+            for r in 0..opts.requests {
+                let i = rng.below(ds.len());
+                let (x, _) = ds.batch(&[i]);
+                let now = Instant::now();
+                if next > now {
+                    std::thread::sleep(next - now);
+                }
+                let job = ServeJob::new(r as u64, x, Some(ds.labels[i]));
+                if pool.try_submit(job).is_ok() {
+                    accepted += 1;
+                } else {
+                    rejected += 1;
+                }
+                let u = (rng.f32() as f64).max(1e-7);
+                next += Duration::from_secs_f64(-u.ln() / rate);
+                // Drain completed results opportunistically so the outcome
+                // queue stays small at high rates.
+                while let Pop::Item(o) = pool.outcomes().pop_timeout(Duration::ZERO) {
+                    rec.record(&o);
+                }
+            }
+        }
+        LoadMode::Closed { concurrency } => {
+            let window = concurrency.max(1);
+            let mut submitted = 0usize;
+            let mut in_flight = 0usize;
+            'run: while submitted < opts.requests || in_flight > 0 {
+                while in_flight < window && submitted < opts.requests {
+                    let i = rng.below(ds.len());
+                    let (x, _) = ds.batch(&[i]);
+                    let mut job = ServeJob::new(submitted as u64, x, Some(ds.labels[i]));
+                    // Never block on a full queue without a timeout: if the
+                    // queue is full (window > capacity, or workers dead),
+                    // make room by consuming an outcome first — a silent
+                    // pool here means the workers are gone.
+                    loop {
+                        match pool.try_submit(job) {
+                            Ok(()) => {
+                                submitted += 1;
+                                accepted += 1;
+                                in_flight += 1;
+                                break;
+                            }
+                            Err(j) => {
+                                job = j;
+                                match pool.outcomes().pop_timeout(opts.drain_timeout) {
+                                    Pop::Item(o) => {
+                                        rec.record(&o);
+                                        in_flight = in_flight.saturating_sub(1);
+                                    }
+                                    Pop::TimedOut => {
+                                        eprintln!(
+                                            "[loadgen] queue full and pool silent for {:?} — workers dead?",
+                                            opts.drain_timeout
+                                        );
+                                        gave_up = true;
+                                        break 'run;
+                                    }
+                                    Pop::Closed => break 'run,
+                                }
+                            }
+                        }
+                    }
+                }
+                if in_flight == 0 {
+                    continue;
+                }
+                match pool.outcomes().pop_timeout(opts.drain_timeout) {
+                    Pop::Item(o) => {
+                        rec.record(&o);
+                        in_flight = in_flight.saturating_sub(1);
+                    }
+                    Pop::TimedOut => {
+                        eprintln!(
+                            "[loadgen] {in_flight} requests silent for {:?} — workers dead?",
+                            opts.drain_timeout
+                        );
+                        gave_up = true;
+                        break;
+                    }
+                    Pop::Closed => break,
+                }
+            }
+        }
+    }
+
+    // Drain stragglers (open loop; closed loop exits drained, and after a
+    // timeout there is no point waiting the full window a second time).
+    while !gave_up && rec.completed < accepted {
+        match pool.outcomes().pop_timeout(opts.drain_timeout) {
+            Pop::Item(o) => rec.record(&o),
+            Pop::TimedOut => {
+                eprintln!(
+                    "[loadgen] gave up on {} in-flight requests after {:?}",
+                    accepted - rec.completed,
+                    opts.drain_timeout
+                );
+                break;
+            }
+            Pop::Closed => break,
+        }
+    }
+
+    let wall_secs = start.elapsed().as_secs_f64();
+    let lost = accepted.saturating_sub(rec.completed);
+    // Lost requests violate the SLO exactly like shed ones — both count
+    // against attainment (see slo::report).
+    let slo_report = slo::report(&rec.latency_us, rejected + lost, wall_secs, opts.slo);
+    Ok(BenchReport {
+        mode: opts.mode.name().to_string(),
+        workers: pool.live_workers(),
+        offered: opts.requests,
+        accepted,
+        rejected,
+        completed: rec.completed,
+        lost,
+        accuracy: if rec.labelled == 0 { 0.0 } else { rec.correct as f64 / rec.labelled as f64 },
+        p_exit1: if rec.completed == 0 { 0.0 } else { rec.n1 as f64 / rec.completed as f64 },
+        p_exit2: if rec.completed == 0 { 0.0 } else { rec.n2 as f64 / rec.completed as f64 },
+        latency_us: rec.latency_us,
+        wall_secs,
+        throughput_rps: rec.completed as f64 / wall_secs.max(1e-9),
+        queue: pool.queue_stats().since(&queue_start),
+        slo: slo_report,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_json_has_the_headline_fields() {
+        let mut lat = Summary::default();
+        for i in 0..100 {
+            lat.push(1000.0 + i as f64);
+        }
+        let slo_rep = slo::report(&lat, 5, 2.0, Slo { latency_ms: 50.0 });
+        let rep = BenchReport {
+            mode: "open".into(),
+            workers: 4,
+            offered: 105,
+            accepted: 100,
+            rejected: 5,
+            completed: 100,
+            lost: 0,
+            accuracy: 0.9,
+            p_exit1: 0.5,
+            p_exit2: 0.2,
+            latency_us: lat,
+            wall_secs: 2.0,
+            throughput_rps: 50.0,
+            queue: QueueStats {
+                accepted: 100,
+                rejected: 5,
+                mean_depth: 1.5,
+                max_depth: 7,
+                depth_sum: 150,
+            },
+            slo: slo_rep,
+        };
+        let j = rep.to_json();
+        let txt = j.to_string();
+        for key in [
+            "\"mode\"", "\"workers\"", "\"p50_us\"", "\"p95_us\"", "\"p99_us\"",
+            "\"goodput_rps\"", "\"mean_depth\"", "\"max_depth\"", "\"rejected\"", "\"accuracy\"",
+        ] {
+            assert!(txt.contains(key), "missing {key} in {txt}");
+        }
+        // Round-trip through the parser.
+        let parsed = Json::parse(&txt).unwrap();
+        assert_eq!(parsed.req("workers").unwrap().as_usize(), Some(4));
+        assert_eq!(
+            parsed.req("queue").unwrap().req("max_depth").unwrap().as_usize(),
+            Some(7)
+        );
+        assert!(rep.summary_line().contains("4 workers"));
+    }
+}

@@ -1,19 +1,41 @@
-//! Early-exit serving loop: the *dynamic* half of the chain, running on
-//! the staged AOT graphs so an exiting request genuinely skips the rest of
-//! the network (batch-1 stage graphs; see aot.py).
+//! Serving subsystem: the *dynamic* half of the chain, running on the
+//! staged AOT graphs so an exiting request genuinely skips the rest of the
+//! network.
 //!
-//! This is the runtime component the paper's early-exit technique implies:
-//! compression decisions happen per-request at inference time, in the
-//! coordinator, with the confidence thresholds as the knob.
+//! The paper's early-exit technique is a serving-time compression — the
+//! per-request exit decision is the one knob applied at inference — so
+//! this is a full third pillar next to `chain` and `exp`:
+//!
+//! * [`queue`]   — bounded MPMC request queue with admission control,
+//! * [`batcher`] — dynamic micro-batching (pad to the lowered stage batch,
+//!   batch-1 fallback when batched artifacts are absent),
+//! * [`worker`]  — a pool of N threads, each owning its own PJRT engine
+//!   (see `runtime` for why engines are per-thread),
+//! * [`loadgen`] — open-/closed-loop load generation with p50/p95/p99
+//!   latency, exit-distribution, goodput-under-SLO and queue-depth stats,
+//! * [`slo`]     — the latency-objective accounting.
+//!
+//! [`StageRunner`] is the shared execution core: it owns the staged
+//! executables plus the *invariant* operand prefix (params ++ masks ++
+//! qbits — only `x` changes per request), so the hot path never rebuilds
+//! the full operand list per stage.  [`Server`] keeps the simple
+//! synchronous single-stream API on top of it.
 
+pub mod batcher;
+pub mod loadgen;
+pub mod queue;
+pub mod slo;
+pub mod worker;
+
+use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::{ensure, Result};
+use anyhow::{ensure, Context, Result};
 
 use crate::data::Dataset;
-use crate::models::ModelState;
-use crate::runtime::Engine;
-use crate::tensor::Tensor;
+use crate::models::{ArchManifest, ModelState};
+use crate::runtime::{Engine, Executable};
+use crate::tensor::{argmax_slice, Tensor};
 use crate::util::stats::Summary;
 
 #[derive(Debug, Clone)]
@@ -27,38 +49,169 @@ pub struct ServeReport {
     pub throughput_rps: f64,
 }
 
-fn max_conf(row: &[f32]) -> f32 {
+/// Max-softmax confidence of one logits row (softmax of the max logit,
+/// computed stably).
+pub(crate) fn max_conf(row: &[f32]) -> f32 {
     let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
     let denom: f32 = row.iter().map(|x| (x - m).exp()).sum();
     1.0 / denom
 }
 
-pub struct Server<'e> {
-    engine: &'e Engine,
-    state: ModelState,
-    stage1: std::rc::Rc<crate::runtime::Executable>,
-    stage2: std::rc::Rc<crate::runtime::Executable>,
-    stage3: std::rc::Rc<crate::runtime::Executable>,
+// ----- row plumbing for padded micro-batches --------------------------------
+
+/// Stack `n` single-sample tensors `[1, rest..]` into `[n, rest..]`.
+fn concat_rows(xs: &[&Tensor]) -> Tensor {
+    let first = xs[0];
+    debug_assert_eq!(first.shape.first(), Some(&1));
+    let mut shape = first.shape.clone();
+    shape[0] = xs.len();
+    let mut data = Vec::with_capacity(first.len() * xs.len());
+    for x in xs {
+        debug_assert_eq!(x.shape, first.shape);
+        data.extend_from_slice(&x.data);
+    }
+    Tensor::new(shape, data)
+}
+
+/// Gather `rows` of `t` (`[b, rest..]`) into `[rows.len(), rest..]`.
+fn gather_rows(t: &Tensor, rows: &[usize]) -> Tensor {
+    let b = t.shape[0];
+    let row = t.len() / b;
+    let mut shape = t.shape.clone();
+    shape[0] = rows.len();
+    let mut data = Vec::with_capacity(row * rows.len());
+    for &r in rows {
+        data.extend_from_slice(&t.data[r * row..(r + 1) * row]);
+    }
+    Tensor::new(shape, data)
+}
+
+/// Pad `[m, rest..]` to `[b, rest..]` by repeating the last row (padding
+/// rows are computed by the graph and discarded).
+fn pad_rows(t: &Tensor, b: usize) -> Tensor {
+    let m = t.shape[0];
+    debug_assert!(m >= 1 && m <= b);
+    let row = t.len() / m;
+    let mut shape = t.shape.clone();
+    shape[0] = b;
+    let mut data = Vec::with_capacity(row * b);
+    data.extend_from_slice(&t.data);
+    for _ in m..b {
+        data.extend_from_slice(&t.data[(m - 1) * row..m * row]);
+    }
+    Tensor::new(shape, data)
+}
+
+/// First `m` rows of `[b, rest..]`.
+fn take_rows(t: &Tensor, m: usize) -> Tensor {
+    let b = t.shape[0];
+    debug_assert!(m <= b);
+    let row = t.len() / b;
+    let mut shape = t.shape.clone();
+    shape[0] = m;
+    Tensor::new(shape, t.data[..m * row].to_vec())
+}
+
+// ----- stage executables ----------------------------------------------------
+
+struct BatchedStages {
+    batch: usize,
+    exes: [Arc<Executable>; 3],
+}
+
+struct StageSet {
+    /// Batch-1 graphs: always present (the seed contract).
+    b1: [Arc<Executable>; 3],
+    /// Micro-batched graphs, when the manifest declares them AND the
+    /// artifacts compile; absent -> batch-1 fallback.
+    batched: Option<BatchedStages>,
+}
+
+/// The serving execution core: staged executables + the shared model
+/// state.  One `StageRunner` per thread (its executables belong to that
+/// thread's engine); the model state is shared via `Arc`, so an N-worker
+/// pool holds ONE copy of the weights, not N.
+pub struct StageRunner {
+    stages: StageSet,
+    /// Shared source of the invariant operands (params ++ masks); the
+    /// per-request operand list is built once per request and stages 2/3
+    /// only swap the final slot.
+    state: Arc<ModelState>,
     qbw: Tensor,
     qba: Tensor,
 }
 
-impl<'e> Server<'e> {
-    pub fn new(engine: &'e Engine, state: ModelState) -> Result<Server<'e>> {
-        let arch = state.arch.clone();
-        Ok(Server {
-            stage1: engine.load(arch.graph("stage1")?)?,
-            stage2: engine.load(arch.graph("stage2")?)?,
-            stage3: engine.load(arch.graph("stage3")?)?,
-            qbw: Tensor::scalar(state.qbits.weight),
-            qba: Tensor::scalar(state.qbits.act),
-            engine,
-            state,
-        })
+impl StageRunner {
+    /// Load the staged graphs for `state` on `engine`.  `max_batch` caps
+    /// which lowered stage batch is used (1 disables micro-batching).
+    pub fn new(engine: &Engine, state: Arc<ModelState>, max_batch: usize) -> Result<StageRunner> {
+        let arch = &state.arch;
+        let b1 = [
+            engine.load(arch.graph("stage1")?)?,
+            engine.load(arch.graph("stage2")?)?,
+            engine.load(arch.graph("stage3")?)?,
+        ];
+        // Walk the declared batch ladder downward: a half-lowered batch
+        // (e.g. stage1_b8 present but stage2_b8 missing from partially
+        // regenerated artifacts) must fall back to the next smaller fully
+        // lowered batch, not all the way to batch-1.
+        let mut batched = None;
+        let mut cap = max_batch.max(1);
+        loop {
+            let best = arch.best_stage_batch(cap);
+            if best <= 1 {
+                break;
+            }
+            match Self::load_batched(engine, arch, best) {
+                Ok(exes) => {
+                    batched = Some(BatchedStages { batch: best, exes });
+                    break;
+                }
+                Err(e) => {
+                    eprintln!("[serve] batched stage graphs (b{best}) unavailable: {e:#}");
+                    cap = best - 1;
+                }
+            }
+        }
+        let qbw = Tensor::scalar(state.qbits.weight);
+        let qba = Tensor::scalar(state.qbits.act);
+        Ok(StageRunner { stages: StageSet { b1, batched }, state, qbw, qba })
     }
 
-    fn stage_inputs<'a>(&'a self, x: &'a Tensor) -> Vec<&'a Tensor> {
-        let mut v: Vec<&Tensor> = Vec::with_capacity(self.state.params.len() + 8);
+    fn load_batched(
+        engine: &Engine,
+        arch: &ArchManifest,
+        batch: usize,
+    ) -> Result<[Arc<Executable>; 3]> {
+        let mut exes = Vec::with_capacity(3);
+        for s in 1..=3u8 {
+            let tag = ArchManifest::stage_graph_tag(s, batch);
+            let file = arch.graph(&tag)?;
+            exes.push(
+                engine
+                    .load(file)
+                    .with_context(|| format!("loading batched stage graph `{tag}`"))?,
+            );
+        }
+        Ok([exes[0].clone(), exes[1].clone(), exes[2].clone()])
+    }
+
+    /// The stage batch the runner actually executes at (1 = unbatched).
+    pub fn stage_batch(&self) -> usize {
+        self.stages.batched.as_ref().map(|b| b.batch).unwrap_or(1)
+    }
+
+    /// Calibrated thresholds recorded on the model state, if any.
+    pub fn thresholds_hint(&self) -> Option<(f32, f32)> {
+        self.state.exits.thresholds
+    }
+
+    /// Operand list for one stage call: invariant operands (params ++
+    /// masks ++ qbits, referenced out of the shared state — never copied)
+    /// + `x` last.
+    fn input_refs<'a>(&'a self, x: &'a Tensor) -> Vec<&'a Tensor> {
+        let mut v: Vec<&Tensor> =
+            Vec::with_capacity(self.state.params.len() + self.state.masks.len() + 3);
         v.extend(self.state.params.iter());
         v.extend(self.state.masks.iter());
         v.push(&self.qbw);
@@ -67,22 +220,157 @@ impl<'e> Server<'e> {
         v
     }
 
-    /// Serve one request; returns (prediction, exit_stage 1|2|3).
-    pub fn infer(&self, x: &Tensor, t1: f32, t2: f32) -> Result<(usize, u8)> {
-        let outs = self.stage1.run(&self.stage_inputs(x))?;
+    /// Execute stage `s` (0-based) on `hm` = `[m, rest..]` real rows.
+    /// `m == 1` uses the batch-1 graph; `m > 1` pads to the batched graph
+    /// (caller guarantees `m <=` the lowered stage batch).
+    fn exec_stage(&self, s: usize, hm: &Tensor) -> Result<Vec<Tensor>> {
+        let m = hm.shape[0];
+        if m == 1 {
+            let inputs = self.input_refs(hm);
+            return self.stages.b1[s].run(&inputs);
+        }
+        let batched = self
+            .stages
+            .batched
+            .as_ref()
+            .expect("multi-row exec_stage requires batched graphs");
+        ensure!(m <= batched.batch, "chunk of {m} exceeds stage batch {}", batched.batch);
+        let padded;
+        let href = if m == batched.batch {
+            hm
+        } else {
+            padded = pad_rows(hm, batched.batch);
+            &padded
+        };
+        let inputs = self.input_refs(href);
+        let outs = batched.exes[s].run(&inputs)?;
+        Ok(outs.iter().map(|t| take_rows(t, m)).collect())
+    }
+
+    /// Serve one request at batch 1; returns (prediction, exit_stage 1|2|3).
+    pub fn infer_one(&self, x: &Tensor, t1: f32, t2: f32) -> Result<(usize, u8)> {
+        // One operand-list build per request; stages 2/3 only swap the
+        // final slot (the invariant params/masks/qbits never rebuild).
+        let mut inputs = self.input_refs(x);
+        let outs = self.stages.b1[0].run(&inputs)?;
         ensure!(outs.len() == 2, "stage1 returned {} outputs", outs.len());
         let (e1, h1) = (&outs[0], &outs[1]);
         if max_conf(&e1.data) >= t1 {
             return Ok((e1.argmax(), 1));
         }
-        let outs = self.stage2.run(&self.stage_inputs(h1))?;
-        ensure!(outs.len() == 2, "stage2 returned {} outputs", outs.len());
-        let (e2, h2) = (&outs[0], &outs[1]);
+        *inputs.last_mut().unwrap() = h1;
+        let outs2 = self.stages.b1[1].run(&inputs)?;
+        ensure!(outs2.len() == 2, "stage2 returned {} outputs", outs2.len());
+        let (e2, h2) = (&outs2[0], &outs2[1]);
         if max_conf(&e2.data) >= t2 {
             return Ok((e2.argmax(), 2));
         }
-        let outs = self.stage3.run(&self.stage_inputs(h2))?;
-        Ok((outs[0].argmax(), 3))
+        *inputs.last_mut().unwrap() = h2;
+        let outs3 = self.stages.b1[2].run(&inputs)?;
+        Ok((outs3[0].argmax(), 3))
+    }
+
+    /// Serve one micro-batch (`xs.len() <=` stage batch when batched
+    /// graphs exist).  Requests that exit early genuinely skip the later
+    /// stages: survivors are regrouped (and re-padded) per stage, and a
+    /// single survivor drops to the cheaper batch-1 graph.
+    pub fn infer_chunk(&self, xs: &[&Tensor], t1: f32, t2: f32) -> Result<Vec<(usize, u8)>> {
+        let n = xs.len();
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        if n == 1 || self.stages.batched.is_none() {
+            return xs.iter().map(|x| self.infer_one(x, t1, t2)).collect();
+        }
+
+        let xb = concat_rows(xs);
+        let outs1 = self.exec_stage(0, &xb)?;
+        ensure!(outs1.len() == 2, "stage1 returned {} outputs", outs1.len());
+        let mut results = vec![(0usize, 0u8); n];
+        let mut live: Vec<usize> = Vec::new();
+        for i in 0..n {
+            let row = outs1[0].row(i);
+            if max_conf(row) >= t1 {
+                results[i] = (argmax_slice(row), 1);
+            } else {
+                live.push(i);
+            }
+        }
+        if !live.is_empty() {
+            let h1 = gather_rows(&outs1[1], &live);
+            let outs2 = self.exec_stage(1, &h1)?;
+            ensure!(outs2.len() == 2, "stage2 returned {} outputs", outs2.len());
+            let mut live2: Vec<(usize, usize)> = Vec::new(); // (row in outs2, request idx)
+            for (pos, &i) in live.iter().enumerate() {
+                let row = outs2[0].row(pos);
+                if max_conf(row) >= t2 {
+                    results[i] = (argmax_slice(row), 2);
+                } else {
+                    live2.push((pos, i));
+                }
+            }
+            if !live2.is_empty() {
+                let rows: Vec<usize> = live2.iter().map(|&(p, _)| p).collect();
+                let h2 = gather_rows(&outs2[1], &rows);
+                let outs3 = self.exec_stage(2, &h2)?;
+                for (pos2, &(_, i)) in live2.iter().enumerate() {
+                    let row = outs3[0].row(pos2);
+                    results[i] = (argmax_slice(row), 3);
+                }
+            }
+        }
+        Ok(results)
+    }
+
+    /// Serve an arbitrary number of requests, chunked to the stage batch.
+    pub fn infer_many(&self, xs: &[&Tensor], t1: f32, t2: f32) -> Result<Vec<(usize, u8)>> {
+        let b = self.stage_batch();
+        let mut out = Vec::with_capacity(xs.len());
+        let mut off = 0;
+        for c in batcher::plan_chunks(xs.len(), b) {
+            out.extend(self.infer_chunk(&xs[off..off + c], t1, t2)?);
+            off += c;
+        }
+        Ok(out)
+    }
+}
+
+// ----- synchronous single-stream server (the demo/baseline path) ------------
+
+pub struct Server<'e> {
+    engine: &'e Engine,
+    runner: StageRunner,
+}
+
+impl<'e> Server<'e> {
+    /// Batch-1 server (the `coc serve` baseline).
+    pub fn new(engine: &'e Engine, state: ModelState) -> Result<Server<'e>> {
+        Self::with_batching(engine, state, 1)
+    }
+
+    /// Server that micro-batches `infer_batch` calls up to `max_batch`
+    /// (uses the lowered batched stage graphs when available).
+    pub fn with_batching(engine: &'e Engine, state: ModelState, max_batch: usize) -> Result<Server<'e>> {
+        let runner = StageRunner::new(engine, Arc::new(state), max_batch)?;
+        Ok(Server { engine, runner })
+    }
+
+    pub fn state(&self) -> &ModelState {
+        &self.runner.state
+    }
+
+    pub fn runner(&self) -> &StageRunner {
+        &self.runner
+    }
+
+    /// Serve one request; returns (prediction, exit_stage 1|2|3).
+    pub fn infer(&self, x: &Tensor, t1: f32, t2: f32) -> Result<(usize, u8)> {
+        self.runner.infer_one(x, t1, t2)
+    }
+
+    /// Serve a group of requests through the micro-batched staged graphs.
+    pub fn infer_batch(&self, xs: &[&Tensor], t1: f32, t2: f32) -> Result<Vec<(usize, u8)>> {
+        self.runner.infer_many(xs, t1, t2)
     }
 
     /// Run a synchronous request stream drawn from `ds`.
@@ -113,5 +401,42 @@ impl<'e> Server<'e> {
             latency_us: lat,
             throughput_rps: n_requests as f64 / wall.max(1e-9),
         })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn row_helpers_roundtrip() {
+        // [3, 2] rows: (1,2), (3,4), (5,6)
+        let t = Tensor::new(vec![3, 2], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(t.row(1), &[3.0, 4.0]);
+        let g = gather_rows(&t, &[2, 0]);
+        assert_eq!(g.shape, vec![2, 2]);
+        assert_eq!(g.data, vec![5.0, 6.0, 1.0, 2.0]);
+        let p = pad_rows(&g, 4);
+        assert_eq!(p.shape, vec![4, 2]);
+        assert_eq!(&p.data[4..], &[1.0, 2.0, 1.0, 2.0]);
+        let back = take_rows(&p, 2);
+        assert_eq!(back.data, g.data);
+    }
+
+    #[test]
+    fn concat_unit_rows() {
+        let a = Tensor::new(vec![1, 2], vec![1.0, 2.0]);
+        let b = Tensor::new(vec![1, 2], vec![3.0, 4.0]);
+        let c = concat_rows(&[&a, &b]);
+        assert_eq!(c.shape, vec![2, 2]);
+        assert_eq!(c.data, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn argmax_and_conf_on_rows() {
+        assert_eq!(argmax_slice(&[0.1, 0.9, 0.3]), 1);
+        let c = max_conf(&[2.0, 0.0, 0.0]);
+        let want = (2.0f32).exp() / ((2.0f32).exp() + 2.0);
+        assert!((c - want).abs() < 1e-6);
     }
 }

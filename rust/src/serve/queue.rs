@@ -1,0 +1,360 @@
+//! Bounded MPMC queue with admission control — the front door of the
+//! serving subsystem.
+//!
+//! Built on `Mutex<VecDeque>` + two `Condvar`s (the offline crate set has
+//! no crossbeam); the contended section is a push/pop of one element, so a
+//! mutex is fine at the request rates the micro-batched workers sustain.
+//!
+//! Admission control: [`Queue::try_push`] fails fast when the queue is at
+//! capacity instead of letting latency grow without bound — rejected
+//! requests are counted and reported by `serve::loadgen` (load shedding,
+//! the standard open-loop serving discipline).  Queue depth is sampled at
+//! every accepted push so the serve report can show the depth distribution
+//! the worker pool actually ran at.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Outcome of a timed pop.
+#[derive(Debug)]
+pub enum Pop<T> {
+    Item(T),
+    /// Queue open but empty for the whole wait.
+    TimedOut,
+    /// Queue closed and drained — no more items will ever arrive.
+    Closed,
+}
+
+/// Aggregate queue statistics for the serving report.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct QueueStats {
+    pub accepted: u64,
+    /// Failed `try_push` attempts: open-loop load shedding, plus
+    /// backpressure retries when a closed-loop generator meets a full
+    /// queue (the generator's own `rejected` counter excludes retries).
+    pub rejected: u64,
+    /// Depth observed *after* each accepted push.
+    pub mean_depth: f64,
+    pub max_depth: usize,
+    /// Running sum behind `mean_depth` (exposed so callers can compute
+    /// per-window deltas from two snapshots).
+    pub depth_sum: u64,
+}
+
+impl QueueStats {
+    /// Stats for the window between `start` (an earlier snapshot of the
+    /// same queue) and `self`.  `max_depth` cannot be windowed from
+    /// snapshots and stays the lifetime maximum.
+    pub fn since(&self, start: &QueueStats) -> QueueStats {
+        let accepted = self.accepted.saturating_sub(start.accepted);
+        let depth_sum = self.depth_sum.saturating_sub(start.depth_sum);
+        QueueStats {
+            accepted,
+            rejected: self.rejected.saturating_sub(start.rejected),
+            mean_depth: if accepted == 0 { 0.0 } else { depth_sum as f64 / accepted as f64 },
+            max_depth: self.max_depth,
+            depth_sum,
+        }
+    }
+}
+
+struct Inner<T> {
+    q: VecDeque<T>,
+    closed: bool,
+    accepted: u64,
+    rejected: u64,
+    depth_sum: u64,
+    max_depth: usize,
+}
+
+pub struct Queue<T> {
+    capacity: usize,
+    inner: Mutex<Inner<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+}
+
+impl<T> Queue<T> {
+    pub fn bounded(capacity: usize) -> Queue<T> {
+        assert!(capacity > 0, "queue capacity must be positive");
+        Queue {
+            capacity,
+            inner: Mutex::new(Inner {
+                q: VecDeque::new(),
+                closed: false,
+                accepted: 0,
+                rejected: 0,
+                depth_sum: 0,
+                max_depth: 0,
+            }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+        }
+    }
+
+    /// Effectively-unbounded variant for result fan-in (consumers drain it
+    /// continuously; admission control lives on the request side).
+    pub fn unbounded() -> Queue<T> {
+        Queue::bounded(usize::MAX)
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    fn record_push(inner: &mut Inner<T>) {
+        inner.accepted += 1;
+        let depth = inner.q.len();
+        inner.depth_sum += depth as u64;
+        inner.max_depth = inner.max_depth.max(depth);
+    }
+
+    /// Admission-controlled push: `Err(t)` immediately when the queue is
+    /// full or closed (the item is handed back so the caller can count or
+    /// retry it).
+    pub fn try_push(&self, t: T) -> Result<(), T> {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.closed {
+            return Err(t);
+        }
+        if inner.q.len() >= self.capacity {
+            inner.rejected += 1;
+            return Err(t);
+        }
+        inner.q.push_back(t);
+        Self::record_push(&mut inner);
+        drop(inner);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking push: waits for space; `Err(t)` only if the queue closes
+    /// while waiting.
+    pub fn push(&self, t: T) -> Result<(), T> {
+        let mut inner = self.inner.lock().unwrap();
+        while inner.q.len() >= self.capacity && !inner.closed {
+            inner = self.not_full.wait(inner).unwrap();
+        }
+        if inner.closed {
+            return Err(t);
+        }
+        inner.q.push_back(t);
+        Self::record_push(&mut inner);
+        drop(inner);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking pop; `None` once the queue is closed *and* drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if let Some(t) = inner.q.pop_front() {
+                drop(inner);
+                self.not_full.notify_one();
+                return Some(t);
+            }
+            if inner.closed {
+                return None;
+            }
+            inner = self.not_empty.wait(inner).unwrap();
+        }
+    }
+
+    /// Pop with a deadline, for micro-batch accumulation.
+    pub fn pop_timeout(&self, timeout: Duration) -> Pop<T> {
+        let deadline = Instant::now() + timeout;
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if let Some(t) = inner.q.pop_front() {
+                drop(inner);
+                self.not_full.notify_one();
+                return Pop::Item(t);
+            }
+            if inner.closed {
+                return Pop::Closed;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Pop::TimedOut;
+            }
+            let (guard, res) = self.not_empty.wait_timeout(inner, deadline - now).unwrap();
+            inner = guard;
+            if res.timed_out() && inner.q.is_empty() {
+                return if inner.closed { Pop::Closed } else { Pop::TimedOut };
+            }
+        }
+    }
+
+    /// Close the queue: pending items stay poppable, new pushes fail, and
+    /// blocked poppers wake up.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap().closed
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn stats(&self) -> QueueStats {
+        let inner = self.inner.lock().unwrap();
+        QueueStats {
+            accepted: inner.accepted,
+            rejected: inner.rejected,
+            mean_depth: if inner.accepted == 0 {
+                0.0
+            } else {
+                inner.depth_sum as f64 / inner.accepted as f64
+            },
+            max_depth: inner.max_depth,
+            depth_sum: inner.depth_sum,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_order_single_thread() {
+        let q = Queue::bounded(4);
+        for i in 0..4 {
+            q.try_push(i).unwrap();
+        }
+        assert_eq!(q.len(), 4);
+        for i in 0..4 {
+            assert_eq!(q.pop(), Some(i));
+        }
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn admission_control_rejects_when_full() {
+        let q = Queue::bounded(2);
+        q.try_push(1).unwrap();
+        q.try_push(2).unwrap();
+        assert_eq!(q.try_push(3), Err(3));
+        assert_eq!(q.stats().rejected, 1);
+        assert_eq!(q.stats().accepted, 2);
+        q.pop().unwrap();
+        q.try_push(3).unwrap();
+        assert_eq!(q.stats().accepted, 3);
+    }
+
+    #[test]
+    fn close_wakes_poppers_and_drains() {
+        let q: Arc<Queue<u32>> = Arc::new(Queue::bounded(8));
+        q.try_push(7).unwrap();
+        let qc = q.clone();
+        let h = std::thread::spawn(move || {
+            let mut got = Vec::new();
+            while let Some(v) = qc.pop() {
+                got.push(v);
+            }
+            got
+        });
+        std::thread::sleep(Duration::from_millis(10));
+        q.close();
+        assert_eq!(h.join().unwrap(), vec![7]);
+        assert_eq!(q.try_push(9), Err(9));
+    }
+
+    #[test]
+    fn pop_timeout_times_out_then_delivers() {
+        let q: Arc<Queue<u32>> = Arc::new(Queue::bounded(8));
+        assert!(matches!(q.pop_timeout(Duration::from_millis(5)), Pop::TimedOut));
+        let qc = q.clone();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(10));
+            qc.try_push(42).unwrap();
+        });
+        match q.pop_timeout(Duration::from_secs(5)) {
+            Pop::Item(v) => assert_eq!(v, 42),
+            other => panic!("expected item, got {other:?}"),
+        }
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn mpmc_preserves_every_item() {
+        let q: Arc<Queue<u64>> = Arc::new(Queue::bounded(16));
+        let producers = 4;
+        let per_producer = 500u64;
+        let consumers = 3;
+        let mut handles = Vec::new();
+        for p in 0..producers {
+            let qc = q.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..per_producer {
+                    // Blocking push: every item must eventually land.
+                    qc.push(p * per_producer + i).unwrap();
+                }
+            }));
+        }
+        let mut sums = Vec::new();
+        for _ in 0..consumers {
+            let qc = q.clone();
+            sums.push(std::thread::spawn(move || {
+                let mut s = 0u64;
+                while let Some(v) = qc.pop() {
+                    s += v;
+                }
+                s
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        q.close();
+        let total: u64 = sums.into_iter().map(|h| h.join().unwrap()).sum();
+        let n = producers * per_producer;
+        assert_eq!(total, n * (n - 1) / 2);
+        let st = q.stats();
+        assert_eq!(st.accepted, n);
+        assert!(st.max_depth <= 16);
+    }
+
+    #[test]
+    fn depth_stats_tracked() {
+        let q = Queue::bounded(8);
+        for i in 0..4 {
+            q.try_push(i).unwrap();
+        }
+        let st = q.stats();
+        assert_eq!(st.max_depth, 4);
+        // Depth after pushes 1..=4 is 1,2,3,4 -> mean 2.5.
+        assert!((st.mean_depth - 2.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stats_since_windows_a_second_run() {
+        let q = Queue::bounded(8);
+        for i in 0..4 {
+            q.try_push(i).unwrap();
+        }
+        let first = q.stats();
+        for _ in 0..4 {
+            q.pop().unwrap();
+        }
+        // Second "run": 2 pushes at depths 1, 2.
+        q.try_push(9).unwrap();
+        q.try_push(9).unwrap();
+        let windowed = q.stats().since(&first);
+        assert_eq!(windowed.accepted, 2);
+        assert_eq!(windowed.rejected, 0);
+        assert!((windowed.mean_depth - 1.5).abs() < 1e-9);
+    }
+}

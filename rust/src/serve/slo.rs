@@ -1,0 +1,99 @@
+//! Service-level-objective accounting: latency targets, attainment, and
+//! goodput (the throughput that *counts* — requests completed within SLO).
+//!
+//! End-to-end serving cost for an early-exit model only materializes under
+//! a realistic request stream; the SLO view is how the serve bench turns a
+//! latency distribution into the single number capacity planning uses.
+
+use crate::util::stats::Summary;
+
+/// A per-request latency objective.
+#[derive(Debug, Clone, Copy)]
+pub struct Slo {
+    pub latency_ms: f64,
+}
+
+impl Slo {
+    pub fn latency_us(&self) -> f64 {
+        self.latency_ms * 1e3
+    }
+}
+
+impl Default for Slo {
+    fn default() -> Self {
+        Slo { latency_ms: 50.0 }
+    }
+}
+
+/// SLO outcome over one load run.
+#[derive(Debug, Clone, Default)]
+pub struct SloReport {
+    pub slo_ms: f64,
+    /// Requests completed within the SLO.
+    pub attained: usize,
+    /// All completed requests.
+    pub completed: usize,
+    /// attained / (completed + shed-or-lost): a request that was rejected
+    /// at admission or lost to a dead worker violates the SLO by
+    /// definition — hiding either would overstate attainment.
+    pub attainment: f64,
+    /// Attained requests per wall-clock second.
+    pub goodput_rps: f64,
+}
+
+/// Compute the SLO report from completed-request latencies (µs), the
+/// number of requests that never completed (shed at admission or lost to
+/// a dead worker — both violate the SLO), and the run wall time.
+pub fn report(latency_us: &Summary, shed_or_lost: usize, wall_secs: f64, slo: Slo) -> SloReport {
+    let target = slo.latency_us();
+    let attained = latency_us.samples().iter().filter(|&&l| l <= target).count();
+    let offered = latency_us.len() + shed_or_lost;
+    SloReport {
+        slo_ms: slo.latency_ms,
+        attained,
+        completed: latency_us.len(),
+        attainment: if offered == 0 { 0.0 } else { attained as f64 / offered as f64 },
+        goodput_rps: attained as f64 / wall_secs.max(1e-9),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn summary_of(xs: &[f64]) -> Summary {
+        let mut s = Summary::default();
+        for &x in xs {
+            s.push(x);
+        }
+        s
+    }
+
+    #[test]
+    fn all_within_slo() {
+        let lat = summary_of(&[1000.0, 2000.0, 3000.0]); // µs
+        let r = report(&lat, 0, 1.0, Slo { latency_ms: 50.0 });
+        assert_eq!(r.attained, 3);
+        assert_eq!(r.attainment, 1.0);
+        assert!((r.goodput_rps - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn slow_and_shed_requests_violate() {
+        // 2 fast, 1 slow, 1 rejected: attainment = 2/4.
+        let lat = summary_of(&[1000.0, 2000.0, 80_000.0]);
+        let r = report(&lat, 1, 2.0, Slo { latency_ms: 50.0 });
+        assert_eq!(r.attained, 2);
+        assert_eq!(r.completed, 3);
+        assert!((r.attainment - 0.5).abs() < 1e-9);
+        assert!((r.goodput_rps - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_run_is_zero_not_nan() {
+        let r = report(&Summary::default(), 0, 1.0, Slo::default());
+        assert_eq!(r.attained, 0);
+        assert_eq!(r.attainment, 0.0);
+        assert_eq!(r.goodput_rps, 0.0);
+    }
+}

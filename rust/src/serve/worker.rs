@@ -1,0 +1,368 @@
+//! Multi-worker serving: N threads, each owning its **own** PJRT engine.
+//!
+//! PJRT client/executable handles are not `Send` (see `runtime`), so
+//! instead of sharing one engine behind a lock — which would serialize
+//! every execute and defeat the pool — each worker thread constructs an
+//! `Engine` over the shared artifacts directory and compiles its own
+//! staged executables.  Compilation is seconds per worker, paid once at
+//! startup ([`WorkerPool::wait_ready`] gates load generation on it); what
+//! crosses threads is only `Send` data: jobs, tensors, and the shared
+//! `Arc<ModelState>`.
+//!
+//! Workers drain dynamic micro-batches from the shared bounded queue
+//! (`batcher::drain_batch`) and run them through `StageRunner::infer_many`,
+//! so requests grouped in one drain share padded stage executes and
+//! early-exiting requests genuinely skip later stages.
+
+use std::path::PathBuf;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use super::batcher::{drain_batch, plan_chunks, plan_rows, BatchPolicy};
+use super::queue::{Queue, QueueStats};
+use super::StageRunner;
+use crate::models::ModelState;
+use crate::runtime::Engine;
+use crate::tensor::Tensor;
+
+/// One enqueued inference request.
+#[derive(Debug)]
+pub struct ServeJob {
+    pub id: u64,
+    /// `[1, H, W, C]` input sample.
+    pub x: Tensor,
+    /// Ground-truth label when known (load generation from a dataset), so
+    /// the report can check accuracy is unchanged under concurrency.
+    pub label: Option<usize>,
+    pub submitted: Instant,
+}
+
+impl ServeJob {
+    pub fn new(id: u64, x: Tensor, label: Option<usize>) -> ServeJob {
+        ServeJob { id, x, label, submitted: Instant::now() }
+    }
+}
+
+/// One completed request.
+#[derive(Debug, Clone)]
+pub struct ServeOutcome {
+    pub id: u64,
+    pub pred: usize,
+    pub stage: u8,
+    pub label: Option<usize>,
+    /// Queue wait + execution, measured from submission.
+    pub latency_us: f64,
+    pub worker: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct PoolOpts {
+    pub workers: usize,
+    pub artifacts_dir: PathBuf,
+    /// Request-queue bound (admission control beyond it).
+    pub queue_capacity: usize,
+    pub batch: BatchPolicy,
+    /// Confidence thresholds (t1, t2) applied to every request.
+    pub thresholds: (f32, f32),
+}
+
+impl PoolOpts {
+    pub fn new<P: Into<PathBuf>>(artifacts_dir: P, workers: usize, thresholds: (f32, f32)) -> PoolOpts {
+        PoolOpts {
+            workers: workers.max(1),
+            artifacts_dir: artifacts_dir.into(),
+            queue_capacity: 256,
+            batch: BatchPolicy::default(),
+            thresholds,
+        }
+    }
+}
+
+/// Per-worker counters, returned at shutdown.
+#[derive(Debug, Clone, Default)]
+pub struct WorkerStats {
+    pub worker: usize,
+    pub processed: u64,
+    pub drains: u64,
+    pub max_chunk: usize,
+    /// Stage batch this worker's runner executed at (1 = unbatched).
+    pub stage_batch: usize,
+    /// Stage-1 rows that carried real requests vs rows executed including
+    /// padding — the micro-batching overhead, surfaced not hidden.
+    pub rows_useful: u64,
+    pub rows_executed: u64,
+}
+
+impl WorkerStats {
+    /// Fraction of executed stage-1 rows that were padding.
+    pub fn padding_waste(&self) -> f64 {
+        if self.rows_executed == 0 {
+            0.0
+        } else {
+            (self.rows_executed - self.rows_useful) as f64 / self.rows_executed as f64
+        }
+    }
+}
+
+/// Pool result: per-worker stats plus any worker failures (a failed
+/// worker's in-flight jobs are lost; loadgen reports the shortfall).
+#[derive(Debug, Default)]
+pub struct PoolOutcome {
+    pub stats: Vec<WorkerStats>,
+    pub errors: Vec<String>,
+}
+
+#[derive(Default)]
+struct Ready {
+    ready: usize,
+    failed: usize,
+}
+
+pub struct WorkerPool {
+    jobs: Arc<Queue<ServeJob>>,
+    outcomes: Arc<Queue<ServeOutcome>>,
+    handles: Vec<JoinHandle<Result<WorkerStats>>>,
+    ready: Arc<(Mutex<Ready>, Condvar)>,
+    workers: usize,
+}
+
+impl WorkerPool {
+    /// Spawn the pool; workers compile in the background.  Call
+    /// [`WorkerPool::wait_ready`] before timing anything.
+    pub fn start(state: Arc<ModelState>, opts: PoolOpts) -> WorkerPool {
+        let jobs: Arc<Queue<ServeJob>> = Arc::new(Queue::bounded(opts.queue_capacity));
+        let outcomes: Arc<Queue<ServeOutcome>> = Arc::new(Queue::unbounded());
+        let ready = Arc::new((Mutex::new(Ready::default()), Condvar::new()));
+        let mut handles = Vec::with_capacity(opts.workers);
+        for w in 0..opts.workers {
+            let state = state.clone();
+            let opts = opts.clone();
+            let jobs = jobs.clone();
+            let outcomes = outcomes.clone();
+            let ready = ready.clone();
+            handles.push(std::thread::spawn(move || {
+                worker_main(w, state, opts, jobs, outcomes, ready)
+            }));
+        }
+        WorkerPool { jobs, outcomes, handles, ready, workers: opts.workers }
+    }
+
+    /// Configured pool size.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Workers currently alive (came up and have not died mid-run).
+    /// Reports must use this, not the configured size — throughput
+    /// achieved by 2 survivors of a 4-worker pool is 2-worker throughput.
+    pub fn live_workers(&self) -> usize {
+        self.ready.0.lock().unwrap().ready
+    }
+
+    /// Block until every worker has either compiled its engine or failed.
+    /// Returns the number of live workers; errors if none survived or the
+    /// timeout lapsed.
+    pub fn wait_ready(&self, timeout: Duration) -> Result<usize> {
+        let (lock, cv) = &*self.ready;
+        let deadline = Instant::now() + timeout;
+        let mut st = lock.lock().unwrap();
+        while st.ready + st.failed < self.workers {
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(anyhow!(
+                    "worker pool not ready after {timeout:?} ({}/{} up)",
+                    st.ready,
+                    self.workers
+                ));
+            }
+            let (guard, _) = cv.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+        }
+        if st.ready == 0 {
+            return Err(anyhow!("all {} workers failed to start", self.workers));
+        }
+        Ok(st.ready)
+    }
+
+    /// Admission-controlled submit (load shedding when the queue is full).
+    pub fn try_submit(&self, job: ServeJob) -> std::result::Result<(), ServeJob> {
+        self.jobs.try_push(job)
+    }
+
+    /// Blocking submit (closed-loop clients).
+    pub fn submit(&self, job: ServeJob) -> std::result::Result<(), ServeJob> {
+        self.jobs.push(job)
+    }
+
+    pub fn outcomes(&self) -> &Queue<ServeOutcome> {
+        &self.outcomes
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.jobs.len()
+    }
+
+    pub fn queue_stats(&self) -> QueueStats {
+        self.jobs.stats()
+    }
+
+    /// Close the request queue, join every worker, and return the pool
+    /// outcome.  Pending queued jobs are still drained before workers exit.
+    pub fn shutdown(self) -> PoolOutcome {
+        self.jobs.close();
+        let mut out = PoolOutcome::default();
+        for h in self.handles {
+            match h.join() {
+                Ok(Ok(stats)) => out.stats.push(stats),
+                Ok(Err(e)) => out.errors.push(format!("{e:#}")),
+                Err(_) => out.errors.push("worker panicked".to_string()),
+            }
+        }
+        self.outcomes.close();
+        out
+    }
+}
+
+fn worker_main(
+    w: usize,
+    state: Arc<ModelState>,
+    opts: PoolOpts,
+    jobs: Arc<Queue<ServeJob>>,
+    outcomes: Arc<Queue<ServeOutcome>>,
+    ready: Arc<(Mutex<Ready>, Condvar)>,
+) -> Result<WorkerStats> {
+    // Per-worker engine: compile once, then serve (see module docs).
+    let setup = (|| -> Result<(Engine, StageRunner)> {
+        let engine = Engine::new(&opts.artifacts_dir)
+            .with_context(|| format!("worker {w}: creating PJRT engine"))?;
+        // Arc clone: all workers share one copy of the weights.
+        let runner = StageRunner::new(&engine, state.clone(), opts.batch.max_batch)
+            .with_context(|| format!("worker {w}: loading staged graphs"))?;
+        Ok((engine, runner))
+    })();
+    let (lock, cv) = &*ready;
+    let (engine, runner) = match setup {
+        Ok(ok) => {
+            lock.lock().unwrap().ready += 1;
+            cv.notify_all();
+            ok
+        }
+        Err(e) => {
+            lock.lock().unwrap().failed += 1;
+            cv.notify_all();
+            return Err(e);
+        }
+    };
+    let _ = &engine; // engine must outlive the runner's executables
+
+    let (t1, t2) = opts.thresholds;
+    let mut stats = WorkerStats { worker: w, stage_batch: runner.stage_batch(), ..Default::default() };
+    loop {
+        let batch = drain_batch(&jobs, &opts.batch);
+        if batch.is_empty() {
+            break; // queue closed and drained
+        }
+        stats.drains += 1;
+        stats.max_chunk = stats.max_chunk.max(batch.len());
+        let (useful, executed) =
+            plan_rows(&plan_chunks(batch.len(), stats.stage_batch), stats.stage_batch);
+        stats.rows_useful += useful as u64;
+        stats.rows_executed += executed as u64;
+        let xs: Vec<&Tensor> = batch.iter().map(|j| &j.x).collect();
+        let results = match runner.infer_many(&xs, t1, t2) {
+            Ok(r) => r,
+            Err(e) => {
+                // Dying mid-run: move ourselves from `ready` to `failed`
+                // so reports attribute throughput to the survivors and the
+                // `ready + failed == workers` settlement invariant that
+                // wait_ready blocks on stays intact.
+                {
+                    let mut st = lock.lock().unwrap();
+                    st.ready -= 1;
+                    st.failed += 1;
+                }
+                cv.notify_all();
+                return Err(e)
+                    .with_context(|| format!("worker {w}: micro-batch of {}", batch.len()));
+            }
+        };
+        for (job, (pred, stage)) in batch.into_iter().zip(results) {
+            stats.processed += 1;
+            let outcome = ServeOutcome {
+                id: job.id,
+                pred,
+                stage,
+                label: job.label,
+                latency_us: job.submitted.elapsed().as_micros() as f64,
+                worker: w,
+            };
+            if outcomes.push(outcome).is_err() {
+                return Ok(stats); // result side closed: shutting down
+            }
+        }
+    }
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn job_types_are_send() {
+        // Compile-enforced: these cross worker-thread boundaries.
+        fn assert_send<T: Send>() {}
+        assert_send::<ServeJob>();
+        assert_send::<ServeOutcome>();
+        assert_send::<Arc<Queue<ServeJob>>>();
+        assert_send::<Arc<ModelState>>();
+        assert_send::<PoolOpts>();
+    }
+
+    #[test]
+    fn pool_with_bad_artifacts_fails_ready_cleanly() {
+        // A host-initialized state over a toy arch with no graph files:
+        // every worker must fail setup and wait_ready must report that
+        // instead of hanging.
+        let layers = vec![crate::models::LayerDesc {
+            name: "fc".into(),
+            kind: crate::models::LayerKind::Dense,
+            k: 1,
+            cin: 4,
+            cout: 2,
+            stride: 1,
+            hout: 1,
+            wout: 1,
+            in_mask: -1,
+            out_mask: -1,
+            segment: "seg3".into(),
+        }];
+        let arch = Arc::new(crate::models::ArchManifest {
+            name: "toy".into(),
+            num_classes: 2,
+            layers,
+            mask_slots: vec![],
+            param_shapes: vec![vec![4, 2], vec![2]],
+            graphs: std::collections::BTreeMap::new(),
+            train_batch: 1,
+            eval_batch: 1,
+            stage_batch: 1,
+            stage_batches: vec![1],
+            stage_h1_shape: vec![1, 4],
+            stage_h2_shape: vec![1, 4],
+        });
+        let state = Arc::new(ModelState::init_host(arch, 0));
+        let pool = WorkerPool::start(
+            state,
+            PoolOpts::new("/nonexistent/artifacts", 2, (0.8, 0.8)),
+        );
+        let res = pool.wait_ready(Duration::from_secs(30));
+        assert!(res.is_err(), "expected startup failure, got {res:?}");
+        let outcome = pool.shutdown();
+        assert_eq!(outcome.stats.len(), 0);
+        assert_eq!(outcome.errors.len(), 2);
+    }
+}

@@ -90,28 +90,14 @@ impl Tensor {
     }
 
     pub fn argmax(&self) -> usize {
-        self.data
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .map(|(i, _)| i)
-            .unwrap_or(0)
+        argmax_slice(&self.data)
     }
 
     /// Row-wise argmax for a [n, c] tensor.
     pub fn argmax_rows(&self) -> Vec<usize> {
         assert_eq!(self.rank(), 2);
         let c = self.shape[1];
-        self.data
-            .chunks_exact(c)
-            .map(|row| {
-                row.iter()
-                    .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                    .map(|(i, _)| i)
-                    .unwrap()
-            })
-            .collect()
+        self.data.chunks_exact(c).map(argmax_slice).collect()
     }
 
     /// Row-wise softmax for a [n, c] tensor (used for exit confidences).
@@ -133,6 +119,16 @@ impl Tensor {
         let stride: usize = self.shape[1..].iter().product();
         &self.data[i * stride..(i + 1) * stride]
     }
+}
+
+/// Argmax of a logits row (0 for empty input; first index wins ties) —
+/// the one tie-breaking rule shared by eval, exits and serving.
+pub fn argmax_slice(row: &[f32]) -> usize {
+    row.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
 }
 
 #[cfg(test)]

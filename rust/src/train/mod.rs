@@ -8,7 +8,7 @@
 //!   eval  : params*, masks*, qbw, qba, x            -> logits, e1, e2
 //!   init  : seed                                    -> params*, momenta*
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::{ensure, Context, Result};
 
@@ -96,7 +96,7 @@ impl TeacherLogits {
 
 /// Initialize a fresh ModelState by running the AOT init graph (keeps rust
 /// and jax initialization identical by construction).
-pub fn init_state(engine: &Engine, arch: Rc<ArchManifest>, seed: u64) -> Result<ModelState> {
+pub fn init_state(engine: &Engine, arch: Arc<ArchManifest>, seed: u64) -> Result<ModelState> {
     let exe = engine.load(arch.graph("init")?)?;
     let seed_t = Tensor::scalar(seed as f32);
     let outs = exe.run(&[&seed_t]).context("running init graph")?;

@@ -75,6 +75,15 @@ impl Args {
         }
     }
 
+    pub fn get_f64(&self, name: &str, default: f64) -> anyhow::Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects a number, got `{v}`")),
+        }
+    }
+
     pub fn get_u64(&self, name: &str, default: u64) -> anyhow::Result<u64> {
         match self.get(name) {
             None => Ok(default),
@@ -127,5 +136,13 @@ mod tests {
         let a = parse(&["x"]);
         assert_eq!(a.get_or("scale", "default"), "default");
         assert_eq!(a.get_f32("lr", 0.05).unwrap(), 0.05);
+        assert_eq!(a.get_f64("rate", 500.0).unwrap(), 500.0);
+    }
+
+    #[test]
+    fn f64_parses_and_errors() {
+        let a = parse(&["x", "--rate", "123.5", "--slo-ms", "oops"]);
+        assert_eq!(a.get_f64("rate", 0.0).unwrap(), 123.5);
+        assert!(a.get_f64("slo-ms", 50.0).is_err());
     }
 }

@@ -18,16 +18,20 @@ pub fn stddev(xs: &[f64]) -> f64 {
     (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
 }
 
-/// Percentile by linear interpolation, q in [0, 100].
+/// Percentile by linear interpolation, q clamped to [0, 100].
+///
+/// Total on all inputs: empty slices return 0.0 (never index), singleton
+/// slices return their one element for every q, and out-of-range q values
+/// clamp rather than walking off the sorted vector.
 pub fn percentile(xs: &[f64], q: f64) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
     let mut v = xs.to_vec();
     v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let pos = (q / 100.0) * (v.len() - 1) as f64;
+    let pos = (q.clamp(0.0, 100.0) / 100.0) * (v.len() - 1) as f64;
     let lo = pos.floor() as usize;
-    let hi = pos.ceil() as usize;
+    let hi = (pos.ceil() as usize).min(v.len() - 1);
     if lo == hi {
         v[lo]
     } else {
@@ -50,6 +54,15 @@ impl Summary {
         self.samples.push(x);
     }
 
+    /// Fold another summary's samples into this one.
+    pub fn merge(&mut self, other: &Summary) {
+        self.samples.extend_from_slice(&other.samples);
+    }
+
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+
     pub fn len(&self) -> usize {
         self.samples.len()
     }
@@ -60,6 +73,10 @@ impl Summary {
 
     pub fn mean(&self) -> f64 {
         mean(&self.samples)
+    }
+
+    pub fn percentile(&self, q: f64) -> f64 {
+        percentile(&self.samples, q)
     }
 
     pub fn p50(&self) -> f64 {
@@ -74,11 +91,19 @@ impl Summary {
         percentile(&self.samples, 99.0)
     }
 
+    /// 0.0 for an empty summary (not +inf — callers print these raw).
     pub fn min(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
         self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
     }
 
+    /// 0.0 for an empty summary (not -inf — callers print these raw).
     pub fn max(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
         self.samples.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
     }
 }
@@ -155,6 +180,58 @@ mod tests {
         let a = [(10.0, 0.80), (100.0, 0.60)];
         let b = [(10.0, 0.90), (100.0, 0.85)];
         assert!(frontier_score(&b) > frontier_score(&a));
+    }
+
+    #[test]
+    fn empty_summary_is_all_zeros() {
+        let s = Summary::default();
+        assert!(s.is_empty());
+        assert_eq!(s.len(), 0);
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.p50(), 0.0);
+        assert_eq!(s.p95(), 0.0);
+        assert_eq!(s.p99(), 0.0);
+        assert_eq!(s.min(), 0.0);
+        assert_eq!(s.max(), 0.0);
+        // The free functions are total on empty input too.
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        assert_eq!(median(&[]), 0.0);
+    }
+
+    #[test]
+    fn singleton_summary_returns_its_element() {
+        let mut s = Summary::default();
+        s.push(7.5);
+        assert_eq!(s.len(), 1);
+        for q in [0.0, 50.0, 95.0, 99.0, 100.0] {
+            assert_eq!(s.percentile(q), 7.5, "q={q}");
+        }
+        assert_eq!(s.min(), 7.5);
+        assert_eq!(s.max(), 7.5);
+        assert_eq!(s.mean(), 7.5);
+        // Out-of-range q clamps instead of indexing out of bounds.
+        assert_eq!(percentile(&[7.5], 150.0), 7.5);
+        assert_eq!(percentile(&[7.5], -5.0), 7.5);
+    }
+
+    #[test]
+    fn summary_merge_combines_samples() {
+        let mut a = Summary::default();
+        let mut b = Summary::default();
+        for i in 0..50 {
+            a.push(i as f64);
+        }
+        for i in 50..100 {
+            b.push(i as f64);
+        }
+        a.merge(&b);
+        assert_eq!(a.len(), 100);
+        assert_eq!(a.min(), 0.0);
+        assert_eq!(a.max(), 99.0);
+        assert!((a.p50() - 49.5).abs() < 1.0);
+        // Merging an empty summary is a no-op.
+        a.merge(&Summary::default());
+        assert_eq!(a.len(), 100);
     }
 
     #[test]

@@ -4,7 +4,7 @@
 //! offline).
 
 use std::collections::BTreeMap;
-use std::rc::Rc;
+use std::sync::Arc;
 
 use coc::chain::Technique;
 use coc::data::{Batcher, Dataset, DatasetKind};
@@ -15,7 +15,7 @@ use coc::tensor::Tensor;
 use coc::util::prop::{check, Shrink};
 use coc::util::stats;
 
-fn rand_arch(rng: &mut coc::util::rng::Rng) -> Rc<ArchManifest> {
+fn rand_arch(rng: &mut coc::util::rng::Rng) -> Arc<ArchManifest> {
     let nconv = 1 + rng.below(4);
     let mut layers = Vec::new();
     let mut mask_slots = Vec::new();
@@ -62,7 +62,7 @@ fn rand_arch(rng: &mut coc::util::rng::Rng) -> Rc<ArchManifest> {
     });
     param_shapes.push(vec![cin, 20]);
     param_shapes.push(vec![20]);
-    Rc::new(ArchManifest {
+    Arc::new(ArchManifest {
         name: "rand".into(),
         num_classes: 20,
         layers,
@@ -72,6 +72,7 @@ fn rand_arch(rng: &mut coc::util::rng::Rng) -> Rc<ArchManifest> {
         train_batch: 8,
         eval_batch: 8,
         stage_batch: 1,
+        stage_batches: vec![1],
         stage_h1_shape: vec![1],
         stage_h2_shape: vec![1],
     })

@@ -1,0 +1,239 @@
+//! Concurrent-serving integration tests: the multi-worker pool over real
+//! PJRT engines (skipped without artifacts, like tests/integration.rs) plus
+//! host-only checks of the queue/batcher pipeline under real threads.
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+
+use coc::chain::{stages, Chain, StageCtx};
+use coc::data::{Dataset, DatasetKind};
+use coc::models::{Manifest, ModelState};
+use coc::runtime::Engine;
+use coc::serve::batcher::BatchPolicy;
+use coc::serve::loadgen::{self, LoadMode, LoadOpts};
+use coc::serve::queue::Queue;
+use coc::serve::worker::{PoolOpts, ServeJob, WorkerPool};
+use coc::serve::Server;
+
+fn artifacts_ok() -> bool {
+    Path::new("artifacts/manifest.json").exists()
+}
+
+/// Compile-enforced Send bounds: everything the pool moves across worker
+/// threads.  (`Engine` itself is intentionally per-thread — see runtime.)
+#[test]
+fn serving_types_are_send() {
+    fn assert_send<T: Send>() {}
+    assert_send::<ModelState>();
+    assert_send::<ServeJob>();
+    assert_send::<Arc<Queue<ServeJob>>>();
+    assert_send::<PoolOpts>();
+}
+
+/// Host-only: a 2-producer/2-consumer pipeline through the bounded queue
+/// under admission control keeps every accepted item exactly once.
+#[test]
+fn queue_pipeline_two_workers_host_only() {
+    let jobs: Arc<Queue<u64>> = Arc::new(Queue::bounded(32));
+    let done: Arc<Queue<u64>> = Arc::new(Queue::unbounded());
+    let mut workers = Vec::new();
+    for _ in 0..2 {
+        let jobs = jobs.clone();
+        let done = done.clone();
+        workers.push(std::thread::spawn(move || {
+            let policy = BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) };
+            loop {
+                let batch = coc::serve::batcher::drain_batch(&jobs, &policy);
+                if batch.is_empty() {
+                    break;
+                }
+                for v in batch {
+                    done.push(v).unwrap();
+                }
+            }
+        }));
+    }
+    let mut accepted = 0u64;
+    for i in 0..1000u64 {
+        if jobs.push(i).is_ok() {
+            accepted += 1;
+        }
+    }
+    jobs.close();
+    for w in workers {
+        w.join().unwrap();
+    }
+    done.close();
+    let mut seen = Vec::new();
+    while let Some(v) = done.pop() {
+        seen.push(v);
+    }
+    assert_eq!(seen.len() as u64, accepted);
+    seen.sort_unstable();
+    seen.dedup();
+    assert_eq!(seen.len() as u64, accepted, "duplicated or lost items");
+}
+
+/// The headline acceptance test: >= 2 concurrent workers, each with its
+/// own PJRT engine, must reproduce the sequential server's per-request
+/// results exactly (same predictions, same exit stages) and complete every
+/// request.
+#[test]
+fn two_workers_match_sequential_serving() {
+    if !artifacts_ok() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let engine = Engine::new("artifacts").unwrap();
+    let manifest = Manifest::load("artifacts").unwrap();
+    let arch = manifest.arch("mini_vgg").unwrap();
+
+    let train_ds = Dataset::generate(DatasetKind::SynthC10, 192, 11, 0);
+    let test_ds = Dataset::generate(DatasetKind::SynthC10, 64, 11, 1);
+
+    let mut state = coc::train::init_state(&engine, arch, 11).unwrap();
+    coc::train::train(
+        &engine,
+        &mut state,
+        &train_ds,
+        None,
+        &coc::train::TrainOpts { steps: 30, ..Default::default() },
+    )
+    .unwrap();
+    let ctx = StageCtx {
+        engine: &engine,
+        train: &train_ds,
+        test: &test_ds,
+        base_steps: 16,
+        seed: 11,
+        verbose: false,
+    };
+    Chain::new()
+        .push(Box::new(stages::EarlyExit { threshold: 0.6, ..Default::default() }))
+        .run(&mut state, &ctx)
+        .unwrap();
+
+    let t = 0.6f32;
+    // Sequential ground truth, per test index.
+    let server = Server::new(&engine, state.clone()).unwrap();
+    let mut want = Vec::new();
+    for i in 0..test_ds.len() {
+        let (x, _) = test_ds.batch(&[i]);
+        want.push(server.infer(&x, t, t).unwrap());
+    }
+
+    // Pool with 2 workers, micro-batching enabled.
+    let mut opts = PoolOpts::new("artifacts", 2, (t, t));
+    opts.batch = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) };
+    let pool = WorkerPool::start(Arc::new(state), opts);
+    let up = pool.wait_ready(Duration::from_secs(600)).unwrap();
+    assert_eq!(up, 2, "both workers must come up");
+
+    for i in 0..test_ds.len() {
+        let (x, _) = test_ds.batch(&[i]);
+        pool.submit(ServeJob::new(i as u64, x, Some(test_ds.labels[i]))).unwrap();
+    }
+    let mut got: Vec<Option<(usize, u8)>> = vec![None; test_ds.len()];
+    let mut workers_seen = std::collections::BTreeSet::new();
+    for _ in 0..test_ds.len() {
+        let o = pool.outcomes().pop().expect("pool dropped a request");
+        workers_seen.insert(o.worker);
+        got[o.id as usize] = Some((o.pred, o.stage));
+    }
+    let outcome = pool.shutdown();
+    assert!(outcome.errors.is_empty(), "worker errors: {:?}", outcome.errors);
+    assert_eq!(outcome.stats.len(), 2);
+    let processed: u64 = outcome.stats.iter().map(|w| w.processed).sum();
+    assert_eq!(processed, test_ds.len() as u64);
+
+    // Micro-batched stage graphs are row-independent, so per-request
+    // results must match the sequential server.  Tolerate <= 2/64 flips
+    // from f32 vectorization differences between the batch-1 and batch-8
+    // lowerings; aggregate accuracy and exit distribution must agree well
+    // within the ±1% serving contract.
+    let mut diverged = 0usize;
+    for (i, w) in want.iter().enumerate() {
+        let g = got[i].expect("request never completed");
+        if &g != w {
+            eprintln!("request {i}: sequential {w:?} vs pool {g:?}");
+            diverged += 1;
+        }
+    }
+    assert!(diverged <= 2, "{diverged}/64 requests diverged under concurrency");
+    let acc = |rs: &[(usize, u8)]| {
+        rs.iter()
+            .zip(&test_ds.labels)
+            .filter(|((p, _), &l)| *p == l)
+            .count() as f64
+            / rs.len() as f64
+    };
+    let got_flat: Vec<(usize, u8)> = got.iter().map(|o| o.unwrap()).collect();
+    assert!((acc(&want) - acc(&got_flat)).abs() <= 0.01 + 1e-9);
+    let exit_frac = |rs: &[(usize, u8)], s: u8| {
+        rs.iter().filter(|(_, st)| *st == s).count() as f64 / rs.len() as f64
+    };
+    for s in [1u8, 2, 3] {
+        assert!(
+            (exit_frac(&want, s) - exit_frac(&got_flat, s)).abs() <= 0.04,
+            "exit-{s} distribution shifted under concurrency"
+        );
+    }
+    assert!(!workers_seen.is_empty());
+}
+
+/// Closed-loop load generation through the pool reports consistent
+/// accounting (completed + lost == accepted; exit fractions in [0,1]).
+#[test]
+fn loadgen_accounting_consistent() {
+    if !artifacts_ok() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let engine = Engine::new("artifacts").unwrap();
+    let manifest = Manifest::load("artifacts").unwrap();
+    let arch = manifest.arch("mini_vgg").unwrap();
+    let train_ds = Dataset::generate(DatasetKind::SynthC10, 128, 13, 0);
+    let test_ds = Dataset::generate(DatasetKind::SynthC10, 48, 13, 1);
+    let mut state = coc::train::init_state(&engine, arch, 13).unwrap();
+    let ctx = StageCtx {
+        engine: &engine,
+        train: &train_ds,
+        test: &test_ds,
+        base_steps: 10,
+        seed: 13,
+        verbose: false,
+    };
+    Chain::new()
+        .push(Box::new(stages::EarlyExit { threshold: 0.7, ..Default::default() }))
+        .run(&mut state, &ctx)
+        .unwrap();
+
+    let pool = WorkerPool::start(Arc::new(state), PoolOpts::new("artifacts", 2, (0.7, 0.7)));
+    pool.wait_ready(Duration::from_secs(600)).unwrap();
+    let rep = loadgen::run(
+        &pool,
+        &test_ds,
+        &LoadOpts {
+            mode: LoadMode::Closed { concurrency: 6 },
+            requests: 96,
+            seed: 13,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    pool.shutdown();
+
+    assert_eq!(rep.offered, 96);
+    assert_eq!(rep.completed + rep.lost, rep.accepted);
+    assert_eq!(rep.lost, 0);
+    assert_eq!(rep.latency_us.len(), rep.completed);
+    assert!(rep.p_exit1 >= 0.0 && rep.p_exit1 <= 1.0);
+    assert!(rep.p_exit1 + rep.p_exit2 <= 1.0 + 1e-9);
+    assert!(rep.throughput_rps > 0.0);
+    assert!(rep.queue.accepted >= 96);
+    // JSON report round-trips.
+    let j = rep.to_json();
+    let parsed = coc::util::json::Json::parse(&j.to_string()).unwrap();
+    assert_eq!(parsed.req("completed").unwrap().as_usize(), Some(rep.completed));
+}
