@@ -3,11 +3,12 @@
 #   make artifacts   lower all AOT graphs + manifest (python runs ONCE here)
 #   make build       release build of the rust coordinator
 #   make test        python unit tests + rust test suite
+#   make verify      tier-1 (release build + cargo test) + pytest python/tests
 #   make bench       rust micro/e2e benches (needs artifacts)
 
 ARTIFACTS := artifacts
 
-.PHONY: artifacts build test bench
+.PHONY: artifacts build test verify bench
 
 artifacts:
 	cd python && python -m compile.aot --out ../$(ARTIFACTS)
@@ -22,6 +23,11 @@ build:
 test:
 	cd python && python -m pytest tests -q
 	cd rust && cargo test -q
+
+# Tier-1 verification plus the python suite — the pre-merge gate.
+verify:
+	cd rust && cargo build --release && cargo test -q
+	python -m pytest python/tests -q
 
 bench: build
 	cd rust && cargo bench

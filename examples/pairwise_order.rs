@@ -6,10 +6,16 @@
 //!
 //! The argument names the pair by letters (default PQ = prune/quantize;
 //! fastest pair since neither trains a student from scratch).
+//!
+//! Both orders are submitted to the plan layer (`chain::plan`): the
+//! planner merges them into a prefix trie, executes each unique stage
+//! once, and the content-addressed cache under /tmp makes a re-run of
+//! this example near-free.
 
 use anyhow::{anyhow, Result};
 
-use coc::chain::{StageCtx, Technique};
+use coc::chain::plan::{ExecOpts, PjrtRunner, PlanKey, Planner};
+use coc::chain::Technique;
 use coc::data::{Dataset, DatasetKind};
 use coc::models::Manifest;
 use coc::runtime::Engine;
@@ -29,11 +35,19 @@ fn main() -> Result<()> {
         .and_then(Technique::from_letter)
         .ok_or_else(|| anyhow!("bad pair `{pair}`"))?;
 
+    // The whole base-model recipe: hashed into the plan key below, so
+    // editing any of these constants invalidates the persistent example
+    // cache instead of replaying stale results.
+    const BASE_TRAIN_STEPS: usize = 150;
+    const STAGE_STEPS: usize = 100;
+    const N_TRAIN: usize = 512;
+    const N_TEST: usize = 128;
+
     let engine = Engine::new(coc::DEFAULT_ARTIFACTS)?;
     let manifest = Manifest::load(coc::DEFAULT_ARTIFACTS)?;
     let arch = manifest.arch("mini_resnet")?;
-    let train_ds = Dataset::generate(DatasetKind::SynthC10, 512, 42, 0);
-    let test_ds = Dataset::generate(DatasetKind::SynthC10, 128, 42, 1);
+    let train_ds = Dataset::generate(DatasetKind::SynthC10, N_TRAIN, 42, 0);
+    let test_ds = Dataset::generate(DatasetKind::SynthC10, N_TEST, 42, 1);
 
     println!("training base model...");
     let mut base = train::init_state(&engine, arch, 42)?;
@@ -42,22 +56,43 @@ fn main() -> Result<()> {
         &mut base,
         &train_ds,
         None,
-        &TrainOpts { steps: 150, ..Default::default() },
+        &TrainOpts { steps: BASE_TRAIN_STEPS, ..Default::default() },
     )?;
 
-    let ctx = StageCtx {
-        engine: &engine,
-        train: &train_ds,
-        test: &test_ds,
-        base_steps: 100,
-        seed: 42,
-        verbose: false,
-    };
     let ladder = 3;
     println!("sweeping {}{} and {}{} ...", a.letter(), b.letter(), b.letter(), a.letter());
-    let ab = sweep::pairwise_points(&base, a, b, &ctx, ladder)?;
-    let ba = sweep::pairwise_points(&base, b, a, &ctx, ladder)?;
+    let mut plan = Planner::new(PlanKey {
+        arch: "mini_resnet".into(),
+        dataset: "c10".into(),
+        scale: format!("example-b{BASE_TRAIN_STEPS}-n{N_TRAIN}x{N_TEST}"),
+        base_steps: STAGE_STEPS,
+        seed: 42,
+    });
+    sweep::submit_pairwise(&mut plan, a, b, ladder);
+    sweep::submit_pairwise(&mut plan, b, a, ladder);
+    println!(
+        "plan: {} chains / {} stage applications -> {} unique nodes",
+        plan.num_chains(),
+        plan.total_stages(),
+        plan.unique_nodes()
+    );
 
+    let runner = PjrtRunner::new(&engine, &train_ds, &test_ds, STAGE_STEPS, 42, false);
+    let factory = || match Engine::new(coc::DEFAULT_ARTIFACTS) {
+        Ok(e) => Ok(PjrtRunner::new(e, &train_ds, &test_ds, STAGE_STEPS, 42, false)),
+        Err(e) => Err(e),
+    };
+    let opts = ExecOpts {
+        jobs: 1,
+        cache_dir: Some(std::env::temp_dir().join("coc_pairwise_example_cache")),
+        ..Default::default()
+    };
+    let run = plan.execute(&base, &runner, &opts, &factory)?;
+
+    let lab_ab = format!("{}{}", a.letter(), b.letter());
+    let lab_ba = format!("{}{}", b.letter(), a.letter());
+    let ab: Vec<_> = run.points.iter().filter(|p| p.label == lab_ab).cloned().collect();
+    let ba: Vec<_> = run.points.iter().filter(|p| p.label == lab_ba).cloned().collect();
     for (tag, pts) in [("AB", &ab), ("BA", &ba)] {
         for p in pts.iter() {
             println!(

@@ -9,6 +9,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+# Offline environments may lack hypothesis; skip this module instead of
+# erroring at collection so the rest of the suite stays green.
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from compile import kernels as K

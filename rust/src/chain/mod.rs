@@ -13,6 +13,7 @@ use crate::metrics::Measurement;
 use crate::models::ModelState;
 use crate::runtime::Engine;
 
+pub mod plan;
 pub mod stages;
 
 pub use stages::{Distill, EarlyExit, HuffmanCoding, Prune, Quantize, WeightCluster};
@@ -76,16 +77,25 @@ pub struct StageCtx<'e> {
 }
 
 /// Per-stage outcome, for logs and the fig15 waterfall.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct StageReport {
     pub stage: String,
     pub technique: Technique,
     pub measurement: Measurement,
 }
 
-pub trait CompressionStage {
+/// `Send + Sync` is part of the contract: stages are plain hyper-parameter
+/// records, and the plan executor (`chain::plan`) shares them across
+/// worker threads.
+pub trait CompressionStage: Send + Sync {
     fn name(&self) -> String;
     fn technique(&self) -> Technique;
+    /// Deterministic identity of this stage: technique tag plus **every**
+    /// hyper-parameter, nothing else.  Two stages with equal fingerprints
+    /// must produce bit-identical states from equal inputs — the planner
+    /// hash-chains fingerprints into content addresses, so omitting a
+    /// hyper-parameter here silently aliases distinct cache entries.
+    fn fingerprint(&self) -> String;
     /// Apply the stage (including its fine-tuning) to `state` in place.
     fn apply(&self, state: &mut ModelState, ctx: &StageCtx) -> Result<()>;
 }

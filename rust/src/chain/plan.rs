@@ -1,0 +1,965 @@
+//! Plan/executor split for the compression chain.
+//!
+//! The paper's experiments are *combinatorial*: Table 1 runs all six
+//! distill-started orders, the pairwise figures run every pair twice, and
+//! `DPQE` / `DPEQ` share the whole `DP` prefix.  Running each `Chain`
+//! imperatively from the pretrained base re-trains every shared prefix
+//! once per chain.  This module splits that into:
+//!
+//! 1. **Plan** — experiments *submit* whole chains to a [`Planner`], which
+//!    merges them into a prefix trie.  Every trie node is content-addressed
+//!    by a [`NodeId`]: the FNV-1a-128 hash chain of the [`PlanKey`]
+//!    (arch, dataset, scale, seed) and the [`CompressionStage::fingerprint`]
+//!    of every stage on the path, so a node *is* the exact recipe that
+//!    produced its state.
+//! 2. **Execute** — the executor walks the trie once per unique node.
+//!    With a cache directory, each node's `ModelState` is snapshotted to
+//!    `<node_id>.state` (via `ModelState::save_tagged`, header-verified on
+//!    load) and its `Measurement` to `<node_id>.meas.json`; re-runs replay
+//!    both and interrupted runs resume from the deepest cached prefix.
+//!    Independent branches can run on a worker pool (`--jobs N`), one
+//!    engine per thread — the same pattern as `serve::worker`, because
+//!    PJRT handles are not `Send`.
+//!
+//! Cached and uncached runs are equal by construction: stages are pure
+//! functions of (state, fixed seeds), state files round-trip exact f32
+//! bytes, and measurement JSON round-trips exact f64s (shortest
+//! round-trippable formatting).  `rust/tests/plan_cache.rs` proves it.
+//!
+//! Known trade-off: replay deserializes each node's snapshot eagerly even
+//! when no child misses; at this testbed's model sizes (sub-MB states)
+//! that warm-run I/O is negligible, and lazy interior loads are the first
+//! optimization to reach for if states grow by orders of magnitude.
+
+use std::borrow::Borrow;
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::{Chain, CompressionStage, StageCtx, StageReport};
+use crate::data::Dataset;
+use crate::exits;
+use crate::metrics::Measurement;
+use crate::models::{Accountant, ModelState};
+use crate::runtime::Engine;
+use crate::sweep::SweepPoint;
+use crate::train;
+use crate::util::json::Json;
+
+/// Bump to invalidate every existing plan cache entry (the version is
+/// hashed into the root id).
+pub const PLAN_FORMAT_VERSION: u32 = 1;
+
+// ---------------------------------------------------------------------------
+// Content addressing
+// ---------------------------------------------------------------------------
+
+const FNV128_OFFSET: u128 = 0x6c62272e07bb014262b821756295c58d;
+const FNV128_PRIME: u128 = 0x0000000001000000000000000000013b;
+
+fn fnv1a128(seed: u128, bytes: &[u8]) -> u128 {
+    let mut h = seed;
+    for &b in bytes {
+        h ^= b as u128;
+        h = h.wrapping_mul(FNV128_PRIME);
+    }
+    h
+}
+
+/// Content address of a (possibly intermediate) compressed model state:
+/// the hash chain of the plan key and every stage fingerprint applied so
+/// far.  Display form (32 hex chars) names the cache files.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct NodeId(u128);
+
+impl NodeId {
+    fn root(key: &PlanKey) -> NodeId {
+        NodeId(fnv1a128(FNV128_OFFSET, key.canonical().as_bytes()))
+    }
+
+    fn child(self, fingerprint: &str) -> NodeId {
+        // Length-prefix each link so the byte stream is unambiguous: a
+        // stage fingerprinted "a/b" must never alias the path "a" -> "b".
+        let h = fnv1a128(self.0, &(fingerprint.len() as u64).to_le_bytes());
+        NodeId(fnv1a128(h, fingerprint.as_bytes()))
+    }
+}
+
+impl fmt::Display for NodeId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:032x}", self.0)
+    }
+}
+
+/// Everything *outside* the stage sequence that determines a trained
+/// state: architecture, dataset kind, scale profile (dataset sizes), the
+/// per-stage training budget, and the seed.  All strings are stable
+/// explicit names — never `{:?}` of an enum — so cache addresses survive
+/// refactors.  `base_steps` is hashed explicitly (not implied by the
+/// scale name) so a caller that changes its training budget without
+/// renaming the scale can never replay stale states.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PlanKey {
+    pub arch: String,
+    pub dataset: String,
+    pub scale: String,
+    pub base_steps: usize,
+    pub seed: u64,
+}
+
+impl PlanKey {
+    fn canonical(&self) -> String {
+        format!(
+            "coc-plan-v{}|arch={}|data={}|scale={}|steps={}|seed={}",
+            PLAN_FORMAT_VERSION, self.arch, self.dataset, self.scale, self.base_steps, self.seed
+        )
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The plan: a prefix trie of stages
+// ---------------------------------------------------------------------------
+
+struct Node {
+    stage: Arc<dyn CompressionStage>,
+    id: NodeId,
+    parent: Option<usize>,
+    children: Vec<usize>,
+}
+
+struct SubmittedChain {
+    label: String,
+    config: String,
+    /// Trie node indices along this chain, in stage order.
+    path: Vec<usize>,
+}
+
+/// Merges submitted chains into a prefix trie and executes each unique
+/// node exactly once.
+pub struct Planner {
+    key: PlanKey,
+    root_id: NodeId,
+    nodes: Vec<Node>,
+    /// (parent index or -1, stage fingerprint) -> node index.
+    index: BTreeMap<(i64, String), usize>,
+    chains: Vec<SubmittedChain>,
+}
+
+impl Planner {
+    pub fn new(key: PlanKey) -> Planner {
+        let root_id = NodeId::root(&key);
+        Planner { key, root_id, nodes: Vec::new(), index: BTreeMap::new(), chains: Vec::new() }
+    }
+
+    pub fn key(&self) -> &PlanKey {
+        &self.key
+    }
+
+    /// Merge a chain into the trie; returns the chain's index (outcome
+    /// order matches submission order).
+    pub fn submit(&mut self, chain: Chain, label: &str, config: &str) -> usize {
+        let mut parent: Option<usize> = None;
+        let mut path = Vec::with_capacity(chain.stages.len());
+        for stage in chain.stages {
+            let stage: Arc<dyn CompressionStage> = Arc::from(stage);
+            let fp = stage.fingerprint();
+            let key = (parent.map(|p| p as i64).unwrap_or(-1), fp.clone());
+            let idx = match self.index.get(&key) {
+                Some(&i) => i,
+                None => {
+                    let id = match parent {
+                        Some(p) => self.nodes[p].id.child(&fp),
+                        None => self.root_id.child(&fp),
+                    };
+                    let i = self.nodes.len();
+                    self.nodes.push(Node { stage, id, parent, children: Vec::new() });
+                    if let Some(p) = parent {
+                        self.nodes[p].children.push(i);
+                    }
+                    self.index.insert(key, i);
+                    i
+                }
+            };
+            path.push(idx);
+            parent = Some(idx);
+        }
+        self.chains.push(SubmittedChain {
+            label: label.to_string(),
+            config: config.to_string(),
+            path,
+        });
+        self.chains.len() - 1
+    }
+
+    /// Unique trie nodes — the number of stage executions a cold run pays.
+    pub fn unique_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Total stage applications requested across all submitted chains —
+    /// what the pre-planner implementation paid.
+    pub fn total_stages(&self) -> usize {
+        self.chains.iter().map(|c| c.path.len()).sum()
+    }
+
+    pub fn num_chains(&self) -> usize {
+        self.chains.len()
+    }
+
+    /// Distinct first stages across all chains (e.g. the six
+    /// distill-started orders share exactly one `D` root child).
+    pub fn root_children(&self) -> usize {
+        self.nodes.iter().filter(|n| n.parent.is_none()).count()
+    }
+
+    /// Content addresses along a submitted chain (tests + diagnostics).
+    pub fn chain_node_ids(&self, chain: usize) -> Vec<NodeId> {
+        self.chains[chain].path.iter().map(|&i| self.nodes[i].id).collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The executor
+// ---------------------------------------------------------------------------
+
+/// How one trie node is applied and measured.  The production
+/// implementation is [`PjrtRunner`]; tests substitute an engine-free
+/// runner to exercise the executor and cache without artifacts.
+pub trait NodeRunner {
+    fn apply(&self, stage: &dyn CompressionStage, state: &mut ModelState) -> Result<()>;
+    fn measure(&self, state: &ModelState) -> Result<Measurement>;
+    /// Extra measurements derived from a chain's final state without
+    /// retraining (the runtime threshold sweep of trained-exit models),
+    /// as (config-suffix, measurement) pairs — the executor applies the
+    /// chain's label/config and caches them per leaf node.
+    fn extra_measurements(&self, state: &ModelState) -> Result<Vec<(String, Measurement)>>;
+    /// Identity of the extra-measurement semantics (e.g. the runtime
+    /// threshold grid).  Node ids don't cover it, so cached extras record
+    /// this signature and a mismatch is a miss — editing the grid can
+    /// never silently replay stale sweeps.
+    fn extras_signature(&self) -> String {
+        String::new()
+    }
+}
+
+/// Executes stages through a PJRT engine: `apply` builds a [`StageCtx`]
+/// over the engine + datasets, `measure` is `Measurement::take`, and
+/// `extra_measurements` is the paper's §3.1 runtime-threshold sweep.  Generic
+/// over engine ownership: the main thread borrows the experiment engine,
+/// worker threads own one engine each (PJRT handles are not `Send`).
+pub struct PjrtRunner<'d, E: Borrow<Engine>> {
+    engine: E,
+    train: &'d Dataset,
+    test: &'d Dataset,
+    base_steps: usize,
+    seed: u64,
+    verbose: bool,
+}
+
+impl<'d, E: Borrow<Engine>> PjrtRunner<'d, E> {
+    pub fn new(
+        engine: E,
+        train: &'d Dataset,
+        test: &'d Dataset,
+        base_steps: usize,
+        seed: u64,
+        verbose: bool,
+    ) -> Self {
+        PjrtRunner { engine, train, test, base_steps, seed, verbose }
+    }
+
+    fn ctx(&self) -> StageCtx<'_> {
+        StageCtx {
+            engine: self.engine.borrow(),
+            train: self.train,
+            test: self.test,
+            base_steps: self.base_steps,
+            seed: self.seed,
+            verbose: self.verbose,
+        }
+    }
+}
+
+impl<'d, E: Borrow<Engine>> NodeRunner for PjrtRunner<'d, E> {
+    fn apply(&self, stage: &dyn CompressionStage, state: &mut ModelState) -> Result<()> {
+        stage.apply(state, &self.ctx())
+    }
+
+    fn measure(&self, state: &ModelState) -> Result<Measurement> {
+        Measurement::take(self.engine.borrow(), state, self.test)
+    }
+
+    fn extra_measurements(&self, state: &ModelState) -> Result<Vec<(String, Measurement)>> {
+        if !state.exits.trained {
+            return Ok(Vec::new());
+        }
+        // Extra samples from runtime thresholds, no retraining.
+        let (main, e1, e2) = train::eval_logits(self.engine.borrow(), state, self.test)?;
+        let mut out = Vec::new();
+        for (t, ev) in exits::threshold_sweep(
+            &main,
+            &e1,
+            &e2,
+            &self.test.labels,
+            &EXIT_SWEEP_THRESHOLDS,
+        ) {
+            let mut st = state.clone();
+            st.exits.thresholds = Some((t, t));
+            st.exits.exit_probs = (ev.p_exit1, ev.p_exit2);
+            let acct = Accountant::new(&st);
+            out.push((
+                format!("t={t:.2}"),
+                Measurement {
+                    accuracy: ev.accuracy,
+                    bitops_cr: acct.bitops_cr(),
+                    storage_cr: acct.storage_cr(),
+                    bitops: acct.expected_bitops(),
+                    storage_bits: acct.storage_bits(),
+                    exit_probs: (ev.p_exit1, ev.p_exit2),
+                },
+            ));
+        }
+        Ok(out)
+    }
+
+    fn extras_signature(&self) -> String {
+        let grid: Vec<String> = EXIT_SWEEP_THRESHOLDS.iter().map(|t| t.to_string()).collect();
+        format!("tsweep|{}", grid.join(","))
+    }
+}
+
+/// Runtime threshold grid for the paper's §3.1 exit sweep.  Part of
+/// [`NodeRunner::extras_signature`]: changing it invalidates cached
+/// extras automatically.
+const EXIT_SWEEP_THRESHOLDS: [f32; 6] = [0.35, 0.5, 0.65, 0.8, 0.9, 0.97];
+
+/// Execution knobs, surfaced on the CLI as `--jobs N` / `--no-cache`.
+#[derive(Debug, Clone)]
+pub struct ExecOpts {
+    /// Worker threads; `<= 1` runs serially on the caller's runner.
+    pub jobs: usize,
+    /// Snapshot/replay directory; `None` disables caching.
+    pub cache_dir: Option<PathBuf>,
+    /// Compute runtime-threshold extras for trained-exit leaves.  Drivers
+    /// that only read per-stage reports turn this off and skip the
+    /// per-leaf eval entirely.
+    pub extras: bool,
+    pub verbose: bool,
+}
+
+impl Default for ExecOpts {
+    fn default() -> Self {
+        ExecOpts { jobs: 1, cache_dir: None, extras: true, verbose: false }
+    }
+}
+
+/// Per-execute accounting, logged and written to `results/plan_stats.csv`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct PlanStats {
+    pub chains: usize,
+    pub total_stages: usize,
+    pub unique_nodes: usize,
+    pub cache_hits: usize,
+    pub executed: usize,
+    pub wall_ms: f64,
+}
+
+/// One submitted chain after execution: the per-stage reports (same shape
+/// `Chain::run` produced) plus the final state for runtime sweeps.
+/// `final_state` is shared, not cloned — chains ending on the same trie
+/// node hand out the same `Arc`.
+pub struct ChainOutcome {
+    pub label: String,
+    pub config: String,
+    pub reports: Vec<StageReport>,
+    pub final_state: Arc<ModelState>,
+}
+
+/// Everything an experiment driver needs back from one plan execution.
+pub struct PlanRun {
+    pub outcomes: Vec<ChainOutcome>,
+    /// `SweepPoint`s in submission order: final measurement per chain plus
+    /// runtime-threshold extras for trained-exit final states — exactly
+    /// what the pre-planner `run_chain_points` emitted per chain.
+    pub points: Vec<SweepPoint>,
+    pub stats: PlanStats,
+}
+
+/// `state` is `Arc`ed so worker threads can take a cheap handle under the
+/// scheduler lock and clone the tensors outside it, and `Option` so
+/// interior states can be dropped as soon as every child has consumed
+/// them — peak memory is O(frontier + chain leaves), not O(unique nodes).
+struct NodeResult {
+    state: Option<Arc<ModelState>>,
+    meas: Measurement,
+    hit: bool,
+}
+
+/// Scheduler state shared by the worker pool.
+struct Sched {
+    ready: Vec<usize>,
+    results: Vec<Option<NodeResult>>,
+    /// Children not yet executed, per node; at zero a non-leaf state drops.
+    pending: Vec<usize>,
+    done: usize,
+    error: Option<String>,
+}
+
+/// Armed for the whole life of a worker thread: if the worker unwinds
+/// (a stage panic, an `expect` firing) instead of returning, the guard
+/// records the failure and wakes every peer so `thread::scope` can join
+/// and propagate the panic — without it, waiters sleep on the condvar
+/// forever and the process hangs.
+struct PanicGuard<'a> {
+    sched: &'a Mutex<Sched>,
+    cv: &'a Condvar,
+    armed: bool,
+}
+
+impl Drop for PanicGuard<'_> {
+    fn drop(&mut self) {
+        if self.armed {
+            if let Ok(mut g) = self.sched.lock() {
+                if g.error.is_none() {
+                    g.error = Some("plan worker panicked".to_string());
+                }
+            }
+            self.cv.notify_all();
+        }
+    }
+}
+
+/// Drop a finished node's parent state once its last child has consumed
+/// it, unless some chain still needs it as a final state.
+fn release_parent(
+    parent: Option<usize>,
+    results: &mut [Option<NodeResult>],
+    pending: &mut [usize],
+    leaf: &[bool],
+) {
+    if let Some(p) = parent {
+        pending[p] -= 1;
+        if pending[p] == 0 && !leaf[p] {
+            if let Some(r) = &mut results[p] {
+                r.state = None;
+            }
+        }
+    }
+}
+
+impl Planner {
+    /// Execute every unique node once and synthesize per-chain outcomes.
+    ///
+    /// `main` is the caller-thread runner (used for serial execution and
+    /// for point synthesis); `factory` builds one runner per worker thread
+    /// when `opts.jobs > 1` and is never called otherwise.
+    pub fn execute<R, R2, F>(
+        &self,
+        base: &ModelState,
+        main: &R,
+        opts: &ExecOpts,
+        factory: F,
+    ) -> Result<PlanRun>
+    where
+        R: NodeRunner,
+        R2: NodeRunner,
+        F: Fn() -> Result<R2> + Sync,
+    {
+        let t0 = Instant::now();
+        if let Some(dir) = &opts.cache_dir {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating plan cache dir {}", dir.display()))?;
+        }
+        let cache_dir = opts.cache_dir.as_deref();
+        // Retention policy: which nodes end some chain (their states are
+        // needed at synthesis) and how many children each node still owes.
+        let mut leaf = vec![false; self.nodes.len()];
+        for ch in &self.chains {
+            if let Some(&i) = ch.path.last() {
+                leaf[i] = true;
+            }
+        }
+        let pending: Vec<usize> = self.nodes.iter().map(|n| n.children.len()).collect();
+
+        let results = if opts.jobs > 1 && self.nodes.len() > 1 {
+            self.execute_parallel(base, opts, cache_dir, &leaf, pending, &factory)?
+        } else {
+            self.execute_serial(base, main, cache_dir, &leaf, pending, opts.verbose)?
+        };
+
+        let cache_hits = results.iter().filter(|r| r.hit).count();
+        let stats = PlanStats {
+            chains: self.chains.len(),
+            total_stages: self.total_stages(),
+            unique_nodes: self.nodes.len(),
+            cache_hits,
+            executed: self.nodes.len() - cache_hits,
+            wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+        };
+        println!(
+            "[plan] {} chains / {} stage applications -> {} unique nodes ({} cache hits, {} executed) in {:.1}s",
+            stats.chains,
+            stats.total_stages,
+            stats.unique_nodes,
+            stats.cache_hits,
+            stats.executed,
+            stats.wall_ms / 1e3
+        );
+
+        // Synthesize per-chain outcomes and sweep points.  Leaf extras
+        // (the runtime threshold sweep) are content-addressed too:
+        // replayed from `<node_id>.extras.json` on warm runs, computed
+        // once per distinct leaf otherwise.
+        let mut extras_memo: BTreeMap<NodeId, Vec<(String, Measurement)>> = BTreeMap::new();
+        let mut outcomes = Vec::with_capacity(self.chains.len());
+        let mut points = Vec::new();
+        for ch in &self.chains {
+            let reports: Vec<StageReport> = ch
+                .path
+                .iter()
+                .map(|&i| StageReport {
+                    stage: self.nodes[i].stage.name(),
+                    technique: self.nodes[i].stage.technique(),
+                    measurement: results[i].meas.clone(),
+                })
+                .collect();
+            let final_state: Arc<ModelState> = match ch.path.last() {
+                Some(&i) => results[i].state.clone().expect("leaf state retained"),
+                None => Arc::new(base.clone()),
+            };
+            let last = match reports.last() {
+                Some(r) => r.measurement.clone(),
+                None => main.measure(&final_state)?,
+            };
+            points.push(SweepPoint {
+                label: ch.label.clone(),
+                config: ch.config.clone(),
+                measurement: last,
+            });
+            if opts.extras && final_state.exits.trained {
+                let extras = match ch.path.last() {
+                    Some(&i) => leaf_extras(
+                        self.nodes[i].id,
+                        &final_state,
+                        main,
+                        cache_dir,
+                        &mut extras_memo,
+                    )?,
+                    None => main.extra_measurements(&final_state)?,
+                };
+                points.extend(extras.into_iter().map(|(suffix, m)| SweepPoint {
+                    label: ch.label.clone(),
+                    config: format!("{},{suffix}", ch.config),
+                    measurement: m,
+                }));
+            }
+            outcomes.push(ChainOutcome {
+                label: ch.label.clone(),
+                config: ch.config.clone(),
+                reports,
+                final_state,
+            });
+        }
+        Ok(PlanRun { outcomes, points, stats })
+    }
+
+    fn execute_serial<R: NodeRunner>(
+        &self,
+        base: &ModelState,
+        runner: &R,
+        cache_dir: Option<&Path>,
+        leaf: &[bool],
+        mut pending: Vec<usize>,
+        verbose: bool,
+    ) -> Result<Vec<NodeResult>> {
+        // Submission order is topological: parents are interned before
+        // their children.
+        let mut results: Vec<Option<NodeResult>> = (0..self.nodes.len()).map(|_| None).collect();
+        for (i, node) in self.nodes.iter().enumerate() {
+            let parent_state = match node.parent {
+                Some(p) => results[p]
+                    .as_ref()
+                    .and_then(|r| r.state.as_deref())
+                    .expect("parent state retained"),
+                None => base,
+            };
+            let res = run_node(runner, node, parent_state, cache_dir, verbose)?;
+            results[i] = Some(res);
+            release_parent(node.parent, &mut results, &mut pending, leaf);
+        }
+        Ok(results.into_iter().map(|r| r.expect("all nodes executed")).collect())
+    }
+
+    fn execute_parallel<R2, F>(
+        &self,
+        base: &ModelState,
+        opts: &ExecOpts,
+        cache_dir: Option<&Path>,
+        leaf: &[bool],
+        pending: Vec<usize>,
+        factory: &F,
+    ) -> Result<Vec<NodeResult>>
+    where
+        R2: NodeRunner,
+        F: Fn() -> Result<R2> + Sync,
+    {
+        let n = self.nodes.len();
+        let init = Sched {
+            ready: (0..n).filter(|&i| self.nodes[i].parent.is_none()).collect(),
+            results: (0..n).map(|_| None).collect(),
+            pending,
+            done: 0,
+            error: None,
+        };
+        let sched = Mutex::new(init);
+        let cv = Condvar::new();
+        // The ready frontier is an antichain, and every frontier node
+        // extends to a distinct leaf — so leaf count bounds useful
+        // parallelism.  A linear chain gets exactly one worker no matter
+        // how large --jobs is.
+        let width = self.nodes.iter().filter(|nd| nd.children.is_empty()).count().max(1);
+        let jobs = opts.jobs.min(n).min(width);
+        let verbose = opts.verbose;
+
+        std::thread::scope(|s| {
+            for _ in 0..jobs {
+                s.spawn(|| {
+                    let mut guard = PanicGuard { sched: &sched, cv: &cv, armed: true };
+                    // One runner (one engine) per worker thread, built
+                    // lazily on the first node this worker actually pops —
+                    // a narrow trie (e.g. one linear chain) never pays for
+                    // engines that would only block on the condvar.
+                    let mut runner: Option<R2> = None;
+                    loop {
+                        // Under the lock, only pop a node and take a cheap
+                        // Arc handle on its parent; tensor clones happen
+                        // outside so workers never serialize on a memcpy.
+                        let (idx, parent_arc) = {
+                            let mut g = sched.lock().unwrap();
+                            loop {
+                                if g.error.is_some() || g.done == n {
+                                    drop(g);
+                                    guard.armed = false;
+                                    return;
+                                }
+                                if let Some(i) = g.ready.pop() {
+                                    let ps = match self.nodes[i].parent {
+                                        Some(p) => Some(
+                                            g.results[p]
+                                                .as_ref()
+                                                .and_then(|r| r.state.clone())
+                                                .expect("parent state retained"),
+                                        ),
+                                        None => None,
+                                    };
+                                    break (i, ps);
+                                }
+                                g = cv.wait(g).unwrap();
+                            }
+                        };
+                        if runner.is_none() {
+                            match factory() {
+                                Ok(r) => runner = Some(r),
+                                Err(e) => {
+                                    sched.lock().unwrap().error =
+                                        Some(format!("plan worker setup: {e:#}"));
+                                    cv.notify_all();
+                                    guard.armed = false;
+                                    return;
+                                }
+                            }
+                        }
+                        let parent_state = parent_arc.as_deref().unwrap_or(base);
+                        match run_node(
+                            runner.as_ref().expect("runner built above"),
+                            &self.nodes[idx],
+                            parent_state,
+                            cache_dir,
+                            verbose,
+                        ) {
+                            Ok(res) => {
+                                let mut g = sched.lock().unwrap();
+                                g.results[idx] = Some(res);
+                                g.done += 1;
+                                g.ready.extend_from_slice(&self.nodes[idx].children);
+                                let Sched { results, pending, .. } = &mut *g;
+                                release_parent(self.nodes[idx].parent, results, pending, leaf);
+                                cv.notify_all();
+                            }
+                            Err(e) => {
+                                sched.lock().unwrap().error = Some(format!("{e:#}"));
+                                cv.notify_all();
+                                guard.armed = false;
+                                return;
+                            }
+                        }
+                    }
+                });
+            }
+        });
+
+        let g = sched.into_inner().unwrap();
+        if let Some(e) = g.error {
+            return Err(anyhow!("plan execution failed: {e}"));
+        }
+        if g.done != n {
+            return Err(anyhow!("plan execution stalled at {}/{n} nodes", g.done));
+        }
+        Ok(g.results.into_iter().map(|r| r.expect("scheduled node completed")).collect())
+    }
+}
+
+/// Run one trie node: replay from the content-addressed cache when both
+/// the tagged state snapshot and the measurement sidecar are valid, else
+/// apply the stage to a clone of the parent state and snapshot the result.
+fn run_node<R: NodeRunner>(
+    runner: &R,
+    node: &Node,
+    parent: &ModelState,
+    cache_dir: Option<&Path>,
+    verbose: bool,
+) -> Result<NodeResult> {
+    let tag = node.id.to_string();
+    let paths = cache_dir.map(|d| (d.join(format!("{tag}.state")), d.join(format!("{tag}.meas.json"))));
+    if let Some((sp, mp)) = &paths {
+        if sp.exists() && mp.exists() {
+            let loaded = ModelState::load_tagged(sp, parent.arch.clone(), Some(&tag)).and_then(|st| {
+                let j = Json::parse(&std::fs::read_to_string(mp)?)?;
+                Ok((st, Measurement::from_json(&j)?))
+            });
+            match loaded {
+                Ok((state, meas)) => {
+                    if verbose {
+                        eprintln!("[plan] hit  {} {}", node.id, node.stage.name());
+                    }
+                    return Ok(NodeResult { state: Some(Arc::new(state)), meas, hit: true });
+                }
+                Err(e) => {
+                    if verbose {
+                        eprintln!("[plan] stale cache entry {}: {e:#}", node.id);
+                    }
+                }
+            }
+        }
+    }
+
+    if verbose {
+        eprintln!("[plan] exec {} {}", node.id, node.stage.name());
+    }
+    let mut state = parent.clone();
+    runner
+        .apply(node.stage.as_ref(), &mut state)
+        .with_context(|| format!("plan node {} ({})", node.id, node.stage.name()))?;
+    state.history.push(node.stage.name());
+    let meas = runner
+        .measure(&state)
+        .with_context(|| format!("measuring plan node {}", node.id))?;
+
+    if let Some((sp, mp)) = &paths {
+        // Write-then-rename so an interrupted run can never leave a
+        // half-written snapshot that later loads as a valid hit.  The tmp
+        // name is per-process: concurrent `coc` runs over a shared cache
+        // write identical bytes under distinct tmps and the second rename
+        // atomically (and harmlessly) replaces the first.
+        let tmp = sp.with_extension(format!("state.tmp.{}", std::process::id()));
+        state.save_tagged(&tmp, Some(&tag))?;
+        std::fs::rename(&tmp, sp)
+            .with_context(|| format!("publishing snapshot {}", sp.display()))?;
+        std::fs::write(mp, meas.to_json().to_string())
+            .with_context(|| format!("writing {}", mp.display()))?;
+    }
+    Ok(NodeResult { state: Some(Arc::new(state)), meas, hit: false })
+}
+
+/// Threshold-sweep extras for one leaf state, replayed from
+/// `<node_id>.extras.json` when cached under the same semantics
+/// signature, computed (and snapshotted) once per distinct leaf
+/// otherwise.
+fn leaf_extras<R: NodeRunner>(
+    id: NodeId,
+    state: &ModelState,
+    runner: &R,
+    cache_dir: Option<&Path>,
+    memo: &mut BTreeMap<NodeId, Vec<(String, Measurement)>>,
+) -> Result<Vec<(String, Measurement)>> {
+    if let Some(v) = memo.get(&id) {
+        return Ok(v.clone());
+    }
+    let sig = runner.extras_signature();
+    let path = cache_dir.map(|d| d.join(format!("{id}.extras.json")));
+    if let Some(p) = &path {
+        if p.exists() {
+            if let Ok(v) = parse_extras(p, &sig) {
+                memo.insert(id, v.clone());
+                return Ok(v);
+            }
+        }
+    }
+    let v = runner.extra_measurements(state)?;
+    if let Some(p) = &path {
+        let json = crate::util::json::obj(vec![
+            ("sig", crate::util::json::s(&sig)),
+            (
+                "extras",
+                Json::Arr(
+                    v.iter()
+                        .map(|(suffix, m)| {
+                            crate::util::json::obj(vec![
+                                ("suffix", crate::util::json::s(suffix)),
+                                ("m", m.to_json()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]);
+        std::fs::write(p, json.to_string())
+            .with_context(|| format!("writing {}", p.display()))?;
+    }
+    memo.insert(id, v.clone());
+    Ok(v)
+}
+
+fn parse_extras(path: &Path, want_sig: &str) -> Result<Vec<(String, Measurement)>> {
+    let j = Json::parse(&std::fs::read_to_string(path)?)?;
+    let got_sig = j.req("sig")?.as_str().unwrap_or("");
+    if got_sig != want_sig {
+        return Err(anyhow!("extras signature `{got_sig}` != expected `{want_sig}`"));
+    }
+    j.req("extras")?
+        .as_arr()
+        .ok_or_else(|| anyhow!("extras field is not an array"))?
+        .iter()
+        .map(|e| {
+            let suffix = e
+                .req("suffix")?
+                .as_str()
+                .ok_or_else(|| anyhow!("extras suffix is not a string"))?
+                .to_string();
+            Ok((suffix, Measurement::from_json(e.req("m")?)?))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chain::{stages, Technique};
+    use crate::order;
+    use crate::sweep;
+
+    fn key(seed: u64) -> PlanKey {
+        PlanKey {
+            arch: "mini_resnet".into(),
+            dataset: "c10".into(),
+            scale: "smoke".into(),
+            base_steps: 40,
+            seed,
+        }
+    }
+
+    fn chain_for(seq: &[Technique], rung: usize, ladder: usize) -> Chain {
+        let mut c = Chain::new();
+        for &t in seq {
+            c = c.push(sweep::stage_at(t, rung, ladder));
+        }
+        c
+    }
+
+    #[test]
+    fn six_distill_orders_share_one_d_node() {
+        let mut plan = Planner::new(key(42));
+        for seq in order::distill_started_orders() {
+            plan.submit(chain_for(&seq, 0, 2), &order::sequence_string(&seq), "rung0");
+        }
+        assert_eq!(plan.num_chains(), 6);
+        assert_eq!(plan.total_stages(), 24);
+        // D(1) + {P,Q,E}(3) + second-level pairs(6) + leaves(6).
+        assert_eq!(plan.unique_nodes(), 16);
+        assert_eq!(plan.root_children(), 1, "all six orders share exactly one D node");
+    }
+
+    #[test]
+    fn resubmitting_a_chain_adds_no_nodes() {
+        let mut plan = Planner::new(key(42));
+        let seq = order::paper_law();
+        let a = plan.submit(chain_for(&seq, 0, 2), "DPQE", "rung0");
+        let b = plan.submit(chain_for(&seq, 0, 2), "DPQE", "again");
+        assert_eq!(plan.unique_nodes(), 4);
+        assert_eq!(plan.chain_node_ids(a), plan.chain_node_ids(b));
+    }
+
+    #[test]
+    fn fingerprint_changes_move_the_node_id() {
+        let mut plan = Planner::new(key(42));
+        let mild = plan.submit(
+            Chain::new().push(Box::new(stages::Prune { ratio: 0.4, ..Default::default() })),
+            "P",
+            "mild",
+        );
+        let aggressive = plan.submit(
+            Chain::new().push(Box::new(stages::Prune { ratio: 0.7, ..Default::default() })),
+            "P",
+            "aggressive",
+        );
+        assert_eq!(plan.unique_nodes(), 2, "different rungs are different nodes");
+        assert_ne!(plan.chain_node_ids(mild), plan.chain_node_ids(aggressive));
+
+        // A hidden hyper-parameter (not in the display name) still splits.
+        let ft = plan.submit(
+            Chain::new().push(Box::new(stages::Prune {
+                ratio: 0.4,
+                finetune_frac: 0.9,
+                ..Default::default()
+            })),
+            "P",
+            "long-ft",
+        );
+        assert_eq!(plan.unique_nodes(), 3);
+        assert_ne!(plan.chain_node_ids(mild), plan.chain_node_ids(ft));
+    }
+
+    #[test]
+    fn plan_key_salts_every_node_id() {
+        let chain = || Chain::new().push(Box::new(stages::Quantize::default()));
+        let mut a = Planner::new(key(42));
+        let mut b = Planner::new(key(43));
+        let mut c = Planner::new(PlanKey { arch: "mini_vgg".into(), ..key(42) });
+        let mut d = Planner::new(PlanKey { base_steps: 80, ..key(42) });
+        let ia = a.submit(chain(), "Q", "x");
+        let ib = b.submit(chain(), "Q", "x");
+        let ic = c.submit(chain(), "Q", "x");
+        let id = d.submit(chain(), "Q", "x");
+        assert_ne!(a.chain_node_ids(ia), b.chain_node_ids(ib));
+        assert_ne!(a.chain_node_ids(ia), c.chain_node_ids(ic));
+        // A changed training budget must move the address even when the
+        // scale tag (which usually implies it) stays the same.
+        assert_ne!(a.chain_node_ids(ia), d.chain_node_ids(id));
+    }
+
+    #[test]
+    fn node_ids_are_prefix_hash_chains() {
+        let mut plan = Planner::new(key(1));
+        let pq = plan.submit(
+            Chain::new()
+                .push(Box::new(stages::Prune::default()))
+                .push(Box::new(stages::Quantize::default())),
+            "PQ",
+            "x",
+        );
+        let p = plan.submit(Chain::new().push(Box::new(stages::Prune::default())), "P", "x");
+        let ids_pq = plan.chain_node_ids(pq);
+        let ids_p = plan.chain_node_ids(p);
+        // The P chain's single node IS the PQ chain's first node.
+        assert_eq!(ids_p[0], ids_pq[0]);
+        assert_ne!(ids_pq[0], ids_pq[1]);
+        // Display form is 32 lowercase hex chars (cache file names).
+        let s = ids_pq[1].to_string();
+        assert_eq!(s.len(), 32);
+        assert!(s.chars().all(|c| c.is_ascii_hexdigit()));
+    }
+}

@@ -56,6 +56,15 @@ impl CompressionStage for Distill {
         Technique::Distill
     }
 
+    fn fingerprint(&self) -> String {
+        // `{}` on f32 is the shortest round-trippable form, so distinct
+        // hyper-parameters can never collide in the fingerprint.
+        format!(
+            "distill|w={}|a={}|tau={}|sm={}",
+            self.width, self.alpha, self.tau, self.steps_mult
+        )
+    }
+
     fn apply(&self, state: &mut ModelState, ctx: &StageCtx) -> Result<()> {
         ensure!(self.width > 0.0 && self.width <= 1.0, "bad student width {}", self.width);
         // 1. Teacher logits over the training set (teacher = current state).
@@ -155,6 +164,14 @@ impl CompressionStage for Prune {
         Technique::Prune
     }
 
+    fn fingerprint(&self) -> String {
+        let imp = match self.importance {
+            Importance::L2 => "l2",
+            Importance::Random => "random",
+        };
+        format!("prune|r={}|ft={}|imp={imp}", self.ratio, self.finetune_frac)
+    }
+
     fn apply(&self, state: &mut ModelState, ctx: &StageCtx) -> Result<()> {
         ensure!((0.0..1.0).contains(&self.ratio), "bad prune ratio {}", self.ratio);
         let mut rng = crate::util::rng::Rng::new(ctx.seed ^ 0x9121e);
@@ -219,6 +236,10 @@ impl CompressionStage for Quantize {
         Technique::Quantize
     }
 
+    fn fingerprint(&self) -> String {
+        format!("quantize|bw={}|ba={}|ft={}", self.bits_w, self.bits_a, self.finetune_frac)
+    }
+
     fn apply(&self, state: &mut ModelState, ctx: &StageCtx) -> Result<()> {
         ensure!(self.bits_w >= 1.0 && self.bits_a >= 1.0, "quantize needs bits >= 1");
         state.qbits = QBits { weight: self.bits_w, act: self.bits_a };
@@ -265,6 +286,13 @@ impl CompressionStage for EarlyExit {
 
     fn technique(&self) -> Technique {
         Technique::EarlyExit
+    }
+
+    fn fingerprint(&self) -> String {
+        format!(
+            "early_exit|w1={}|w2={}|t={}|tf={}",
+            self.exit_w[0], self.exit_w[1], self.threshold, self.train_frac
+        )
     }
 
     fn apply(&self, state: &mut ModelState, ctx: &StageCtx) -> Result<()> {
@@ -332,6 +360,10 @@ impl CompressionStage for WeightCluster {
         Technique::Quantize // storage-side quantization family
     }
 
+    fn fingerprint(&self) -> String {
+        format!("weight_cluster|bits={}|ft={}", self.index_bits, self.finetune_frac)
+    }
+
     fn apply(&self, state: &mut ModelState, ctx: &StageCtx) -> Result<()> {
         ensure!((1..=8).contains(&self.index_bits), "index_bits must be 1..=8");
         let k = 1usize << self.index_bits;
@@ -363,6 +395,10 @@ impl CompressionStage for HuffmanCoding {
 
     fn technique(&self) -> Technique {
         Technique::Quantize
+    }
+
+    fn fingerprint(&self) -> String {
+        "huffman_coding".into()
     }
 
     fn apply(&self, state: &mut ModelState, _ctx: &StageCtx) -> Result<()> {
@@ -414,5 +450,28 @@ mod tests {
         assert!(Quantize { bits_w: 2.0, bits_a: 8.0, ..Default::default() }
             .name()
             .contains("2w8a"));
+    }
+
+    #[test]
+    fn fingerprints_cover_every_hyperparameter() {
+        // Fields the short display name drops must still flip the
+        // fingerprint — cache identity depends on it.
+        let base = Prune::default();
+        let ft = Prune { finetune_frac: 0.9, ..Default::default() };
+        let imp = Prune { importance: Importance::Random, ..Default::default() };
+        assert_eq!(base.name(), ft.name());
+        assert_ne!(base.fingerprint(), ft.fingerprint());
+        assert_ne!(base.fingerprint(), imp.fingerprint());
+
+        let d = Distill::default();
+        let tau = Distill { tau: 2.0, ..Default::default() };
+        assert_ne!(d.fingerprint(), tau.fingerprint());
+
+        let e = EarlyExit::default();
+        let tf = EarlyExit { train_frac: 0.9, ..Default::default() };
+        assert_ne!(e.fingerprint(), tf.fingerprint());
+
+        let q = Quantize::default();
+        assert_eq!(q.fingerprint(), Quantize::default().fingerprint());
     }
 }

@@ -2,9 +2,16 @@
 //! experiment index).  Every driver writes `results/<id>.csv` plus a
 //! console summary in the paper's own terms, and returns the written rows
 //! for composition (fig13/fig15 reuse table runs).
+//!
+//! Drivers never run chains imperatively: they *submit* chains to a
+//! [`Planner`] (`chain::plan`) and call [`ExpCtx::run_plan`], which
+//! dedupes shared stage prefixes, replays cached nodes from
+//! `results/cache/`, fans independent branches out over `--jobs` worker
+//! engines, and appends per-run accounting to `results/plan_stats.csv`.
 
 use anyhow::{anyhow, Result};
 
+use crate::chain::plan::{ExecOpts, PjrtRunner, PlanKey, PlanRun, Planner};
 use crate::chain::{Chain, StageCtx, Technique};
 use crate::data::{Dataset, DatasetKind};
 use crate::metrics::Measurement;
@@ -23,6 +30,11 @@ pub struct ExpCtx {
     pub seed: u64,
     pub reporter: Reporter,
     pub verbose: bool,
+    /// Plan-executor worker threads (1 = serial on the main engine).
+    pub jobs: usize,
+    /// Snapshot/replay plan nodes under `results/cache/` (`--no-cache`
+    /// turns this off).
+    pub cache: bool,
 }
 
 impl ExpCtx {
@@ -34,6 +46,8 @@ impl ExpCtx {
             seed,
             reporter: Reporter::new(out)?,
             verbose,
+            jobs: 1,
+            cache: true,
         })
     }
 
@@ -56,9 +70,9 @@ impl ExpCtx {
     ) -> Result<ModelState> {
         let arch = self.manifest.arch(arch_name)?;
         let cache = self.reporter.path(&format!(
-            "cache/{arch_name}_{}_{:?}_s{}.state",
+            "cache/{arch_name}_{}_{}_s{}.state",
             kind.name(),
-            self.scale,
+            self.scale.name(),
             self.seed
         ));
         if cache.exists() {
@@ -88,6 +102,106 @@ impl ExpCtx {
             verbose: self.verbose,
         }
     }
+
+    /// Fresh planner rooted at this context's (arch, dataset, scale,
+    /// training budget, seed).
+    pub fn planner(&self, arch_name: &str, kind: DatasetKind) -> Planner {
+        Planner::new(PlanKey {
+            arch: arch_name.to_string(),
+            dataset: kind.name().to_string(),
+            scale: self.scale.name().to_string(),
+            base_steps: self.scale.base_steps(),
+            seed: self.seed,
+        })
+    }
+
+    /// Execute a plan under this context's `--jobs` / `--no-cache`
+    /// settings and append the run's cache accounting to
+    /// `results/plan_stats.csv`.  Includes runtime-threshold extras in
+    /// `run.points` for trained-exit chains.
+    pub fn run_plan(
+        &self,
+        exp_id: &str,
+        plan: &Planner,
+        base: &ModelState,
+        train_ds: &Dataset,
+        test_ds: &Dataset,
+    ) -> Result<PlanRun> {
+        self.run_plan_impl(exp_id, plan, base, train_ds, test_ds, true)
+    }
+
+    /// Like [`ExpCtx::run_plan`] but skips the per-leaf threshold-sweep
+    /// eval — for drivers that only read `run.outcomes`.
+    pub fn run_plan_reports(
+        &self,
+        exp_id: &str,
+        plan: &Planner,
+        base: &ModelState,
+        train_ds: &Dataset,
+        test_ds: &Dataset,
+    ) -> Result<PlanRun> {
+        self.run_plan_impl(exp_id, plan, base, train_ds, test_ds, false)
+    }
+
+    fn run_plan_impl(
+        &self,
+        exp_id: &str,
+        plan: &Planner,
+        base: &ModelState,
+        train_ds: &Dataset,
+        test_ds: &Dataset,
+        extras: bool,
+    ) -> Result<PlanRun> {
+        let runner = PjrtRunner::new(
+            &self.engine,
+            train_ds,
+            test_ds,
+            self.scale.base_steps(),
+            self.seed,
+            self.verbose,
+        );
+        let opts = ExecOpts {
+            jobs: self.jobs,
+            cache_dir: self.cache.then(|| self.reporter.path("cache")),
+            extras,
+            verbose: self.verbose,
+        };
+        let artifacts = self.engine.artifacts_dir().to_path_buf();
+        let (base_steps, seed, verbose) = (self.scale.base_steps(), self.seed, self.verbose);
+        // One engine per plan worker thread (PJRT handles are not
+        // `Send`), same pattern as serve::worker.
+        let run = plan.execute(base, &runner, &opts, || match Engine::new(&artifacts) {
+            Ok(engine) => {
+                Ok(PjrtRunner::new(engine, train_ds, test_ds, base_steps, seed, verbose))
+            }
+            Err(e) => Err(e),
+        })?;
+        let st = &run.stats;
+        self.reporter.append_row(
+            "plan_stats.csv",
+            &[
+                "experiment",
+                "chains",
+                "stage_applications",
+                "unique_nodes",
+                "cache_hits",
+                "executed",
+                "jobs",
+                "wall_ms",
+            ],
+            &[
+                exp_id.to_string(),
+                st.chains.to_string(),
+                st.total_stages.to_string(),
+                st.unique_nodes.to_string(),
+                st.cache_hits.to_string(),
+                st.executed.to_string(),
+                self.jobs.to_string(),
+                format!("{:.1}", st.wall_ms),
+            ],
+        )?;
+        Ok(run)
+    }
 }
 
 /// The six pairwise figures.  fig6=(D,P) ... fig11=(Q,E); `first` is the
@@ -111,14 +225,15 @@ pub fn run_pair_fig(ctx: &ExpCtx, fig: usize) -> Result<Vec<SweepPoint>> {
     let (a, b) = pair_for_fig(fig).ok_or_else(|| anyhow!("fig{fig} is not a pairwise figure"))?;
     let (train_ds, test_ds) = ctx.datasets(DatasetKind::SynthC10);
     let base = ctx.base_model("mini_resnet", DatasetKind::SynthC10, &train_ds)?;
-    let sctx = ctx.stage_ctx(&train_ds, &test_ds);
     let ladder = ctx.scale.ladder();
 
-    let mut points = Vec::new();
-    points.extend(sweep::single_points(&base, a, &sctx, ladder)?);
-    points.extend(sweep::single_points(&base, b, &sctx, ladder)?);
-    points.extend(sweep::pairwise_points(&base, a, b, &sctx, ladder)?);
-    points.extend(sweep::pairwise_points(&base, b, a, &sctx, ladder)?);
+    let mut plan = ctx.planner("mini_resnet", DatasetKind::SynthC10);
+    sweep::submit_single(&mut plan, a, ladder);
+    sweep::submit_single(&mut plan, b, ladder);
+    sweep::submit_pairwise(&mut plan, a, b, ladder);
+    sweep::submit_pairwise(&mut plan, b, a, ladder);
+    let mut points =
+        ctx.run_plan(&format!("fig{fig}"), &plan, &base, &train_ds, &test_ds)?.points;
 
     // Baseline reference row.
     let m = Measurement::take(&ctx.engine, &base, &test_ds)?;
@@ -185,13 +300,11 @@ pub fn run_fig12(ctx: &ExpCtx) -> Result<()> {
     use Technique::*;
     let (train_ds, test_ds) = ctx.datasets(DatasetKind::SynthC10);
     let base = ctx.base_model("mini_resnet", DatasetKind::SynthC10, &train_ds)?;
-    let sctx = ctx.stage_ctx(&train_ds, &test_ds);
     let ladder = ctx.scale.ladder().min(3);
 
     let combos: [(Technique, Technique, Technique); 3] =
         [(Prune, Quantize, EarlyExit), (Prune, EarlyExit, Quantize), (Quantize, EarlyExit, Prune)];
-    let mut points = Vec::new();
-    let mut rows = Vec::new();
+    let mut plan = ctx.planner("mini_resnet", DatasetKind::SynthC10);
     for (a, b, t) in combos {
         for (x, y, lab) in [(a, b, "kept"), (b, a, "flipped")] {
             let label = format!("{}{}{}", x.letter(), t.letter(), y.letter());
@@ -200,15 +313,14 @@ pub fn run_fig12(ctx: &ExpCtx) -> Result<()> {
                     .push(sweep::stage_at(x, i, ladder))
                     .push(sweep::stage_at(t, i, ladder))
                     .push(sweep::stage_at(y, i, ladder));
-                points.extend(sweep::run_chain_points(
-                    &base,
-                    &chain,
-                    &sctx,
-                    &label,
-                    &format!("rung{i},{lab}"),
-                )?);
+                plan.submit(chain, &label, &format!("rung{i},{lab}"));
             }
         }
+    }
+    let points = ctx.run_plan("fig12", &plan, &base, &train_ds, &test_ds)?.points;
+
+    let mut rows = Vec::new();
+    for (a, b, t) in combos {
         let la = format!("{}{}{}", a.letter(), t.letter(), b.letter());
         let lb = format!("{}{}{}", b.letter(), t.letter(), a.letter());
         let fa: Vec<(f64, f64)> =
@@ -250,17 +362,16 @@ pub fn run_fig13(ctx: &ExpCtx) -> Result<()> {
     use Technique::*;
     let (train_ds, test_ds) = ctx.datasets(DatasetKind::SynthC10);
     let base = ctx.base_model("mini_resnet", DatasetKind::SynthC10, &train_ds)?;
-    let sctx = ctx.stage_ctx(&train_ds, &test_ds);
     let ladder = ctx.scale.ladder();
 
-    let mut points = Vec::new();
+    let mut plan = ctx.planner("mini_resnet", DatasetKind::SynthC10);
     for rung in 0..ladder {
-        let chain = chain_for_sequence(&order::paper_law(), rung, ladder);
-        points.extend(sweep::run_chain_points(&base, &chain, &sctx, "DPQE", &format!("rung{rung}"))?);
+        plan.submit(chain_for_sequence(&order::paper_law(), rung, ladder), "DPQE", &format!("rung{rung}"));
     }
     for (a, b) in [(Distill, Prune), (Distill, Quantize), (Prune, Quantize), (Quantize, EarlyExit)] {
-        points.extend(sweep::pairwise_points(&base, a, b, &sctx, ladder)?);
+        sweep::submit_pairwise(&mut plan, a, b, ladder);
     }
+    let points = ctx.run_plan("fig13", &plan, &base, &train_ds, &test_ds)?.points;
     ctx.reporter.write_points("fig13.csv", &points)?;
     let dpqe: Vec<(f64, f64)> = points.iter().filter(|p| p.label == "DPQE").map(|p| p.xy()).collect();
     let best_cr = dpqe.iter().map(|p| p.0).fold(0.0, f64::max);
@@ -269,30 +380,36 @@ pub fn run_fig13(ctx: &ExpCtx) -> Result<()> {
 }
 
 /// Table 1: all six distillation-started orders, max BitOpsCR under
-/// accuracy-loss budgets.
+/// accuracy-loss budgets.  The planner makes this the paper's headline
+/// reuse case: all six orders share one `D` node per rung, and `DPQE` /
+/// `DPEQ` share their whole `DP` prefix.
 pub fn run_table1(ctx: &ExpCtx) -> Result<()> {
     let (train_ds, test_ds) = ctx.datasets(DatasetKind::SynthC10);
     let base = ctx.base_model("mini_resnet", DatasetKind::SynthC10, &train_ds)?;
     let base_acc = train::eval_accuracy(&ctx.engine, &base, &test_ds)?;
-    let sctx = ctx.stage_ctx(&train_ds, &test_ds);
     let ladder = ctx.scale.ladder();
 
-    let budgets = [0.01, 0.02, 0.04, 0.08];
-    let mut all_points = Vec::new();
-    let mut per_order: Vec<(String, Vec<(f64, f64)>)> = Vec::new();
-    for seq in order::distill_started_orders() {
-        let label = order::sequence_string(&seq);
-        let mut pts = Vec::new();
-        for rung in 0..ladder {
-            let chain = chain_for_sequence(&seq, rung, ladder);
-            let got =
-                sweep::run_chain_points(&base, &chain, &sctx, &label, &format!("rung{rung}"))?;
-            pts.extend(got.iter().map(|p| p.xy()));
-            all_points.extend(got);
-        }
-        per_order.push((label, pts));
-    }
+    let mut plan = ctx.planner("mini_resnet", DatasetKind::SynthC10);
+    let labels: Vec<String> = order::distill_started_orders()
+        .into_iter()
+        .map(|seq| {
+            let label = order::sequence_string(&seq);
+            for rung in 0..ladder {
+                plan.submit(chain_for_sequence(&seq, rung, ladder), &label, &format!("rung{rung}"));
+            }
+            label
+        })
+        .collect();
+    let all_points = ctx.run_plan("table1", &plan, &base, &train_ds, &test_ds)?.points;
+    let per_order: Vec<(String, Vec<(f64, f64)>)> = labels
+        .into_iter()
+        .map(|label| {
+            let pts = all_points.iter().filter(|p| p.label == label).map(|p| p.xy()).collect();
+            (label, pts)
+        })
+        .collect();
 
+    let budgets = [0.01, 0.02, 0.04, 0.08];
     let mut rows = Vec::new();
     for &bud in &budgets {
         let mut row = vec![format!("<= {:.1}%", bud * 100.0)];
@@ -316,60 +433,47 @@ pub fn run_table1(ctx: &ExpCtx) -> Result<()> {
     Ok(())
 }
 
-/// Fig 14: repeating a single compression, alone and after DPQE.
+/// Fig 14: repeating a single compression, alone and after DPQE.  The
+/// `DPQE+X` chains extend the shared `DPQE` prefix — one extra node each.
 pub fn run_fig14(ctx: &ExpCtx) -> Result<()> {
     use Technique::*;
     let (train_ds, test_ds) = ctx.datasets(DatasetKind::SynthC10);
     let base = ctx.base_model("mini_resnet", DatasetKind::SynthC10, &train_ds)?;
-    let sctx = ctx.stage_ctx(&train_ds, &test_ds);
     let ladder = ctx.scale.ladder();
-    let mut points = Vec::new();
 
+    let mut plan = ctx.planner("mini_resnet", DatasetKind::SynthC10);
     // Repeating one method twice (mild rung) vs once-aggressive.
     for t in [Distill, Prune, Quantize] {
         let mild = 1.min(ladder - 1);
         let aggressive = (ladder - 1).max(mild + 1).min(ladder.max(2) - 1);
-        let twice = Chain::new().push(sweep::stage_at(t, mild, ladder)).push(sweep::stage_at(
-            t,
-            mild,
-            ladder,
-        ));
-        points.extend(sweep::run_chain_points(
-            &base,
-            &twice,
-            &sctx,
-            &format!("{0}{0}", t.letter()),
-            "mild x2",
-        )?);
+        let twice = Chain::new()
+            .push(sweep::stage_at(t, mild, ladder))
+            .push(sweep::stage_at(t, mild, ladder));
+        plan.submit(twice, &format!("{0}{0}", t.letter()), "mild x2");
         let once = Chain::new().push(sweep::stage_at(t, aggressive, ladder));
-        points.extend(sweep::run_chain_points(
-            &base,
-            &once,
-            &sctx,
-            &format!("{}_aggr", t.letter()),
-            "aggressive x1",
-        )?);
+        plan.submit(once, &format!("{}_aggr", t.letter()), "aggressive x1");
     }
-
     // DPQE then repeat a stage.
     let rung = 1.min(ladder - 1);
-    let mut state = base.clone();
-    let reports = chain_for_sequence(&order::paper_law(), rung, ladder).run(&mut state, &sctx)?;
-    points.push(SweepPoint {
-        label: "DPQE".into(),
-        config: format!("rung{rung}"),
-        measurement: reports.last().unwrap().measurement.clone(),
-    });
+    plan.submit(chain_for_sequence(&order::paper_law(), rung, ladder), "DPQE", &format!("rung{rung}"));
     for t in [Distill, Prune, Quantize] {
-        let mut st = state.clone();
-        let chain = Chain::new().push(sweep::stage_at(t, rung, ladder));
-        let reports = chain.run(&mut st, &sctx)?;
-        points.push(SweepPoint {
-            label: format!("DPQE+{}", t.letter()),
-            config: format!("rung{rung}"),
-            measurement: reports.last().unwrap().measurement.clone(),
-        });
+        let chain = chain_for_sequence(&order::paper_law(), rung, ladder)
+            .push(sweep::stage_at(t, rung, ladder));
+        plan.submit(chain, &format!("DPQE+{}", t.letter()), &format!("rung{rung}"));
     }
+    let run = ctx.run_plan_reports("fig14", &plan, &base, &train_ds, &test_ds)?;
+
+    // Final measurement per chain only (no runtime-threshold extras), the
+    // shape this figure has always had.
+    let points: Vec<SweepPoint> = run
+        .outcomes
+        .iter()
+        .map(|o| SweepPoint {
+            label: o.label.clone(),
+            config: o.config.clone(),
+            measurement: o.reports.last().expect("non-empty chain").measurement.clone(),
+        })
+        .collect();
     ctx.reporter.write_points("fig14.csv", &points)?;
     println!("fig14: wrote {} points", points.len());
     Ok(())
@@ -391,10 +495,15 @@ pub fn run_table_e2e(ctx: &ExpCtx, arch_name: &str, table_id: &str) -> Result<()
         let (train_ds, test_ds) = ctx.datasets(kind);
         let base = ctx.base_model(arch_name, kind, &train_ds)?;
         let orig_acc = train::eval_accuracy(&ctx.engine, &base, &test_ds)?;
-        let sctx = ctx.stage_ctx(&train_ds, &test_ds);
-        let mut state = base.clone();
-        let reports = chain_for_sequence(&order::paper_law(), rung, ladder).run(&mut state, &sctx)?;
-        let m = &reports.last().unwrap().measurement;
+        let mut plan = ctx.planner(arch_name, kind);
+        plan.submit(
+            chain_for_sequence(&order::paper_law(), rung, ladder),
+            "DPQE",
+            &format!("rung{rung}"),
+        );
+        let run = ctx.run_plan_reports(table_id, &plan, &base, &train_ds, &test_ds)?;
+        let reports = &run.outcomes[0].reports;
+        let m = &reports.last().expect("non-empty chain").measurement;
         rows.push(vec![
             kind.name().to_string(),
             format!("{:.2}", orig_acc * 100.0),
@@ -438,7 +547,6 @@ pub fn run_table5(ctx: &ExpCtx) -> Result<()> {
     let (train_ds, test_ds) = ctx.datasets(DatasetKind::SynthC10);
     let base = ctx.base_model("mini_resnet", DatasetKind::SynthC10, &train_ds)?;
     let orig_acc = train::eval_accuracy(&ctx.engine, &base, &test_ds)?;
-    let sctx = ctx.stage_ctx(&train_ds, &test_ds);
     let ladder = ctx.scale.ladder();
     let rung = 1.min(ladder - 1);
 
@@ -449,13 +557,17 @@ pub fn run_table5(ctx: &ExpCtx) -> Result<()> {
         ("P+Q (OICSR-style)", vec![Prune, Quantize]),
         ("Ours DPQE", order::paper_law()),
     ];
-    let mut rows = Vec::new();
+    let mut plan = ctx.planner("mini_resnet", DatasetKind::SynthC10);
     for (name, seq) in &baselines {
-        let mut state = base.clone();
-        let reports = chain_for_sequence(seq, rung, ladder).run(&mut state, &sctx)?;
-        let m = &reports.last().unwrap().measurement;
+        plan.submit(chain_for_sequence(seq, rung, ladder), name, &format!("rung{rung}"));
+    }
+    let run = ctx.run_plan_reports("table5", &plan, &base, &train_ds, &test_ds)?;
+
+    let mut rows = Vec::new();
+    for outcome in &run.outcomes {
+        let m = &outcome.reports.last().expect("non-empty chain").measurement;
         rows.push(vec![
-            name.to_string(),
+            outcome.label.clone(),
             format!("{:.2}({:+.2})", m.accuracy * 100.0, (m.accuracy - orig_acc) * 100.0),
             format!("{:.1}", m.bitops_cr),
             format!("{:.1}", m.storage_cr),
@@ -474,8 +586,7 @@ pub fn run_ablation_prune(ctx: &ExpCtx) -> Result<()> {
     use crate::chain::stages::{Importance, Prune};
     let (train_ds, test_ds) = ctx.datasets(DatasetKind::SynthC10);
     let base = ctx.base_model("mini_resnet", DatasetKind::SynthC10, &train_ds)?;
-    let sctx = ctx.stage_ctx(&train_ds, &test_ds);
-    let mut points = Vec::new();
+    let mut plan = ctx.planner("mini_resnet", DatasetKind::SynthC10);
     for &ratio in &[0.3f32, 0.5, 0.7] {
         for (imp, label) in [(Importance::L2, "prune_l2"), (Importance::Random, "prune_random")] {
             let chain = Chain::new().push(Box::new(Prune {
@@ -483,15 +594,10 @@ pub fn run_ablation_prune(ctx: &ExpCtx) -> Result<()> {
                 importance: imp,
                 ..Default::default()
             }));
-            points.extend(sweep::run_chain_points(
-                &base,
-                &chain,
-                &sctx,
-                label,
-                &format!("ratio={ratio}"),
-            )?);
+            plan.submit(chain, label, &format!("ratio={ratio}"));
         }
     }
+    let points = ctx.run_plan("ablation_prune", &plan, &base, &train_ds, &test_ds)?.points;
     ctx.reporter.write_points("ablation_prune.csv", &points)?;
     let score = |lab: &str| {
         stats::frontier_score(
@@ -514,35 +620,32 @@ pub fn run_deepcompression(ctx: &ExpCtx) -> Result<()> {
     let (train_ds, test_ds) = ctx.datasets(DatasetKind::SynthC10);
     let base = ctx.base_model("mini_resnet", DatasetKind::SynthC10, &train_ds)?;
     let orig_acc = train::eval_accuracy(&ctx.engine, &base, &test_ds)?;
-    let sctx = ctx.stage_ctx(&train_ds, &test_ds);
     let ladder = ctx.scale.ladder();
     let rung = 1.min(ladder - 1);
 
-    let mut rows = Vec::new();
-    // Deep Compression chain.
-    let mut st = base.clone();
+    let mut plan = ctx.planner("mini_resnet", DatasetKind::SynthC10);
     let dc = Chain::new()
         .push(Box::new(Prune { ratio: 0.5, ..Default::default() }))
         .push(Box::new(WeightCluster { index_bits: 4, ..Default::default() }))
         .push(Box::new(HuffmanCoding));
-    let reports = dc.run(&mut st, &sctx)?;
-    let m = &reports.last().unwrap().measurement;
-    rows.push(vec![
-        "Deep Compression (P+cluster+huffman)".into(),
-        format!("{:.2}({:+.2})", m.accuracy * 100.0, (m.accuracy - orig_acc) * 100.0),
-        format!("{:.1}", m.bitops_cr),
-        format!("{:.1}", m.storage_cr),
-    ]);
-    // Our DPQE at the same budget for contrast.
-    let mut st = base.clone();
-    let reports = chain_for_sequence(&order::paper_law(), rung, ladder).run(&mut st, &sctx)?;
-    let m = &reports.last().unwrap().measurement;
-    rows.push(vec![
-        "Ours DPQE".into(),
-        format!("{:.2}({:+.2})", m.accuracy * 100.0, (m.accuracy - orig_acc) * 100.0),
-        format!("{:.1}", m.bitops_cr),
-        format!("{:.1}", m.storage_cr),
-    ]);
+    plan.submit(dc, "Deep Compression (P+cluster+huffman)", "p0.5,k16");
+    plan.submit(
+        chain_for_sequence(&order::paper_law(), rung, ladder),
+        "Ours DPQE",
+        &format!("rung{rung}"),
+    );
+    let run = ctx.run_plan_reports("deepcompression", &plan, &base, &train_ds, &test_ds)?;
+
+    let mut rows = Vec::new();
+    for outcome in &run.outcomes {
+        let m = &outcome.reports.last().expect("non-empty chain").measurement;
+        rows.push(vec![
+            outcome.label.clone(),
+            format!("{:.2}({:+.2})", m.accuracy * 100.0, (m.accuracy - orig_acc) * 100.0),
+            format!("{:.1}", m.bitops_cr),
+            format!("{:.1}", m.storage_cr),
+        ]);
+    }
     let header = ["method", "acc(%)", "bitops_cr", "cr"];
     ctx.reporter.write_table("deepcompression.csv", &header, &rows)?;
     println!("deepcompression (orig acc {:.2}%):", orig_acc * 100.0);
@@ -612,5 +715,31 @@ mod tests {
     fn chain_for_sequence_letters() {
         let c = chain_for_sequence(&order::paper_law(), 0, 4);
         assert_eq!(c.sequence_letters(), "DPQE");
+    }
+
+    #[test]
+    fn table1_plan_dedupes_to_unique_prefixes() {
+        // The acceptance-criterion invariant, checked without an engine:
+        // table1's submission set at smoke scale executes each unique
+        // stage prefix exactly once.
+        let ladder = Scale::Smoke.ladder();
+        let mut plan = Planner::new(PlanKey {
+            arch: "mini_resnet".into(),
+            dataset: "c10".into(),
+            scale: Scale::Smoke.name().into(),
+            base_steps: Scale::Smoke.base_steps(),
+            seed: 42,
+        });
+        for seq in order::distill_started_orders() {
+            let label = order::sequence_string(&seq);
+            for rung in 0..ladder {
+                plan.submit(chain_for_sequence(&seq, rung, ladder), &label, &format!("rung{rung}"));
+            }
+        }
+        // Per rung: 1 D + 3 second + 6 third + 6 leaves = 16 unique nodes
+        // vs 24 requested stage applications.
+        assert_eq!(plan.total_stages(), 24 * ladder);
+        assert_eq!(plan.unique_nodes(), 16 * ladder);
+        assert_eq!(plan.root_children(), ladder);
     }
 }

@@ -10,11 +10,13 @@
 //! * **L2** — JAX CNN train/eval graphs with all four compression knobs as
 //!   runtime operands (`python/compile/`), AOT-lowered to HLO text once,
 //! * **L3** — this crate: the coordinator that owns datasets, training
-//!   loops, the four compression stages, order search, metrics, experiment
-//!   drivers and the concurrent early-exit serving subsystem (request
-//!   queue, dynamic micro-batching, multi-worker PJRT engines — see
-//!   `serve`), executing the AOT graphs via PJRT (`xla` crate).  Python
-//!   never runs at experiment time.
+//!   loops, the four compression stages, the plan/executor layer that
+//!   dedupes and caches shared chain prefixes (`chain::plan`: prefix
+//!   trie, content-addressed state snapshots, `--jobs` worker engines),
+//!   order search, metrics, experiment drivers and the concurrent
+//!   early-exit serving subsystem (request queue, dynamic micro-batching,
+//!   multi-worker PJRT engines — see `serve`), executing the AOT graphs
+//!   via PJRT (`xla` crate).  Python never runs at experiment time.
 //!
 //! Quickstart: see `examples/quickstart.rs`; experiments: `coc exp <id>`;
 //! serving benchmark: `coc serve-bench --workers 4`.

@@ -12,6 +12,9 @@
 //!
 //! Common flags: --artifacts DIR (default artifacts), --out DIR (default
 //! results), --scale smoke|default|paper, --seed N, --verbose.
+//! Plan-executor flags (chain/exp/toposort): --jobs N runs independent
+//! chain branches on N worker engines; --no-cache disables the
+//! content-addressed stage cache under results/cache/.
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -43,13 +46,16 @@ fn main() {
 fn ctx_from(args: &Args) -> Result<ExpCtx> {
     let scale = Scale::parse(args.get_or("scale", "default"))
         .ok_or_else(|| anyhow!("--scale must be smoke|default|paper"))?;
-    ExpCtx::new(
+    let mut ctx = ExpCtx::new(
         args.get_or("artifacts", coc::DEFAULT_ARTIFACTS),
         args.get_or("out", coc::DEFAULT_RESULTS),
         scale,
         args.get_u64("seed", 42)?,
         args.flag("verbose"),
-    )
+    )?;
+    ctx.jobs = args.get_usize_min("jobs", 1, 1)?;
+    ctx.cache = !args.flag("no-cache");
+    Ok(ctx)
 }
 
 fn real_main() -> Result<()> {
@@ -86,6 +92,8 @@ fn print_usage() {
     println!("coc {} — Chain of Compression coordinator", coc::version());
     println!("usage: coc <info|train|chain|exp|serve|serve-bench|toposort> [flags]");
     println!("  coc exp all --scale default     # regenerate every table/figure");
+    println!("  coc exp table1 --scale smoke --jobs 2   # plan-parallel, cached");
+    println!("  coc exp table1 --no-cache       # force from-scratch execution");
     println!("  coc chain --seq DPQE --arch mini_resnet --dataset c10");
     println!("  coc serve --arch mini_resnet --requests 200 --threshold 0.8");
     println!("  coc serve-bench --workers 4 --mode closed --concurrency 16 --requests 2000");
@@ -149,11 +157,18 @@ fn cmd_chain(args: &Args) -> Result<()> {
     let orig = train::eval_accuracy(&ctx.engine, &base, &test_ds)?;
     println!("base {arch}/{}: acc {:.2}%", kind.name(), orig * 100.0);
 
-    let sctx = ctx.stage_ctx(&train_ds, &test_ds);
-    let mut state = base.clone();
-    let chain = exp::chain_for_sequence(&seq, rung.min(ladder - 1), ladder);
-    let reports = chain.run(&mut state, &sctx)?;
-    for r in &reports {
+    // Through the planner: a repeated `coc chain` (or one sharing a prefix
+    // with a previous experiment) replays cached stages.
+    let rung = rung.min(ladder - 1);
+    let mut plan = ctx.planner(arch, kind);
+    plan.submit(
+        exp::chain_for_sequence(&seq, rung, ladder),
+        &order::sequence_string(&seq),
+        &format!("rung{rung}"),
+    );
+    let run = ctx.run_plan_reports("chain", &plan, &base, &train_ds, &test_ds)?;
+    let outcome = &run.outcomes[0];
+    for r in &outcome.reports {
         println!(
             "  after {:<24} acc {:.2}%  BitOpsCR {:>8.1}x  CR {:>7.1}x",
             r.stage,
@@ -162,7 +177,7 @@ fn cmd_chain(args: &Args) -> Result<()> {
             r.measurement.storage_cr
         );
     }
-    let m = Measurement::take(&ctx.engine, &state, &test_ds)?;
+    let m = Measurement::take(&ctx.engine, &outcome.final_state, &test_ds)?;
     println!(
         "chain {}: acc {:.2}% ({:+.2}%)  BitOpsCR {:.1}x  CR {:.1}x",
         order::sequence_string(&seq),

@@ -1,15 +1,20 @@
 //! Measurement bookkeeping: the (accuracy, BitOpsCR, CR) triples every
 //! experiment reports, in the paper's units.
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use crate::data::Dataset;
 use crate::exits;
 use crate::models::{Accountant, ModelState};
 use crate::runtime::Engine;
+use crate::util::json::{num, obj, Json};
 
 /// One measured point: what every scatter plot / table row is made of.
-#[derive(Debug, Clone)]
+///
+/// `PartialEq` is exact f64 equality on purpose: the plan cache's replay
+/// guarantee is *bit-identical*, not approximate, and the equivalence
+/// tests assert it.
+#[derive(Debug, Clone, PartialEq)]
 pub struct Measurement {
     pub accuracy: f64,
     pub bitops_cr: f64,
@@ -47,5 +52,68 @@ impl Measurement {
 
     pub fn as_point(&self) -> (f64, f64) {
         (self.bitops_cr, self.accuracy)
+    }
+
+    /// Sidecar form for the plan cache.  The JSON writer emits the
+    /// shortest round-trippable decimal for every f64, so
+    /// `from_json(parse(to_json())) == self` bit-for-bit.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("accuracy", num(self.accuracy)),
+            ("bitops_cr", num(self.bitops_cr)),
+            ("storage_cr", num(self.storage_cr)),
+            ("bitops", num(self.bitops)),
+            ("storage_bits", num(self.storage_bits)),
+            ("p_exit1", num(self.exit_probs.0)),
+            ("p_exit2", num(self.exit_probs.1)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Measurement> {
+        let f = |key: &str| -> Result<f64> {
+            j.req(key)?
+                .as_f64()
+                .ok_or_else(|| anyhow!("measurement field `{key}` is not a number"))
+        };
+        Ok(Measurement {
+            accuracy: f("accuracy")?,
+            bitops_cr: f("bitops_cr")?,
+            storage_cr: f("storage_cr")?,
+            bitops: f("bitops")?,
+            storage_bits: f("storage_bits")?,
+            exit_probs: (f("p_exit1")?, f("p_exit2")?),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_roundtrip_is_bit_identical() {
+        // Awkward values: non-terminating binary fractions, integers, a
+        // subnormal, and an exactly-representable large count.
+        let m = Measurement {
+            accuracy: 1.0 / 3.0,
+            bitops_cr: 317.2894561230001,
+            storage_cr: 64.0,
+            bitops: 9.87654321e12,
+            storage_bits: f64::MIN_POSITIVE,
+            exit_probs: (0.1 + 0.2, 0.0),
+        };
+        let text = m.to_json().to_string();
+        let back = Measurement::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(m, back);
+
+        // And through a second generation, to catch any canonicalization.
+        let text2 = back.to_json().to_string();
+        assert_eq!(text, text2);
+    }
+
+    #[test]
+    fn from_json_rejects_missing_fields() {
+        let j = Json::parse(r#"{"accuracy": 0.5}"#).unwrap();
+        assert!(Measurement::from_json(&j).is_err());
     }
 }

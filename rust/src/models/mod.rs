@@ -378,13 +378,25 @@ impl ModelState {
 }
 
 // ---------------------------------------------------------------------------
-// Persistence: cache trained states (base teachers) across experiments.
-// Format: one JSON header line (shapes + metadata), then raw little-endian
-// f32 for params ++ momenta ++ masks.
+// Persistence: cache trained states (base teachers, plan-cache snapshots)
+// across experiments.  Format: one JSON header line (version + shapes +
+// metadata + optional content-address tag), then raw little-endian f32
+// for params ++ momenta ++ masks.
 // ---------------------------------------------------------------------------
+
+/// On-disk state format version.  v1 files (no `version` field) still
+/// load; files newer than this are rejected instead of misparsed.
+pub const STATE_FORMAT_VERSION: u32 = 2;
 
 impl ModelState {
     pub fn save<P: AsRef<Path>>(&self, path: P) -> Result<()> {
+        self.save_tagged(path, None)
+    }
+
+    /// Save with an optional content-address tag (the plan-cache node id):
+    /// the tag is written into the header, and `load_tagged` with an
+    /// expected tag refuses snapshots produced by a different recipe.
+    pub fn save_tagged<P: AsRef<Path>>(&self, path: P, node: Option<&str>) -> Result<()> {
         use crate::util::json::{num, obj, s, Json};
         let shapes = |ts: &[Tensor]| {
             Json::Arr(
@@ -393,7 +405,8 @@ impl ModelState {
                     .collect(),
             )
         };
-        let header = obj(vec![
+        let mut fields = vec![
+            ("version", num(STATE_FORMAT_VERSION as f64)),
             ("arch", s(&self.arch.name)),
             ("params", shapes(&self.params)),
             ("momenta", shapes(&self.momenta)),
@@ -411,7 +424,11 @@ impl ModelState {
                 "history",
                 Json::Arr(self.history.iter().map(|h| s(h)).collect()),
             ),
-        ]);
+        ];
+        if let Some(tag) = node {
+            fields.push(("node", s(tag)));
+        }
+        let header = obj(fields);
         let mut bytes = header.to_string().into_bytes();
         bytes.push(b'\n');
         for t in self.params.iter().chain(&self.momenta).chain(&self.masks) {
@@ -427,6 +444,18 @@ impl ModelState {
     }
 
     pub fn load<P: AsRef<Path>>(path: P, arch: Arc<ArchManifest>) -> Result<ModelState> {
+        Self::load_tagged(path, arch, None)
+    }
+
+    /// Load, additionally verifying the header's format version and —
+    /// when `node` is given — its content-address tag.  A missing or
+    /// mismatched tag is an error, which plan-cache callers treat as a
+    /// cache miss.
+    pub fn load_tagged<P: AsRef<Path>>(
+        path: P,
+        arch: Arc<ArchManifest>,
+        node: Option<&str>,
+    ) -> Result<ModelState> {
         let bytes = std::fs::read(path.as_ref())
             .with_context(|| format!("loading state from {}", path.as_ref().display()))?;
         let nl = bytes
@@ -435,6 +464,21 @@ impl ModelState {
             .ok_or_else(|| anyhow!("corrupt state file: no header"))?;
         let header = Json::parse(std::str::from_utf8(&bytes[..nl])?)
             .map_err(|e| anyhow!("corrupt state header: {e}"))?;
+        // v1 files predate the version field.
+        let version = header.get("version").and_then(|v| v.as_f64()).unwrap_or(1.0);
+        if version > STATE_FORMAT_VERSION as f64 {
+            return Err(anyhow!(
+                "state file is format v{version}, newer than supported v{STATE_FORMAT_VERSION}"
+            ));
+        }
+        if let Some(want) = node {
+            let got = header.get("node").and_then(|v| v.as_str()).unwrap_or("");
+            if got != want {
+                return Err(anyhow!(
+                    "state file node tag `{got}` does not match expected `{want}`"
+                ));
+            }
+        }
         let got_arch = header.req("arch")?.as_str().unwrap_or("");
         if got_arch != arch.name {
             return Err(anyhow!("state file is for arch `{got_arch}`, expected `{}`", arch.name));
@@ -841,6 +885,37 @@ mod tests {
         assert_eq!(st2.exits.thresholds, Some((0.8, 0.7)));
         assert!(st2.exits.trained);
         assert_eq!(st2.history, vec!["quantize(2w8a)".to_string()]);
+    }
+
+    #[test]
+    fn tagged_save_load_verifies_node_and_version() {
+        let arch = toy_arch();
+        let st = ModelState::init_host(arch.clone(), 7);
+        let path = std::env::temp_dir().join(format!("coc_state_tag_{}.bin", std::process::id()));
+        st.save_tagged(&path, Some("deadbeef")).unwrap();
+
+        // Matching tag loads; wrong tag is refused; untagged load ignores.
+        assert!(ModelState::load_tagged(&path, arch.clone(), Some("deadbeef")).is_ok());
+        assert!(ModelState::load_tagged(&path, arch.clone(), Some("cafebabe")).is_err());
+        assert!(ModelState::load(&path, arch.clone()).is_ok());
+
+        // An untagged file never satisfies an expected tag.
+        st.save(&path).unwrap();
+        assert!(ModelState::load_tagged(&path, arch.clone(), Some("deadbeef")).is_err());
+
+        // A header claiming a future format version is rejected outright.
+        let mut bytes = std::fs::read(&path).unwrap();
+        let nl = bytes.iter().position(|&b| b == b'\n').unwrap();
+        let header = String::from_utf8(bytes[..nl].to_vec())
+            .unwrap()
+            .replace(&format!("\"version\":{STATE_FORMAT_VERSION}"), "\"version\":99");
+        let mut patched = header.into_bytes();
+        patched.extend_from_slice(&bytes[nl..]);
+        bytes = patched;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = ModelState::load(&path, arch).unwrap_err();
+        assert!(err.to_string().contains("newer"), "{err}");
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

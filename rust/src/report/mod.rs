@@ -55,6 +55,28 @@ impl Reporter {
         self.write(name, &s)
     }
 
+    /// Append one row to a long-lived accounting CSV (creating it with
+    /// `header` on first use) — e.g. `plan_stats.csv`, which accumulates
+    /// the plan executor's cache-hit accounting across invocations.
+    pub fn append_row(&self, name: &str, header: &[&str], row: &[String]) -> Result<PathBuf> {
+        use std::io::Write as _;
+        let p = self.path(name);
+        // create+append (no exists-then-write TOCTOU): concurrent writers
+        // can at worst duplicate the header line, never truncate rows.
+        let mut f = fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&p)
+            .with_context(|| format!("opening {}", p.display()))?;
+        let line = row.iter().map(|c| csv_escape(c)).collect::<Vec<_>>().join(",");
+        if f.metadata().map(|m| m.len() == 0).unwrap_or(false) {
+            writeln!(f, "{}", header.join(","))
+                .with_context(|| format!("writing header to {}", p.display()))?;
+        }
+        writeln!(f, "{line}").with_context(|| format!("appending to {}", p.display()))?;
+        Ok(p)
+    }
+
     /// Generic table CSV.
     pub fn write_table(&self, name: &str, header: &[&str], rows: &[Vec<String>]) -> Result<PathBuf> {
         let mut s = header.join(",");
@@ -111,6 +133,18 @@ mod tests {
         let r = Reporter::new(&dir).unwrap();
         let p = r.write("x.csv", "a,b\n1,2\n").unwrap();
         assert!(p.exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn append_row_creates_then_extends() {
+        let dir = std::env::temp_dir().join(format!("coc_report_append_{}", std::process::id()));
+        let r = Reporter::new(&dir).unwrap();
+        let header = ["experiment", "hits"];
+        r.append_row("stats.csv", &header, &["fig6".into(), "3".into()]).unwrap();
+        let p = r.append_row("stats.csv", &header, &["fig7,x".into(), "4".into()]).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(text, "experiment,hits\nfig6,3\n\"fig7,x\",4\n");
         std::fs::remove_dir_all(&dir).ok();
     }
 }

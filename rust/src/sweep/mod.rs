@@ -1,15 +1,13 @@
-//! Hyper-parameter sweep driver: the §3.1 protocol — per technique, a
+//! Hyper-parameter sweep vocabulary: the §3.1 protocol — per technique, a
 //! ladder of aggressiveness settings; per combination, the cross product
 //! (or a diagonal of it at smoke scale); early-exit models additionally
-//! yield one sample per runtime threshold.
+//! yield one sample per runtime threshold.  Sweeps are *submitted* to the
+//! plan layer (`chain::plan`), which dedupes shared stage prefixes and
+//! executes each unique prefix once.
 
-use anyhow::Result;
-
-use crate::chain::{stages, Chain, CompressionStage, StageCtx, Technique};
-use crate::exits;
+use crate::chain::plan::Planner;
+use crate::chain::{stages, Chain, CompressionStage, Technique};
 use crate::metrics::Measurement;
-use crate::models::{Accountant, ModelState};
-use crate::train;
 
 /// Experiment scale profiles (single-core testbed; see DESIGN.md
 /// §Substitutions on budget parity).
@@ -30,6 +28,17 @@ impl Scale {
             "default" => Some(Scale::Default),
             "paper" => Some(Scale::Paper),
             _ => None,
+        }
+    }
+
+    /// Stable explicit name, inverse of [`Scale::parse`].  Cache paths and
+    /// plan keys use this — never the `Debug` form, which changes when the
+    /// enum is refactored.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scale::Smoke => "smoke",
+            Scale::Default => "default",
+            Scale::Paper => "paper",
         }
     }
 
@@ -98,7 +107,7 @@ pub fn stage_at(t: Technique, i: usize, n: usize) -> Box<dyn CompressionStage> {
 }
 
 /// A labelled measured point.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct SweepPoint {
     pub label: String,
     pub config: String,
@@ -111,89 +120,26 @@ impl SweepPoint {
     }
 }
 
-/// Run one chain from a shared pretrained base model, returning the final
-/// measurement.  If the chain ends in a trained early-exit model, the
-/// runtime threshold sweep adds extra points (paper §3.1 rule 3).
-pub fn run_chain_points(
-    base: &ModelState,
-    chain: &Chain,
-    ctx: &StageCtx,
-    label: &str,
-    config: &str,
-) -> Result<Vec<SweepPoint>> {
-    let mut state = base.clone();
-    let reports = chain.run(&mut state, ctx)?;
-    let last = reports
-        .last()
-        .map(|r| r.measurement.clone())
-        .unwrap_or(Measurement::take(ctx.engine, &state, ctx.test)?);
-    let mut points = vec![SweepPoint {
-        label: label.to_string(),
-        config: config.to_string(),
-        measurement: last,
-    }];
-
-    if state.exits.trained {
-        // Extra samples from runtime thresholds, no retraining.
-        let (main, e1, e2) = train::eval_logits(ctx.engine, &state, ctx.test)?;
-        for (t, ev) in
-            exits::threshold_sweep(&main, &e1, &e2, &ctx.test.labels, &[0.35, 0.5, 0.65, 0.8, 0.9, 0.97])
-        {
-            let mut st = state.clone();
-            st.exits.thresholds = Some((t, t));
-            st.exits.exit_probs = (ev.p_exit1, ev.p_exit2);
-            let acct = Accountant::new(&st);
-            points.push(SweepPoint {
-                label: label.to_string(),
-                config: format!("{config},t={t:.2}"),
-                measurement: Measurement {
-                    accuracy: ev.accuracy,
-                    bitops_cr: acct.bitops_cr(),
-                    storage_cr: acct.storage_cr(),
-                    bitops: acct.expected_bitops(),
-                    storage_bits: acct.storage_bits(),
-                    exit_probs: (ev.p_exit1, ev.p_exit2),
-                },
-            });
-        }
-    }
-    Ok(points)
-}
-
-/// Pairwise sweep for techniques (a, b) in that order: a diagonal ladder
-/// (matched aggressiveness) — the protocol that maximizes coverage per
-/// training run on a single-core budget.
-pub fn pairwise_points(
-    base: &ModelState,
-    a: Technique,
-    b: Technique,
-    ctx: &StageCtx,
-    ladder: usize,
-) -> Result<Vec<SweepPoint>> {
+/// Submit the pairwise sweep for techniques (a, b) in that order: a
+/// diagonal ladder (matched aggressiveness) — the protocol that maximizes
+/// coverage per training run on a single-core budget.  The planner dedupes
+/// the first-stage rungs against every other chain sharing them; the
+/// executor emits one final point per rung plus runtime-threshold extras
+/// for trained-exit chains (paper §3.1 rule 3).
+pub fn submit_pairwise(plan: &mut Planner, a: Technique, b: Technique, ladder: usize) {
     let label = format!("{}{}", a.letter(), b.letter());
-    let mut out = Vec::new();
     for i in 0..ladder {
         let chain = Chain::new().push(stage_at(a, i, ladder)).push(stage_at(b, i, ladder));
-        let cfg = format!("rung{i}");
-        out.extend(run_chain_points(base, &chain, ctx, &label, &cfg)?);
+        plan.submit(chain, &label, &format!("rung{i}"));
     }
-    Ok(out)
 }
 
-/// Single-technique sweep (the "D alone" / "P alone" curves).
-pub fn single_points(
-    base: &ModelState,
-    t: Technique,
-    ctx: &StageCtx,
-    ladder: usize,
-) -> Result<Vec<SweepPoint>> {
+/// Submit the single-technique sweep (the "D alone" / "P alone" curves).
+pub fn submit_single(plan: &mut Planner, t: Technique, ladder: usize) {
     let label = t.letter().to_string();
-    let mut out = Vec::new();
     for i in 0..ladder {
-        let chain = Chain::new().push(stage_at(t, i, ladder));
-        out.extend(run_chain_points(base, &chain, ctx, &label, &format!("rung{i}"))?);
+        plan.submit(Chain::new().push(stage_at(t, i, ladder)), &label, &format!("rung{i}"));
     }
-    Ok(out)
 }
 
 #[cfg(test)]
@@ -222,6 +168,32 @@ mod tests {
         assert_eq!(Scale::parse("paper"), Some(Scale::Paper));
         assert_eq!(Scale::parse("x"), None);
         assert!(Scale::Smoke.base_steps() < Scale::Default.base_steps());
+    }
+
+    #[test]
+    fn scale_name_roundtrips_through_parse() {
+        for sc in [Scale::Smoke, Scale::Default, Scale::Paper] {
+            assert_eq!(Scale::parse(sc.name()), Some(sc));
+        }
+    }
+
+    #[test]
+    fn submit_helpers_share_prefixes() {
+        use crate::chain::plan::{PlanKey, Planner};
+        let mut plan = Planner::new(PlanKey {
+            arch: "mini_resnet".into(),
+            dataset: "c10".into(),
+            scale: "smoke".into(),
+            base_steps: 40,
+            seed: 42,
+        });
+        submit_pairwise(&mut plan, Technique::Prune, Technique::Quantize, 2);
+        // Two rungs x two stages, no shared prefixes yet.
+        assert_eq!(plan.unique_nodes(), 4);
+        // The single-P ladder rides entirely on the pairwise P prefixes.
+        submit_single(&mut plan, Technique::Prune, 2);
+        assert_eq!(plan.unique_nodes(), 4);
+        assert_eq!(plan.total_stages(), 6);
     }
 
     #[test]

@@ -66,6 +66,16 @@ impl Args {
         }
     }
 
+    /// Integer flag with a lower bound — for knobs like `--jobs` where 0
+    /// is a configuration error, not a request for zero workers.
+    pub fn get_usize_min(&self, name: &str, default: usize, min: usize) -> anyhow::Result<usize> {
+        let v = self.get_usize(name, default)?;
+        if v < min {
+            return Err(anyhow::anyhow!("--{name} must be >= {min}, got {v}"));
+        }
+        Ok(v)
+    }
+
     pub fn get_f32(&self, name: &str, default: f32) -> anyhow::Result<f32> {
         match self.get(name) {
             None => Ok(default),
@@ -129,6 +139,16 @@ mod tests {
     fn numeric_errors() {
         let a = parse(&["x", "--steps", "abc"]);
         assert!(a.get_usize("steps", 1).is_err());
+    }
+
+    #[test]
+    fn usize_min_enforces_bound() {
+        let a = parse(&["x", "--jobs", "0"]);
+        assert!(a.get_usize_min("jobs", 1, 1).is_err());
+        let a = parse(&["x", "--jobs", "4"]);
+        assert_eq!(a.get_usize_min("jobs", 1, 1).unwrap(), 4);
+        let a = parse(&["x"]);
+        assert_eq!(a.get_usize_min("jobs", 1, 1).unwrap(), 1);
     }
 
     #[test]
