@@ -45,7 +45,7 @@ use crate::data::Dataset;
 use crate::exits;
 use crate::metrics::Measurement;
 use crate::models::{Accountant, ModelState};
-use crate::runtime::Engine;
+use crate::runtime::{Engine, RuntimeStats};
 use crate::sweep::SweepPoint;
 use crate::train;
 use crate::util::json::Json;
@@ -244,6 +244,13 @@ pub trait NodeRunner {
     fn extras_signature(&self) -> String {
         String::new()
     }
+    /// Cumulative runtime counters of this runner's engine, if it has one
+    /// — the executor diffs them around a run so `PlanStats` (and
+    /// `results/plan_stats.csv`) report host<->device transfer volume.
+    /// Engine-free test runners return `None` and account zero.
+    fn runtime_stats(&self) -> Option<RuntimeStats> {
+        None
+    }
 }
 
 /// Executes stages through a PJRT engine: `apply` builds a [`StageCtx`]
@@ -330,6 +337,10 @@ impl<'d, E: Borrow<Engine>> NodeRunner for PjrtRunner<'d, E> {
         let grid: Vec<String> = EXIT_SWEEP_THRESHOLDS.iter().map(|t| t.to_string()).collect();
         format!("tsweep|{}", grid.join(","))
     }
+
+    fn runtime_stats(&self) -> Option<RuntimeStats> {
+        Some(self.engine.borrow().stats())
+    }
 }
 
 /// Runtime threshold grid for the paper's §3.1 exit sweep.  Part of
@@ -366,6 +377,13 @@ pub struct PlanStats {
     pub cache_hits: usize,
     pub executed: usize,
     pub wall_ms: f64,
+    /// Host<->device transfer volume across the run: the main runner's
+    /// engine delta plus every parallel worker engine's lifetime totals.
+    /// Zero under engine-free runners (tests).  Tracked so the
+    /// device-residency win shows up in BENCH trajectories as bytes, not
+    /// just wall time.
+    pub bytes_uploaded: u64,
+    pub bytes_downloaded: u64,
 }
 
 /// One submitted chain after execution: the per-stage reports (same shape
@@ -407,6 +425,9 @@ struct Sched {
     pending: Vec<usize>,
     done: usize,
     error: Option<String>,
+    /// (bytes_uploaded, bytes_downloaded) credited by each retiring
+    /// worker from its per-thread engine.
+    transfer: (u64, u64),
 }
 
 /// Armed for the whole life of a worker thread: if the worker unwinds
@@ -470,6 +491,11 @@ impl Planner {
         F: Fn() -> Result<R2> + Sync,
     {
         let t0 = Instant::now();
+        // Transfer accounting: diff the main runner's engine counters
+        // around the whole run (node execution on the serial path plus
+        // measurement synthesis below); parallel worker engines are
+        // per-thread and credited as they retire.
+        let transfer_before = main.runtime_stats();
         if let Some(dir) = &opts.cache_dir {
             std::fs::create_dir_all(dir)
                 .with_context(|| format!("creating plan cache dir {}", dir.display()))?;
@@ -485,20 +511,22 @@ impl Planner {
         }
         let pending: Vec<usize> = self.nodes.iter().map(|n| n.children.len()).collect();
 
-        let results = if opts.jobs > 1 && self.nodes.len() > 1 {
+        let (results, worker_transfer) = if opts.jobs > 1 && self.nodes.len() > 1 {
             self.execute_parallel(base, opts, cache_dir, &leaf, pending, &factory)?
         } else {
-            self.execute_serial(base, main, cache_dir, &leaf, pending, opts.verbose)?
+            (self.execute_serial(base, main, cache_dir, &leaf, pending, opts.verbose)?, (0, 0))
         };
 
         let cache_hits = results.iter().filter(|r| r.hit).count();
-        let stats = PlanStats {
+        let mut stats = PlanStats {
             chains: self.chains.len(),
             total_stages: self.total_stages(),
             unique_nodes: self.nodes.len(),
             cache_hits,
             executed: self.nodes.len() - cache_hits,
             wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+            bytes_uploaded: worker_transfer.0,
+            bytes_downloaded: worker_transfer.1,
         };
         println!(
             "[plan] {} chains / {} stage applications -> {} unique nodes ({} cache hits, {} executed) in {:.1}s",
@@ -564,6 +592,10 @@ impl Planner {
                 final_state,
             });
         }
+        if let (Some(b), Some(a)) = (transfer_before, main.runtime_stats()) {
+            stats.bytes_uploaded += a.bytes_uploaded.saturating_sub(b.bytes_uploaded);
+            stats.bytes_downloaded += a.bytes_downloaded.saturating_sub(b.bytes_downloaded);
+        }
         Ok(PlanRun { outcomes, points, stats })
     }
 
@@ -602,7 +634,7 @@ impl Planner {
         leaf: &[bool],
         pending: Vec<usize>,
         factory: &F,
-    ) -> Result<Vec<NodeResult>>
+    ) -> Result<(Vec<NodeResult>, (u64, u64))>
     where
         R2: NodeRunner,
         F: Fn() -> Result<R2> + Sync,
@@ -614,6 +646,7 @@ impl Planner {
             pending,
             done: 0,
             error: None,
+            transfer: (0, 0),
         };
         let sched = Mutex::new(init);
         let cv = Condvar::new();
@@ -634,6 +667,16 @@ impl Planner {
                     // a narrow trie (e.g. one linear chain) never pays for
                     // engines that would only block on the condvar.
                     let mut runner: Option<R2> = None;
+                    // Credit this worker's engine transfer counters into
+                    // the shared accounting on the way out (the engine —
+                    // and its stats — drop with the runner).
+                    let credit = |runner: &Option<R2>| {
+                        if let Some(st) = runner.as_ref().and_then(|r| r.runtime_stats()) {
+                            let mut g = sched.lock().unwrap();
+                            g.transfer.0 += st.bytes_uploaded;
+                            g.transfer.1 += st.bytes_downloaded;
+                        }
+                    };
                     loop {
                         // Under the lock, only pop a node and take a cheap
                         // Arc handle on its parent; tensor clones happen
@@ -643,6 +686,7 @@ impl Planner {
                             loop {
                                 if g.error.is_some() || g.done == n {
                                     drop(g);
+                                    credit(&runner);
                                     guard.armed = false;
                                     return;
                                 }
@@ -693,6 +737,7 @@ impl Planner {
                             Err(e) => {
                                 sched.lock().unwrap().error = Some(format!("{e:#}"));
                                 cv.notify_all();
+                                credit(&runner);
                                 guard.armed = false;
                                 return;
                             }
@@ -709,7 +754,11 @@ impl Planner {
         if g.done != n {
             return Err(anyhow!("plan execution stalled at {}/{n} nodes", g.done));
         }
-        Ok(g.results.into_iter().map(|r| r.expect("scheduled node completed")).collect())
+        let transfer = g.transfer;
+        Ok((
+            g.results.into_iter().map(|r| r.expect("scheduled node completed")).collect(),
+            transfer,
+        ))
     }
 }
 

@@ -137,6 +137,18 @@ impl Default for Prune {
 }
 
 impl Prune {
+    /// Live channels ordered lowest-importance first — the removal order.
+    /// Total over every f32 bit pattern via `f32::total_cmp` (the
+    /// `partial_cmp(..).unwrap()` it replaces aborted the stage on a NaN
+    /// importance): a NaN importance — all-NaN weights — sorts above every
+    /// finite value, so such a channel is pruned *last*, and exact ties
+    /// keep ascending channel order (stable sort).
+    fn removal_order(imp: &[f32], live: Vec<usize>) -> Vec<usize> {
+        let mut order = live;
+        order.sort_by(|&a, &b| imp[a].total_cmp(&imp[b]));
+        order
+    }
+
     /// Aggregate per-channel importance for one mask slot: the L2 norm of
     /// each channel's outgoing weights across every layer writing into the
     /// slot (residual stages have several writers).
@@ -188,8 +200,7 @@ impl CompressionStage for Prune {
             let keep_min = 2;
             let remove = remove.min(live.len().saturating_sub(keep_min));
             // Lowest-importance live channels go first.
-            let mut order = live;
-            order.sort_by(|&a, &b| imp[a].partial_cmp(&imp[b]).unwrap());
+            let order = Self::removal_order(&imp, live);
             for &c in order.iter().take(remove) {
                 state.masks[slot].data[c] = 0.0;
             }
@@ -415,13 +426,18 @@ impl CompressionStage for HuffmanCoding {
             } else {
                 crate::models::host_weight_quant(&state.params[wi], state.qbits.weight)
             };
-            // Symbolize by value (discrete by construction).
+            // Symbolize by value (discrete by construction).  Ordering,
+            // dedup, and lookup all use `total_cmp` so every bit pattern —
+            // including a NaN that would have aborted the old
+            // `partial_cmp(..).unwrap()` sort — maps to exactly one
+            // symbol (NaN == NaN under total order, unlike PartialEq).
             let mut values: Vec<f32> = deployed.data.clone();
-            values.sort_by(|a, b| a.partial_cmp(b).unwrap());
-            values.dedup();
+            values.sort_by(f32::total_cmp);
+            values.dedup_by(|a, b| a.total_cmp(b).is_eq());
             let mut freqs = vec![0u64; values.len()];
             for v in &deployed.data {
-                let idx = values.partition_point(|x| x < v).min(values.len() - 1);
+                let idx =
+                    values.partition_point(|x| x.total_cmp(v).is_lt()).min(values.len() - 1);
                 freqs[idx] += 1;
             }
             let code = crate::util::huffman::HuffmanCode::from_freqs(&freqs);
@@ -435,6 +451,22 @@ impl CompressionStage for HuffmanCoding {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn prune_removal_order_is_nan_safe_and_tie_stable() {
+        // NaN importance: never removed before any finite channel, and no
+        // abort (the old partial_cmp unwrap panicked here).
+        let imp = [0.5, f32::NAN, 0.1, 0.5];
+        let order = Prune::removal_order(&imp, vec![0, 1, 2, 3]);
+        assert_eq!(order, vec![2, 0, 3, 1], "NaN sorts above all finite importances");
+        // Exact ties keep ascending channel order (stable sort), so the
+        // pruning decision is deterministic across runs.
+        let tied = [1.0, 1.0, 1.0];
+        assert_eq!(Prune::removal_order(&tied, vec![2, 0, 1]), vec![2, 0, 1]);
+        // -inf is the least important of all.
+        let inf = [0.0, f32::NEG_INFINITY, f32::INFINITY];
+        assert_eq!(Prune::removal_order(&inf, vec![0, 1, 2]), vec![1, 0, 2]);
+    }
 
     #[test]
     fn defaults_are_sane() {

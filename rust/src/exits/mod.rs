@@ -72,12 +72,9 @@ pub fn evaluate_from_logits(
         } else {
             (rm, 2)
         };
-        let pred = row
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .map(|(j, _)| j)
-            .unwrap();
+        // The shared tie/NaN-total argmax rule (tensor::argmax_slice):
+        // the inline partial_cmp it replaces aborted on a NaN logit.
+        let pred = crate::tensor::argmax_slice(row);
         let ok = pred == labels[i];
         match bucket {
             0 => {

@@ -188,6 +188,8 @@ impl ExpCtx {
                 "executed",
                 "jobs",
                 "wall_ms",
+                "bytes_uploaded",
+                "bytes_downloaded",
             ],
             &[
                 exp_id.to_string(),
@@ -198,6 +200,8 @@ impl ExpCtx {
                 st.executed.to_string(),
                 self.jobs.to_string(),
                 format!("{:.1}", st.wall_ms),
+                st.bytes_uploaded.to_string(),
+                st.bytes_downloaded.to_string(),
             ],
         )?;
         Ok(run)

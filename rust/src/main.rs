@@ -318,10 +318,17 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
                     ("max_chunk", num(w.max_chunk as f64)),
                     ("stage_batch", num(w.stage_batch as f64)),
                     ("padding_waste", num(w.padding_waste())),
+                    ("bytes_uploaded", num(w.bytes_uploaded as f64)),
+                    ("bytes_downloaded", num(w.bytes_downloaded as f64)),
                 ])
             })
             .collect(),
     );
+    // Pool-wide transfer volume (includes each worker's one-time
+    // resident-prefix upload): with the device-resident operand prefix the
+    // steady-state upload share is just the request input rows.
+    let bytes_up: u64 = outcome.stats.iter().map(|w| w.bytes_uploaded).sum();
+    let bytes_down: u64 = outcome.stats.iter().map(|w| w.bytes_downloaded).sum();
     let mut fields = vec![
         ("model", s(arch)),
         ("dataset", s(kind.name())),
@@ -329,6 +336,8 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         ("queue_capacity", num(queue_capacity as f64)),
         ("max_batch", num(max_batch as f64)),
         ("batch_wait_us", num(batch_wait_us as f64)),
+        ("bytes_uploaded", num(bytes_up as f64)),
+        ("bytes_downloaded", num(bytes_down as f64)),
         ("bench", report.to_json()),
         ("worker_stats", worker_stats),
     ];

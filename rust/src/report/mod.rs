@@ -58,9 +58,33 @@ impl Reporter {
     /// Append one row to a long-lived accounting CSV (creating it with
     /// `header` on first use) — e.g. `plan_stats.csv`, which accumulates
     /// the plan executor's cache-hit accounting across invocations.
+    ///
+    /// Schema evolution: if the file's existing header differs from
+    /// `header` (a release added columns), the old file is rotated to
+    /// `<name>.bak` and a fresh one starts — rows are never appended
+    /// misaligned under a stale header.
     pub fn append_row(&self, name: &str, header: &[&str], row: &[String]) -> Result<PathBuf> {
-        use std::io::Write as _;
+        use std::io::{BufRead as _, BufReader, Write as _};
         let p = self.path(name);
+        let want = header.join(",");
+        if let Ok(f) = fs::File::open(&p) {
+            let mut first = String::new();
+            if BufReader::new(f).read_line(&mut first).is_ok() {
+                let first = first.trim_end();
+                if !first.is_empty() && first != want {
+                    let bak = p.with_extension("csv.bak");
+                    // Atomic rename; a concurrent loser's failed rename is
+                    // harmless (the winner already moved the stale file).
+                    if fs::rename(&p, &bak).is_ok() {
+                        eprintln!(
+                            "[report] {} header changed; rotated old rows to {}",
+                            p.display(),
+                            bak.display()
+                        );
+                    }
+                }
+            }
+        }
         // create+append (no exists-then-write TOCTOU): concurrent writers
         // can at worst duplicate the header line, never truncate rows.
         let mut f = fs::OpenOptions::new()
@@ -70,8 +94,7 @@ impl Reporter {
             .with_context(|| format!("opening {}", p.display()))?;
         let line = row.iter().map(|c| csv_escape(c)).collect::<Vec<_>>().join(",");
         if f.metadata().map(|m| m.len() == 0).unwrap_or(false) {
-            writeln!(f, "{}", header.join(","))
-                .with_context(|| format!("writing header to {}", p.display()))?;
+            writeln!(f, "{want}").with_context(|| format!("writing header to {}", p.display()))?;
         }
         writeln!(f, "{line}").with_context(|| format!("appending to {}", p.display()))?;
         Ok(p)
@@ -145,6 +168,22 @@ mod tests {
         let p = r.append_row("stats.csv", &header, &["fig7,x".into(), "4".into()]).unwrap();
         let text = std::fs::read_to_string(&p).unwrap();
         assert_eq!(text, "experiment,hits\nfig6,3\n\"fig7,x\",4\n");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn append_row_rotates_on_header_change() {
+        // A schema change (e.g. plan_stats.csv gaining byte columns) must
+        // not append wider rows under the stale header.
+        let dir = std::env::temp_dir().join(format!("coc_report_rotate_{}", std::process::id()));
+        let r = Reporter::new(&dir).unwrap();
+        r.append_row("stats.csv", &["a", "b"], &["1".into(), "2".into()]).unwrap();
+        let p = r
+            .append_row("stats.csv", &["a", "b", "c"], &["3".into(), "4".into(), "5".into()])
+            .unwrap();
+        assert_eq!(std::fs::read_to_string(&p).unwrap(), "a,b,c\n3,4,5\n");
+        let bak = std::fs::read_to_string(p.with_extension("csv.bak")).unwrap();
+        assert_eq!(bak, "a,b\n1,2\n", "old rows preserved under the old header");
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -5,17 +5,39 @@
 //! experiment time this module is the only bridge to XLA.  Interchange is
 //! HLO *text* — see DESIGN.md and python/compile/aot.py for why.
 //!
+//! # Device residency (see DESIGN.md §Device residency)
+//!
+//! Two transports exist for every graph:
+//!
+//! * **Literal mode** ([`Executable::run`]) — marshal host [`Tensor`]s into
+//!   `xla::Literal`s per call and download the whole output tuple.  Simple,
+//!   always available, and the right shape for one-shot calls.
+//! * **Buffer mode** ([`Executable::run_buffers`]) — operands are
+//!   [`DeviceBuffer`]s already resident on the PJRT device; outputs come
+//!   back as device buffers that the next call can consume *without* any
+//!   host round-trip.  The training loop keeps its params/momenta resident
+//!   across all steps ([`DeviceState`]) and only materializes host tensors
+//!   at stage boundaries ([`DeviceState::to_host`]).
+//!
+//! Buffer-mode results rely on the runtime untupling the output (one
+//! `PjRtBuffer` per tuple leaf).  When that (or buffer upload itself) is
+//! unavailable, buffer-mode callers see a [`ResidencyUnsupported`] error
+//! and fall back to literal mode — same graphs, same operand values,
+//! bit-identical outputs, different transport.
+//!
 //! # Threading model (see DESIGN.md §Serving)
 //!
 //! The PJRT client and its loaded executables are raw FFI handles and are
-//! *not* `Send`: an [`Engine`] is therefore a **per-thread** object.  All
-//! host-side state around it — [`RuntimeStats`] snapshots, the executable
-//! cache, tensors, `ModelState`, the manifest — is `Arc`-based and
-//! thread-safe, so the multi-worker serving pool (`serve::worker`) gives
-//! each worker thread its own `Engine` over the shared artifacts directory
-//! and moves only `Send` data (jobs, tensors, model state) across threads.
-//! Within one engine, stats counters are atomics and the cache is behind a
-//! `Mutex`, so nothing in this module assumes single-threaded use.
+//! *not* `Send`: an [`Engine`] is therefore a **per-thread** object, and
+//! [`DeviceBuffer`]s belong to the engine whose client allocated them (and
+//! must not outlive it, like executables).  All host-side state around it
+//! — [`RuntimeStats`] snapshots, the executable cache, tensors,
+//! `ModelState`, the manifest — is `Arc`-based and thread-safe, so the
+//! multi-worker serving pool (`serve::worker`) gives each worker thread
+//! its own `Engine` over the shared artifacts directory and moves only
+//! `Send` data (jobs, tensors, model state) across threads.  Within one
+//! engine, stats counters are atomics and the cache is behind a `Mutex`,
+//! so nothing in this module assumes single-threaded use.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -25,16 +47,31 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
+use crate::models::ModelState;
 use crate::tensor::Tensor;
 
+/// Buffer-mode execution is unavailable (upload failed, or the runtime
+/// returned a packed tuple instead of untupled leaves).  Callers with a
+/// literal-mode fallback downcast to this to decide between "degrade
+/// transport" and "real failure" — a diverged loss or a bad artifact must
+/// never be retried on the other transport.
+#[derive(Debug, thiserror::Error)]
+#[error("device residency unsupported: {0}")]
+pub struct ResidencyUnsupported(pub String);
+
 /// Cumulative runtime counters (snapshot form).  Used by EXPERIMENTS.md
-/// §Perf to split dispatch overhead from XLA execute time.
+/// §Perf to split dispatch overhead from XLA execute time, and by the
+/// residency benches to show transfer *volume*, not just time:
+/// `bytes_uploaded`/`bytes_downloaded` count host->device and
+/// device->host payload bytes across both transports.
 #[derive(Debug, Default, Clone)]
 pub struct RuntimeStats {
     pub executions: u64,
     pub execute_ns: u64,
     pub upload_ns: u64,
     pub download_ns: u64,
+    pub bytes_uploaded: u64,
+    pub bytes_downloaded: u64,
 }
 
 /// Shared mutable counters: atomics so executables can record from any
@@ -45,6 +82,8 @@ struct StatsCell {
     execute_ns: AtomicU64,
     upload_ns: AtomicU64,
     download_ns: AtomicU64,
+    bytes_uploaded: AtomicU64,
+    bytes_downloaded: AtomicU64,
 }
 
 impl StatsCell {
@@ -54,6 +93,8 @@ impl StatsCell {
             execute_ns: self.execute_ns.load(Ordering::Relaxed),
             upload_ns: self.upload_ns.load(Ordering::Relaxed),
             download_ns: self.download_ns.load(Ordering::Relaxed),
+            bytes_uploaded: self.bytes_uploaded.load(Ordering::Relaxed),
+            bytes_downloaded: self.bytes_downloaded.load(Ordering::Relaxed),
         }
     }
 
@@ -62,6 +103,8 @@ impl StatsCell {
         self.execute_ns.store(0, Ordering::Relaxed);
         self.upload_ns.store(0, Ordering::Relaxed);
         self.download_ns.store(0, Ordering::Relaxed);
+        self.bytes_uploaded.store(0, Ordering::Relaxed);
+        self.bytes_downloaded.store(0, Ordering::Relaxed);
     }
 }
 
@@ -81,10 +124,12 @@ impl Executable {
         let t0 = Instant::now();
         let literals: Vec<xla::Literal> =
             inputs.iter().map(|t| tensor_to_literal(t)).collect::<Result<_>>()?;
+        let in_bytes: usize = inputs.iter().map(|t| 4 * t.len()).sum();
         let t1 = Instant::now();
         self.stats
             .upload_ns
             .fetch_add((t1 - t0).as_nanos() as u64, Ordering::Relaxed);
+        self.stats.bytes_uploaded.fetch_add(in_bytes as u64, Ordering::Relaxed);
 
         let out = self
             .exe
@@ -104,10 +149,116 @@ impl Executable {
             .into_iter()
             .map(|l| literal_to_tensor(&l))
             .collect::<Result<Vec<_>>>()?;
+        let out_bytes: usize = tensors.iter().map(|t| 4 * t.len()).sum();
         self.stats
             .download_ns
             .fetch_add(t2.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        self.stats.bytes_downloaded.fetch_add(out_bytes as u64, Ordering::Relaxed);
         Ok(tensors)
+    }
+
+    /// Execute with device-resident operands; outputs stay resident.
+    ///
+    /// Nothing crosses the host boundary here: no literal marshalling on
+    /// the way in, no tuple download on the way out.  Results rely on the
+    /// runtime untupling the output into one buffer per leaf; a packed
+    /// single-buffer tuple for a multi-output graph surfaces at the call
+    /// site as an output-count mismatch, which residency callers wrap in
+    /// [`ResidencyUnsupported`] and answer by falling back to
+    /// [`Executable::run`].
+    ///
+    /// No input donation/aliasing: inputs are borrowed, outputs are fresh
+    /// buffers, and a consumed step-N state is freed when the caller drops
+    /// its `DeviceBuffer`s after swapping in step N+1's outputs.
+    pub fn run_buffers(&self, inputs: &[&DeviceBuffer]) -> Result<Vec<DeviceBuffer>> {
+        let bufs: Vec<&xla::PjRtBuffer> = inputs.iter().map(|b| &b.buf).collect();
+        let t0 = Instant::now();
+        let mut out = self
+            .exe
+            .execute_b(&bufs)
+            .with_context(|| format!("buffer-executing `{}`", self.name))?;
+        self.stats.executions.fetch_add(1, Ordering::Relaxed);
+        self.stats
+            .execute_ns
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        anyhow::ensure!(!out.is_empty(), "`{}` returned no device results", self.name);
+        Ok(out
+            .swap_remove(0)
+            .into_iter()
+            .map(|buf| DeviceBuffer { buf, stats: self.stats.clone() })
+            .collect())
+    }
+}
+
+// ----- device-resident state -------------------------------------------------
+
+/// One device-resident array: a `PjRtBuffer` plus the stats handle of the
+/// engine that allocated it.  Belongs to that engine's client and must not
+/// outlive it (the same per-thread discipline as [`Executable`]s).
+pub struct DeviceBuffer {
+    buf: xla::PjRtBuffer,
+    stats: Arc<StatsCell>,
+}
+
+impl DeviceBuffer {
+    /// Download to a host tensor (the only device->host path in buffer
+    /// mode).  Shape is recovered from the on-device literal, so callers
+    /// never thread shape metadata through the hot loop.
+    pub fn to_tensor(&self) -> Result<Tensor> {
+        let t0 = Instant::now();
+        let lit = self.buf.to_literal_sync().context("downloading device buffer")?;
+        let t = literal_to_tensor(&lit)?;
+        self.stats
+            .download_ns
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        self.stats.bytes_downloaded.fetch_add(4 * t.len() as u64, Ordering::Relaxed);
+        Ok(t)
+    }
+}
+
+/// Device-side mirror of the pieces of `ModelState` the AOT graphs consume:
+/// params, momenta, masks, and the qbits scalars.  The training loop swaps
+/// `params`/`momenta` for each step's output buffers, so step N+1 consumes
+/// step N's results without materializing a single host tensor; masks and
+/// qbits are upload-once invariants (no graph writes them).
+///
+/// Host tensors are produced exactly once per stage, by
+/// [`DeviceState::to_host`] at the stage boundary — the point where the
+/// plan cache snapshots `ModelState` (see DESIGN.md §Device residency).
+pub struct DeviceState {
+    pub params: Vec<DeviceBuffer>,
+    pub momenta: Vec<DeviceBuffer>,
+    pub masks: Vec<DeviceBuffer>,
+    pub qbw: DeviceBuffer,
+    pub qba: DeviceBuffer,
+}
+
+impl DeviceState {
+    /// Upload a full model state (the stage-entry cost, paid once — not
+    /// per step).
+    pub fn from_model(engine: &Engine, state: &ModelState) -> Result<DeviceState> {
+        let up_all = |ts: &[Tensor]| -> Result<Vec<DeviceBuffer>> {
+            ts.iter().map(|t| engine.upload(t)).collect()
+        };
+        Ok(DeviceState {
+            params: up_all(&state.params)?,
+            momenta: up_all(&state.momenta)?,
+            masks: up_all(&state.masks)?,
+            qbw: engine.upload(&Tensor::scalar(state.qbits.weight))?,
+            qba: engine.upload(&Tensor::scalar(state.qbits.act))?,
+        })
+    }
+
+    /// Materialize the trained params/momenta back into `state` — the
+    /// single host-materialization point of a training stage.  Masks and
+    /// qbits are never written by any graph, so the host copies are
+    /// already current.  Literal round-trips are exact f32 bytes, so a
+    /// state that went device-side and back is bit-identical to one that
+    /// never left the host.
+    pub fn to_host(&self, state: &mut ModelState) -> Result<()> {
+        state.params = self.params.iter().map(|b| b.to_tensor()).collect::<Result<_>>()?;
+        state.momenta = self.momenta.iter().map(|b| b.to_tensor()).collect::<Result<_>>()?;
+        Ok(())
     }
 }
 
@@ -149,6 +300,24 @@ impl Engine {
         self.stats.reset();
     }
 
+    /// Upload one host tensor to a device-resident buffer.  Errors are
+    /// wrapped in [`ResidencyUnsupported`] so buffer-mode callers can
+    /// distinguish "this transport is unavailable" from a real failure
+    /// and degrade to literal mode.
+    pub fn upload(&self, t: &Tensor) -> Result<DeviceBuffer> {
+        let t0 = Instant::now();
+        let lit = tensor_to_literal(t)?;
+        let buf = self
+            .client
+            .buffer_from_host_literal(None, &lit)
+            .map_err(|e| ResidencyUnsupported(format!("buffer upload: {e}")))?;
+        self.stats
+            .upload_ns
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        self.stats.bytes_uploaded.fetch_add(4 * t.len() as u64, Ordering::Relaxed);
+        Ok(DeviceBuffer { buf, stats: self.stats.clone() })
+    }
+
     /// Load + compile an HLO-text artifact (cached).
     pub fn load(&self, file: &str) -> Result<Arc<Executable>> {
         if let Some(e) = self.cache.lock().unwrap().get(file) {
@@ -177,6 +346,30 @@ impl Engine {
         self.cache.lock().unwrap().insert(file.to_string(), exec.clone());
         Ok(exec)
     }
+}
+
+/// Upload the invariant operand prefix shared by the eval and staged
+/// serving graphs: `params* ++ masks* ++ qbw ++ qba`, in graph operand
+/// order.  One definition so `train::eval_logits` and
+/// `serve::StageRunner` can never drift apart.
+pub fn upload_eval_prefix(engine: &Engine, state: &ModelState) -> Result<Vec<DeviceBuffer>> {
+    let mut prefix = Vec::with_capacity(state.params.len() + state.masks.len() + 2);
+    for t in state.params.iter().chain(state.masks.iter()) {
+        prefix.push(engine.upload(t)?);
+    }
+    prefix.push(engine.upload(&Tensor::scalar(state.qbits.weight))?);
+    prefix.push(engine.upload(&Tensor::scalar(state.qbits.act))?);
+    Ok(prefix)
+}
+
+/// Log the first buffer-mode -> literal-mode fallback of the process (once:
+/// when residency is unavailable it is unavailable for every subsequent
+/// call, and the hot loops would otherwise print per stage/batch).
+pub fn note_residency_fallback(what: &str, e: &anyhow::Error) {
+    static WARNED: std::sync::Once = std::sync::Once::new();
+    WARNED.call_once(|| {
+        eprintln!("[runtime] {what}: {e:#}; falling back to literal marshalling (logged once)");
+    });
 }
 
 // ----- literal <-> tensor ----------------------------------------------------
@@ -227,5 +420,27 @@ mod tests {
         assert_eq!(c.snapshot().executions, 3);
         c.reset();
         assert_eq!(c.snapshot().executions, 0);
+    }
+
+    #[test]
+    fn stats_track_transfer_bytes() {
+        let c = StatsCell::default();
+        c.bytes_uploaded.fetch_add(1024, Ordering::Relaxed);
+        c.bytes_downloaded.fetch_add(8, Ordering::Relaxed);
+        let snap = c.snapshot();
+        assert_eq!(snap.bytes_uploaded, 1024);
+        assert_eq!(snap.bytes_downloaded, 8);
+        c.reset();
+        assert_eq!(c.snapshot().bytes_uploaded, 0);
+        assert_eq!(c.snapshot().bytes_downloaded, 0);
+    }
+
+    #[test]
+    fn residency_unsupported_is_downcastable() {
+        // The train/eval/serve fallbacks rely on recovering this marker
+        // from an anyhow chain to pick "degrade transport" over "fail".
+        let e: anyhow::Error = ResidencyUnsupported("no buffer api".into()).into();
+        assert!(e.downcast_ref::<ResidencyUnsupported>().is_some());
+        assert!(e.to_string().contains("device residency unsupported"));
     }
 }

@@ -17,9 +17,13 @@
 //!
 //! [`StageRunner`] is the shared execution core: it owns the staged
 //! executables plus the *invariant* operand prefix (params ++ masks ++
-//! qbits — only `x` changes per request), so the hot path never rebuilds
-//! the full operand list per stage.  [`Server`] keeps the simple
-//! synchronous single-stream API on top of it.
+//! qbits — only `x` changes per request).  The prefix is **device
+//! resident**: uploaded once at runner construction, so the per-request
+//! host->device traffic is just the input rows (`x`, then the surviving
+//! `h1`/`h2` features).  When buffer execution is unavailable the runner
+//! degrades permanently to the legacy literal transport (same graphs,
+//! same operand values, identical predictions).  [`Server`] keeps the
+//! simple synchronous single-stream API on top of it.
 
 pub mod batcher;
 pub mod loadgen;
@@ -27,6 +31,7 @@ pub mod queue;
 pub mod slo;
 pub mod worker;
 
+use std::cell::Cell;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -34,7 +39,7 @@ use anyhow::{ensure, Context, Result};
 
 use crate::data::Dataset;
 use crate::models::{ArchManifest, ModelState};
-use crate::runtime::{Engine, Executable};
+use crate::runtime::{self, DeviceBuffer, Engine, Executable};
 use crate::tensor::{argmax_slice, Tensor};
 use crate::util::stats::Summary;
 
@@ -128,23 +133,39 @@ struct StageSet {
 }
 
 /// The serving execution core: staged executables + the shared model
-/// state.  One `StageRunner` per thread (its executables belong to that
-/// thread's engine); the model state is shared via `Arc`, so an N-worker
-/// pool holds ONE copy of the weights, not N.
-pub struct StageRunner {
+/// state.  One `StageRunner` per thread (its executables and resident
+/// buffers belong to that thread's engine, which the runner now borrows —
+/// the "engine outlives the runner" rule is compile-enforced); the model
+/// state is shared via `Arc`, so an N-worker pool holds ONE copy of the
+/// weights, not N.
+pub struct StageRunner<'e> {
+    engine: &'e Engine,
     stages: StageSet,
-    /// Shared source of the invariant operands (params ++ masks); the
-    /// per-request operand list is built once per request and stages 2/3
-    /// only swap the final slot.
+    /// Shared source of the invariant operands (params ++ masks); these
+    /// host-side copies also back the literal-transport fallback.
     state: Arc<ModelState>,
     qbw: Tensor,
     qba: Tensor,
+    /// Device-resident invariant prefix (params ++ masks ++ qbw ++ qba),
+    /// uploaded once at construction; `None` when buffer upload is
+    /// unavailable.  Buffers belong to the engine that built this runner,
+    /// which the runner's owner keeps alive (same rule as executables).
+    resident: Option<Vec<DeviceBuffer>>,
+    /// Sticky transport switch: flips to `false` on the first buffer-mode
+    /// execution failure so a broken transport costs one failed attempt,
+    /// not one per request.  `Cell` because a `StageRunner` is a
+    /// per-thread object (its executables already pin it to one engine).
+    resident_ok: Cell<bool>,
 }
 
-impl StageRunner {
+impl<'e> StageRunner<'e> {
     /// Load the staged graphs for `state` on `engine`.  `max_batch` caps
     /// which lowered stage batch is used (1 disables micro-batching).
-    pub fn new(engine: &Engine, state: Arc<ModelState>, max_batch: usize) -> Result<StageRunner> {
+    pub fn new(
+        engine: &'e Engine,
+        state: Arc<ModelState>,
+        max_batch: usize,
+    ) -> Result<StageRunner<'e>> {
         let arch = &state.arch;
         let b1 = [
             engine.load(arch.graph("stage1")?)?,
@@ -175,7 +196,36 @@ impl StageRunner {
         }
         let qbw = Tensor::scalar(state.qbits.weight);
         let qba = Tensor::scalar(state.qbits.act);
-        Ok(StageRunner { stages: StageSet { b1, batched }, state, qbw, qba })
+        // Hoist the invariant prefix onto the device once; per request only
+        // the input rows are uploaded.  Unavailable -> literal fallback.
+        let resident = match runtime::upload_eval_prefix(engine, &state) {
+            Ok(prefix) => Some(prefix),
+            Err(e) => {
+                runtime::note_residency_fallback("serve", &e);
+                None
+            }
+        };
+        let resident_ok = Cell::new(resident.is_some());
+        Ok(StageRunner {
+            engine,
+            stages: StageSet { b1, batched },
+            state,
+            qbw,
+            qba,
+            resident,
+            resident_ok,
+        })
+    }
+
+    /// Force the legacy literal transport (equivalence tests and the
+    /// residency benches compare the two paths through this).
+    pub fn disable_residency(&self) {
+        self.resident_ok.set(false);
+    }
+
+    /// Whether stage executions currently run over the resident prefix.
+    pub fn residency_active(&self) -> bool {
+        self.resident_ok.get() && self.resident.is_some()
     }
 
     fn load_batched(
@@ -206,9 +256,9 @@ impl StageRunner {
         self.state.exits.thresholds
     }
 
-    /// Operand list for one stage call: invariant operands (params ++
-    /// masks ++ qbits, referenced out of the shared state — never copied)
-    /// + `x` last.
+    /// Operand list for one literal-transport stage call: invariant
+    /// operands (params ++ masks ++ qbits, referenced out of the shared
+    /// state — never copied) + `x` last.
     fn input_refs<'a>(&'a self, x: &'a Tensor) -> Vec<&'a Tensor> {
         let mut v: Vec<&Tensor> =
             Vec::with_capacity(self.state.params.len() + self.state.masks.len() + 3);
@@ -220,14 +270,70 @@ impl StageRunner {
         v
     }
 
+    /// Run one staged executable on input rows `x`: resident prefix +
+    /// row upload when the buffer transport is live, full literal
+    /// marshalling otherwise.  `min_outputs` is the stage's contractual
+    /// leaf count (2 for stages 1/2: exit logits + features; 1 for stage
+    /// 3) — a short result means the runtime packed the tuple, which must
+    /// flip the transport, not fail the request.  A buffer-mode failure
+    /// flips the sticky switch and re-runs the same call on the literal
+    /// path, so one bad transport costs one retry ever.
+    fn run_stage(&self, exe: &Executable, x: &Tensor, min_outputs: usize) -> Result<Vec<Tensor>> {
+        if self.resident_ok.get() {
+            if let Some(prefix) = &self.resident {
+                match self.run_stage_resident(exe, prefix, x, min_outputs) {
+                    Ok(outs) => return Ok(outs),
+                    Err(e) => {
+                        runtime::note_residency_fallback("serve stage", &e);
+                        self.resident_ok.set(false);
+                    }
+                }
+            }
+        }
+        exe.run(&self.input_refs(x))
+    }
+
+    fn run_stage_resident(
+        &self,
+        exe: &Executable,
+        prefix: &[DeviceBuffer],
+        x: &Tensor,
+        min_outputs: usize,
+    ) -> Result<Vec<Tensor>> {
+        let xb = self.engine.upload(x)?;
+        let mut inputs: Vec<&DeviceBuffer> = Vec::with_capacity(prefix.len() + 1);
+        inputs.extend(prefix.iter());
+        inputs.push(&xb);
+        let outs = exe.run_buffers(&inputs)?;
+        ensure!(
+            outs.len() >= min_outputs,
+            "`{}` returned {} device results, want >= {min_outputs} untupled leaves",
+            exe.name,
+            outs.len()
+        );
+        // Stage outputs (exit logits + forwarded features) come back to
+        // the host: the exit decision and survivor regrouping are
+        // host-side, exactly as on the literal path.
+        outs.iter().map(|b| b.to_tensor()).collect()
+    }
+
     /// Execute stage `s` (0-based) on `hm` = `[m, rest..]` real rows.
     /// `m == 1` uses the batch-1 graph; `m > 1` pads to the batched graph
     /// (caller guarantees `m <=` the lowered stage batch).
+    /// Contractual output-leaf count per 0-based stage index: stages 1/2
+    /// emit (exit logits, forwarded features); stage 3 only main logits.
+    fn stage_min_outputs(s: usize) -> usize {
+        if s < 2 {
+            2
+        } else {
+            1
+        }
+    }
+
     fn exec_stage(&self, s: usize, hm: &Tensor) -> Result<Vec<Tensor>> {
         let m = hm.shape[0];
         if m == 1 {
-            let inputs = self.input_refs(hm);
-            return self.stages.b1[s].run(&inputs);
+            return self.run_stage(&self.stages.b1[s], hm, Self::stage_min_outputs(s));
         }
         let batched = self
             .stages
@@ -242,31 +348,28 @@ impl StageRunner {
             padded = pad_rows(hm, batched.batch);
             &padded
         };
-        let inputs = self.input_refs(href);
-        let outs = batched.exes[s].run(&inputs)?;
+        let outs = self.run_stage(&batched.exes[s], href, Self::stage_min_outputs(s))?;
         Ok(outs.iter().map(|t| take_rows(t, m)).collect())
     }
 
     /// Serve one request at batch 1; returns (prediction, exit_stage 1|2|3).
     pub fn infer_one(&self, x: &Tensor, t1: f32, t2: f32) -> Result<(usize, u8)> {
-        // One operand-list build per request; stages 2/3 only swap the
-        // final slot (the invariant params/masks/qbits never rebuild).
-        let mut inputs = self.input_refs(x);
-        let outs = self.stages.b1[0].run(&inputs)?;
+        // Per stage, only the final operand (x, then h1, then h2) crosses
+        // the host boundary; the invariant prefix stays device-resident.
+        let outs = self.run_stage(&self.stages.b1[0], x, 2)?;
         ensure!(outs.len() == 2, "stage1 returned {} outputs", outs.len());
         let (e1, h1) = (&outs[0], &outs[1]);
         if max_conf(&e1.data) >= t1 {
             return Ok((e1.argmax(), 1));
         }
-        *inputs.last_mut().unwrap() = h1;
-        let outs2 = self.stages.b1[1].run(&inputs)?;
+        let outs2 = self.run_stage(&self.stages.b1[1], h1, 2)?;
         ensure!(outs2.len() == 2, "stage2 returned {} outputs", outs2.len());
         let (e2, h2) = (&outs2[0], &outs2[1]);
         if max_conf(&e2.data) >= t2 {
             return Ok((e2.argmax(), 2));
         }
-        *inputs.last_mut().unwrap() = h2;
-        let outs3 = self.stages.b1[2].run(&inputs)?;
+        let outs3 = self.run_stage(&self.stages.b1[2], h2, 1)?;
+        ensure!(!outs3.is_empty(), "stage3 returned no outputs");
         Ok((outs3[0].argmax(), 3))
     }
 
@@ -339,7 +442,7 @@ impl StageRunner {
 
 pub struct Server<'e> {
     engine: &'e Engine,
-    runner: StageRunner,
+    runner: StageRunner<'e>,
 }
 
 impl<'e> Server<'e> {
@@ -359,7 +462,7 @@ impl<'e> Server<'e> {
         &self.runner.state
     }
 
-    pub fn runner(&self) -> &StageRunner {
+    pub fn runner(&self) -> &StageRunner<'e> {
         &self.runner
     }
 

@@ -94,6 +94,13 @@ pub struct WorkerStats {
     /// padding — the micro-batching overhead, surfaced not hidden.
     pub rows_useful: u64,
     pub rows_executed: u64,
+    /// Host<->device transfer volume over this worker's engine lifetime
+    /// (includes the one-time resident-prefix upload).  With the
+    /// device-resident operand prefix, the per-request upload share is
+    /// just the input rows — `serve_bench.json` surfaces these so BENCH
+    /// trajectories capture transfer volume alongside latency.
+    pub bytes_uploaded: u64,
+    pub bytes_downloaded: u64,
 }
 
 impl WorkerStats {
@@ -234,32 +241,44 @@ fn worker_main(
     outcomes: Arc<Queue<ServeOutcome>>,
     ready: Arc<(Mutex<Ready>, Condvar)>,
 ) -> Result<WorkerStats> {
-    // Per-worker engine: compile once, then serve (see module docs).
-    let setup = (|| -> Result<(Engine, StageRunner)> {
-        let engine = Engine::new(&opts.artifacts_dir)
-            .with_context(|| format!("worker {w}: creating PJRT engine"))?;
-        // Arc clone: all workers share one copy of the weights.
-        let runner = StageRunner::new(&engine, state.clone(), opts.batch.max_batch)
-            .with_context(|| format!("worker {w}: loading staged graphs"))?;
-        Ok((engine, runner))
-    })();
+    // Per-worker engine: compile once, then serve (see module docs).  The
+    // runner borrows the engine (its executables and resident prefix
+    // buffers), so "engine outlives the runner" is compile-enforced and
+    // the two are constructed as separate locals rather than returned
+    // together.
     let (lock, cv) = &*ready;
-    let (engine, runner) = match setup {
-        Ok(ok) => {
+    let fail = |e: anyhow::Error| -> anyhow::Error {
+        lock.lock().unwrap().failed += 1;
+        cv.notify_all();
+        e
+    };
+    let engine = match Engine::new(&opts.artifacts_dir)
+        .with_context(|| format!("worker {w}: creating PJRT engine"))
+    {
+        Ok(e) => e,
+        Err(e) => return Err(fail(e)),
+    };
+    // Arc clone: all workers share one copy of the weights.
+    let runner = match StageRunner::new(&engine, state.clone(), opts.batch.max_batch)
+        .with_context(|| format!("worker {w}: loading staged graphs"))
+    {
+        Ok(r) => {
             lock.lock().unwrap().ready += 1;
             cv.notify_all();
-            ok
+            r
         }
-        Err(e) => {
-            lock.lock().unwrap().failed += 1;
-            cv.notify_all();
-            return Err(e);
-        }
+        Err(e) => return Err(fail(e)),
     };
-    let _ = &engine; // engine must outlive the runner's executables
 
     let (t1, t2) = opts.thresholds;
     let mut stats = WorkerStats { worker: w, stage_batch: runner.stage_batch(), ..Default::default() };
+    // Transfer-volume snapshot on every successful exit path.
+    let finish = |mut stats: WorkerStats| -> WorkerStats {
+        let rs = engine.stats();
+        stats.bytes_uploaded = rs.bytes_uploaded;
+        stats.bytes_downloaded = rs.bytes_downloaded;
+        stats
+    };
     loop {
         let batch = drain_batch(&jobs, &opts.batch);
         if batch.is_empty() {
@@ -300,11 +319,11 @@ fn worker_main(
                 worker: w,
             };
             if outcomes.push(outcome).is_err() {
-                return Ok(stats); // result side closed: shutting down
+                return Ok(finish(stats)); // result side closed: shutting down
             }
         }
     }
-    Ok(stats)
+    Ok(finish(stats))
 }
 
 #[cfg(test)]

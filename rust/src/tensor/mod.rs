@@ -101,15 +101,25 @@ impl Tensor {
     }
 
     /// Row-wise softmax for a [n, c] tensor (used for exit confidences).
+    ///
+    /// Allocation-free per row: exponentials are written straight into the
+    /// output buffer and normalized in place (this sits on the per-request
+    /// exit-confidence path, where a per-row scratch `Vec` was measurable
+    /// allocator traffic).  Identical arithmetic order to the per-row-
+    /// buffer version: exp left-to-right, sum left-to-right, then divide —
+    /// so results are bit-identical.
     pub fn softmax_rows(&self) -> Tensor {
         assert_eq!(self.rank(), 2);
         let c = self.shape[1];
         let mut out = Vec::with_capacity(self.data.len());
         for row in self.data.chunks_exact(c) {
             let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-            let exps: Vec<f32> = row.iter().map(|x| (x - m).exp()).collect();
-            let sum: f32 = exps.iter().sum();
-            out.extend(exps.into_iter().map(|e| e / sum));
+            let start = out.len();
+            out.extend(row.iter().map(|x| (x - m).exp()));
+            let sum: f32 = out[start..].iter().sum();
+            for v in &mut out[start..] {
+                *v /= sum;
+            }
         }
         Tensor::new(self.shape.clone(), out)
     }
@@ -121,12 +131,17 @@ impl Tensor {
     }
 }
 
-/// Argmax of a logits row (0 for empty input; first index wins ties) —
-/// the one tie-breaking rule shared by eval, exits and serving.
+/// Argmax of a logits row — the one tie-breaking rule shared by eval,
+/// exits and serving: 0 for empty input, the *highest* index among exact
+/// ties (`Iterator::max_by` keeps the last maximum).  Total over all f32
+/// bit patterns via `f32::total_cmp`: a NaN logit row returns its NaN
+/// index (positive NaN orders above +inf) deterministically instead of
+/// aborting the whole serve batch, as the `partial_cmp(..).unwrap()` it
+/// replaces did.
 pub fn argmax_slice(row: &[f32]) -> usize {
     row.iter()
         .enumerate()
-        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .max_by(|a, b| a.1.total_cmp(b.1))
         .map(|(i, _)| i)
         .unwrap_or(0)
 }
@@ -181,5 +196,37 @@ mod tests {
     fn argmax_rows() {
         let t = Tensor::new(vec![2, 3], vec![0.1, 0.9, 0.2, 3.0, 1.0, 2.0]);
         assert_eq!(t.argmax_rows(), vec![1, 0]);
+    }
+
+    #[test]
+    fn argmax_is_total_over_nan_and_ties() {
+        // NaN must not abort (the old partial_cmp unwrap did) and must be
+        // deterministic: positive NaN orders above +inf under total_cmp,
+        // so a NaN row picks its NaN index.
+        assert_eq!(argmax_slice(&[f32::NAN, 1.0]), 0);
+        assert_eq!(argmax_slice(&[1.0, f32::NAN]), 1);
+        assert_eq!(argmax_slice(&[f32::NAN, f32::NAN]), 1, "ties keep the last maximum");
+        // Negative NaN orders below -inf: it never wins against a finite.
+        assert_eq!(argmax_slice(&[-f32::NAN, -1.0]), 1);
+        // Exact ties resolve to the highest index (Iterator::max_by keeps
+        // the last maximum) — the rule eval, exits and serving all share.
+        assert_eq!(argmax_slice(&[2.0, 2.0, 1.0]), 1);
+        assert_eq!(argmax_slice(&[f32::NEG_INFINITY, f32::NEG_INFINITY]), 1);
+        // Degenerate inputs stay total.
+        assert_eq!(argmax_slice(&[]), 0);
+        assert_eq!(argmax_slice(&[-0.0, 0.0]), 1, "+0 > -0 under total_cmp");
+    }
+
+    #[test]
+    fn softmax_rows_handles_many_rows_without_row_state_leaking() {
+        // In-place normalization must be per-row: a uniform row after a
+        // peaked row comes out uniform.
+        let t = Tensor::new(vec![3, 2], vec![10.0, -10.0, 3.0, 3.0, -1.0, 1.0]);
+        let s = t.softmax_rows();
+        assert!(s.data[0] > 0.999);
+        assert!((s.data[2] - 0.5).abs() < 1e-6 && (s.data[3] - 0.5).abs() < 1e-6);
+        for row in s.data.chunks_exact(2) {
+            assert!((row.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        }
     }
 }

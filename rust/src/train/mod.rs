@@ -1,12 +1,27 @@
-//! Training-loop driver: marshals ModelState + batches into the AOT train
-//! graph, applies the paper's fine-tuning protocol (fresh training vs
-//! fine-tune at 1/10 LR), and evaluates via the eval graph.
+//! Training-loop driver: drives the AOT train graph over device-resident
+//! model state, applies the paper's fine-tuning protocol (fresh training
+//! vs fine-tune at 1/10 LR), and evaluates via the eval graph.
 //!
 //! Graph operand orders are fixed by python/compile/aot.py:
 //!   train : params*, momenta*, x, y, masks*, qbw, qba, tlogits,
 //!           kd_alpha, kd_tau, exit_w[2], hp[3]      -> params*, momenta*, loss, acc
 //!   eval  : params*, masks*, qbw, qba, x            -> logits, e1, e2
 //!   init  : seed                                    -> params*, momenta*
+//!
+//! # Transport
+//!
+//! Every compression stage is dominated by these two loops, so both run on
+//! the buffer transport (`runtime::DeviceState` / `Executable::run_buffers`):
+//! [`train`] uploads params/momenta/masks/scalars once per stage, streams
+//! only `(x, y, teacher_rows)` per step, downloads only the `loss`/`acc`
+//! scalars, and materializes host tensors once at the stage boundary;
+//! [`eval_logits`] hoists the invariant `params*, masks*, qbw, qba` prefix
+//! out of the per-batch loop.  When buffer execution is unavailable
+//! ([`runtime::ResidencyUnsupported`]) both degrade to the legacy per-call
+//! literal marshalling ([`train_marshalled`] / [`eval_logits_marshalled`],
+//! also the baselines of the `train_residency` bench) — same graphs, same
+//! operand values, bit-identical results either way
+//! (`rust/tests/residency.rs`).
 
 use std::sync::Arc;
 
@@ -14,7 +29,7 @@ use anyhow::{ensure, Context, Result};
 
 use crate::data::{Batcher, Dataset};
 use crate::models::{ArchManifest, ModelState};
-use crate::runtime::Engine;
+use crate::runtime::{self, DeviceBuffer, DeviceState, Engine, ResidencyUnsupported};
 use crate::tensor::Tensor;
 
 /// Hyper-parameters for one training run (one chain stage).
@@ -118,7 +133,141 @@ pub fn init_state(engine: &Engine, arch: Arc<ArchManifest>, seed: u64) -> Result
 }
 
 /// Run `opts.steps` SGD steps on `state` in place.
+///
+/// Device-resident: params and momenta stay on the PJRT device across all
+/// steps (step N+1 consumes step N's output buffers), so the per-step
+/// host->device traffic is the batch only and the per-step device->host
+/// traffic is the two loss/acc scalars.  Falls back to
+/// [`train_marshalled`] when buffer execution is unavailable; both paths
+/// produce bit-identical `ModelState`s.
 pub fn train(
+    engine: &Engine,
+    state: &mut ModelState,
+    ds: &Dataset,
+    teacher: Option<&TeacherLogits>,
+    opts: &TrainOpts,
+) -> Result<TrainLog> {
+    match train_resident(engine, state, ds, teacher, opts) {
+        Ok(log) => Ok(log),
+        Err(e) if e.downcast_ref::<ResidencyUnsupported>().is_some() => {
+            runtime::note_residency_fallback("train", &e);
+            train_marshalled(engine, state, ds, teacher, opts)
+        }
+        Err(e) => Err(e),
+    }
+}
+
+/// The buffer-transport training loop.  Mutates `state` only at the very
+/// end ([`DeviceState::to_host`]), so any error leaves the host state
+/// untouched and the caller is free to re-run the stage on the literal
+/// transport.
+fn train_resident(
+    engine: &Engine,
+    state: &mut ModelState,
+    ds: &Dataset,
+    teacher: Option<&TeacherLogits>,
+    opts: &TrainOpts,
+) -> Result<TrainLog> {
+    let mut log = TrainLog::default();
+    if opts.steps == 0 {
+        return Ok(log);
+    }
+    let arch = state.arch.clone();
+    let exe = engine.load(arch.graph("train")?)?;
+    let bs = arch.train_batch;
+    let np = arch.num_params();
+    let mut batcher = Batcher::new(ds.len(), bs, opts.seed ^ 0xbadc0de);
+
+    // Stage-entry uploads: the entire invariant operand set goes
+    // device-side once, not once per step.  (`Engine::upload` wraps its
+    // failures in `ResidencyUnsupported` already.)
+    let mut dev = DeviceState::from_model(engine, state)?;
+    let kd_alpha =
+        engine.upload(&Tensor::scalar(if teacher.is_some() { opts.kd_alpha } else { 0.0 }))?;
+    let kd_tau = engine.upload(&Tensor::scalar(opts.kd_tau))?;
+    let exit_w = engine.upload(&Tensor::from_vec(opts.exit_w.to_vec()))?;
+    let hp = engine.upload(&Tensor::from_vec(vec![opts.lr, opts.momentum, opts.weight_decay]))?;
+    // Hoisted too: the marshalled path re-marshals this zero block every
+    // teacherless step.
+    let zero_teacher = engine.upload(&Tensor::zeros(&[bs, arch.num_classes]))?;
+
+    for step in 0..opts.steps {
+        let idx = batcher.next_indices().to_vec();
+        let (x, y) = ds.batch(&idx);
+        let xb = engine.upload(&x)?;
+        let yb = engine.upload(&y)?;
+        let tlb = match teacher {
+            Some(t) => Some(engine.upload(&t.gather(&idx))?),
+            None => None,
+        };
+
+        let mut inputs: Vec<&DeviceBuffer> = Vec::with_capacity(2 * np + 10);
+        inputs.extend(dev.params.iter());
+        inputs.extend(dev.momenta.iter());
+        inputs.push(&xb);
+        inputs.push(&yb);
+        inputs.extend(dev.masks.iter());
+        inputs.push(&dev.qbw);
+        inputs.push(&dev.qba);
+        inputs.push(tlb.as_ref().unwrap_or(&zero_teacher));
+        inputs.push(&kd_alpha);
+        inputs.push(&kd_tau);
+        inputs.push(&exit_w);
+        inputs.push(&hp);
+
+        let ran = exe.run_buffers(&inputs).with_context(|| format!("train step {step}"));
+        let mut outs = if step == 0 {
+            // Nothing has been consumed device-side yet: a failure (or a
+            // packed-tuple result, visible as the wrong leaf count) on the
+            // FIRST step means buffer-mode execution is unavailable, not
+            // that training failed.  Later steps report errors as errors.
+            let outs = ran.map_err(|e| ResidencyUnsupported(format!("{e:#}")))?;
+            if outs.len() != 2 * np + 2 {
+                return Err(ResidencyUnsupported(format!(
+                    "train graph returned {} device results, want {} untupled leaves",
+                    outs.len(),
+                    2 * np + 2
+                ))
+                .into());
+            }
+            outs
+        } else {
+            let outs = ran?;
+            ensure!(
+                outs.len() == 2 * np + 2,
+                "train graph returned {} outputs, want {}",
+                outs.len(),
+                2 * np + 2
+            );
+            outs
+        };
+
+        // The only per-step downloads: the two scalars.
+        let acc = outs.pop().unwrap().to_tensor().context("downloading acc scalar")?.data[0];
+        let loss = outs.pop().unwrap().to_tensor().context("downloading loss scalar")?.data[0];
+        // Step N's outputs become step N+1's resident inputs; the consumed
+        // buffers drop (and free) here.
+        dev.momenta = outs.split_off(np);
+        dev.params = outs;
+        log.losses.push(loss);
+        log.accs.push(acc);
+        if opts.log_every > 0 && step % opts.log_every == 0 {
+            eprintln!("  step {step:>4}  loss {loss:.4}  acc {acc:.3}");
+        }
+        ensure!(loss.is_finite(), "training diverged at step {step} (loss={loss})");
+    }
+    // The stage boundary: the single host-materialization point, where the
+    // plan cache snapshots the state.
+    dev.to_host(state)?;
+    Ok(log)
+}
+
+/// Legacy transport: re-marshal the full `params ++ momenta` set through
+/// host literals on every step and download them all back.  Kept as the
+/// measured baseline of the `train_residency` bench and the reference side
+/// of the bit-identical equivalence tests — not used on any hot path
+/// unless buffer execution is unavailable.
+pub fn train_marshalled(
     engine: &Engine,
     state: &mut ModelState,
     ds: &Dataset,
@@ -180,9 +329,104 @@ pub fn train(
     Ok(log)
 }
 
+/// Index list for one eval batch: `take` real rows starting at `start`,
+/// padded to the lowered batch `bs` by repeating the final dataset row
+/// (index `n - 1`).  Padded rows are computed by the graph and dropped
+/// from the returned logits — `rust/tests/residency.rs` pins that the
+/// ragged tail changes nothing.
+fn padded_eval_indices(start: usize, take: usize, bs: usize, n: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (start..start + take).collect();
+    while idx.len() < bs {
+        idx.push(n - 1);
+    }
+    idx
+}
+
 /// Full-dataset forward: returns (main logits, exit1 logits, exit2 logits)
 /// stacked over the dataset (padding batches internally).
+///
+/// Device-resident: the invariant `params*, masks*, qbw, qba` operand
+/// prefix is uploaded once and only `x` crosses the host boundary per
+/// batch.  Falls back to [`eval_logits_marshalled`] when buffer execution
+/// is unavailable; the logits are bit-identical either way.
 pub fn eval_logits(
+    engine: &Engine,
+    state: &ModelState,
+    ds: &Dataset,
+) -> Result<(Tensor, Tensor, Tensor)> {
+    match eval_logits_resident(engine, state, ds) {
+        Ok(r) => Ok(r),
+        Err(e) if e.downcast_ref::<ResidencyUnsupported>().is_some() => {
+            runtime::note_residency_fallback("eval", &e);
+            eval_logits_marshalled(engine, state, ds)
+        }
+        Err(e) => Err(e),
+    }
+}
+
+fn eval_logits_resident(
+    engine: &Engine,
+    state: &ModelState,
+    ds: &Dataset,
+) -> Result<(Tensor, Tensor, Tensor)> {
+    let arch = &state.arch;
+    let exe = engine.load(arch.graph("eval")?)?;
+    let bs = arch.eval_batch;
+    let nc = arch.num_classes;
+    let n = ds.len();
+
+    // The invariant prefix, hoisted out of the per-batch loop.
+    let prefix = runtime::upload_eval_prefix(engine, state)?;
+
+    let mut main = Vec::with_capacity(n * nc);
+    let mut e1 = Vec::with_capacity(n * nc);
+    let mut e2 = Vec::with_capacity(n * nc);
+    let mut i = 0;
+    let mut first = true;
+    while i < n {
+        let take = bs.min(n - i);
+        let (x, _) = ds.batch(&padded_eval_indices(i, take, bs, n));
+        let xb = engine.upload(&x)?;
+        let mut inputs: Vec<&DeviceBuffer> = Vec::with_capacity(prefix.len() + 1);
+        inputs.extend(prefix.iter());
+        inputs.push(&xb);
+        let ran = exe.run_buffers(&inputs).context("eval batch");
+        let outs = if first {
+            // See train_resident: a first-execute failure or a packed
+            // tuple means the transport is unavailable, not that eval
+            // failed.
+            let outs = ran.map_err(|e| ResidencyUnsupported(format!("{e:#}")))?;
+            if outs.len() != 3 {
+                return Err(ResidencyUnsupported(format!(
+                    "eval graph returned {} device results, want 3 untupled leaves",
+                    outs.len()
+                ))
+                .into());
+            }
+            first = false;
+            outs
+        } else {
+            let outs = ran?;
+            ensure!(outs.len() == 3, "eval graph returned {} outputs", outs.len());
+            outs
+        };
+        // Padded rows are dropped here: only `take * nc` values survive.
+        main.extend_from_slice(&outs[0].to_tensor()?.data[..take * nc]);
+        e1.extend_from_slice(&outs[1].to_tensor()?.data[..take * nc]);
+        e2.extend_from_slice(&outs[2].to_tensor()?.data[..take * nc]);
+        i += take;
+    }
+    Ok((
+        Tensor::new(vec![n, nc], main),
+        Tensor::new(vec![n, nc], e1),
+        Tensor::new(vec![n, nc], e2),
+    ))
+}
+
+/// Legacy transport for [`eval_logits`]: re-marshal the full operand list
+/// per batch.  Kept for the `train_residency` bench and the equivalence
+/// tests.
+pub fn eval_logits_marshalled(
     engine: &Engine,
     state: &ModelState,
     ds: &Dataset,
@@ -201,12 +445,7 @@ pub fn eval_logits(
     let mut i = 0;
     while i < n {
         let take = bs.min(n - i);
-        // Pad the final ragged batch by repeating the last index.
-        let mut idx: Vec<usize> = (i..i + take).collect();
-        while idx.len() < bs {
-            idx.push(n - 1);
-        }
-        let (x, _) = ds.batch(&idx);
+        let (x, _) = ds.batch(&padded_eval_indices(i, take, bs, n));
         let mut inputs: Vec<&Tensor> = Vec::with_capacity(arch.num_params() + 8);
         inputs.extend(state.params.iter());
         inputs.extend(state.masks.iter());
@@ -269,5 +508,35 @@ mod tests {
         let t = TeacherLogits { rows: Tensor::new(vec![3, 2], vec![1., 2., 3., 4., 5., 6.]) };
         let g = t.gather(&[2, 0]);
         assert_eq!(g.data, vec![5., 6., 1., 2.]);
+    }
+
+    #[test]
+    fn padded_eval_indices_fill_with_last_row() {
+        // Final ragged batch of a 10-sample dataset at batch 4: 2 real
+        // rows, then index 9 repeated.
+        assert_eq!(padded_eval_indices(8, 2, 4, 10), vec![8, 9, 9, 9]);
+        // Full batches carry no padding.
+        assert_eq!(padded_eval_indices(4, 4, 4, 10), vec![4, 5, 6, 7]);
+        // Degenerate single-sample dataset at batch 3.
+        assert_eq!(padded_eval_indices(0, 1, 3, 1), vec![0, 0, 0]);
+    }
+
+    #[test]
+    fn padded_eval_batches_cover_dataset_exactly_once() {
+        // Walking the same (start, take) schedule as eval_logits must
+        // enumerate 0..n exactly once in order, whatever the raggedness.
+        for (n, bs) in [(10usize, 4usize), (8, 4), (1, 64), (7, 7), (13, 5)] {
+            let mut seen = Vec::new();
+            let mut i = 0;
+            while i < n {
+                let take = bs.min(n - i);
+                let idx = padded_eval_indices(i, take, bs, n);
+                assert_eq!(idx.len(), bs, "every executed batch is the lowered size");
+                assert!(idx[take..].iter().all(|&p| p == n - 1), "padding repeats the last row");
+                seen.extend_from_slice(&idx[..take]);
+                i += take;
+            }
+            assert_eq!(seen, (0..n).collect::<Vec<_>>());
+        }
     }
 }

@@ -1,0 +1,186 @@
+//! Device-residency equivalence over the real PJRT runtime: the buffer
+//! transport (resident params/momenta, hoisted eval/serve operand
+//! prefixes) must be *invisible* — bit-identical states, logits and
+//! predictions vs the legacy literal marshalling.  Same graphs, same
+//! operand values, different transport.
+//!
+//! Every test self-skips without `make artifacts` (the plan-cache test
+//! pattern), so the suite stays green in artifact-free environments.
+
+use std::path::Path;
+
+use coc::data::{Dataset, DatasetKind};
+use coc::models::Manifest;
+use coc::runtime::Engine;
+use coc::serve::Server;
+use coc::train::{self, TrainOpts};
+
+fn artifacts_ok() -> bool {
+    Path::new("artifacts/manifest.json").exists()
+}
+
+#[test]
+fn resident_and_marshalled_training_are_bit_identical() {
+    if !artifacts_ok() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let engine = Engine::new("artifacts").unwrap();
+    let manifest = Manifest::load("artifacts").unwrap();
+    let arch = manifest.arch("mini_vgg").unwrap();
+    let ds = Dataset::generate(DatasetKind::SynthC10, 96, 13, 0);
+    let opts = TrainOpts { steps: 8, seed: 13, ..Default::default() };
+
+    let base = train::init_state(&engine, arch, 13).unwrap();
+    let mut resident = base.clone();
+    let log_r = train::train(&engine, &mut resident, &ds, None, &opts).unwrap();
+    let mut legacy = base.clone();
+    let log_l = train::train_marshalled(&engine, &mut legacy, &ds, None, &opts).unwrap();
+
+    // Exact f32 equality throughout: same graph, same batch schedule,
+    // same operand values — the transport must not perturb a single bit.
+    assert_eq!(log_r.losses, log_l.losses, "per-step losses diverged");
+    assert_eq!(log_r.accs, log_l.accs, "per-step accuracies diverged");
+    assert_eq!(resident.params, legacy.params, "trained params diverged");
+    assert_eq!(resident.momenta, legacy.momenta, "trained momenta diverged");
+}
+
+#[test]
+fn resident_and_marshalled_training_match_with_teacher() {
+    if !artifacts_ok() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    // The KD path exercises the per-step teacher-row stream (the third
+    // per-step upload next to x and y).
+    let engine = Engine::new("artifacts").unwrap();
+    let manifest = Manifest::load("artifacts").unwrap();
+    let arch = manifest.arch("mini_vgg").unwrap();
+    let ds = Dataset::generate(DatasetKind::SynthC10, 96, 17, 0);
+
+    let mut teacher_model = train::init_state(&engine, arch, 17).unwrap();
+    train::train(
+        &engine,
+        &mut teacher_model,
+        &ds,
+        None,
+        &TrainOpts { steps: 6, seed: 17, ..Default::default() },
+    )
+    .unwrap();
+    let teacher = train::teacher_logits(&engine, &teacher_model, &ds).unwrap();
+
+    let opts = TrainOpts { steps: 6, seed: 18, kd_alpha: 0.5, ..Default::default() };
+    let mut resident = teacher_model.clone();
+    train::train(&engine, &mut resident, &ds, Some(&teacher), &opts).unwrap();
+    let mut legacy = teacher_model.clone();
+    train::train_marshalled(&engine, &mut legacy, &ds, Some(&teacher), &opts).unwrap();
+    assert_eq!(resident.params, legacy.params);
+    assert_eq!(resident.momenta, legacy.momenta);
+}
+
+#[test]
+fn resident_and_marshalled_eval_are_bit_identical() {
+    if !artifacts_ok() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let engine = Engine::new("artifacts").unwrap();
+    let manifest = Manifest::load("artifacts").unwrap();
+    let arch = manifest.arch("mini_vgg").unwrap();
+    // A ragged size so the padded final batch goes through both paths.
+    let eval_batch = arch.eval_batch;
+    let ds = Dataset::generate(DatasetKind::SynthC10, eval_batch + eval_batch / 2 + 1, 19, 1);
+    let state = train::init_state(&engine, arch, 19).unwrap();
+
+    let (m_r, e1_r, e2_r) = train::eval_logits(&engine, &state, &ds).unwrap();
+    let (m_l, e1_l, e2_l) = train::eval_logits_marshalled(&engine, &state, &ds).unwrap();
+    assert_eq!(m_r, m_l, "main logits diverged");
+    assert_eq!(e1_r, e1_l, "exit1 logits diverged");
+    assert_eq!(e2_r, e2_l, "exit2 logits diverged");
+}
+
+#[test]
+fn ragged_final_batch_padding_is_dropped() {
+    if !artifacts_ok() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let engine = Engine::new("artifacts").unwrap();
+    let manifest = Manifest::load("artifacts").unwrap();
+    let arch = manifest.arch("mini_vgg").unwrap();
+    let bs = arch.eval_batch;
+    let nc = arch.num_classes;
+    // Generators are pure per (kind, seed, index) and sequential, so the
+    // ragged dataset is an exact prefix of the batch-aligned one.
+    let n = bs + bs / 2 + 3;
+    let ds_ragged = Dataset::generate(DatasetKind::SynthC10, n, 21, 1);
+    let ds_aligned = Dataset::generate(DatasetKind::SynthC10, 2 * bs, 21, 1);
+    let spl = ds_ragged.images.len() / n;
+    assert_eq!(
+        ds_ragged.images.data[..],
+        ds_aligned.images.data[..n * spl],
+        "generator prefix property violated — padding comparison would be meaningless"
+    );
+    assert_eq!(&ds_ragged.labels[..], &ds_aligned.labels[..n]);
+
+    let state = train::init_state(&engine, arch, 21).unwrap();
+    let (m_ragged, e1_ragged, _) = train::eval_logits(&engine, &state, &ds_ragged).unwrap();
+    let (m_aligned, e1_aligned, _) = train::eval_logits(&engine, &state, &ds_aligned).unwrap();
+
+    // Padded rows (the repeated last index) must be dropped: the ragged
+    // eval returns exactly n rows, equal to the aligned eval's first n.
+    assert_eq!(m_ragged.shape, vec![n, nc]);
+    assert_eq!(m_ragged.data[..], m_aligned.data[..n * nc], "padding leaked into main logits");
+    assert_eq!(e1_ragged.data[..], e1_aligned.data[..n * nc], "padding leaked into exit1 logits");
+
+    // And the accuracy over the ragged set matches the unpadded reference
+    // computed from the aligned run's first n rows.
+    let acc_ragged = train::accuracy_of(&m_ragged, &ds_ragged.labels);
+    let first_n = coc::tensor::Tensor::new(vec![n, nc], m_aligned.data[..n * nc].to_vec());
+    let acc_ref = train::accuracy_of(&first_n, &ds_aligned.labels[..n]);
+    assert_eq!(acc_ragged, acc_ref, "ragged-batch accuracy diverged from unpadded reference");
+}
+
+#[test]
+fn serve_resident_prefix_matches_literal_transport() {
+    if !artifacts_ok() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let engine = Engine::new("artifacts").unwrap();
+    let manifest = Manifest::load("artifacts").unwrap();
+    let arch = manifest.arch("mini_vgg").unwrap();
+    let ds = Dataset::generate(DatasetKind::SynthC10, 24, 23, 1);
+    let mut state = train::init_state(&engine, arch, 23).unwrap();
+    train::train(
+        &engine,
+        &mut state,
+        &ds,
+        None,
+        &TrainOpts { steps: 6, seed: 23, ..Default::default() },
+    )
+    .unwrap();
+
+    // Two runners over the SAME engine and state: one on the resident
+    // prefix, one forced onto the literal transport.
+    let resident = Server::with_batching(&engine, state.clone(), 8).unwrap();
+    let literal = Server::with_batching(&engine, state, 8).unwrap();
+    literal.runner().disable_residency();
+    assert!(!literal.runner().residency_active());
+
+    let xs: Vec<_> = (0..ds.len()).map(|i| ds.batch(&[i]).0).collect();
+    let x_refs: Vec<_> = xs.iter().collect();
+    // Thresholds spanning exit-at-1, mixed, and full-path routing.
+    for (t1, t2) in [(0.0, 0.0), (0.6, 0.6), (1.01, 1.01)] {
+        let a = resident.infer_batch(&x_refs, t1, t2).unwrap();
+        let b = literal.infer_batch(&x_refs, t1, t2).unwrap();
+        assert_eq!(a, b, "predictions diverged at thresholds ({t1}, {t2})");
+        for x in &xs {
+            assert_eq!(
+                resident.infer(x, t1, t2).unwrap(),
+                literal.infer(x, t1, t2).unwrap(),
+                "batch-1 prediction diverged at thresholds ({t1}, {t2})"
+            );
+        }
+    }
+}
