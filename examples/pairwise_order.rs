@@ -14,7 +14,7 @@
 
 use anyhow::{anyhow, Result};
 
-use coc::chain::plan::{ExecOpts, PjrtRunner, PlanKey, Planner};
+use coc::chain::plan::{EngineRunner, ExecOpts, PlanKey, Planner};
 use coc::chain::Technique;
 use coc::data::{Dataset, DatasetKind};
 use coc::models::Manifest;
@@ -77,9 +77,9 @@ fn main() -> Result<()> {
         plan.unique_nodes()
     );
 
-    let runner = PjrtRunner::new(&engine, &train_ds, &test_ds, STAGE_STEPS, 42, false);
+    let runner = EngineRunner::new(&engine, &train_ds, &test_ds, STAGE_STEPS, 42, false);
     let factory = || match Engine::new(coc::DEFAULT_ARTIFACTS) {
-        Ok(e) => Ok(PjrtRunner::new(e, &train_ds, &test_ds, STAGE_STEPS, 42, false)),
+        Ok(e) => Ok(EngineRunner::new(e, &train_ds, &test_ds, STAGE_STEPS, 42, false)),
         Err(e) => Err(e),
     };
     let opts = ExecOpts {

@@ -227,8 +227,9 @@ impl Planner {
 // ---------------------------------------------------------------------------
 
 /// How one trie node is applied and measured.  The production
-/// implementation is [`PjrtRunner`]; tests substitute an engine-free
-/// runner to exercise the executor and cache without artifacts.
+/// implementation is [`EngineRunner`] (over a PJRT or reference-backend
+/// engine); tests substitute an engine-free runner to exercise the
+/// executor and cache without artifacts.
 pub trait NodeRunner {
     fn apply(&self, stage: &dyn CompressionStage, state: &mut ModelState) -> Result<()>;
     fn measure(&self, state: &ModelState) -> Result<Measurement>;
@@ -253,12 +254,14 @@ pub trait NodeRunner {
     }
 }
 
-/// Executes stages through a PJRT engine: `apply` builds a [`StageCtx`]
-/// over the engine + datasets, `measure` is `Measurement::take`, and
-/// `extra_measurements` is the paper's §3.1 runtime-threshold sweep.  Generic
-/// over engine ownership: the main thread borrows the experiment engine,
-/// worker threads own one engine each (PJRT handles are not `Send`).
-pub struct PjrtRunner<'d, E: Borrow<Engine>> {
+/// Executes stages through a [`runtime::Engine`](crate::runtime::Engine)
+/// of either backend: `apply` builds a [`StageCtx`] over the engine +
+/// datasets, `measure` is `Measurement::take`, and `extra_measurements`
+/// is the paper's §3.1 runtime-threshold sweep.  Generic over engine
+/// ownership: the main thread borrows the experiment engine, worker
+/// threads own one engine each (engines are per-thread on every backend
+/// — PJRT handles are not `Send`).
+pub struct EngineRunner<'d, E: Borrow<Engine>> {
     engine: E,
     train: &'d Dataset,
     test: &'d Dataset,
@@ -267,7 +270,7 @@ pub struct PjrtRunner<'d, E: Borrow<Engine>> {
     verbose: bool,
 }
 
-impl<'d, E: Borrow<Engine>> PjrtRunner<'d, E> {
+impl<'d, E: Borrow<Engine>> EngineRunner<'d, E> {
     pub fn new(
         engine: E,
         train: &'d Dataset,
@@ -276,7 +279,7 @@ impl<'d, E: Borrow<Engine>> PjrtRunner<'d, E> {
         seed: u64,
         verbose: bool,
     ) -> Self {
-        PjrtRunner { engine, train, test, base_steps, seed, verbose }
+        EngineRunner { engine, train, test, base_steps, seed, verbose }
     }
 
     fn ctx(&self) -> StageCtx<'_> {
@@ -291,7 +294,7 @@ impl<'d, E: Borrow<Engine>> PjrtRunner<'d, E> {
     }
 }
 
-impl<'d, E: Borrow<Engine>> NodeRunner for PjrtRunner<'d, E> {
+impl<'d, E: Borrow<Engine>> NodeRunner for EngineRunner<'d, E> {
     fn apply(&self, stage: &dyn CompressionStage, state: &mut ModelState) -> Result<()> {
         stage.apply(state, &self.ctx())
     }

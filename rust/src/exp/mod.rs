@@ -11,14 +11,14 @@
 
 use anyhow::{anyhow, Result};
 
-use crate::chain::plan::{ExecOpts, PjrtRunner, PlanKey, PlanRun, Planner};
+use crate::chain::plan::{EngineRunner, ExecOpts, PlanKey, PlanRun, Planner};
 use crate::chain::{Chain, StageCtx, Technique};
 use crate::data::{Dataset, DatasetKind};
 use crate::metrics::Measurement;
 use crate::models::{Manifest, ModelState};
 use crate::order::{self, Preference, PreferenceGraph, SortOutcome};
 use crate::report::Reporter;
-use crate::runtime::Engine;
+use crate::runtime::{BackendChoice, Engine};
 use crate::sweep::{self, Scale, SweepPoint};
 use crate::train::{self, TrainOpts};
 use crate::util::stats;
@@ -35,19 +35,52 @@ pub struct ExpCtx {
     /// Snapshot/replay plan nodes under `results/cache/` (`--no-cache`
     /// turns this off).
     pub cache: bool,
+    /// Execution backend (`--backend pjrt|ref`); worker engines (plan
+    /// `--jobs`, serve pools) are built on the same backend.
+    pub backend: BackendChoice,
 }
 
 impl ExpCtx {
     pub fn new(artifacts: &str, out: &str, scale: Scale, seed: u64, verbose: bool) -> Result<ExpCtx> {
+        Self::with_backend(BackendChoice::Pjrt, artifacts, out, scale, seed, verbose)
+    }
+
+    /// Like [`ExpCtx::new`] with an explicit backend.  On the reference
+    /// backend a missing `artifacts/manifest.json` falls back to the
+    /// built-in mini_vgg manifest (`models::builtin_ref_manifest`) so the
+    /// whole CLI works hermetically.
+    pub fn with_backend(
+        backend: BackendChoice,
+        artifacts: &str,
+        out: &str,
+        scale: Scale,
+        seed: u64,
+        verbose: bool,
+    ) -> Result<ExpCtx> {
+        // The built-in manifest substitutes only for a genuinely *absent*
+        // manifest (and only on the ref backend), and says so: a present
+        // but corrupt manifest.json must fail loudly, never silently run
+        // the wrong model.
+        let manifest_path = std::path::Path::new(artifacts).join("manifest.json");
+        let manifest = if backend == BackendChoice::Ref && !manifest_path.exists() {
+            eprintln!(
+                "[exp] no {} — using the built-in ref manifest (mini_vgg)",
+                manifest_path.display()
+            );
+            crate::models::builtin_ref_manifest()
+        } else {
+            Manifest::load(artifacts)?
+        };
         Ok(ExpCtx {
-            engine: Engine::new(artifacts)?,
-            manifest: Manifest::load(artifacts)?,
+            engine: Engine::with_backend(backend, artifacts)?,
+            manifest,
             scale,
             seed,
             reporter: Reporter::new(out)?,
             verbose,
             jobs: 1,
             cache: true,
+            backend,
         })
     }
 
@@ -152,7 +185,7 @@ impl ExpCtx {
         test_ds: &Dataset,
         extras: bool,
     ) -> Result<PlanRun> {
-        let runner = PjrtRunner::new(
+        let runner = EngineRunner::new(
             &self.engine,
             train_ds,
             test_ds,
@@ -167,15 +200,17 @@ impl ExpCtx {
             verbose: self.verbose,
         };
         let artifacts = self.engine.artifacts_dir().to_path_buf();
+        let backend = self.backend;
         let (base_steps, seed, verbose) = (self.scale.base_steps(), self.seed, self.verbose);
-        // One engine per plan worker thread (PJRT handles are not
-        // `Send`), same pattern as serve::worker.
-        let run = plan.execute(base, &runner, &opts, || match Engine::new(&artifacts) {
-            Ok(engine) => {
-                Ok(PjrtRunner::new(engine, train_ds, test_ds, base_steps, seed, verbose))
-            }
-            Err(e) => Err(e),
-        })?;
+        // One engine per plan worker thread (engines are per-thread on
+        // every backend), same pattern as serve::worker.
+        let run =
+            plan.execute(base, &runner, &opts, || match Engine::with_backend(backend, &artifacts) {
+                Ok(engine) => {
+                    Ok(EngineRunner::new(engine, train_ds, test_ds, base_steps, seed, verbose))
+                }
+                Err(e) => Err(e),
+            })?;
         let st = &run.stats;
         self.reporter.append_row(
             "plan_stats.csv",

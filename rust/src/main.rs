@@ -11,7 +11,9 @@
 //!   toposort                     — measure pairwise orders, derive the law
 //!
 //! Common flags: --artifacts DIR (default artifacts), --out DIR (default
-//! results), --scale smoke|default|paper, --seed N, --verbose.
+//! results), --scale smoke|default|paper, --seed N, --verbose,
+//! --backend pjrt|ref (ref = hermetic pure-rust interpreter, no
+//! artifacts needed — falls back to the built-in mini_vgg manifest).
 //! Plan-executor flags (chain/exp/toposort): --jobs N runs independent
 //! chain branches on N worker engines; --no-cache disables the
 //! content-addressed stage cache under results/cache/.
@@ -26,6 +28,7 @@ use coc::data::DatasetKind;
 use coc::exp::{self, ExpCtx};
 use coc::metrics::Measurement;
 use coc::order;
+use coc::runtime::BackendChoice;
 use coc::serve::batcher::BatchPolicy;
 use coc::serve::loadgen::{self, LoadMode, LoadOpts};
 use coc::serve::slo::Slo;
@@ -46,7 +49,10 @@ fn main() {
 fn ctx_from(args: &Args) -> Result<ExpCtx> {
     let scale = Scale::parse(args.get_or("scale", "default"))
         .ok_or_else(|| anyhow!("--scale must be smoke|default|paper"))?;
-    let mut ctx = ExpCtx::new(
+    let backend = BackendChoice::parse(args.get_or("backend", "pjrt"))
+        .ok_or_else(|| anyhow!("--backend must be pjrt|ref"))?;
+    let mut ctx = ExpCtx::with_backend(
+        backend,
         args.get_or("artifacts", coc::DEFAULT_ARTIFACTS),
         args.get_or("out", coc::DEFAULT_RESULTS),
         scale,
@@ -98,6 +104,9 @@ fn print_usage() {
     println!("  coc serve --arch mini_resnet --requests 200 --threshold 0.8");
     println!("  coc serve-bench --workers 4 --mode closed --concurrency 16 --requests 2000");
     println!("  coc serve-bench --workers 4 --mode open --rate 500 --slo-ms 50 --baseline");
+    println!("  coc chain --seq PQE --arch mini_vgg --backend ref   # hermetic, no artifacts");
+    println!("    (--backend ref interprets feed-forward manifests; builtin arch: mini_vgg.");
+    println!("     mini_resnet/mini_mobilenet drivers need the pjrt backend + artifacts.)");
 }
 
 fn cmd_info(args: &Args) -> Result<()> {
@@ -275,6 +284,7 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     };
 
     let mut pool_opts = PoolOpts::new(ctx.engine.artifacts_dir(), workers, (threshold, threshold));
+    pool_opts.backend = ctx.backend;
     pool_opts.queue_capacity = queue_capacity;
     pool_opts.batch =
         BatchPolicy { max_batch, max_wait: Duration::from_micros(batch_wait_us) };
@@ -331,6 +341,7 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     let bytes_down: u64 = outcome.stats.iter().map(|w| w.bytes_downloaded).sum();
     let mut fields = vec![
         ("model", s(arch)),
+        ("backend", s(ctx.backend.name())),
         ("dataset", s(kind.name())),
         ("threshold", num(threshold as f64)),
         ("queue_capacity", num(queue_capacity as f64)),

@@ -255,6 +255,117 @@ impl ArchManifest {
 }
 
 // ---------------------------------------------------------------------------
+// Built-in reference manifest.
+// ---------------------------------------------------------------------------
+
+/// Host-side replica of the MiniVGG manifest (`python/compile/archs.py::
+/// MiniVGG` + the aot.py manifest fields), so the reference backend can
+/// drive the whole CLI with no `make artifacts` step.  The graph map
+/// declares every tag the AOT path would lower (the ref backend resolves
+/// tags against this map; the `ref://` values are never opened).
+///
+/// One geometry difference from the AOT lowering is deliberate: the ref
+/// backend pools lazily *before* the conv that needs a smaller input, so
+/// its exit-cut features are the pre-pool segment outputs
+/// (`stage_h1_shape` [1, 16, 16, 16] instead of the JAX cut's
+/// [1, 8, 8, 16]).  Stage graphs and eval share the cut by construction,
+/// so the serving contract is unaffected.
+pub fn builtin_ref_manifest() -> Manifest {
+    let conv = |name: &str,
+                cin: usize,
+                cout: usize,
+                hout: usize,
+                in_mask: i64,
+                out_mask: i64,
+                segment: &str| LayerDesc {
+        name: name.into(),
+        kind: LayerKind::Conv,
+        k: 3,
+        cin,
+        cout,
+        stride: 1,
+        hout,
+        wout: hout,
+        in_mask,
+        out_mask,
+        segment: segment.into(),
+    };
+    let dense = |name: &str, cin: usize, in_mask: i64, segment: &str| LayerDesc {
+        name: name.into(),
+        kind: LayerKind::Dense,
+        k: 1,
+        cin,
+        cout: 20,
+        stride: 1,
+        hout: 1,
+        wout: 1,
+        in_mask,
+        out_mask: -1,
+        segment: segment.into(),
+    };
+    let layers = vec![
+        conv("c1", 3, 16, 16, -1, 0, "seg1"),
+        conv("c2", 16, 16, 16, 0, 1, "seg1"),
+        conv("c3", 16, 32, 8, 1, 2, "seg2"),
+        conv("c4", 32, 32, 8, 2, 3, "seg2"),
+        conv("c5", 32, 64, 4, 3, 4, "seg3"),
+        conv("c6", 64, 64, 4, 4, 5, "seg3"),
+        dense("fc", 64, 5, "seg3"),
+        dense("exit1_fc", 16, 1, "exit1"),
+        dense("exit2_fc", 32, 3, "exit2"),
+    ];
+    let mask_slots = ["c1", "c2", "c3", "c4", "c5", "c6"]
+        .iter()
+        .zip([16usize, 16, 32, 32, 64, 64])
+        .map(|(name, channels)| MaskSlot { name: (*name).into(), channels })
+        .collect();
+    let param_shapes = layers
+        .iter()
+        .flat_map(|l| {
+            let w = match l.kind {
+                LayerKind::Dense => vec![l.cin, l.cout],
+                LayerKind::DwConv => vec![l.k, l.k, 1, l.cout],
+                LayerKind::Conv => vec![l.k, l.k, l.cin, l.cout],
+            };
+            [w, vec![l.cout]]
+        })
+        .collect();
+    let mut graphs = BTreeMap::new();
+    for tag in ["init", "train", "eval"] {
+        graphs.insert(tag.to_string(), format!("ref://mini_vgg/{tag}"));
+    }
+    for stage in 1..=3u8 {
+        for batch in [1usize, 8] {
+            let tag = ArchManifest::stage_graph_tag(stage, batch);
+            graphs.insert(tag.clone(), format!("ref://mini_vgg/{tag}"));
+        }
+    }
+    let arch = ArchManifest {
+        name: "mini_vgg".into(),
+        num_classes: 20,
+        layers,
+        mask_slots,
+        param_shapes,
+        graphs,
+        train_batch: 32,
+        eval_batch: 64,
+        stage_batch: 1,
+        stage_batches: vec![1, 8],
+        stage_h1_shape: vec![1, 16, 16, 16],
+        stage_h2_shape: vec![1, 8, 8, 32],
+    };
+    let mut archs = BTreeMap::new();
+    archs.insert("mini_vgg".to_string(), Arc::new(arch));
+    Manifest {
+        num_classes: 20,
+        input_hw: 16,
+        input_c: 3,
+        archs,
+        kernels: BTreeMap::new(),
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Model state: everything that evolves along the compression chain.
 // ---------------------------------------------------------------------------
 
@@ -942,6 +1053,29 @@ mod tests {
         // A declared batch without a lowered graph is ignored.
         arch.graphs.remove("stage1_b8");
         assert_eq!(arch.best_stage_batch(16), 4);
+    }
+
+    #[test]
+    fn ref_builtin_manifest_is_consistent() {
+        let m = builtin_ref_manifest();
+        let arch = m.arch("mini_vgg").unwrap();
+        assert_eq!(arch.param_shapes.len(), 2 * arch.layers.len());
+        for l in &arch.layers {
+            if l.out_mask >= 0 {
+                assert_eq!(arch.mask_slots[l.out_mask as usize].channels, l.cout);
+            }
+        }
+        for tag in [
+            "init", "train", "eval", "stage1", "stage2", "stage3", "stage1_b8", "stage2_b8",
+            "stage3_b8",
+        ] {
+            assert!(arch.graphs.contains_key(tag), "missing graph tag {tag}");
+        }
+        assert_eq!(arch.best_stage_batch(8), 8);
+        assert_eq!(arch.best_stage_batch(7), 1);
+        let st = ModelState::init_host(arch.clone(), 1);
+        assert_eq!(st.params.len(), arch.num_params());
+        assert_eq!(st.masks.len(), 6);
     }
 
     #[test]

@@ -1,57 +1,67 @@
-//! PJRT runtime: load AOT-compiled HLO text, compile once, execute from the
-//! coordinator hot loop.
+//! Execution runtime: pluggable backends behind one `Engine` facade.
 //!
-//! Python/JAX only runs in the compile path (`make artifacts`); at
-//! experiment time this module is the only bridge to XLA.  Interchange is
-//! HLO *text* — see DESIGN.md and python/compile/aot.py for why.
+//! The coordinator's hot loops (train steps, eval batches, serve stages)
+//! talk to an [`Engine`]; *how* a graph is compiled and executed is a
+//! [`Backend`] implementation choice (see DESIGN.md §Backends):
+//!
+//! * [`pjrt::PjrtBackend`] — the production path: load AOT-compiled HLO
+//!   text (emitted once by python/compile/aot.py), compile via the PJRT
+//!   CPU client, execute through XLA.  Supports device residency.
+//! * [`refback::RefBackend`] — a hermetic, deterministic pure-Rust
+//!   interpreter of the manifest's graph contract (`train`, `eval`,
+//!   `init`, staged serving graphs at their declared batch sizes),
+//!   implemented directly against `tensor`/`models`.  No artifacts, no
+//!   device, bit-identical results on every run — this is what lets the
+//!   end-to-end test suites run for real in CI.
+//!
+//! Selection is a constructor choice ([`Engine::new`] = PJRT,
+//! [`Engine::new_ref`] = reference, [`Engine::with_backend`] = explicit)
+//! surfaced on the CLI as `--backend pjrt|ref`.
 //!
 //! # Device residency (see DESIGN.md §Device residency)
 //!
 //! Two transports exist for every graph:
 //!
-//! * **Literal mode** ([`Executable::run`]) — marshal host [`Tensor`]s into
-//!   `xla::Literal`s per call and download the whole output tuple.  Simple,
-//!   always available, and the right shape for one-shot calls.
+//! * **Literal mode** ([`Executable::run`]) — marshal host [`Tensor`]s per
+//!   call and download the whole output tuple.  Always available on every
+//!   backend.
 //! * **Buffer mode** ([`Executable::run_buffers`]) — operands are
-//!   [`DeviceBuffer`]s already resident on the PJRT device; outputs come
-//!   back as device buffers that the next call can consume *without* any
-//!   host round-trip.  The training loop keeps its params/momenta resident
-//!   across all steps ([`DeviceState`]) and only materializes host tensors
-//!   at stage boundaries ([`DeviceState::to_host`]).
-//!
-//! Buffer-mode results rely on the runtime untupling the output (one
-//! `PjRtBuffer` per tuple leaf).  When that (or buffer upload itself) is
-//! unavailable, buffer-mode callers see a [`ResidencyUnsupported`] error
-//! and fall back to literal mode — same graphs, same operand values,
-//! bit-identical outputs, different transport.
+//!   [`DeviceBuffer`]s already resident on the device; outputs come back
+//!   as device buffers that the next call can consume *without* any host
+//!   round-trip.  PJRT-only: the reference backend has no device, so its
+//!   [`Backend::upload`] reports [`ResidencyUnsupported`] and every caller
+//!   degrades to the (exactly equivalent) literal transport through the
+//!   same fallback machinery the PJRT path uses when buffer execution is
+//!   unavailable.
 //!
 //! # Threading model (see DESIGN.md §Serving)
 //!
-//! The PJRT client and its loaded executables are raw FFI handles and are
-//! *not* `Send`: an [`Engine`] is therefore a **per-thread** object, and
-//! [`DeviceBuffer`]s belong to the engine whose client allocated them (and
-//! must not outlive it, like executables).  All host-side state around it
-//! — [`RuntimeStats`] snapshots, the executable cache, tensors,
-//! `ModelState`, the manifest — is `Arc`-based and thread-safe, so the
-//! multi-worker serving pool (`serve::worker`) gives each worker thread
-//! its own `Engine` over the shared artifacts directory and moves only
-//! `Send` data (jobs, tensors, model state) across threads.  Within one
-//! engine, stats counters are atomics and the cache is behind a `Mutex`,
-//! so nothing in this module assumes single-threaded use.
+//! PJRT client/executable handles are raw FFI handles and are *not*
+//! `Send`: an [`Engine`] is therefore a **per-thread** object regardless
+//! of backend, and [`DeviceBuffer`]s belong to the engine whose backend
+//! allocated them.  All host-side state around it — [`RuntimeStats`]
+//! snapshots, the executable cache, tensors, `ModelState`, the manifest —
+//! is `Arc`-based and thread-safe, so multi-worker pools give each worker
+//! thread its own `Engine` and move only `Send` data across threads.
+
+pub mod pjrt;
+pub mod refback;
+
+pub use pjrt::{literal_to_tensor, tensor_to_literal};
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
 
-use anyhow::{Context, Result};
+use anyhow::{anyhow, Context, Result};
 
-use crate::models::ModelState;
+use crate::models::{ArchManifest, ModelState};
 use crate::tensor::Tensor;
 
-/// Buffer-mode execution is unavailable (upload failed, or the runtime
-/// returned a packed tuple instead of untupled leaves).  Callers with a
+/// Buffer-mode execution is unavailable (upload failed, the runtime
+/// returned a packed tuple instead of untupled leaves, or the backend has
+/// no device at all — the reference backend).  Callers with a
 /// literal-mode fallback downcast to this to decide between "degrade
 /// transport" and "real failure" — a diverged loss or a bad artifact must
 /// never be retried on the other transport.
@@ -63,7 +73,9 @@ pub struct ResidencyUnsupported(pub String);
 /// §Perf to split dispatch overhead from XLA execute time, and by the
 /// residency benches to show transfer *volume*, not just time:
 /// `bytes_uploaded`/`bytes_downloaded` count host->device and
-/// device->host payload bytes across both transports.
+/// device->host payload bytes across both transports.  The reference
+/// backend counts executions and execute time but no transfer bytes —
+/// nothing crosses a host/device boundary there.
 #[derive(Debug, Default, Clone)]
 pub struct RuntimeStats {
     pub executions: u64,
@@ -77,17 +89,17 @@ pub struct RuntimeStats {
 /// Shared mutable counters: atomics so executables can record from any
 /// thread that owns their engine without locks on the hot path.
 #[derive(Debug, Default)]
-struct StatsCell {
-    executions: AtomicU64,
-    execute_ns: AtomicU64,
-    upload_ns: AtomicU64,
-    download_ns: AtomicU64,
-    bytes_uploaded: AtomicU64,
-    bytes_downloaded: AtomicU64,
+pub(crate) struct StatsCell {
+    pub(crate) executions: AtomicU64,
+    pub(crate) execute_ns: AtomicU64,
+    pub(crate) upload_ns: AtomicU64,
+    pub(crate) download_ns: AtomicU64,
+    pub(crate) bytes_uploaded: AtomicU64,
+    pub(crate) bytes_downloaded: AtomicU64,
 }
 
 impl StatsCell {
-    fn snapshot(&self) -> RuntimeStats {
+    pub(crate) fn snapshot(&self) -> RuntimeStats {
         RuntimeStats {
             executions: self.executions.load(Ordering::Relaxed),
             execute_ns: self.execute_ns.load(Ordering::Relaxed),
@@ -108,113 +120,136 @@ impl StatsCell {
     }
 }
 
-/// A compiled executable plus IO bookkeeping.
+// ----- the backend trait -----------------------------------------------------
+
+/// One compiled (or interpreted) graph.  Implementations record their own
+/// execution/transfer counters into the engine's shared stats cell.
+pub trait GraphExec {
+    /// Execute with host tensors; returns the flattened output tuple.
+    fn run(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>>;
+
+    /// Execute with device-resident operands; outputs stay resident.
+    /// Backends without residency return [`ResidencyUnsupported`].
+    fn run_buffers(&self, inputs: &[&DeviceBuffer]) -> Result<Vec<DeviceBuffer>>;
+}
+
+/// One backend-resident buffer payload.
+pub trait DeviceBuf {
+    /// Download to a host tensor (the only device->host path in buffer
+    /// mode).  Shape is recovered backend-side, so callers never thread
+    /// shape metadata through the hot loop.
+    fn to_tensor(&self) -> Result<Tensor>;
+
+    /// Downcast hook so a backend can recover its own concrete buffers
+    /// from the type-erased operand list.
+    fn as_any(&self) -> &dyn std::any::Any;
+}
+
+/// How graphs are resolved, compiled and executed.  Implementations are
+/// per-engine (and therefore per-thread); they share the engine's stats
+/// cell and record into it directly.
+pub trait Backend {
+    fn platform(&self) -> String;
+
+    /// Resolve and prepare graph `tag` ("train", "eval", "init",
+    /// "stage1", "stage2_b8", ...) of `arch`.  The PJRT backend maps the
+    /// tag to an artifact file via the manifest and compiles it; the
+    /// reference backend checks the manifest declares the tag and builds
+    /// an interpreter over the arch descriptor.
+    fn load_graph(&self, arch: &Arc<ArchManifest>, tag: &str) -> Result<Box<dyn GraphExec>>;
+
+    /// Load a graph from an artifact file path directly (the kernel
+    /// micro-bench graphs, which belong to no arch).  Errors on backends
+    /// that have no artifact files.
+    fn load_file(&self, path: &Path) -> Result<Box<dyn GraphExec>>;
+
+    /// Upload one host tensor to a backend-resident buffer.  Errors are
+    /// wrapped in [`ResidencyUnsupported`] so buffer-mode callers can
+    /// distinguish "this transport is unavailable" from a real failure
+    /// and degrade to literal mode.
+    fn upload(&self, t: &Tensor) -> Result<DeviceBuffer>;
+}
+
+/// Backend selection, surfaced on the CLI as `--backend pjrt|ref`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendChoice {
+    /// AOT HLO artifacts through the PJRT CPU client (production).
+    Pjrt,
+    /// Hermetic pure-Rust reference interpreter (CI / no artifacts).
+    Ref,
+}
+
+impl BackendChoice {
+    pub fn parse(s: &str) -> Option<BackendChoice> {
+        match s {
+            "pjrt" | "xla" => Some(BackendChoice::Pjrt),
+            "ref" | "reference" | "host" => Some(BackendChoice::Ref),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendChoice::Pjrt => "pjrt",
+            BackendChoice::Ref => "ref",
+        }
+    }
+}
+
+// ----- executables and buffers ----------------------------------------------
+
+/// A loaded graph plus IO bookkeeping — the object the hot loops hold.
+/// Thin facade over the backend's [`GraphExec`].
 pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
     pub name: String,
-    stats: Arc<StatsCell>,
+    imp: Box<dyn GraphExec>,
 }
 
 impl Executable {
     /// Execute with host tensors; returns the flattened output tuple.
-    ///
-    /// All our graphs are lowered with `return_tuple=True`, so PJRT hands
-    /// back a single tuple buffer which we decompose into leaves.
     pub fn run(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
-        let t0 = Instant::now();
-        let literals: Vec<xla::Literal> =
-            inputs.iter().map(|t| tensor_to_literal(t)).collect::<Result<_>>()?;
-        let in_bytes: usize = inputs.iter().map(|t| 4 * t.len()).sum();
-        let t1 = Instant::now();
-        self.stats
-            .upload_ns
-            .fetch_add((t1 - t0).as_nanos() as u64, Ordering::Relaxed);
-        self.stats.bytes_uploaded.fetch_add(in_bytes as u64, Ordering::Relaxed);
-
-        let out = self
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .with_context(|| format!("executing `{}`", self.name))?;
-        let t2 = Instant::now();
-        self.stats.executions.fetch_add(1, Ordering::Relaxed);
-        self.stats
-            .execute_ns
-            .fetch_add((t2 - t1).as_nanos() as u64, Ordering::Relaxed);
-
-        let lit = out[0][0]
-            .to_literal_sync()
-            .with_context(|| format!("fetching result of `{}`", self.name))?;
-        let leaves = lit.to_tuple().context("decomposing result tuple")?;
-        let tensors = leaves
-            .into_iter()
-            .map(|l| literal_to_tensor(&l))
-            .collect::<Result<Vec<_>>>()?;
-        let out_bytes: usize = tensors.iter().map(|t| 4 * t.len()).sum();
-        self.stats
-            .download_ns
-            .fetch_add(t2.elapsed().as_nanos() as u64, Ordering::Relaxed);
-        self.stats.bytes_downloaded.fetch_add(out_bytes as u64, Ordering::Relaxed);
-        Ok(tensors)
+        self.imp.run(inputs)
     }
 
     /// Execute with device-resident operands; outputs stay resident.
     ///
-    /// Nothing crosses the host boundary here: no literal marshalling on
-    /// the way in, no tuple download on the way out.  Results rely on the
-    /// runtime untupling the output into one buffer per leaf; a packed
-    /// single-buffer tuple for a multi-output graph surfaces at the call
-    /// site as an output-count mismatch, which residency callers wrap in
-    /// [`ResidencyUnsupported`] and answer by falling back to
+    /// Nothing crosses the host boundary here.  Backends without
+    /// residency (or a PJRT runtime that packs the output tuple) surface
+    /// [`ResidencyUnsupported`], which callers answer by falling back to
     /// [`Executable::run`].
     ///
     /// No input donation/aliasing: inputs are borrowed, outputs are fresh
     /// buffers, and a consumed step-N state is freed when the caller drops
     /// its `DeviceBuffer`s after swapping in step N+1's outputs.
     pub fn run_buffers(&self, inputs: &[&DeviceBuffer]) -> Result<Vec<DeviceBuffer>> {
-        let bufs: Vec<&xla::PjRtBuffer> = inputs.iter().map(|b| &b.buf).collect();
-        let t0 = Instant::now();
-        let mut out = self
-            .exe
-            .execute_b(&bufs)
-            .with_context(|| format!("buffer-executing `{}`", self.name))?;
-        self.stats.executions.fetch_add(1, Ordering::Relaxed);
-        self.stats
-            .execute_ns
-            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
-        anyhow::ensure!(!out.is_empty(), "`{}` returned no device results", self.name);
-        Ok(out
-            .swap_remove(0)
-            .into_iter()
-            .map(|buf| DeviceBuffer { buf, stats: self.stats.clone() })
-            .collect())
+        self.imp.run_buffers(inputs)
+    }
+}
+
+/// One backend-resident array.  Belongs to the engine whose backend
+/// allocated it and must not outlive it (the same per-thread discipline
+/// as [`Executable`]s).
+pub struct DeviceBuffer {
+    imp: Box<dyn DeviceBuf>,
+}
+
+impl DeviceBuffer {
+    pub(crate) fn new(imp: Box<dyn DeviceBuf>) -> DeviceBuffer {
+        DeviceBuffer { imp }
+    }
+
+    pub(crate) fn inner(&self) -> &dyn DeviceBuf {
+        self.imp.as_ref()
+    }
+
+    /// Download to a host tensor (the only device->host path in buffer
+    /// mode).
+    pub fn to_tensor(&self) -> Result<Tensor> {
+        self.imp.to_tensor()
     }
 }
 
 // ----- device-resident state -------------------------------------------------
-
-/// One device-resident array: a `PjRtBuffer` plus the stats handle of the
-/// engine that allocated it.  Belongs to that engine's client and must not
-/// outlive it (the same per-thread discipline as [`Executable`]s).
-pub struct DeviceBuffer {
-    buf: xla::PjRtBuffer,
-    stats: Arc<StatsCell>,
-}
-
-impl DeviceBuffer {
-    /// Download to a host tensor (the only device->host path in buffer
-    /// mode).  Shape is recovered from the on-device literal, so callers
-    /// never thread shape metadata through the hot loop.
-    pub fn to_tensor(&self) -> Result<Tensor> {
-        let t0 = Instant::now();
-        let lit = self.buf.to_literal_sync().context("downloading device buffer")?;
-        let t = literal_to_tensor(&lit)?;
-        self.stats
-            .download_ns
-            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
-        self.stats.bytes_downloaded.fetch_add(4 * t.len() as u64, Ordering::Relaxed);
-        Ok(t)
-    }
-}
 
 /// Device-side mirror of the pieces of `ModelState` the AOT graphs consume:
 /// params, momenta, masks, and the qbits scalars.  The training loop swaps
@@ -262,25 +297,50 @@ impl DeviceState {
     }
 }
 
-/// The PJRT engine: one CPU client + an executable cache keyed by artifact
-/// file name (compilation is seconds; every experiment reuses the cache).
+// ----- the engine ------------------------------------------------------------
+
+/// The execution engine: one backend + an executable cache.  One engine
+/// per thread — see the module-level threading notes.
 ///
-/// One engine per thread — see the module-level threading notes.
+/// The cache is keyed by artifact file name (`load`) or `arch-name/tag`
+/// (`load_graph`); like the artifact-file convention it assumes one
+/// manifest per engine — callers that rebuild a same-named arch build a
+/// fresh engine.
 pub struct Engine {
-    client: xla::PjRtClient,
+    backend: Box<dyn Backend>,
+    choice: BackendChoice,
     artifacts_dir: PathBuf,
     cache: Mutex<HashMap<String, Arc<Executable>>>,
     stats: Arc<StatsCell>,
 }
 
 impl Engine {
+    /// Production engine: PJRT over an artifacts directory.
     pub fn new<P: AsRef<Path>>(artifacts_dir: P) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Self::with_backend(BackendChoice::Pjrt, artifacts_dir)
+    }
+
+    /// Hermetic reference engine: no artifacts, no device, deterministic.
+    pub fn new_ref() -> Result<Self> {
+        Self::with_backend(BackendChoice::Ref, "")
+    }
+
+    /// Explicit backend selection (the `--backend pjrt|ref` CLI path).
+    pub fn with_backend<P: AsRef<Path>>(choice: BackendChoice, artifacts_dir: P) -> Result<Self> {
+        let stats = Arc::new(StatsCell::default());
+        let artifacts_dir = artifacts_dir.as_ref().to_path_buf();
+        let backend: Box<dyn Backend> = match choice {
+            BackendChoice::Pjrt => {
+                Box::new(pjrt::PjrtBackend::new(artifacts_dir.clone(), stats.clone())?)
+            }
+            BackendChoice::Ref => Box::new(refback::RefBackend::new(stats.clone())),
+        };
         Ok(Engine {
-            client,
-            artifacts_dir: artifacts_dir.as_ref().to_path_buf(),
+            backend,
+            choice,
+            artifacts_dir,
             cache: Mutex::new(HashMap::new()),
-            stats: Arc::new(StatsCell::default()),
+            stats,
         })
     }
 
@@ -288,8 +348,12 @@ impl Engine {
         &self.artifacts_dir
     }
 
+    pub fn backend(&self) -> BackendChoice {
+        self.choice
+    }
+
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        self.backend.platform()
     }
 
     pub fn stats(&self) -> RuntimeStats {
@@ -300,50 +364,40 @@ impl Engine {
         self.stats.reset();
     }
 
-    /// Upload one host tensor to a device-resident buffer.  Errors are
-    /// wrapped in [`ResidencyUnsupported`] so buffer-mode callers can
-    /// distinguish "this transport is unavailable" from a real failure
-    /// and degrade to literal mode.
+    /// Upload one host tensor to a backend-resident buffer.  See
+    /// [`Backend::upload`] for the error contract.
     pub fn upload(&self, t: &Tensor) -> Result<DeviceBuffer> {
-        let t0 = Instant::now();
-        let lit = tensor_to_literal(t)?;
-        let buf = self
-            .client
-            .buffer_from_host_literal(None, &lit)
-            .map_err(|e| ResidencyUnsupported(format!("buffer upload: {e}")))?;
-        self.stats
-            .upload_ns
-            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
-        self.stats.bytes_uploaded.fetch_add(4 * t.len() as u64, Ordering::Relaxed);
-        Ok(DeviceBuffer { buf, stats: self.stats.clone() })
+        self.backend.upload(t)
     }
 
-    /// Load + compile an HLO-text artifact (cached).
+    /// Load graph `tag` of `arch` (cached per engine).  This is the
+    /// backend-generic entry every arch-graph consumer uses; which bytes
+    /// (if any) back the graph is the backend's business.
+    pub fn load_graph(&self, arch: &Arc<ArchManifest>, tag: &str) -> Result<Arc<Executable>> {
+        let key = format!("graph::{}::{tag}", arch.name);
+        if let Some(e) = self.cache.lock().unwrap().get(&key) {
+            return Ok(e.clone());
+        }
+        let imp = self
+            .backend
+            .load_graph(arch, tag)
+            .with_context(|| format!("loading graph `{tag}` of arch `{}`", arch.name))?;
+        let exec = Arc::new(Executable { name: format!("{}/{tag}", arch.name), imp });
+        self.cache.lock().unwrap().insert(key, exec.clone());
+        Ok(exec)
+    }
+
+    /// Load a graph from an artifact file (cached).  Kernel bench graphs
+    /// only; arch graphs go through [`Engine::load_graph`].
     pub fn load(&self, file: &str) -> Result<Arc<Executable>> {
-        if let Some(e) = self.cache.lock().unwrap().get(file) {
+        let key = format!("file::{file}");
+        if let Some(e) = self.cache.lock().unwrap().get(&key) {
             return Ok(e.clone());
         }
         let path = self.artifacts_dir.join(file);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-utf8 artifact path")?,
-        )
-        .with_context(|| format!("parsing HLO text `{}` (run `make artifacts`?)", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let t0 = Instant::now();
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling `{file}`"))?;
-        let dt = t0.elapsed();
-        if dt.as_millis() > 500 {
-            eprintln!("[runtime] compiled {file} in {:.1}s", dt.as_secs_f64());
-        }
-        let exec = Arc::new(Executable {
-            exe,
-            name: file.to_string(),
-            stats: self.stats.clone(),
-        });
-        self.cache.lock().unwrap().insert(file.to_string(), exec.clone());
+        let imp = self.backend.load_file(&path)?;
+        let exec = Arc::new(Executable { name: file.to_string(), imp });
+        self.cache.lock().unwrap().insert(key, exec.clone());
         Ok(exec)
     }
 }
@@ -372,46 +426,15 @@ pub fn note_residency_fallback(what: &str, e: &anyhow::Error) {
     });
 }
 
-// ----- literal <-> tensor ----------------------------------------------------
-
-pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
-    let lit = xla::Literal::vec1(&t.data);
-    if t.shape.is_empty() {
-        // Scalar: reshape to rank 0.
-        Ok(lit.reshape(&[])?)
-    } else {
-        let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
-        Ok(lit.reshape(&dims)?)
-    }
-}
-
-pub fn literal_to_tensor(l: &xla::Literal) -> Result<Tensor> {
-    let shape = l.array_shape().context("literal has no array shape")?;
-    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-    let data = l.to_vec::<f32>().context("literal is not f32")?;
-    Ok(Tensor::new(dims, data))
+/// Shared helper for backends: mixing buffers from another backend (or
+/// engine) into an operand list is a caller bug, reported uniformly.
+pub(crate) fn foreign_buffer_error(backend: &str) -> anyhow::Error {
+    anyhow!("operand buffer was not allocated by this {backend} backend")
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    #[test]
-    fn tensor_literal_roundtrip() {
-        let t = Tensor::new(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
-        let l = tensor_to_literal(&t).unwrap();
-        let t2 = literal_to_tensor(&l).unwrap();
-        assert_eq!(t, t2);
-    }
-
-    #[test]
-    fn scalar_roundtrip() {
-        let t = Tensor::scalar(3.5);
-        let l = tensor_to_literal(&t).unwrap();
-        let t2 = literal_to_tensor(&l).unwrap();
-        assert_eq!(t2.shape, Vec::<usize>::new());
-        assert_eq!(t2.data, vec![3.5]);
-    }
 
     #[test]
     fn stats_snapshot_starts_zero() {
@@ -442,5 +465,33 @@ mod tests {
         let e: anyhow::Error = ResidencyUnsupported("no buffer api".into()).into();
         assert!(e.downcast_ref::<ResidencyUnsupported>().is_some());
         assert!(e.to_string().contains("device residency unsupported"));
+    }
+
+    #[test]
+    fn backend_choice_parses() {
+        assert_eq!(BackendChoice::parse("pjrt"), Some(BackendChoice::Pjrt));
+        assert_eq!(BackendChoice::parse("ref"), Some(BackendChoice::Ref));
+        assert_eq!(BackendChoice::parse("reference"), Some(BackendChoice::Ref));
+        assert_eq!(BackendChoice::parse("gpu"), None);
+        assert_eq!(BackendChoice::Ref.name(), "ref");
+        assert_eq!(BackendChoice::Pjrt.name(), "pjrt");
+    }
+
+    #[test]
+    fn ref_engine_reports_backend_and_rejects_file_loads() {
+        let e = Engine::new_ref().unwrap();
+        assert_eq!(e.backend(), BackendChoice::Ref);
+        assert!(e.platform().contains("ref"));
+        assert!(e.load("kernel_qmatmul.hlo.txt").is_err(), "ref backend has no artifact files");
+    }
+
+    #[test]
+    fn ref_engine_upload_reports_residency_unsupported() {
+        let e = Engine::new_ref().unwrap();
+        let err = e.upload(&Tensor::scalar(1.0)).unwrap_err();
+        assert!(
+            err.downcast_ref::<ResidencyUnsupported>().is_some(),
+            "ref upload must surface the fallback marker, got {err:#}"
+        );
     }
 }

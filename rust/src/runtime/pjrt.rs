@@ -1,0 +1,233 @@
+//! PJRT backend: load AOT-compiled HLO text, compile once per engine,
+//! execute through XLA.  The production [`super::Backend`] — see
+//! python/compile/aot.py for why interchange is HLO *text*.
+//!
+//! Supports both transports: literal marshalling and device-resident
+//! buffers (see DESIGN.md §Device residency).  Buffer-mode results rely
+//! on the runtime untupling the output (one `PjRtBuffer` per tuple leaf);
+//! when that (or buffer upload itself) is unavailable, callers see a
+//! [`ResidencyUnsupported`] error and fall back to literal mode — same
+//! graphs, same operand values, bit-identical outputs, different
+//! transport.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::models::ArchManifest;
+use crate::tensor::Tensor;
+
+use super::{
+    foreign_buffer_error, Backend, DeviceBuf, DeviceBuffer, GraphExec, ResidencyUnsupported,
+    StatsCell,
+};
+
+/// The PJRT backend: one CPU client over an artifacts directory.
+pub struct PjrtBackend {
+    client: xla::PjRtClient,
+    artifacts_dir: PathBuf,
+    stats: Arc<StatsCell>,
+}
+
+impl PjrtBackend {
+    pub(crate) fn new(artifacts_dir: PathBuf, stats: Arc<StatsCell>) -> Result<PjrtBackend> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtBackend { client, artifacts_dir, stats })
+    }
+
+    fn compile(&self, path: &Path) -> Result<Box<dyn GraphExec>> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text `{}` (run `make artifacts`?)", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let t0 = Instant::now();
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling `{}`", path.display()))?;
+        let dt = t0.elapsed();
+        if dt.as_millis() > 500 {
+            eprintln!("[runtime] compiled {} in {:.1}s", path.display(), dt.as_secs_f64());
+        }
+        Ok(Box::new(PjrtGraph {
+            exe,
+            name: path.display().to_string(),
+            stats: self.stats.clone(),
+        }))
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn load_graph(&self, arch: &Arc<ArchManifest>, tag: &str) -> Result<Box<dyn GraphExec>> {
+        let file = arch.graph(tag)?;
+        self.compile(&self.artifacts_dir.join(file))
+    }
+
+    fn load_file(&self, path: &Path) -> Result<Box<dyn GraphExec>> {
+        self.compile(path)
+    }
+
+    fn upload(&self, t: &Tensor) -> Result<DeviceBuffer> {
+        let t0 = Instant::now();
+        let lit = tensor_to_literal(t)?;
+        let buf = self
+            .client
+            .buffer_from_host_literal(None, &lit)
+            .map_err(|e| ResidencyUnsupported(format!("buffer upload: {e}")))?;
+        self.stats
+            .upload_ns
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        self.stats.bytes_uploaded.fetch_add(4 * t.len() as u64, Ordering::Relaxed);
+        Ok(DeviceBuffer::new(Box::new(PjrtBuf { buf, stats: self.stats.clone() })))
+    }
+}
+
+/// A compiled executable plus its engine's stats handle.
+struct PjrtGraph {
+    exe: xla::PjRtLoadedExecutable,
+    name: String,
+    stats: Arc<StatsCell>,
+}
+
+impl GraphExec for PjrtGraph {
+    /// All our graphs are lowered with `return_tuple=True`, so PJRT hands
+    /// back a single tuple buffer which we decompose into leaves.
+    fn run(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let t0 = Instant::now();
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|t| tensor_to_literal(t)).collect::<Result<_>>()?;
+        let in_bytes: usize = inputs.iter().map(|t| 4 * t.len()).sum();
+        let t1 = Instant::now();
+        self.stats
+            .upload_ns
+            .fetch_add((t1 - t0).as_nanos() as u64, Ordering::Relaxed);
+        self.stats.bytes_uploaded.fetch_add(in_bytes as u64, Ordering::Relaxed);
+
+        let out = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing `{}`", self.name))?;
+        let t2 = Instant::now();
+        self.stats.executions.fetch_add(1, Ordering::Relaxed);
+        self.stats
+            .execute_ns
+            .fetch_add((t2 - t1).as_nanos() as u64, Ordering::Relaxed);
+
+        let lit = out[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of `{}`", self.name))?;
+        let leaves = lit.to_tuple().context("decomposing result tuple")?;
+        let tensors = leaves
+            .into_iter()
+            .map(|l| literal_to_tensor(&l))
+            .collect::<Result<Vec<_>>>()?;
+        let out_bytes: usize = tensors.iter().map(|t| 4 * t.len()).sum();
+        self.stats
+            .download_ns
+            .fetch_add(t2.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        self.stats.bytes_downloaded.fetch_add(out_bytes as u64, Ordering::Relaxed);
+        Ok(tensors)
+    }
+
+    fn run_buffers(&self, inputs: &[&DeviceBuffer]) -> Result<Vec<DeviceBuffer>> {
+        let bufs: Vec<&xla::PjRtBuffer> = inputs
+            .iter()
+            .map(|b| {
+                b.inner()
+                    .as_any()
+                    .downcast_ref::<PjrtBuf>()
+                    .map(|pb| &pb.buf)
+                    .ok_or_else(|| foreign_buffer_error("pjrt"))
+            })
+            .collect::<Result<_>>()?;
+        let t0 = Instant::now();
+        let mut out = self
+            .exe
+            .execute_b(&bufs)
+            .with_context(|| format!("buffer-executing `{}`", self.name))?;
+        self.stats.executions.fetch_add(1, Ordering::Relaxed);
+        self.stats
+            .execute_ns
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        anyhow::ensure!(!out.is_empty(), "`{}` returned no device results", self.name);
+        Ok(out
+            .swap_remove(0)
+            .into_iter()
+            .map(|buf| DeviceBuffer::new(Box::new(PjrtBuf { buf, stats: self.stats.clone() })))
+            .collect())
+    }
+}
+
+/// One device-resident array: a `PjRtBuffer` plus the stats handle of the
+/// engine that allocated it.
+struct PjrtBuf {
+    buf: xla::PjRtBuffer,
+    stats: Arc<StatsCell>,
+}
+
+impl DeviceBuf for PjrtBuf {
+    fn to_tensor(&self) -> Result<Tensor> {
+        let t0 = Instant::now();
+        let lit = self.buf.to_literal_sync().context("downloading device buffer")?;
+        let t = literal_to_tensor(&lit)?;
+        self.stats
+            .download_ns
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        self.stats.bytes_downloaded.fetch_add(4 * t.len() as u64, Ordering::Relaxed);
+        Ok(t)
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+}
+
+// ----- literal <-> tensor ----------------------------------------------------
+
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(&t.data);
+    if t.shape.is_empty() {
+        // Scalar: reshape to rank 0.
+        Ok(lit.reshape(&[])?)
+    } else {
+        let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+        Ok(lit.reshape(&dims)?)
+    }
+}
+
+pub fn literal_to_tensor(l: &xla::Literal) -> Result<Tensor> {
+    let shape = l.array_shape().context("literal has no array shape")?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = l.to_vec::<f32>().context("literal is not f32")?;
+    Ok(Tensor::new(dims, data))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_literal_roundtrip() {
+        let t = Tensor::new(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let l = tensor_to_literal(&t).unwrap();
+        let t2 = literal_to_tensor(&l).unwrap();
+        assert_eq!(t, t2);
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let t = Tensor::scalar(3.5);
+        let l = tensor_to_literal(&t).unwrap();
+        let t2 = literal_to_tensor(&l).unwrap();
+        assert_eq!(t2.shape, Vec::<usize>::new());
+        assert_eq!(t2.data, vec![3.5]);
+    }
+}

@@ -1,0 +1,1651 @@
+//! Hermetic reference backend: a deterministic pure-Rust interpreter of
+//! the manifest's graph contract, implemented directly against `tensor`
+//! and `models` — no artifacts, no PJRT, no Python.
+//!
+//! It serves the same graphs the AOT path lowers (same operand orders,
+//! same output leaf counts, same mask/qbit semantics):
+//!
+//! ```text
+//! init    : seed                                  -> params ++ momenta
+//! train   : params ++ momenta ++ batch ++ knobs   -> params' ++ momenta' ++ [loss, acc]
+//! eval    : params ++ masks ++ qbw ++ qba ++ x    -> (logits, exit1, exit2)
+//! stageN  : params ++ masks ++ qbw ++ qba ++ h    -> (exit logits, h') | logits
+//! ```
+//!
+//! # Contract (see DESIGN.md §Backends)
+//!
+//! * **Determinism** — every op is a fixed-order f32 loop (no threads, no
+//!   hash iteration, no time or address dependence), so two runs over the
+//!   same operands produce bit-identical outputs.  This is what the
+//!   hermetic CI suites pin.
+//! * **Feed-forward interpretation** — the network is rebuilt from the
+//!   manifest's `LayerDesc` list alone, as a chain: body layers
+//!   (`seg1`..`seg3`, in declaration order) must chain `cin == prev.cout`
+//!   and end in a dense classifier; 2x2 max-pools are inserted lazily
+//!   whenever a conv's declared output geometry requires a smaller input
+//!   (`ceil(h/stride) > hout`).  Residual/projection topologies are not
+//!   expressible in a `LayerDesc` list and are rejected at load time —
+//!   the PJRT backend remains the path for those.
+//! * **Stage composition** — `eval` is *implemented as* stage1 ∘ stage2 ∘
+//!   stage3, so staged execution reproduces an eval of the same batch
+//!   composition bit-identically by construction.  Across *different*
+//!   batch groupings this holds at fp32 (per-row ops only); with
+//!   activation quantization on (`qba > 0`) the per-tensor dynamic
+//!   scale spans the batch, so regrouping can shift quantized values —
+//!   exactly as on the AOT graphs (`fake_quant.py::act_quant`).
+//! * **Same compression semantics** — channel masks multiply activations
+//!   before a live-channel RMS norm (mirroring `archs.py::apply_conv`),
+//!   and the fake quantizers reproduce the L1 kernels' arithmetic
+//!   (`models::host_weight_quant`, DoReFa-style activation quant);
+//!   backward passes through the quantizers straight-through.
+//! * **No device residency** — [`Backend::upload`] reports
+//!   [`ResidencyUnsupported`], so every hot loop degrades to its literal
+//!   transport through the same fallback machinery the PJRT path uses.
+//!
+//! The train graph computes a real backward pass (conv/dwconv, live-RMS
+//! norm, relu, straight-through quantizers, max-pool, GAP, dense) for the
+//! fused loss `(1-α)·CE + α·KD + Σ wᵢ·CEᵢ(exit) + wd·‖W‖²` and the fused
+//! SGD-with-momentum update, matching `python/compile/model.py`.  The
+//! gradient-check unit test pins the derivation against finite
+//! differences.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::models::{host_weight_quant, ArchManifest, LayerKind, ModelState};
+use crate::tensor::Tensor;
+
+use super::{Backend, DeviceBuffer, GraphExec, ResidencyUnsupported, StatsCell};
+
+/// The reference backend: stateless beyond the engine's stats handle.
+pub struct RefBackend {
+    stats: Arc<StatsCell>,
+}
+
+impl RefBackend {
+    pub(crate) fn new(stats: Arc<StatsCell>) -> RefBackend {
+        RefBackend { stats }
+    }
+}
+
+impl Backend for RefBackend {
+    fn platform(&self) -> String {
+        "ref-cpu (deterministic host interpreter)".to_string()
+    }
+
+    fn load_graph(&self, arch: &Arc<ArchManifest>, tag: &str) -> Result<Box<dyn GraphExec>> {
+        let kind = GraphKind::parse(tag)
+            .ok_or_else(|| anyhow!("unknown graph tag `{tag}` (init|train|eval|stageN[_bB])"))?;
+        // The manifest remains the single source of truth for which
+        // graphs exist (mirrors artifact presence on the PJRT path, and
+        // lets the serving batch ladder degrade identically).
+        ensure!(
+            arch.graphs.contains_key(tag),
+            "arch `{}` does not declare graph `{tag}`",
+            arch.name
+        );
+        let net = RefNet::compile(arch.clone())?;
+        Ok(Box::new(RefGraph {
+            net,
+            kind,
+            name: format!("ref://{}/{tag}", arch.name),
+            stats: self.stats.clone(),
+        }))
+    }
+
+    fn load_file(&self, path: &std::path::Path) -> Result<Box<dyn GraphExec>> {
+        bail!(
+            "ref backend has no artifact files (tag-addressed graphs only): {}",
+            path.display()
+        )
+    }
+
+    fn upload(&self, _t: &Tensor) -> Result<DeviceBuffer> {
+        Err(ResidencyUnsupported("ref backend keeps all state host-side (no device)".into()).into())
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum GraphKind {
+    Init,
+    Train,
+    Eval,
+    Stage { stage: u8, batch: usize },
+}
+
+impl GraphKind {
+    fn parse(tag: &str) -> Option<GraphKind> {
+        match tag {
+            "init" => Some(GraphKind::Init),
+            "train" => Some(GraphKind::Train),
+            "eval" => Some(GraphKind::Eval),
+            _ => {
+                let rest = tag.strip_prefix("stage")?;
+                let (s, b) = match rest.split_once("_b") {
+                    Some((s, b)) => (s, b.parse::<usize>().ok()?),
+                    None => (rest, 1),
+                };
+                let stage: u8 = s.parse().ok()?;
+                ((1..=3).contains(&stage) && b >= 1).then_some(GraphKind::Stage { stage, batch: b })
+            }
+        }
+    }
+}
+
+struct RefGraph {
+    net: RefNet,
+    kind: GraphKind,
+    name: String,
+    stats: Arc<StatsCell>,
+}
+
+impl GraphExec for RefGraph {
+    fn run(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let t0 = Instant::now();
+        let out = self
+            .dispatch(inputs)
+            .with_context(|| format!("executing `{}`", self.name))?;
+        self.stats.executions.fetch_add(1, Ordering::Relaxed);
+        self.stats
+            .execute_ns
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        Ok(out)
+    }
+
+    fn run_buffers(&self, _inputs: &[&DeviceBuffer]) -> Result<Vec<DeviceBuffer>> {
+        Err(ResidencyUnsupported("ref backend has no device buffers".into()).into())
+    }
+}
+
+impl RefGraph {
+    fn dispatch(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let net = &self.net;
+        match self.kind {
+            GraphKind::Init => {
+                ensure!(inputs.len() == 1, "init takes 1 operand, got {}", inputs.len());
+                let seed = scalar(inputs[0], "seed")?;
+                ensure!(seed.is_finite() && seed >= 0.0, "bad init seed {seed}");
+                // Same He-normal init as `ModelState::init_host`, so rust-
+                // and graph-initialized states are identical by definition.
+                let st = ModelState::init_host(net.arch.clone(), seed as u64);
+                let mut out = st.params;
+                out.extend(st.momenta);
+                Ok(out)
+            }
+            GraphKind::Train => net.train_step(inputs),
+            GraphKind::Eval => {
+                let (params, masks, qbw, qba, x) = net.split_eval_operands(inputs)?;
+                ensure!(
+                    x.shape.first() == Some(&net.arch.eval_batch),
+                    "eval graph lowered at batch {}, got input batch {:?}",
+                    net.arch.eval_batch,
+                    x.shape.first()
+                );
+                let (h1, e1) = net.stage1(&params, &masks, qbw, qba, x)?;
+                let (h2, e2) = net.stage2(&params, &masks, qbw, qba, &h1)?;
+                let logits = net.stage3(&params, &masks, qbw, qba, &h2)?;
+                Ok(vec![logits, e1, e2])
+            }
+            GraphKind::Stage { stage, batch } => {
+                let (params, masks, qbw, qba, x) = net.split_eval_operands(inputs)?;
+                ensure!(
+                    x.shape.first() == Some(&batch),
+                    "stage{stage} graph lowered at batch {batch}, got input batch {:?}",
+                    x.shape.first()
+                );
+                match stage {
+                    1 => {
+                        let (h1, e1) = net.stage1(&params, &masks, qbw, qba, x)?;
+                        Ok(vec![e1, h1])
+                    }
+                    2 => {
+                        let (h2, e2) = net.stage2(&params, &masks, qbw, qba, x)?;
+                        Ok(vec![e2, h2])
+                    }
+                    _ => Ok(vec![net.stage3(&params, &masks, qbw, qba, x)?]),
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The interpreted network
+// ---------------------------------------------------------------------------
+
+/// The feed-forward interpretation of one `ArchManifest` (validated at
+/// load time — see the module docs for the contract).
+struct RefNet {
+    arch: Arc<ArchManifest>,
+    /// Body layer indices (manifest order, seg1 ++ seg2 ++ seg3).
+    body: Vec<usize>,
+    /// Body prefix lengths: seg1 ends at `body[..n1]`, seg2 at `body[..n2]`.
+    n1: usize,
+    n2: usize,
+    /// Layer indices of the exit heads, when declared.
+    exit1: Option<usize>,
+    exit2: Option<usize>,
+}
+
+impl RefNet {
+    fn compile(arch: Arc<ArchManifest>) -> Result<RefNet> {
+        ensure!(
+            arch.param_shapes.len() == 2 * arch.layers.len(),
+            "arch `{}`: {} param shapes for {} layers (want (w, b) pairs)",
+            arch.name,
+            arch.param_shapes.len(),
+            arch.layers.len()
+        );
+        let mut body = Vec::new();
+        let (mut exit1, mut exit2) = (None, None);
+        let mut last_rank = 0u8;
+        for (li, l) in arch.layers.iter().enumerate() {
+            let want_w: Vec<usize> = match l.kind {
+                LayerKind::Dense => vec![l.cin, l.cout],
+                LayerKind::DwConv => vec![l.k, l.k, 1, l.cout],
+                LayerKind::Conv => vec![l.k, l.k, l.cin, l.cout],
+            };
+            ensure!(
+                arch.param_shapes[2 * li] == want_w,
+                "layer `{}`: declared weight shape {:?} != expected {:?}",
+                l.name,
+                arch.param_shapes[2 * li],
+                want_w
+            );
+            ensure!(
+                arch.param_shapes[2 * li + 1] == vec![l.cout],
+                "layer `{}`: declared bias shape {:?} != [{}]",
+                l.name,
+                arch.param_shapes[2 * li + 1],
+                l.cout
+            );
+            if l.out_mask >= 0 {
+                let slot = arch.mask_slots.get(l.out_mask as usize).ok_or_else(|| {
+                    anyhow!("layer `{}`: mask slot {} undeclared", l.name, l.out_mask)
+                })?;
+                ensure!(
+                    slot.channels == l.cout,
+                    "layer `{}`: mask slot {} covers {} channels, layer has {}",
+                    l.name,
+                    l.out_mask,
+                    slot.channels,
+                    l.cout
+                );
+            }
+            match l.segment.as_str() {
+                "seg1" | "seg2" | "seg3" => {
+                    let rank = match l.segment.as_str() {
+                        "seg1" => 1,
+                        "seg2" => 2,
+                        _ => 3,
+                    };
+                    ensure!(
+                        rank >= last_rank,
+                        "layer `{}`: body segments must appear in seg1..seg3 order",
+                        l.name
+                    );
+                    last_rank = rank;
+                    if let Some(&prev) = body.last() {
+                        let p = &arch.layers[prev];
+                        ensure!(
+                            p.kind != LayerKind::Dense,
+                            "layer `{}`: a dense layer must be the final body layer",
+                            l.name
+                        );
+                        ensure!(
+                            l.cin == p.cout,
+                            "layer `{}` (cin {}) does not chain from `{}` (cout {}): the ref \
+                             backend interprets manifests as a feed-forward chain; use the pjrt \
+                             backend for residual/projection topologies",
+                            l.name,
+                            l.cin,
+                            p.name,
+                            p.cout
+                        );
+                    }
+                    body.push(li);
+                }
+                "exit1" | "exit2" => {
+                    ensure!(l.kind == LayerKind::Dense, "exit head `{}` must be dense", l.name);
+                    ensure!(
+                        l.cout == arch.num_classes,
+                        "exit head `{}` emits {} classes, arch has {}",
+                        l.name,
+                        l.cout,
+                        arch.num_classes
+                    );
+                    let slot = if l.segment == "exit1" { &mut exit1 } else { &mut exit2 };
+                    ensure!(slot.is_none(), "duplicate {} head `{}`", l.segment, l.name);
+                    *slot = Some(li);
+                }
+                other => bail!("layer `{}`: unknown segment `{other}`", l.name),
+            }
+        }
+        ensure!(!body.is_empty(), "arch `{}` has no body layers", arch.name);
+        let last = *body.last().unwrap();
+        ensure!(
+            arch.layers[last].kind == LayerKind::Dense && arch.layers[last].segment == "seg3",
+            "arch `{}`: the body must end in a seg3 dense classifier head",
+            arch.name
+        );
+        ensure!(
+            arch.layers[last].cout == arch.num_classes,
+            "arch `{}`: classifier emits {} classes, arch declares {}",
+            arch.name,
+            arch.layers[last].cout,
+            arch.num_classes
+        );
+        let n1 = body.iter().filter(|&&li| arch.layers[li].segment == "seg1").count();
+        let n2 = n1 + body.iter().filter(|&&li| arch.layers[li].segment == "seg2").count();
+        if let Some(x1) = exit1 {
+            ensure!(n1 > 0, "exit1 head declared but seg1 has no layers");
+            let feed = arch.layers[body[n1 - 1]].cout;
+            ensure!(
+                arch.layers[x1].cin == feed,
+                "exit1 head fan-in {} != seg1 output channels {feed}",
+                arch.layers[x1].cin
+            );
+        }
+        if let Some(x2) = exit2 {
+            ensure!(n2 > 0, "exit2 head declared but seg1/seg2 have no layers");
+            let feed = arch.layers[body[n2 - 1]].cout;
+            ensure!(
+                arch.layers[x2].cin == feed,
+                "exit2 head fan-in {} != seg2 output channels {feed}",
+                arch.layers[x2].cin
+            );
+        }
+        Ok(RefNet { arch, body, n1, n2, exit1, exit2 })
+    }
+
+    // ----- operand plumbing -------------------------------------------------
+
+    /// Split the `params* ++ masks* ++ qbw ++ qba ++ x` operand list the
+    /// eval and stage graphs share, validating shapes.
+    fn split_eval_operands<'a>(
+        &self,
+        inputs: &'a [&'a Tensor],
+    ) -> Result<(Vec<&'a Tensor>, Vec<&'a Tensor>, f32, f32, &'a Tensor)> {
+        let np = self.arch.num_params();
+        let nm = self.arch.mask_slots.len();
+        ensure!(
+            inputs.len() == np + nm + 3,
+            "eval/stage graphs take {} operands, got {}",
+            np + nm + 3,
+            inputs.len()
+        );
+        let params = self.check_params(&inputs[..np])?;
+        let masks = self.check_masks(&inputs[np..np + nm])?;
+        let qbw = scalar(inputs[np + nm], "qbw")?;
+        let qba = scalar(inputs[np + nm + 1], "qba")?;
+        Ok((params, masks, qbw, qba, inputs[np + nm + 2]))
+    }
+
+    fn check_params<'a>(&self, params: &'a [&'a Tensor]) -> Result<Vec<&'a Tensor>> {
+        for (i, p) in params.iter().enumerate() {
+            ensure!(
+                p.shape == self.arch.param_shapes[i],
+                "param {i} has shape {:?}, manifest declares {:?}",
+                p.shape,
+                self.arch.param_shapes[i]
+            );
+        }
+        Ok(params.to_vec())
+    }
+
+    fn check_masks<'a>(&self, masks: &'a [&'a Tensor]) -> Result<Vec<&'a Tensor>> {
+        for (i, m) in masks.iter().enumerate() {
+            ensure!(
+                m.shape == vec![self.arch.mask_slots[i].channels],
+                "mask {i} has shape {:?}, slot declares [{}]",
+                m.shape,
+                self.arch.mask_slots[i].channels
+            );
+        }
+        Ok(masks.to_vec())
+    }
+
+    // ----- forward ----------------------------------------------------------
+
+    /// Run body layers `range` (indices into `self.body`) from `input`.
+    /// `record` keeps the per-layer traces the train backward pass
+    /// consumes; eval/stage/serve callers pass `false` and skip trace
+    /// retention entirely.  Both modes run the same ops in the same
+    /// order, so recording never perturbs a value.
+    #[allow(clippy::too_many_arguments)]
+    fn forward_range(
+        &self,
+        params: &[&Tensor],
+        masks: &[&Tensor],
+        qbw: f32,
+        qba: f32,
+        input: &Tensor,
+        range: std::ops::Range<usize>,
+        record: bool,
+    ) -> Result<(Tensor, Vec<ConvTrace>, Option<DenseTrace>)> {
+        let mut cur = input.clone();
+        let mut convs = Vec::new();
+        let mut dense = None;
+        for bi in range {
+            let li = self.body[bi];
+            let l = &self.arch.layers[li];
+            match l.kind {
+                LayerKind::Dense => {
+                    let (out, tr) = self.dense_forward(li, &cur, params, qbw, qba, record)?;
+                    cur = out;
+                    dense = tr;
+                }
+                _ => {
+                    let (out, tr) = self.conv_forward(li, cur, params, masks, qbw, qba, record)?;
+                    cur = out;
+                    if let Some(tr) = tr {
+                        convs.push(tr);
+                    }
+                }
+            }
+        }
+        Ok((cur, convs, dense))
+    }
+
+    /// Pools (lazy, geometry-driven) + conv -> bias -> mask -> live-RMS
+    /// norm -> relu -> act_quant, mirroring `archs.py::apply_conv`.
+    #[allow(clippy::too_many_arguments)]
+    fn conv_forward(
+        &self,
+        li: usize,
+        mut x: Tensor,
+        params: &[&Tensor],
+        masks: &[&Tensor],
+        qbw: f32,
+        qba: f32,
+        record: bool,
+    ) -> Result<(Tensor, Option<ConvTrace>)> {
+        let l = &self.arch.layers[li];
+        let s = l.stride.max(1);
+        let mut pools = Vec::new();
+        loop {
+            let (_, h, w, _) = dims4(&x)?;
+            if h.div_ceil(s) <= l.hout && w.div_ceil(s) <= l.wout {
+                break;
+            }
+            let (pooled, idx) = maxpool2(&x, record)?;
+            if record {
+                pools.push(PoolTrace { idx, in_shape: x.shape.clone() });
+            }
+            x = pooled;
+        }
+        let (_, h, w, _) = dims4(&x)?;
+        ensure!(
+            h.div_ceil(s) == l.hout && w.div_ceil(s) == l.wout,
+            "layer `{}`: no pooling schedule maps {h}x{w} input to declared {}x{} output at \
+             stride {s}",
+            l.name,
+            l.hout,
+            l.wout
+        );
+        let wq = host_weight_quant(params[2 * li], qbw);
+        let mut y = match l.kind {
+            LayerKind::Conv => conv2d(&x, &wq, s)?,
+            LayerKind::DwConv => dwconv2d(&x, &wq, s)?,
+            LayerKind::Dense => unreachable!("dense handled by dense_forward"),
+        };
+        add_channel_bias(&mut y, &params[2 * li + 1].data);
+        let mvec = (l.out_mask >= 0).then(|| masks[l.out_mask as usize]);
+        if let Some(m) = mvec {
+            mul_channel_mask(&mut y, &m.data);
+        }
+        let live = match mvec {
+            Some(m) => m.data.iter().sum::<f32>().max(1.0),
+            None => l.cout as f32,
+        };
+        let masked = y;
+        let (mut normed, rs, d) = rmsnorm(&masked, live);
+        relu_inplace(&mut normed);
+        if !record {
+            act_quant_inplace(&mut normed, qba);
+            return Ok((normed, None));
+        }
+        let normed_relu = normed.clone();
+        act_quant_inplace(&mut normed, qba);
+        Ok((normed, Some(ConvTrace { li, pools, x, wq, masked, rs, d, normed_relu })))
+    }
+
+    /// GAP -> act_quant -> quantized matmul -> bias (the `qmatmul` head).
+    fn dense_forward(
+        &self,
+        li: usize,
+        feat: &Tensor,
+        params: &[&Tensor],
+        qbw: f32,
+        qba: f32,
+        record: bool,
+    ) -> Result<(Tensor, Option<DenseTrace>)> {
+        let l = &self.arch.layers[li];
+        let (_, h, w, c) = dims4(feat)?;
+        ensure!(
+            c == l.cin,
+            "dense `{}`: fan-in {} != feature channels {c}",
+            l.name,
+            l.cin
+        );
+        let mut aq = gap(feat)?;
+        act_quant_inplace(&mut aq, qba);
+        let wq = host_weight_quant(params[2 * li], qbw);
+        let mut out = matmul(&aq, &wq);
+        add_row_bias(&mut out, &params[2 * li + 1].data);
+        let tr = record
+            .then(|| DenseTrace { li, feat_shape: feat.shape.clone(), hw: (h, w), aq, wq });
+        Ok((out, tr))
+    }
+
+    /// Exit head logits over a segment output (zero logits when the arch
+    /// declares no head — "never confident", deterministically).
+    fn exit_forward(
+        &self,
+        head: Option<usize>,
+        feat: &Tensor,
+        params: &[&Tensor],
+        qbw: f32,
+        qba: f32,
+        record: bool,
+    ) -> Result<(Tensor, Option<DenseTrace>)> {
+        match head {
+            Some(li) => self.dense_forward(li, feat, params, qbw, qba, record),
+            None => {
+                let b = *feat.shape.first().unwrap_or(&0);
+                Ok((Tensor::zeros(&[b, self.arch.num_classes]), None))
+            }
+        }
+    }
+
+    fn stage1(
+        &self,
+        params: &[&Tensor],
+        masks: &[&Tensor],
+        qbw: f32,
+        qba: f32,
+        x: &Tensor,
+    ) -> Result<(Tensor, Tensor)> {
+        let (h1, _, _) = self.forward_range(params, masks, qbw, qba, x, 0..self.n1, false)?;
+        let (e1, _) = self.exit_forward(self.exit1, &h1, params, qbw, qba, false)?;
+        Ok((h1, e1))
+    }
+
+    fn stage2(
+        &self,
+        params: &[&Tensor],
+        masks: &[&Tensor],
+        qbw: f32,
+        qba: f32,
+        h1: &Tensor,
+    ) -> Result<(Tensor, Tensor)> {
+        let (h2, _, _) = self.forward_range(params, masks, qbw, qba, h1, self.n1..self.n2, false)?;
+        let (e2, _) = self.exit_forward(self.exit2, &h2, params, qbw, qba, false)?;
+        Ok((h2, e2))
+    }
+
+    fn stage3(
+        &self,
+        params: &[&Tensor],
+        masks: &[&Tensor],
+        qbw: f32,
+        qba: f32,
+        h2: &Tensor,
+    ) -> Result<Tensor> {
+        let (logits, _, dense) =
+            self.forward_range(params, masks, qbw, qba, h2, self.n2..self.body.len(), false)?;
+        ensure!(dense.is_some(), "seg3 did not reach the classifier head");
+        Ok(logits)
+    }
+
+    // ----- the train graph --------------------------------------------------
+
+    fn train_step(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let np = self.arch.num_params();
+        let nm = self.arch.mask_slots.len();
+        // params(np) ++ momenta(np) ++ x ++ y ++ masks(nm) ++ qbw ++ qba ++
+        // tlogits ++ kd_alpha ++ kd_tau ++ exit_w ++ hp.
+        ensure!(
+            inputs.len() == 2 * np + nm + 9,
+            "train graph takes {} operands, got {}",
+            2 * np + nm + 9,
+            inputs.len()
+        );
+        let params = self.check_params(&inputs[..np])?;
+        let momenta = &inputs[np..2 * np];
+        let x = inputs[2 * np];
+        let y = inputs[2 * np + 1];
+        let masks = self.check_masks(&inputs[2 * np + 2..2 * np + 2 + nm])?;
+        let rest = &inputs[2 * np + 2 + nm..];
+        let qbw = scalar(rest[0], "qbw")?;
+        let qba = scalar(rest[1], "qba")?;
+        let tlogits = rest[2];
+        let kd_alpha = scalar(rest[3], "kd_alpha")?;
+        let kd_tau = scalar(rest[4], "kd_tau")?;
+        let exit_w = rest[5];
+        let hp = rest[6];
+        ensure!(exit_w.len() == 2, "exit_w must have 2 entries");
+        ensure!(hp.len() == 3, "hp must be [lr, momentum, weight_decay]");
+        let (lr, mu, wd) = (hp.data[0], hp.data[1], hp.data[2]);
+        let b = *x.shape.first().unwrap_or(&0);
+        ensure!(
+            b == self.arch.train_batch,
+            "train graph lowered at batch {}, got {b}",
+            self.arch.train_batch
+        );
+        ensure!(y.shape.first() == Some(&b), "label batch mismatch");
+
+        let (loss, acc, mut grads) = self.loss_and_grads(
+            &params, &masks, qbw, qba, x, y, tlogits, kd_alpha, kd_tau,
+            [exit_w.data[0], exit_w.data[1]], wd,
+        )?;
+
+        // Fused SGD-with-momentum update: m' = mu*m + g; p' = p - lr*m'.
+        let mut out = Vec::with_capacity(2 * np + 2);
+        let mut new_momenta = Vec::with_capacity(np);
+        for i in 0..np {
+            let g = &mut grads[i];
+            for (gv, &mv) in g.data.iter_mut().zip(&momenta[i].data) {
+                *gv += mu * mv;
+            }
+            let mut p: Tensor = (*params[i]).clone();
+            for (pv, &mv) in p.data.iter_mut().zip(&g.data) {
+                *pv -= lr * mv;
+            }
+            out.push(p);
+            new_momenta.push(std::mem::replace(g, Tensor::zeros(&[0])));
+        }
+        out.extend(new_momenta);
+        out.push(Tensor::scalar(loss));
+        out.push(Tensor::scalar(acc));
+        Ok(out)
+    }
+
+    /// Forward + loss + full backward.  Returns (loss, acc, d loss/d param)
+    /// with the weight-decay term already folded in.  Factored out of
+    /// [`RefNet::train_step`] so the gradient-check test can compare the
+    /// analytic gradients against finite differences of the loss.
+    #[allow(clippy::too_many_arguments)]
+    fn loss_and_grads(
+        &self,
+        params: &[&Tensor],
+        masks: &[&Tensor],
+        qbw: f32,
+        qba: f32,
+        x: &Tensor,
+        y: &Tensor,
+        tlogits: &Tensor,
+        kd_alpha: f32,
+        kd_tau: f32,
+        exit_w: [f32; 2],
+        wd: f32,
+    ) -> Result<(f32, f32, Vec<Tensor>)> {
+        let nc = self.arch.num_classes;
+        let b = *x.shape.first().unwrap_or(&0);
+        ensure!(
+            y.rank() == 2 && y.shape[1] >= nc,
+            "one-hot labels need >= {nc} columns, got {:?}",
+            y.shape
+        );
+        ensure!(
+            tlogits.shape == vec![b, nc],
+            "teacher logits shape {:?}, want [{b}, {nc}]",
+            tlogits.shape
+        );
+
+        // ---- forward (with traces) ----
+        let (h1, convs1, _) = self.forward_range(params, masks, qbw, qba, x, 0..self.n1, true)?;
+        let (e1, tr_e1) = self.exit_forward(self.exit1, &h1, params, qbw, qba, true)?;
+        let (h2, convs2, _) =
+            self.forward_range(params, masks, qbw, qba, &h1, self.n1..self.n2, true)?;
+        let (e2, tr_e2) = self.exit_forward(self.exit2, &h2, params, qbw, qba, true)?;
+        let (logits, convs3, tr_fc) =
+            self.forward_range(params, masks, qbw, qba, &h2, self.n2..self.body.len(), true)?;
+        let tr_fc = tr_fc.ok_or_else(|| anyhow!("seg3 did not reach the classifier head"))?;
+
+        // ---- loss + logit cotangents ----
+        let (ce, d_ce) = cross_entropy(&logits, y, nc, 1.0 - kd_alpha);
+        let (kd, d_kd) = kd_loss(&logits, tlogits, kd_tau, kd_alpha);
+        let (ce1, d_e1) = cross_entropy(&e1, y, nc, exit_w[0]);
+        let (ce2, d_e2) = cross_entropy(&e2, y, nc, exit_w[1]);
+        let l2: f32 = params
+            .iter()
+            .step_by(2)
+            .map(|p| p.data.iter().map(|v| v * v).sum::<f32>())
+            .sum();
+        let loss = (1.0 - kd_alpha) * ce + kd_alpha * kd
+            + exit_w[0] * ce1
+            + exit_w[1] * ce2
+            + wd * l2;
+        let acc = accuracy(&logits, y, nc);
+
+        // ---- backward ----
+        let mut grads: Vec<Tensor> =
+            params.iter().map(|p| Tensor::zeros(&p.shape)).collect();
+        let mut d_logits = Tensor::zeros(&[b, nc]);
+        if let Some(d) = d_ce {
+            add_assign(&mut d_logits, &d);
+        }
+        if let Some(d) = d_kd {
+            add_assign(&mut d_logits, &d);
+        }
+        // seg3: classifier, then its convs, back to h2.
+        let mut g = self.dense_backward(&tr_fc, &d_logits, &mut grads);
+        for tr in convs3.iter().rev() {
+            g = self.conv_backward(tr, g, &masks, &mut grads);
+        }
+        // exit2 contributes at h2.
+        if let (Some(tr), Some(d)) = (&tr_e2, &d_e2) {
+            let ge = self.dense_backward(tr, d, &mut grads);
+            add_assign(&mut g, &ge);
+        }
+        for tr in convs2.iter().rev() {
+            g = self.conv_backward(tr, g, &masks, &mut grads);
+        }
+        // exit1 contributes at h1.
+        if let (Some(tr), Some(d)) = (&tr_e1, &d_e1) {
+            let ge = self.dense_backward(tr, d, &mut grads);
+            add_assign(&mut g, &ge);
+        }
+        for tr in convs1.iter().rev() {
+            g = self.conv_backward(tr, g, &masks, &mut grads);
+        }
+        // (g is now d loss / d x — discarded.)
+
+        // Weight decay: d(wd * Σ‖W‖²)/dW = 2·wd·W, weights only.
+        if wd != 0.0 {
+            for i in (0..grads.len()).step_by(2) {
+                for (gv, &pv) in grads[i].data.iter_mut().zip(&params[i].data) {
+                    *gv += 2.0 * wd * pv;
+                }
+            }
+        }
+        Ok((loss, acc, grads))
+    }
+
+    /// Backward through one dense head (straight-through quantizers, the
+    /// `qmatmul` VJP: cotangents against the *quantized* operands).
+    /// Accumulates dW/db and returns the gradient at the 4-D input feature.
+    fn dense_backward(&self, tr: &DenseTrace, g: &Tensor, grads: &mut [Tensor]) -> Tensor {
+        let li = tr.li;
+        let (m, n) = (g.shape[0], g.shape[1]);
+        let k = tr.aq.shape[1];
+        // db = column sums of g.
+        for row in g.data.chunks_exact(n) {
+            for (dbv, &gv) in grads[2 * li + 1].data.iter_mut().zip(row) {
+                *dbv += gv;
+            }
+        }
+        // dW[k, n] += aqᵀ g.
+        let dw = &mut grads[2 * li].data;
+        for mi in 0..m {
+            let arow = &tr.aq.data[mi * k..(mi + 1) * k];
+            let grow = &g.data[mi * n..(mi + 1) * n];
+            for (ki, &av) in arow.iter().enumerate() {
+                if av != 0.0 {
+                    let dwrow = &mut dw[ki * n..(ki + 1) * n];
+                    for (dwv, &gv) in dwrow.iter_mut().zip(grow) {
+                        *dwv += av * gv;
+                    }
+                }
+            }
+        }
+        // da = g wqᵀ, then GAP backward (uniform 1/(h·w) broadcast).
+        let (h, w) = tr.hw;
+        let scale = 1.0 / (h * w) as f32;
+        let mut dfeat = vec![0.0f32; tr.feat_shape.iter().product()];
+        let hw = h * w;
+        for mi in 0..m {
+            let grow = &g.data[mi * n..(mi + 1) * n];
+            for ki in 0..k {
+                let wrow = &tr.wq.data[ki * n..(ki + 1) * n];
+                let mut acc = 0.0f32;
+                for (wv, gv) in wrow.iter().zip(grow) {
+                    acc += wv * gv;
+                }
+                let dv = acc * scale;
+                // Broadcast to every spatial position of channel ki.
+                for p in 0..hw {
+                    dfeat[(mi * hw + p) * k + ki] += dv;
+                }
+            }
+        }
+        Tensor::new(tr.feat_shape.clone(), dfeat)
+    }
+
+    /// Backward through one conv pipeline: act_quant (STE) -> relu ->
+    /// live-RMS norm -> mask -> conv -> pools.  Accumulates dW/db and
+    /// returns the gradient at the layer's (pre-pool) input.
+    fn conv_backward(
+        &self,
+        tr: &ConvTrace,
+        g_out: Tensor,
+        masks: &[&Tensor],
+        grads: &mut [Tensor],
+    ) -> Tensor {
+        let l = &self.arch.layers[tr.li];
+        // act_quant: straight-through.
+        let mut g = g_out;
+        // relu: pass where the (pre-quant) activation was positive.
+        for (gv, &ov) in g.data.iter_mut().zip(&tr.normed_relu.data) {
+            if ov <= 0.0 {
+                *gv = 0.0;
+            }
+        }
+        // live-RMS norm backward.
+        let mut g = rmsnorm_backward(&g, &tr.masked, &tr.rs, tr.d);
+        // mask: dead channels carry no gradient.
+        if l.out_mask >= 0 {
+            mul_channel_mask(&mut g, &masks[l.out_mask as usize].data);
+        }
+        // conv backward (w.r.t. the quantized weights; straight-through to
+        // the raw weights, matching the L1 kernels' STE).
+        let s = l.stride.max(1);
+        let cg = match l.kind {
+            LayerKind::Conv => conv2d_backward(&tr.x, &tr.wq, &g, s),
+            LayerKind::DwConv => dwconv2d_backward(&tr.x, &tr.wq, &g, s),
+            LayerKind::Dense => unreachable!(),
+        };
+        for (dwv, gv) in grads[2 * tr.li].data.iter_mut().zip(cg.dw) {
+            *dwv += gv;
+        }
+        for (dbv, gv) in grads[2 * tr.li + 1].data.iter_mut().zip(cg.db) {
+            *dbv += gv;
+        }
+        // pools backward, innermost first.
+        let mut dx = cg.dx;
+        let mut shape = tr.x.shape.clone();
+        for p in tr.pools.iter().rev() {
+            let mut up = vec![0.0f32; p.in_shape.iter().product()];
+            for (gi, &v) in dx.iter().enumerate() {
+                up[p.idx[gi] as usize] += v;
+            }
+            dx = up;
+            shape = p.in_shape.clone();
+        }
+        Tensor::new(shape, dx)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Traces
+// ---------------------------------------------------------------------------
+
+struct PoolTrace {
+    /// Flat input index each output element drew from (gradient route).
+    idx: Vec<u32>,
+    in_shape: Vec<usize>,
+}
+
+struct ConvTrace {
+    li: usize,
+    pools: Vec<PoolTrace>,
+    /// Conv input (post pools).
+    x: Tensor,
+    wq: Tensor,
+    /// Post bias+mask — the RMS-norm input.
+    masked: Tensor,
+    /// Per-sample rsqrt factors and the live-channel divisor.
+    rs: Vec<f32>,
+    d: f32,
+    /// Post-relu, pre-quant (the relu gradient gate).
+    normed_relu: Tensor,
+}
+
+struct DenseTrace {
+    li: usize,
+    feat_shape: Vec<usize>,
+    hw: (usize, usize),
+    /// act_quant(GAP(feat)) — the quantized matmul LHS.
+    aq: Tensor,
+    wq: Tensor,
+}
+
+// ---------------------------------------------------------------------------
+// Ops (fixed-order f32 loops; determinism is the contract)
+// ---------------------------------------------------------------------------
+
+fn dims4(t: &Tensor) -> Result<(usize, usize, usize, usize)> {
+    ensure!(t.rank() == 4, "expected a rank-4 NHWC tensor, got shape {:?}", t.shape);
+    Ok((t.shape[0], t.shape[1], t.shape[2], t.shape[3]))
+}
+
+fn scalar(t: &Tensor, what: &str) -> Result<f32> {
+    ensure!(t.len() == 1, "{what} must be a scalar, got shape {:?}", t.shape);
+    Ok(t.data[0])
+}
+
+/// XLA SAME padding: total = max((out-1)·stride + k - in, 0), low = total/2.
+fn same_pad_lo(inp: usize, out: usize, k: usize, stride: usize) -> usize {
+    ((out - 1) * stride + k).saturating_sub(inp) / 2
+}
+
+fn conv2d(x: &Tensor, w: &Tensor, stride: usize) -> Result<Tensor> {
+    let (b, h, wd, cin) = dims4(x)?;
+    let (k, cout) = (w.shape[0], w.shape[3]);
+    ensure!(w.shape[2] == cin, "conv weight cin {} != input channels {cin}", w.shape[2]);
+    let ho = h.div_ceil(stride);
+    let wo = wd.div_ceil(stride);
+    let ph = same_pad_lo(h, ho, k, stride) as isize;
+    let pw = same_pad_lo(wd, wo, k, stride) as isize;
+    let mut out = vec![0.0f32; b * ho * wo * cout];
+    for bi in 0..b {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let acc = &mut out[((bi * ho + oy) * wo + ox) * cout..][..cout];
+                for ky in 0..k {
+                    let iy = (oy * stride + ky) as isize - ph;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..k {
+                        let ix = (ox * stride + kx) as isize - pw;
+                        if ix < 0 || ix >= wd as isize {
+                            continue;
+                        }
+                        let xbase = ((bi * h + iy as usize) * wd + ix as usize) * cin;
+                        let wbase = (ky * k + kx) * cin * cout;
+                        for ic in 0..cin {
+                            let xv = x.data[xbase + ic];
+                            if xv != 0.0 {
+                                let wrow = &w.data[wbase + ic * cout..][..cout];
+                                for (a, &wv) in acc.iter_mut().zip(wrow) {
+                                    *a += xv * wv;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Ok(Tensor::new(vec![b, ho, wo, cout], out))
+}
+
+struct ConvGrads {
+    dx: Vec<f32>,
+    dw: Vec<f32>,
+    db: Vec<f32>,
+}
+
+fn conv2d_backward(x: &Tensor, w: &Tensor, g: &Tensor, stride: usize) -> ConvGrads {
+    let (b, h, wd, cin) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let (k, cout) = (w.shape[0], w.shape[3]);
+    let (ho, wo) = (g.shape[1], g.shape[2]);
+    let ph = same_pad_lo(h, ho, k, stride) as isize;
+    let pw = same_pad_lo(wd, wo, k, stride) as isize;
+    let mut dx = vec![0.0f32; x.len()];
+    let mut dw = vec![0.0f32; w.len()];
+    let mut db = vec![0.0f32; cout];
+    for bi in 0..b {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let grow = &g.data[((bi * ho + oy) * wo + ox) * cout..][..cout];
+                for (dbv, &gv) in db.iter_mut().zip(grow) {
+                    *dbv += gv;
+                }
+                for ky in 0..k {
+                    let iy = (oy * stride + ky) as isize - ph;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..k {
+                        let ix = (ox * stride + kx) as isize - pw;
+                        if ix < 0 || ix >= wd as isize {
+                            continue;
+                        }
+                        let xbase = ((bi * h + iy as usize) * wd + ix as usize) * cin;
+                        let wbase = (ky * k + kx) * cin * cout;
+                        for ic in 0..cin {
+                            let xv = x.data[xbase + ic];
+                            let wrow = &w.data[wbase + ic * cout..][..cout];
+                            let dwrow = &mut dw[wbase + ic * cout..][..cout];
+                            let mut acc = 0.0f32;
+                            for ((dwv, &wv), &gv) in dwrow.iter_mut().zip(wrow).zip(grow) {
+                                *dwv += xv * gv;
+                                acc += wv * gv;
+                            }
+                            dx[xbase + ic] += acc;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    ConvGrads { dx, dw, db }
+}
+
+fn dwconv2d(x: &Tensor, w: &Tensor, stride: usize) -> Result<Tensor> {
+    let (b, h, wd, c) = dims4(x)?;
+    let (k, cout) = (w.shape[0], w.shape[3]);
+    ensure!(cout == c, "depthwise weight channels {cout} != input channels {c}");
+    let ho = h.div_ceil(stride);
+    let wo = wd.div_ceil(stride);
+    let ph = same_pad_lo(h, ho, k, stride) as isize;
+    let pw = same_pad_lo(wd, wo, k, stride) as isize;
+    let mut out = vec![0.0f32; b * ho * wo * c];
+    for bi in 0..b {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let acc = &mut out[((bi * ho + oy) * wo + ox) * c..][..c];
+                for ky in 0..k {
+                    let iy = (oy * stride + ky) as isize - ph;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..k {
+                        let ix = (ox * stride + kx) as isize - pw;
+                        if ix < 0 || ix >= wd as isize {
+                            continue;
+                        }
+                        let xrow =
+                            &x.data[((bi * h + iy as usize) * wd + ix as usize) * c..][..c];
+                        let wrow = &w.data[(ky * k + kx) * c..][..c];
+                        for ((a, &xv), &wv) in acc.iter_mut().zip(xrow).zip(wrow) {
+                            *a += xv * wv;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Ok(Tensor::new(vec![b, ho, wo, c], out))
+}
+
+fn dwconv2d_backward(x: &Tensor, w: &Tensor, g: &Tensor, stride: usize) -> ConvGrads {
+    let (b, h, wd, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let k = w.shape[0];
+    let (ho, wo) = (g.shape[1], g.shape[2]);
+    let ph = same_pad_lo(h, ho, k, stride) as isize;
+    let pw = same_pad_lo(wd, wo, k, stride) as isize;
+    let mut dx = vec![0.0f32; x.len()];
+    let mut dw = vec![0.0f32; w.len()];
+    let mut db = vec![0.0f32; c];
+    for bi in 0..b {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let grow = &g.data[((bi * ho + oy) * wo + ox) * c..][..c];
+                for (dbv, &gv) in db.iter_mut().zip(grow) {
+                    *dbv += gv;
+                }
+                for ky in 0..k {
+                    let iy = (oy * stride + ky) as isize - ph;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..k {
+                        let ix = (ox * stride + kx) as isize - pw;
+                        if ix < 0 || ix >= wd as isize {
+                            continue;
+                        }
+                        let xbase = ((bi * h + iy as usize) * wd + ix as usize) * c;
+                        let wbase = (ky * k + kx) * c;
+                        for cc in 0..c {
+                            let gv = grow[cc];
+                            dw[wbase + cc] += x.data[xbase + cc] * gv;
+                            dx[xbase + cc] += w.data[wbase + cc] * gv;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    ConvGrads { dx, dw, db }
+}
+
+/// 2x2 stride-2 max-pool (VALID).  `record` additionally returns the
+/// argmax route the pool backward pass consumes (empty otherwise, so the
+/// inference path pays no route bookkeeping).  Ties keep the first
+/// window element (fixed scan order — deterministic either way).
+fn maxpool2(x: &Tensor, record: bool) -> Result<(Tensor, Vec<u32>)> {
+    let (b, h, w, c) = dims4(x)?;
+    ensure!(h >= 2 && w >= 2, "feature map {h}x{w} too small to pool");
+    let ho = (h - 2) / 2 + 1;
+    let wo = (w - 2) / 2 + 1;
+    let mut out = vec![0.0f32; b * ho * wo * c];
+    let mut idx = if record { vec![0u32; b * ho * wo * c] } else { Vec::new() };
+    for bi in 0..b {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                for cc in 0..c {
+                    let mut best = f32::NEG_INFINITY;
+                    let mut besti = usize::MAX;
+                    for dy in 0..2 {
+                        for dxp in 0..2 {
+                            let fi = ((bi * h + oy * 2 + dy) * w + ox * 2 + dxp) * c + cc;
+                            let v = x.data[fi];
+                            if besti == usize::MAX || v > best {
+                                best = v;
+                                besti = fi;
+                            }
+                        }
+                    }
+                    let o = ((bi * ho + oy) * wo + ox) * c + cc;
+                    out[o] = best;
+                    if record {
+                        idx[o] = besti as u32;
+                    }
+                }
+            }
+        }
+    }
+    Ok((Tensor::new(vec![b, ho, wo, c], out), idx))
+}
+
+/// Global average pool: [b, h, w, c] -> [b, c].
+fn gap(x: &Tensor) -> Result<Tensor> {
+    let (b, h, w, c) = dims4(x)?;
+    let hw = (h * w) as f32;
+    let mut out = vec![0.0f32; b * c];
+    for bi in 0..b {
+        let orow = &mut out[bi * c..(bi + 1) * c];
+        for p in 0..h * w {
+            let xrow = &x.data[(bi * h * w + p) * c..][..c];
+            for (o, &v) in orow.iter_mut().zip(xrow) {
+                *o += v;
+            }
+        }
+        for o in orow.iter_mut() {
+            *o /= hw;
+        }
+    }
+    Ok(Tensor::new(vec![b, c], out))
+}
+
+/// Per-sample RMS normalization over (H, W, C) with a live-channel
+/// divisor (mirrors `archs.py::_rmsnorm`): y = x · rsqrt(Σx²/D + 1e-6),
+/// D = H·W·live.  Returns (y, per-sample rsqrt factors, D).
+fn rmsnorm(x: &Tensor, live: f32) -> (Tensor, Vec<f32>, f32) {
+    let (b, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let spl = h * w * c;
+    let d = (h * w) as f32 * live;
+    let mut out = Vec::with_capacity(x.len());
+    let mut rs = Vec::with_capacity(b);
+    for bi in 0..b {
+        let row = &x.data[bi * spl..(bi + 1) * spl];
+        let ms = row.iter().map(|v| v * v).sum::<f32>() / d;
+        let r = 1.0 / (ms + 1e-6).sqrt();
+        rs.push(r);
+        out.extend(row.iter().map(|v| v * r));
+    }
+    (Tensor::new(x.shape.clone(), out), rs, d)
+}
+
+/// d/dx of rmsnorm: dx = r·g − x·(Σ g·x)·r³/D, per sample.
+fn rmsnorm_backward(g: &Tensor, x_pre: &Tensor, rs: &[f32], d: f32) -> Tensor {
+    let b = x_pre.shape[0];
+    let spl = x_pre.len() / b.max(1);
+    let mut out = Vec::with_capacity(g.len());
+    for bi in 0..b {
+        let grow = &g.data[bi * spl..(bi + 1) * spl];
+        let xrow = &x_pre.data[bi * spl..(bi + 1) * spl];
+        let r = rs[bi];
+        let sdot: f32 = grow.iter().zip(xrow).map(|(gv, xv)| gv * xv).sum();
+        let k = sdot * r * r * r / d;
+        out.extend(grow.iter().zip(xrow).map(|(gv, xv)| r * gv - k * xv));
+    }
+    Tensor::new(g.shape.clone(), out)
+}
+
+fn relu_inplace(t: &mut Tensor) {
+    for v in &mut t.data {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// DoReFa-style activation fake-quant with per-tensor dynamic scale
+/// (mirrors `kernels/fake_quant.py::act_quant`); identity when bits <= 0.
+fn act_quant_inplace(t: &mut Tensor, bits: f32) {
+    if bits <= 0.0 {
+        return;
+    }
+    let n = (bits.exp2() - 1.0).max(1.0);
+    let mut s = 1e-8f32;
+    for &v in &t.data {
+        s = s.max(v.abs());
+    }
+    for v in &mut t.data {
+        let an = (*v / s).clamp(0.0, 1.0);
+        *v = (an * n).round() / n * s;
+    }
+}
+
+fn add_channel_bias(t: &mut Tensor, bias: &[f32]) {
+    let c = bias.len();
+    for row in t.data.chunks_exact_mut(c) {
+        for (v, &bv) in row.iter_mut().zip(bias) {
+            *v += bv;
+        }
+    }
+}
+
+fn mul_channel_mask(t: &mut Tensor, mask: &[f32]) {
+    let c = mask.len();
+    for row in t.data.chunks_exact_mut(c) {
+        for (v, &mv) in row.iter_mut().zip(mask) {
+            *v *= mv;
+        }
+    }
+}
+
+fn add_row_bias(t: &mut Tensor, bias: &[f32]) {
+    let n = bias.len();
+    for row in t.data.chunks_exact_mut(n) {
+        for (v, &bv) in row.iter_mut().zip(bias) {
+            *v += bv;
+        }
+    }
+}
+
+/// [m, k] @ [k, n] -> [m, n]; per output element the k-sum runs ascending.
+fn matmul(a: &Tensor, w: &Tensor) -> Tensor {
+    let (m, k) = (a.shape[0], a.shape[1]);
+    let n = w.shape[1];
+    let mut out = vec![0.0f32; m * n];
+    for mi in 0..m {
+        let arow = &a.data[mi * k..(mi + 1) * k];
+        let orow = &mut out[mi * n..(mi + 1) * n];
+        for (ki, &av) in arow.iter().enumerate() {
+            if av != 0.0 {
+                let wrow = &w.data[ki * n..(ki + 1) * n];
+                for (o, &wv) in orow.iter_mut().zip(wrow) {
+                    *o += av * wv;
+                }
+            }
+        }
+    }
+    Tensor::new(vec![m, n], out)
+}
+
+fn add_assign(t: &mut Tensor, other: &Tensor) {
+    debug_assert_eq!(t.len(), other.len());
+    for (a, &b) in t.data.iter_mut().zip(&other.data) {
+        *a += b;
+    }
+}
+
+// ----- losses ---------------------------------------------------------------
+
+fn log_softmax_row(row: &[f32], out: &mut [f32]) {
+    let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut lse = 0.0f32;
+    for &v in row {
+        lse += (v - m).exp();
+    }
+    let lse = lse.ln();
+    for (o, &v) in out.iter_mut().zip(row) {
+        *o = v - m - lse;
+    }
+}
+
+/// Mean CE of logits [B, nc] against one-hot labels (first `nc` columns
+/// of `y`).  Returns (ce, coeff·dce/dlogits); the gradient is skipped
+/// when `coeff == 0` (the loss term still contributes its value).
+fn cross_entropy(logits: &Tensor, y: &Tensor, nc: usize, coeff: f32) -> (f32, Option<Tensor>) {
+    let b = logits.shape[0];
+    let ycols = y.shape[1];
+    let mut ls = vec![0.0f32; nc];
+    let mut ce = 0.0f32;
+    let mut grad = (coeff != 0.0).then(|| vec![0.0f32; b * nc]);
+    for bi in 0..b {
+        let row = &logits.data[bi * nc..(bi + 1) * nc];
+        let yrow = &y.data[bi * ycols..bi * ycols + nc];
+        log_softmax_row(row, &mut ls);
+        for (l, &yv) in ls.iter().zip(yrow) {
+            ce -= yv * l;
+        }
+        if let Some(g) = &mut grad {
+            let grow = &mut g[bi * nc..(bi + 1) * nc];
+            for ((gv, &l), &yv) in grow.iter_mut().zip(&ls).zip(yrow) {
+                *gv = coeff * (l.exp() - yv) / b as f32;
+            }
+        }
+    }
+    (ce / b as f32, grad.map(|g| Tensor::new(vec![b, nc], g)))
+}
+
+/// Hinton KD: tau² · mean_b Σ_c softmax(t/τ)·(lsm(t/τ) − lsm(s/τ)).
+/// Returns (kd, coeff·dkd/ds) with dkd/ds = τ·(softmax(s/τ) − softmax(t/τ))/B.
+fn kd_loss(logits: &Tensor, tlog: &Tensor, tau: f32, coeff: f32) -> (f32, Option<Tensor>) {
+    let (b, nc) = (logits.shape[0], logits.shape[1]);
+    let tau = if tau > 0.0 { tau } else { 1.0 };
+    let mut ls_s = vec![0.0f32; nc];
+    let mut ls_t = vec![0.0f32; nc];
+    let mut srow = vec![0.0f32; nc];
+    let mut trow = vec![0.0f32; nc];
+    let mut kd = 0.0f32;
+    let mut grad = (coeff != 0.0).then(|| vec![0.0f32; b * nc]);
+    for bi in 0..b {
+        for c in 0..nc {
+            srow[c] = logits.data[bi * nc + c] / tau;
+            trow[c] = tlog.data[bi * nc + c] / tau;
+        }
+        log_softmax_row(&srow, &mut ls_s);
+        log_softmax_row(&trow, &mut ls_t);
+        for c in 0..nc {
+            let t = ls_t[c].exp();
+            kd += t * (ls_t[c] - ls_s[c]);
+        }
+        if let Some(g) = &mut grad {
+            let grow = &mut g[bi * nc..(bi + 1) * nc];
+            for (c, gv) in grow.iter_mut().enumerate() {
+                let p = ls_s[c].exp();
+                let t = ls_t[c].exp();
+                *gv = coeff * tau * (p - t) / b as f32;
+            }
+        }
+    }
+    (tau * tau * kd / b as f32, grad.map(|g| Tensor::new(vec![b, nc], g)))
+}
+
+/// Mean top-1 agreement between logits and one-hot labels (first `nc`
+/// columns), under the repo's one shared argmax rule
+/// (`tensor::argmax_slice`: total over every f32 bit pattern, last
+/// maximum on ties — NaN-safe like every other accuracy in the crate).
+fn accuracy(logits: &Tensor, y: &Tensor, nc: usize) -> f32 {
+    let b = logits.shape[0];
+    let ycols = y.shape[1];
+    let mut correct = 0usize;
+    for r in 0..b {
+        let pr = crate::tensor::argmax_slice(&logits.data[r * nc..(r + 1) * nc]);
+        let yr = crate::tensor::argmax_slice(&y.data[r * ycols..r * ycols + nc]);
+        correct += (pr == yr) as usize;
+    }
+    correct as f32 / b.max(1) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{LayerDesc, MaskSlot};
+    use std::collections::BTreeMap;
+
+    fn layer(
+        name: &str,
+        kind: LayerKind,
+        k: usize,
+        cin: usize,
+        cout: usize,
+        stride: usize,
+        hout: usize,
+        out_mask: i64,
+        segment: &str,
+    ) -> LayerDesc {
+        LayerDesc {
+            name: name.into(),
+            kind,
+            k,
+            cin,
+            cout,
+            stride,
+            hout,
+            wout: hout,
+            in_mask: -1,
+            out_mask,
+            segment: segment.into(),
+        }
+    }
+
+    /// Tiny feed-forward arch: conv(2->3) @4x4 -> dense(3->4), one exit
+    /// head after seg1.  All graph tags declared.
+    fn tiny_arch() -> Arc<ArchManifest> {
+        let layers = vec![
+            layer("c1", LayerKind::Conv, 3, 2, 3, 1, 4, 0, "seg1"),
+            layer("fc", LayerKind::Dense, 1, 3, 4, 1, 1, -1, "seg3"),
+            layer("x1", LayerKind::Dense, 1, 3, 4, 1, 1, -1, "exit1"),
+        ];
+        let mut graphs = BTreeMap::new();
+        for tag in ["init", "train", "eval", "stage1", "stage2", "stage3"] {
+            graphs.insert(tag.to_string(), format!("ref://tiny/{tag}"));
+        }
+        Arc::new(ArchManifest {
+            name: "tiny".into(),
+            num_classes: 4,
+            layers,
+            mask_slots: vec![MaskSlot { name: "m0".into(), channels: 3 }],
+            param_shapes: vec![
+                vec![3, 3, 2, 3],
+                vec![3],
+                vec![3, 4],
+                vec![4],
+                vec![3, 4],
+                vec![4],
+            ],
+            graphs,
+            train_batch: 2,
+            eval_batch: 2,
+            stage_batch: 1,
+            stage_batches: vec![1],
+            stage_h1_shape: vec![1, 4, 4, 3],
+            stage_h2_shape: vec![1, 4, 4, 3],
+        })
+    }
+
+    fn det_tensor(shape: &[usize], salt: u64) -> Tensor {
+        let mut rng = crate::util::rng::Rng::new(0x5eed ^ salt);
+        let data = (0..shape.iter().product::<usize>()).map(|_| rng.normal() * 0.5).collect();
+        Tensor::new(shape.to_vec(), data)
+    }
+
+    #[test]
+    fn ref_graph_tags_parse() {
+        assert_eq!(GraphKind::parse("init"), Some(GraphKind::Init));
+        assert_eq!(GraphKind::parse("train"), Some(GraphKind::Train));
+        assert_eq!(GraphKind::parse("eval"), Some(GraphKind::Eval));
+        assert_eq!(GraphKind::parse("stage1"), Some(GraphKind::Stage { stage: 1, batch: 1 }));
+        assert_eq!(GraphKind::parse("stage3_b8"), Some(GraphKind::Stage { stage: 3, batch: 8 }));
+        assert_eq!(GraphKind::parse("stage4"), None);
+        assert_eq!(GraphKind::parse("stage1_b0"), None);
+        assert_eq!(GraphKind::parse("bogus"), None);
+    }
+
+    #[test]
+    fn ref_rejects_non_feedforward_manifests() {
+        // A projection-style layer whose cin does not chain from the
+        // previous body layer's cout must be rejected at load time.
+        let layers = vec![
+            layer("c1", LayerKind::Conv, 3, 3, 8, 1, 8, -1, "seg1"),
+            layer("proj", LayerKind::Conv, 1, 3, 8, 1, 8, -1, "seg2"),
+            layer("fc", LayerKind::Dense, 1, 8, 4, 1, 1, -1, "seg3"),
+        ];
+        let arch = Arc::new(ArchManifest {
+            name: "resnetish".into(),
+            num_classes: 4,
+            layers,
+            mask_slots: vec![],
+            param_shapes: vec![
+                vec![3, 3, 3, 8],
+                vec![8],
+                vec![1, 1, 3, 8],
+                vec![8],
+                vec![8, 4],
+                vec![4],
+            ],
+            graphs: BTreeMap::new(),
+            train_batch: 2,
+            eval_batch: 2,
+            stage_batch: 1,
+            stage_batches: vec![1],
+            stage_h1_shape: vec![],
+            stage_h2_shape: vec![],
+        });
+        let err = RefNet::compile(arch).unwrap_err();
+        assert!(err.to_string().contains("feed-forward"), "{err}");
+    }
+
+    #[test]
+    fn ref_eval_equals_stage_composition_bitwise() {
+        let arch = tiny_arch();
+        let net = RefNet::compile(arch.clone()).unwrap();
+        let params: Vec<Tensor> = arch
+            .param_shapes
+            .iter()
+            .enumerate()
+            .map(|(i, s)| det_tensor(s, i as u64))
+            .collect();
+        let pref: Vec<&Tensor> = params.iter().collect();
+        let masks = [Tensor::new(vec![3], vec![1.0, 0.0, 1.0])];
+        let mref: Vec<&Tensor> = masks.iter().collect();
+        let x = det_tensor(&[2, 8, 8, 2], 99);
+        for (qbw, qba) in [(0.0f32, 0.0f32), (4.0, 8.0)] {
+            let (h1, e1) = net.stage1(&pref, &mref, qbw, qba, &x).unwrap();
+            let (h2, e2) = net.stage2(&pref, &mref, qbw, qba, &h1).unwrap();
+            let logits = net.stage3(&pref, &mref, qbw, qba, &h2).unwrap();
+            // Masked channel never influences downstream values.
+            assert!(h1.data.chunks_exact(3).all(|c| c[1] == 0.0));
+            // eval is the same composition — bit-identical by construction.
+            let graph = RefGraph {
+                net: RefNet::compile(arch.clone()).unwrap(),
+                kind: GraphKind::Eval,
+                name: "t".into(),
+                stats: Arc::new(StatsCell::default()),
+            };
+            let mut inputs: Vec<&Tensor> = pref.clone();
+            inputs.extend(mref.iter().copied());
+            let qbw_t = Tensor::scalar(qbw);
+            let qba_t = Tensor::scalar(qba);
+            inputs.push(&qbw_t);
+            inputs.push(&qba_t);
+            inputs.push(&x);
+            let outs = graph.dispatch(&inputs).unwrap();
+            assert_eq!(outs.len(), 3);
+            assert_eq!(outs[0].data, logits.data);
+            assert_eq!(outs[1].data, e1.data);
+            assert_eq!(outs[2].data, e2.data);
+        }
+    }
+
+    #[test]
+    fn ref_train_gradients_match_finite_differences() {
+        // The load-bearing test of the whole backward pass: analytic
+        // gradients vs central differences of the loss, at fp32 (smooth
+        // except relu/max kinks, which the fixed seed avoids measurably).
+        let arch = tiny_arch();
+        let net = RefNet::compile(arch.clone()).unwrap();
+        let params: Vec<Tensor> = arch
+            .param_shapes
+            .iter()
+            .enumerate()
+            .map(|(i, s)| det_tensor(s, 7 + i as u64))
+            .collect();
+        let masks = [Tensor::new(vec![3], vec![1.0, 1.0, 0.0])];
+        let mref: Vec<&Tensor> = masks.iter().collect();
+        let x = det_tensor(&[2, 8, 8, 2], 123);
+        let mut y = Tensor::zeros(&[2, 4]);
+        y.data[1] = 1.0; // sample 0 -> class 1
+        y.data[4 + 3] = 1.0; // sample 1 -> class 3
+        let tlog = det_tensor(&[2, 4], 321);
+
+        // Three loss configurations: plain CE, CE+exits+wd, CE+KD.
+        let configs = [
+            (0.0f32, 4.0f32, [0.0f32, 0.0f32], 0.0f32),
+            (0.0, 4.0, [0.4, 0.0], 1e-3),
+            (0.5, 2.0, [0.0, 0.0], 0.0),
+        ];
+        for (ka, tau, ew, wd) in configs {
+            let loss_of = |ps: &[Tensor]| -> f32 {
+                let pref: Vec<&Tensor> = ps.iter().collect();
+                net.loss_and_grads(&pref, &mref, 0.0, 0.0, &x, &y, &tlog, ka, tau, ew, wd)
+                    .unwrap()
+                    .0
+            };
+            let pref: Vec<&Tensor> = params.iter().collect();
+            let (_, _, grads) = net
+                .loss_and_grads(&pref, &mref, 0.0, 0.0, &x, &y, &tlog, ka, tau, ew, wd)
+                .unwrap();
+            // Probe a spread of coordinates in every parameter tensor.
+            for (pi, p) in params.iter().enumerate() {
+                for probe in 0..3.min(p.len()) {
+                    let ci = (probe * 13 + pi * 5) % p.len();
+                    let eps = 5e-3f32;
+                    let mut plus = params.clone();
+                    plus[pi].data[ci] += eps;
+                    let mut minus = params.clone();
+                    minus[pi].data[ci] -= eps;
+                    let numeric = (loss_of(&plus) - loss_of(&minus)) / (2.0 * eps);
+                    let analytic = grads[pi].data[ci];
+                    let tol = 2e-2f32.max(0.05 * numeric.abs());
+                    assert!(
+                        (numeric - analytic).abs() <= tol,
+                        "grad mismatch at param {pi}[{ci}] (ka={ka}, ew={ew:?}, wd={wd}): \
+                         analytic {analytic} vs numeric {numeric}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ref_train_step_is_deterministic_and_updates() {
+        let arch = tiny_arch();
+        let graph = RefGraph {
+            net: RefNet::compile(arch.clone()).unwrap(),
+            kind: GraphKind::Train,
+            name: "t".into(),
+            stats: Arc::new(StatsCell::default()),
+        };
+        let params: Vec<Tensor> = arch
+            .param_shapes
+            .iter()
+            .enumerate()
+            .map(|(i, s)| det_tensor(s, 40 + i as u64))
+            .collect();
+        let momenta: Vec<Tensor> =
+            arch.param_shapes.iter().map(|s| Tensor::zeros(s)).collect();
+        let x = det_tensor(&[2, 8, 8, 2], 55);
+        let mut y = Tensor::zeros(&[2, 4]);
+        y.data[0] = 1.0;
+        y.data[4 + 2] = 1.0;
+        let masks = [Tensor::ones(&[3])];
+        let qbw = Tensor::scalar(0.0);
+        let qba = Tensor::scalar(0.0);
+        let tlog = Tensor::zeros(&[2, 4]);
+        let ka = Tensor::scalar(0.0);
+        let kt = Tensor::scalar(4.0);
+        let ew = Tensor::from_vec(vec![0.0, 0.0]);
+        let hp = Tensor::from_vec(vec![0.05, 0.9, 1e-4]);
+        let mut inputs: Vec<&Tensor> = Vec::new();
+        inputs.extend(params.iter());
+        inputs.extend(momenta.iter());
+        inputs.push(&x);
+        inputs.push(&y);
+        inputs.extend(masks.iter());
+        inputs.push(&qbw);
+        inputs.push(&qba);
+        inputs.push(&tlog);
+        inputs.push(&ka);
+        inputs.push(&kt);
+        inputs.push(&ew);
+        inputs.push(&hp);
+
+        let a = graph.dispatch(&inputs).unwrap();
+        let b = graph.dispatch(&inputs).unwrap();
+        assert_eq!(a.len(), 2 * arch.num_params() + 2);
+        for (ta, tb) in a.iter().zip(&b) {
+            assert_eq!(ta.data, tb.data, "train step must be bit-deterministic");
+        }
+        let loss = a[a.len() - 2].data[0];
+        assert!(loss.is_finite() && loss > 0.0);
+        // Parameters moved (there is a gradient).
+        assert_ne!(a[0].data, params[0].data);
+    }
+
+    #[test]
+    fn ref_same_padding_geometry() {
+        assert_eq!(same_pad_lo(16, 16, 3, 1), 1);
+        assert_eq!(same_pad_lo(16, 8, 3, 2), 0); // total 1, low 0
+        assert_eq!(same_pad_lo(16, 16, 1, 1), 0);
+        let x = Tensor::ones(&[1, 5, 5, 1]);
+        let (p, idx) = maxpool2(&x, true).unwrap();
+        assert_eq!(p.shape, vec![1, 2, 2, 1]);
+        assert_eq!(idx.len(), 4);
+        let (p2, idx2) = maxpool2(&x, false).unwrap();
+        assert_eq!(p2.data, p.data, "route recording must not perturb values");
+        assert!(idx2.is_empty());
+    }
+}

@@ -135,6 +135,51 @@ mod tests {
     }
 
     #[test]
+    fn prop_chunks_cover_requests_and_respect_stage_batch() {
+        // The micro-batching invariants, over random (n, b): chunks
+        // partition the request group exactly, no chunk exceeds the
+        // lowered stage batch, and b == 1 (absent batched artifacts)
+        // degrades to singletons.
+        crate::util::prop::check(
+            "batcher chunk plan",
+            300,
+            |r| (r.below(200), r.below(16) + 1),
+            |&(n, b)| {
+                if b == 0 {
+                    return Ok(()); // vacuous shrink candidate
+                }
+                let chunks = plan_chunks(n, b);
+                if chunks.iter().sum::<usize>() != n {
+                    return Err(format!("chunks {chunks:?} do not sum to {n}"));
+                }
+                if chunks.iter().any(|&c| c == 0 || c > b) {
+                    return Err(format!("chunk outside 1..={b}: {chunks:?}"));
+                }
+                if b == 1 && !chunks.iter().all(|&c| c == 1) {
+                    return Err("batch-1 fallback must produce singletons".into());
+                }
+                let (useful, executed) = plan_rows(&chunks, b);
+                if useful != n {
+                    return Err(format!("useful rows {useful} != {n}"));
+                }
+                if executed < useful {
+                    return Err(format!("executed {executed} < useful {useful}"));
+                }
+                // Padding is bounded: at most (b - 1) rows per partial
+                // chunk, and a trailing singleton never pads.
+                if b == 1 && executed != useful {
+                    return Err("batch-1 plans must execute no padding".into());
+                }
+                let waste = padding_waste(&chunks, b);
+                if !(0.0..1.0).contains(&waste) {
+                    return Err(format!("padding waste {waste} out of range"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
     fn drain_collects_up_to_max_batch() {
         let q = Queue::bounded(64);
         for i in 0..10 {

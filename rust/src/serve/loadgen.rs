@@ -9,6 +9,14 @@
 //! Both report per-request latency (p50/p95/p99), the exit distribution,
 //! accuracy against ground-truth labels, goodput under the SLO, and the
 //! request-queue depth distribution.
+//!
+//! The whole request stream is precomputed by [`arrival_schedule`] as a
+//! pure function of (mode, requests, seed, dataset size): same seed ⇒
+//! identical request indices and inter-arrival gaps, so two runs differ
+//! only in wall-clock measurements.  On a deterministic backend the
+//! deterministic half of the report (accuracy, exit distribution,
+//! completion accounting) is bit-identical across same-seed runs —
+//! `rust/tests/serve_concurrency.rs` pins this on the ref backend.
 
 use std::time::{Duration, Instant};
 
@@ -61,6 +69,40 @@ impl Default for LoadOpts {
             drain_timeout: Duration::from_secs(30),
         }
     }
+}
+
+/// One planned request: which dataset sample, and how long after the
+/// previous arrival it enters the system (0 in closed loop, where the
+/// concurrency window — not time — paces admissions).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Arrival {
+    pub index: usize,
+    pub gap_secs: f64,
+}
+
+/// The full request stream as a pure function of (mode, requests, seed,
+/// dataset size).  Open-loop gaps are Exp(rate) draws (Poisson process);
+/// closed-loop schedules carry indices only.
+pub fn arrival_schedule(
+    mode: &LoadMode,
+    requests: usize,
+    seed: u64,
+    ds_len: usize,
+) -> Vec<Arrival> {
+    let mut rng = Rng::new(seed ^ 0x10adc0de);
+    (0..requests)
+        .map(|_| {
+            let index = rng.below(ds_len.max(1));
+            let gap_secs = match mode {
+                LoadMode::Open { rate_rps } => {
+                    let u = (rng.f32() as f64).max(1e-7);
+                    -u.ln() / rate_rps.max(1e-3)
+                }
+                LoadMode::Closed { .. } => 0.0,
+            };
+            Arrival { index, gap_secs }
+        })
+        .collect()
 }
 
 /// Everything one load run measured.
@@ -191,7 +233,7 @@ pub fn run(pool: &WorkerPool, ds: &Dataset, opts: &LoadOpts) -> Result<BenchRepo
     if ds.is_empty() {
         return Err(anyhow!("load generation needs a non-empty dataset"));
     }
-    let mut rng = Rng::new(opts.seed ^ 0x10adc0de);
+    let schedule = arrival_schedule(&opts.mode, opts.requests, opts.seed, ds.len());
     let mut rec = Recorder::new();
     let mut accepted = 0usize;
     let mut rejected = 0usize;
@@ -205,24 +247,21 @@ pub fn run(pool: &WorkerPool, ds: &Dataset, opts: &LoadOpts) -> Result<BenchRepo
     let start = Instant::now();
 
     match opts.mode {
-        LoadMode::Open { rate_rps } => {
-            let rate = rate_rps.max(1e-3);
+        LoadMode::Open { .. } => {
             let mut next = Instant::now();
-            for r in 0..opts.requests {
-                let i = rng.below(ds.len());
-                let (x, _) = ds.batch(&[i]);
+            for (r, a) in schedule.iter().enumerate() {
+                let (x, _) = ds.batch(&[a.index]);
                 let now = Instant::now();
                 if next > now {
                     std::thread::sleep(next - now);
                 }
-                let job = ServeJob::new(r as u64, x, Some(ds.labels[i]));
+                let job = ServeJob::new(r as u64, x, Some(ds.labels[a.index]));
                 if pool.try_submit(job).is_ok() {
                     accepted += 1;
                 } else {
                     rejected += 1;
                 }
-                let u = (rng.f32() as f64).max(1e-7);
-                next += Duration::from_secs_f64(-u.ln() / rate);
+                next += Duration::from_secs_f64(a.gap_secs);
                 // Drain completed results opportunistically so the outcome
                 // queue stays small at high rates.
                 while let Pop::Item(o) = pool.outcomes().pop_timeout(Duration::ZERO) {
@@ -236,7 +275,7 @@ pub fn run(pool: &WorkerPool, ds: &Dataset, opts: &LoadOpts) -> Result<BenchRepo
             let mut in_flight = 0usize;
             'run: while submitted < opts.requests || in_flight > 0 {
                 while in_flight < window && submitted < opts.requests {
-                    let i = rng.below(ds.len());
+                    let i = schedule[submitted].index;
                     let (x, _) = ds.batch(&[i]);
                     let mut job = ServeJob::new(submitted as u64, x, Some(ds.labels[i]));
                     // Never block on a full queue without a timeout: if the
@@ -338,6 +377,27 @@ pub fn run(pool: &WorkerPool, ds: &Dataset, opts: &LoadOpts) -> Result<BenchRepo
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn ref_arrival_schedule_is_a_pure_function_of_the_seed() {
+        for mode in [LoadMode::Closed { concurrency: 8 }, LoadMode::Open { rate_rps: 250.0 }] {
+            let a = arrival_schedule(&mode, 200, 42, 48);
+            let b = arrival_schedule(&mode, 200, 42, 48);
+            assert_eq!(a, b, "same seed must yield an identical schedule");
+            let c = arrival_schedule(&mode, 200, 43, 48);
+            assert_ne!(a, c, "different seeds must decorrelate the stream");
+            assert!(a.iter().all(|x| x.index < 48));
+            match mode {
+                LoadMode::Closed { .. } => assert!(a.iter().all(|x| x.gap_secs == 0.0)),
+                LoadMode::Open { .. } => {
+                    assert!(a.iter().all(|x| x.gap_secs > 0.0));
+                    // Mean inter-arrival ~ 1/rate (loose 3x band).
+                    let mean = a.iter().map(|x| x.gap_secs).sum::<f64>() / a.len() as f64;
+                    assert!(mean > 1.0 / 750.0 && mean < 3.0 / 250.0, "mean gap {mean}");
+                }
+            }
+        }
+    }
 
     #[test]
     fn report_json_has_the_headline_fields() {

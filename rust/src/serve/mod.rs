@@ -168,9 +168,9 @@ impl<'e> StageRunner<'e> {
     ) -> Result<StageRunner<'e>> {
         let arch = &state.arch;
         let b1 = [
-            engine.load(arch.graph("stage1")?)?,
-            engine.load(arch.graph("stage2")?)?,
-            engine.load(arch.graph("stage3")?)?,
+            engine.load_graph(arch, "stage1")?,
+            engine.load_graph(arch, "stage2")?,
+            engine.load_graph(arch, "stage3")?,
         ];
         // Walk the declared batch ladder downward: a half-lowered batch
         // (e.g. stage1_b8 present but stage2_b8 missing from partially
@@ -230,16 +230,15 @@ impl<'e> StageRunner<'e> {
 
     fn load_batched(
         engine: &Engine,
-        arch: &ArchManifest,
+        arch: &Arc<ArchManifest>,
         batch: usize,
     ) -> Result<[Arc<Executable>; 3]> {
         let mut exes = Vec::with_capacity(3);
         for s in 1..=3u8 {
             let tag = ArchManifest::stage_graph_tag(s, batch);
-            let file = arch.graph(&tag)?;
             exes.push(
                 engine
-                    .load(file)
+                    .load_graph(arch, &tag)
                     .with_context(|| format!("loading batched stage graph `{tag}`"))?,
             );
         }
@@ -533,6 +532,72 @@ mod tests {
         let c = concat_rows(&[&a, &b]);
         assert_eq!(c.shape, vec![2, 2]);
         assert_eq!(c.data, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn prop_padding_rows_are_always_discarded() {
+        // pad-to-stage-batch then take-back-real-rows is the identity on
+        // the real rows, for any occupancy 1..=b — the padded tail never
+        // leaks into results.
+        crate::util::prop::check(
+            "pad/take roundtrip",
+            200,
+            |r| (r.below(8) + 1, r.below(8) + 1, r.below(5) + 1),
+            |&(m, extra, cols)| {
+                if m == 0 || cols == 0 {
+                    return Ok(()); // vacuous shrink candidates
+                }
+                let b = m + extra; // b >= m >= 1
+                let data: Vec<f32> = (0..m * cols).map(|i| i as f32).collect();
+                let t = Tensor::new(vec![m, cols], data.clone());
+                let padded = pad_rows(&t, b);
+                if padded.shape != vec![b, cols] {
+                    return Err(format!("pad_rows shape {:?}", padded.shape));
+                }
+                // Padding repeats the final real row.
+                for row in m..b {
+                    if padded.row(row) != t.row(m - 1) {
+                        return Err(format!("padding row {row} is not the last real row"));
+                    }
+                }
+                let back = take_rows(&padded, m);
+                if back.data != data {
+                    return Err("take_rows did not recover the real rows".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_survivor_regrouping_preserves_rows() {
+        // gather_rows over an arbitrary survivor subset reproduces each
+        // survivor's row exactly and in order — the stage-2/3 regrouping
+        // contract.
+        crate::util::prop::check(
+            "survivor gather",
+            200,
+            |r| {
+                let n = r.below(10) + 1;
+                let keep: Vec<usize> = (0..n).filter(|_| r.below(2) == 1).collect();
+                (n, keep)
+            },
+            |&(n, ref keep)| {
+                let cols = 3usize;
+                let data: Vec<f32> = (0..n * cols).map(|i| (i * 7 % 23) as f32).collect();
+                let t = Tensor::new(vec![n, cols], data);
+                let g = gather_rows(&t, keep);
+                if g.shape != vec![keep.len(), cols] {
+                    return Err(format!("gather shape {:?}", g.shape));
+                }
+                for (pos, &r0) in keep.iter().enumerate() {
+                    if g.row(pos) != t.row(r0) {
+                        return Err(format!("survivor {r0} row mangled at position {pos}"));
+                    }
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]

@@ -25,7 +25,7 @@ use super::batcher::{drain_batch, plan_chunks, plan_rows, BatchPolicy};
 use super::queue::{Queue, QueueStats};
 use super::StageRunner;
 use crate::models::ModelState;
-use crate::runtime::Engine;
+use crate::runtime::{BackendChoice, Engine};
 use crate::tensor::Tensor;
 
 /// One enqueued inference request.
@@ -67,6 +67,9 @@ pub struct PoolOpts {
     pub batch: BatchPolicy,
     /// Confidence thresholds (t1, t2) applied to every request.
     pub thresholds: (f32, f32),
+    /// Execution backend each worker engine is built on.  `Ref` ignores
+    /// `artifacts_dir` — the hermetic pool the concurrency tests run on.
+    pub backend: BackendChoice,
 }
 
 impl PoolOpts {
@@ -77,6 +80,7 @@ impl PoolOpts {
             queue_capacity: 256,
             batch: BatchPolicy::default(),
             thresholds,
+            backend: BackendChoice::Pjrt,
         }
     }
 }
@@ -252,8 +256,8 @@ fn worker_main(
         cv.notify_all();
         e
     };
-    let engine = match Engine::new(&opts.artifacts_dir)
-        .with_context(|| format!("worker {w}: creating PJRT engine"))
+    let engine = match Engine::with_backend(opts.backend, &opts.artifacts_dir)
+        .with_context(|| format!("worker {w}: creating {} engine", opts.backend.name()))
     {
         Ok(e) => e,
         Err(e) => return Err(fail(e)),

@@ -112,7 +112,7 @@ impl TeacherLogits {
 /// Initialize a fresh ModelState by running the AOT init graph (keeps rust
 /// and jax initialization identical by construction).
 pub fn init_state(engine: &Engine, arch: Arc<ArchManifest>, seed: u64) -> Result<ModelState> {
-    let exe = engine.load(arch.graph("init")?)?;
+    let exe = engine.load_graph(&arch, "init")?;
     let seed_t = Tensor::scalar(seed as f32);
     let outs = exe.run(&[&seed_t]).context("running init graph")?;
     let np = arch.num_params();
@@ -173,7 +173,7 @@ fn train_resident(
         return Ok(log);
     }
     let arch = state.arch.clone();
-    let exe = engine.load(arch.graph("train")?)?;
+    let exe = engine.load_graph(&arch, "train")?;
     let bs = arch.train_batch;
     let np = arch.num_params();
     let mut batcher = Batcher::new(ds.len(), bs, opts.seed ^ 0xbadc0de);
@@ -275,7 +275,7 @@ pub fn train_marshalled(
     opts: &TrainOpts,
 ) -> Result<TrainLog> {
     let arch = state.arch.clone();
-    let exe = engine.load(arch.graph("train")?)?;
+    let exe = engine.load_graph(&arch, "train")?;
     let bs = arch.train_batch;
     let np = arch.num_params();
     let mut batcher = Batcher::new(ds.len(), bs, opts.seed ^ 0xbadc0de);
@@ -370,7 +370,7 @@ fn eval_logits_resident(
     ds: &Dataset,
 ) -> Result<(Tensor, Tensor, Tensor)> {
     let arch = &state.arch;
-    let exe = engine.load(arch.graph("eval")?)?;
+    let exe = engine.load_graph(arch, "eval")?;
     let bs = arch.eval_batch;
     let nc = arch.num_classes;
     let n = ds.len();
@@ -432,7 +432,7 @@ pub fn eval_logits_marshalled(
     ds: &Dataset,
 ) -> Result<(Tensor, Tensor, Tensor)> {
     let arch = &state.arch;
-    let exe = engine.load(arch.graph("eval")?)?;
+    let exe = engine.load_graph(arch, "eval")?;
     let bs = arch.eval_batch;
     let nc = arch.num_classes;
     let n = ds.len();

@@ -90,6 +90,20 @@ impl<A: Shrink, B: Shrink> Shrink for (A, B) {
     }
 }
 
+impl<A: Shrink, B: Shrink, C: Shrink> Shrink for (A, B, C) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self
+            .0
+            .shrink()
+            .into_iter()
+            .map(|a| (a, self.1.clone(), self.2.clone()))
+            .collect();
+        out.extend(self.1.shrink().into_iter().map(|b| (self.0.clone(), b, self.2.clone())));
+        out.extend(self.2.shrink().into_iter().map(|c| (self.0.clone(), self.1.clone(), c)));
+        out
+    }
+}
+
 fn seed_from_name(name: &str) -> u64 {
     // FNV-1a.
     let mut h: u64 = 0xcbf29ce484222325;

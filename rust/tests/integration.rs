@@ -5,18 +5,100 @@
 //! heavyweight end-to-end scenario shares a single compiled graph set to
 //! keep XLA compile time bounded.
 
+use std::collections::BTreeMap;
 use std::path::Path;
+use std::sync::Arc;
 
 use coc::chain::{stages, Chain, StageCtx};
 use coc::data::{Dataset, DatasetKind};
 use coc::metrics::Measurement;
-use coc::models::{Accountant, Manifest, QBits};
+use coc::models::{
+    builtin_ref_manifest, Accountant, ArchManifest, LayerDesc, LayerKind, Manifest, MaskSlot,
+    QBits,
+};
 use coc::runtime::Engine;
 use coc::serve::Server;
 use coc::train::{self, TrainOpts};
 
 fn artifacts_ok() -> bool {
     Path::new("artifacts/manifest.json").exists()
+}
+
+/// Small feed-forward arch for the hermetic ref-backend suite: two convs
+/// (one pooled), a classifier, and both exit heads; batched stage graphs
+/// declared at batch 4.
+fn ref_arch() -> Arc<ArchManifest> {
+    let conv = |name: &str, cin: usize, cout: usize, hout: usize, im: i64, om: i64, seg: &str| {
+        LayerDesc {
+            name: name.into(),
+            kind: LayerKind::Conv,
+            k: 3,
+            cin,
+            cout,
+            stride: 1,
+            hout,
+            wout: hout,
+            in_mask: im,
+            out_mask: om,
+            segment: seg.into(),
+        }
+    };
+    let dense = |name: &str, cin: usize, im: i64, seg: &str| LayerDesc {
+        name: name.into(),
+        kind: LayerKind::Dense,
+        k: 1,
+        cin,
+        cout: 10,
+        stride: 1,
+        hout: 1,
+        wout: 1,
+        in_mask: im,
+        out_mask: -1,
+        segment: seg.into(),
+    };
+    let layers = vec![
+        conv("c1", 3, 8, 16, -1, 0, "seg1"),
+        conv("c2", 8, 16, 8, 0, 1, "seg2"),
+        dense("fc", 16, 1, "seg3"),
+        dense("x1", 8, 0, "exit1"),
+        dense("x2", 16, 1, "exit2"),
+    ];
+    let param_shapes = vec![
+        vec![3, 3, 3, 8],
+        vec![8],
+        vec![3, 3, 8, 16],
+        vec![16],
+        vec![16, 10],
+        vec![10],
+        vec![8, 10],
+        vec![10],
+        vec![16, 10],
+        vec![10],
+    ];
+    let mut graphs = BTreeMap::new();
+    for tag in [
+        "init", "train", "eval", "stage1", "stage2", "stage3", "stage1_b4", "stage2_b4",
+        "stage3_b4",
+    ] {
+        graphs.insert(tag.to_string(), format!("ref://itest/{tag}"));
+    }
+    Arc::new(ArchManifest {
+        name: "ref_itest".into(),
+        num_classes: 10,
+        layers,
+        mask_slots: vec![
+            MaskSlot { name: "m0".into(), channels: 8 },
+            MaskSlot { name: "m1".into(), channels: 16 },
+        ],
+        param_shapes,
+        graphs,
+        train_batch: 16,
+        eval_batch: 32,
+        stage_batch: 1,
+        stage_batches: vec![1, 4],
+        stage_h1_shape: vec![1, 16, 16, 8],
+        stage_h2_shape: vec![1, 8, 8, 16],
+    })
 }
 
 #[test]
@@ -223,4 +305,177 @@ fn distillation_produces_smaller_model() {
     );
     let acc = train::eval_accuracy(&engine, &state, &test_ds).unwrap();
     assert!(acc > 0.2, "student failed to learn: acc {acc}");
+}
+
+// ---------------------------------------------------------------------------
+// Hermetic reference-backend suite: the same end-to-end guarantees as the
+// PJRT tests above, running unconditionally (no artifacts, no self-skip).
+// ---------------------------------------------------------------------------
+
+/// init -> train -> eval -> mask equivalence -> staged-vs-full ->
+/// save/load -> chain stages -> serving, all on the ref backend.
+#[test]
+fn ref_end_to_end() {
+    let engine = Engine::new_ref().unwrap();
+    let arch = ref_arch();
+
+    let train_ds = Dataset::generate(DatasetKind::SynthC10, 256, 5, 0);
+    let test_ds = Dataset::generate(DatasetKind::SynthC10, 96, 5, 1);
+
+    // ---- init + train steps reduce the loss ----
+    let mut state = train::init_state(&engine, arch.clone(), 5).unwrap();
+    let opts = TrainOpts { steps: 120, ..Default::default() };
+    let log = train::train(&engine, &mut state, &train_ds, None, &opts).unwrap();
+    assert!(log.losses[0].is_finite());
+    let first = log.losses[..10].iter().sum::<f32>() / 10.0;
+    let last = log.losses[log.losses.len() - 10..].iter().sum::<f32>() / 10.0;
+    assert!(last < first, "loss did not decrease: {first} -> {last}");
+
+    // ---- eval produces sane logits & above-chance accuracy ----
+    let (logits, e1, e2) = train::eval_logits(&engine, &state, &test_ds).unwrap();
+    assert_eq!(logits.shape, vec![96, 10]);
+    assert_eq!(e1.shape, vec![96, 10]);
+    assert_eq!(e2.shape, vec![96, 10]);
+    let acc = train::eval_accuracy(&engine, &state, &test_ds).unwrap();
+    assert!(acc > 0.15, "accuracy {acc} not above chance");
+
+    // ---- mask equivalence: dead channels are *exactly* invisible ----
+    let mut masked = state.clone();
+    for c in 0..4 {
+        masked.masks[0].data[c] = 0.0;
+    }
+    let (ml, _, _) = train::eval_logits(&engine, &masked, &test_ds).unwrap();
+    let mut perturbed = masked.clone();
+    let li = arch.layers.iter().position(|l| l.out_mask == 0).unwrap();
+    let w = &mut perturbed.params[arch.weight_index(li)];
+    let c_out = *w.shape.last().unwrap();
+    for (i, v) in w.data.iter_mut().enumerate() {
+        if i % c_out < 4 {
+            *v += 5.0;
+        }
+    }
+    let (pl, _, _) = train::eval_logits(&engine, &perturbed, &test_ds).unwrap();
+    assert_eq!(ml.data, pl.data, "masked channels leak on the ref backend");
+
+    // ---- staged graphs reproduce the full eval bit-identically ----
+    let server = Server::new(&engine, state.clone()).unwrap();
+    let (x, _) = test_ds.batch(&[0]);
+    let (pred, stage) = server.infer(&x, 1.01, 1.01).unwrap();
+    assert_eq!(stage, 3);
+    assert_eq!(pred, logits.argmax_rows()[0], "staged main prediction differs from full eval");
+    let (pred1, stage1) = server.infer(&x, 0.0, 0.0).unwrap();
+    assert_eq!(stage1, 1);
+    assert_eq!(pred1, e1.argmax_rows()[0]);
+
+    // ---- save / load round-trip preserves behaviour exactly ----
+    let tmp = std::env::temp_dir().join(format!("coc_ref_it_{}.state", std::process::id()));
+    state.save(&tmp).unwrap();
+    let loaded = coc::models::ModelState::load(&tmp, arch.clone()).unwrap();
+    std::fs::remove_file(&tmp).ok();
+    let (ll, _, _) = train::eval_logits(&engine, &loaded, &test_ds).unwrap();
+    assert_eq!(ll.data, logits.data);
+
+    // ---- chain stages: P then Q strictly increase BitOpsCR ----
+    let ctx = StageCtx {
+        engine: &engine,
+        train: &train_ds,
+        test: &test_ds,
+        base_steps: 16,
+        seed: 5,
+        verbose: false,
+    };
+    let m0 = Measurement::take(&engine, &state, &test_ds).unwrap();
+    let chain = Chain::new()
+        .push(Box::new(stages::Prune { ratio: 0.3, ..Default::default() }))
+        .push(Box::new(stages::Quantize { bits_w: 4.0, bits_a: 8.0, ..Default::default() }));
+    let reports = chain.run(&mut state, &ctx).unwrap();
+    assert_eq!(reports.len(), 2);
+    assert!(reports[0].measurement.bitops_cr > m0.bitops_cr);
+    assert!(reports[1].measurement.bitops_cr > reports[0].measurement.bitops_cr * 5.0);
+    assert_eq!(state.qbits, QBits { weight: 4.0, act: 8.0 });
+    assert!(state.keep_fraction() < 0.75);
+
+    let acct = Accountant::new(&state);
+    assert!(acct.bitops_cr() > 10.0 && acct.bitops_cr() < 5000.0);
+    assert!(acct.storage_cr() > 4.0);
+
+    // ---- early exit stage + serving with real skipping ----
+    let chain = Chain::new().push(Box::new(stages::EarlyExit {
+        threshold: 0.5,
+        ..Default::default()
+    }));
+    chain.run(&mut state, &ctx).unwrap();
+    assert!(state.exits.trained);
+    let server = Server::new(&engine, state).unwrap();
+    let rep = server.serve_dataset(&test_ds, 32, 0.5, 0.5).unwrap();
+    assert_eq!(rep.requests, 32);
+    assert!(rep.p_exit1 + rep.p_exit2 <= 1.0 + 1e-9);
+    assert!(rep.latency_us.len() == 32);
+    assert!(rep.throughput_rps > 0.0);
+
+    // runtime stats accumulated (executions; no transfer bytes — the ref
+    // backend has no device boundary to cross).
+    let st = engine.stats();
+    assert!(st.executions > 100);
+    assert!(st.execute_ns > 0);
+    assert_eq!(st.bytes_uploaded, 0);
+    assert_eq!(st.bytes_downloaded, 0);
+}
+
+/// Two identical runs — init, train (plain + KD), eval — must be
+/// bit-identical: the determinism contract the plan cache and the CI
+/// suites ride on.
+#[test]
+fn ref_training_is_bit_deterministic() {
+    let arch = ref_arch();
+    let ds = Dataset::generate(DatasetKind::SynthC10, 64, 9, 0);
+    let run = || {
+        let engine = Engine::new_ref().unwrap();
+        let mut st = train::init_state(&engine, arch.clone(), 9).unwrap();
+        let opts = TrainOpts { steps: 10, seed: 9, ..Default::default() };
+        let log = train::train(&engine, &mut st, &ds, None, &opts).unwrap();
+        let teacher = train::teacher_logits(&engine, &st, &ds).unwrap();
+        let kd_opts = TrainOpts { steps: 4, seed: 10, kd_alpha: 0.5, ..Default::default() };
+        train::train(&engine, &mut st, &ds, Some(&teacher), &kd_opts).unwrap();
+        let (logits, e1, e2) = train::eval_logits(&engine, &st, &ds).unwrap();
+        (st.params, st.momenta, log.losses, logits, e1, e2)
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.0, b.0, "params diverged across identical runs");
+    assert_eq!(a.1, b.1, "momenta diverged across identical runs");
+    assert_eq!(a.2, b.2, "losses diverged across identical runs");
+    assert_eq!(a.3, b.3, "logits diverged across identical runs");
+    assert_eq!(a.4, b.4);
+    assert_eq!(a.5, b.5);
+}
+
+/// The built-in mini_vgg manifest drives the ref backend end to end (the
+/// `--backend ref` CLI path with no artifacts directory at all).
+#[test]
+fn ref_builtin_manifest_serves_mini_vgg() {
+    let m = builtin_ref_manifest();
+    assert_eq!(m.num_classes, 20);
+    let arch = m.arch("mini_vgg").unwrap();
+    let engine = Engine::new_ref().unwrap();
+    let state = train::init_state(&engine, arch.clone(), 3).unwrap();
+    assert_eq!(state.params.len(), arch.num_params());
+
+    // Eval on a ragged dataset (eval batch 64, 70 samples).
+    let ds = Dataset::generate(DatasetKind::SynthC10, 70, 3, 1);
+    let (logits, e1, e2) = train::eval_logits(&engine, &state, &ds).unwrap();
+    assert_eq!(logits.shape, vec![70, 20]);
+    assert_eq!(e1.shape, vec![70, 20]);
+    assert_eq!(e2.shape, vec![70, 20]);
+
+    // Staged serving agrees with the full eval (micro-batched at b8).
+    let server = Server::with_batching(&engine, state, 8).unwrap();
+    assert_eq!(server.runner().stage_batch(), 8);
+    let xs: Vec<_> = (0..6).map(|i| ds.batch(&[i]).0).collect();
+    let x_refs: Vec<_> = xs.iter().collect();
+    let preds = server.infer_batch(&x_refs, 1.01, 1.01).unwrap();
+    for (i, (pred, stage)) in preds.iter().enumerate() {
+        assert_eq!(*stage, 3);
+        assert_eq!(*pred, logits.argmax_rows()[i], "request {i} diverged from eval");
+    }
 }

@@ -15,7 +15,7 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use coc::chain::plan::{ExecOpts, NodeRunner, PjrtRunner, PlanKey, Planner};
+use coc::chain::plan::{EngineRunner, ExecOpts, NodeRunner, PlanKey, Planner};
 use coc::chain::{stages, Chain, CompressionStage};
 use coc::data::{Dataset, DatasetKind};
 use coc::metrics::Measurement;
@@ -309,11 +309,11 @@ fn pjrt_cached_equivalence_smoke() {
         );
         plan
     };
-    let runner = PjrtRunner::new(&engine, &train_ds, &test_ds, 6, 9, false);
+    let runner = EngineRunner::new(&engine, &train_ds, &test_ds, 6, 9, false);
     // Match instead of `?` so the closure's error type is inferable
     // before it meets `execute`'s generic bound.
     let factory = || match Engine::new("artifacts") {
-        Ok(e) => Ok(PjrtRunner::new(e, &train_ds, &test_ds, 6, 9, false)),
+        Ok(e) => Ok(EngineRunner::new(e, &train_ds, &test_ds, 6, 9, false)),
         Err(e) => Err(e),
     };
     let cache = tmp_dir("cache_pjrt");
@@ -332,4 +332,196 @@ fn pjrt_cached_equivalence_smoke() {
     // the freshly computed ones, through real training + PJRT eval.
     assert_eq!(cold.points, warm.points);
     std::fs::remove_dir_all(&cache).ok();
+}
+
+// ---------------------------------------------------------------------------
+// Hermetic reference-backend suite: the same cached/uncached/parallel
+// equivalence guarantee through REAL stages (train + eval) on the ref
+// backend — runs unconditionally, no artifacts, no self-skip.
+// ---------------------------------------------------------------------------
+
+/// Tiny feed-forward arch the ref plan tests train for real.
+fn ref_plan_arch() -> Arc<ArchManifest> {
+    let layers = vec![
+        LayerDesc {
+            name: "c1".into(),
+            kind: LayerKind::Conv,
+            k: 3,
+            cin: 3,
+            cout: 6,
+            stride: 1,
+            hout: 8,
+            wout: 8,
+            in_mask: -1,
+            out_mask: 0,
+            segment: "seg1".into(),
+        },
+        LayerDesc {
+            name: "fc".into(),
+            kind: LayerKind::Dense,
+            k: 1,
+            cin: 6,
+            cout: 10,
+            stride: 1,
+            hout: 1,
+            wout: 1,
+            in_mask: 0,
+            out_mask: -1,
+            segment: "seg3".into(),
+        },
+    ];
+    let mut graphs = BTreeMap::new();
+    for tag in ["init", "train", "eval", "stage1", "stage2", "stage3"] {
+        graphs.insert(tag.to_string(), format!("ref://ptest/{tag}"));
+    }
+    Arc::new(ArchManifest {
+        name: "ref_ptest".into(),
+        num_classes: 10,
+        layers,
+        mask_slots: vec![MaskSlot { name: "m0".into(), channels: 6 }],
+        param_shapes: vec![vec![3, 3, 3, 6], vec![6], vec![6, 10], vec![10]],
+        graphs,
+        train_batch: 8,
+        eval_batch: 16,
+        stage_batch: 1,
+        stage_batches: vec![1],
+        stage_h1_shape: vec![1, 8, 8, 6],
+        stage_h2_shape: vec![1, 8, 8, 6],
+    })
+}
+
+fn ref_plan_key() -> PlanKey {
+    PlanKey {
+        arch: "ref_ptest".into(),
+        dataset: "c10".into(),
+        scale: "test".into(),
+        base_steps: 6,
+        seed: 9,
+    }
+}
+
+fn ref_plan() -> Planner {
+    let mut plan = Planner::new(ref_plan_key());
+    let p = || Box::new(stages::Prune { ratio: 0.4, ..Default::default() });
+    plan.submit(Chain::new().push(p()), "P", "rung0");
+    plan.submit(
+        Chain::new().push(p()).push(Box::new(stages::Quantize {
+            bits_w: 2.0,
+            bits_a: 8.0,
+            ..Default::default()
+        })),
+        "PQ",
+        "rung0",
+    );
+    plan
+}
+
+/// Cold-vs-warm bit-identity through real train/eval on the ref backend,
+/// plus the acceptance-criterion determinism pin: two independent cold
+/// runs publish byte-identical cache files (states AND measurements).
+#[test]
+fn ref_cached_equivalence_end_to_end() {
+    let engine = Engine::new_ref().unwrap();
+    let arch = ref_plan_arch();
+    let train_ds = Dataset::generate(DatasetKind::SynthC10, 64, 9, 0);
+    let test_ds = Dataset::generate(DatasetKind::SynthC10, 32, 9, 1);
+    let mut base = train::init_state(&engine, arch, 9).unwrap();
+    train::train(
+        &engine,
+        &mut base,
+        &train_ds,
+        None,
+        &TrainOpts { steps: 8, seed: 9, ..Default::default() },
+    )
+    .unwrap();
+
+    let runner = EngineRunner::new(&engine, &train_ds, &test_ds, 6, 9, false);
+    let factory = || match Engine::new_ref() {
+        Ok(e) => Ok(EngineRunner::new(e, &train_ds, &test_ds, 6, 9, false)),
+        Err(e) => Err(e),
+    };
+    let plan = ref_plan();
+    assert_eq!(plan.unique_nodes(), 2, "PQ rides on the P node");
+
+    let cache_a = tmp_dir("ref_cold_a");
+    let opts_a = ExecOpts { jobs: 1, cache_dir: Some(cache_a.clone()), ..Default::default() };
+    let cold = plan.execute(&base, &runner, &opts_a, &factory).unwrap();
+    assert_eq!(cold.stats.executed, 2);
+    assert_eq!(cold.stats.cache_hits, 0);
+
+    // Warm replay: zero executions, bit-identical points and states.
+    let warm = plan.execute(&base, &runner, &opts_a, &factory).unwrap();
+    assert_eq!(warm.stats.cache_hits, 2);
+    assert_eq!(warm.stats.executed, 0);
+    assert_eq!(cold.points, warm.points);
+    for (a, b) in cold.outcomes.iter().zip(&warm.outcomes) {
+        assert_eq!(a.reports, b.reports);
+        assert_eq!(a.final_state.params, b.final_state.params);
+        assert_eq!(a.final_state.masks, b.final_state.masks);
+        assert_eq!(a.final_state.qbits, b.final_state.qbits);
+    }
+
+    // A second cold run into a fresh cache dir must publish byte-identical
+    // files: training, eval, snapshot serialization — all deterministic.
+    let cache_b = tmp_dir("ref_cold_b");
+    let opts_b = ExecOpts { jobs: 1, cache_dir: Some(cache_b.clone()), ..Default::default() };
+    let cold2 = plan.execute(&base, &runner, &opts_b, &factory).unwrap();
+    assert_eq!(cold2.points, cold.points);
+    let mut files_a: Vec<_> = std::fs::read_dir(&cache_a)
+        .unwrap()
+        .map(|e| e.unwrap().file_name().into_string().unwrap())
+        .collect();
+    files_a.sort();
+    let mut files_b: Vec<_> = std::fs::read_dir(&cache_b)
+        .unwrap()
+        .map(|e| e.unwrap().file_name().into_string().unwrap())
+        .collect();
+    files_b.sort();
+    assert_eq!(files_a, files_b, "cache file sets differ between cold runs");
+    assert!(files_a.iter().any(|f| f.ends_with(".state")));
+    assert!(files_a.iter().any(|f| f.ends_with(".meas.json")));
+    for f in &files_a {
+        let a = std::fs::read(cache_a.join(f)).unwrap();
+        let b = std::fs::read(cache_b.join(f)).unwrap();
+        assert_eq!(a, b, "cache file `{f}` differs between two cold runs");
+    }
+    std::fs::remove_dir_all(&cache_a).ok();
+    std::fs::remove_dir_all(&cache_b).ok();
+}
+
+/// Parallel execution over per-worker ref engines equals the serial run
+/// bit-for-bit — real stages, real training, independent branches.
+#[test]
+fn ref_parallel_plan_matches_serial() {
+    let engine = Engine::new_ref().unwrap();
+    let arch = ref_plan_arch();
+    let train_ds = Dataset::generate(DatasetKind::SynthC10, 64, 11, 0);
+    let test_ds = Dataset::generate(DatasetKind::SynthC10, 32, 11, 1);
+    let base = train::init_state(&engine, arch, 11).unwrap();
+
+    let mut plan = Planner::new(ref_plan_key());
+    for (i, ratio) in [0.3f32, 0.5].iter().enumerate() {
+        let first = Box::new(stages::Prune { ratio: *ratio, ..Default::default() });
+        plan.submit(Chain::new().push(first), &format!("P{i}"), "x");
+        let first = Box::new(stages::Prune { ratio: *ratio, ..Default::default() });
+        let second =
+            Box::new(stages::Quantize { bits_w: 2.0, bits_a: 8.0, ..Default::default() });
+        plan.submit(Chain::new().push(first).push(second), &format!("P{i}Q"), "x");
+    }
+    assert_eq!(plan.unique_nodes(), 4);
+
+    let runner = EngineRunner::new(&engine, &train_ds, &test_ds, 6, 11, false);
+    let factory = || match Engine::new_ref() {
+        Ok(e) => Ok(EngineRunner::new(e, &train_ds, &test_ds, 6, 11, false)),
+        Err(e) => Err(e),
+    };
+    let serial_opts = ExecOpts { jobs: 1, ..Default::default() };
+    let serial = plan.execute(&base, &runner, &serial_opts, &factory).unwrap();
+    let par_opts = ExecOpts { jobs: 2, ..Default::default() };
+    let parallel = plan.execute(&base, &runner, &par_opts, &factory).unwrap();
+    assert_eq!(serial.points, parallel.points, "parallel ref execution diverged from serial");
+    for (a, b) in serial.outcomes.iter().zip(&parallel.outcomes) {
+        assert_eq!(a.final_state.params, b.final_state.params);
+        assert_eq!(a.final_state.qbits, b.final_state.qbits);
+    }
 }

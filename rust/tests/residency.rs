@@ -184,3 +184,199 @@ fn serve_resident_prefix_matches_literal_transport() {
         }
     }
 }
+
+// ---------------------------------------------------------------------------
+// Hermetic reference-backend suite: the ref backend has no device, so the
+// resident entry points must degrade to the literal transport and match
+// it bit-for-bit.  These run unconditionally (no artifacts, no self-skip).
+// ---------------------------------------------------------------------------
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use coc::models::{ArchManifest, LayerDesc, LayerKind, MaskSlot};
+use coc::train::TrainOpts as RefTrainOpts;
+
+/// Tiny feed-forward arch for the hermetic transport tests.
+fn ref_arch() -> Arc<ArchManifest> {
+    let layers = vec![
+        LayerDesc {
+            name: "c1".into(),
+            kind: LayerKind::Conv,
+            k: 3,
+            cin: 3,
+            cout: 8,
+            stride: 1,
+            hout: 8,
+            wout: 8,
+            in_mask: -1,
+            out_mask: 0,
+            segment: "seg1".into(),
+        },
+        LayerDesc {
+            name: "fc".into(),
+            kind: LayerKind::Dense,
+            k: 1,
+            cin: 8,
+            cout: 10,
+            stride: 1,
+            hout: 1,
+            wout: 1,
+            in_mask: 0,
+            out_mask: -1,
+            segment: "seg3".into(),
+        },
+        LayerDesc {
+            name: "x1".into(),
+            kind: LayerKind::Dense,
+            k: 1,
+            cin: 8,
+            cout: 10,
+            stride: 1,
+            hout: 1,
+            wout: 1,
+            in_mask: 0,
+            out_mask: -1,
+            segment: "exit1".into(),
+        },
+    ];
+    let mut graphs = BTreeMap::new();
+    for tag in ["init", "train", "eval", "stage1", "stage2", "stage3"] {
+        graphs.insert(tag.to_string(), format!("ref://rtest/{tag}"));
+    }
+    Arc::new(ArchManifest {
+        name: "ref_rtest".into(),
+        num_classes: 10,
+        layers,
+        mask_slots: vec![MaskSlot { name: "m0".into(), channels: 8 }],
+        param_shapes: vec![
+            vec![3, 3, 3, 8],
+            vec![8],
+            vec![8, 10],
+            vec![10],
+            vec![8, 10],
+            vec![10],
+        ],
+        graphs,
+        train_batch: 8,
+        eval_batch: 16,
+        stage_batch: 1,
+        stage_batches: vec![1],
+        stage_h1_shape: vec![1, 8, 8, 8],
+        stage_h2_shape: vec![1, 8, 8, 8],
+    })
+}
+
+#[test]
+fn ref_train_entrypoints_bit_identical() {
+    // `train` (which attempts the resident transport, sees
+    // ResidencyUnsupported, and falls back) must equal a direct
+    // `train_marshalled` call exactly.
+    let engine = Engine::new_ref().unwrap();
+    let arch = ref_arch();
+    let ds = Dataset::generate(DatasetKind::SynthC10, 64, 13, 0);
+    let opts = RefTrainOpts { steps: 8, seed: 13, ..Default::default() };
+
+    let base = train::init_state(&engine, arch.clone(), 13).unwrap();
+    let mut via_fallback = base.clone();
+    let log_f = train::train(&engine, &mut via_fallback, &ds, None, &opts).unwrap();
+    let mut direct = base.clone();
+    let log_d = train::train_marshalled(&engine, &mut direct, &ds, None, &opts).unwrap();
+
+    assert_eq!(log_f.losses, log_d.losses, "per-step losses diverged");
+    assert_eq!(log_f.accs, log_d.accs, "per-step accuracies diverged");
+    assert_eq!(via_fallback.params, direct.params, "trained params diverged");
+    assert_eq!(via_fallback.momenta, direct.momenta, "trained momenta diverged");
+
+    // And the KD path (per-step teacher-row stream).
+    let teacher = train::teacher_logits(&engine, &direct, &ds).unwrap();
+    let kd = RefTrainOpts { steps: 4, seed: 14, kd_alpha: 0.5, ..Default::default() };
+    let mut a = direct.clone();
+    train::train(&engine, &mut a, &ds, Some(&teacher), &kd).unwrap();
+    let mut b = direct.clone();
+    train::train_marshalled(&engine, &mut b, &ds, Some(&teacher), &kd).unwrap();
+    assert_eq!(a.params, b.params);
+    assert_eq!(a.momenta, b.momenta);
+}
+
+#[test]
+fn ref_eval_entrypoints_bit_identical() {
+    let engine = Engine::new_ref().unwrap();
+    let arch = ref_arch();
+    // A ragged size so the padded final batch goes through both paths.
+    let eval_batch = arch.eval_batch;
+    let ds = Dataset::generate(DatasetKind::SynthC10, eval_batch + eval_batch / 2 + 1, 19, 1);
+    let state = train::init_state(&engine, arch, 19).unwrap();
+
+    let (m_f, e1_f, e2_f) = train::eval_logits(&engine, &state, &ds).unwrap();
+    let (m_d, e1_d, e2_d) = train::eval_logits_marshalled(&engine, &state, &ds).unwrap();
+    assert_eq!(m_f, m_d, "main logits diverged");
+    assert_eq!(e1_f, e1_d, "exit1 logits diverged");
+    assert_eq!(e2_f, e2_d, "exit2 logits diverged");
+}
+
+#[test]
+fn ref_ragged_final_batch_padding_is_dropped() {
+    let engine = Engine::new_ref().unwrap();
+    let arch = ref_arch();
+    let bs = arch.eval_batch;
+    let nc = arch.num_classes;
+    // Generators are pure per (kind, seed, index) and sequential, so the
+    // ragged dataset is an exact prefix of the batch-aligned one.
+    let n = bs + bs / 2 + 3;
+    let ds_ragged = Dataset::generate(DatasetKind::SynthC10, n, 21, 1);
+    let ds_aligned = Dataset::generate(DatasetKind::SynthC10, 2 * bs, 21, 1);
+    let spl = ds_ragged.images.len() / n;
+    assert_eq!(
+        ds_ragged.images.data[..],
+        ds_aligned.images.data[..n * spl],
+        "generator prefix property violated — padding comparison would be meaningless"
+    );
+    assert_eq!(&ds_ragged.labels[..], &ds_aligned.labels[..n]);
+
+    let state = train::init_state(&engine, arch, 21).unwrap();
+    let (m_ragged, e1_ragged, _) = train::eval_logits(&engine, &state, &ds_ragged).unwrap();
+    let (m_aligned, e1_aligned, _) = train::eval_logits(&engine, &state, &ds_aligned).unwrap();
+
+    assert_eq!(m_ragged.shape, vec![n, nc]);
+    assert_eq!(m_ragged.data[..], m_aligned.data[..n * nc], "padding leaked into main logits");
+    assert_eq!(e1_ragged.data[..], e1_aligned.data[..n * nc], "padding leaked into exit1 logits");
+
+    let acc_ragged = train::accuracy_of(&m_ragged, &ds_ragged.labels);
+    let first_n = coc::tensor::Tensor::new(vec![n, nc], m_aligned.data[..n * nc].to_vec());
+    let acc_ref = train::accuracy_of(&first_n, &ds_aligned.labels[..n]);
+    assert_eq!(acc_ragged, acc_ref, "ragged-batch accuracy diverged from unpadded reference");
+}
+
+#[test]
+fn ref_serve_has_no_residency_and_transports_agree() {
+    let engine = Engine::new_ref().unwrap();
+    let arch = ref_arch();
+    let ds = Dataset::generate(DatasetKind::SynthC10, 12, 23, 1);
+    let mut state = train::init_state(&engine, arch, 23).unwrap();
+    train::train(
+        &engine,
+        &mut state,
+        &ds,
+        None,
+        &RefTrainOpts { steps: 4, seed: 23, ..Default::default() },
+    )
+    .unwrap();
+
+    let a = Server::new(&engine, state.clone()).unwrap();
+    // The ref backend reports ResidencyUnsupported at upload, so the
+    // runner must come up on the literal transport from the start.
+    assert!(!a.runner().residency_active(), "ref backend must have no resident prefix");
+    let b = Server::new(&engine, state).unwrap();
+    b.runner().disable_residency();
+    for (t1, t2) in [(0.0f32, 0.0f32), (0.6, 0.6), (1.01, 1.01)] {
+        for i in 0..ds.len() {
+            let (x, _) = ds.batch(&[i]);
+            assert_eq!(
+                a.infer(&x, t1, t2).unwrap(),
+                b.infer(&x, t1, t2).unwrap(),
+                "prediction diverged at thresholds ({t1}, {t2})"
+            );
+        }
+    }
+}

@@ -237,3 +237,262 @@ fn loadgen_accounting_consistent() {
     let parsed = coc::util::json::Json::parse(&j.to_string()).unwrap();
     assert_eq!(parsed.req("completed").unwrap().as_usize(), Some(rep.completed));
 }
+
+// ---------------------------------------------------------------------------
+// Hermetic reference-backend suite: the worker pool, micro-batcher, and
+// load generator over ref engines.  Runs unconditionally (no artifacts).
+// ---------------------------------------------------------------------------
+
+use std::collections::BTreeMap;
+
+use coc::models::{ArchManifest, LayerDesc, LayerKind, MaskSlot};
+use coc::runtime::BackendChoice;
+use coc::serve::loadgen::LoadOpts as RefLoadOpts;
+use coc::tensor::Tensor;
+use coc::train::TrainOpts;
+
+/// Feed-forward arch with both exit heads and batched stage graphs at
+/// batch 4.  `with_b4` controls whether the *full* batch-4 ladder is
+/// declared (dropping stage2_b4 exercises the partial-artifact fallback).
+fn ref_arch(with_full_b4: bool) -> Arc<ArchManifest> {
+    let conv = |name: &str, cin: usize, cout: usize, hout: usize, im: i64, om: i64, seg: &str| {
+        LayerDesc {
+            name: name.into(),
+            kind: LayerKind::Conv,
+            k: 3,
+            cin,
+            cout,
+            stride: 1,
+            hout,
+            wout: hout,
+            in_mask: im,
+            out_mask: om,
+            segment: seg.into(),
+        }
+    };
+    let dense = |name: &str, cin: usize, seg: &str| LayerDesc {
+        name: name.into(),
+        kind: LayerKind::Dense,
+        k: 1,
+        cin,
+        cout: 10,
+        stride: 1,
+        hout: 1,
+        wout: 1,
+        in_mask: -1,
+        out_mask: -1,
+        segment: seg.into(),
+    };
+    let layers = vec![
+        conv("c1", 3, 8, 8, -1, 0, "seg1"),
+        conv("c2", 8, 12, 8, 0, 1, "seg2"),
+        dense("fc", 12, "seg3"),
+        dense("x1", 8, "exit1"),
+        dense("x2", 12, "exit2"),
+    ];
+    let mut graphs = BTreeMap::new();
+    let mut tags = vec![
+        "init", "train", "eval", "stage1", "stage2", "stage3", "stage1_b4", "stage3_b4",
+    ];
+    if with_full_b4 {
+        tags.push("stage2_b4");
+    }
+    for tag in tags {
+        graphs.insert(tag.to_string(), format!("ref://stest/{tag}"));
+    }
+    Arc::new(ArchManifest {
+        name: "ref_stest".into(),
+        num_classes: 10,
+        layers,
+        mask_slots: vec![
+            MaskSlot { name: "m0".into(), channels: 8 },
+            MaskSlot { name: "m1".into(), channels: 12 },
+        ],
+        param_shapes: vec![
+            vec![3, 3, 3, 8],
+            vec![8],
+            vec![3, 3, 8, 12],
+            vec![12],
+            vec![12, 10],
+            vec![10],
+            vec![8, 10],
+            vec![10],
+            vec![12, 10],
+            vec![10],
+        ],
+        graphs,
+        train_batch: 8,
+        eval_batch: 16,
+        stage_batch: 1,
+        stage_batches: vec![1, 4],
+        stage_h1_shape: vec![1, 8, 8, 8],
+        stage_h2_shape: vec![1, 8, 8, 12],
+    })
+}
+
+/// A lightly trained fp32 state (fp32 keeps per-row results independent
+/// of batch grouping, so pooled and sequential serving match exactly).
+fn ref_state(engine: &Engine, arch: Arc<ArchManifest>, ds: &Dataset, seed: u64) -> ModelState {
+    let mut state = coc::train::init_state(engine, arch, seed).unwrap();
+    coc::train::train(
+        engine,
+        &mut state,
+        ds,
+        None,
+        &TrainOpts { steps: 6, seed, ..Default::default() },
+    )
+    .unwrap();
+    state.exits.trained = true;
+    state.exits.thresholds = Some((0.5, 0.5));
+    state
+}
+
+/// The headline pool test, hermetic: >= 2 concurrent ref workers must
+/// reproduce the sequential server's per-request results **exactly** —
+/// the ref backend is deterministic and batch-independent at fp32, so
+/// unlike the PJRT variant above no vectorization flips are tolerated.
+#[test]
+fn ref_two_workers_match_sequential() {
+    let arch = ref_arch(true);
+    let train_ds = Dataset::generate(DatasetKind::SynthC10, 48, 31, 0);
+    let test_ds = Dataset::generate(DatasetKind::SynthC10, 40, 31, 1);
+    let engine = Engine::new_ref().unwrap();
+    let state = ref_state(&engine, arch, &train_ds, 31);
+
+    let t = 0.5f32;
+    let server = Server::new(&engine, state.clone()).unwrap();
+    let mut want = Vec::new();
+    for i in 0..test_ds.len() {
+        let (x, _) = test_ds.batch(&[i]);
+        want.push(server.infer(&x, t, t).unwrap());
+    }
+
+    let mut opts = PoolOpts::new("unused-by-ref-backend", 2, (t, t));
+    opts.backend = BackendChoice::Ref;
+    opts.batch = BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) };
+    let pool = WorkerPool::start(Arc::new(state), opts);
+    let up = pool.wait_ready(Duration::from_secs(60)).unwrap();
+    assert_eq!(up, 2, "both ref workers must come up");
+
+    for i in 0..test_ds.len() {
+        let (x, _) = test_ds.batch(&[i]);
+        pool.submit(ServeJob::new(i as u64, x, Some(test_ds.labels[i]))).unwrap();
+    }
+    let mut got: Vec<Option<(usize, u8)>> = vec![None; test_ds.len()];
+    for _ in 0..test_ds.len() {
+        let o = pool.outcomes().pop().expect("pool dropped a request");
+        got[o.id as usize] = Some((o.pred, o.stage));
+    }
+    let outcome = pool.shutdown();
+    assert!(outcome.errors.is_empty(), "worker errors: {:?}", outcome.errors);
+    assert_eq!(outcome.stats.len(), 2);
+    let processed: u64 = outcome.stats.iter().map(|w| w.processed).sum();
+    assert_eq!(processed, test_ds.len() as u64);
+    for w in &outcome.stats {
+        assert_eq!(w.stage_batch, 4, "batched ref stage graphs must be used");
+        assert_eq!(w.bytes_uploaded, 0, "ref backend crosses no host/device boundary");
+    }
+    for (i, w) in want.iter().enumerate() {
+        assert_eq!(
+            got[i].expect("request never completed"),
+            *w,
+            "request {i} diverged under concurrency"
+        );
+    }
+}
+
+/// Property: for any request-group size and thresholds, micro-batched
+/// serving equals per-request serving exactly — padding rows are
+/// discarded and survivors regrouped correctly at every stage.
+#[test]
+fn ref_batched_serving_matches_single_requests_prop() {
+    let arch = ref_arch(true);
+    let ds = Dataset::generate(DatasetKind::SynthC10, 32, 37, 0);
+    let engine = Engine::new_ref().unwrap();
+    let state = ref_state(&engine, arch, &ds, 37);
+    let server = Server::with_batching(&engine, state, 4).unwrap();
+    assert_eq!(server.runner().stage_batch(), 4);
+    let xs: Vec<Tensor> = (0..ds.len()).map(|i| ds.batch(&[i]).0).collect();
+
+    coc::util::prop::check(
+        "micro-batched == sequential serving",
+        40,
+        |r| (r.below(11), r.below(4), r.below(4)),
+        |&(n, t1i, t2i)| {
+            let grid = [0.0f32, 0.3, 0.6, 1.01];
+            let (t1, t2) = (grid[t1i.min(3)], grid[t2i.min(3)]);
+            let group: Vec<&Tensor> = xs.iter().take(n).collect();
+            let batched = server.infer_batch(&group, t1, t2).map_err(|e| format!("{e:#}"))?;
+            for (i, x) in group.iter().enumerate() {
+                let single = server.infer(x, t1, t2).map_err(|e| format!("{e:#}"))?;
+                if batched[i] != single {
+                    return Err(format!(
+                        "request {i}/{n} at ({t1}, {t2}): batched {:?} != single {:?}",
+                        batched[i], single
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// A partially declared batch ladder (stage2_b4 missing) must fall back
+/// to batch-1 serving rather than fail — on the ref backend exactly as on
+/// partially regenerated artifacts.
+#[test]
+fn ref_partial_batch_ladder_falls_back_to_batch1() {
+    let arch = ref_arch(false);
+    let ds = Dataset::generate(DatasetKind::SynthC10, 16, 41, 0);
+    let engine = Engine::new_ref().unwrap();
+    let state = ref_state(&engine, arch, &ds, 41);
+    let server = Server::with_batching(&engine, state, 4).unwrap();
+    assert_eq!(server.runner().stage_batch(), 1, "partial ladder must degrade to batch 1");
+    let xs: Vec<Tensor> = (0..6).map(|i| ds.batch(&[i]).0).collect();
+    let refs: Vec<&Tensor> = xs.iter().collect();
+    let batch = server.infer_batch(&refs, 0.5, 0.5).unwrap();
+    for (i, x) in xs.iter().enumerate() {
+        assert_eq!(batch[i], server.infer(x, 0.5, 0.5).unwrap());
+    }
+}
+
+/// Same seed ⇒ identical arrival schedule, and on the deterministic ref
+/// backend the deterministic half of the closed-loop report (accuracy,
+/// exit distribution, completion accounting) is identical across runs;
+/// wall-clock percentiles are checked for shape, not value.
+#[test]
+fn ref_loadgen_same_seed_same_schedule_and_report() {
+    let arch = ref_arch(true);
+    let train_ds = Dataset::generate(DatasetKind::SynthC10, 48, 43, 0);
+    let test_ds = Dataset::generate(DatasetKind::SynthC10, 32, 43, 1);
+    let engine = Engine::new_ref().unwrap();
+    let state = ref_state(&engine, arch, &train_ds, 43);
+
+    let mut opts = PoolOpts::new("unused-by-ref-backend", 2, (0.5, 0.5));
+    opts.backend = BackendChoice::Ref;
+    let pool = WorkerPool::start(Arc::new(state), opts);
+    pool.wait_ready(Duration::from_secs(60)).unwrap();
+
+    let load = RefLoadOpts {
+        mode: LoadMode::Closed { concurrency: 6 },
+        requests: 64,
+        seed: 7,
+        ..Default::default()
+    };
+    let a = loadgen::run(&pool, &test_ds, &load).unwrap();
+    let b = loadgen::run(&pool, &test_ds, &load).unwrap();
+    pool.shutdown();
+
+    for rep in [&a, &b] {
+        assert_eq!(rep.offered, 64);
+        assert_eq!(rep.completed + rep.lost, rep.accepted);
+        assert_eq!(rep.lost, 0);
+        assert!(rep.latency_us.p50() <= rep.latency_us.p95());
+        assert!(rep.latency_us.p95() <= rep.latency_us.p99());
+    }
+    assert_eq!(a.accepted, b.accepted);
+    assert_eq!(a.completed, b.completed);
+    assert_eq!(a.accuracy, b.accuracy, "same seed + deterministic backend => same accuracy");
+    assert_eq!(a.p_exit1, b.p_exit1, "exit-1 distribution diverged across same-seed runs");
+    assert_eq!(a.p_exit2, b.p_exit2, "exit-2 distribution diverged across same-seed runs");
+}
