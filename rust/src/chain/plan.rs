@@ -51,8 +51,11 @@ use crate::train;
 use crate::util::json::Json;
 
 /// Bump to invalidate every existing plan cache entry (the version is
-/// hashed into the root id).
-pub const PLAN_FORMAT_VERSION: u32 = 1;
+/// hashed into the root id).  v2: the ref backend's canonical
+/// accumulation order changed (blocked kernels, lane-striped reductions,
+/// zero-skips removed), so states trained by the v1 kernels must never
+/// be replayed as prefixes of runs on the new ones.
+pub const PLAN_FORMAT_VERSION: u32 = 2;
 
 // ---------------------------------------------------------------------------
 // Content addressing

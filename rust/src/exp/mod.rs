@@ -38,6 +38,13 @@ pub struct ExpCtx {
     /// Execution backend (`--backend pjrt|ref`); worker engines (plan
     /// `--jobs`, serve pools) are built on the same backend.
     pub backend: BackendChoice,
+    /// Total ref-backend kernel thread budget (`--ref-threads`; default:
+    /// available parallelism).  The main engine uses the full budget;
+    /// plan `--jobs` worker engines and serve pools split it
+    /// (`runtime::threads_per_worker`) so worker threads and kernel
+    /// threads compose without oversubscription.  Never changes results:
+    /// the ref backend is thread-count invariant by contract.
+    pub ref_threads: usize,
 }
 
 impl ExpCtx {
@@ -57,6 +64,28 @@ impl ExpCtx {
         seed: u64,
         verbose: bool,
     ) -> Result<ExpCtx> {
+        Self::with_backend_threads(
+            backend,
+            artifacts,
+            out,
+            scale,
+            seed,
+            verbose,
+            crate::runtime::default_ref_threads(),
+        )
+    }
+
+    /// Like [`ExpCtx::with_backend`] with an explicit ref-backend kernel
+    /// thread budget (the `--ref-threads` CLI path).
+    pub fn with_backend_threads(
+        backend: BackendChoice,
+        artifacts: &str,
+        out: &str,
+        scale: Scale,
+        seed: u64,
+        verbose: bool,
+        ref_threads: usize,
+    ) -> Result<ExpCtx> {
         // The built-in manifest substitutes only for a genuinely *absent*
         // manifest (and only on the ref backend), and says so: a present
         // but corrupt manifest.json must fail loudly, never silently run
@@ -71,8 +100,9 @@ impl ExpCtx {
         } else {
             Manifest::load(artifacts)?
         };
+        let ref_threads = ref_threads.max(1);
         Ok(ExpCtx {
-            engine: Engine::with_backend(backend, artifacts)?,
+            engine: Engine::with_backend_threads(backend, artifacts, ref_threads)?,
             manifest,
             scale,
             seed,
@@ -81,6 +111,7 @@ impl ExpCtx {
             jobs: 1,
             cache: true,
             backend,
+            ref_threads,
         })
     }
 
@@ -203,14 +234,18 @@ impl ExpCtx {
         let backend = self.backend;
         let (base_steps, seed, verbose) = (self.scale.base_steps(), self.seed, self.verbose);
         // One engine per plan worker thread (engines are per-thread on
-        // every backend), same pattern as serve::worker.
-        let run =
-            plan.execute(base, &runner, &opts, || match Engine::with_backend(backend, &artifacts) {
+        // every backend), same pattern as serve::worker; each worker
+        // engine gets its share of the kernel-thread budget so `--jobs`
+        // and `--ref-threads` compose without oversubscription.
+        let worker_threads = crate::runtime::threads_per_worker(self.ref_threads, self.jobs);
+        let run = plan.execute(base, &runner, &opts, || {
+            match Engine::with_backend_threads(backend, &artifacts, worker_threads) {
                 Ok(engine) => {
                     Ok(EngineRunner::new(engine, train_ds, test_ds, base_steps, seed, verbose))
                 }
                 Err(e) => Err(e),
-            })?;
+            }
+        })?;
         let st = &run.stats;
         self.reporter.append_row(
             "plan_stats.csv",

@@ -13,7 +13,9 @@
 //! Common flags: --artifacts DIR (default artifacts), --out DIR (default
 //! results), --scale smoke|default|paper, --seed N, --verbose,
 //! --backend pjrt|ref (ref = hermetic pure-rust interpreter, no
-//! artifacts needed — falls back to the built-in mini_vgg manifest).
+//! artifacts needed — falls back to the built-in mini_vgg manifest),
+//! --ref-threads N (ref kernel thread budget; default available
+//! parallelism, bit-identical results at every N).
 //! Plan-executor flags (chain/exp/toposort): --jobs N runs independent
 //! chain branches on N worker engines; --no-cache disables the
 //! content-addressed stage cache under results/cache/.
@@ -51,13 +53,20 @@ fn ctx_from(args: &Args) -> Result<ExpCtx> {
         .ok_or_else(|| anyhow!("--scale must be smoke|default|paper"))?;
     let backend = BackendChoice::parse(args.get_or("backend", "pjrt"))
         .ok_or_else(|| anyhow!("--backend must be pjrt|ref"))?;
-    let mut ctx = ExpCtx::with_backend(
+    // --ref-threads: total kernel-thread budget for the ref backend
+    // (default: COC_REF_THREADS or available parallelism).  Results are
+    // bit-identical at every setting; worker pools (serve, plan --jobs)
+    // split the budget so thread layers compose without oversubscription.
+    let ref_threads =
+        args.get_usize_min("ref-threads", coc::runtime::default_ref_threads(), 1)?;
+    let mut ctx = ExpCtx::with_backend_threads(
         backend,
         args.get_or("artifacts", coc::DEFAULT_ARTIFACTS),
         args.get_or("out", coc::DEFAULT_RESULTS),
         scale,
         args.get_u64("seed", 42)?,
         args.flag("verbose"),
+        ref_threads,
     )?;
     ctx.jobs = args.get_usize_min("jobs", 1, 1)?;
     ctx.cache = !args.flag("no-cache");
@@ -106,7 +115,9 @@ fn print_usage() {
     println!("  coc serve-bench --workers 4 --mode open --rate 500 --slo-ms 50 --baseline");
     println!("  coc chain --seq PQE --arch mini_vgg --backend ref   # hermetic, no artifacts");
     println!("    (--backend ref interprets feed-forward manifests; builtin arch: mini_vgg.");
-    println!("     mini_resnet/mini_mobilenet drivers need the pjrt backend + artifacts.)");
+    println!("     mini_resnet/mini_mobilenet drivers need the pjrt backend + artifacts.");
+    println!("     --ref-threads N caps its kernel threads — results are bit-identical");
+    println!("     at every N; serve/plan workers split the budget automatically.)");
 }
 
 fn cmd_info(args: &Args) -> Result<()> {
@@ -285,6 +296,7 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
 
     let mut pool_opts = PoolOpts::new(ctx.engine.artifacts_dir(), workers, (threshold, threshold));
     pool_opts.backend = ctx.backend;
+    pool_opts.ref_threads = ctx.ref_threads;
     pool_opts.queue_capacity = queue_capacity;
     pool_opts.batch =
         BatchPolicy { max_batch, max_wait: Duration::from_micros(batch_wait_us) };

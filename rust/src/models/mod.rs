@@ -667,25 +667,31 @@ impl ModelState {
 /// used to materialize *deployed* weight values for entropy-coding
 /// analysis.  Must match python/compile/kernels/fake_quant.py.
 pub fn host_weight_quant(w: &Tensor, bits: f32) -> Tensor {
+    let mut data = vec![0.0f32; w.len()];
+    host_weight_quant_into(&w.data, bits, &mut data);
+    Tensor::new(w.shape.clone(), data)
+}
+
+/// `host_weight_quant` into a caller-provided buffer, so the reference
+/// backend's per-layer/per-step quantization writes into reused scratch
+/// storage instead of allocating.  Identity copy when `bits <= 0`.
+pub fn host_weight_quant_into(w: &[f32], bits: f32, out: &mut [f32]) {
+    debug_assert_eq!(w.len(), out.len());
     if bits <= 0.0 {
-        return w.clone();
+        out.copy_from_slice(w);
+        return;
     }
     let n = (2f32.powf(bits) - 1.0).max(1.0);
     let mut tmax = 1e-8f32;
     let mut wmax = 1e-8f32;
-    for &v in &w.data {
+    for &v in w {
         tmax = tmax.max(v.tanh().abs());
         wmax = wmax.max(v.abs());
     }
-    let data = w
-        .data
-        .iter()
-        .map(|&v| {
-            let tn = v.tanh() / (2.0 * tmax) + 0.5;
-            (2.0 * ((tn * n).round() / n) - 1.0) * wmax
-        })
-        .collect();
-    Tensor::new(w.shape.clone(), data)
+    for (o, &v) in out.iter_mut().zip(w) {
+        let tn = v.tanh() / (2.0 * tmax) + 0.5;
+        *o = (2.0 * ((tn * n).round() / n) - 1.0) * wmax;
+    }
 }
 
 // ---------------------------------------------------------------------------

@@ -11,12 +11,14 @@
 //!   interpreter of the manifest's graph contract (`train`, `eval`,
 //!   `init`, staged serving graphs at their declared batch sizes),
 //!   implemented directly against `tensor`/`models`.  No artifacts, no
-//!   device, bit-identical results on every run — this is what lets the
-//!   end-to-end test suites run for real in CI.
+//!   device, bit-identical results on every run *and at every kernel
+//!   thread count* (`--ref-threads`, default: available parallelism) —
+//!   this is what lets the end-to-end test suites run for real in CI.
 //!
 //! Selection is a constructor choice ([`Engine::new`] = PJRT,
-//! [`Engine::new_ref`] = reference, [`Engine::with_backend`] = explicit)
-//! surfaced on the CLI as `--backend pjrt|ref`.
+//! [`Engine::new_ref`] = reference, [`Engine::with_backend`] = explicit,
+//! [`Engine::with_backend_threads`] = explicit + kernel thread budget)
+//! surfaced on the CLI as `--backend pjrt|ref` / `--ref-threads N`.
 //!
 //! # Device residency (see DESIGN.md §Device residency)
 //!
@@ -48,6 +50,7 @@ pub mod pjrt;
 pub mod refback;
 
 pub use pjrt::{literal_to_tensor, tensor_to_literal};
+pub use refback::{default_threads as default_ref_threads, threads_per_worker};
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -321,19 +324,42 @@ impl Engine {
     }
 
     /// Hermetic reference engine: no artifacts, no device, deterministic.
+    /// Kernel threads resolve via `COC_REF_THREADS` / available
+    /// parallelism ([`refback::default_threads`]).
     pub fn new_ref() -> Result<Self> {
         Self::with_backend(BackendChoice::Ref, "")
     }
 
+    /// Reference engine with an explicit kernel thread budget (results
+    /// are bit-identical at every setting — the budget is throughput
+    /// only).
+    pub fn new_ref_with_threads(threads: usize) -> Result<Self> {
+        Self::with_backend_threads(BackendChoice::Ref, "", threads)
+    }
+
     /// Explicit backend selection (the `--backend pjrt|ref` CLI path).
     pub fn with_backend<P: AsRef<Path>>(choice: BackendChoice, artifacts_dir: P) -> Result<Self> {
+        Self::with_backend_threads(choice, artifacts_dir, refback::default_threads())
+    }
+
+    /// Explicit backend + kernel thread budget (`--ref-threads`).  The
+    /// thread budget only applies to the reference backend's kernels;
+    /// PJRT ignores it (XLA owns its own threading).  Worker pools pass
+    /// [`threads_per_worker`] shares here so serve workers and plan
+    /// `--jobs` workers compose with kernel threads without
+    /// oversubscription.
+    pub fn with_backend_threads<P: AsRef<Path>>(
+        choice: BackendChoice,
+        artifacts_dir: P,
+        ref_threads: usize,
+    ) -> Result<Self> {
         let stats = Arc::new(StatsCell::default());
         let artifacts_dir = artifacts_dir.as_ref().to_path_buf();
         let backend: Box<dyn Backend> = match choice {
             BackendChoice::Pjrt => {
                 Box::new(pjrt::PjrtBackend::new(artifacts_dir.clone(), stats.clone())?)
             }
-            BackendChoice::Ref => Box::new(refback::RefBackend::new(stats.clone())),
+            BackendChoice::Ref => Box::new(refback::RefBackend::new(stats.clone(), ref_threads)),
         };
         Ok(Engine {
             backend,
@@ -483,6 +509,20 @@ mod tests {
         assert_eq!(e.backend(), BackendChoice::Ref);
         assert!(e.platform().contains("ref"));
         assert!(e.load("kernel_qmatmul.hlo.txt").is_err(), "ref backend has no artifact files");
+    }
+
+    #[test]
+    fn ref_engine_thread_budget_is_explicit_and_reported() {
+        let e = Engine::new_ref_with_threads(3).unwrap();
+        assert!(
+            e.platform().contains("3 kernel threads"),
+            "platform string should surface the kernel thread budget: {}",
+            e.platform()
+        );
+        // Worker composition policy: each of 4 workers gets a 2-thread
+        // share of an 8-thread budget, never less than 1.
+        assert_eq!(threads_per_worker(8, 4), 2);
+        assert_eq!(threads_per_worker(1, 4), 1);
     }
 
     #[test]

@@ -1,0 +1,1334 @@
+//! The reference backend's kernel layer: cache-blocked, batch-parallel,
+//! allocation-free implementations of the ops the interpreter runs, plus
+//! the retained naive reference kernels the property tests compare
+//! against.
+//!
+//! # The canonical accumulation order
+//!
+//! Determinism here is stronger than "no data races": every output
+//! element has **one** fixed accumulation order, independent of blocking,
+//! batch size and thread count, so results are bit-identical at every
+//! `--ref-threads` setting including 1.  The order (redefined once, in
+//! this PR — see DESIGN.md §Backends):
+//!
+//! * **conv2d / dwconv2d forward** — each output element is a single f32
+//!   chain from 0.0 over its in-bounds taps, `(ky, kx, ic)` ascending.
+//!   No zero-skip: a 0.0 activation contributes its `±0.0` product like
+//!   any other (the old `if xv != 0.0` branch is gone — it serialized the
+//!   inner loop and made the chain data-dependent).
+//! * **matmul** — per output element, the k-sum runs ascending, no
+//!   zero-skip.
+//! * **dot-shaped reductions** ([`lane_dot`]) — 8 fixed stripe lanes
+//!   combined by a fixed tree.  Used where a backward pass reduces over
+//!   channels (conv `dx`, dense `d act`, RMS-norm statistics).
+//! * **cross-batch reductions** (`dw`, `db`) — per-item partials of fixed
+//!   shape, reduced in item-index order (`pool::reduce_partials`).  This
+//!   holds even single-threaded, so threading never re-associates a sum.
+//!
+//! Blocked kernels peel interior from border (no per-tap padding branch
+//! in the interior), register-block the inner `cout` loops ([`MR`] x
+//! [`NR`] accumulator tiles), parallelize over batch items (`pool`), and
+//! draw every temporary from the caller's [`Scratch`] arena.  The
+//! `naive_*` kernels implement the same canonical math in the plainest
+//! textbook form; `cargo bench -- refback_kernels` measures the gap and
+//! the property tests below pin bit-equality on random shapes/strides.
+
+use anyhow::{ensure, Result};
+
+use super::pool;
+use super::scratch::Scratch;
+use crate::tensor::Tensor;
+
+/// Output pixels per register tile (conv) / rows per tile (matmul).
+const MR: usize = 4;
+/// Output channels per register tile.
+const NR: usize = 8;
+
+/// XLA SAME padding: total = max((out-1)·stride + k - in, 0), low = total/2.
+pub fn same_pad_lo(inp: usize, out: usize, k: usize, stride: usize) -> usize {
+    ((out - 1) * stride + k).saturating_sub(inp) / 2
+}
+
+/// Fixed-order striped dot product: lane `j` accumulates elements with
+/// index ≡ j (mod 8); lanes combine by a fixed tree.  One canonical
+/// order for every reduction over channels, the same whether the caller
+/// is naive or blocked — and wide enough for the compiler to vectorize,
+/// which a strict left-to-right f32 sum forbids.
+#[inline]
+pub fn lane_dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let main = n - n % 8;
+    let mut l = [0.0f32; 8];
+    let mut i = 0;
+    while i < main {
+        for j in 0..8 {
+            l[j] += a[i + j] * b[i + j];
+        }
+        i += 8;
+    }
+    for (j, i) in (main..n).enumerate() {
+        l[j] += a[i] * b[i];
+    }
+    ((l[0] + l[4]) + (l[1] + l[5])) + ((l[2] + l[6]) + (l[3] + l[7]))
+}
+
+// ---------------------------------------------------------------------------
+// Geometry
+// ---------------------------------------------------------------------------
+
+/// Shared conv geometry: SAME padding plus the interior output rectangle
+/// `[oy0, oy1) x [ox0, ox1)` within which **every** tap of the k x k
+/// window is in bounds — the peeled fast path needs no padding branches.
+#[derive(Debug, Clone, Copy)]
+pub struct ConvGeom {
+    pub b: usize,
+    pub h: usize,
+    pub w: usize,
+    pub cin: usize,
+    pub k: usize,
+    pub cout: usize,
+    pub stride: usize,
+    pub ho: usize,
+    pub wo: usize,
+    pub ph: usize,
+    pub pw: usize,
+    pub oy0: usize,
+    pub oy1: usize,
+    pub ox0: usize,
+    pub ox1: usize,
+}
+
+impl ConvGeom {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        b: usize,
+        h: usize,
+        w: usize,
+        cin: usize,
+        k: usize,
+        cout: usize,
+        stride: usize,
+    ) -> ConvGeom {
+        let stride = stride.max(1);
+        let ho = h.div_ceil(stride);
+        let wo = w.div_ceil(stride);
+        let ph = same_pad_lo(h, ho, k, stride);
+        let pw = same_pad_lo(w, wo, k, stride);
+        // Interior along one axis: in*s >= pad (top tap in bounds) and
+        // in*s + k - 1 - pad <= dim - 1 (bottom tap in bounds).
+        let interior = |dim: usize, out: usize, pad: usize| -> (usize, usize) {
+            let lo = pad.div_ceil(stride);
+            let hi = if dim + pad >= k { ((dim + pad - k) / stride + 1).min(out) } else { 0 };
+            (lo.min(hi), hi)
+        };
+        let (oy0, oy1) = interior(h, ho, ph);
+        let (ox0, ox1) = interior(w, wo, pw);
+        ConvGeom { b, h, w, cin, k, cout, stride, ho, wo, ph, pw, oy0, oy1, ox0, ox1 }
+    }
+
+    fn of_conv(x: &Tensor, w: &Tensor, stride: usize) -> Result<ConvGeom> {
+        let (b, h, wd, cin) = dims4(x)?;
+        ensure!(w.rank() == 4, "conv weight must be rank-4 HWIO, got {:?}", w.shape);
+        let (k, cout) = (w.shape[0], w.shape[3]);
+        ensure!(w.shape[1] == k, "conv weight must be square, got {:?}", w.shape);
+        ensure!(w.shape[2] == cin, "conv weight cin {} != input channels {cin}", w.shape[2]);
+        Ok(ConvGeom::new(b, h, wd, cin, k, cout, stride))
+    }
+
+    fn of_dwconv(x: &Tensor, w: &Tensor, stride: usize) -> Result<ConvGeom> {
+        let (b, h, wd, c) = dims4(x)?;
+        ensure!(w.rank() == 4, "dw weight must be rank-4, got {:?}", w.shape);
+        let (k, cout) = (w.shape[0], w.shape[3]);
+        ensure!(cout == c, "depthwise weight channels {cout} != input channels {c}");
+        Ok(ConvGeom::new(b, h, wd, c, k, c, stride))
+    }
+
+    fn in_len(&self) -> usize {
+        self.h * self.w * self.cin
+    }
+
+    fn out_len(&self) -> usize {
+        self.ho * self.wo * self.cout
+    }
+}
+
+pub fn dims4(t: &Tensor) -> Result<(usize, usize, usize, usize)> {
+    ensure!(t.rank() == 4, "expected a rank-4 NHWC tensor, got shape {:?}", t.shape);
+    Ok((t.shape[0], t.shape[1], t.shape[2], t.shape[3]))
+}
+
+// ---------------------------------------------------------------------------
+// conv2d forward (blocked)
+// ---------------------------------------------------------------------------
+
+/// Blocked conv2d: NHWC x HWIO -> NHWC at SAME padding.  Batch-parallel;
+/// `out` comes from (and temporaries return to) `scratch`.
+pub fn conv2d(
+    x: &Tensor,
+    w: &Tensor,
+    stride: usize,
+    threads: usize,
+    scratch: &mut Scratch,
+) -> Result<Tensor> {
+    let g = ConvGeom::of_conv(x, w, stride)?;
+    let mut out = scratch.take_full(g.b * g.out_len());
+    let flops = g.out_len() * g.k * g.k * g.cin;
+    pool::for_each_item(threads, flops, &mut out, g.out_len(), |bi, chunk| {
+        conv2d_item(&g, &x.data[bi * g.in_len()..][..g.in_len()], &w.data, chunk);
+    });
+    Ok(Tensor::new(vec![g.b, g.ho, g.wo, g.cout], out))
+}
+
+fn conv2d_item(g: &ConvGeom, x: &[f32], w: &[f32], out: &mut [f32]) {
+    for oy in 0..g.ho {
+        if oy >= g.oy0 && oy < g.oy1 && g.ox0 < g.ox1 {
+            if g.ox0 > 0 {
+                conv_edge_pixels(g, x, w, out, oy, 0, g.ox0);
+            }
+            conv_interior_row(g, x, w, out, oy);
+            if g.ox1 < g.wo {
+                conv_edge_pixels(g, x, w, out, oy, g.ox1, g.wo);
+            }
+        } else {
+            conv_edge_pixels(g, x, w, out, oy, 0, g.wo);
+        }
+    }
+}
+
+/// Border pixels: per-tap bounds checks, full-`cout` slice accumulator.
+/// Per-element chain: in-bounds taps `(ky, kx, ic)` ascending.
+fn conv_edge_pixels(
+    g: &ConvGeom,
+    x: &[f32],
+    w: &[f32],
+    out: &mut [f32],
+    oy: usize,
+    x0: usize,
+    x1: usize,
+) {
+    let (s, k, cin, cout) = (g.stride, g.k, g.cin, g.cout);
+    for ox in x0..x1 {
+        let off = (oy * g.wo + ox) * cout;
+        out[off..off + cout].fill(0.0);
+        for ky in 0..k {
+            let iy = (oy * s + ky) as isize - g.ph as isize;
+            if iy < 0 || iy >= g.h as isize {
+                continue;
+            }
+            for kx in 0..k {
+                let ix = (ox * s + kx) as isize - g.pw as isize;
+                if ix < 0 || ix >= g.w as isize {
+                    continue;
+                }
+                let xrow = &x[((iy as usize) * g.w + ix as usize) * cin..][..cin];
+                let wbase = (ky * k + kx) * cin * cout;
+                for (ic, &xv) in xrow.iter().enumerate() {
+                    let wrow = &w[wbase + ic * cout..][..cout];
+                    let acc = &mut out[off..off + cout];
+                    for (a, &wv) in acc.iter_mut().zip(wrow) {
+                        *a += xv * wv;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Interior row: no padding branches anywhere; `MR x NR` register tiles
+/// over (output pixel, output channel), remainders via
+/// [`conv_interior_pixels`].  Same per-element chain as the edge path.
+fn conv_interior_row(g: &ConvGeom, x: &[f32], w: &[f32], out: &mut [f32], oy: usize) {
+    let cout = g.cout;
+    let mut oc0 = 0;
+    while oc0 < cout {
+        let nc = NR.min(cout - oc0);
+        if nc < NR {
+            conv_interior_pixels(g, x, w, out, oy, g.ox0, g.ox1, oc0, nc);
+            break;
+        }
+        let mut ox = g.ox0;
+        while ox + MR <= g.ox1 {
+            conv_tile(g, x, w, out, oy, ox, oc0);
+            ox += MR;
+        }
+        if ox < g.ox1 {
+            conv_interior_pixels(g, x, w, out, oy, ox, g.ox1, oc0, NR);
+        }
+        oc0 += NR;
+    }
+}
+
+/// One full MR x NR register tile: accumulators live in registers across
+/// the whole (ky, kx, ic) window, stored once at the end.
+#[inline]
+fn conv_tile(
+    g: &ConvGeom,
+    x: &[f32],
+    w: &[f32],
+    out: &mut [f32],
+    oy: usize,
+    ox: usize,
+    oc0: usize,
+) {
+    let (s, k, cin, cout) = (g.stride, g.k, g.cin, g.cout);
+    let mut acc = [[0.0f32; NR]; MR];
+    for ky in 0..k {
+        let iy = oy * s + ky - g.ph; // in bounds: interior invariant
+        let rowbase = iy * g.w * cin;
+        for kx in 0..k {
+            let mut xbase = [0usize; MR];
+            for (m, xb) in xbase.iter_mut().enumerate() {
+                *xb = rowbase + ((ox + m) * s + kx - g.pw) * cin;
+            }
+            let wbase = (ky * k + kx) * cin * cout + oc0;
+            for ic in 0..cin {
+                let wrow = &w[wbase + ic * cout..wbase + ic * cout + NR];
+                let xs = [x[xbase[0] + ic], x[xbase[1] + ic], x[xbase[2] + ic], x[xbase[3] + ic]];
+                for m in 0..MR {
+                    let am = &mut acc[m];
+                    for n in 0..NR {
+                        am[n] += xs[m] * wrow[n];
+                    }
+                }
+            }
+        }
+    }
+    for (m, am) in acc.iter().enumerate() {
+        out[(oy * g.wo + ox + m) * g.cout + oc0..][..NR].copy_from_slice(am);
+    }
+}
+
+/// Interior remainder pixels for one `[oc0, oc0+nc)` channel block: no
+/// bounds checks, slice accumulator.
+#[allow(clippy::too_many_arguments)]
+fn conv_interior_pixels(
+    g: &ConvGeom,
+    x: &[f32],
+    w: &[f32],
+    out: &mut [f32],
+    oy: usize,
+    x0: usize,
+    x1: usize,
+    oc0: usize,
+    nc: usize,
+) {
+    let (s, k, cin, cout) = (g.stride, g.k, g.cin, g.cout);
+    for ox in x0..x1 {
+        let off = (oy * g.wo + ox) * cout + oc0;
+        out[off..off + nc].fill(0.0);
+        for ky in 0..k {
+            let iy = oy * s + ky - g.ph;
+            for kx in 0..k {
+                let ix = ox * s + kx - g.pw;
+                let xrow = &x[(iy * g.w + ix) * cin..][..cin];
+                let wbase = (ky * k + kx) * cin * cout + oc0;
+                for (ic, &xv) in xrow.iter().enumerate() {
+                    let wrow = &w[wbase + ic * cout..][..nc];
+                    let acc = &mut out[off..off + nc];
+                    for (a, &wv) in acc.iter_mut().zip(wrow) {
+                        *a += xv * wv;
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// conv2d backward (blocked)
+// ---------------------------------------------------------------------------
+
+/// Gradient buffers of one conv; storage belongs to the caller's arena
+/// (recycle after folding into the parameter gradients).
+pub struct ConvGrads {
+    pub dx: Vec<f32>,
+    pub dw: Vec<f32>,
+    pub db: Vec<f32>,
+}
+
+/// Blocked conv2d backward.  `dw`/`db` are cross-batch reductions:
+/// per-item fixed-shape partials are materialized (from `scratch`) and
+/// reduced in item-index order — bit-identical at every thread count.
+pub fn conv2d_backward(
+    x: &Tensor,
+    w: &Tensor,
+    gout: &Tensor,
+    stride: usize,
+    threads: usize,
+    scratch: &mut Scratch,
+) -> ConvGrads {
+    let g = ConvGeom::new(
+        x.shape[0],
+        x.shape[1],
+        x.shape[2],
+        x.shape[3],
+        w.shape[0],
+        w.shape[3],
+        stride,
+    );
+    debug_assert_eq!(gout.shape, [g.b, g.ho, g.wo, g.cout]);
+    let wlen = w.len();
+    let mut dx = scratch.take(x.len());
+    let mut dwp = scratch.take(g.b * wlen);
+    let mut dbp = scratch.take(g.b * g.cout);
+    let flops = 2 * g.out_len() * g.k * g.k * g.cin;
+    pool::for_each_item3(
+        threads,
+        flops,
+        g.b,
+        (dx.as_mut_slice(), g.in_len()),
+        (dwp.as_mut_slice(), wlen),
+        (dbp.as_mut_slice(), g.cout),
+        |bi, dxi, dwi, dbi| {
+            conv2d_bwd_item(
+                &g,
+                &x.data[bi * g.in_len()..][..g.in_len()],
+                &w.data,
+                &gout.data[bi * g.out_len()..][..g.out_len()],
+                dxi,
+                dwi,
+                dbi,
+            );
+        },
+    );
+    let mut dw = scratch.take(wlen);
+    let mut db = scratch.take(g.cout);
+    pool::reduce_partials(&mut dw, &dwp);
+    pool::reduce_partials(&mut db, &dbp);
+    scratch.recycle(dwp);
+    scratch.recycle(dbp);
+    ConvGrads { dx, dw, db }
+}
+
+/// One conv-backward tap: `dw[tap] += xv·g` (vectorized over `cout`) and
+/// `dx[tap] += <w[tap], g>` under the canonical lane order.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn conv_bwd_tap(
+    cin: usize,
+    cout: usize,
+    x: &[f32],
+    w: &[f32],
+    grow: &[f32],
+    dx: &mut [f32],
+    dw: &mut [f32],
+    xbase: usize,
+    wbase: usize,
+) {
+    for ic in 0..cin {
+        let xv = x[xbase + ic];
+        let wrow = &w[wbase + ic * cout..][..cout];
+        let dwrow = &mut dw[wbase + ic * cout..][..cout];
+        for (dv, &gv) in dwrow.iter_mut().zip(grow) {
+            *dv += xv * gv;
+        }
+        dx[xbase + ic] += lane_dot(wrow, grow);
+    }
+}
+
+fn conv2d_bwd_item(
+    g: &ConvGeom,
+    x: &[f32],
+    w: &[f32],
+    gout: &[f32],
+    dx: &mut [f32],
+    dw: &mut [f32],
+    db: &mut [f32],
+) {
+    let (s, k, cin, cout) = (g.stride, g.k, g.cin, g.cout);
+    for oy in 0..g.ho {
+        let yin = oy >= g.oy0 && oy < g.oy1;
+        for ox in 0..g.wo {
+            let grow = &gout[(oy * g.wo + ox) * cout..][..cout];
+            for (d, &gv) in db.iter_mut().zip(grow) {
+                *d += gv;
+            }
+            if yin && ox >= g.ox0 && ox < g.ox1 {
+                // Interior: every tap in bounds, no branches.
+                for ky in 0..k {
+                    let iy = oy * s + ky - g.ph;
+                    for kx in 0..k {
+                        let ix = ox * s + kx - g.pw;
+                        let xbase = (iy * g.w + ix) * cin;
+                        let wbase = (ky * k + kx) * cin * cout;
+                        conv_bwd_tap(cin, cout, x, w, grow, dx, dw, xbase, wbase);
+                    }
+                }
+            } else {
+                for ky in 0..k {
+                    let iy = (oy * s + ky) as isize - g.ph as isize;
+                    if iy < 0 || iy >= g.h as isize {
+                        continue;
+                    }
+                    for kx in 0..k {
+                        let ix = (ox * s + kx) as isize - g.pw as isize;
+                        if ix < 0 || ix >= g.w as isize {
+                            continue;
+                        }
+                        let xbase = ((iy as usize) * g.w + ix as usize) * cin;
+                        let wbase = (ky * k + kx) * cin * cout;
+                        conv_bwd_tap(cin, cout, x, w, grow, dx, dw, xbase, wbase);
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// depthwise conv (blocked)
+// ---------------------------------------------------------------------------
+
+pub fn dwconv2d(
+    x: &Tensor,
+    w: &Tensor,
+    stride: usize,
+    threads: usize,
+    scratch: &mut Scratch,
+) -> Result<Tensor> {
+    let g = ConvGeom::of_dwconv(x, w, stride)?;
+    let mut out = scratch.take_full(g.b * g.out_len());
+    let flops = g.ho * g.wo * g.cout * g.k * g.k;
+    pool::for_each_item(threads, flops, &mut out, g.out_len(), |bi, chunk| {
+        dwconv2d_item(&g, &x.data[bi * g.in_len()..][..g.in_len()], &w.data, chunk);
+    });
+    Ok(Tensor::new(vec![g.b, g.ho, g.wo, g.cout], out))
+}
+
+fn dwconv2d_item(g: &ConvGeom, x: &[f32], w: &[f32], out: &mut [f32]) {
+    let (s, k, c) = (g.stride, g.k, g.cout);
+    for oy in 0..g.ho {
+        let yin = oy >= g.oy0 && oy < g.oy1;
+        for ox in 0..g.wo {
+            let off = (oy * g.wo + ox) * c;
+            out[off..off + c].fill(0.0);
+            if yin && ox >= g.ox0 && ox < g.ox1 {
+                for ky in 0..k {
+                    let iy = oy * s + ky - g.ph;
+                    for kx in 0..k {
+                        let ix = ox * s + kx - g.pw;
+                        let xrow = &x[(iy * g.w + ix) * c..][..c];
+                        let wrow = &w[(ky * k + kx) * c..][..c];
+                        let acc = &mut out[off..off + c];
+                        for ((a, &xv), &wv) in acc.iter_mut().zip(xrow).zip(wrow) {
+                            *a += xv * wv;
+                        }
+                    }
+                }
+            } else {
+                for ky in 0..k {
+                    let iy = (oy * s + ky) as isize - g.ph as isize;
+                    if iy < 0 || iy >= g.h as isize {
+                        continue;
+                    }
+                    for kx in 0..k {
+                        let ix = (ox * s + kx) as isize - g.pw as isize;
+                        if ix < 0 || ix >= g.w as isize {
+                            continue;
+                        }
+                        let xrow = &x[((iy as usize) * g.w + ix as usize) * c..][..c];
+                        let wrow = &w[(ky * k + kx) * c..][..c];
+                        let acc = &mut out[off..off + c];
+                        for ((a, &xv), &wv) in acc.iter_mut().zip(xrow).zip(wrow) {
+                            *a += xv * wv;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+pub fn dwconv2d_backward(
+    x: &Tensor,
+    w: &Tensor,
+    gout: &Tensor,
+    stride: usize,
+    threads: usize,
+    scratch: &mut Scratch,
+) -> ConvGrads {
+    let c = x.shape[3];
+    let g = ConvGeom::new(x.shape[0], x.shape[1], x.shape[2], c, w.shape[0], c, stride);
+    let wlen = w.len();
+    let mut dx = scratch.take(x.len());
+    let mut dwp = scratch.take(g.b * wlen);
+    let mut dbp = scratch.take(g.b * c);
+    let flops = 2 * g.ho * g.wo * c * g.k * g.k;
+    pool::for_each_item3(
+        threads,
+        flops,
+        g.b,
+        (dx.as_mut_slice(), g.in_len()),
+        (dwp.as_mut_slice(), wlen),
+        (dbp.as_mut_slice(), c),
+        |bi, dxi, dwi, dbi| {
+            dwconv2d_bwd_item(
+                &g,
+                &x.data[bi * g.in_len()..][..g.in_len()],
+                &w.data,
+                &gout.data[bi * g.out_len()..][..g.out_len()],
+                dxi,
+                dwi,
+                dbi,
+            );
+        },
+    );
+    let mut dw = scratch.take(wlen);
+    let mut db = scratch.take(c);
+    pool::reduce_partials(&mut dw, &dwp);
+    pool::reduce_partials(&mut db, &dbp);
+    scratch.recycle(dwp);
+    scratch.recycle(dbp);
+    ConvGrads { dx, dw, db }
+}
+
+fn dwconv2d_bwd_item(
+    g: &ConvGeom,
+    x: &[f32],
+    w: &[f32],
+    gout: &[f32],
+    dx: &mut [f32],
+    dw: &mut [f32],
+    db: &mut [f32],
+) {
+    let (s, k, c) = (g.stride, g.k, g.cout);
+    for oy in 0..g.ho {
+        for ox in 0..g.wo {
+            let grow = &gout[(oy * g.wo + ox) * c..][..c];
+            for (d, &gv) in db.iter_mut().zip(grow) {
+                *d += gv;
+            }
+            for ky in 0..k {
+                let iy = (oy * s + ky) as isize - g.ph as isize;
+                if iy < 0 || iy >= g.h as isize {
+                    continue;
+                }
+                for kx in 0..k {
+                    let ix = (ox * s + kx) as isize - g.pw as isize;
+                    if ix < 0 || ix >= g.w as isize {
+                        continue;
+                    }
+                    let xbase = ((iy as usize) * g.w + ix as usize) * c;
+                    let wbase = (ky * k + kx) * c;
+                    for cc in 0..c {
+                        let gv = grow[cc];
+                        dw[wbase + cc] += x[xbase + cc] * gv;
+                        dx[xbase + cc] += w[wbase + cc] * gv;
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// matmul (register-tiled)
+// ---------------------------------------------------------------------------
+
+/// `[m, k] @ [k, n] -> [m, n]`; per output element the k-sum runs
+/// ascending from 0.0, no zero-skip.  MR x NR register tiles hold the
+/// accumulators across the whole k loop.
+pub fn matmul(a: &Tensor, w: &Tensor, scratch: &mut Scratch) -> Tensor {
+    let (m, k) = (a.shape[0], a.shape[1]);
+    let n = w.shape[1];
+    let mut out = scratch.take_full(m * n);
+    matmul_into(m, k, n, &a.data, &w.data, &mut out);
+    Tensor::new(vec![m, n], out)
+}
+
+pub fn matmul_into(m: usize, kdim: usize, n: usize, a: &[f32], w: &[f32], out: &mut [f32]) {
+    let mut r0 = 0;
+    while r0 < m {
+        let mr = MR.min(m - r0);
+        let mut c0 = 0;
+        while c0 < n {
+            let nc = NR.min(n - c0);
+            if mr == MR && nc == NR {
+                let mut acc = [[0.0f32; NR]; MR];
+                for ki in 0..kdim {
+                    let wrow = &w[ki * n + c0..ki * n + c0 + NR];
+                    let av = [
+                        a[r0 * kdim + ki],
+                        a[(r0 + 1) * kdim + ki],
+                        a[(r0 + 2) * kdim + ki],
+                        a[(r0 + 3) * kdim + ki],
+                    ];
+                    for mi in 0..MR {
+                        let am = &mut acc[mi];
+                        for ni in 0..NR {
+                            am[ni] += av[mi] * wrow[ni];
+                        }
+                    }
+                }
+                for (mi, am) in acc.iter().enumerate() {
+                    out[(r0 + mi) * n + c0..][..NR].copy_from_slice(am);
+                }
+            } else {
+                for mi in r0..r0 + mr {
+                    let arow = &a[mi * kdim..(mi + 1) * kdim];
+                    out[mi * n + c0..][..nc].fill(0.0);
+                    for (ki, &av) in arow.iter().enumerate() {
+                        let wrow = &w[ki * n + c0..][..nc];
+                        let orow = &mut out[mi * n + c0..][..nc];
+                        for (o, &wv) in orow.iter_mut().zip(wrow) {
+                            *o += av * wv;
+                        }
+                    }
+                }
+            }
+            c0 += nc;
+        }
+        r0 += mr;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// pooling / GAP / norms / pointwise
+// ---------------------------------------------------------------------------
+
+/// 2x2 stride-2 max-pool (VALID).  `record` additionally returns the
+/// argmax route the pool backward pass consumes (empty otherwise).  Ties
+/// keep the first window element (fixed scan order).
+pub fn maxpool2(x: &Tensor, record: bool, scratch: &mut Scratch) -> Result<(Tensor, Vec<u32>)> {
+    let (b, h, w, c) = dims4(x)?;
+    ensure!(h >= 2 && w >= 2, "feature map {h}x{w} too small to pool");
+    let ho = (h - 2) / 2 + 1;
+    let wo = (w - 2) / 2 + 1;
+    let mut out = scratch.take_full(b * ho * wo * c);
+    let mut idx = if record { scratch.take_u32(b * ho * wo * c) } else { Vec::new() };
+    for bi in 0..b {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                for cc in 0..c {
+                    let mut best = f32::NEG_INFINITY;
+                    let mut besti = usize::MAX;
+                    for dy in 0..2 {
+                        for dxp in 0..2 {
+                            let fi = ((bi * h + oy * 2 + dy) * w + ox * 2 + dxp) * c + cc;
+                            let v = x.data[fi];
+                            if besti == usize::MAX || v > best {
+                                best = v;
+                                besti = fi;
+                            }
+                        }
+                    }
+                    let o = ((bi * ho + oy) * wo + ox) * c + cc;
+                    out[o] = best;
+                    if record {
+                        idx[o] = besti as u32;
+                    }
+                }
+            }
+        }
+    }
+    Ok((Tensor::new(vec![b, ho, wo, c], out), idx))
+}
+
+/// Global average pool: [b, h, w, c] -> [b, c].
+pub fn gap(x: &Tensor, scratch: &mut Scratch) -> Result<Tensor> {
+    let (b, h, w, c) = dims4(x)?;
+    let hw = (h * w) as f32;
+    let mut out = scratch.take(b * c);
+    for bi in 0..b {
+        let orow = &mut out[bi * c..(bi + 1) * c];
+        for p in 0..h * w {
+            let xrow = &x.data[(bi * h * w + p) * c..][..c];
+            for (o, &v) in orow.iter_mut().zip(xrow) {
+                *o += v;
+            }
+        }
+        for o in orow.iter_mut() {
+            *o /= hw;
+        }
+    }
+    Ok(Tensor::new(vec![b, c], out))
+}
+
+/// Per-sample RMS normalization over (H, W, C) with a live-channel
+/// divisor (mirrors `archs.py::_rmsnorm`): y = x · rsqrt(Σx²/D + 1e-6),
+/// D = H·W·live.  The Σx² statistic uses the canonical lane order.
+/// Returns (y, per-sample rsqrt factors, D); `y` comes from `scratch`.
+pub fn rmsnorm(x: &Tensor, live: f32, scratch: &mut Scratch) -> (Tensor, Vec<f32>, f32) {
+    let (b, spl, d) = rms_dims(x, live);
+    let mut out = scratch.take_full(x.len());
+    let mut rs = Vec::with_capacity(b);
+    for bi in 0..b {
+        let row = &x.data[bi * spl..(bi + 1) * spl];
+        let r = rms_factor(row, d);
+        rs.push(r);
+        for (o, &v) in out[bi * spl..(bi + 1) * spl].iter_mut().zip(row) {
+            *o = v * r;
+        }
+    }
+    (Tensor::new(x.shape.clone(), out), rs, d)
+}
+
+/// In-place [`rmsnorm`] for the trace-free inference path — identical
+/// arithmetic (same statistic, same per-element multiply), so recording
+/// never perturbs a value.
+pub fn rmsnorm_inplace(x: &mut Tensor, live: f32) {
+    let (b, spl, d) = rms_dims(x, live);
+    for bi in 0..b {
+        let row = &mut x.data[bi * spl..(bi + 1) * spl];
+        let r = rms_factor(row, d);
+        for v in row.iter_mut() {
+            *v *= r;
+        }
+    }
+}
+
+fn rms_dims(x: &Tensor, live: f32) -> (usize, usize, f32) {
+    let (b, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    (b, h * w * c, (h * w) as f32 * live)
+}
+
+#[inline]
+fn rms_factor(row: &[f32], d: f32) -> f32 {
+    let ms = lane_dot(row, row) / d;
+    1.0 / (ms + 1e-6).sqrt()
+}
+
+/// d/dx of rmsnorm: dx = r·g − x·(Σ g·x)·r³/D, per sample; the Σ g·x
+/// statistic uses the canonical lane order.
+pub fn rmsnorm_backward(
+    g: &Tensor,
+    x_pre: &Tensor,
+    rs: &[f32],
+    d: f32,
+    scratch: &mut Scratch,
+) -> Tensor {
+    let b = x_pre.shape[0];
+    let spl = x_pre.len() / b.max(1);
+    let mut out = scratch.take_full(g.len());
+    for bi in 0..b {
+        let grow = &g.data[bi * spl..(bi + 1) * spl];
+        let xrow = &x_pre.data[bi * spl..(bi + 1) * spl];
+        let r = rs[bi];
+        let kf = lane_dot(grow, xrow) * r * r * r / d;
+        for ((o, &gv), &xv) in out[bi * spl..(bi + 1) * spl].iter_mut().zip(grow).zip(xrow) {
+            *o = r * gv - kf * xv;
+        }
+    }
+    Tensor::new(g.shape.clone(), out)
+}
+
+pub fn relu_inplace(t: &mut Tensor) {
+    for v in &mut t.data {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// DoReFa-style activation fake-quant with per-tensor dynamic scale
+/// (mirrors `kernels/fake_quant.py::act_quant`); identity when bits <= 0.
+/// The scale is a max-reduction — exact under any association, so it
+/// needs no lane discipline.
+pub fn act_quant_inplace(t: &mut Tensor, bits: f32) {
+    if bits <= 0.0 {
+        return;
+    }
+    let n = (bits.exp2() - 1.0).max(1.0);
+    let mut s = 1e-8f32;
+    for &v in &t.data {
+        s = s.max(v.abs());
+    }
+    for v in &mut t.data {
+        let an = (*v / s).clamp(0.0, 1.0);
+        *v = (an * n).round() / n * s;
+    }
+}
+
+pub fn add_channel_bias(t: &mut Tensor, bias: &[f32]) {
+    let c = bias.len();
+    for row in t.data.chunks_exact_mut(c) {
+        for (v, &bv) in row.iter_mut().zip(bias) {
+            *v += bv;
+        }
+    }
+}
+
+pub fn mul_channel_mask(t: &mut Tensor, mask: &[f32]) {
+    let c = mask.len();
+    for row in t.data.chunks_exact_mut(c) {
+        for (v, &mv) in row.iter_mut().zip(mask) {
+            *v *= mv;
+        }
+    }
+}
+
+pub fn add_row_bias(t: &mut Tensor, bias: &[f32]) {
+    let n = bias.len();
+    for row in t.data.chunks_exact_mut(n) {
+        for (v, &bv) in row.iter_mut().zip(bias) {
+            *v += bv;
+        }
+    }
+}
+
+pub fn add_assign(t: &mut Tensor, other: &Tensor) {
+    debug_assert_eq!(t.len(), other.len());
+    for (a, &b) in t.data.iter_mut().zip(&other.data) {
+        *a += b;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Naive reference kernels
+// ---------------------------------------------------------------------------
+//
+// The plainest possible implementations of the same canonical math:
+// textbook per-element loops, per-tap bounds branches, memory
+// accumulators, no blocking, no threads, fresh allocations.  They are the
+// semantic ground truth the property tests compare the blocked kernels
+// against, and the baseline the `refback_kernels` bench measures the
+// speedup over.
+
+pub fn naive_conv2d(x: &Tensor, w: &Tensor, stride: usize) -> Result<Tensor> {
+    let g = ConvGeom::of_conv(x, w, stride)?;
+    let (s, k, cin, cout) = (g.stride, g.k, g.cin, g.cout);
+    let mut out = vec![0.0f32; g.b * g.out_len()];
+    // The textbook 7-deep loop, sharing nothing with the blocked paths:
+    // one scalar accumulator per output element, taps `(ky, kx, ic)`
+    // ascending — the exact chain the blocked kernels must reproduce.
+    for bi in 0..g.b {
+        for oy in 0..g.ho {
+            for ox in 0..g.wo {
+                for oc in 0..cout {
+                    let mut acc = 0.0f32;
+                    for ky in 0..k {
+                        let iy = (oy * s + ky) as isize - g.ph as isize;
+                        if iy < 0 || iy >= g.h as isize {
+                            continue;
+                        }
+                        for kx in 0..k {
+                            let ix = (ox * s + kx) as isize - g.pw as isize;
+                            if ix < 0 || ix >= g.w as isize {
+                                continue;
+                            }
+                            for ic in 0..cin {
+                                let xv = x.data
+                                    [((bi * g.h + iy as usize) * g.w + ix as usize) * cin + ic];
+                                let wv = w.data[((ky * k + kx) * cin + ic) * cout + oc];
+                                acc += xv * wv;
+                            }
+                        }
+                    }
+                    out[((bi * g.ho + oy) * g.wo + ox) * cout + oc] = acc;
+                }
+            }
+        }
+    }
+    Ok(Tensor::new(vec![g.b, g.ho, g.wo, g.cout], out))
+}
+
+pub fn naive_conv2d_backward(x: &Tensor, w: &Tensor, gout: &Tensor, stride: usize) -> ConvGrads {
+    let g = ConvGeom::new(
+        x.shape[0],
+        x.shape[1],
+        x.shape[2],
+        x.shape[3],
+        w.shape[0],
+        w.shape[3],
+        stride,
+    );
+    let wlen = w.len();
+    let mut dx = vec![0.0f32; x.len()];
+    let mut dwp = vec![0.0f32; g.b * wlen];
+    let mut dbp = vec![0.0f32; g.b * g.cout];
+    for bi in 0..g.b {
+        naive_conv2d_bwd_item(
+            &g,
+            &x.data[bi * g.in_len()..][..g.in_len()],
+            &w.data,
+            &gout.data[bi * g.out_len()..][..g.out_len()],
+            &mut dx[bi * g.in_len()..][..g.in_len()],
+            &mut dwp[bi * wlen..][..wlen],
+            &mut dbp[bi * g.cout..][..g.cout],
+        );
+    }
+    let mut dw = vec![0.0f32; wlen];
+    let mut db = vec![0.0f32; g.cout];
+    pool::reduce_partials(&mut dw, &dwp);
+    pool::reduce_partials(&mut db, &dbp);
+    ConvGrads { dx, dw, db }
+}
+
+fn naive_conv2d_bwd_item(
+    g: &ConvGeom,
+    x: &[f32],
+    w: &[f32],
+    gout: &[f32],
+    dx: &mut [f32],
+    dw: &mut [f32],
+    db: &mut [f32],
+) {
+    let (s, k, cin, cout) = (g.stride, g.k, g.cin, g.cout);
+    for oy in 0..g.ho {
+        for ox in 0..g.wo {
+            let grow = &gout[(oy * g.wo + ox) * cout..][..cout];
+            for (d, &gv) in db.iter_mut().zip(grow) {
+                *d += gv;
+            }
+            for ky in 0..k {
+                let iy = (oy * s + ky) as isize - g.ph as isize;
+                if iy < 0 || iy >= g.h as isize {
+                    continue;
+                }
+                for kx in 0..k {
+                    let ix = (ox * s + kx) as isize - g.pw as isize;
+                    if ix < 0 || ix >= g.w as isize {
+                        continue;
+                    }
+                    let xbase = ((iy as usize) * g.w + ix as usize) * cin;
+                    let wbase = (ky * k + kx) * cin * cout;
+                    for ic in 0..cin {
+                        let xv = x[xbase + ic];
+                        let wrow = &w[wbase + ic * cout..][..cout];
+                        for (oc, &gv) in grow.iter().enumerate() {
+                            dw[wbase + ic * cout + oc] += xv * gv;
+                        }
+                        dx[xbase + ic] += lane_dot(wrow, grow);
+                    }
+                }
+            }
+        }
+    }
+}
+
+pub fn naive_dwconv2d(x: &Tensor, w: &Tensor, stride: usize) -> Result<Tensor> {
+    let g = ConvGeom::of_dwconv(x, w, stride)?;
+    let c = g.cout;
+    let mut out = vec![0.0f32; g.b * g.out_len()];
+    for bi in 0..g.b {
+        let xi = &x.data[bi * g.in_len()..][..g.in_len()];
+        let oi = &mut out[bi * g.out_len()..][..g.out_len()];
+        for oy in 0..g.ho {
+            for ox in 0..g.wo {
+                let off = (oy * g.wo + ox) * c;
+                for ky in 0..g.k {
+                    let iy = (oy * g.stride + ky) as isize - g.ph as isize;
+                    if iy < 0 || iy >= g.h as isize {
+                        continue;
+                    }
+                    for kx in 0..g.k {
+                        let ix = (ox * g.stride + kx) as isize - g.pw as isize;
+                        if ix < 0 || ix >= g.w as isize {
+                            continue;
+                        }
+                        for cc in 0..c {
+                            oi[off + cc] += xi[((iy as usize) * g.w + ix as usize) * c + cc]
+                                * w.data[(ky * g.k + kx) * c + cc];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Ok(Tensor::new(vec![g.b, g.ho, g.wo, c], out))
+}
+
+pub fn naive_dwconv2d_backward(x: &Tensor, w: &Tensor, gout: &Tensor, stride: usize) -> ConvGrads {
+    let c = x.shape[3];
+    let g = ConvGeom::new(x.shape[0], x.shape[1], x.shape[2], c, w.shape[0], c, stride);
+    let (s, k) = (g.stride, g.k);
+    let wlen = w.len();
+    let mut dx = vec![0.0f32; x.len()];
+    let mut dwp = vec![0.0f32; g.b * wlen];
+    let mut dbp = vec![0.0f32; g.b * c];
+    // Independent transcription of the canonical order (per-item partials,
+    // `(oy, ox)` ascending, in-bounds taps ascending) — deliberately NOT
+    // the same code the blocked path runs, so a bug in one cannot hide in
+    // the other.
+    for bi in 0..g.b {
+        for oy in 0..g.ho {
+            for ox in 0..g.wo {
+                for cc in 0..c {
+                    let gv = gout.data[((bi * g.ho + oy) * g.wo + ox) * c + cc];
+                    dbp[bi * c + cc] += gv;
+                }
+                for ky in 0..k {
+                    let iy = (oy * s + ky) as isize - g.ph as isize;
+                    if iy < 0 || iy >= g.h as isize {
+                        continue;
+                    }
+                    for kx in 0..k {
+                        let ix = (ox * s + kx) as isize - g.pw as isize;
+                        if ix < 0 || ix >= g.w as isize {
+                            continue;
+                        }
+                        for cc in 0..c {
+                            let gv = gout.data[((bi * g.ho + oy) * g.wo + ox) * c + cc];
+                            let xi = ((bi * g.h + iy as usize) * g.w + ix as usize) * c + cc;
+                            let wi = (ky * k + kx) * c + cc;
+                            dwp[bi * wlen + wi] += x.data[xi] * gv;
+                            dx[xi] += w.data[wi] * gv;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    let mut dw = vec![0.0f32; wlen];
+    let mut db = vec![0.0f32; c];
+    pool::reduce_partials(&mut dw, &dwp);
+    pool::reduce_partials(&mut db, &dbp);
+    ConvGrads { dx, dw, db }
+}
+
+pub fn naive_matmul(a: &Tensor, w: &Tensor) -> Tensor {
+    let (m, k) = (a.shape[0], a.shape[1]);
+    let n = w.shape[1];
+    let mut out = vec![0.0f32; m * n];
+    for mi in 0..m {
+        for ni in 0..n {
+            let mut acc = 0.0f32;
+            for ki in 0..k {
+                acc += a.data[mi * k + ki] * w.data[ki * n + ni];
+            }
+            out[mi * n + ni] = acc;
+        }
+    }
+    Tensor::new(vec![m, n], out)
+}
+
+// ---------------------------------------------------------------------------
+// Property tests: blocked == naive, bit for bit, at every thread count
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn rand_tensor(shape: &[usize], rng: &mut Rng) -> Tensor {
+        let data = (0..shape.iter().product::<usize>()).map(|_| rng.normal()).collect();
+        Tensor::new(shape.to_vec(), data)
+    }
+
+    /// Decode a raw dim vector into a valid conv problem; shrinking the
+    /// vector shrinks the problem.
+    fn conv_case(v: &[usize]) -> Option<(usize, usize, usize, usize, usize, usize, usize, u64)> {
+        if v.len() < 8 {
+            return None;
+        }
+        let b = v[0] % 3 + 1;
+        let h = v[1] % 7 + 3;
+        let w = v[2] % 7 + 3;
+        let cin = v[3] % 5 + 1;
+        let cout = v[4] % 19 + 1; // crosses the NR=8 tile boundary
+        let k = [1, 3, 5][v[5] % 3];
+        let stride = v[6] % 2 + 1;
+        Some((b, h, w, cin, cout, k, stride, v[7] as u64))
+    }
+
+    fn gen_dims(r: &mut Rng) -> Vec<usize> {
+        (0..8).map(|_| r.below(1000)).collect()
+    }
+
+    #[test]
+    fn prop_conv2d_blocked_equals_naive() {
+        prop::check("conv2d blocked == naive", 60, gen_dims, |v| {
+            let Some((b, h, w, cin, cout, k, s, seed)) = conv_case(v) else {
+                return Ok(());
+            };
+            let mut rng = Rng::new(seed ^ 0xc0ffee);
+            let x = rand_tensor(&[b, h, w, cin], &mut rng);
+            let wt = rand_tensor(&[k, k, cin, cout], &mut rng);
+            let want = naive_conv2d(&x, &wt, s).unwrap();
+            for threads in [1usize, 2, 3] {
+                let mut sc = Scratch::default();
+                let got = conv2d(&x, &wt, s, threads, &mut sc).unwrap();
+                if got.shape != want.shape || got.data != want.data {
+                    return Err(format!(
+                        "conv2d mismatch at {threads} threads (b={b} h={h} w={w} cin={cin} \
+                         cout={cout} k={k} s={s})"
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_conv2d_backward_blocked_equals_naive() {
+        prop::check("conv2d backward blocked == naive", 40, gen_dims, |v| {
+            let Some((b, h, w, cin, cout, k, s, seed)) = conv_case(v) else {
+                return Ok(());
+            };
+            let mut rng = Rng::new(seed ^ 0xdead);
+            let x = rand_tensor(&[b, h, w, cin], &mut rng);
+            let wt = rand_tensor(&[k, k, cin, cout], &mut rng);
+            let ho = h.div_ceil(s);
+            let wo = w.div_ceil(s);
+            let gy = rand_tensor(&[b, ho, wo, cout], &mut rng);
+            let want = naive_conv2d_backward(&x, &wt, &gy, s);
+            for threads in [1usize, 2, 3] {
+                let mut sc = Scratch::default();
+                let got = conv2d_backward(&x, &wt, &gy, s, threads, &mut sc);
+                if got.dx != want.dx || got.dw != want.dw || got.db != want.db {
+                    return Err(format!(
+                        "conv2d_backward mismatch at {threads} threads (b={b} h={h} w={w} \
+                         cin={cin} cout={cout} k={k} s={s})"
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_dwconv2d_blocked_equals_naive() {
+        prop::check("dwconv2d blocked == naive", 40, gen_dims, |v| {
+            let Some((b, h, w, c, _, k, s, seed)) = conv_case(v) else {
+                return Ok(());
+            };
+            let mut rng = Rng::new(seed ^ 0xfeed);
+            let x = rand_tensor(&[b, h, w, c], &mut rng);
+            let wt = rand_tensor(&[k, k, 1, c], &mut rng);
+            let want = naive_dwconv2d(&x, &wt, s).unwrap();
+            let ho = h.div_ceil(s);
+            let wo = w.div_ceil(s);
+            let gy = rand_tensor(&[b, ho, wo, c], &mut rng);
+            let wantb = naive_dwconv2d_backward(&x, &wt, &gy, s);
+            for threads in [1usize, 2, 3] {
+                let mut sc = Scratch::default();
+                let got = dwconv2d(&x, &wt, s, threads, &mut sc).unwrap();
+                if got.data != want.data || got.shape != want.shape {
+                    return Err(format!("dwconv2d fwd mismatch at {threads} threads"));
+                }
+                let gotb = dwconv2d_backward(&x, &wt, &gy, s, threads, &mut sc);
+                if gotb.dx != wantb.dx || gotb.dw != wantb.dw || gotb.db != wantb.db {
+                    return Err(format!("dwconv2d bwd mismatch at {threads} threads"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_matmul_blocked_equals_naive() {
+        prop::check("matmul blocked == naive", 80, gen_dims, |v| {
+            if v.len() < 4 {
+                return Ok(());
+            }
+            let m = v[0] % 9 + 1;
+            let k = v[1] % 33 + 1;
+            let n = v[2] % 21 + 1;
+            let mut rng = Rng::new(v[3] as u64 ^ 0xabc);
+            let a = rand_tensor(&[m, k], &mut rng);
+            let w = rand_tensor(&[k, n], &mut rng);
+            let want = naive_matmul(&a, &w);
+            let mut sc = Scratch::default();
+            let got = matmul(&a, &w, &mut sc);
+            if got.data != want.data {
+                return Err(format!("matmul mismatch (m={m} k={k} n={n})"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_thread_count_invariance_on_threaded_sizes() {
+        // Shapes big enough to clear the flops gate, so threads really
+        // spawn: same bits at 1, 2 and 3 threads.
+        prop::check("conv kernels thread-count invariant", 6, gen_dims, |v| {
+            if v.len() < 2 {
+                return Ok(());
+            }
+            let mut rng = Rng::new(v[0] as u64 ^ 0x717);
+            let cout = 9 + v[1] % 12; // off-tile sizes included
+            let x = rand_tensor(&[3, 14, 14, 8], &mut rng);
+            let wt = rand_tensor(&[3, 3, 8, cout], &mut rng);
+            let gy = rand_tensor(&[3, 14, 14, cout], &mut rng);
+            let run = |threads: usize| {
+                let mut sc = Scratch::default();
+                let f = conv2d(&x, &wt, 1, threads, &mut sc).unwrap();
+                let b = conv2d_backward(&x, &wt, &gy, 1, threads, &mut sc);
+                (f.data, b.dx, b.dw, b.db)
+            };
+            let one = run(1);
+            for t in [2usize, 3] {
+                if run(t) != one {
+                    return Err(format!("thread count {t} changed bits (cout={cout})"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn lane_dot_matches_f64_reference() {
+        let mut rng = Rng::new(42);
+        for n in [0usize, 1, 7, 8, 9, 16, 37] {
+            let a: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let b: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let got = lane_dot(&a, &b) as f64;
+            let want: f64 = a.iter().zip(&b).map(|(&x, &y)| x as f64 * y as f64).sum();
+            assert!((got - want).abs() <= 1e-4 * (1.0 + want.abs()), "n={n}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn interior_bounds_are_actually_interior() {
+        let cases = [(16usize, 16usize, 3usize, 1usize), (9, 7, 5, 2), (4, 4, 3, 2), (3, 3, 5, 1)];
+        for (h, w, k, s) in cases {
+            let g = ConvGeom::new(1, h, w, 1, k, 1, s);
+            for oy in g.oy0..g.oy1 {
+                for ky in 0..k {
+                    let iy = (oy * s + ky) as isize - g.ph as isize;
+                    assert!(iy >= 0 && (iy as usize) < h, "oy={oy} ky={ky} h={h} k={k} s={s}");
+                }
+            }
+            for ox in g.ox0..g.ox1 {
+                for kx in 0..k {
+                    let ix = (ox * s + kx) as isize - g.pw as isize;
+                    assert!(ix >= 0 && (ix as usize) < w, "ox={ox} kx={kx} w={w} k={k} s={s}");
+                }
+            }
+            // And the first excluded rows/cols (if any) are genuinely not.
+            if g.oy1 < g.ho {
+                let oy = g.oy1;
+                let any_oob = (0..k).any(|ky| {
+                    let iy = (oy * s + ky) as isize - g.ph as isize;
+                    iy < 0 || iy >= h as isize
+                });
+                assert!(any_oob, "row {oy} excluded from interior but fully in bounds");
+            }
+        }
+    }
+
+    #[test]
+    fn same_padding_geometry() {
+        assert_eq!(same_pad_lo(16, 16, 3, 1), 1);
+        assert_eq!(same_pad_lo(16, 8, 3, 2), 0); // total 1, low 0
+        assert_eq!(same_pad_lo(16, 16, 1, 1), 0);
+    }
+
+    #[test]
+    fn maxpool_route_recording_does_not_perturb() {
+        let mut sc = Scratch::default();
+        let x = Tensor::ones(&[1, 5, 5, 1]);
+        let (p, idx) = maxpool2(&x, true, &mut sc).unwrap();
+        assert_eq!(p.shape, vec![1, 2, 2, 1]);
+        assert_eq!(idx.len(), 4);
+        let (p2, idx2) = maxpool2(&x, false, &mut sc).unwrap();
+        assert_eq!(p2.data, p.data, "route recording must not perturb values");
+        assert!(idx2.is_empty());
+    }
+
+    #[test]
+    fn rmsnorm_inplace_matches_out_of_place() {
+        let mut rng = Rng::new(7);
+        let x = rand_tensor(&[2, 3, 3, 4], &mut rng);
+        let mut sc = Scratch::default();
+        let (y, rs, d) = rmsnorm(&x, 4.0, &mut sc);
+        let mut x2 = x.clone();
+        rmsnorm_inplace(&mut x2, 4.0);
+        assert_eq!(y.data, x2.data, "in-place and out-of-place rmsnorm must agree bitwise");
+        assert_eq!(rs.len(), 2);
+        assert_eq!(d, 36.0);
+    }
+}

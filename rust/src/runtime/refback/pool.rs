@@ -1,0 +1,279 @@
+//! Batch-parallel execution helpers for the reference-backend kernels.
+//!
+//! The determinism contract (DESIGN.md §Backends) is **thread-count
+//! invariance**: every value a kernel produces must be bit-identical for
+//! every thread count, including 1.  The helpers here make that easy to
+//! uphold by construction:
+//!
+//! * work is split over *items* (batch samples), and every item's output
+//!   lives in its own disjoint chunk of the output buffer(s) — no shared
+//!   accumulator is ever written from two threads;
+//! * each item is computed by a pure function of its inputs, so *which*
+//!   thread runs it cannot change its bits;
+//! * cross-item reductions never happen here: kernels materialize
+//!   fixed-shape per-item partials (also disjoint chunks) and reduce them
+//!   afterwards in item-index order on the calling thread
+//!   ([`reduce_partials`]).
+//!
+//! Threads are plain `std::thread::scope` spawns over contiguous item
+//! ranges (the offline crate set has no rayon); spawning costs a few tens
+//! of microseconds, so callers gate on [`worth_threading`] and serve-style
+//! batch-1 calls never pay it.
+
+use std::ops::Range;
+
+/// Resolve the kernel thread count for a new reference engine:
+/// an explicit request wins, then the `COC_REF_THREADS` environment
+/// variable, then `std::thread::available_parallelism()`.
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("COC_REF_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Kernel threads for one worker of an `n`-worker pool, so serve workers
+/// and plan `--jobs` workers compose with kernel threads without
+/// oversubscribing the machine: each worker gets its share of the total,
+/// never less than 1.
+pub fn threads_per_worker(total: usize, workers: usize) -> usize {
+    (total / workers.max(1)).max(1)
+}
+
+/// Below this many flops per item, scoped-thread spawn overhead dominates
+/// any win (measured: a spawn+join round is ~30-80µs; 64k f32 MACs are
+/// ~15µs single-threaded).  Serve-time batch-1 stage calls and the tiny
+/// unit-test archs all fall under it and stay serial.
+const MIN_FLOPS_PER_ITEM: usize = 64 * 1024;
+
+/// Should this kernel call actually spawn?  Never affects results — only
+/// whether the (bit-identical) per-item work runs on one thread or many.
+pub fn worth_threading(threads: usize, items: usize, flops_per_item: usize) -> bool {
+    threads > 1 && items > 1 && flops_per_item >= MIN_FLOPS_PER_ITEM
+}
+
+/// Contiguous near-equal split of `0..items` into at most `parts` ranges.
+fn ranges(items: usize, parts: usize) -> Vec<Range<usize>> {
+    let parts = parts.clamp(1, items.max(1));
+    let base = items / parts;
+    let extra = items % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0;
+    for p in 0..parts {
+        let len = base + usize::from(p < extra);
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+/// Run `f(item, chunk)` for every item, where `chunk` is the item's
+/// disjoint `item_len` slice of `out`.  Parallel over contiguous item
+/// ranges when it pays; bit-identical at every thread count.
+pub fn for_each_item<F>(
+    threads: usize,
+    flops_per_item: usize,
+    out: &mut [f32],
+    item_len: usize,
+    f: F,
+) where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    if item_len == 0 || out.is_empty() {
+        return;
+    }
+    let items = out.len() / item_len;
+    debug_assert_eq!(out.len(), items * item_len);
+    if !worth_threading(threads, items, flops_per_item) {
+        for (i, chunk) in out.chunks_exact_mut(item_len).enumerate() {
+            f(i, chunk);
+        }
+        return;
+    }
+    let rs = ranges(items, threads);
+    std::thread::scope(|s| {
+        let mut rest = out;
+        for r in rs {
+            let (head, tail) = rest.split_at_mut(r.len() * item_len);
+            rest = tail;
+            let f = &f;
+            s.spawn(move || {
+                for (j, chunk) in head.chunks_exact_mut(item_len).enumerate() {
+                    f(r.start + j, chunk);
+                }
+            });
+        }
+    });
+}
+
+/// Three-output variant: each item owns disjoint chunks of `a`, `b` and
+/// `c` (e.g. conv backward: `dx` slice + per-item `dw` and `db` partials).
+pub fn for_each_item3<F>(
+    threads: usize,
+    flops_per_item: usize,
+    items: usize,
+    a: (&mut [f32], usize),
+    b: (&mut [f32], usize),
+    c: (&mut [f32], usize),
+    f: F,
+) where
+    F: Fn(usize, &mut [f32], &mut [f32], &mut [f32]) + Sync,
+{
+    let (a, alen) = a;
+    let (b, blen) = b;
+    let (c, clen) = c;
+    if items == 0 {
+        return;
+    }
+    debug_assert_eq!(a.len(), items * alen);
+    debug_assert_eq!(b.len(), items * blen);
+    debug_assert_eq!(c.len(), items * clen);
+    if !worth_threading(threads, items, flops_per_item) {
+        for i in 0..items {
+            f(
+                i,
+                &mut a[i * alen..(i + 1) * alen],
+                &mut b[i * blen..(i + 1) * blen],
+                &mut c[i * clen..(i + 1) * clen],
+            );
+        }
+        return;
+    }
+    let rs = ranges(items, threads);
+    std::thread::scope(|s| {
+        let (mut ra, mut rb, mut rc) = (a, b, c);
+        for r in rs {
+            let (ha, ta) = ra.split_at_mut(r.len() * alen);
+            ra = ta;
+            let (hb, tb) = rb.split_at_mut(r.len() * blen);
+            rb = tb;
+            let (hc, tc) = rc.split_at_mut(r.len() * clen);
+            rc = tc;
+            let f = &f;
+            s.spawn(move || {
+                for j in 0..r.len() {
+                    f(
+                        r.start + j,
+                        &mut ha[j * alen..(j + 1) * alen],
+                        &mut hb[j * blen..(j + 1) * blen],
+                        &mut hc[j * clen..(j + 1) * clen],
+                    );
+                }
+            });
+        }
+    });
+}
+
+/// Reduce per-item partials into `acc` in **item-index order** — the one
+/// canonical cross-item accumulation order, independent of how the
+/// partials were computed.  `partials` is `items * acc.len()` long.
+pub fn reduce_partials(acc: &mut [f32], partials: &[f32]) {
+    let n = acc.len();
+    if n == 0 {
+        return;
+    }
+    for item in partials.chunks_exact(n) {
+        for (a, &p) in acc.iter_mut().zip(item) {
+            *a += p;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ranges_cover_exactly() {
+        for (items, parts) in [(10usize, 3usize), (3, 8), (1, 1), (16, 4), (7, 7)] {
+            let rs = ranges(items, parts);
+            let mut next = 0;
+            for r in &rs {
+                assert_eq!(r.start, next);
+                next = r.end;
+            }
+            assert_eq!(next, items);
+            let (min, max) = rs
+                .iter()
+                .fold((usize::MAX, 0), |(lo, hi), r| (lo.min(r.len()), hi.max(r.len())));
+            assert!(max - min <= 1, "near-equal split: {rs:?}");
+        }
+    }
+
+    #[test]
+    fn for_each_item_same_bits_any_thread_count() {
+        let items = 13;
+        let len = 7;
+        let run = |threads: usize| {
+            let mut out = vec![0.0f32; items * len];
+            // Force threading past the flops gate with a big fake cost.
+            for_each_item(threads, usize::MAX, &mut out, len, |i, chunk| {
+                for (j, v) in chunk.iter_mut().enumerate() {
+                    *v = ((i * 31 + j) as f32).sin();
+                }
+            });
+            out
+        };
+        let a = run(1);
+        for t in [2, 3, 5, 16] {
+            assert_eq!(a, run(t), "thread count {t} changed bits");
+        }
+    }
+
+    #[test]
+    fn for_each_item3_disjoint_chunks() {
+        let items = 5;
+        let run = |threads: usize| {
+            let mut a = vec![0.0f32; items * 2];
+            let mut b = vec![0.0f32; items * 3];
+            let mut c = vec![0.0f32; items];
+            for_each_item3(
+                threads,
+                usize::MAX,
+                items,
+                (&mut a, 2),
+                (&mut b, 3),
+                (&mut c, 1),
+                |i, ca, cb, cc| {
+                    ca.fill(i as f32);
+                    cb.fill(i as f32 * 10.0);
+                    cc[0] = i as f32 * 100.0;
+                },
+            );
+            (a, b, c)
+        };
+        let one = run(1);
+        assert_eq!(one, run(3));
+        assert_eq!(one.2, vec![0.0, 100.0, 200.0, 300.0, 400.0]);
+    }
+
+    #[test]
+    fn reduce_partials_index_order() {
+        let mut acc = vec![1.0f32, 2.0];
+        reduce_partials(&mut acc, &[10.0, 20.0, 100.0, 200.0]);
+        assert_eq!(acc, vec![111.0, 222.0]);
+    }
+
+    #[test]
+    fn small_work_stays_serial() {
+        assert!(!worth_threading(8, 1, usize::MAX), "single item never threads");
+        assert!(!worth_threading(1, 64, usize::MAX), "one thread never spawns");
+        assert!(!worth_threading(8, 64, 100), "tiny items never thread");
+        assert!(worth_threading(2, 2, MIN_FLOPS_PER_ITEM));
+    }
+
+    #[test]
+    fn default_threads_is_positive() {
+        assert!(default_threads() >= 1);
+    }
+
+    #[test]
+    fn threads_per_worker_shares_without_oversubscription() {
+        assert_eq!(threads_per_worker(8, 2), 4);
+        assert_eq!(threads_per_worker(8, 3), 2);
+        assert_eq!(threads_per_worker(2, 4), 1, "never below 1");
+        assert_eq!(threads_per_worker(4, 0), 4, "0 workers treated as 1");
+    }
+}

@@ -1,0 +1,203 @@
+//! Reusable scratch arena for the reference backend's hot loops.
+//!
+//! The naive interpreter allocated a fresh `Vec` for every op output,
+//! every forward trace, every gradient and every per-step parameter
+//! clone; over a training stage that is thousands of allocator
+//! round-trips per step.  A [`Scratch`] keeps retired buffers on shelves
+//! and hands them back out, so the steady state of a train/eval/serve
+//! loop reuses the same allocations step after step.
+//!
+//! Ownership rules (DESIGN.md §Backends):
+//!
+//! * One arena per `RefGraph`, behind a `Mutex` the graph locks once per
+//!   `run` — buffers never cross graphs or engines.
+//! * `take(len)` returns a **zero-filled** buffer of exactly `len` — a
+//!   recycled buffer is indistinguishable from a fresh allocation, so
+//!   reuse can never perturb a value (determinism is the contract).
+//!   `take_full(len)` skips that memset for outputs the caller provably
+//!   writes in full (conv/matmul/norm outputs); accumulator buffers
+//!   always go through `take`.
+//! * Buffers that escape to the caller (returned output tensors) simply
+//!   never come back — the arena only tracks what is explicitly
+//!   [`Scratch::recycle`]d, and callers recycle exactly the intermediates
+//!   they own (traces, activations, partials).
+//! * Shelves are bounded ([`MAX_SHELF`]); overflow buffers drop and free.
+
+use crate::tensor::Tensor;
+
+/// Retired buffers kept per type; bounds arena growth if a caller
+/// recycles more than it takes (it should not).
+const MAX_SHELF: usize = 128;
+
+#[derive(Default)]
+pub struct Scratch {
+    f32s: Vec<Vec<f32>>,
+    u32s: Vec<Vec<u32>>,
+}
+
+impl Scratch {
+    /// A zero-filled `f32` buffer of exactly `len`, reusing a retired
+    /// allocation when one is big enough (best-fit by capacity).
+    pub fn take(&mut self, len: usize) -> Vec<f32> {
+        match best_fit(&self.f32s, len) {
+            Some(i) => {
+                let mut v = self.f32s.swap_remove(i);
+                v.clear();
+                v.resize(len, 0.0);
+                v
+            }
+            None => vec![0.0; len],
+        }
+    }
+
+    /// Like [`Scratch::take`] but with **unspecified contents** (stale
+    /// values from a previous use may remain) — skips the zero-fill
+    /// memset, for outputs the caller provably writes in full (conv /
+    /// matmul / norm outputs; the kernel property tests and the
+    /// recycled-arena determinism test would catch any element left
+    /// unwritten).  Accumulator buffers (`+=` targets) must use `take`.
+    pub fn take_full(&mut self, len: usize) -> Vec<f32> {
+        match best_fit(&self.f32s, len) {
+            Some(i) => {
+                let mut v = self.f32s.swap_remove(i);
+                if v.len() > len {
+                    v.truncate(len);
+                } else {
+                    // Only the appended region beyond the old length pays
+                    // an initialization pass.
+                    v.resize(len, 0.0);
+                }
+                v
+            }
+            None => vec![0.0; len],
+        }
+    }
+
+    /// Like [`Scratch::take`] for the `u32` pool-route buffers.
+    pub fn take_u32(&mut self, len: usize) -> Vec<u32> {
+        match best_fit(&self.u32s, len) {
+            Some(i) => {
+                let mut v = self.u32s.swap_remove(i);
+                v.clear();
+                v.resize(len, 0);
+                v
+            }
+            None => vec![0; len],
+        }
+    }
+
+    pub fn recycle(&mut self, v: Vec<f32>) {
+        if v.capacity() > 0 && self.f32s.len() < MAX_SHELF {
+            self.f32s.push(v);
+        }
+    }
+
+    pub fn recycle_u32(&mut self, v: Vec<u32>) {
+        if v.capacity() > 0 && self.u32s.len() < MAX_SHELF {
+            self.u32s.push(v);
+        }
+    }
+
+    /// Retire a whole tensor's storage back to the arena.
+    pub fn recycle_tensor(&mut self, t: Tensor) {
+        self.recycle(t.data);
+    }
+
+    /// Buffers currently shelved (test/introspection hook).
+    pub fn shelved(&self) -> usize {
+        self.f32s.len() + self.u32s.len()
+    }
+}
+
+/// Index of the smallest shelved buffer whose capacity covers `len`, so a
+/// small request does not pin the largest buffer.
+fn best_fit<T>(shelf: &[Vec<T>], len: usize) -> Option<usize> {
+    let mut best: Option<(usize, usize)> = None;
+    for (i, v) in shelf.iter().enumerate() {
+        let cap = v.capacity();
+        if cap >= len && best.map(|(_, c)| cap < c).unwrap_or(true) {
+            best = Some((i, cap));
+        }
+    }
+    // No buffer is big enough: grow the largest one rather than malloc
+    // anew (steady-state sizes repeat, so this settles after warmup).
+    if best.is_none() && !shelf.is_empty() {
+        let mut imax = 0;
+        for (i, v) in shelf.iter().enumerate() {
+            if v.capacity() > shelf[imax].capacity() {
+                imax = i;
+            }
+        }
+        return Some(imax);
+    }
+    best.map(|(i, _)| i)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_is_zeroed_after_recycle() {
+        let mut s = Scratch::default();
+        let mut v = s.take(4);
+        v.copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        let cap = v.capacity();
+        s.recycle(v);
+        let v2 = s.take(3);
+        assert_eq!(v2, vec![0.0; 3], "recycled buffer must be indistinguishable from fresh");
+        assert!(v2.capacity() >= 3);
+        assert_eq!(v2.capacity(), cap, "allocation was reused, not re-made");
+    }
+
+    #[test]
+    fn take_full_skips_the_memset_but_sizes_exactly() {
+        let mut s = Scratch::default();
+        s.recycle(vec![7.0; 8]);
+        let v = s.take_full(4);
+        assert_eq!(v.len(), 4, "exact length, stale contents allowed");
+        assert_eq!(v, vec![7.0; 4], "reused storage keeps prior values (callers overwrite)");
+        s.recycle(v);
+        let v = s.take_full(6);
+        assert_eq!(v.len(), 6);
+        assert_eq!(&v[4..], &[0.0, 0.0], "grown region is initialized");
+        // Fresh allocations are zeroed either way.
+        let mut empty = Scratch::default();
+        assert_eq!(empty.take_full(3), vec![0.0; 3]);
+    }
+
+    #[test]
+    fn best_fit_prefers_smallest_sufficient() {
+        let mut s = Scratch::default();
+        s.recycle(Vec::with_capacity(100));
+        s.recycle(Vec::with_capacity(10));
+        let v = s.take(8);
+        assert!(v.capacity() < 100, "small request must not pin the big buffer");
+        assert_eq!(s.shelved(), 1);
+    }
+
+    #[test]
+    fn grows_existing_buffer_when_none_fit() {
+        let mut s = Scratch::default();
+        s.recycle(vec![1.0; 4]);
+        let v = s.take(16);
+        assert_eq!(v, vec![0.0; 16]);
+        assert_eq!(s.shelved(), 0, "the too-small buffer was taken and grown");
+    }
+
+    #[test]
+    fn u32_shelf_independent() {
+        let mut s = Scratch::default();
+        s.recycle_u32(vec![7; 5]);
+        assert_eq!(s.take_u32(5), vec![0; 5]);
+        assert_eq!(s.take(2), vec![0.0; 2]);
+    }
+
+    #[test]
+    fn tensor_recycling_roundtrip() {
+        let mut s = Scratch::default();
+        s.recycle_tensor(Tensor::ones(&[2, 3]));
+        let v = s.take(6);
+        assert_eq!(v, vec![0.0; 6]);
+    }
+}

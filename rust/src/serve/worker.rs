@@ -70,6 +70,13 @@ pub struct PoolOpts {
     /// Execution backend each worker engine is built on.  `Ref` ignores
     /// `artifacts_dir` — the hermetic pool the concurrency tests run on.
     pub backend: BackendChoice,
+    /// Total ref-backend kernel thread budget for the whole pool
+    /// (`--ref-threads`; default: available parallelism).  Each worker
+    /// engine gets a `runtime::threads_per_worker` share, so worker
+    /// threads and kernel threads compose without oversubscription.
+    /// Thread counts never change results — the ref backend is
+    /// thread-count invariant by contract.
+    pub ref_threads: usize,
 }
 
 impl PoolOpts {
@@ -81,6 +88,7 @@ impl PoolOpts {
             batch: BatchPolicy::default(),
             thresholds,
             backend: BackendChoice::Pjrt,
+            ref_threads: crate::runtime::default_ref_threads(),
         }
     }
 }
@@ -256,9 +264,12 @@ fn worker_main(
         cv.notify_all();
         e
     };
-    let engine = match Engine::with_backend(opts.backend, &opts.artifacts_dir)
-        .with_context(|| format!("worker {w}: creating {} engine", opts.backend.name()))
-    {
+    // Each worker engine gets its share of the pool's kernel-thread
+    // budget (ref backend only; PJRT ignores it).
+    let kernel_threads = crate::runtime::threads_per_worker(opts.ref_threads, opts.workers);
+    let made = Engine::with_backend_threads(opts.backend, &opts.artifacts_dir, kernel_threads)
+        .with_context(|| format!("worker {w}: creating {} engine", opts.backend.name()));
+    let engine = match made {
         Ok(e) => e,
         Err(e) => return Err(fail(e)),
     };

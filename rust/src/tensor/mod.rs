@@ -72,11 +72,22 @@ impl Tensor {
     /// the output-channel axis (HWIO conv weights and [in, out] dense
     /// weights both satisfy this) — the channel-importance signal used by
     /// the pruning stage.
+    ///
+    /// Row-wise `chunks_exact` accumulation instead of per-element
+    /// `i % c` modulo indexing: each channel still sums its contributions
+    /// in ascending row order (bit-identical results), without a hardware
+    /// divide per element on the pruning path.
     pub fn channel_l2(&self) -> Vec<f32> {
         let c = *self.shape.last().expect("channel_l2 on rank-0 tensor");
         let mut out = vec![0.0f32; c];
-        for (i, &v) in self.data.iter().enumerate() {
-            out[i % c] += v * v;
+        if c == 0 {
+            return out;
+        }
+        debug_assert_eq!(self.data.len() % c, 0, "tensor length is a multiple of its last axis");
+        for row in self.data.chunks_exact(c) {
+            for (o, &v) in out.iter_mut().zip(row) {
+                *o += v * v;
+            }
         }
         for v in &mut out {
             *v = v.sqrt();
@@ -180,6 +191,33 @@ mod tests {
         assert!((n[0] - (2.0f32).sqrt()).abs() < 1e-6);
         assert_eq!(n[1], 0.0);
         assert!((n[2] - (8.0f32).sqrt()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn channel_l2_chunked_matches_modulo_reference_bitwise() {
+        // The chunks_exact rewrite must keep the exact per-channel
+        // summation order of the old `i % c` walk — including on shapes
+        // whose row count is odd / not a multiple of any unroll width,
+        // where a blocked or reordered accumulation would diverge.
+        let mut rng = Rng::new(11);
+        for shape in [vec![7, 5], vec![3, 3, 4], vec![1, 9], vec![13], vec![5, 1]] {
+            let t = Tensor::new(
+                shape.clone(),
+                (0..shape.iter().product::<usize>()).map(|_| rng.normal()).collect(),
+            );
+            let c = *t.shape.last().unwrap();
+            let mut want = vec![0.0f32; c];
+            for (i, &v) in t.data.iter().enumerate() {
+                want[i % c] += v * v;
+            }
+            for v in &mut want {
+                *v = v.sqrt();
+            }
+            assert_eq!(t.channel_l2(), want, "shape {shape:?}");
+        }
+        // Degenerate 0-channel tensor stays total (and must not panic in
+        // chunks_exact).
+        assert!(Tensor::new(vec![2, 0], vec![]).channel_l2().is_empty());
     }
 
     #[test]

@@ -479,3 +479,59 @@ fn ref_builtin_manifest_serves_mini_vgg() {
         assert_eq!(*pred, logits.argmax_rows()[i], "request {i} diverged from eval");
     }
 }
+
+/// Golden determinism digest: a canonical train -> eval flow on the
+/// ref backend over the real-sized built-in mini_vgg (big enough that the
+/// kernel thread pool actually engages), hashed to one value.
+///
+/// Asserts in-process that 1, 2 and 3 kernel threads produce the same
+/// bits, and — when `COC_REF_DIGEST_OUT` is set — writes the digest so CI
+/// can diff it across `COC_REF_THREADS` settings: if threading ever
+/// changes a result, the two CI runs disagree and the diff fails.
+#[test]
+fn ref_golden_digest_is_thread_count_invariant() {
+    fn digest_of(threads: Option<usize>) -> u64 {
+        let engine = match threads {
+            Some(t) => Engine::new_ref_with_threads(t).unwrap(),
+            None => Engine::new_ref().unwrap(), // COC_REF_THREADS / parallelism
+        };
+        let arch = builtin_ref_manifest().arch("mini_vgg").unwrap();
+        let train_ds = Dataset::generate(DatasetKind::SynthC10, 96, 21, 0);
+        let test_ds = Dataset::generate(DatasetKind::SynthC10, 48, 21, 1);
+        let mut st = train::init_state(&engine, arch, 21).unwrap();
+        let opts = TrainOpts { steps: 6, seed: 21, exit_w: [0.3, 0.3], ..Default::default() };
+        let log = train::train(&engine, &mut st, &train_ds, None, &opts).unwrap();
+        let (logits, e1, e2) = train::eval_logits(&engine, &st, &test_ds).unwrap();
+
+        // FNV-1a over the exact f32 bit patterns of everything the flow
+        // produced: params, momenta, losses, all three logit heads.
+        let mut h = 0xcbf29ce484222325u64;
+        let mut eat = |data: &[f32]| {
+            for v in data {
+                for byte in v.to_bits().to_le_bytes() {
+                    h ^= byte as u64;
+                    h = h.wrapping_mul(0x100000001b3);
+                }
+            }
+        };
+        for t in st.params.iter().chain(st.momenta.iter()) {
+            eat(&t.data);
+        }
+        eat(&log.losses);
+        eat(&logits.data);
+        eat(&e1.data);
+        eat(&e2.data);
+        h
+    }
+
+    let d1 = digest_of(Some(1));
+    for t in [2usize, 3] {
+        assert_eq!(d1, digest_of(Some(t)), "{t} kernel threads changed the golden digest");
+    }
+    let denv = digest_of(None);
+    assert_eq!(d1, denv, "default thread count changed the golden digest");
+    if let Ok(path) = std::env::var("COC_REF_DIGEST_OUT") {
+        std::fs::write(&path, format!("{denv:016x}\n")).unwrap();
+        eprintln!("golden digest {denv:016x} -> {path}");
+    }
+}
