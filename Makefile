@@ -5,10 +5,11 @@
 #   make test        python unit tests + rust test suite
 #   make verify      tier-1 (release build + cargo test) + pytest python/tests
 #   make bench       rust micro/e2e benches (needs artifacts)
+#   make bench-diff  gate results/ against the committed BENCH_*.json ledgers
 
 ARTIFACTS := artifacts
 
-.PHONY: artifacts build test verify bench
+.PHONY: artifacts build test verify bench bench-diff
 
 artifacts:
 	cd python && python -m compile.aot --out ../$(ARTIFACTS)
@@ -25,9 +26,16 @@ test:
 	cd rust && cargo test -q
 
 # Tier-1 verification plus the python suite — the pre-merge gate.
+# bench-diff only runs when results/ exists (a fresh checkout has none).
 verify:
 	cd rust && cargo build --release && cargo test -q
 	python -m pytest python/tests -q
+	@if [ -d results ]; then $(MAKE) bench-diff; else echo "verify: no results/ dir, skipping bench-diff"; fi
 
 bench: build
 	cd rust && cargo bench
+
+# Compare the latest results/*.json against the committed BENCH_*.json
+# ledgers; exits nonzero on a regression past per-metric tolerance.
+bench-diff: build
+	cd rust && cargo run --release -q -- bench-diff --root .. --results ../results

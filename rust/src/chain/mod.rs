@@ -123,16 +123,20 @@ impl Chain {
     pub fn run(&self, state: &mut ModelState, ctx: &StageCtx) -> Result<Vec<StageReport>> {
         let mut reports = Vec::with_capacity(self.stages.len());
         for stage in &self.stages {
+            let _span = crate::obs::trace::span_with(|| format!("chain.stage.{}", stage.name()));
             if ctx.verbose {
-                eprintln!("[chain] applying {}", stage.name());
+                crate::obs::log!(crate::obs::Level::Info, "[chain] applying {}", stage.name());
             }
             stage.apply(state, ctx)?;
             state.history.push(stage.name());
             let m = Measurement::take(ctx.engine, state, ctx.test)?;
             if ctx.verbose {
-                eprintln!(
+                crate::obs::log!(
+                    crate::obs::Level::Info,
                     "[chain]   acc {:.4}  BitOpsCR {:.1}x  CR {:.1}x",
-                    m.accuracy, m.bitops_cr, m.storage_cr
+                    m.accuracy,
+                    m.bitops_cr,
+                    m.storage_cr
                 );
             }
             reports.push(StageReport {

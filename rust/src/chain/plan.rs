@@ -534,7 +534,8 @@ impl Planner {
             bytes_uploaded: worker_transfer.0,
             bytes_downloaded: worker_transfer.1,
         };
-        println!(
+        crate::obs::log!(
+            crate::obs::Level::Info,
             "[plan] {} chains / {} stage applications -> {} unique nodes ({} cache hits, {} executed) in {:.1}s",
             stats.chains,
             stats.total_stages,
@@ -778,6 +779,10 @@ fn run_node<R: NodeRunner>(
     cache_dir: Option<&Path>,
     verbose: bool,
 ) -> Result<NodeResult> {
+    // One span per node lifecycle: covers the cache probe and, on a miss,
+    // the apply + measure + snapshot.  Hits/misses also land in the
+    // metrics registry so plan reuse is visible without a trace file.
+    let _span = crate::obs::trace::span_with(|| format!("plan.node.{}", node.stage.name()));
     let tag = node.id.to_string();
     let paths = cache_dir.map(|d| (d.join(format!("{tag}.state")), d.join(format!("{tag}.meas.json"))));
     if let Some((sp, mp)) = &paths {
@@ -788,22 +793,39 @@ fn run_node<R: NodeRunner>(
             });
             match loaded {
                 Ok((state, meas)) => {
+                    crate::obs::metrics::counter("plan.cache.hit").incr();
                     if verbose {
-                        eprintln!("[plan] hit  {} {}", node.id, node.stage.name());
+                        crate::obs::log!(
+                            crate::obs::Level::Info,
+                            "[plan] hit  {} {}",
+                            node.id,
+                            node.stage.name()
+                        );
                     }
                     return Ok(NodeResult { state: Some(Arc::new(state)), meas, hit: true });
                 }
                 Err(e) => {
+                    crate::obs::metrics::counter("plan.cache.stale").incr();
                     if verbose {
-                        eprintln!("[plan] stale cache entry {}: {e:#}", node.id);
+                        crate::obs::log!(
+                            crate::obs::Level::Warn,
+                            "[plan] stale cache entry {}: {e:#}",
+                            node.id
+                        );
                     }
                 }
             }
         }
     }
 
+    crate::obs::metrics::counter("plan.cache.miss").incr();
     if verbose {
-        eprintln!("[plan] exec {} {}", node.id, node.stage.name());
+        crate::obs::log!(
+            crate::obs::Level::Info,
+            "[plan] exec {} {}",
+            node.id,
+            node.stage.name()
+        );
     }
     let mut state = parent.clone();
     runner

@@ -92,7 +92,8 @@ impl ExpCtx {
         // the wrong model.
         let manifest_path = std::path::Path::new(artifacts).join("manifest.json");
         let manifest = if backend == BackendChoice::Ref && !manifest_path.exists() {
-            eprintln!(
+            crate::obs::log!(
+                crate::obs::Level::Warn,
                 "[exp] no {} — using the built-in ref manifest (mini_vgg)",
                 manifest_path.display()
             );

@@ -27,6 +27,7 @@ pub mod exits;
 pub mod exp;
 pub mod metrics;
 pub mod models;
+pub mod obs;
 pub mod order;
 pub mod report;
 pub mod runtime;

@@ -43,7 +43,7 @@ use coc::util::json::{num, obj, s, Json};
 
 fn main() {
     if let Err(e) = real_main() {
-        eprintln!("error: {e:#}");
+        coc::obs::log!(coc::obs::Level::Error, "error: {e:#}");
         std::process::exit(1);
     }
 }
@@ -75,12 +75,43 @@ fn ctx_from(args: &Args) -> Result<ExpCtx> {
 
 fn real_main() -> Result<()> {
     let args = Args::parse_env();
+    // --trace-out PATH (any subcommand): record spans for the whole run
+    // and export on the way out — `.jsonl` gets line-delimited events,
+    // anything else the Chrome `trace_event` format (load it in
+    // chrome://tracing or Perfetto).  Tracing never touches numerics:
+    // results are bit-identical with and without it (pinned by
+    // `ref_golden_digest_is_thread_count_invariant`).
+    let trace_out = args.get("trace-out").map(std::path::PathBuf::from);
+    if trace_out.is_some() {
+        coc::obs::trace::enable();
+    }
+    let result = dispatch(&args);
+    if let Some(path) = &trace_out {
+        coc::obs::trace::disable();
+        match coc::obs::trace::export(path) {
+            Ok(()) => {
+                coc::obs::log!(coc::obs::Level::Info, "wrote trace {}", path.display());
+            }
+            Err(e) => {
+                // Never mask the command's own result with an export error.
+                coc::obs::log!(
+                    coc::obs::Level::Error,
+                    "failed to write trace {}: {e:#}",
+                    path.display()
+                );
+            }
+        }
+    }
+    result
+}
+
+fn dispatch(args: &Args) -> Result<()> {
     match args.subcommand.as_deref() {
-        Some("info") => cmd_info(&args),
-        Some("train") => cmd_train(&args),
-        Some("chain") => cmd_chain(&args),
+        Some("info") => cmd_info(args),
+        Some("train") => cmd_train(args),
+        Some("chain") => cmd_chain(args),
         Some("exp") => {
-            let ctx = ctx_from(&args)?;
+            let ctx = ctx_from(args)?;
             let id = args
                 .positional
                 .first()
@@ -88,14 +119,15 @@ fn real_main() -> Result<()> {
             exp::run(&ctx, id)
         }
         Some("toposort") => {
-            let ctx = ctx_from(&args)?;
+            let ctx = ctx_from(args)?;
             exp::run(&ctx, "toposort")
         }
-        Some("serve") => cmd_serve(&args),
-        Some("serve-bench") => cmd_serve_bench(&args),
+        Some("serve") => cmd_serve(args),
+        Some("serve-bench") => cmd_serve_bench(args),
+        Some("bench-diff") => cmd_bench_diff(args),
         other => {
             if let Some(o) = other {
-                eprintln!("unknown subcommand `{o}`\n");
+                coc::obs::log!(coc::obs::Level::Error, "unknown subcommand `{o}`\n");
             }
             print_usage();
             Ok(())
@@ -103,9 +135,90 @@ fn real_main() -> Result<()> {
     }
 }
 
+/// `coc bench-diff`: distill the current `results/*.json` into per-area
+/// metric sets and compare them against the committed `BENCH_<area>.json`
+/// ledgers at the repo root.  Exits nonzero when any metric regresses past
+/// its tolerance — the CI regression gate.  `--update` re-blesses the
+/// ledger from the current results instead of comparing.
+fn cmd_bench_diff(args: &Args) -> Result<()> {
+    use coc::obs::ledger;
+    let root = std::path::PathBuf::from(args.get_or("root", "."));
+    let results = std::path::PathBuf::from(args.get_or("results", coc::DEFAULT_RESULTS));
+    let threshold = match args.get("threshold") {
+        Some(t) => Some(
+            t.parse::<f64>()
+                .map_err(|_| anyhow!("--threshold must be a number (tolerance in %)"))?,
+        ),
+        None => None,
+    };
+    let update = args.flag("update");
+    let wanted = args.get_or("area", "all");
+    if wanted != "all" && !ledger::areas().contains(&wanted) {
+        return Err(anyhow!(
+            "--area must be all|{}, got `{wanted}`",
+            ledger::areas().join("|")
+        ));
+    }
+    let mut regressions = Vec::new();
+    let mut compared = 0usize;
+    for &area in ledger::areas() {
+        if wanted != "all" && wanted != area {
+            continue;
+        }
+        let path = ledger::ledger_path(&root, area);
+        let current = match ledger::extract(area, &results) {
+            Ok(c) => c,
+            Err(e) => {
+                if wanted == area {
+                    return Err(e);
+                }
+                // `all` sweeps every area but only judges the ones whose
+                // results files exist — a serve-only run must not fail on
+                // missing refback results.
+                coc::obs::log!(coc::obs::Level::Warn, "bench-diff [{area}]: skipped ({e:#})");
+                continue;
+            }
+        };
+        if update {
+            current.save(&path)?;
+            println!(
+                "bench-diff [{area}]: blessed {} metrics into {}",
+                current.metrics.len(),
+                path.display()
+            );
+            continue;
+        }
+        let baseline = ledger::BenchArea::load(&path)?;
+        let lines = ledger::diff(&baseline, &current, threshold);
+        print!("{}", ledger::format_table(area, &lines));
+        compared += 1;
+        for l in lines.into_iter().filter(|l| l.regressed) {
+            regressions.push(format!(
+                "{area}.{}: {:.4} -> {:.4} ({:+.1}% past {:.0}% tolerance)",
+                l.name, l.baseline, l.current, l.regression_pct, l.tol_pct
+            ));
+        }
+    }
+    if !update && compared == 0 {
+        return Err(anyhow!(
+            "bench-diff compared nothing: no results for `{wanted}` under {}",
+            results.display()
+        ));
+    }
+    if regressions.is_empty() {
+        Ok(())
+    } else {
+        Err(anyhow!("bench regressions:\n  {}", regressions.join("\n  ")))
+    }
+}
+
 fn print_usage() {
     println!("coc {} — Chain of Compression coordinator", coc::version());
-    println!("usage: coc <info|train|chain|exp|serve|serve-bench|toposort> [flags]");
+    println!("usage: coc <info|train|chain|exp|serve|serve-bench|bench-diff|toposort> [flags]");
+    println!("  coc bench-diff                  # gate results/ against BENCH_*.json ledgers");
+    println!("  coc bench-diff --update         # re-bless the ledgers from current results");
+    println!("  coc serve-bench --backend ref --trace-out trace.json   # Chrome trace of a run");
+    println!("  (any subcommand accepts --trace-out PATH; COC_LOG=error|warn|info|debug)");
     println!("  coc exp all --scale default     # regenerate every table/figure");
     println!("  coc exp table1 --scale smoke --jobs 2   # plan-parallel, cached");
     println!("  coc exp table1 --no-cache       # force from-scratch execution");
@@ -303,7 +416,7 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     let pool = WorkerPool::start(Arc::new(state), pool_opts);
     let up = pool.wait_ready(Duration::from_secs(600))?;
     if up < workers {
-        eprintln!("warning: only {up}/{workers} workers came up");
+        coc::obs::log!(coc::obs::Level::Warn, "warning: only {up}/{workers} workers came up");
     }
     let load_opts = LoadOpts {
         mode,
@@ -315,7 +428,7 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     let report = loadgen::run(&pool, &test_ds, &load_opts)?;
     let outcome = pool.shutdown();
     for e in &outcome.errors {
-        eprintln!("worker error: {e}");
+        coc::obs::log!(coc::obs::Level::Error, "worker error: {e}");
     }
 
     println!("{}", report.summary_line());

@@ -1,0 +1,433 @@
+//! The committed bench ledger: `BENCH_<area>.json` files at the repo root
+//! plus the comparison logic behind `coc bench-diff`.
+//!
+//! Each per-run result file under `results/` is a point measurement; the
+//! ledger is the *committed trajectory* — the blessed numbers CI refuses
+//! to regress.  An area file holds a schema version, the source results
+//! file it was distilled from, and a list of metrics, each with a
+//! direction (`higher`/`lower` is better) and a tolerance in percent.
+//! Byte-accounting metrics get tight tolerances (they are deterministic);
+//! wall-clock metrics get loose ones (CI runners vary).
+//!
+//! `coc bench-diff` extracts the same metrics from the current `results/`
+//! files, compares against the committed entries, prints a table, and
+//! exits nonzero if any metric regressed beyond its tolerance.
+//! `coc bench-diff --update` rewrites the ledger from the current run
+//! (the "bless" operation, reviewed like any other diff).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// Bump when the `BENCH_*.json` layout changes; readers reject files with
+/// a different major version rather than mis-parsing them.
+pub const BENCH_SCHEMA_VERSION: u64 = 1;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    /// Bigger is better (throughput, steps/sec, speedups).
+    Higher,
+    /// Smaller is better (latency, bytes moved).
+    Lower,
+}
+
+impl Direction {
+    pub fn name(self) -> &'static str {
+        match self {
+            Direction::Higher => "higher",
+            Direction::Lower => "lower",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Direction> {
+        match s {
+            "higher" => Some(Direction::Higher),
+            "lower" => Some(Direction::Lower),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct MetricEntry {
+    pub name: String,
+    pub value: f64,
+    pub direction: Direction,
+    /// Allowed regression before `bench-diff` fails, in percent of the
+    /// committed value.
+    pub tol_pct: f64,
+}
+
+/// One ledger area (one committed `BENCH_<area>.json`).
+#[derive(Debug, Clone)]
+pub struct BenchArea {
+    pub area: String,
+    /// The results file this area distills, repo-root-relative.
+    pub source: String,
+    pub metrics: Vec<MetricEntry>,
+}
+
+impl BenchArea {
+    pub fn metric(&self, name: &str) -> Option<&MetricEntry> {
+        self.metrics.iter().find(|m| m.name == name)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let metrics: Vec<Json> = self
+            .metrics
+            .iter()
+            .map(|m| {
+                json::obj(vec![
+                    ("name", json::s(&m.name)),
+                    ("value", json::num(m.value)),
+                    ("direction", json::s(m.direction.name())),
+                    ("tol_pct", json::num(m.tol_pct)),
+                ])
+            })
+            .collect();
+        json::obj(vec![
+            ("schema_version", json::num(BENCH_SCHEMA_VERSION as f64)),
+            ("area", json::s(&self.area)),
+            ("source", json::s(&self.source)),
+            ("metrics", Json::Arr(metrics)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<BenchArea> {
+        let version = j
+            .req("schema_version")?
+            .as_f64()
+            .ok_or_else(|| anyhow!("schema_version is not a number"))? as u64;
+        if version != BENCH_SCHEMA_VERSION {
+            return Err(anyhow!(
+                "bench ledger schema_version {version} (this build reads {BENCH_SCHEMA_VERSION})"
+            ));
+        }
+        let area = j.req("area")?.as_str().ok_or_else(|| anyhow!("area is not a string"))?;
+        let source = j.req("source")?.as_str().unwrap_or_default();
+        let mut metrics = Vec::new();
+        for m in j.req("metrics")?.as_arr().ok_or_else(|| anyhow!("metrics is not an array"))? {
+            let name = m.req("name")?.as_str().ok_or_else(|| anyhow!("metric name"))?;
+            let value =
+                m.req("value")?.as_f64().ok_or_else(|| anyhow!("metric `{name}` value"))?;
+            let dir = m.req("direction")?.as_str().and_then(Direction::parse).ok_or_else(
+                || anyhow!("metric `{name}`: direction must be `higher` or `lower`"),
+            )?;
+            let tol = m.get("tol_pct").and_then(|t| t.as_f64()).unwrap_or(50.0);
+            metrics.push(MetricEntry {
+                name: name.to_string(),
+                value,
+                direction: dir,
+                tol_pct: tol,
+            });
+        }
+        Ok(BenchArea { area: area.to_string(), source: source.to_string(), metrics })
+    }
+
+    pub fn load(path: &Path) -> Result<BenchArea> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading bench ledger {}", path.display()))?;
+        let j = Json::parse(&text)
+            .map_err(|e| anyhow!("parsing bench ledger {}: {e}", path.display()))?;
+        Self::from_json(&j).with_context(|| format!("in {}", path.display()))
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, format!("{}\n", self.to_json()))
+            .with_context(|| format!("writing bench ledger {}", path.display()))
+    }
+}
+
+/// The ledger areas this repo tracks.
+pub fn areas() -> &'static [&'static str] {
+    &["serve", "refback"]
+}
+
+/// Repo-root file name for an area.
+pub fn ledger_path(root: &Path, area: &str) -> PathBuf {
+    root.join(format!("BENCH_{area}.json"))
+}
+
+// ----- extraction: results/*.json -> a fresh BenchArea ----------------------
+
+fn load_results(results_dir: &Path, file: &str) -> Result<Json> {
+    let path = results_dir.join(file);
+    let text = std::fs::read_to_string(&path).with_context(|| {
+        format!(
+            "reading {} (run the producing bench/command first — see DESIGN.md \
+             \"Observability\")",
+            path.display()
+        )
+    })?;
+    Json::parse(&text).map_err(|e| anyhow!("parsing {}: {e}", path.display()))
+}
+
+fn pull(j: &Json, path: &[&str]) -> Result<f64> {
+    let mut cur = j;
+    for k in path {
+        cur = cur.req(k)?;
+    }
+    cur.as_f64().ok_or_else(|| anyhow!("field `{}` is not a number", path.join(".")))
+}
+
+/// Distill the current `results/` files into a fresh area entry (the
+/// "current" side of a diff, and the payload `--update` commits).
+pub fn extract(area: &str, results_dir: &Path) -> Result<BenchArea> {
+    let entry = |name: &str, value: f64, direction: Direction, tol_pct: f64| MetricEntry {
+        name: name.to_string(),
+        value,
+        direction,
+        tol_pct,
+    };
+    match area {
+        "serve" => {
+            let j = load_results(results_dir, "serve_bench.json")?;
+            let up = pull(&j, &["bytes_uploaded"]).unwrap_or(0.0);
+            let down = pull(&j, &["bytes_downloaded"]).unwrap_or(0.0);
+            Ok(BenchArea {
+                area: "serve".into(),
+                source: "results/serve_bench.json".into(),
+                metrics: vec![
+                    entry(
+                        "throughput_rps",
+                        pull(&j, &["bench", "throughput_rps"])?,
+                        Direction::Higher,
+                        60.0,
+                    ),
+                    entry(
+                        "p50_us",
+                        pull(&j, &["bench", "latency", "p50_us"])?,
+                        Direction::Lower,
+                        60.0,
+                    ),
+                    entry(
+                        "p95_us",
+                        pull(&j, &["bench", "latency", "p95_us"])?,
+                        Direction::Lower,
+                        60.0,
+                    ),
+                    // Transfer volume is deterministic — tight tolerance.
+                    entry("bytes_moved", up + down, Direction::Lower, 5.0),
+                ],
+            })
+        }
+        "refback" => {
+            let j = load_results(results_dir, "refback_kernels.json")?;
+            Ok(BenchArea {
+                area: "refback".into(),
+                source: "results/refback_kernels.json".into(),
+                metrics: vec![
+                    entry(
+                        "train_steps_per_sec_1t",
+                        pull(&j, &["train_steps_per_sec_1t"])?,
+                        Direction::Higher,
+                        60.0,
+                    ),
+                    entry(
+                        "train_steps_per_sec_4t",
+                        pull(&j, &["train_steps_per_sec_4t"])?,
+                        Direction::Higher,
+                        60.0,
+                    ),
+                    entry(
+                        "conv_fwd_blocked_1t_ms",
+                        pull(&j, &["conv_fwd_blocked_1t_ms"])?,
+                        Direction::Lower,
+                        60.0,
+                    ),
+                    entry(
+                        "conv_bwd_blocked_1t_ms",
+                        pull(&j, &["conv_bwd_blocked_1t_ms"])?,
+                        Direction::Lower,
+                        60.0,
+                    ),
+                    entry(
+                        "matmul_blocked_us",
+                        pull(&j, &["matmul_blocked_us"])?,
+                        Direction::Lower,
+                        60.0,
+                    ),
+                ],
+            })
+        }
+        other => Err(anyhow!("unknown bench area `{other}` (have: {})", areas().join(", "))),
+    }
+}
+
+// ----- diffing --------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct DiffLine {
+    pub name: String,
+    pub baseline: f64,
+    pub current: f64,
+    /// Regression in percent of the committed value: positive = worse,
+    /// negative = improved (sign-normalized across directions).
+    pub regression_pct: f64,
+    pub tol_pct: f64,
+    pub regressed: bool,
+}
+
+/// Compare `current` against the committed `baseline`.  Only metrics
+/// present in the baseline are judged (a new metric can't regress);
+/// `tol_override` replaces every per-metric tolerance when set (the CLI
+/// `--threshold` flag).
+pub fn diff(baseline: &BenchArea, current: &BenchArea, tol_override: Option<f64>) -> Vec<DiffLine> {
+    let mut out = Vec::new();
+    for base in &baseline.metrics {
+        let Some(cur) = current.metric(&base.name) else {
+            continue;
+        };
+        let tol = tol_override.unwrap_or(base.tol_pct);
+        let regression_pct = if base.value == 0.0 {
+            if cur.value == base.value {
+                0.0
+            } else {
+                match base.direction {
+                    // Anything above a committed zero (e.g. bytes moved on
+                    // a zero-transfer backend) is an unbounded regression.
+                    Direction::Lower => f64::INFINITY,
+                    Direction::Higher => -100.0,
+                }
+            }
+        } else {
+            match base.direction {
+                Direction::Lower => (cur.value - base.value) / base.value * 100.0,
+                Direction::Higher => (base.value - cur.value) / base.value * 100.0,
+            }
+        };
+        out.push(DiffLine {
+            name: base.name.clone(),
+            baseline: base.value,
+            current: cur.value,
+            regression_pct,
+            tol_pct: tol,
+            regressed: regression_pct > tol,
+        });
+    }
+    out
+}
+
+/// Human-readable diff table (one line per metric).
+pub fn format_table(area: &str, lines: &[DiffLine]) -> String {
+    let mut out = format!("bench-diff [{area}]\n");
+    for l in lines {
+        let status = if l.regressed {
+            "REGRESSED"
+        } else if l.regression_pct < 0.0 {
+            "improved"
+        } else {
+            "ok"
+        };
+        out.push_str(&format!(
+            "  {:<28} committed {:>12.3}  current {:>12.3}  change {:>+8.1}%  (tol {:.0}%)  {status}\n",
+            l.name, l.baseline, l.current, l.regression_pct, l.tol_pct
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn area_with(p95: f64, rps: f64) -> BenchArea {
+        BenchArea {
+            area: "serve".into(),
+            source: "results/serve_bench.json".into(),
+            metrics: vec![
+                MetricEntry {
+                    name: "p95_us".into(),
+                    value: p95,
+                    direction: Direction::Lower,
+                    tol_pct: 50.0,
+                },
+                MetricEntry {
+                    name: "throughput_rps".into(),
+                    value: rps,
+                    direction: Direction::Higher,
+                    tol_pct: 50.0,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn flags_a_2x_latency_regression() {
+        // The acceptance scenario: synthetically double p95 -> nonzero.
+        let base = area_with(1000.0, 500.0);
+        let cur = area_with(2000.0, 500.0);
+        let d = diff(&base, &cur, None);
+        let p95 = d.iter().find(|l| l.name == "p95_us").unwrap();
+        assert!(p95.regressed, "2x latency must exceed a 50% tolerance");
+        assert!((p95.regression_pct - 100.0).abs() < 1e-9);
+        let rps = d.iter().find(|l| l.name == "throughput_rps").unwrap();
+        assert!(!rps.regressed);
+    }
+
+    #[test]
+    fn improvements_and_small_noise_pass() {
+        let base = area_with(1000.0, 500.0);
+        // 20% faster latency, 10% lower throughput: both within 50%.
+        let cur = area_with(800.0, 450.0);
+        let d = diff(&base, &cur, None);
+        assert!(d.iter().all(|l| !l.regressed), "{d:?}");
+        let p95 = d.iter().find(|l| l.name == "p95_us").unwrap();
+        assert!(p95.regression_pct < 0.0, "faster latency reads as improvement");
+        // A strict override threshold turns the 10% throughput drop fatal.
+        let d = diff(&base, &cur, Some(5.0));
+        assert!(d.iter().find(|l| l.name == "throughput_rps").unwrap().regressed);
+    }
+
+    #[test]
+    fn zero_baseline_bytes_gate() {
+        let base = BenchArea {
+            area: "serve".into(),
+            source: String::new(),
+            metrics: vec![MetricEntry {
+                name: "bytes_moved".into(),
+                value: 0.0,
+                direction: Direction::Lower,
+                tol_pct: 5.0,
+            }],
+        };
+        let mut cur = base.clone();
+        let d = diff(&base, &cur, None);
+        assert!(!d[0].regressed, "0 -> 0 is clean");
+        cur.metrics[0].value = 4096.0;
+        let d = diff(&base, &cur, None);
+        assert!(d[0].regressed, "any bytes over a zero-transfer baseline regress");
+    }
+
+    #[test]
+    fn ledger_json_roundtrip_and_version_gate() {
+        let a = area_with(1234.5, 678.9);
+        let j = a.to_json();
+        let back = BenchArea::from_json(&j).unwrap();
+        assert_eq!(back.area, a.area);
+        assert_eq!(back.metrics.len(), a.metrics.len());
+        assert_eq!(back.metric("p95_us").unwrap().value, 1234.5);
+        assert_eq!(back.metric("p95_us").unwrap().direction, Direction::Lower);
+
+        // A future schema version must be rejected, not mis-read.
+        let text = j.to_string().replace("\"schema_version\":1", "\"schema_version\":999");
+        let j2 = Json::parse(&text).unwrap();
+        assert!(BenchArea::from_json(&j2).is_err());
+    }
+
+    #[test]
+    fn extract_reads_serve_results() {
+        let dir = std::env::temp_dir().join(format!("coc_ledger_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let body = r#"{"bench": {"throughput_rps": 321.0, "latency": {"p50_us": 900.0, "p95_us": 2500.0}}, "bytes_uploaded": 10, "bytes_downloaded": 22}"#;
+        std::fs::write(dir.join("serve_bench.json"), body).unwrap();
+        let a = extract("serve", &dir).unwrap();
+        assert_eq!(a.metric("throughput_rps").unwrap().value, 321.0);
+        assert_eq!(a.metric("p95_us").unwrap().value, 2500.0);
+        assert_eq!(a.metric("bytes_moved").unwrap().value, 32.0);
+        assert!(extract("nope", &dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,411 @@
+//! Typed metrics: counters, gauges and fixed-log2-bucket histograms, plus
+//! a process-wide named registry.
+//!
+//! Design constraints (from the determinism contract in DESIGN.md):
+//!
+//! * **Recording is lock-free on the hot path** — `Counter`/`Gauge` are a
+//!   single relaxed atomic op; call sites cache the `Arc` handle so the
+//!   registry's map lock is paid once at setup, never per event.
+//! * **Histogram merges are associative, commutative and deterministic** —
+//!   a histogram is a fixed vector of integer bucket counts, and merging
+//!   is bucket-wise `u64` addition.  Raw sample vectors (the old
+//!   `Summary` representation) concatenate, which is order-dependent for
+//!   every derived quantile under re-sorting ties and unbounded in
+//!   memory; bucket counts are neither.  `util::prop` pins the algebra.
+//! * Bucket boundaries are powers of two and the bucket index is computed
+//!   from the f64 exponent bits — no `log2` call, bit-exact on every
+//!   platform.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+// ----- primitives -----------------------------------------------------------
+
+/// Monotonic event counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub const fn new() -> Counter {
+        Counter(AtomicU64::new(0))
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn incr(&self) {
+        self.add(1);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+
+    pub fn reset(&self) {
+        self.0.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Last-write-wins instantaneous value (stored as f64 bits).  Also tracks
+/// the maximum ever set, which is what queue-depth reporting wants.
+#[derive(Debug)]
+pub struct Gauge {
+    bits: AtomicU64,
+    max_bits: AtomicU64,
+}
+
+impl Default for Gauge {
+    fn default() -> Self {
+        Gauge::new()
+    }
+}
+
+impl Gauge {
+    pub const fn new() -> Gauge {
+        // 0.0f64 is all-zero bits, so const-init works without to_bits().
+        Gauge { bits: AtomicU64::new(0), max_bits: AtomicU64::new(0) }
+    }
+
+    #[inline]
+    pub fn set(&self, v: f64) {
+        let b = v.to_bits();
+        self.bits.store(b, Ordering::Relaxed);
+        // Monotonic max over non-negative values: for IEEE-754 doubles
+        // >= 0, the bit pattern orders like the value.
+        if v >= 0.0 {
+            self.max_bits.fetch_max(b, Ordering::Relaxed);
+        }
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+
+    pub fn max(&self) -> f64 {
+        f64::from_bits(self.max_bits.load(Ordering::Relaxed))
+    }
+
+    pub fn reset(&self) {
+        self.bits.store(0, Ordering::Relaxed);
+        self.max_bits.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Number of log2 buckets.  Bucket 0 holds everything `< 2^-15` (and
+/// non-positive values); bucket `i` (1..62) holds `[2^(i-16), 2^(i-15))`;
+/// bucket 63 holds `>= 2^47`.  For microsecond-scale latencies that spans
+/// sub-nanosecond to ~1.6 days.
+pub const HIST_BUCKETS: usize = 64;
+const HIST_EXP_BIAS: i64 = 16;
+
+/// Bucket index of a value — pure bit arithmetic on the f64 exponent, so
+/// identical on every platform and under every optimization level.
+#[inline]
+pub fn bucket_of(v: f64) -> usize {
+    if v.is_nan() || v <= 0.0 {
+        return 0; // zero, negatives, NaN
+    }
+    let e = ((v.to_bits() >> 52) & 0x7ff) as i64 - 1023; // floor(log2 v) for normals
+    (e + HIST_EXP_BIAS).clamp(0, HIST_BUCKETS as i64 - 1) as usize
+}
+
+/// Lower edge of bucket `i` (0.0 for bucket 0).
+fn bucket_lo(i: usize) -> f64 {
+    if i == 0 {
+        0.0
+    } else {
+        f64::from_bits((((i as i64 - HIST_EXP_BIAS + 1023) as u64) & 0x7ff) << 52)
+    }
+}
+
+/// Upper edge of bucket `i`.
+fn bucket_hi(i: usize) -> f64 {
+    bucket_lo(i + 1)
+}
+
+/// Fixed-size log2-bucket histogram.  The whole state is the bucket-count
+/// vector: `merge` is bucket-wise addition, hence associative, commutative
+/// and deterministic, and memory is O(1) regardless of sample count.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Histogram {
+    pub buckets: [u64; HIST_BUCKETS],
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram { buckets: [0; HIST_BUCKETS] }
+    }
+}
+
+impl Histogram {
+    pub fn record(&mut self, v: f64) {
+        self.buckets[bucket_of(v)] += 1;
+    }
+
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += *b;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buckets.iter().all(|&b| b == 0)
+    }
+
+    /// Quantile estimate by linear interpolation inside the owning bucket
+    /// (same rank convention as `util::stats::percentile`: rank spans
+    /// `0..count-1`).  Empty histograms return 0.0.  Resolution is the
+    /// bucket width — callers with exact min/max should clamp.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        let rank = (q.clamp(0.0, 100.0) / 100.0) * (n - 1) as f64;
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let last_in_bucket = (seen + c - 1) as f64;
+            if rank <= last_in_bucket {
+                // Position within this bucket's occupants, mapped linearly
+                // across the bucket span.
+                let frac = if c == 1 {
+                    0.5
+                } else {
+                    (rank - seen as f64) / (c - 1) as f64
+                };
+                return bucket_lo(i) + frac * (bucket_hi(i) - bucket_lo(i));
+            }
+            seen += c;
+        }
+        bucket_hi(HIST_BUCKETS - 1)
+    }
+
+    /// How many recorded values are `<= x`, to bucket resolution: full
+    /// buckets below `x`'s bucket count exactly; `x`'s own bucket
+    /// contributes a linearly interpolated share.
+    pub fn count_le(&self, x: f64) -> u64 {
+        if x.is_nan() || x <= 0.0 {
+            return 0;
+        }
+        let bx = bucket_of(x);
+        let mut n = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            if i < bx {
+                n += c;
+            } else if i == bx {
+                let lo = bucket_lo(i);
+                let hi = bucket_hi(i);
+                let frac = ((x - lo) / (hi - lo)).clamp(0.0, 1.0);
+                n += (c as f64 * frac).round() as u64;
+            }
+        }
+        n
+    }
+}
+
+// ----- registry -------------------------------------------------------------
+
+/// Process-wide named metrics.  Naming scheme (see DESIGN.md
+/// "Observability"): dotted `area.object.event` paths, e.g.
+/// `serve.queue.accepted`, `plan.cache.hit`, `refback.kernel.conv2d`.
+#[derive(Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+    histograms: Mutex<BTreeMap<String, Arc<Mutex<Histogram>>>>,
+}
+
+fn registry() -> &'static Registry {
+    static REG: OnceLock<Registry> = OnceLock::new();
+    REG.get_or_init(Registry::default)
+}
+
+/// Get-or-create the named counter.  Call once and cache the handle —
+/// the map lock is for setup, not the hot path.
+pub fn counter(name: &str) -> Arc<Counter> {
+    let mut m = registry().counters.lock().unwrap();
+    m.entry(name.to_string()).or_default().clone()
+}
+
+pub fn gauge(name: &str) -> Arc<Gauge> {
+    let mut m = registry().gauges.lock().unwrap();
+    m.entry(name.to_string()).or_default().clone()
+}
+
+pub fn histogram(name: &str) -> Arc<Mutex<Histogram>> {
+    let mut m = registry().histograms.lock().unwrap();
+    m.entry(name.to_string()).or_default().clone()
+}
+
+/// Flat snapshot of every registered metric: `(name, value)` sorted by
+/// name.  Gauges contribute `name` and `name.max`; histograms contribute
+/// count/p50/p95/p99.
+pub fn snapshot() -> Vec<(String, f64)> {
+    let reg = registry();
+    let mut out = Vec::new();
+    for (k, c) in reg.counters.lock().unwrap().iter() {
+        out.push((k.clone(), c.get() as f64));
+    }
+    for (k, g) in reg.gauges.lock().unwrap().iter() {
+        out.push((k.clone(), g.get()));
+        out.push((format!("{k}.max"), g.max()));
+    }
+    for (k, h) in reg.histograms.lock().unwrap().iter() {
+        let h = h.lock().unwrap();
+        out.push((format!("{k}.count"), h.count() as f64));
+        out.push((format!("{k}.p50"), h.quantile(50.0)));
+        out.push((format!("{k}.p95"), h.quantile(95.0)));
+        out.push((format!("{k}.p99"), h.quantile(99.0)));
+    }
+    out.sort_by(|a, b| a.0.cmp(&b.0));
+    out
+}
+
+/// Zero every registered metric (tests; `bench-diff --update` workflows).
+pub fn reset_all() {
+    let reg = registry();
+    for c in reg.counters.lock().unwrap().values() {
+        c.reset();
+    }
+    for g in reg.gauges.lock().unwrap().values() {
+        g.reset();
+    }
+    for h in reg.histograms.lock().unwrap().values() {
+        *h.lock().unwrap() = Histogram::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_roundtrip() {
+        let c = Counter::new();
+        c.add(3);
+        c.incr();
+        assert_eq!(c.get(), 4);
+        c.reset();
+        assert_eq!(c.get(), 0);
+
+        let g = Gauge::new();
+        g.set(2.5);
+        g.set(1.0);
+        assert_eq!(g.get(), 1.0);
+        assert_eq!(g.max(), 2.5);
+    }
+
+    #[test]
+    fn registry_hands_out_shared_handles() {
+        let a = counter("test.registry.shared");
+        let b = counter("test.registry.shared");
+        a.add(2);
+        b.add(3);
+        assert_eq!(a.get(), 5);
+        let snap = snapshot();
+        assert!(snap.iter().any(|(k, v)| k == "test.registry.shared" && *v >= 5.0));
+    }
+
+    #[test]
+    fn bucket_edges_partition_the_line() {
+        // Every value lands in exactly the bucket whose [lo, hi) contains
+        // it, including at the edges.
+        for i in 1..HIST_BUCKETS - 1 {
+            let lo = bucket_lo(i);
+            let hi = bucket_hi(i);
+            assert_eq!(bucket_of(lo), i, "lower edge of bucket {i}");
+            assert_eq!(bucket_of(hi * 0.999_999), i, "interior of bucket {i}");
+            assert_eq!(bucket_of(hi), i + 1, "upper edge belongs to bucket {}", i + 1);
+            assert!(hi > lo);
+        }
+        assert_eq!(bucket_of(0.0), 0);
+        assert_eq!(bucket_of(-3.0), 0);
+        assert_eq!(bucket_of(f64::NAN), 0);
+        assert_eq!(bucket_of(1e300), HIST_BUCKETS - 1);
+    }
+
+    #[test]
+    fn histogram_quantiles_track_exact_to_bucket_resolution() {
+        let mut h = Histogram::default();
+        let xs: Vec<f64> = (1..=1000).map(|i| i as f64).collect();
+        for &x in &xs {
+            h.record(x);
+        }
+        assert_eq!(h.count(), 1000);
+        for q in [50.0, 95.0, 99.0] {
+            let exact = crate::util::stats::percentile(&xs, q);
+            let est = h.quantile(q);
+            // log2 buckets: the estimate lands within the true value's
+            // bucket, i.e. within a factor of 2.
+            assert!(est >= exact / 2.0 && est <= exact * 2.0, "q{q}: est {est} vs exact {exact}");
+        }
+        assert_eq!(h.count_le(0.0), 0);
+        assert_eq!(h.count_le(1e9), 1000);
+        let le = h.count_le(500.0) as f64;
+        assert!((le - 500.0).abs() <= 260.0, "count_le(500) ~ 500 to bucket resolution, got {le}");
+    }
+
+    #[test]
+    fn prop_histogram_merge_is_associative_and_commutative() {
+        crate::util::prop::check(
+            "histogram merge algebra",
+            120,
+            |r| {
+                let mut sets = Vec::new();
+                for _ in 0..3 {
+                    let n = r.below(40);
+                    sets.push((0..n).map(|_| r.f32() as f64 * 1e5).collect::<Vec<f64>>());
+                }
+                (sets[0].clone(), sets[1].clone(), sets[2].clone())
+            },
+            |(xa, xb, xc)| {
+                let build = |xs: &[f64]| {
+                    let mut h = Histogram::default();
+                    for &x in xs {
+                        h.record(x);
+                    }
+                    h
+                };
+                let (a, b, c) = (build(xa), build(xb), build(xc));
+                // (a + b) + c == a + (b + c)
+                let mut l = a.clone();
+                l.merge(&b);
+                l.merge(&c);
+                let mut bc = b.clone();
+                bc.merge(&c);
+                let mut r1 = a.clone();
+                r1.merge(&bc);
+                if l != r1 {
+                    return Err("merge is not associative".into());
+                }
+                // a + b == b + a
+                let mut ab = a.clone();
+                ab.merge(&b);
+                let mut ba = b.clone();
+                ba.merge(&a);
+                if ab != ba {
+                    return Err("merge is not commutative".into());
+                }
+                // Merging equals recording the concatenation.
+                let mut all: Vec<f64> = xa.clone();
+                all.extend_from_slice(xb);
+                all.extend_from_slice(xc);
+                if l != build(&all) {
+                    return Err("merge differs from recording the union".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,190 @@
+//! Observability: tracing, metrics, leveled logging, and the bench ledger.
+//!
+//! Self-contained (no external crates — see DESIGN.md "Substrates built
+//! from scratch") and deliberately boring on the hot path: every
+//! instrumentation site costs one relaxed atomic load when its subsystem
+//! is disabled, and none of it touches numerics, so instrumented runs are
+//! bit-identical to bare ones (`ref_golden_digest_is_thread_count_invariant`
+//! pins this with a traced re-run).
+//!
+//! * [`trace`]   — `span()`-scoped timers with hierarchical parent ids,
+//!   per-thread buffers, and Chrome `trace_event` / JSONL export
+//!   (`--trace-out PATH` on the CLI).
+//! * [`metrics`] — typed counters/gauges/log2-bucket histograms plus the
+//!   process-wide named registry; histogram merges are associative and
+//!   deterministic.
+//! * [`ledger`]  — the committed `BENCH_<area>.json` trajectory and the
+//!   `coc bench-diff` regression gate.
+//! * `obs::log!` — leveled logging to stderr (level from `COC_LOG`:
+//!   `error|warn|info|debug`, default `info`), sharing the capture sink
+//!   with traces so tests can assert on emitted events.
+
+pub mod ledger;
+pub mod metrics;
+pub mod trace;
+
+use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+/// Log severity, most severe first.  A configured level admits itself and
+/// everything more severe.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+impl Level {
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Level> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "error" | "e" | "0" => Some(Level::Error),
+            "warn" | "warning" | "w" | "1" => Some(Level::Warn),
+            "info" | "i" | "2" => Some(Level::Info),
+            "debug" | "d" | "3" => Some(Level::Debug),
+            _ => None,
+        }
+    }
+}
+
+const LEVEL_UNSET: u8 = u8::MAX;
+static MAX_LEVEL: AtomicU8 = AtomicU8::new(LEVEL_UNSET);
+
+fn max_level() -> u8 {
+    let v = MAX_LEVEL.load(Ordering::Relaxed);
+    if v != LEVEL_UNSET {
+        return v;
+    }
+    // First call parses COC_LOG once; unparseable values fall back to the
+    // default rather than erroring (logging must never fail a run).
+    let lvl = std::env::var("COC_LOG")
+        .ok()
+        .as_deref()
+        .and_then(Level::parse)
+        .unwrap_or(Level::Info) as u8;
+    MAX_LEVEL.store(lvl, Ordering::Relaxed);
+    lvl
+}
+
+/// Override the env-configured level (tests; `--verbose`-style flags).
+pub fn set_log_level(l: Level) {
+    MAX_LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+/// Whether a `log!` at `l` would emit — callers can gate expensive
+/// formatting on this (the macro already does).
+#[inline]
+pub fn log_enabled(l: Level) -> bool {
+    (l as u8) <= max_level()
+}
+
+static CAPTURE: AtomicBool = AtomicBool::new(false);
+
+fn capture_buf() -> &'static Mutex<Vec<(Level, String)>> {
+    static BUF: OnceLock<Mutex<Vec<(Level, String)>>> = OnceLock::new();
+    BUF.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+/// Emit one formatted record: stderr always, plus the in-memory capture
+/// buffer when a [`LogCapture`] is live.  Not meant to be called directly
+/// — use `obs::log!`.
+#[doc(hidden)]
+pub fn log_emit(level: Level, msg: String) {
+    eprintln!("{msg}");
+    if CAPTURE.load(Ordering::Relaxed) {
+        capture_buf().lock().unwrap_or_else(|e| e.into_inner()).push((level, msg));
+    }
+}
+
+/// Test hook: while a `LogCapture` is alive, every `obs::log!` record is
+/// also appended to a shared in-memory buffer.  The capture state is
+/// process-global, so records from concurrently running tests interleave —
+/// assert with `contains`, not equality.
+pub struct LogCapture(());
+
+impl LogCapture {
+    pub fn start() -> LogCapture {
+        capture_buf().lock().unwrap_or_else(|e| e.into_inner()).clear();
+        CAPTURE.store(true, Ordering::SeqCst);
+        LogCapture(())
+    }
+
+    /// Stop capturing and return everything recorded since `start`.
+    pub fn take(self) -> Vec<(Level, String)> {
+        CAPTURE.store(false, Ordering::SeqCst);
+        std::mem::take(&mut *capture_buf().lock().unwrap_or_else(|e| e.into_inner()))
+    }
+}
+
+impl Drop for LogCapture {
+    fn drop(&mut self) {
+        CAPTURE.store(false, Ordering::Relaxed);
+    }
+}
+
+/// Leveled log macro: `obs::log!(Level::Warn, "queue full: {n}")`.
+/// Arguments are not even formatted when the level is filtered out.
+#[macro_export]
+macro_rules! coc_log {
+    ($lvl:expr, $($arg:tt)*) => {{
+        let lvl = $lvl;
+        if $crate::obs::log_enabled(lvl) {
+            $crate::obs::log_emit(lvl, format!($($arg)*));
+        }
+    }};
+}
+
+pub use crate::coc_log as log;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_parsing_and_ordering() {
+        assert_eq!(Level::parse("warn"), Some(Level::Warn));
+        assert_eq!(Level::parse("DEBUG"), Some(Level::Debug));
+        assert_eq!(Level::parse("bogus"), None);
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Info < Level::Debug);
+        assert_eq!(Level::Warn.name(), "warn");
+    }
+
+    #[test]
+    fn log_capture_sees_emitted_events() {
+        let cap = LogCapture::start();
+        // Error always passes the filter regardless of COC_LOG.
+        crate::obs::log!(Level::Error, "obs-test-marker {}", 42);
+        let records = cap.take();
+        assert!(
+            records.iter().any(|(l, m)| *l == Level::Error && m == "obs-test-marker 42"),
+            "{records:?}"
+        );
+    }
+
+    #[test]
+    fn filtered_levels_do_not_format() {
+        // A Debug record under the default Info level must not evaluate
+        // its arguments (the macro short-circuits before format!).
+        if std::env::var("COC_LOG").is_ok() {
+            return; // the environment overrides the default; skip
+        }
+        set_log_level(Level::Info);
+        let evaluated = std::cell::Cell::new(false);
+        crate::obs::log!(Level::Debug, "never: {}", {
+            evaluated.set(true);
+            "x"
+        });
+        assert!(!evaluated.get(), "filtered log! must not format its arguments");
+    }
+}

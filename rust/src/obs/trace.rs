@@ -1,0 +1,463 @@
+//! Scoped-span tracing over monotonic clocks.
+//!
+//! The hot-path contract: when tracing is disabled (the default), entering
+//! a span is one relaxed atomic load and nothing else — no allocation, no
+//! clock read, no thread-local touch.  When enabled, each span records a
+//! Begin/End event pair into a per-thread buffer that flushes into a
+//! process-wide sink (on overflow and on thread exit), so instrumented
+//! code never contends on a global lock per event.
+//!
+//! Span identity: ids come from one process-wide counter; each thread
+//! keeps a stack of open span ids, so every event carries its parent id
+//! and the exported trace is a forest.  `SpanGuard` is RAII — exits always
+//! match enters and nesting is balanced per thread by construction (the
+//! `prop_span_tree_well_formed` test pins this).
+//!
+//! Export: Chrome `trace_event` JSON (load in `chrome://tracing` or
+//! Perfetto) or JSONL, chosen by file extension in [`export`].
+
+use std::borrow::Cow;
+use std::cell::RefCell;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    Begin,
+    End,
+}
+
+/// One half of a span: a Begin or End mark on one thread.
+#[derive(Debug, Clone)]
+pub struct Event {
+    pub name: Cow<'static, str>,
+    pub phase: Phase,
+    /// Process-unique span id (Begin and End share it).
+    pub id: u64,
+    /// Enclosing span's id; 0 for a root span.
+    pub parent: u64,
+    /// Process-local thread number (assigned on first span per thread).
+    pub tid: u64,
+    /// Nanoseconds since the process trace epoch.
+    pub ts_ns: u64,
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static NEXT_SPAN_ID: AtomicU64 = AtomicU64::new(1);
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+/// Per-thread buffer flushes into the sink at this size.
+const FLUSH_AT: usize = 4096;
+
+fn epoch() -> &'static Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    EPOCH.get_or_init(Instant::now)
+}
+
+fn now_ns() -> u64 {
+    epoch().elapsed().as_nanos() as u64
+}
+
+fn sink() -> &'static Mutex<Vec<Event>> {
+    static SINK: OnceLock<Mutex<Vec<Event>>> = OnceLock::new();
+    SINK.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+struct Local {
+    tid: u64,
+    stack: Vec<u64>,
+    buf: Vec<Event>,
+}
+
+impl Local {
+    fn flush(&mut self) {
+        if self.buf.is_empty() {
+            return;
+        }
+        // This runs from Drop during unwinding too — never re-panic on a
+        // poisoned sink, just keep the events.
+        sink().lock().unwrap_or_else(|e| e.into_inner()).append(&mut self.buf);
+    }
+}
+
+impl Drop for Local {
+    fn drop(&mut self) {
+        // Worker threads flush their tail on exit, so a pool that has been
+        // joined has published every event it recorded.
+        self.flush();
+    }
+}
+
+thread_local! {
+    static LOCAL: RefCell<Local> = RefCell::new(Local {
+        tid: NEXT_TID.fetch_add(1, Ordering::Relaxed),
+        stack: Vec::new(),
+        buf: Vec::new(),
+    });
+}
+
+/// Whether spans currently record (one relaxed load — the entire disabled
+/// cost of every instrumentation site).
+#[inline(always)]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn tracing on (clears any previously buffered events so one export
+/// corresponds to one enable..export window).
+pub fn enable() {
+    let _ = epoch();
+    reset();
+    ENABLED.store(true, Ordering::SeqCst);
+}
+
+/// Turn tracing off.  Open spans still record their End events (their
+/// guards were armed at creation), so traces stay well-formed.
+pub fn disable() {
+    ENABLED.store(false, Ordering::SeqCst);
+}
+
+/// Drop all buffered events on the calling thread and in the sink.
+pub fn reset() {
+    LOCAL.with(|l| {
+        let mut l = l.borrow_mut();
+        l.buf.clear();
+        l.stack.clear();
+    });
+    sink().lock().unwrap_or_else(|e| e.into_inner()).clear();
+}
+
+/// RAII span: records Begin on creation, End on drop.  Inert (zero work on
+/// drop) when tracing was disabled at creation.
+pub struct SpanGuard {
+    name: Cow<'static, str>,
+    id: u64,
+    parent: u64,
+    armed: bool,
+}
+
+/// Open a span with a static name (the common, allocation-light case).
+#[inline]
+pub fn span(name: &'static str) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard { name: Cow::Borrowed(""), id: 0, parent: 0, armed: false };
+    }
+    span_cow(Cow::Borrowed(name))
+}
+
+/// Open a span whose name is built lazily — the closure only runs (and
+/// allocates) when tracing is enabled.
+#[inline]
+pub fn span_with<F: FnOnce() -> String>(f: F) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard { name: Cow::Borrowed(""), id: 0, parent: 0, armed: false };
+    }
+    span_cow(Cow::Owned(f()))
+}
+
+fn span_cow(name: Cow<'static, str>) -> SpanGuard {
+    let id = NEXT_SPAN_ID.fetch_add(1, Ordering::Relaxed);
+    LOCAL.with(|l| {
+        let mut l = l.borrow_mut();
+        let parent = l.stack.last().copied().unwrap_or(0);
+        l.stack.push(id);
+        let ev = Event {
+            name: name.clone(),
+            phase: Phase::Begin,
+            id,
+            parent,
+            tid: l.tid,
+            ts_ns: now_ns(),
+        };
+        l.buf.push(ev);
+        if l.buf.len() >= FLUSH_AT {
+            l.flush();
+        }
+        SpanGuard { name, id, parent, armed: true }
+    })
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if !self.armed {
+            return;
+        }
+        LOCAL.with(|l| {
+            let mut l = l.borrow_mut();
+            // Pop to (and including) our id; RAII drop order makes this a
+            // single pop, the loop only guards against exotic guard moves.
+            while let Some(top) = l.stack.pop() {
+                if top == self.id {
+                    break;
+                }
+            }
+            let ev = Event {
+                name: std::mem::replace(&mut self.name, Cow::Borrowed("")),
+                phase: Phase::End,
+                id: self.id,
+                parent: self.parent,
+                tid: l.tid,
+                ts_ns: now_ns(),
+            };
+            l.buf.push(ev);
+            if l.buf.len() >= FLUSH_AT {
+                l.flush();
+            }
+        });
+    }
+}
+
+/// Flush the calling thread's buffer and return every event recorded so
+/// far, sorted by timestamp.  Other *live* threads' unflushed tails are
+/// not included — join workers before exporting (the pool shutdown paths
+/// already do; thread exit flushes automatically).
+pub fn snapshot() -> Vec<Event> {
+    LOCAL.with(|l| l.borrow_mut().flush());
+    let mut evs = sink().lock().unwrap_or_else(|e| e.into_inner()).clone();
+    evs.sort_by_key(|e| e.ts_ns);
+    evs
+}
+
+/// Export the current snapshot; `.jsonl` extension selects JSONL, anything
+/// else Chrome `trace_event` JSON.
+pub fn export(path: &Path) -> anyhow::Result<()> {
+    let jsonl = path.extension().and_then(|e| e.to_str()) == Some("jsonl");
+    if jsonl {
+        export_jsonl(path)
+    } else {
+        export_chrome(path)
+    }
+}
+
+fn escape(name: &str) -> String {
+    // Span names are ascii identifiers by convention; escape defensively.
+    name.chars()
+        .flat_map(|c| match c {
+            '"' | '\\' => vec!['\\', c],
+            c if (c as u32) < 0x20 => vec![' '],
+            c => vec![c],
+        })
+        .collect()
+}
+
+/// Chrome `trace_event` format: `{"traceEvents": [{"ph": "B"|"E", ...}]}`
+/// with microsecond timestamps.
+pub fn export_chrome(path: &Path) -> anyhow::Result<()> {
+    let evs = snapshot();
+    let mut out = String::with_capacity(64 + evs.len() * 96);
+    out.push_str("{\"traceEvents\":[");
+    for (i, e) in evs.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let ph = match e.phase {
+            Phase::Begin => 'B',
+            Phase::End => 'E',
+        };
+        out.push_str(&format!(
+            "{{\"name\":\"{}\",\"ph\":\"{}\",\"ts\":{:.3},\"pid\":1,\"tid\":{},\"args\":{{\"id\":{},\"parent\":{}}}}}",
+            escape(&e.name),
+            ph,
+            e.ts_ns as f64 / 1e3,
+            e.tid,
+            e.id,
+            e.parent
+        ));
+    }
+    out.push_str("]}\n");
+    std::fs::write(path, out)
+        .map_err(|e| anyhow::anyhow!("writing trace {}: {e}", path.display()))
+}
+
+/// JSONL: one event object per line, nanosecond timestamps.
+pub fn export_jsonl(path: &Path) -> anyhow::Result<()> {
+    let evs = snapshot();
+    let mut out = String::with_capacity(evs.len() * 96);
+    for e in &evs {
+        let ph = match e.phase {
+            Phase::Begin => "B",
+            Phase::End => "E",
+        };
+        out.push_str(&format!(
+            "{{\"name\":\"{}\",\"ph\":\"{}\",\"id\":{},\"parent\":{},\"tid\":{},\"ts_ns\":{}}}\n",
+            escape(&e.name),
+            ph,
+            e.id,
+            e.parent,
+            e.tid,
+            e.ts_ns
+        ));
+    }
+    std::fs::write(path, out)
+        .map_err(|e| anyhow::anyhow!("writing trace {}: {e}", path.display()))
+}
+
+/// Check Begin/End well-formedness of `events` per thread: every End
+/// matches the most recent open Begin with the same id (proper nesting),
+/// no End without a Begin, and nothing left open.  Returns a description
+/// of the first violation.  Used by tests; exported events additionally
+/// get timestamp-sorted, which preserves per-thread order (buffers are
+/// appended in record order and timestamps are monotonic per thread).
+pub fn check_well_formed(events: &[Event]) -> Result<(), String> {
+    use std::collections::BTreeMap;
+    let mut stacks: BTreeMap<u64, Vec<(u64, String)>> = BTreeMap::new();
+    for e in events {
+        let stack = stacks.entry(e.tid).or_default();
+        match e.phase {
+            Phase::Begin => stack.push((e.id, e.name.to_string())),
+            Phase::End => match stack.pop() {
+                None => return Err(format!("End `{}` (id {}) with empty stack", e.name, e.id)),
+                Some((id, name)) => {
+                    if id != e.id {
+                        return Err(format!(
+                            "End `{}` (id {}) crosses open span `{name}` (id {id})",
+                            e.name, e.id
+                        ));
+                    }
+                }
+            },
+        }
+    }
+    for (tid, stack) in &stacks {
+        if let Some((id, name)) = stack.last() {
+            return Err(format!("span `{name}` (id {id}) left open on tid {tid}"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Tracing state is process-global and `cargo test` is parallel:
+    // every test that toggles it holds this lock.
+    fn test_lock() -> std::sync::MutexGuard<'static, ()> {
+        static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+        LOCK.get_or_init(|| Mutex::new(())).lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn spans_record_pairs_and_disable_is_inert() {
+        let _guard = test_lock();
+        enable();
+        {
+            let _a = span("outer");
+            {
+                let _b = span_with(|| format!("inner_{}", 1));
+            }
+        }
+        // A worker thread's events flush on thread exit.
+        std::thread::spawn(|| {
+            let _w = span("worker");
+        })
+        .join()
+        .unwrap();
+        disable();
+        let evs = snapshot();
+        // Other tests may run instrumented code concurrently; only judge
+        // the events this test owns (names are unique to it).
+        let named: Vec<Event> = evs
+            .iter()
+            .filter(|e| e.name == "outer" || e.name == "inner_1" || e.name == "worker")
+            .cloned()
+            .collect();
+        assert_eq!(named.len(), 6, "3 spans -> 6 events, got {named:?}");
+        let outer_b = named.iter().find(|e| e.name == "outer" && e.phase == Phase::Begin).unwrap();
+        let inner_b = named.iter().find(|e| e.name == "inner_1" && e.phase == Phase::Begin).unwrap();
+        assert_eq!(inner_b.parent, outer_b.id, "inner span's parent is the enclosing span");
+        let worker_b = named.iter().find(|e| e.name == "worker" && e.phase == Phase::Begin).unwrap();
+        assert_eq!(worker_b.parent, 0, "worker span is a root on its thread");
+        assert_ne!(worker_b.tid, outer_b.tid);
+        check_well_formed(&named).unwrap();
+
+        reset();
+        // Disabled spans do nothing — no events, no ids burned on the sink.
+        {
+            let _c = span("disabled");
+        }
+        assert!(snapshot().iter().all(|e| e.name != "disabled"));
+    }
+
+    #[test]
+    fn prop_span_tree_well_formed() {
+        let _guard = test_lock();
+        enable();
+        // Unique name prefix per property case so concurrent instrumented
+        // tests (and shrink re-runs) can't contaminate the filtered view.
+        static CASE: AtomicU64 = AtomicU64::new(0);
+
+        fn build(prefix: &str, label: usize, depth: usize) {
+            let _s = span_with(|| format!("{prefix}{label}_{depth}"));
+            if depth > 0 {
+                build(prefix, label, depth - 1);
+            }
+        }
+
+        crate::util::prop::check(
+            "span_tree_well_formed",
+            32,
+            |r| {
+                let n = r.below(8);
+                (0..n).map(|_| r.below(4)).collect::<Vec<usize>>()
+            },
+            |script| {
+                let case = CASE.fetch_add(1, Ordering::Relaxed);
+                let prefix = format!("prop_{case}_");
+                for (i, &d) in script.iter().enumerate() {
+                    build(&prefix, i, d);
+                }
+                let evs: Vec<Event> = snapshot()
+                    .into_iter()
+                    .filter(|e| e.name.starts_with(&prefix))
+                    .collect();
+                let expected = 2 * script.iter().map(|d| d + 1).sum::<usize>();
+                if evs.len() != expected {
+                    return Err(format!("expected {expected} events, got {}", evs.len()));
+                }
+                check_well_formed(&evs)?;
+                // Every non-root parent must itself be a Begin in this case's
+                // forest — parents never dangle.
+                let ids: std::collections::BTreeSet<u64> = evs.iter().map(|e| e.id).collect();
+                for e in &evs {
+                    if e.parent != 0 && !ids.contains(&e.parent) {
+                        return Err(format!("event `{}` has dangling parent {}", e.name, e.parent));
+                    }
+                }
+                Ok(())
+            },
+        );
+        disable();
+        reset();
+    }
+
+    #[test]
+    fn exports_write_loadable_files() {
+        let _guard = test_lock();
+        let dir = std::env::temp_dir().join(format!("coc_trace_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        enable();
+        {
+            let _s = span("export_me");
+        }
+        disable();
+        let chrome = dir.join("t.json");
+        export(&chrome).unwrap();
+        let text = std::fs::read_to_string(&chrome).unwrap();
+        let parsed = crate::util::json::Json::parse(&text).unwrap();
+        let evs = parsed.req("traceEvents").unwrap().as_arr().unwrap();
+        assert!(evs
+            .iter()
+            .any(|e| e.get("name").and_then(|n| n.as_str()) == Some("export_me")));
+        let jsonl = dir.join("t.jsonl");
+        export(&jsonl).unwrap();
+        let text = std::fs::read_to_string(&jsonl).unwrap();
+        assert!(text.lines().count() >= 2);
+        for line in text.lines() {
+            crate::util::json::Json::parse(line).unwrap();
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -26,7 +26,7 @@ impl Reporter {
     pub fn write(&self, name: &str, contents: &str) -> Result<PathBuf> {
         let p = self.path(name);
         fs::write(&p, contents).with_context(|| format!("writing {}", p.display()))?;
-        println!("wrote {}", p.display());
+        crate::obs::log!(crate::obs::Level::Info, "wrote {}", p.display());
         Ok(p)
     }
 
@@ -76,7 +76,8 @@ impl Reporter {
                     // Atomic rename; a concurrent loser's failed rename is
                     // harmless (the winner already moved the stale file).
                     if fs::rename(&p, &bak).is_ok() {
-                        eprintln!(
+                        crate::obs::log!(
+                            crate::obs::Level::Warn,
                             "[report] {} header changed; rotated old rows to {}",
                             p.display(),
                             bak.display()

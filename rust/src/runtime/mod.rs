@@ -54,12 +54,12 @@ pub use refback::{default_threads as default_ref_threads, threads_per_worker};
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, Context, Result};
 
 use crate::models::{ArchManifest, ModelState};
+use crate::obs::metrics::Counter;
 use crate::tensor::Tensor;
 
 /// Buffer-mode execution is unavailable (upload failed, the runtime
@@ -89,37 +89,40 @@ pub struct RuntimeStats {
     pub bytes_downloaded: u64,
 }
 
-/// Shared mutable counters: atomics so executables can record from any
-/// thread that owns their engine without locks on the hot path.
+/// Shared mutable counters: `obs::metrics::Counter` (relaxed atomics under
+/// the hood) so executables can record from any thread that owns their
+/// engine without locks on the hot path.  Engines are per-thread (PJRT
+/// handles are not `Send`), so these stay per-engine rather than living in
+/// the global metrics registry — `serve_bench.json` sums them per worker.
 #[derive(Debug, Default)]
 pub(crate) struct StatsCell {
-    pub(crate) executions: AtomicU64,
-    pub(crate) execute_ns: AtomicU64,
-    pub(crate) upload_ns: AtomicU64,
-    pub(crate) download_ns: AtomicU64,
-    pub(crate) bytes_uploaded: AtomicU64,
-    pub(crate) bytes_downloaded: AtomicU64,
+    pub(crate) executions: Counter,
+    pub(crate) execute_ns: Counter,
+    pub(crate) upload_ns: Counter,
+    pub(crate) download_ns: Counter,
+    pub(crate) bytes_uploaded: Counter,
+    pub(crate) bytes_downloaded: Counter,
 }
 
 impl StatsCell {
     pub(crate) fn snapshot(&self) -> RuntimeStats {
         RuntimeStats {
-            executions: self.executions.load(Ordering::Relaxed),
-            execute_ns: self.execute_ns.load(Ordering::Relaxed),
-            upload_ns: self.upload_ns.load(Ordering::Relaxed),
-            download_ns: self.download_ns.load(Ordering::Relaxed),
-            bytes_uploaded: self.bytes_uploaded.load(Ordering::Relaxed),
-            bytes_downloaded: self.bytes_downloaded.load(Ordering::Relaxed),
+            executions: self.executions.get(),
+            execute_ns: self.execute_ns.get(),
+            upload_ns: self.upload_ns.get(),
+            download_ns: self.download_ns.get(),
+            bytes_uploaded: self.bytes_uploaded.get(),
+            bytes_downloaded: self.bytes_downloaded.get(),
         }
     }
 
     fn reset(&self) {
-        self.executions.store(0, Ordering::Relaxed);
-        self.execute_ns.store(0, Ordering::Relaxed);
-        self.upload_ns.store(0, Ordering::Relaxed);
-        self.download_ns.store(0, Ordering::Relaxed);
-        self.bytes_uploaded.store(0, Ordering::Relaxed);
-        self.bytes_downloaded.store(0, Ordering::Relaxed);
+        self.executions.reset();
+        self.execute_ns.reset();
+        self.upload_ns.reset();
+        self.download_ns.reset();
+        self.bytes_uploaded.reset();
+        self.bytes_downloaded.reset();
     }
 }
 
@@ -448,7 +451,10 @@ pub fn upload_eval_prefix(engine: &Engine, state: &ModelState) -> Result<Vec<Dev
 pub fn note_residency_fallback(what: &str, e: &anyhow::Error) {
     static WARNED: std::sync::Once = std::sync::Once::new();
     WARNED.call_once(|| {
-        eprintln!("[runtime] {what}: {e:#}; falling back to literal marshalling (logged once)");
+        crate::obs::log!(
+            crate::obs::Level::Warn,
+            "[runtime] {what}: {e:#}; falling back to literal marshalling (logged once)"
+        );
     });
 }
 
@@ -465,7 +471,7 @@ mod tests {
     #[test]
     fn stats_snapshot_starts_zero() {
         let c = StatsCell::default();
-        c.executions.fetch_add(3, Ordering::Relaxed);
+        c.executions.add(3);
         assert_eq!(c.snapshot().executions, 3);
         c.reset();
         assert_eq!(c.snapshot().executions, 0);
@@ -474,8 +480,8 @@ mod tests {
     #[test]
     fn stats_track_transfer_bytes() {
         let c = StatsCell::default();
-        c.bytes_uploaded.fetch_add(1024, Ordering::Relaxed);
-        c.bytes_downloaded.fetch_add(8, Ordering::Relaxed);
+        c.bytes_uploaded.add(1024);
+        c.bytes_downloaded.add(8);
         let snap = c.snapshot();
         assert_eq!(snap.bytes_uploaded, 1024);
         assert_eq!(snap.bytes_downloaded, 8);

@@ -11,13 +11,13 @@
 //! transport.
 
 use std::path::{Path, PathBuf};
-use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{Context, Result};
 
 use crate::models::ArchManifest;
+use crate::obs::trace;
 use crate::tensor::Tensor;
 
 use super::{
@@ -45,13 +45,20 @@ impl PjrtBackend {
         .with_context(|| format!("parsing HLO text `{}` (run `make artifacts`?)", path.display()))?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let t0 = Instant::now();
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling `{}`", path.display()))?;
+        let exe = {
+            let _s = trace::span("pjrt.compile");
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling `{}`", path.display()))?
+        };
         let dt = t0.elapsed();
         if dt.as_millis() > 500 {
-            eprintln!("[runtime] compiled {} in {:.1}s", path.display(), dt.as_secs_f64());
+            crate::obs::log!(
+                crate::obs::Level::Info,
+                "[runtime] compiled {} in {:.1}s",
+                path.display(),
+                dt.as_secs_f64()
+            );
         }
         Ok(Box::new(PjrtGraph {
             exe,
@@ -76,16 +83,15 @@ impl Backend for PjrtBackend {
     }
 
     fn upload(&self, t: &Tensor) -> Result<DeviceBuffer> {
+        let _s = trace::span("pjrt.upload");
         let t0 = Instant::now();
         let lit = tensor_to_literal(t)?;
         let buf = self
             .client
             .buffer_from_host_literal(None, &lit)
             .map_err(|e| ResidencyUnsupported(format!("buffer upload: {e}")))?;
-        self.stats
-            .upload_ns
-            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
-        self.stats.bytes_uploaded.fetch_add(4 * t.len() as u64, Ordering::Relaxed);
+        self.stats.upload_ns.add(t0.elapsed().as_nanos() as u64);
+        self.stats.bytes_uploaded.add(4 * t.len() as u64);
         Ok(DeviceBuffer::new(Box::new(PjrtBuf { buf, stats: self.stats.clone() })))
     }
 }
@@ -101,25 +107,24 @@ impl GraphExec for PjrtGraph {
     /// All our graphs are lowered with `return_tuple=True`, so PJRT hands
     /// back a single tuple buffer which we decompose into leaves.
     fn run(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let _s = trace::span("pjrt.run");
         let t0 = Instant::now();
         let literals: Vec<xla::Literal> =
             inputs.iter().map(|t| tensor_to_literal(t)).collect::<Result<_>>()?;
         let in_bytes: usize = inputs.iter().map(|t| 4 * t.len()).sum();
         let t1 = Instant::now();
-        self.stats
-            .upload_ns
-            .fetch_add((t1 - t0).as_nanos() as u64, Ordering::Relaxed);
-        self.stats.bytes_uploaded.fetch_add(in_bytes as u64, Ordering::Relaxed);
+        self.stats.upload_ns.add((t1 - t0).as_nanos() as u64);
+        self.stats.bytes_uploaded.add(in_bytes as u64);
 
-        let out = self
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .with_context(|| format!("executing `{}`", self.name))?;
+        let out = {
+            let _s = trace::span("pjrt.execute");
+            self.exe
+                .execute::<xla::Literal>(&literals)
+                .with_context(|| format!("executing `{}`", self.name))?
+        };
         let t2 = Instant::now();
-        self.stats.executions.fetch_add(1, Ordering::Relaxed);
-        self.stats
-            .execute_ns
-            .fetch_add((t2 - t1).as_nanos() as u64, Ordering::Relaxed);
+        self.stats.executions.incr();
+        self.stats.execute_ns.add((t2 - t1).as_nanos() as u64);
 
         let lit = out[0][0]
             .to_literal_sync()
@@ -130,10 +135,8 @@ impl GraphExec for PjrtGraph {
             .map(|l| literal_to_tensor(&l))
             .collect::<Result<Vec<_>>>()?;
         let out_bytes: usize = tensors.iter().map(|t| 4 * t.len()).sum();
-        self.stats
-            .download_ns
-            .fetch_add(t2.elapsed().as_nanos() as u64, Ordering::Relaxed);
-        self.stats.bytes_downloaded.fetch_add(out_bytes as u64, Ordering::Relaxed);
+        self.stats.download_ns.add(t2.elapsed().as_nanos() as u64);
+        self.stats.bytes_downloaded.add(out_bytes as u64);
         Ok(tensors)
     }
 
@@ -149,14 +152,14 @@ impl GraphExec for PjrtGraph {
             })
             .collect::<Result<_>>()?;
         let t0 = Instant::now();
-        let mut out = self
-            .exe
-            .execute_b(&bufs)
-            .with_context(|| format!("buffer-executing `{}`", self.name))?;
-        self.stats.executions.fetch_add(1, Ordering::Relaxed);
-        self.stats
-            .execute_ns
-            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        let mut out = {
+            let _s = trace::span("pjrt.execute");
+            self.exe
+                .execute_b(&bufs)
+                .with_context(|| format!("buffer-executing `{}`", self.name))?
+        };
+        self.stats.executions.incr();
+        self.stats.execute_ns.add(t0.elapsed().as_nanos() as u64);
         anyhow::ensure!(!out.is_empty(), "`{}` returned no device results", self.name);
         Ok(out
             .swap_remove(0)
@@ -175,13 +178,12 @@ struct PjrtBuf {
 
 impl DeviceBuf for PjrtBuf {
     fn to_tensor(&self) -> Result<Tensor> {
+        let _s = trace::span("pjrt.download");
         let t0 = Instant::now();
         let lit = self.buf.to_literal_sync().context("downloading device buffer")?;
         let t = literal_to_tensor(&lit)?;
-        self.stats
-            .download_ns
-            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
-        self.stats.bytes_downloaded.fetch_add(4 * t.len() as u64, Ordering::Relaxed);
+        self.stats.download_ns.add(t0.elapsed().as_nanos() as u64);
+        self.stats.bytes_downloaded.add(4 * t.len() as u64);
         Ok(t)
     }
 

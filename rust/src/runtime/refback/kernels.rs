@@ -171,6 +171,7 @@ pub fn conv2d(
     threads: usize,
     scratch: &mut Scratch,
 ) -> Result<Tensor> {
+    let _s = crate::obs::trace::span("refback.conv2d");
     let g = ConvGeom::of_conv(x, w, stride)?;
     let mut out = scratch.take_full(g.b * g.out_len());
     let flops = g.out_len() * g.k * g.k * g.cin;
@@ -358,6 +359,7 @@ pub fn conv2d_backward(
     threads: usize,
     scratch: &mut Scratch,
 ) -> ConvGrads {
+    let _s = crate::obs::trace::span("refback.conv2d_backward");
     let g = ConvGeom::new(
         x.shape[0],
         x.shape[1],
@@ -487,6 +489,7 @@ pub fn dwconv2d(
     threads: usize,
     scratch: &mut Scratch,
 ) -> Result<Tensor> {
+    let _s = crate::obs::trace::span("refback.dwconv2d");
     let g = ConvGeom::of_dwconv(x, w, stride)?;
     let mut out = scratch.take_full(g.b * g.out_len());
     let flops = g.ho * g.wo * g.cout * g.k * g.k;
@@ -548,6 +551,7 @@ pub fn dwconv2d_backward(
     threads: usize,
     scratch: &mut Scratch,
 ) -> ConvGrads {
+    let _s = crate::obs::trace::span("refback.dwconv2d_backward");
     let c = x.shape[3];
     let g = ConvGeom::new(x.shape[0], x.shape[1], x.shape[2], c, w.shape[0], c, stride);
     let wlen = w.len();
@@ -630,6 +634,7 @@ fn dwconv2d_bwd_item(
 /// ascending from 0.0, no zero-skip.  MR x NR register tiles hold the
 /// accumulators across the whole k loop.
 pub fn matmul(a: &Tensor, w: &Tensor, scratch: &mut Scratch) -> Tensor {
+    let _s = crate::obs::trace::span("refback.matmul");
     let (m, k) = (a.shape[0], a.shape[1]);
     let n = w.shape[1];
     let mut out = scratch.take_full(m * n);

@@ -75,7 +75,6 @@ pub use pool::{default_threads, threads_per_worker};
 pub use scratch::Scratch;
 
 use std::borrow::Cow;
-use std::sync::atomic::Ordering;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
@@ -176,14 +175,13 @@ struct RefGraph {
 
 impl GraphExec for RefGraph {
     fn run(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let _s = crate::obs::trace::span("refback.run");
         let t0 = Instant::now();
         let out = self
             .dispatch(inputs)
             .with_context(|| format!("executing `{}`", self.name))?;
-        self.stats.executions.fetch_add(1, Ordering::Relaxed);
-        self.stats
-            .execute_ns
-            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        self.stats.executions.incr();
+        self.stats.execute_ns.add(t0.elapsed().as_nanos() as u64);
         Ok(out)
     }
 

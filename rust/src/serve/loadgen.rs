@@ -208,7 +208,10 @@ struct Recorder {
 
 impl Recorder {
     fn new() -> Recorder {
-        Recorder { latency_us: Summary::default(), completed: 0, correct: 0, labelled: 0, n1: 0, n2: 0 }
+        // Bounded summary: open-loop soaks record one latency per request
+        // for the whole run — the exact representation grows without bound
+        // at high rates, the histogram-backed one is O(1).
+        Recorder { latency_us: Summary::bounded(), completed: 0, correct: 0, labelled: 0, n1: 0, n2: 0 }
     }
 
     fn record(&mut self, o: &ServeOutcome) {
@@ -298,7 +301,8 @@ pub fn run(pool: &WorkerPool, ds: &Dataset, opts: &LoadOpts) -> Result<BenchRepo
                                         in_flight = in_flight.saturating_sub(1);
                                     }
                                     Pop::TimedOut => {
-                                        eprintln!(
+                                        crate::obs::log!(
+                                            crate::obs::Level::Warn,
                                             "[loadgen] queue full and pool silent for {:?} — workers dead?",
                                             opts.drain_timeout
                                         );
@@ -320,7 +324,8 @@ pub fn run(pool: &WorkerPool, ds: &Dataset, opts: &LoadOpts) -> Result<BenchRepo
                         in_flight = in_flight.saturating_sub(1);
                     }
                     Pop::TimedOut => {
-                        eprintln!(
+                        crate::obs::log!(
+                            crate::obs::Level::Warn,
                             "[loadgen] {in_flight} requests silent for {:?} — workers dead?",
                             opts.drain_timeout
                         );
@@ -339,7 +344,8 @@ pub fn run(pool: &WorkerPool, ds: &Dataset, opts: &LoadOpts) -> Result<BenchRepo
         match pool.outcomes().pop_timeout(opts.drain_timeout) {
             Pop::Item(o) => rec.record(&o),
             Pop::TimedOut => {
-                eprintln!(
+                crate::obs::log!(
+                    crate::obs::Level::Warn,
                     "[loadgen] gave up on {} in-flight requests after {:?}",
                     accepted - rec.completed,
                     opts.drain_timeout

@@ -189,7 +189,10 @@ impl<'e> StageRunner<'e> {
                     break;
                 }
                 Err(e) => {
-                    eprintln!("[serve] batched stage graphs (b{best}) unavailable: {e:#}");
+                    crate::obs::log!(
+                        crate::obs::Level::Warn,
+                        "[serve] batched stage graphs (b{best}) unavailable: {e:#}"
+                    );
                     cap = best - 1;
                 }
             }

@@ -46,7 +46,9 @@ pub struct SloReport {
 /// a dead worker — both violate the SLO), and the run wall time.
 pub fn report(latency_us: &Summary, shed_or_lost: usize, wall_secs: f64, slo: Slo) -> SloReport {
     let target = slo.latency_us();
-    let attained = latency_us.samples().iter().filter(|&&l| l <= target).count();
+    // count_le works for both exact and bounded (fixed-memory) summaries;
+    // the open-loop load generator records into the bounded form.
+    let attained = latency_us.count_le(target);
     let offered = latency_us.len() + shed_or_lost;
     SloReport {
         slo_ms: slo.latency_ms,

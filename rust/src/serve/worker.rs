@@ -25,6 +25,8 @@ use super::batcher::{drain_batch, plan_chunks, plan_rows, BatchPolicy};
 use super::queue::{Queue, QueueStats};
 use super::StageRunner;
 use crate::models::ModelState;
+use crate::obs::metrics::{self, Counter, Gauge};
+use crate::obs::trace;
 use crate::runtime::{BackendChoice, Engine};
 use crate::tensor::Tensor;
 
@@ -146,6 +148,11 @@ pub struct WorkerPool {
     handles: Vec<JoinHandle<Result<WorkerStats>>>,
     ready: Arc<(Mutex<Ready>, Condvar)>,
     workers: usize,
+    // Registry handles resolved once at construction — submit paths touch
+    // only the cached Arcs, never the name lookup.
+    m_accepted: Arc<Counter>,
+    m_rejected: Arc<Counter>,
+    m_depth: Arc<Gauge>,
 }
 
 impl WorkerPool {
@@ -166,7 +173,16 @@ impl WorkerPool {
                 worker_main(w, state, opts, jobs, outcomes, ready)
             }));
         }
-        WorkerPool { jobs, outcomes, handles, ready, workers: opts.workers }
+        WorkerPool {
+            jobs,
+            outcomes,
+            handles,
+            ready,
+            workers: opts.workers,
+            m_accepted: metrics::counter("serve.queue.accepted"),
+            m_rejected: metrics::counter("serve.queue.rejected"),
+            m_depth: metrics::gauge("serve.queue.depth"),
+        }
     }
 
     /// Configured pool size.
@@ -208,12 +224,29 @@ impl WorkerPool {
 
     /// Admission-controlled submit (load shedding when the queue is full).
     pub fn try_submit(&self, job: ServeJob) -> std::result::Result<(), ServeJob> {
-        self.jobs.try_push(job)
+        match self.jobs.try_push(job) {
+            Ok(()) => {
+                self.m_accepted.incr();
+                self.m_depth.set(self.jobs.len() as f64);
+                Ok(())
+            }
+            Err(j) => {
+                self.m_rejected.incr();
+                Err(j)
+            }
+        }
     }
 
     /// Blocking submit (closed-loop clients).
     pub fn submit(&self, job: ServeJob) -> std::result::Result<(), ServeJob> {
-        self.jobs.push(job)
+        match self.jobs.push(job) {
+            Ok(()) => {
+                self.m_accepted.incr();
+                self.m_depth.set(self.jobs.len() as f64);
+                Ok(())
+            }
+            Err(j) => Err(j), // closed, not shed — no rejection count
+        }
     }
 
     pub fn outcomes(&self) -> &Queue<ServeOutcome> {
@@ -294,19 +327,35 @@ fn worker_main(
         stats.bytes_downloaded = rs.bytes_downloaded;
         stats
     };
+    // Resolve registry handles once per worker; the loop touches only Arcs.
+    let m_drains = metrics::counter("serve.batch.drains");
+    let m_rows_useful = metrics::counter("serve.batch.rows_useful");
+    let m_rows_executed = metrics::counter("serve.batch.rows_executed");
     loop {
-        let batch = drain_batch(&jobs, &opts.batch);
+        let batch = {
+            // Span covers the micro-batch assembly wait (arrival gaps +
+            // linger), distinct from the execute below.
+            let _s = trace::span("serve.drain_batch");
+            drain_batch(&jobs, &opts.batch)
+        };
         if batch.is_empty() {
             break; // queue closed and drained
         }
         stats.drains += 1;
+        m_drains.incr();
         stats.max_chunk = stats.max_chunk.max(batch.len());
         let (useful, executed) =
             plan_rows(&plan_chunks(batch.len(), stats.stage_batch), stats.stage_batch);
         stats.rows_useful += useful as u64;
         stats.rows_executed += executed as u64;
+        m_rows_useful.add(useful as u64);
+        m_rows_executed.add(executed as u64);
         let xs: Vec<&Tensor> = batch.iter().map(|j| &j.x).collect();
-        let results = match runner.infer_many(&xs, t1, t2) {
+        let results = {
+            let _s = trace::span("serve.infer_batch");
+            runner.infer_many(&xs, t1, t2)
+        };
+        let results = match results {
             Ok(r) => r,
             Err(e) => {
                 // Dying mid-run: move ourselves from `ready` to `failed`

@@ -147,6 +147,7 @@ pub fn train(
     teacher: Option<&TeacherLogits>,
     opts: &TrainOpts,
 ) -> Result<TrainLog> {
+    let _span = crate::obs::trace::span("train.run");
     match train_resident(engine, state, ds, teacher, opts) {
         Ok(log) => Ok(log),
         Err(e) if e.downcast_ref::<ResidencyUnsupported>().is_some() => {
@@ -252,7 +253,10 @@ fn train_resident(
         log.losses.push(loss);
         log.accs.push(acc);
         if opts.log_every > 0 && step % opts.log_every == 0 {
-            eprintln!("  step {step:>4}  loss {loss:.4}  acc {acc:.3}");
+            crate::obs::log!(
+                crate::obs::Level::Info,
+                "  step {step:>4}  loss {loss:.4}  acc {acc:.3}"
+            );
         }
         ensure!(loss.is_finite(), "training diverged at step {step} (loss={loss})");
     }
@@ -322,7 +326,10 @@ pub fn train_marshalled(
         log.losses.push(loss);
         log.accs.push(acc);
         if opts.log_every > 0 && step % opts.log_every == 0 {
-            eprintln!("  step {step:>4}  loss {loss:.4}  acc {acc:.3}");
+            crate::obs::log!(
+                crate::obs::Level::Info,
+                "  step {step:>4}  loss {loss:.4}  acc {acc:.3}"
+            );
         }
         ensure!(loss.is_finite(), "training diverged at step {step} (loss={loss})");
     }
@@ -354,6 +361,7 @@ pub fn eval_logits(
     state: &ModelState,
     ds: &Dataset,
 ) -> Result<(Tensor, Tensor, Tensor)> {
+    let _span = crate::obs::trace::span("train.eval");
     match eval_logits_resident(engine, state, ds) {
         Ok(r) => Ok(r),
         Err(e) if e.downcast_ref::<ResidencyUnsupported>().is_some() => {

@@ -44,67 +44,209 @@ pub fn median(xs: &[f64]) -> f64 {
 }
 
 /// Running summary for streaming latency measurements.
-#[derive(Debug, Default, Clone)]
+///
+/// Two representations behind one API:
+///
+/// * **Exact** (the default): every sample is retained and percentiles
+///   are computed by sort + interpolation — bit-for-bit the historical
+///   behavior, still right for bounded runs and for tests that assert
+///   exact quantiles.
+/// * **Bounded** ([`Summary::bounded`]): O(1) memory regardless of sample
+///   count — a fixed log2-bucket histogram (`obs::metrics::Histogram`)
+///   plus exact count/sum/min/max.  Percentiles interpolate within the
+///   owning bucket and clamp to the observed [min, max].  This is what
+///   the open-loop load generator records into: an hours-long soak at
+///   thousands of requests/sec previously grew a `Vec<f64>` without
+///   bound.
+///
+/// Merging promotes: exact+exact stays exact; anything involving a
+/// bounded side becomes bounded (bucket-wise adds — associative and
+/// deterministic).
+#[derive(Debug, Clone)]
 pub struct Summary {
-    samples: Vec<f64>,
+    repr: Repr,
+}
+
+#[derive(Debug, Clone)]
+enum Repr {
+    Exact(Vec<f64>),
+    Bounded { hist: crate::obs::metrics::Histogram, count: u64, sum: f64, min: f64, max: f64 },
+}
+
+impl Default for Summary {
+    fn default() -> Self {
+        Summary { repr: Repr::Exact(Vec::new()) }
+    }
 }
 
 impl Summary {
+    /// Fixed-memory summary backed by the log2-bucket histogram.
+    pub fn bounded() -> Summary {
+        Summary {
+            repr: Repr::Bounded {
+                hist: crate::obs::metrics::Histogram::default(),
+                count: 0,
+                sum: 0.0,
+                min: f64::INFINITY,
+                max: f64::NEG_INFINITY,
+            },
+        }
+    }
+
+    pub fn is_bounded(&self) -> bool {
+        matches!(self.repr, Repr::Bounded { .. })
+    }
+
     pub fn push(&mut self, x: f64) {
-        self.samples.push(x);
+        match &mut self.repr {
+            Repr::Exact(v) => v.push(x),
+            Repr::Bounded { hist, count, sum, min, max } => {
+                hist.record(x);
+                *count += 1;
+                *sum += x;
+                *min = min.min(x);
+                *max = max.max(x);
+            }
+        }
     }
 
-    /// Fold another summary's samples into this one.
+    /// Fold another summary into this one.  Exact+exact concatenates;
+    /// any bounded operand promotes the result to bounded.
     pub fn merge(&mut self, other: &Summary) {
-        self.samples.extend_from_slice(&other.samples);
+        match &other.repr {
+            Repr::Exact(b) => match &mut self.repr {
+                Repr::Exact(a) => a.extend_from_slice(b),
+                Repr::Bounded { .. } => {
+                    for &x in b {
+                        self.push(x);
+                    }
+                }
+            },
+            Repr::Bounded { hist, count, sum, min, max } => {
+                if *count == 0 {
+                    return;
+                }
+                self.promote_to_bounded();
+                if let Repr::Bounded { hist: h, count: c, sum: s, min: mn, max: mx } =
+                    &mut self.repr
+                {
+                    h.merge(hist);
+                    *c += *count;
+                    *s += *sum;
+                    *mn = mn.min(*min);
+                    *mx = mx.max(*max);
+                }
+            }
+        }
     }
 
+    fn promote_to_bounded(&mut self) {
+        if let Repr::Exact(v) = &self.repr {
+            let mut b = Summary::bounded();
+            for &x in v {
+                b.push(x);
+            }
+            *self = b;
+        }
+    }
+
+    /// Retained samples — exact mode only; a bounded summary returns the
+    /// empty slice (it keeps buckets, not samples).  Use [`Summary::count_le`]
+    /// for threshold counts that work in both modes.
     pub fn samples(&self) -> &[f64] {
-        &self.samples
+        match &self.repr {
+            Repr::Exact(v) => v,
+            Repr::Bounded { .. } => &[],
+        }
+    }
+
+    /// How many recorded values are `<= x` — exact in exact mode, bucket
+    /// resolution in bounded mode (exact at and beyond the observed
+    /// extremes).
+    pub fn count_le(&self, x: f64) -> usize {
+        match &self.repr {
+            Repr::Exact(v) => v.iter().filter(|&&l| l <= x).count(),
+            Repr::Bounded { hist, count, min, max, .. } => {
+                if *count == 0 || x < *min {
+                    0
+                } else if x >= *max {
+                    *count as usize
+                } else {
+                    (hist.count_le(x) as usize).min(*count as usize)
+                }
+            }
+        }
     }
 
     pub fn len(&self) -> usize {
-        self.samples.len()
+        match &self.repr {
+            Repr::Exact(v) => v.len(),
+            Repr::Bounded { count, .. } => *count as usize,
+        }
     }
 
     pub fn is_empty(&self) -> bool {
-        self.samples.is_empty()
+        self.len() == 0
     }
 
     pub fn mean(&self) -> f64 {
-        mean(&self.samples)
+        match &self.repr {
+            Repr::Exact(v) => mean(v),
+            Repr::Bounded { count, sum, .. } => {
+                if *count == 0 {
+                    0.0
+                } else {
+                    sum / *count as f64
+                }
+            }
+        }
     }
 
     pub fn percentile(&self, q: f64) -> f64 {
-        percentile(&self.samples, q)
+        match &self.repr {
+            Repr::Exact(v) => percentile(v, q),
+            Repr::Bounded { hist, count, min, max, .. } => {
+                if *count == 0 {
+                    0.0
+                } else {
+                    hist.quantile(q).clamp(*min, *max)
+                }
+            }
+        }
     }
 
     pub fn p50(&self) -> f64 {
-        percentile(&self.samples, 50.0)
+        self.percentile(50.0)
     }
 
     pub fn p95(&self) -> f64 {
-        percentile(&self.samples, 95.0)
+        self.percentile(95.0)
     }
 
     pub fn p99(&self) -> f64 {
-        percentile(&self.samples, 99.0)
+        self.percentile(99.0)
     }
 
     /// 0.0 for an empty summary (not +inf — callers print these raw).
     pub fn min(&self) -> f64 {
-        if self.samples.is_empty() {
+        if self.is_empty() {
             return 0.0;
         }
-        self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
+        match &self.repr {
+            Repr::Exact(v) => v.iter().cloned().fold(f64::INFINITY, f64::min),
+            Repr::Bounded { min, .. } => *min,
+        }
     }
 
     /// 0.0 for an empty summary (not -inf — callers print these raw).
     pub fn max(&self) -> f64 {
-        if self.samples.is_empty() {
+        if self.is_empty() {
             return 0.0;
         }
-        self.samples.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+        match &self.repr {
+            Repr::Exact(v) => v.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+            Repr::Bounded { max, .. } => *max,
+        }
     }
 }
 
@@ -245,5 +387,92 @@ mod tests {
         assert!(s.p99() > 98.0);
         assert_eq!(s.min(), 1.0);
         assert_eq!(s.max(), 100.0);
+    }
+
+    #[test]
+    fn bounded_summary_tracks_exact_within_bucket_resolution() {
+        let mut exact = Summary::default();
+        let mut bounded = Summary::bounded();
+        assert!(bounded.is_bounded());
+        assert!(!exact.is_bounded());
+        for i in 1..=1000 {
+            let v = (i as f64) * 17.0; // latencies 17..17000 "µs"
+            exact.push(v);
+            bounded.push(v);
+        }
+        assert_eq!(bounded.len(), exact.len());
+        assert_eq!(bounded.min(), exact.min());
+        assert_eq!(bounded.max(), exact.max());
+        assert!((bounded.mean() - exact.mean()).abs() < 1e-9);
+        // Log2 buckets: estimates within 2x of the exact quantile.
+        for q in [10.0, 50.0, 95.0, 99.0] {
+            let (e, b) = (exact.percentile(q), bounded.percentile(q));
+            assert!(b >= e / 2.0 && b <= e * 2.0, "q={q}: exact {e} bounded {b}");
+        }
+        // Quantiles stay monotone in q (serve tests assert p50<=p95<=p99).
+        assert!(bounded.p50() <= bounded.p95());
+        assert!(bounded.p95() <= bounded.p99());
+        // count_le is exact at and beyond the extremes.
+        assert_eq!(bounded.count_le(16.9), 0);
+        assert_eq!(bounded.count_le(17_000.0), 1000);
+        // ...and within 2x bucket slack in the interior.
+        let exact_mid = exact.count_le(8500.0) as f64;
+        let bounded_mid = bounded.count_le(8500.0) as f64;
+        assert!(bounded_mid >= exact_mid / 2.0 && bounded_mid <= exact_mid * 2.0);
+    }
+
+    #[test]
+    fn bounded_singleton_is_exact() {
+        let mut s = Summary::bounded();
+        s.push(7.5);
+        // One sample: quantiles clamp into [min, max] = [7.5, 7.5].
+        for q in [0.0, 50.0, 99.0, 100.0] {
+            assert_eq!(s.percentile(q), 7.5, "q={q}");
+        }
+        assert_eq!(s.count_le(7.5), 1);
+        assert_eq!(s.count_le(7.4), 0);
+    }
+
+    #[test]
+    fn merge_promotes_exact_into_bounded() {
+        let mut exact = Summary::default();
+        for i in 0..50 {
+            exact.push(i as f64 + 1.0);
+        }
+        let mut bounded = Summary::bounded();
+        for i in 50..100 {
+            bounded.push(i as f64 + 1.0);
+        }
+        // exact += bounded -> result is bounded and covers the union.
+        let mut merged = exact.clone();
+        merged.merge(&bounded);
+        assert!(merged.is_bounded());
+        assert_eq!(merged.len(), 100);
+        assert_eq!(merged.min(), 1.0);
+        assert_eq!(merged.max(), 100.0);
+        // bounded += exact also works, and agrees with the other order.
+        let mut merged2 = bounded.clone();
+        merged2.merge(&exact);
+        assert_eq!(merged2.len(), 100);
+        assert_eq!(merged2.p95(), merged.p95());
+        // Merging an empty bounded summary does not promote an exact one.
+        let mut still_exact = Summary::default();
+        still_exact.push(3.0);
+        still_exact.merge(&Summary::bounded());
+        assert!(!still_exact.is_bounded());
+        assert_eq!(still_exact.samples(), &[3.0]);
+    }
+
+    #[test]
+    fn bounded_summary_has_fixed_footprint() {
+        // The whole point: no per-sample allocation.  We can't measure RSS
+        // in a unit test, but we can pin the API contract that no samples
+        // are retained.
+        let mut s = Summary::bounded();
+        for i in 0..100_000 {
+            s.push((i % 997) as f64 + 1.0);
+        }
+        assert_eq!(s.len(), 100_000);
+        assert!(s.samples().is_empty());
     }
 }

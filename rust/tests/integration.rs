@@ -530,6 +530,22 @@ fn ref_golden_digest_is_thread_count_invariant() {
     }
     let denv = digest_of(None);
     assert_eq!(d1, denv, "default thread count changed the golden digest");
+
+    // The observability overhead contract: tracing records timings, never
+    // numerics.  The same flow run with tracing enabled (spans recording
+    // and exporting a real Chrome trace) must produce bit-identical
+    // results.
+    coc::obs::trace::enable();
+    let dtraced = digest_of(Some(2));
+    coc::obs::trace::disable();
+    let trace_path =
+        std::env::temp_dir().join(format!("coc_golden_trace_{}.json", std::process::id()));
+    coc::obs::trace::export(&trace_path).unwrap();
+    assert_eq!(d1, dtraced, "tracing changed the golden digest");
+    let text = std::fs::read_to_string(&trace_path).unwrap();
+    assert!(text.contains("refback.conv2d"), "trace should contain kernel spans");
+    std::fs::remove_file(&trace_path).ok();
+
     if let Ok(path) = std::env::var("COC_REF_DIGEST_OUT") {
         std::fs::write(&path, format!("{denv:016x}\n")).unwrap();
         eprintln!("golden digest {denv:016x} -> {path}");
