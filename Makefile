@@ -6,10 +6,11 @@
 #   make verify      tier-1 (release build + cargo test) + pytest python/tests
 #   make bench       rust micro/e2e benches (needs artifacts)
 #   make bench-diff  gate results/ against the committed BENCH_*.json ledgers
+#   make serve-bench-compressed  hermetic dense-vs-compressed serving comparison
 
 ARTIFACTS := artifacts
 
-.PHONY: artifacts build test verify bench bench-diff
+.PHONY: artifacts build test verify bench bench-diff serve-bench-compressed
 
 artifacts:
 	cd python && python -m compile.aot --out ../$(ARTIFACTS)
@@ -39,3 +40,10 @@ bench: build
 # ledgers; exits nonzero on a regression past per-metric tolerance.
 bench-diff: build
 	cd rust && cargo run --release -q -- bench-diff --root .. --results ../results
+
+# Dense vs packed (sparse/int8) serving on the hermetic ref backend: the
+# same pool and load twice over a P->Q->E mini_vgg leaf.  Writes
+# results/serve_bench_compressed.json (the serve_compressed ledger area).
+serve-bench-compressed: build
+	cd rust && cargo run --release -q -- serve-bench --backend ref --arch mini_vgg \
+		--scale smoke --requests 400 --workers 2 --out ../results --compressed

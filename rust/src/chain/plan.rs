@@ -366,11 +366,15 @@ pub struct ExecOpts {
     /// per-leaf eval entirely.
     pub extras: bool,
     pub verbose: bool,
+    /// Lower every distinct leaf state to its packed `CompressedModel`
+    /// after the run (`--lower`): logs packed-vs-dense bytes and, with a
+    /// cache dir, publishes the artifact as `<node_id>.cmp`.
+    pub lower: bool,
 }
 
 impl Default for ExecOpts {
     fn default() -> Self {
-        ExecOpts { jobs: 1, cache_dir: None, extras: true, verbose: false }
+        ExecOpts { jobs: 1, cache_dir: None, extras: true, verbose: false, lower: false }
     }
 }
 
@@ -598,6 +602,38 @@ impl Planner {
                 reports,
                 final_state,
             });
+        }
+        if opts.lower {
+            // Lower-at-leaf hook (`--lower`): pack every distinct leaf
+            // state into its `CompressedModel` — what compressed serving
+            // would actually ship — log packed-vs-dense bytes, and with a
+            // cache dir publish the packed artifact as `<node_id>.cmp`.
+            // A leaf the packed kernels cannot represent is a real error.
+            let mut lowered: std::collections::BTreeSet<NodeId> = std::collections::BTreeSet::new();
+            for (ch, out) in self.chains.iter().zip(&outcomes) {
+                let Some(&i) = ch.path.last() else { continue };
+                let id = self.nodes[i].id;
+                if !lowered.insert(id) {
+                    continue;
+                }
+                let cm = crate::models::compressed::CompressedModel::lower(&out.final_state)
+                    .with_context(|| format!("lowering leaf {id} ({})", ch.label))?;
+                let packed = cm.packed_bytes();
+                let dense =
+                    crate::models::compressed::CompressedModel::dense_bytes(&out.final_state.arch);
+                crate::obs::log!(
+                    crate::obs::Level::Info,
+                    "[plan] leaf {id} ({}) lowered: {dense} -> {packed} bytes ({:.2}x)",
+                    ch.label,
+                    dense as f64 / packed.max(1) as f64
+                );
+                if let Some(dir) = cache_dir {
+                    let path = dir.join(format!("{id}.cmp"));
+                    cm.save(&path).with_context(|| {
+                        format!("saving lowered leaf {}", path.display())
+                    })?;
+                }
+            }
         }
         if let (Some(b), Some(a)) = (transfer_before, main.runtime_stats()) {
             stats.bytes_uploaded += a.bytes_uploaded.saturating_sub(b.bytes_uploaded);

@@ -45,6 +45,10 @@ pub struct ExpCtx {
     /// threads compose without oversubscription.  Never changes results:
     /// the ref backend is thread-count invariant by contract.
     pub ref_threads: usize,
+    /// Lower every distinct plan leaf to its packed `CompressedModel`
+    /// after execution (`--lower`): logs packed-vs-dense bytes and, when
+    /// caching, publishes `<node_id>.cmp` next to the state snapshots.
+    pub lower: bool,
 }
 
 impl ExpCtx {
@@ -112,6 +116,7 @@ impl ExpCtx {
             jobs: 1,
             cache: true,
             backend,
+            lower: false,
             ref_threads,
         })
     }
@@ -230,6 +235,7 @@ impl ExpCtx {
             cache_dir: self.cache.then(|| self.reporter.path("cache")),
             extras,
             verbose: self.verbose,
+            lower: self.lower,
         };
         let artifacts = self.engine.artifacts_dir().to_path_buf();
         let backend = self.backend;

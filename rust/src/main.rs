@@ -18,7 +18,9 @@
 //! parallelism, bit-identical results at every N).
 //! Plan-executor flags (chain/exp/toposort): --jobs N runs independent
 //! chain branches on N worker engines; --no-cache disables the
-//! content-addressed stage cache under results/cache/.
+//! content-addressed stage cache under results/cache/; --lower packs
+//! every plan leaf into its serve-ready CompressedModel (published as
+//! `<node_id>.cmp` when caching).
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -29,6 +31,7 @@ use coc::chain::{stages, Chain};
 use coc::data::DatasetKind;
 use coc::exp::{self, ExpCtx};
 use coc::metrics::Measurement;
+use coc::models::compressed::CompressedModel;
 use coc::order;
 use coc::runtime::BackendChoice;
 use coc::serve::batcher::BatchPolicy;
@@ -70,6 +73,10 @@ fn ctx_from(args: &Args) -> Result<ExpCtx> {
     )?;
     ctx.jobs = args.get_usize_min("jobs", 1, 1)?;
     ctx.cache = !args.flag("no-cache");
+    // --lower: after a plan run, pack every leaf into its CompressedModel
+    // (serve-ready sparse/int8 form) and publish `<node_id>.cmp` when
+    // caching; also reports packed-vs-dense bytes per leaf.
+    ctx.lower = args.flag("lower");
     Ok(ctx)
 }
 
@@ -226,6 +233,11 @@ fn print_usage() {
     println!("  coc serve --arch mini_resnet --requests 200 --threshold 0.8");
     println!("  coc serve-bench --workers 4 --mode closed --concurrency 16 --requests 2000");
     println!("  coc serve-bench --workers 4 --mode open --rate 500 --slo-ms 50 --baseline");
+    println!("  coc serve-bench --backend ref --compressed   # dense vs packed sparse/int8 serve");
+    println!("    (--compressed runs a P->Q->E leaf twice — dense kernels, then the lowered");
+    println!("     CompressedModel — and reports the speedup + model-bytes ratio;");
+    println!("     --prune-ratio/--bits-w/--bits-a tune the leaf, ref backend only)");
+    println!("  coc chain --seq PQE --arch mini_vgg --backend ref --lower   # pack leaves");
     println!("  coc chain --seq PQE --arch mini_vgg --backend ref   # hermetic, no artifacts");
     println!("    (--backend ref interprets feed-forward manifests; builtin arch: mini_vgg.");
     println!("     mini_resnet/mini_mobilenet drivers need the pjrt backend + artifacts.");
@@ -379,12 +391,31 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         },
         other => return Err(anyhow!("--mode must be open|closed, got `{other}`")),
     };
+    // --compressed: run the same load twice — dense kernels, then the
+    // packed (sparse/int8) kernels over the lowered model — and report
+    // the serve-time speedup and model-bytes ratio.  The leaf is a real
+    // P -> Q -> E chain so both pruning and quantization have something
+    // to cash in (ref backend; PJRT artifacts are dense by construction).
+    let compressed_mode = args.flag("compressed");
 
     // Same model preparation as `coc serve`, so the two are comparable.
     let (train_ds, test_ds) = ctx.datasets(kind);
     let mut state = ctx.base_model(arch, kind, &train_ds)?;
     let sctx = ctx.stage_ctx(&train_ds, &test_ds);
-    Chain::new()
+    let mut chain = Chain::new();
+    if compressed_mode {
+        chain = chain
+            .push(Box::new(stages::Prune {
+                ratio: args.get_f32("prune-ratio", 0.5)?,
+                ..Default::default()
+            }))
+            .push(Box::new(stages::Quantize {
+                bits_w: args.get_f32("bits-w", 2.0)?,
+                bits_a: args.get_f32("bits-a", 8.0)?,
+                ..Default::default()
+            }));
+    }
+    chain
         .push(Box::new(stages::EarlyExit { threshold, ..Default::default() }))
         .run(&mut state, &sctx)?;
 
@@ -413,11 +444,6 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     pool_opts.queue_capacity = queue_capacity;
     pool_opts.batch =
         BatchPolicy { max_batch, max_wait: Duration::from_micros(batch_wait_us) };
-    let pool = WorkerPool::start(Arc::new(state), pool_opts);
-    let up = pool.wait_ready(Duration::from_secs(600))?;
-    if up < workers {
-        coc::obs::log!(coc::obs::Level::Warn, "warning: only {up}/{workers} workers came up");
-    }
     let load_opts = LoadOpts {
         mode,
         requests,
@@ -425,11 +451,8 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         slo: Slo { latency_ms: slo_ms },
         ..Default::default()
     };
-    let report = loadgen::run(&pool, &test_ds, &load_opts)?;
-    let outcome = pool.shutdown();
-    for e in &outcome.errors {
-        coc::obs::log!(coc::obs::Level::Error, "worker error: {e}");
-    }
+    let state = Arc::new(state);
+    let (report, outcome) = run_pool_bench(&state, &test_ds, &pool_opts, &load_opts, workers)?;
 
     println!("{}", report.summary_line());
     if let Some(base) = &baseline {
@@ -496,6 +519,70 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
             num(report.throughput_rps / base.throughput_rps.max(1e-9)),
         ));
     }
+
+    if compressed_mode {
+        // Second pass: identical pool and load, compressed kernels.  The
+        // lowering below is the same one every worker performs; done here
+        // once more for the bytes accounting.
+        let cm = CompressedModel::lower(&state)?;
+        let bytes_dense = CompressedModel::dense_bytes(&state.arch) as f64;
+        let bytes_packed = cm.packed_bytes() as f64;
+        let mut cmp_opts = pool_opts.clone();
+        cmp_opts.compressed = true;
+        let (creport, _coutcome) =
+            run_pool_bench(&state, &test_ds, &cmp_opts, &load_opts, workers)?;
+        let speedup = creport.throughput_rps / report.throughput_rps.max(1e-9);
+        println!("compressed: {}", creport.summary_line());
+        println!(
+            "compressed vs dense: {speedup:.2}x rps, {:.0} -> {:.0} model bytes ({:.2}x smaller)",
+            bytes_dense,
+            bytes_packed,
+            bytes_dense / bytes_packed.max(1.0)
+        );
+        fields.push(("compressed_bench", creport.to_json()));
+        fields.push(("compressed_speedup", num(speedup)));
+        fields.push(("bytes_model_dense", num(bytes_dense)));
+        fields.push(("bytes_model_compressed", num(bytes_packed)));
+        // The focused dense-vs-compressed comparison, fed to the
+        // `serve_compressed` BENCH ledger area.
+        let cmp_fields = vec![
+            ("model", s(arch)),
+            ("backend", s(ctx.backend.name())),
+            ("dataset", s(kind.name())),
+            ("dense", report.to_json()),
+            ("compressed", creport.to_json()),
+            ("speedup", num(speedup)),
+            ("bytes_model_dense", num(bytes_dense)),
+            ("bytes_model_compressed", num(bytes_packed)),
+            ("bytes_ratio", num(bytes_packed / bytes_dense.max(1.0))),
+        ];
+        ctx.reporter
+            .write("serve_bench_compressed.json", &obj(cmp_fields).to_string())?;
+    }
     ctx.reporter.write("serve_bench.json", &obj(fields).to_string())?;
     Ok(())
+}
+
+/// Start one worker pool over `state`, drive `load_opts` through it, and
+/// return the bench report plus per-worker stats.  Shared by the dense
+/// and compressed passes of `coc serve-bench` so the two measurements
+/// differ only in kernels.
+fn run_pool_bench(
+    state: &Arc<coc::models::ModelState>,
+    test_ds: &coc::data::Dataset,
+    pool_opts: &PoolOpts,
+    load_opts: &LoadOpts,
+    workers: usize,
+) -> Result<(loadgen::BenchReport, coc::serve::worker::PoolOutcome)> {
+    let pool = WorkerPool::start(state.clone(), pool_opts.clone());
+    let up = pool.wait_ready(Duration::from_secs(600))?;
+    if up < workers {
+        coc::obs::log!(coc::obs::Level::Warn, "warning: only {up}/{workers} workers came up");
+    }
+    let report = loadgen::run(&pool, test_ds, load_opts)?;
+    let outcome = pool.shutdown();
+    for e in &outcome.errors {
+        coc::obs::log!(coc::obs::Level::Error, "worker error: {e}");
+    }
+    Ok((report, outcome))
 }

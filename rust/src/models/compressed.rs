@@ -1,0 +1,891 @@
+//! Post-chain lowering: pack a trained `ModelState` into the form the
+//! serve-time kernels actually execute, so pruning and quantization pay
+//! at inference instead of only in the analytic accounting.
+//!
+//! Three mechanisms, chosen per layer (see `PackedForm`):
+//!
+//! * **Channel compaction** — binary channel masks are removed
+//!   structurally: dead input/output channels are dropped from the weight
+//!   matrix and the feature maps shrink network-wide (the consumer's
+//!   `in_mask` slot is validated to equal the producer's `out_mask`, so
+//!   the live sets agree along the chain).
+//! * **Blocked-CSR** — the compacted `cout_live x K_live` matrix is tiled
+//!   into `BLOCK_R x BLOCK_C` dense blocks (the kernel register-tile
+//!   geometry); incidentally all-zero tiles are dropped.  Stored entries
+//!   keep the exact fake-quant f32 values the dense path computes, and
+//!   the kernels walk them in the dense path's canonical reduction order,
+//!   so the pruned-fp32 pipeline stays bit-identical.
+//! * **int8** — layers whose DoReFa grid fits i8 (integer `bits_w` in
+//!   1..=7, integer `bits_a` in 1..=8, quantized input available, i32
+//!   accumulator can't overflow) store integer weight codes plus one
+//!   per-layer f32 scale; the kernels accumulate in i32 and rescale once
+//!   per output element.  This path is tolerance-level (not bitwise)
+//!   equal to dense fake-quant, but exactly deterministic.
+//!
+//! Zero-skip safety: an f32 accumulator chain that starts at +0.0 never
+//! produces -0.0 (`+0 + ±0 = +0`, `x + (-x) = +0`), so omitting `±0.0`
+//! product terms from a single-accumulator ascending-order chain never
+//! changes the accumulator's bits.  Dead-channel folding always writes
+//! literal `+0.0` (branch, never multiply: `w * 0.0` preserves sign).
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{anyhow, ensure, Context, Result};
+
+use super::{
+    host_weight_quant, weight_quant_scales, ArchManifest, ExitState, LayerDesc, LayerKind,
+    ModelState, QBits,
+};
+use crate::tensor::Tensor;
+use crate::util::json::{num, obj, s, Json};
+
+/// On-disk format version for `.cmp` files; newer files are rejected.
+pub const COMPRESSED_FORMAT_VERSION: u32 = 1;
+
+/// Block geometry = the refback kernel register tile (MR x NR).  Equality
+/// with `runtime::refback::kernels::{MR, NR}` is pinned by a test there so
+/// packed blocks always feed the kernel tiles directly.
+pub const BLOCK_R: usize = 4;
+pub const BLOCK_C: usize = 8;
+pub const BLOCK_LEN: usize = BLOCK_R * BLOCK_C;
+
+/// Block-level CSR over a `rows x cols` weight matrix with rows = live
+/// output channels and cols = live reduction indices (`(ky, kx, ic)` for
+/// conv, `ic` for dense), tiled into `BLOCK_R x BLOCK_C` dense blocks.
+///
+/// `row_ptr[br]..row_ptr[br+1]` indexes the stored blocks of block-row
+/// `br`; `col_idx[bi]` is the block-column of stored block `bi`.  Block
+/// payloads (f32 values or i8 codes) live beside the structure in
+/// `PackedForm`, `BLOCK_LEN` entries per stored block in row-major tile
+/// order, zero-padded outside the matrix bounds.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Bcsr {
+    pub rows: usize,
+    pub cols: usize,
+    pub row_ptr: Vec<u32>,
+    pub col_idx: Vec<u32>,
+}
+
+impl Bcsr {
+    pub fn block_rows(&self) -> usize {
+        self.rows.div_ceil(BLOCK_R)
+    }
+
+    pub fn nblocks(&self) -> usize {
+        self.col_idx.len()
+    }
+
+    /// Stored-block index range of block-row `br` (ascending block-column).
+    #[inline]
+    pub fn row_blocks(&self, br: usize) -> std::ops::Range<usize> {
+        self.row_ptr[br] as usize..self.row_ptr[br + 1] as usize
+    }
+
+    /// Build from per-entry values: every tile containing at least one
+    /// in-bounds entry for which `keep` is true is stored (its `BLOCK_LEN`
+    /// payload appended to `out`); all-skippable tiles are dropped.
+    pub fn build<T: Copy + Default>(
+        rows: usize,
+        cols: usize,
+        mut value: impl FnMut(usize, usize) -> T,
+        keep: impl Fn(T) -> bool,
+        out: &mut Vec<T>,
+    ) -> Bcsr {
+        let (nbr, nbc) = (rows.div_ceil(BLOCK_R), cols.div_ceil(BLOCK_C));
+        let mut row_ptr = Vec::with_capacity(nbr + 1);
+        row_ptr.push(0u32);
+        let mut col_idx = Vec::new();
+        for br in 0..nbr {
+            for bc in 0..nbc {
+                let mut buf = [T::default(); BLOCK_LEN];
+                let mut any = false;
+                for rr in 0..BLOCK_R {
+                    let r = br * BLOCK_R + rr;
+                    if r >= rows {
+                        break;
+                    }
+                    for cc in 0..BLOCK_C {
+                        let c = bc * BLOCK_C + cc;
+                        if c >= cols {
+                            break;
+                        }
+                        let v = value(r, c);
+                        if keep(v) {
+                            any = true;
+                        }
+                        buf[rr * BLOCK_C + cc] = v;
+                    }
+                }
+                if any {
+                    col_idx.push(bc as u32);
+                    out.extend_from_slice(&buf);
+                }
+            }
+            row_ptr.push(col_idx.len() as u32);
+        }
+        Bcsr { rows, cols, row_ptr, col_idx }
+    }
+}
+
+/// Per-layer packed representation.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PackedForm {
+    /// Uncompacted fallback: the quant-baked full-geometry weight tensor,
+    /// executed by the existing dense kernels (still saves the per-forward
+    /// `host_weight_quant` tanh pass over the raw weights).
+    Dense { w: Tensor },
+    /// Depthwise conv: weights compacted to live output channels plus a
+    /// per-output map into the live input channels (-1 = dead input, the
+    /// output is bias-only).
+    DwMapped { w: Tensor, in_pos: Vec<i32> },
+    /// Blocked-CSR over the compacted matrix, fake-quant f32 values.
+    SparseF32 { csr: Bcsr, values: Vec<f32> },
+    /// Blocked-CSR of DoReFa integer codes (`2q - n`, odd, never 0 for a
+    /// live entry) with one per-layer scale; value = code * scale_w.
+    Int8 { csr: Bcsr, codes: Vec<i8>, scale_w: f32 },
+}
+
+impl PackedForm {
+    pub fn tag(&self) -> &'static str {
+        match self {
+            PackedForm::Dense { .. } => "dense",
+            PackedForm::DwMapped { .. } => "dw",
+            PackedForm::SparseF32 { .. } => "sparse",
+            PackedForm::Int8 { .. } => "int8",
+        }
+    }
+
+    fn payload_bytes(&self) -> usize {
+        match self {
+            PackedForm::Dense { w } => 4 * w.len(),
+            PackedForm::DwMapped { w, in_pos } => 4 * w.len() + 4 * in_pos.len(),
+            PackedForm::SparseF32 { csr, values } => {
+                4 * (csr.row_ptr.len() + csr.col_idx.len() + values.len())
+            }
+            PackedForm::Int8 { csr, codes, .. } => {
+                4 * (csr.row_ptr.len() + csr.col_idx.len()) + codes.len() + 4
+            }
+        }
+    }
+}
+
+/// One lowered layer, index-aligned with `arch.layers` (kind / geometry
+/// are read from the manifest, not duplicated here).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PackedLayer {
+    /// Original channel index of each live input channel, ascending.
+    pub in_live: Vec<u32>,
+    /// Original channel index of each live output channel, ascending.
+    pub out_live: Vec<u32>,
+    /// rmsnorm divisor the dense path uses: mask-sum clamped to >= 1, or
+    /// full `cout` when the layer is unmasked.
+    pub live_divisor: f32,
+    /// Bias over live output channels (dead fallback channels fold to +0).
+    pub bias: Vec<f32>,
+    pub form: PackedForm,
+}
+
+impl PackedLayer {
+    pub fn packed_bytes(&self) -> usize {
+        4 * (self.in_live.len() + self.out_live.len() + self.bias.len() + 1)
+            + self.form.payload_bytes()
+    }
+}
+
+/// A `ModelState` lowered for compressed execution.
+#[derive(Debug, Clone)]
+pub struct CompressedModel {
+    pub arch: Arc<ArchManifest>,
+    pub qbits: QBits,
+    pub exits: ExitState,
+    /// Index-aligned with `arch.layers`.
+    pub layers: Vec<PackedLayer>,
+    pub history: Vec<String>,
+}
+
+fn live_set(st: &ModelState, slot: i64, full: usize) -> Vec<u32> {
+    if slot < 0 {
+        return (0..full as u32).collect();
+    }
+    let m = &st.masks[slot as usize];
+    let mut v: Vec<u32> = m
+        .data
+        .iter()
+        .enumerate()
+        .filter_map(|(i, &x)| (x != 0.0).then_some(i as u32))
+        .collect();
+    if v.is_empty() {
+        // Fully-dead slot: keep channel 0 with weights and bias folded to
+        // +0 so downstream shapes stay non-empty (mirrors the dense
+        // path's `live >= 1` rmsnorm divisor clamp).
+        v.push(0);
+    }
+    v
+}
+
+/// Flat index into the original `[k,k,cin,cout]` / `[cin,cout]` weight for
+/// matrix entry (live output row `ocl`, live reduction column `r`).
+fn orig_index(l: &LayerDesc, in_live: &[u32], out_live: &[u32], ocl: usize, r: usize) -> usize {
+    let oc = out_live[ocl] as usize;
+    match l.kind {
+        LayerKind::Dense => in_live[r] as usize * l.cout + oc,
+        _ => {
+            let (tap, icl) = (r / in_live.len(), r % in_live.len());
+            (tap * l.cin + in_live[icl] as usize) * l.cout + oc
+        }
+    }
+}
+
+fn int8_ok(l: &LayerDesc, qb: &QBits, first_body: bool, kdim: usize) -> bool {
+    let int_bits = |b: f32, lo: f32, hi: f32| b >= lo && b <= hi && b.fract() == 0.0;
+    // n = 2^bits_w - 1 must fit i8 (codes span [-n, n]), so bits_w <= 7;
+    // activation codes span [0, 2^bits_a - 1], recovered into u32.
+    if !int_bits(qb.weight, 1.0, 7.0) || !int_bits(qb.act, 1.0, 8.0) {
+        return false;
+    }
+    // Depthwise stays f32 (cheap, mapped kernel); a conv stem's input is
+    // the raw image, never an act_quant grid, so codes can't be recovered.
+    // Dense heads quantize their own gap input, so they always qualify.
+    if l.kind == LayerKind::DwConv || (l.kind != LayerKind::Dense && first_body) {
+        return false;
+    }
+    let nw = 2f64.powf(qb.weight as f64) - 1.0;
+    let na = 2f64.powf(qb.act as f64) - 1.0;
+    kdim as f64 * nw * na < i32::MAX as f64
+}
+
+impl CompressedModel {
+    /// Lower a trained state.  Fails (caller falls back to dense
+    /// execution) when a structural invariant doesn't hold: non-binary
+    /// masks, a masked stem input, or producer/consumer mask-slot
+    /// disagreement along the body chain or at an exit cut.
+    pub fn lower(st: &ModelState) -> Result<CompressedModel> {
+        let arch = st.arch.clone();
+        // Masks must be exactly binary: `mul_channel_mask` scales by the
+        // mask value, and only *1.0 (bitwise identity) / *0.0 (dead
+        // channel) can be replaced by structural channel selection.
+        for (si, m) in st.masks.iter().enumerate() {
+            for &v in &m.data {
+                ensure!(
+                    v == 0.0 || v == 1.0,
+                    "mask slot {si} is not binary (found {v}); cannot lower"
+                );
+            }
+        }
+        let body: Vec<usize> = arch
+            .layers
+            .iter()
+            .enumerate()
+            .filter_map(|(i, l)| (!l.segment.starts_with("exit")).then_some(i))
+            .collect();
+        ensure!(!body.is_empty(), "arch `{}` has no body layers", arch.name);
+        ensure!(
+            arch.layers[body[0]].in_mask < 0,
+            "stem layer `{}` has a masked input; cannot lower",
+            arch.layers[body[0]].name
+        );
+        // Compaction drops dead channels from the feature map, so every
+        // consumer must agree with its producer on the mask slot.
+        for w in body.windows(2) {
+            let (p, l) = (&arch.layers[w[0]], &arch.layers[w[1]]);
+            ensure!(
+                l.in_mask == p.out_mask,
+                "layer `{}` in_mask {} != producer `{}` out_mask {}; cannot lower",
+                l.name,
+                l.in_mask,
+                p.name,
+                p.out_mask
+            );
+        }
+        for l in &arch.layers {
+            if let Some(seg) = l.segment.strip_prefix("exit") {
+                ensure!(l.kind == LayerKind::Dense, "exit head `{}` is not dense", l.name);
+                let cut = body
+                    .iter()
+                    .rev()
+                    .find(|&&i| arch.layers[i].segment == format!("seg{seg}"))
+                    .copied()
+                    .ok_or_else(|| anyhow!("exit head `{}` cuts a missing segment", l.name))?;
+                ensure!(
+                    l.in_mask == arch.layers[cut].out_mask,
+                    "exit head `{}` in_mask {} != cut layer `{}` out_mask {}; cannot lower",
+                    l.name,
+                    l.in_mask,
+                    arch.layers[cut].name,
+                    arch.layers[cut].out_mask
+                );
+            }
+        }
+
+        let qb = st.qbits;
+        let mut layers = Vec::with_capacity(arch.layers.len());
+        for (li, l) in arch.layers.iter().enumerate() {
+            let in_live = live_set(st, l.in_mask, l.cin);
+            let out_live = live_set(st, l.out_mask, l.cout);
+            let live_divisor = if l.out_mask >= 0 {
+                st.masks[l.out_mask as usize].data.iter().sum::<f32>().max(1.0)
+            } else {
+                l.cout as f32
+            };
+            let out_dead =
+                |oc: usize| l.out_mask >= 0 && st.masks[l.out_mask as usize].data[oc] == 0.0;
+            let in_dead =
+                |ic: usize| l.in_mask >= 0 && st.masks[l.in_mask as usize].data[ic] == 0.0;
+            let raw_w = &st.params[2 * li];
+            let bias_full = &st.params[2 * li + 1];
+            let bias: Vec<f32> = out_live
+                .iter()
+                .map(|&oc| if out_dead(oc as usize) { 0.0 } else { bias_full.data[oc as usize] })
+                .collect();
+            let form = match l.kind {
+                LayerKind::DwConv => {
+                    let wq = host_weight_quant(raw_w, qb.weight);
+                    let mut data = Vec::with_capacity(l.k * l.k * out_live.len());
+                    for tap in 0..l.k * l.k {
+                        for &oc in &out_live {
+                            let v = wq.data[tap * l.cout + oc as usize];
+                            data.push(if out_dead(oc as usize) { 0.0 } else { v });
+                        }
+                    }
+                    let in_pos = out_live
+                        .iter()
+                        .map(|&oc| {
+                            in_live.iter().position(|&ic| ic == oc).map_or(-1, |p| p as i32)
+                        })
+                        .collect();
+                    PackedForm::DwMapped {
+                        w: Tensor::new(vec![l.k, l.k, 1, out_live.len()], data),
+                        in_pos,
+                    }
+                }
+                LayerKind::Conv | LayerKind::Dense => {
+                    let kdim = match l.kind {
+                        LayerKind::Dense => in_live.len(),
+                        _ => l.k * l.k * in_live.len(),
+                    };
+                    if int8_ok(l, &qb, li == body[0], kdim) {
+                        // Integer codes from the *raw* weights with the
+                        // same (tmax, wmax) scan host_weight_quant uses,
+                        // so fake-quant value = code * scale_w up to one
+                        // f32 rounding.
+                        let n = (2f32.powf(qb.weight) - 1.0).max(1.0);
+                        let (tmax, wmax) = weight_quant_scales(&raw_w.data);
+                        let mut codes = Vec::new();
+                        let csr = Bcsr::build(
+                            out_live.len(),
+                            kdim,
+                            |ocl, r| {
+                                let oi = orig_index(l, &in_live, &out_live, ocl, r);
+                                let fold = out_dead(out_live[ocl] as usize)
+                                    || in_dead(in_live[r % in_live.len()] as usize);
+                                if fold {
+                                    0
+                                } else {
+                                    let tn = raw_w.data[oi].tanh() / (2.0 * tmax) + 0.5;
+                                    (2.0 * (tn * n).round() - n) as i8
+                                }
+                            },
+                            |c| c != 0,
+                            &mut codes,
+                        );
+                        PackedForm::Int8 { csr, codes, scale_w: wmax / n }
+                    } else {
+                        let wq = host_weight_quant(raw_w, qb.weight);
+                        if in_live.len() == l.cin && out_live.len() == l.cout {
+                            PackedForm::Dense { w: wq }
+                        } else {
+                            let mut values = Vec::new();
+                            let csr = Bcsr::build(
+                                out_live.len(),
+                                kdim,
+                                |ocl, r| {
+                                    let oi = orig_index(l, &in_live, &out_live, ocl, r);
+                                    let fold = out_dead(out_live[ocl] as usize)
+                                        || in_dead(in_live[r % in_live.len()] as usize);
+                                    if fold {
+                                        0.0
+                                    } else {
+                                        wq.data[oi]
+                                    }
+                                },
+                                |v| v != 0.0,
+                                &mut values,
+                            );
+                            PackedForm::SparseF32 { csr, values }
+                        }
+                    }
+                }
+            };
+            layers.push(PackedLayer { in_live, out_live, live_divisor, bias, form });
+        }
+        Ok(CompressedModel {
+            arch,
+            qbits: qb,
+            exits: st.exits.clone(),
+            layers,
+            history: st.history.clone(),
+        })
+    }
+
+    /// Total packed parameter bytes (structure + payload + bias + maps).
+    pub fn packed_bytes(&self) -> usize {
+        self.layers.iter().map(|pl| pl.packed_bytes()).sum()
+    }
+
+    /// Dense f32 parameter bytes for the same arch (weights + biases) —
+    /// the baseline the serve path ships today.
+    pub fn dense_bytes(arch: &ArchManifest) -> usize {
+        arch.param_shapes.iter().map(|sh| 4 * sh.iter().product::<usize>()).sum()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Persistence: one JSON header line (version + per-layer structure), then
+// raw little-endian payload per layer:
+//   bias f32 ++ in_live u32 ++ out_live u32 ++ form payload
+// where the form payload is w f32 (dense) / w f32 ++ in_pos i32 (dw) /
+// row_ptr u32 ++ col_idx u32 ++ values f32 (sparse) / row_ptr ++ col_idx
+// ++ codes i8 (int8).  Mirrors `ModelState::save_tagged`.
+// ---------------------------------------------------------------------------
+
+fn take<'a>(b: &'a [u8], off: &mut usize, n: usize) -> Result<&'a [u8]> {
+    let end = *off + n;
+    ensure!(end <= b.len(), "corrupt compressed model: truncated payload");
+    let out = &b[*off..end];
+    *off = end;
+    Ok(out)
+}
+
+fn read_f32(b: &[u8], off: &mut usize, n: usize) -> Result<Vec<f32>> {
+    Ok(take(b, off, 4 * n)?
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+fn read_u32(b: &[u8], off: &mut usize, n: usize) -> Result<Vec<u32>> {
+    Ok(take(b, off, 4 * n)?
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+fn read_i32(b: &[u8], off: &mut usize, n: usize) -> Result<Vec<i32>> {
+    Ok(take(b, off, 4 * n)?
+        .chunks_exact(4)
+        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+fn read_i8(b: &[u8], off: &mut usize, n: usize) -> Result<Vec<i8>> {
+    Ok(take(b, off, n)?.iter().map(|&x| x as i8).collect())
+}
+
+fn usz(j: &Json, key: &str) -> Result<usize> {
+    j.req(key)?.as_usize().ok_or_else(|| anyhow!("bad `{key}` in compressed header"))
+}
+
+impl CompressedModel {
+    pub fn save<P: AsRef<Path>>(&self, path: P) -> Result<()> {
+        let shape_json =
+            |w: &Tensor| Json::Arr(w.shape.iter().map(|&d| num(d as f64)).collect());
+        let layer_hdr = |pl: &PackedLayer| -> Json {
+            let mut f = vec![
+                ("form", s(pl.form.tag())),
+                ("nin", num(pl.in_live.len() as f64)),
+                ("nout", num(pl.out_live.len() as f64)),
+                ("live_div", num(pl.live_divisor as f64)),
+            ];
+            match &pl.form {
+                PackedForm::Dense { w } => f.push(("wshape", shape_json(w))),
+                PackedForm::DwMapped { w, in_pos } => {
+                    f.push(("wshape", shape_json(w)));
+                    f.push(("nmap", num(in_pos.len() as f64)));
+                }
+                PackedForm::SparseF32 { csr, values } => {
+                    f.push(("rows", num(csr.rows as f64)));
+                    f.push(("cols", num(csr.cols as f64)));
+                    f.push(("nrp", num(csr.row_ptr.len() as f64)));
+                    f.push(("nci", num(csr.col_idx.len() as f64)));
+                    f.push(("nval", num(values.len() as f64)));
+                }
+                PackedForm::Int8 { csr, codes, scale_w } => {
+                    f.push(("rows", num(csr.rows as f64)));
+                    f.push(("cols", num(csr.cols as f64)));
+                    f.push(("nrp", num(csr.row_ptr.len() as f64)));
+                    f.push(("nci", num(csr.col_idx.len() as f64)));
+                    f.push(("nval", num(codes.len() as f64)));
+                    f.push(("scale_w", num(*scale_w as f64)));
+                }
+            }
+            obj(f)
+        };
+        let header = obj(vec![
+            ("version", num(COMPRESSED_FORMAT_VERSION as f64)),
+            ("arch", s(&self.arch.name)),
+            ("qbits_w", num(self.qbits.weight as f64)),
+            ("qbits_a", num(self.qbits.act as f64)),
+            ("exits_trained", Json::Bool(self.exits.trained)),
+            ("exit_t1", num(self.exits.thresholds.map(|t| t.0).unwrap_or(-1.0) as f64)),
+            ("exit_t2", num(self.exits.thresholds.map(|t| t.1).unwrap_or(-1.0) as f64)),
+            ("exit_p1", num(self.exits.exit_probs.0)),
+            ("exit_p2", num(self.exits.exit_probs.1)),
+            ("history", Json::Arr(self.history.iter().map(|h| s(h)).collect())),
+            ("layers", Json::Arr(self.layers.iter().map(layer_hdr).collect())),
+        ]);
+        let mut bytes = header.to_string().into_bytes();
+        bytes.push(b'\n');
+        let put_f32 = |bytes: &mut Vec<u8>, vs: &[f32]| {
+            for v in vs {
+                bytes.extend_from_slice(&v.to_le_bytes());
+            }
+        };
+        let put_u32 = |bytes: &mut Vec<u8>, vs: &[u32]| {
+            for v in vs {
+                bytes.extend_from_slice(&v.to_le_bytes());
+            }
+        };
+        for pl in &self.layers {
+            put_f32(&mut bytes, &pl.bias);
+            put_u32(&mut bytes, &pl.in_live);
+            put_u32(&mut bytes, &pl.out_live);
+            match &pl.form {
+                PackedForm::Dense { w } => put_f32(&mut bytes, &w.data),
+                PackedForm::DwMapped { w, in_pos } => {
+                    put_f32(&mut bytes, &w.data);
+                    for v in in_pos {
+                        bytes.extend_from_slice(&v.to_le_bytes());
+                    }
+                }
+                PackedForm::SparseF32 { csr, values } => {
+                    put_u32(&mut bytes, &csr.row_ptr);
+                    put_u32(&mut bytes, &csr.col_idx);
+                    put_f32(&mut bytes, values);
+                }
+                PackedForm::Int8 { csr, codes, .. } => {
+                    put_u32(&mut bytes, &csr.row_ptr);
+                    put_u32(&mut bytes, &csr.col_idx);
+                    bytes.extend(codes.iter().map(|&c| c as u8));
+                }
+            }
+        }
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir).ok();
+        }
+        std::fs::write(path.as_ref(), bytes)
+            .with_context(|| format!("saving compressed model to {}", path.as_ref().display()))
+    }
+
+    pub fn load<P: AsRef<Path>>(path: P, arch: Arc<ArchManifest>) -> Result<CompressedModel> {
+        let bytes = std::fs::read(path.as_ref())
+            .with_context(|| format!("loading compressed model from {}", path.as_ref().display()))?;
+        let nl = bytes
+            .iter()
+            .position(|&b| b == b'\n')
+            .ok_or_else(|| anyhow!("corrupt compressed model: no header"))?;
+        let header = Json::parse(std::str::from_utf8(&bytes[..nl])?)
+            .map_err(|e| anyhow!("corrupt compressed header: {e}"))?;
+        let version = header.get("version").and_then(|v| v.as_f64()).unwrap_or(0.0);
+        if version > COMPRESSED_FORMAT_VERSION as f64 {
+            return Err(anyhow!(
+                "compressed model is format v{version}, newer than supported \
+                 v{COMPRESSED_FORMAT_VERSION}"
+            ));
+        }
+        let got_arch = header.req("arch")?.as_str().unwrap_or("");
+        ensure!(
+            got_arch == arch.name,
+            "compressed model is for arch `{got_arch}`, expected `{}`",
+            arch.name
+        );
+        let lhdrs = header
+            .req("layers")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("compressed header: layers not an array"))?;
+        ensure!(
+            lhdrs.len() == arch.layers.len(),
+            "compressed model has {} layers, arch `{}` has {}",
+            lhdrs.len(),
+            arch.name,
+            arch.layers.len()
+        );
+        let mut off = nl + 1;
+        let mut layers = Vec::with_capacity(lhdrs.len());
+        for lh in lhdrs {
+            let (nin, nout) = (usz(lh, "nin")?, usz(lh, "nout")?);
+            let live_divisor = lh.req("live_div")?.as_f64().unwrap_or(1.0) as f32;
+            let bias = read_f32(&bytes, &mut off, nout)?;
+            let in_live = read_u32(&bytes, &mut off, nin)?;
+            let out_live = read_u32(&bytes, &mut off, nout)?;
+            let wshape = |lh: &Json| -> Result<Vec<usize>> {
+                Ok(lh
+                    .req("wshape")?
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("bad wshape"))?
+                    .iter()
+                    .filter_map(|d| d.as_usize())
+                    .collect())
+            };
+            let csr_of = |lh: &Json, b: &[u8], off: &mut usize| -> Result<(Bcsr, usize)> {
+                let (rows, cols) = (usz(lh, "rows")?, usz(lh, "cols")?);
+                let (nrp, nci, nval) = (usz(lh, "nrp")?, usz(lh, "nci")?, usz(lh, "nval")?);
+                let row_ptr = read_u32(b, off, nrp)?;
+                let col_idx = read_u32(b, off, nci)?;
+                ensure!(
+                    nrp == rows.div_ceil(BLOCK_R) + 1
+                        && row_ptr.last().copied() == Some(nci as u32)
+                        && nval == nci * BLOCK_LEN,
+                    "corrupt compressed model: inconsistent blocked-CSR structure"
+                );
+                Ok((Bcsr { rows, cols, row_ptr, col_idx }, nval))
+            };
+            let form = match lh.req("form")?.as_str().unwrap_or("") {
+                "dense" => {
+                    let sh = wshape(lh)?;
+                    let n = sh.iter().product::<usize>();
+                    PackedForm::Dense { w: Tensor::new(sh, read_f32(&bytes, &mut off, n)?) }
+                }
+                "dw" => {
+                    let sh = wshape(lh)?;
+                    let n = sh.iter().product::<usize>();
+                    let w = Tensor::new(sh, read_f32(&bytes, &mut off, n)?);
+                    let in_pos = read_i32(&bytes, &mut off, usz(lh, "nmap")?)?;
+                    PackedForm::DwMapped { w, in_pos }
+                }
+                "sparse" => {
+                    let (csr, nval) = csr_of(lh, &bytes, &mut off)?;
+                    PackedForm::SparseF32 { csr, values: read_f32(&bytes, &mut off, nval)? }
+                }
+                "int8" => {
+                    let (csr, nval) = csr_of(lh, &bytes, &mut off)?;
+                    let codes = read_i8(&bytes, &mut off, nval)?;
+                    let scale_w = lh.req("scale_w")?.as_f64().unwrap_or(0.0) as f32;
+                    PackedForm::Int8 { csr, codes, scale_w }
+                }
+                other => return Err(anyhow!("unknown packed form `{other}`")),
+            };
+            layers.push(PackedLayer { in_live, out_live, live_divisor, bias, form });
+        }
+        let t1 = header.req("exit_t1")?.as_f64().unwrap_or(-1.0) as f32;
+        let t2 = header.req("exit_t2")?.as_f64().unwrap_or(-1.0) as f32;
+        Ok(CompressedModel {
+            arch,
+            qbits: QBits {
+                weight: header.req("qbits_w")?.as_f64().unwrap_or(0.0) as f32,
+                act: header.req("qbits_a")?.as_f64().unwrap_or(0.0) as f32,
+            },
+            exits: ExitState {
+                trained: header.req("exits_trained")?.as_bool().unwrap_or(false),
+                thresholds: if t1 >= 0.0 { Some((t1, t2)) } else { None },
+                exit_probs: (
+                    header.req("exit_p1")?.as_f64().unwrap_or(0.0),
+                    header.req("exit_p2")?.as_f64().unwrap_or(0.0),
+                ),
+            },
+            layers,
+            history: header
+                .get("history")
+                .and_then(|h| h.as_arr())
+                .map(|a| a.iter().filter_map(|v| v.as_str().map(String::from)).collect())
+                .unwrap_or_default(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::builtin_ref_manifest;
+
+    fn pruned_state(seed: u64, qbits: QBits) -> ModelState {
+        let arch = builtin_ref_manifest().arch("mini_vgg").unwrap();
+        let mut st = ModelState::init_host(arch, seed);
+        // Deterministically kill every other channel in every slot.
+        for m in &mut st.masks {
+            for (i, v) in m.data.iter_mut().enumerate() {
+                if i % 2 == 1 {
+                    *v = 0.0;
+                }
+            }
+        }
+        st.qbits = qbits;
+        st
+    }
+
+    #[test]
+    fn bcsr_build_skips_dead_blocks_and_pads_edges() {
+        // 6x10 matrix, nonzero only in (row 5, col 9): block-rows 0 has no
+        // stored block, block-row 1 stores exactly block-col 1.
+        let mut vals = Vec::new();
+        let csr = Bcsr::build(
+            6,
+            10,
+            |r, c| if r == 5 && c == 9 { 7.0 } else { 0.0 },
+            |v: f32| v != 0.0,
+            &mut vals,
+        );
+        assert_eq!(csr.row_ptr, vec![0, 0, 1]);
+        assert_eq!(csr.col_idx, vec![1]);
+        assert_eq!(vals.len(), BLOCK_LEN);
+        // Row 5 = tile row 1, col 9 = tile col 1; everything else padded 0.
+        for (i, &v) in vals.iter().enumerate() {
+            let want = if i == BLOCK_C + 1 { 7.0 } else { 0.0 };
+            assert_eq!(v, want, "tile entry {i}");
+        }
+        assert_eq!(csr.nblocks(), 1);
+        assert_eq!(csr.block_rows(), 2);
+    }
+
+    #[test]
+    fn lower_pruned_fp32_compacts_and_shrinks() {
+        let st = pruned_state(11, QBits::FP32);
+        let cm = CompressedModel::lower(&st).unwrap();
+        assert_eq!(cm.layers.len(), st.arch.layers.len());
+        // c1 (in unmasked, out slot 0 half-dead): 3 live inputs, 8 live outs.
+        let c1 = &cm.layers[0];
+        assert_eq!(c1.in_live.len(), 3);
+        assert_eq!(c1.out_live, (0..16).step_by(2).collect::<Vec<u32>>());
+        assert_eq!(c1.live_divisor, 8.0);
+        assert!(matches!(c1.form, PackedForm::SparseF32 { .. }));
+        // All body + exit layers are masked on at least one side -> sparse.
+        for pl in &cm.layers {
+            assert!(matches!(pl.form, PackedForm::SparseF32 { .. }), "{:?}", pl.form.tag());
+        }
+        let dense = CompressedModel::dense_bytes(&cm.arch);
+        let packed = cm.packed_bytes();
+        assert!(
+            packed * 2 < dense,
+            "half-pruned model should pack to well under half: {packed} vs {dense}"
+        );
+    }
+
+    #[test]
+    fn lower_unpruned_fp32_is_dense_fallback() {
+        let arch = builtin_ref_manifest().arch("mini_vgg").unwrap();
+        let st = ModelState::init_host(arch, 5);
+        let cm = CompressedModel::lower(&st).unwrap();
+        for (pl, l) in cm.layers.iter().zip(&st.arch.layers) {
+            assert!(matches!(pl.form, PackedForm::Dense { .. }), "layer {}", l.name);
+            assert_eq!(pl.in_live.len(), l.cin);
+            assert_eq!(pl.out_live.len(), l.cout);
+        }
+        // fp32 dense fallback carries the identical weight values.
+        if let PackedForm::Dense { w } = &cm.layers[0].form {
+            assert_eq!(w.data, st.params[0].data);
+        }
+    }
+
+    #[test]
+    fn lower_int8_selects_and_codes_match_fake_quant() {
+        let st = pruned_state(13, QBits { weight: 2.0, act: 8.0 });
+        let cm = CompressedModel::lower(&st).unwrap();
+        // Stem conv can't take integer input -> sparse f32; everything
+        // downstream qualifies for int8.
+        assert!(matches!(cm.layers[0].form, PackedForm::SparseF32 { .. }));
+        for pl in &cm.layers[1..] {
+            assert!(matches!(pl.form, PackedForm::Int8 { .. }), "{}", pl.form.tag());
+        }
+        // code * scale_w reproduces host_weight_quant up to one rounding.
+        for (li, pl) in cm.layers.iter().enumerate() {
+            let PackedForm::Int8 { csr, codes, scale_w } = &pl.form else { continue };
+            let l = &st.arch.layers[li];
+            let wq = host_weight_quant(&st.params[2 * li], st.qbits.weight);
+            let wmax = st.params[2 * li].data.iter().fold(1e-8f32, |m, v| m.max(v.abs()));
+            for br in 0..csr.block_rows() {
+                for bi in csr.row_blocks(br) {
+                    let bc = csr.col_idx[bi] as usize;
+                    for rr in 0..BLOCK_R {
+                        let ocl = br * BLOCK_R + rr;
+                        if ocl >= csr.rows {
+                            break;
+                        }
+                        for cc in 0..BLOCK_C {
+                            let r = bc * BLOCK_C + cc;
+                            if r >= csr.cols {
+                                break;
+                            }
+                            let code = codes[bi * BLOCK_LEN + rr * BLOCK_C + cc];
+                            // DoReFa codes are odd: never zero for a live entry.
+                            assert_eq!(code.rem_euclid(2), 1_i8.rem_euclid(2));
+                            let got = code as f32 * scale_w;
+                            let want = wq.data[orig_index(l, &pl.in_live, &pl.out_live, ocl, r)];
+                            assert!(
+                                (got - want).abs() <= 1e-6 * wmax,
+                                "layer {li} code {code} -> {got} vs {want}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lower_rejects_non_binary_masks() {
+        let mut st = pruned_state(3, QBits::FP32);
+        st.masks[2].data[0] = 0.5;
+        let err = CompressedModel::lower(&st).unwrap_err();
+        assert!(err.to_string().contains("not binary"), "{err}");
+    }
+
+    #[test]
+    fn fully_dead_slot_falls_back_to_one_folded_channel() {
+        let mut st = pruned_state(7, QBits::FP32);
+        for v in &mut st.masks[1].data {
+            *v = 0.0;
+        }
+        let cm = CompressedModel::lower(&st).unwrap();
+        // c2 writes slot 1: single fallback output channel, bias folded.
+        let c2 = &cm.layers[1];
+        assert_eq!(c2.out_live, vec![0]);
+        assert_eq!(c2.bias, vec![0.0]);
+        assert_eq!(c2.live_divisor, 1.0);
+        // and every weight entry folded to +0 -> zero stored blocks.
+        if let PackedForm::SparseF32 { csr, values } = &c2.form {
+            assert_eq!(csr.nblocks(), 0);
+            assert!(values.is_empty());
+        } else {
+            panic!("expected sparse form");
+        }
+        // c3 reads slot 1: single live input channel.
+        assert_eq!(cm.layers[2].in_live, vec![0]);
+    }
+
+    #[test]
+    fn save_load_roundtrip_and_stale_version_rejected() {
+        let mut st = pruned_state(17, QBits { weight: 2.0, act: 8.0 });
+        st.exits = ExitState {
+            trained: true,
+            thresholds: Some((0.8, 0.7)),
+            exit_probs: (0.4, 0.3),
+        };
+        st.history.push("prune(0.5)".into());
+        st.history.push("quantize(2w8a)".into());
+        let cm = CompressedModel::lower(&st).unwrap();
+        let path =
+            std::env::temp_dir().join(format!("coc_cmp_{}.cmp", std::process::id()));
+        cm.save(&path).unwrap();
+        let cm2 = CompressedModel::load(&path, st.arch.clone()).unwrap();
+        assert_eq!(cm.layers, cm2.layers);
+        assert_eq!(cm.qbits, cm2.qbits);
+        assert_eq!(cm.history, cm2.history);
+        assert_eq!(cm2.exits.thresholds, Some((0.8, 0.7)));
+        assert!(cm2.exits.trained);
+        assert_eq!(cm.packed_bytes(), cm2.packed_bytes());
+
+        // A header claiming a future format version is rejected outright.
+        let bytes = std::fs::read(&path).unwrap();
+        let nl = bytes.iter().position(|&b| b == b'\n').unwrap();
+        let header = String::from_utf8(bytes[..nl].to_vec()).unwrap().replace(
+            &format!("\"version\":{COMPRESSED_FORMAT_VERSION}"),
+            "\"version\":99",
+        );
+        let mut patched = header.into_bytes();
+        patched.extend_from_slice(&bytes[nl..]);
+        std::fs::write(&path, &patched).unwrap();
+        let err = CompressedModel::load(&path, st.arch.clone()).unwrap_err();
+        assert!(err.to_string().contains("newer"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -7,6 +7,8 @@
 //! descriptors + the current masks/bit-widths — the same *analytic*
 //! accounting the paper uses (BitOps are counted, not measured).
 
+pub mod compressed;
+
 use std::collections::BTreeMap;
 use std::path::Path;
 use std::sync::Arc;
@@ -672,6 +674,22 @@ pub fn host_weight_quant(w: &Tensor, bits: f32) -> Tensor {
     Tensor::new(w.shape.clone(), data)
 }
 
+/// DoReFa scale pair `(tmax, wmax)` shared by `host_weight_quant_into`
+/// and the int8 packer in `models::compressed` — one pass over the raw
+/// weights instead of the former two (the per-element `tanh` scan was
+/// half the quantization cost on the refback per-forward path).
+///
+/// Relies on `|tanh v| = tanh |v|` (odd symmetry) and f32 `tanh` being
+/// monotonic, so `max_i |tanh v_i| = tanh(max_i |v_i|)` — pinned
+/// bit-identical against the two-pass reference by a regression test.
+pub fn weight_quant_scales(w: &[f32]) -> (f32, f32) {
+    let mut amax = 0.0f32;
+    for &v in w {
+        amax = amax.max(v.abs());
+    }
+    (amax.tanh().max(1e-8), amax.max(1e-8))
+}
+
 /// `host_weight_quant` into a caller-provided buffer, so the reference
 /// backend's per-layer/per-step quantization writes into reused scratch
 /// storage instead of allocating.  Identity copy when `bits <= 0`.
@@ -682,12 +700,7 @@ pub fn host_weight_quant_into(w: &[f32], bits: f32, out: &mut [f32]) {
         return;
     }
     let n = (2f32.powf(bits) - 1.0).max(1.0);
-    let mut tmax = 1e-8f32;
-    let mut wmax = 1e-8f32;
-    for &v in w {
-        tmax = tmax.max(v.tanh().abs());
-        wmax = wmax.max(v.abs());
-    }
+    let (tmax, wmax) = weight_quant_scales(w);
     for (o, &v) in out.iter_mut().zip(w) {
         let tn = v.tanh() / (2.0 * tmax) + 0.5;
         *o = (2.0 * ((tn * n).round() / n) - 1.0) * wmax;
@@ -1082,6 +1095,52 @@ mod tests {
         let st = ModelState::init_host(arch.clone(), 1);
         assert_eq!(st.params.len(), arch.num_params());
         assert_eq!(st.masks.len(), 6);
+    }
+
+    #[test]
+    fn single_pass_weight_quant_is_bit_identical_to_two_pass() {
+        // The retired two-pass scan (per-element tanh for tmax): the
+        // single-pass rewrite must reproduce it bit-for-bit, including on
+        // adversarial inputs (all below the 1e-8 seed floor, exact ties,
+        // negatives — where |tanh v| = tanh |v| symmetry is load-bearing).
+        fn two_pass(w: &[f32], bits: f32, out: &mut [f32]) {
+            if bits <= 0.0 {
+                out.copy_from_slice(w);
+                return;
+            }
+            let n = (2f32.powf(bits) - 1.0).max(1.0);
+            let mut tmax = 1e-8f32;
+            let mut wmax = 1e-8f32;
+            for &v in w {
+                tmax = tmax.max(v.tanh().abs());
+                wmax = wmax.max(v.abs());
+            }
+            for (o, &v) in out.iter_mut().zip(w) {
+                let tn = v.tanh() / (2.0 * tmax) + 0.5;
+                *o = (2.0 * ((tn * n).round() / n) - 1.0) * wmax;
+            }
+        }
+        let mut rng = Rng::new(0xfeed);
+        let mut cases: Vec<Vec<f32>> = (0..50)
+            .map(|i| (0..(1 + i * 7) % 97).map(|_| rng.normal()).collect())
+            .collect();
+        cases.push(vec![1e-12, -1e-12, 0.0]); // under the seed floor
+        cases.push(vec![2.5, 2.5, -2.5]); // exact ties, sign symmetry
+        cases.push(vec![-7.0]); // extremum is negative
+        cases.push(vec![]);
+        for w in &cases {
+            for bits in [0.0f32, 1.0, 2.0, 4.0, 8.0] {
+                let mut want = vec![0.0f32; w.len()];
+                let mut got = vec![0.0f32; w.len()];
+                two_pass(w, bits, &mut want);
+                host_weight_quant_into(w, bits, &mut got);
+                let (wb, gb): (Vec<u32>, Vec<u32>) = (
+                    want.iter().map(|v| v.to_bits()).collect(),
+                    got.iter().map(|v| v.to_bits()).collect(),
+                );
+                assert_eq!(wb, gb, "bits={bits} w={w:?}");
+            }
+        }
     }
 
     #[test]

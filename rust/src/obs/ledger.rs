@@ -142,7 +142,7 @@ impl BenchArea {
 
 /// The ledger areas this repo tracks.
 pub fn areas() -> &'static [&'static str] {
-    &["serve", "refback"]
+    &["serve", "serve_compressed", "refback", "refback_kernels"]
 }
 
 /// Repo-root file name for an area.
@@ -249,6 +249,49 @@ pub fn extract(area: &str, results_dir: &Path) -> Result<BenchArea> {
                         Direction::Lower,
                         60.0,
                     ),
+                ],
+            })
+        }
+        "serve_compressed" => {
+            let j = load_results(results_dir, "serve_bench_compressed.json")?;
+            Ok(BenchArea {
+                area: "serve_compressed".into(),
+                source: "results/serve_bench_compressed.json".into(),
+                metrics: vec![
+                    // The compressed-vs-dense rps ratio is the headline:
+                    // both sides ran the same pool and load in the same
+                    // process, so it is far steadier than raw rps.
+                    entry("speedup", pull(&j, &["speedup"])?, Direction::Higher, 20.0),
+                    entry(
+                        "throughput_rps",
+                        pull(&j, &["compressed", "throughput_rps"])?,
+                        Direction::Higher,
+                        60.0,
+                    ),
+                    // Packed/dense model bytes are deterministic.
+                    entry("bytes_ratio", pull(&j, &["bytes_ratio"])?, Direction::Lower, 5.0),
+                ],
+            })
+        }
+        "refback_kernels" => {
+            let j = load_results(results_dir, "refback_kernels.json")?;
+            Ok(BenchArea {
+                area: "refback_kernels".into(),
+                source: "results/refback_kernels.json".into(),
+                metrics: vec![
+                    entry(
+                        "eval_compressed_speedup",
+                        pull(&j, &["eval_compressed_speedup"])?,
+                        Direction::Higher,
+                        20.0,
+                    ),
+                    entry(
+                        "eval_compressed_sps",
+                        pull(&j, &["eval_compressed_sps"])?,
+                        Direction::Higher,
+                        60.0,
+                    ),
+                    entry("bytes_ratio", pull(&j, &["bytes_ratio"])?, Direction::Lower, 5.0),
                 ],
             })
         }

@@ -56,7 +56,7 @@ use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex};
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::models::{ArchManifest, ModelState};
 use crate::obs::metrics::Counter;
@@ -174,6 +174,26 @@ pub trait Backend {
     /// distinguish "this transport is unavailable" from a real failure
     /// and degrade to literal mode.
     fn upload(&self, t: &Tensor) -> Result<DeviceBuffer>;
+
+    /// Prepare inference graph `tag` over a lowered
+    /// [`CompressedModel`](crate::models::compressed::CompressedModel):
+    /// params, masks and qbits are baked into packed layers, so the
+    /// returned graph takes the batch input as its only operand.
+    /// Default: unsupported (only the reference backend executes packed
+    /// forms today; the PJRT artifacts are dense by construction).
+    fn load_compressed(
+        &self,
+        cm: &Arc<crate::models::compressed::CompressedModel>,
+        tag: &str,
+    ) -> Result<Box<dyn GraphExec>> {
+        let _ = tag;
+        bail!(
+            "backend `{}` cannot execute compressed models (arch `{}`); \
+             use --backend ref or the dense path",
+            self.platform(),
+            cm.arch.name
+        )
+    }
 }
 
 /// Backend selection, surfaced on the CLI as `--backend pjrt|ref`.
@@ -414,6 +434,22 @@ impl Engine {
         let exec = Arc::new(Executable { name: format!("{}/{tag}", arch.name), imp });
         self.cache.lock().unwrap().insert(key, exec.clone());
         Ok(exec)
+    }
+
+    /// Load inference graph `tag` over a lowered compressed model.
+    /// Uncached: compressed models are per-leaf values (not arch-keyed
+    /// like dense graphs), and callers hold the returned executable for
+    /// the lifetime they need.
+    pub fn load_compressed_graph(
+        &self,
+        cm: &Arc<crate::models::compressed::CompressedModel>,
+        tag: &str,
+    ) -> Result<Arc<Executable>> {
+        let imp = self
+            .backend
+            .load_compressed(cm, tag)
+            .with_context(|| format!("loading compressed graph `{tag}` of `{}`", cm.arch.name))?;
+        Ok(Arc::new(Executable { name: format!("compressed::{}::{tag}", cm.arch.name), imp }))
     }
 
     /// Load a graph from an artifact file (cached).  Kernel bench graphs

@@ -1,0 +1,1156 @@
+//! Compressed execution for the reference backend: inference kernels
+//! over a `models::compressed::CompressedModel` — channel-compacted
+//! feature maps, blocked-CSR sparse conv/matmul, and integer int8
+//! paths — wired into the same scratch arena, batch pool and graph
+//! contract as the dense interpreter.
+//!
+//! # Parity contract
+//!
+//! The pruned-fp32 pipeline is **bit-identical** to the dense
+//! interpreter's eval/stage logits: compaction only removes channels
+//! whose dense activations are `±0.0`, stored blocks are walked in the
+//! dense path's canonical ascending reduction order, and skipping a
+//! `±0.0` product never changes an f32 accumulator that starts at
+//! `+0.0` (see the `models::compressed` module docs).  The RMS-norm
+//! statistic assigns lanes by *original* channel index
+//! ([`rmsnorm_live_inplace`]), so compaction cannot re-associate the
+//! `Σx²` chain.
+//!
+//! The int8 path is tolerance-level against dense fake-quant (integer
+//! codes are exact; one f32 rescale per output element replaces the
+//! f32 product chain) but exactly deterministic at every thread count:
+//! i32 accumulation is associative, so there is nothing threading can
+//! re-order.
+//!
+//! Activation codes are *recovered*, not re-derived: lowering admits a
+//! layer to int8 only when its runtime input is an exact `act_quant`
+//! image — post-relu, so the quant scale equals the tensor max and
+//! survives max-pooling — which makes `code = round(v / s_a · na)`
+//! exact ([`act_codes`]).
+//!
+//! Compressed graphs are inference-only (`eval` / `stageN`): training
+//! updates raw weights that lowering has already folded away.
+
+use std::borrow::Cow;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::models::compressed::{Bcsr, CompressedModel, PackedForm, BLOCK_C, BLOCK_LEN, BLOCK_R};
+use crate::models::LayerKind;
+use crate::tensor::Tensor;
+
+use super::kernels::{self, ConvGeom};
+use super::pool;
+use super::scratch::Scratch;
+use super::{recycle_cow, GraphKind, RefNet};
+use crate::runtime::{DeviceBuffer, GraphExec, ResidencyUnsupported, StatsCell};
+
+/// Load one compressed graph (`eval` or `stageN[_bB]`), mirroring
+/// `RefBackend::load_graph` validation.
+pub(super) fn load(
+    cm: &Arc<CompressedModel>,
+    tag: &str,
+    stats: Arc<StatsCell>,
+    threads: usize,
+) -> Result<Box<dyn GraphExec>> {
+    let kind = GraphKind::parse(tag)
+        .ok_or_else(|| anyhow!("unknown graph tag `{tag}` (init|train|eval|stageN[_bB])"))?;
+    ensure!(
+        matches!(kind, GraphKind::Eval | GraphKind::Stage { .. }),
+        "compressed execution is inference-only; graph `{tag}` needs the dense path"
+    );
+    ensure!(
+        cm.arch.graphs.contains_key(tag),
+        "arch `{}` does not declare graph `{tag}`",
+        cm.arch.name
+    );
+    let net = CompressedNet::compile(cm.clone(), threads)?;
+    Ok(Box::new(CompressedGraph {
+        net,
+        kind,
+        name: format!("ref+cmp://{}/{tag}", cm.arch.name),
+        stats,
+        scratch: Mutex::new(Scratch::default()),
+    }))
+}
+
+struct CompressedGraph {
+    net: CompressedNet,
+    kind: GraphKind,
+    name: String,
+    stats: Arc<StatsCell>,
+    scratch: Mutex<Scratch>,
+}
+
+impl GraphExec for CompressedGraph {
+    fn run(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let _s = crate::obs::trace::span("refback.compressed.run");
+        let t0 = Instant::now();
+        let out = self
+            .dispatch(inputs)
+            .with_context(|| format!("executing `{}`", self.name))?;
+        self.stats.executions.incr();
+        self.stats.execute_ns.add(t0.elapsed().as_nanos() as u64);
+        Ok(out)
+    }
+
+    fn run_buffers(&self, _inputs: &[&DeviceBuffer]) -> Result<Vec<DeviceBuffer>> {
+        Err(ResidencyUnsupported("ref backend has no device buffers".into()).into())
+    }
+}
+
+impl CompressedGraph {
+    /// Compressed graphs take **one** operand — the batch input —
+    /// because params, masks and qbits are all baked at lowering.
+    fn dispatch(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let scratch = &mut *self.scratch.lock().unwrap();
+        ensure!(inputs.len() == 1, "compressed graphs take 1 operand, got {}", inputs.len());
+        let x = inputs[0];
+        let net = &self.net;
+        match self.kind {
+            GraphKind::Eval => {
+                ensure!(
+                    x.shape.first() == Some(&net.cm.arch.eval_batch),
+                    "eval graph lowered at batch {}, got input batch {:?}",
+                    net.cm.arch.eval_batch,
+                    x.shape.first()
+                );
+                let (h1, e1) = net.stage1(x, scratch)?;
+                let (h2, e2) = net.stage2(&h1, scratch)?;
+                scratch.recycle_tensor(h1);
+                let logits = net.stage3(&h2, scratch)?;
+                scratch.recycle_tensor(h2);
+                Ok(vec![logits, e1, e2])
+            }
+            GraphKind::Stage { stage, batch } => {
+                ensure!(
+                    x.shape.first() == Some(&batch),
+                    "stage{stage} graph lowered at batch {batch}, got input batch {:?}",
+                    x.shape.first()
+                );
+                match stage {
+                    1 => {
+                        let (h1, e1) = net.stage1(x, scratch)?;
+                        Ok(vec![e1, h1])
+                    }
+                    2 => {
+                        let (h2, e2) = net.stage2(x, scratch)?;
+                        Ok(vec![e2, h2])
+                    }
+                    _ => Ok(vec![net.stage3(x, scratch)?]),
+                }
+            }
+            GraphKind::Init | GraphKind::Train => {
+                bail!("compressed graphs are inference-only")
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The compressed network
+// ---------------------------------------------------------------------------
+
+/// The dense interpreter's validated topology (`RefNet`) plus the packed
+/// layers; stage composition and segment bookkeeping are shared so the
+/// two paths cannot drift.
+struct CompressedNet {
+    cm: Arc<CompressedModel>,
+    base: RefNet,
+}
+
+impl CompressedNet {
+    fn compile(cm: Arc<CompressedModel>, threads: usize) -> Result<CompressedNet> {
+        let base = RefNet::compile(cm.arch.clone(), threads)?;
+        let arch = &cm.arch;
+        ensure!(
+            cm.layers.len() == arch.layers.len(),
+            "compressed model has {} layers, arch `{}` declares {}",
+            cm.layers.len(),
+            arch.name,
+            arch.layers.len()
+        );
+        for (l, pl) in arch.layers.iter().zip(&cm.layers) {
+            ensure!(
+                pl.bias.len() == pl.out_live.len(),
+                "layer `{}`: bias covers {} channels, {} live",
+                l.name,
+                pl.bias.len(),
+                pl.out_live.len()
+            );
+            let kdim = match l.kind {
+                LayerKind::Dense => pl.in_live.len(),
+                _ => l.k * l.k * pl.in_live.len(),
+            };
+            let ok = match &pl.form {
+                PackedForm::Dense { w } => {
+                    let full = match l.kind {
+                        LayerKind::Dense => vec![l.cin, l.cout],
+                        LayerKind::DwConv => vec![l.k, l.k, 1, l.cout],
+                        LayerKind::Conv => vec![l.k, l.k, l.cin, l.cout],
+                    };
+                    pl.in_live.len() == l.cin && pl.out_live.len() == l.cout && w.shape == full
+                }
+                PackedForm::DwMapped { w, in_pos } => {
+                    l.kind == LayerKind::DwConv
+                        && in_pos.len() == pl.out_live.len()
+                        && w.shape == vec![l.k, l.k, 1, pl.out_live.len()]
+                }
+                PackedForm::SparseF32 { csr, values } => {
+                    csr.rows == pl.out_live.len()
+                        && csr.cols == kdim
+                        && values.len() == csr.nblocks() * BLOCK_LEN
+                }
+                PackedForm::Int8 { csr, codes, .. } => {
+                    l.kind != LayerKind::DwConv
+                        && csr.rows == pl.out_live.len()
+                        && csr.cols == kdim
+                        && codes.len() == csr.nblocks() * BLOCK_LEN
+                }
+            };
+            ensure!(ok, "layer `{}`: inconsistent packed form `{}`", l.name, pl.form.tag());
+        }
+        // Compaction must agree along the chain: each consumer's live
+        // input set is its producer's live output set.
+        for w in base.body.windows(2) {
+            let (p, l) = (w[0], w[1]);
+            ensure!(
+                cm.layers[l].in_live == cm.layers[p].out_live,
+                "layer `{}` live inputs disagree with `{}` live outputs",
+                arch.layers[l].name,
+                arch.layers[p].name
+            );
+        }
+        for (head, cut) in [(base.exit1, base.n1), (base.exit2, base.n2)] {
+            if let Some(li) = head {
+                let cut_li = base.body[cut - 1];
+                ensure!(
+                    cm.layers[li].in_live == cm.layers[cut_li].out_live,
+                    "exit head `{}` live inputs disagree with cut layer `{}`",
+                    arch.layers[li].name,
+                    arch.layers[cut_li].name
+                );
+            }
+        }
+        Ok(CompressedNet { cm, base })
+    }
+
+    // ----- forward ----------------------------------------------------------
+
+    /// Pools (lazy, geometry-driven) + packed conv -> bias -> live-RMS
+    /// norm -> relu -> act_quant.  Same op order as the dense
+    /// `conv_forward` minus weight quant (baked at lowering) and the mask
+    /// multiply (structural: dead channels no longer exist).
+    fn conv_forward(&self, li: usize, mut xin: Cow<'_, Tensor>, scratch: &mut Scratch) -> Result<Tensor> {
+        let l = &self.cm.arch.layers[li];
+        let pl = &self.cm.layers[li];
+        let threads = self.base.threads;
+        let s = l.stride.max(1);
+        loop {
+            let (_, h, w, _) = kernels::dims4(&xin)?;
+            if h.div_ceil(s) <= l.hout && w.div_ceil(s) <= l.wout {
+                break;
+            }
+            let (pooled, _) = kernels::maxpool2(&xin, false, scratch)?;
+            recycle_cow(xin, scratch);
+            xin = Cow::Owned(pooled);
+        }
+        let (_, h, w, c) = kernels::dims4(&xin)?;
+        ensure!(
+            h.div_ceil(s) == l.hout && w.div_ceil(s) == l.wout,
+            "layer `{}`: no pooling schedule maps {h}x{w} input to declared {}x{} output at \
+             stride {s}",
+            l.name,
+            l.hout,
+            l.wout
+        );
+        ensure!(
+            c == pl.in_live.len(),
+            "layer `{}`: input has {c} channels, packed form expects {} live",
+            l.name,
+            pl.in_live.len()
+        );
+        let mut y = match &pl.form {
+            PackedForm::Dense { w } => match l.kind {
+                LayerKind::DwConv => kernels::dwconv2d(&xin, w, s, threads, scratch)?,
+                _ => kernels::conv2d(&xin, w, s, threads, scratch)?,
+            },
+            PackedForm::DwMapped { w, in_pos } => {
+                dwconv_mapped(&xin, w, in_pos, s, threads, scratch)?
+            }
+            PackedForm::SparseF32 { csr, values } => {
+                sparse_conv2d(&xin, csr, values, l.k, s, threads, scratch)?
+            }
+            PackedForm::Int8 { csr, codes, scale_w } => {
+                qconv2d(&xin, csr, codes, *scale_w, l.k, s, self.cm.qbits.act, threads, scratch)?
+            }
+        };
+        recycle_cow(xin, scratch);
+        kernels::add_channel_bias(&mut y, &pl.bias);
+        if pl.out_live.len() == l.cout {
+            // Uncompacted: flat lanes already equal original-index lanes.
+            kernels::rmsnorm_inplace(&mut y, pl.live_divisor);
+        } else {
+            rmsnorm_live_inplace(&mut y, &pl.out_live, l.cout, pl.live_divisor);
+        }
+        kernels::relu_inplace(&mut y);
+        kernels::act_quant_inplace(&mut y, self.cm.qbits.act);
+        Ok(y)
+    }
+
+    /// GAP -> act_quant -> packed matmul -> bias, mirroring the dense
+    /// `dense_forward`.
+    fn dense_forward(&self, li: usize, feat: &Tensor, scratch: &mut Scratch) -> Result<Tensor> {
+        let l = &self.cm.arch.layers[li];
+        let pl = &self.cm.layers[li];
+        let (_, _, _, c) = kernels::dims4(feat)?;
+        ensure!(
+            c == pl.in_live.len(),
+            "dense `{}`: fan-in {} live != feature channels {c}",
+            l.name,
+            pl.in_live.len()
+        );
+        let mut aq = kernels::gap(feat, scratch)?;
+        kernels::act_quant_inplace(&mut aq, self.cm.qbits.act);
+        let mut out = match &pl.form {
+            PackedForm::Dense { w } => kernels::matmul(&aq, w, scratch),
+            PackedForm::SparseF32 { csr, values } => sparse_matmul(&aq, csr, values, scratch),
+            PackedForm::Int8 { csr, codes, scale_w } => {
+                qmatmul(&aq, csr, codes, *scale_w, self.cm.qbits.act, scratch)
+            }
+            PackedForm::DwMapped { .. } => {
+                bail!("dense `{}` cannot execute a depthwise packed form", l.name)
+            }
+        };
+        kernels::add_row_bias(&mut out, &pl.bias);
+        scratch.recycle_tensor(aq);
+        Ok(out)
+    }
+
+    fn exit_forward(
+        &self,
+        head: Option<usize>,
+        feat: &Tensor,
+        scratch: &mut Scratch,
+    ) -> Result<Tensor> {
+        match head {
+            Some(li) => self.dense_forward(li, feat, scratch),
+            None => {
+                let b = *feat.shape.first().unwrap_or(&0);
+                let nc = self.cm.arch.num_classes;
+                Ok(Tensor::new(vec![b, nc], scratch.take(b * nc)))
+            }
+        }
+    }
+
+    fn forward_range(
+        &self,
+        input: &Tensor,
+        range: std::ops::Range<usize>,
+        scratch: &mut Scratch,
+    ) -> Result<Tensor> {
+        let mut cur: Option<Tensor> = None;
+        for bi in range {
+            let li = self.base.body[bi];
+            match self.cm.arch.layers[li].kind {
+                LayerKind::Dense => {
+                    let out = {
+                        let xr = cur.as_ref().unwrap_or(input);
+                        self.dense_forward(li, xr, scratch)?
+                    };
+                    if let Some(old) = cur.replace(out) {
+                        scratch.recycle_tensor(old);
+                    }
+                }
+                _ => {
+                    let xin = match cur.take() {
+                        Some(t) => Cow::Owned(t),
+                        None => Cow::Borrowed(input),
+                    };
+                    cur = Some(self.conv_forward(li, xin, scratch)?);
+                }
+            }
+        }
+        Ok(match cur {
+            Some(t) => t,
+            None => input.clone(),
+        })
+    }
+
+    fn stage1(&self, x: &Tensor, scratch: &mut Scratch) -> Result<(Tensor, Tensor)> {
+        let h1 = self.forward_range(x, 0..self.base.n1, scratch)?;
+        let e1 = self.exit_forward(self.base.exit1, &h1, scratch)?;
+        Ok((h1, e1))
+    }
+
+    fn stage2(&self, h1: &Tensor, scratch: &mut Scratch) -> Result<(Tensor, Tensor)> {
+        let h2 = self.forward_range(h1, self.base.n1..self.base.n2, scratch)?;
+        let e2 = self.exit_forward(self.base.exit2, &h2, scratch)?;
+        Ok((h2, e2))
+    }
+
+    fn stage3(&self, h2: &Tensor, scratch: &mut Scratch) -> Result<Tensor> {
+        self.forward_range(h2, self.base.n2..self.base.body.len(), scratch)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Kernels
+// ---------------------------------------------------------------------------
+
+/// Per-sample RMS normalization over a channel-compacted map, assigning
+/// the `Σx²` statistic lanes by **original** flat index — `(p · cout_full
+/// + out_live[cl]) % 8`, the lane `kernels::lane_dot` gives that element
+/// in the dense path — so the surviving squares land in the same lanes,
+/// in the same ascending order, as before compaction.  Dropped channels
+/// contributed exactly `(±0.0)² = +0.0` to a lane chain that can never
+/// go negative, so omitting them is bit-exact.
+fn rmsnorm_live_inplace(t: &mut Tensor, out_live: &[u32], cout_full: usize, live: f32) {
+    let (b, h, w, c) = (t.shape[0], t.shape[1], t.shape[2], t.shape[3]);
+    debug_assert_eq!(c, out_live.len());
+    let spl = h * w * c;
+    let d = (h * w) as f32 * live;
+    for bi in 0..b {
+        let row = &mut t.data[bi * spl..(bi + 1) * spl];
+        let mut l = [0.0f32; 8];
+        for (p, px) in row.chunks_exact(c).enumerate() {
+            let base = p * cout_full;
+            for (&v, &oc) in px.iter().zip(out_live) {
+                l[(base + oc as usize) % 8] += v * v;
+            }
+        }
+        let ms = ((l[0] + l[4]) + (l[1] + l[5])) + ((l[2] + l[6]) + (l[3] + l[7]));
+        let r = 1.0 / (ms / d + 1e-6).sqrt();
+        for v in row.iter_mut() {
+            *v *= r;
+        }
+    }
+}
+
+/// Reduction-index decode table for the blocked-CSR conv kernels:
+/// `rtab[3r..3r+3] = (ky, kx, live input channel)` for matrix column
+/// `r`, hoisting the div/mod chain out of the pixel loop.
+fn conv_rtab(cols: usize, k: usize, cin: usize, scratch: &mut Scratch) -> Vec<u32> {
+    let mut rtab = scratch.take_u32(3 * cols);
+    for r in 0..cols {
+        let (tap, ic) = (r / cin, r % cin);
+        rtab[3 * r] = (tap / k) as u32;
+        rtab[3 * r + 1] = (tap % k) as u32;
+        rtab[3 * r + 2] = ic as u32;
+    }
+    rtab
+}
+
+/// Blocked-CSR sparse conv2d over a channel-compacted NHWC input.  Each
+/// live output channel's accumulator runs over the stored entries of its
+/// block-row in ascending column order — the dense canonical `(ky, kx,
+/// ic)` chain restricted to stored entries, which only ever drops `±0.0`
+/// products — so the result is bit-identical to masked-dense execution.
+fn sparse_conv2d(
+    x: &Tensor,
+    csr: &Bcsr,
+    values: &[f32],
+    k: usize,
+    stride: usize,
+    threads: usize,
+    scratch: &mut Scratch,
+) -> Result<Tensor> {
+    let _s = crate::obs::trace::span("refback.sparse_conv2d");
+    let (b, h, w, cin) = kernels::dims4(x)?;
+    ensure!(
+        csr.cols == k * k * cin,
+        "sparse conv: csr has {} columns, geometry needs {}",
+        csr.cols,
+        k * k * cin
+    );
+    let g = ConvGeom::new(b, h, w, cin, k, csr.rows, stride);
+    let rtab = conv_rtab(csr.cols, k, cin, scratch);
+    let mut out = scratch.take_full(g.b * g.out_len());
+    let flops = g.ho * g.wo * csr.nblocks() * BLOCK_LEN;
+    pool::for_each_item(threads, flops, &mut out, g.out_len(), |bi, chunk| {
+        sparse_conv2d_item(&g, csr, values, &rtab, &x.data[bi * g.in_len()..][..g.in_len()], chunk);
+    });
+    scratch.recycle_u32(rtab);
+    Ok(Tensor::new(vec![g.b, g.ho, g.wo, g.cout], out))
+}
+
+fn sparse_conv2d_item(
+    g: &ConvGeom,
+    csr: &Bcsr,
+    values: &[f32],
+    rtab: &[u32],
+    x: &[f32],
+    out: &mut [f32],
+) {
+    let (s, cin) = (g.stride, g.cin);
+    for oy in 0..g.ho {
+        let yin = oy >= g.oy0 && oy < g.oy1;
+        for ox in 0..g.wo {
+            let interior = yin && ox >= g.ox0 && ox < g.ox1;
+            let off = (oy * g.wo + ox) * g.cout;
+            for br in 0..csr.block_rows() {
+                let mut acc = [0.0f32; BLOCK_R];
+                for bi in csr.row_blocks(br) {
+                    let r0 = csr.col_idx[bi] as usize * BLOCK_C;
+                    let blk = &values[bi * BLOCK_LEN..][..BLOCK_LEN];
+                    let ncc = BLOCK_C.min(csr.cols - r0);
+                    for cc in 0..ncc {
+                        let r = r0 + cc;
+                        let (ky, kx, ic) =
+                            (rtab[3 * r] as usize, rtab[3 * r + 1] as usize, rtab[3 * r + 2] as usize);
+                        let xv = if interior {
+                            x[((oy * s + ky - g.ph) * g.w + (ox * s + kx - g.pw)) * cin + ic]
+                        } else {
+                            let iy = (oy * s + ky) as isize - g.ph as isize;
+                            let ix = (ox * s + kx) as isize - g.pw as isize;
+                            if iy < 0 || iy >= g.h as isize || ix < 0 || ix >= g.w as isize {
+                                continue;
+                            }
+                            x[((iy as usize) * g.w + ix as usize) * cin + ic]
+                        };
+                        for (rr, a) in acc.iter_mut().enumerate() {
+                            *a += blk[rr * BLOCK_C + cc] * xv;
+                        }
+                    }
+                }
+                let oc0 = br * BLOCK_R;
+                let nr = BLOCK_R.min(g.cout - oc0);
+                out[off + oc0..][..nr].copy_from_slice(&acc[..nr]);
+            }
+        }
+    }
+}
+
+/// Blocked-CSR sparse matmul (`[m, cols] @ packed -> [m, rows]`), the
+/// dense head counterpart of [`sparse_conv2d`]: per output element the
+/// chain is ascending stored columns, bit-identical to masked-dense.
+fn sparse_matmul(a: &Tensor, csr: &Bcsr, values: &[f32], scratch: &mut Scratch) -> Tensor {
+    let _s = crate::obs::trace::span("refback.sparse_matmul");
+    let (m, kdim) = (a.shape[0], a.shape[1]);
+    debug_assert_eq!(kdim, csr.cols);
+    let n = csr.rows;
+    let mut out = scratch.take_full(m * n);
+    for mi in 0..m {
+        let arow = &a.data[mi * kdim..][..kdim];
+        let orow = &mut out[mi * n..][..n];
+        for br in 0..csr.block_rows() {
+            let mut acc = [0.0f32; BLOCK_R];
+            for bi in csr.row_blocks(br) {
+                let r0 = csr.col_idx[bi] as usize * BLOCK_C;
+                let blk = &values[bi * BLOCK_LEN..][..BLOCK_LEN];
+                let ncc = BLOCK_C.min(kdim - r0);
+                for cc in 0..ncc {
+                    let av = arow[r0 + cc];
+                    for (rr, accv) in acc.iter_mut().enumerate() {
+                        *accv += blk[rr * BLOCK_C + cc] * av;
+                    }
+                }
+            }
+            let c0 = br * BLOCK_R;
+            let nr = BLOCK_R.min(n - c0);
+            orow[c0..c0 + nr].copy_from_slice(&acc[..nr]);
+        }
+    }
+    Tensor::new(vec![m, n], out)
+}
+
+/// Recover the integer activation codes of an exact `act_quant` image:
+/// the quant scale is the tensor max (the max element quantizes to
+/// itself), so `round(v / s_a · na)` reproduces each element's code
+/// exactly.  Returns `(codes, s_a)`; an all-zero tensor recovers scale
+/// 0 and all-zero codes.
+fn act_codes(x: &[f32], bits_a: f32, scratch: &mut Scratch) -> (Vec<u32>, f32) {
+    let na = (bits_a.exp2() - 1.0).max(1.0);
+    let mut s = 0.0f32;
+    for &v in x {
+        s = s.max(v.abs());
+    }
+    let mut codes = scratch.take_u32(x.len());
+    if s > 0.0 {
+        for (c, &v) in codes.iter_mut().zip(x) {
+            *c = ((v / s).clamp(0.0, 1.0) * na).round() as u32;
+        }
+    }
+    (codes, s)
+}
+
+/// int8 conv: integer weight codes x recovered activation codes, i32
+/// accumulation in the same ascending stored-entry order, one f32
+/// rescale (`acc · scale_w · s_a / na`) per output element.
+#[allow(clippy::too_many_arguments)]
+fn qconv2d(
+    x: &Tensor,
+    csr: &Bcsr,
+    codes_w: &[i8],
+    scale_w: f32,
+    k: usize,
+    stride: usize,
+    bits_a: f32,
+    threads: usize,
+    scratch: &mut Scratch,
+) -> Result<Tensor> {
+    let _s = crate::obs::trace::span("refback.qconv2d");
+    let (b, h, w, cin) = kernels::dims4(x)?;
+    ensure!(
+        csr.cols == k * k * cin,
+        "int8 conv: csr has {} columns, geometry needs {}",
+        csr.cols,
+        k * k * cin
+    );
+    let g = ConvGeom::new(b, h, w, cin, k, csr.rows, stride);
+    let na = (bits_a.exp2() - 1.0).max(1.0);
+    let (ac, s_a) = act_codes(&x.data, bits_a, scratch);
+    let f = scale_w * (s_a / na);
+    let rtab = conv_rtab(csr.cols, k, cin, scratch);
+    let mut out = scratch.take_full(g.b * g.out_len());
+    let flops = g.ho * g.wo * csr.nblocks() * BLOCK_LEN;
+    pool::for_each_item(threads, flops, &mut out, g.out_len(), |bi, chunk| {
+        qconv2d_item(&g, csr, codes_w, f, &rtab, &ac[bi * g.in_len()..][..g.in_len()], chunk);
+    });
+    scratch.recycle_u32(ac);
+    scratch.recycle_u32(rtab);
+    Ok(Tensor::new(vec![g.b, g.ho, g.wo, g.cout], out))
+}
+
+fn qconv2d_item(
+    g: &ConvGeom,
+    csr: &Bcsr,
+    codes_w: &[i8],
+    f: f32,
+    rtab: &[u32],
+    ac: &[u32],
+    out: &mut [f32],
+) {
+    let (s, cin) = (g.stride, g.cin);
+    for oy in 0..g.ho {
+        let yin = oy >= g.oy0 && oy < g.oy1;
+        for ox in 0..g.wo {
+            let interior = yin && ox >= g.ox0 && ox < g.ox1;
+            let off = (oy * g.wo + ox) * g.cout;
+            for br in 0..csr.block_rows() {
+                let mut acc = [0i32; BLOCK_R];
+                for bi in csr.row_blocks(br) {
+                    let r0 = csr.col_idx[bi] as usize * BLOCK_C;
+                    let blk = &codes_w[bi * BLOCK_LEN..][..BLOCK_LEN];
+                    let ncc = BLOCK_C.min(csr.cols - r0);
+                    for cc in 0..ncc {
+                        let r = r0 + cc;
+                        let (ky, kx, ic) =
+                            (rtab[3 * r] as usize, rtab[3 * r + 1] as usize, rtab[3 * r + 2] as usize);
+                        let av = if interior {
+                            ac[((oy * s + ky - g.ph) * g.w + (ox * s + kx - g.pw)) * cin + ic]
+                        } else {
+                            let iy = (oy * s + ky) as isize - g.ph as isize;
+                            let ix = (ox * s + kx) as isize - g.pw as isize;
+                            if iy < 0 || iy >= g.h as isize || ix < 0 || ix >= g.w as isize {
+                                continue;
+                            }
+                            ac[((iy as usize) * g.w + ix as usize) * cin + ic]
+                        } as i32;
+                        for (rr, a) in acc.iter_mut().enumerate() {
+                            *a += blk[rr * BLOCK_C + cc] as i32 * av;
+                        }
+                    }
+                }
+                let oc0 = br * BLOCK_R;
+                let nr = BLOCK_R.min(g.cout - oc0);
+                for (a, &v) in out[off + oc0..][..nr].iter_mut().zip(&acc[..nr]) {
+                    *a = v as f32 * f;
+                }
+            }
+        }
+    }
+}
+
+/// int8 matmul for the dense heads: same code recovery and rescale as
+/// [`qconv2d`], serial (head matrices are tiny).
+fn qmatmul(
+    a: &Tensor,
+    csr: &Bcsr,
+    codes_w: &[i8],
+    scale_w: f32,
+    bits_a: f32,
+    scratch: &mut Scratch,
+) -> Tensor {
+    let _s = crate::obs::trace::span("refback.qmatmul");
+    let (m, kdim) = (a.shape[0], a.shape[1]);
+    debug_assert_eq!(kdim, csr.cols);
+    let n = csr.rows;
+    let na = (bits_a.exp2() - 1.0).max(1.0);
+    let (ac, s_a) = act_codes(&a.data, bits_a, scratch);
+    let f = scale_w * (s_a / na);
+    let mut out = scratch.take_full(m * n);
+    for mi in 0..m {
+        let arow = &ac[mi * kdim..][..kdim];
+        let orow = &mut out[mi * n..][..n];
+        for br in 0..csr.block_rows() {
+            let mut acc = [0i32; BLOCK_R];
+            for bi in csr.row_blocks(br) {
+                let r0 = csr.col_idx[bi] as usize * BLOCK_C;
+                let blk = &codes_w[bi * BLOCK_LEN..][..BLOCK_LEN];
+                let ncc = BLOCK_C.min(kdim - r0);
+                for cc in 0..ncc {
+                    let av = arow[r0 + cc] as i32;
+                    for (rr, accv) in acc.iter_mut().enumerate() {
+                        *accv += blk[rr * BLOCK_C + cc] as i32 * av;
+                    }
+                }
+            }
+            let c0 = br * BLOCK_R;
+            let nr = BLOCK_R.min(n - c0);
+            for (o, &v) in orow[c0..c0 + nr].iter_mut().zip(&acc[..nr]) {
+                *o = v as f32 * f;
+            }
+        }
+    }
+    scratch.recycle_u32(ac);
+    Tensor::new(vec![m, n], out)
+}
+
+/// Depthwise conv over compacted channels: each live output channel
+/// reads its mapped live input position (`in_pos`, -1 = the input
+/// channel is dead and the output is `+0.0` pre-bias), taps ascending —
+/// the dense per-channel chain restricted to the live pair.
+fn dwconv_mapped(
+    x: &Tensor,
+    w: &Tensor,
+    in_pos: &[i32],
+    stride: usize,
+    threads: usize,
+    scratch: &mut Scratch,
+) -> Result<Tensor> {
+    let _s = crate::obs::trace::span("refback.dwconv_mapped");
+    let (b, h, wd, cin) = kernels::dims4(x)?;
+    let (k, cout) = (w.shape[0], w.shape[3]);
+    ensure!(in_pos.len() == cout, "dw map covers {} channels, weight has {cout}", in_pos.len());
+    let g = ConvGeom::new(b, h, wd, cin, k, cout, stride);
+    let mut out = scratch.take_full(g.b * g.out_len());
+    let flops = g.ho * g.wo * cout * k * k;
+    pool::for_each_item(threads, flops, &mut out, g.out_len(), |bi, chunk| {
+        dwconv_mapped_item(&g, &w.data, in_pos, &x.data[bi * g.in_len()..][..g.in_len()], chunk);
+    });
+    Ok(Tensor::new(vec![g.b, g.ho, g.wo, g.cout], out))
+}
+
+fn dwconv_mapped_item(g: &ConvGeom, w: &[f32], in_pos: &[i32], x: &[f32], out: &mut [f32]) {
+    let (s, k, cin, cout) = (g.stride, g.k, g.cin, g.cout);
+    for oy in 0..g.ho {
+        for ox in 0..g.wo {
+            let off = (oy * g.wo + ox) * cout;
+            for (ocl, &p) in in_pos.iter().enumerate() {
+                if p < 0 {
+                    out[off + ocl] = 0.0;
+                    continue;
+                }
+                let ic = p as usize;
+                let mut acc = 0.0f32;
+                for ky in 0..k {
+                    let iy = (oy * s + ky) as isize - g.ph as isize;
+                    if iy < 0 || iy >= g.h as isize {
+                        continue;
+                    }
+                    for kx in 0..k {
+                        let ix = (ox * s + kx) as isize - g.pw as isize;
+                        if ix < 0 || ix >= g.w as isize {
+                            continue;
+                        }
+                        acc += w[(ky * k + kx) * cout + ocl]
+                            * x[((iy as usize) * g.w + ix as usize) * cin + ic];
+                    }
+                }
+                out[off + ocl] = acc;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Property tests: packed kernels == masked-dense, bit for bit (f32) or
+// within tolerance (int8), at every thread count
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn cmp_block_geometry_matches_kernel_tiles() {
+        // The packed block shape IS the register tile shape; if either
+        // side changes, packing must change with it.
+        assert_eq!(BLOCK_R, kernels::MR);
+        assert_eq!(BLOCK_C, kernels::NR);
+    }
+
+    fn rand_tensor(shape: &[usize], rng: &mut Rng) -> Tensor {
+        let data = (0..shape.iter().product::<usize>()).map(|_| rng.normal()).collect();
+        Tensor::new(shape.to_vec(), data)
+    }
+
+    /// Random live subset of `0..full` (never empty — mirrors the
+    /// lowering fallback).
+    fn rand_live(full: usize, rng: &mut Rng) -> Vec<u32> {
+        let mut v: Vec<u32> = (0..full as u32).filter(|_| rng.below(2) == 0).collect();
+        if v.is_empty() {
+            v.push(rng.below(full) as u32);
+        }
+        v
+    }
+
+    /// Fold a full conv weight to its masked-dense form: entries on a
+    /// dead input or output channel become literal +0.0.
+    fn fold_conv_weight(w: &Tensor, in_live: &[u32], out_live: &[u32]) -> Tensor {
+        let (k, cin, cout) = (w.shape[0], w.shape[2], w.shape[3]);
+        let in_dead: Vec<bool> = (0..cin).map(|c| !in_live.contains(&(c as u32))).collect();
+        let out_dead: Vec<bool> = (0..cout).map(|c| !out_live.contains(&(c as u32))).collect();
+        let mut folded = w.clone();
+        for tap in 0..k * k {
+            for ic in 0..cin {
+                for oc in 0..cout {
+                    if in_dead[ic] || out_dead[oc] {
+                        folded.data[(tap * cin + ic) * cout + oc] = 0.0;
+                    }
+                }
+            }
+        }
+        folded
+    }
+
+    /// Pack the compacted live x live matrix of a folded conv weight.
+    fn pack_conv(
+        w_folded: &Tensor,
+        in_live: &[u32],
+        out_live: &[u32],
+    ) -> (Bcsr, Vec<f32>) {
+        let (k, cin, cout) = (w_folded.shape[0], w_folded.shape[2], w_folded.shape[3]);
+        let (nin, nout) = (in_live.len(), out_live.len());
+        let mut vals = Vec::new();
+        let csr = Bcsr::build(
+            nout,
+            k * k * nin,
+            |ocl, r| {
+                let (tap, icl) = (r / nin, r % nin);
+                w_folded.data[(tap * cin + in_live[icl] as usize) * cout
+                    + out_live[ocl] as usize]
+            },
+            |v: f32| v != 0.0,
+            &mut vals,
+        );
+        (csr, vals)
+    }
+
+    /// Embed a compacted NHWC map into full channels, +0.0 at dead ones.
+    fn embed(x_live: &Tensor, in_live: &[u32], cin_full: usize) -> Tensor {
+        let (b, h, w, c) = (x_live.shape[0], x_live.shape[1], x_live.shape[2], x_live.shape[3]);
+        let mut full = Tensor::zeros(&[b, h, w, cin_full]);
+        for p in 0..b * h * w {
+            for (cl, &ic) in in_live.iter().enumerate() {
+                full.data[p * cin_full + ic as usize] = x_live.data[p * c + cl];
+            }
+        }
+        full
+    }
+
+    /// Restrict a full NHWC map to its live channels.
+    fn restrict(x_full: &Tensor, out_live: &[u32]) -> Tensor {
+        let (b, h, w, c) = (x_full.shape[0], x_full.shape[1], x_full.shape[2], x_full.shape[3]);
+        let mut data = Vec::with_capacity(b * h * w * out_live.len());
+        for p in 0..b * h * w {
+            for &oc in out_live {
+                data.push(x_full.data[p * c + oc as usize]);
+            }
+        }
+        Tensor::new(vec![b, h, w, out_live.len()], data)
+    }
+
+    fn conv_case(v: &[usize]) -> Option<(usize, usize, usize, usize, usize, usize, usize, u64)> {
+        if v.len() < 8 {
+            return None;
+        }
+        let b = v[0] % 2 + 1;
+        let h = v[1] % 6 + 3;
+        let w = v[2] % 6 + 3;
+        let cin = v[3] % 7 + 2;
+        let cout = v[4] % 19 + 2; // crosses the BLOCK_R=4 boundary
+        let k = [1, 3, 5][v[5] % 3];
+        let stride = v[6] % 2 + 1;
+        Some((b, h, w, cin, cout, k, stride, v[7] as u64))
+    }
+
+    fn gen_dims(r: &mut Rng) -> Vec<usize> {
+        (0..8).map(|_| r.below(1000)).collect()
+    }
+
+    #[test]
+    fn prop_sparse_conv2d_matches_masked_dense_bitwise() {
+        prop::check("sparse conv2d == masked dense", 50, gen_dims, |v| {
+            let Some((b, h, w, cin, cout, k, s, seed)) = conv_case(v) else {
+                return Ok(());
+            };
+            let mut rng = Rng::new(seed ^ 0x5bc5);
+            let in_live = rand_live(cin, &mut rng);
+            let out_live = rand_live(cout, &mut rng);
+            let x_live = rand_tensor(&[b, h, w, in_live.len()], &mut rng);
+            let wt = rand_tensor(&[k, k, cin, cout], &mut rng);
+            let folded = fold_conv_weight(&wt, &in_live, &out_live);
+            let (csr, vals) = pack_conv(&folded, &in_live, &out_live);
+            let x_full = embed(&x_live, &in_live, cin);
+            let want = restrict(&kernels::naive_conv2d(&x_full, &folded, s).unwrap(), &out_live);
+            for threads in [1usize, 2, 3] {
+                let mut sc = Scratch::default();
+                let got = sparse_conv2d(&x_live, &csr, &vals, k, s, threads, &mut sc).unwrap();
+                if got.shape != want.shape || got.data != want.data {
+                    return Err(format!(
+                        "sparse conv mismatch at {threads} threads (b={b} h={h} w={w} cin={cin} \
+                         cout={cout} k={k} s={s} live {}x{})",
+                        in_live.len(),
+                        out_live.len()
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_sparse_matmul_matches_masked_dense_bitwise() {
+        prop::check("sparse matmul == masked dense", 60, gen_dims, |v| {
+            if v.len() < 5 {
+                return Ok(());
+            }
+            let m = v[0] % 9 + 1;
+            let kdim = v[1] % 33 + 2;
+            let n = v[2] % 21 + 2;
+            let mut rng = Rng::new(v[3] as u64 ^ 0x9a7);
+            let in_live = rand_live(kdim, &mut rng);
+            let out_live = rand_live(n, &mut rng);
+            let a_live = rand_tensor(&[m, in_live.len()], &mut rng);
+            let wt = rand_tensor(&[kdim, n], &mut rng);
+            let in_dead: Vec<bool> = (0..kdim).map(|c| !in_live.contains(&(c as u32))).collect();
+            let out_dead: Vec<bool> = (0..n).map(|c| !out_live.contains(&(c as u32))).collect();
+            let mut folded = wt.clone();
+            for ki in 0..kdim {
+                for ni in 0..n {
+                    if in_dead[ki] || out_dead[ni] {
+                        folded.data[ki * n + ni] = 0.0;
+                    }
+                }
+            }
+            let mut vals = Vec::new();
+            let csr = Bcsr::build(
+                out_live.len(),
+                in_live.len(),
+                |ocl, r| folded.data[in_live[r] as usize * n + out_live[ocl] as usize],
+                |x: f32| x != 0.0,
+                &mut vals,
+            );
+            // Embed a into full kdim (dead inputs +0.0), run dense, restrict.
+            let mut a_full = Tensor::zeros(&[m, kdim]);
+            for mi in 0..m {
+                for (cl, &ic) in in_live.iter().enumerate() {
+                    a_full.data[mi * kdim + ic as usize] = a_live.data[mi * in_live.len() + cl];
+                }
+            }
+            let dense = kernels::naive_matmul(&a_full, &folded);
+            let mut want = Vec::with_capacity(m * out_live.len());
+            for mi in 0..m {
+                for &oc in &out_live {
+                    want.push(dense.data[mi * n + oc as usize]);
+                }
+            }
+            let mut sc = Scratch::default();
+            let got = sparse_matmul(&a_live, &csr, &vals, &mut sc);
+            if got.data != want {
+                return Err(format!("sparse matmul mismatch (m={m} k={kdim} n={n})"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_dwconv_mapped_matches_masked_dense_bitwise() {
+        prop::check("dw mapped == masked dense", 40, gen_dims, |v| {
+            let Some((b, h, w, c, _, k, s, seed)) = conv_case(v) else {
+                return Ok(());
+            };
+            let mut rng = Rng::new(seed ^ 0xd3ad);
+            let in_live = rand_live(c, &mut rng);
+            let out_live = rand_live(c, &mut rng);
+            let x_live = rand_tensor(&[b, h, w, in_live.len()], &mut rng);
+            let wt = rand_tensor(&[k, k, 1, c], &mut rng);
+            // Compact to live outputs; dead-out channels don't exist here.
+            let mut wdata = Vec::with_capacity(k * k * out_live.len());
+            for tap in 0..k * k {
+                for &oc in &out_live {
+                    wdata.push(wt.data[tap * c + oc as usize]);
+                }
+            }
+            let w_cmp = Tensor::new(vec![k, k, 1, out_live.len()], wdata);
+            let in_pos: Vec<i32> = out_live
+                .iter()
+                .map(|&oc| in_live.iter().position(|&ic| ic == oc).map_or(-1, |p| p as i32))
+                .collect();
+            // Dense reference: embed input (dead channels +0.0), dwconv
+            // with the full weight, restrict outputs.
+            let x_full = embed(&x_live, &in_live, c);
+            let full = kernels::naive_dwconv2d(&x_full, &wt, s).unwrap();
+            let want = restrict(&full, &out_live);
+            for threads in [1usize, 2] {
+                let mut sc = Scratch::default();
+                let got = dwconv_mapped(&x_live, &w_cmp, &in_pos, s, threads, &mut sc).unwrap();
+                if got.shape != want.shape || got.data != want.data {
+                    return Err(format!(
+                        "dw mapped mismatch at {threads} threads (b={b} h={h} w={w} c={c} k={k} \
+                         s={s})"
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_qmatmul_tracks_fake_quant_within_tolerance() {
+        prop::check("qmatmul ~= fake-quant dense", 40, gen_dims, |v| {
+            if v.len() < 5 {
+                return Ok(());
+            }
+            let m = v[0] % 6 + 1;
+            let kdim = v[1] % 40 + 2;
+            let n = v[2] % 21 + 2;
+            let bits_w = (v[3] % 7 + 1) as f32;
+            let bits_a = (v[4] % 8 + 1) as f32;
+            let mut rng = Rng::new(v[3] as u64 ^ 0x111);
+            // An exact act_quant image (nonnegative pre-image, as produced
+            // by relu/gap upstream).
+            let mut a = rand_tensor(&[m, kdim], &mut rng);
+            for x in &mut a.data {
+                *x = x.abs();
+            }
+            kernels::act_quant_inplace(&mut a, bits_a);
+            let raw = rand_tensor(&[kdim, n], &mut rng);
+            let wq = crate::models::host_weight_quant(&raw, bits_w);
+            let nw = (2f32.powf(bits_w) - 1.0).max(1.0);
+            let (tmax, wmax) = crate::models::weight_quant_scales(&raw.data);
+            let mut codes = Vec::new();
+            let csr = Bcsr::build(
+                n,
+                kdim,
+                |oc, r| {
+                    let tn = raw.data[r * n + oc].tanh() / (2.0 * tmax) + 0.5;
+                    (2.0 * (tn * nw).round() - nw) as i8
+                },
+                |c| c != 0,
+                &mut codes,
+            );
+            let mut sc = Scratch::default();
+            let got = qmatmul(&a, &csr, &codes, wmax / nw, bits_a, &mut sc);
+            let want = kernels::naive_matmul(&a, &wq);
+            let s_a = a.data.iter().fold(0.0f32, |s, &x| s.max(x.abs()));
+            let tol = 1e-5 + kdim as f32 * wmax * s_a * 1e-5;
+            for (oc, (&g, &d)) in got.data.iter().zip(&want.data).enumerate() {
+                if (g - d).abs() > tol {
+                    return Err(format!(
+                        "qmatmul off at {oc}: {g} vs {d} (tol {tol}, m={m} k={kdim} n={n} \
+                         bw={bits_w} ba={bits_a})"
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_qconv2d_tracks_fake_quant_and_is_thread_invariant() {
+        prop::check("qconv2d ~= fake-quant dense, thread-invariant", 25, gen_dims, |v| {
+            let Some((b, h, w, cin, cout, k, s, seed)) = conv_case(v) else {
+                return Ok(());
+            };
+            let bits_w = (v[0] % 7 + 1) as f32;
+            let bits_a = (v[1] % 8 + 1) as f32;
+            let mut rng = Rng::new(seed ^ 0x4b1d);
+            let mut x = rand_tensor(&[b, h, w, cin], &mut rng);
+            for xv in &mut x.data {
+                *xv = xv.abs();
+            }
+            kernels::act_quant_inplace(&mut x, bits_a);
+            let raw = rand_tensor(&[k, k, cin, cout], &mut rng);
+            let wq = crate::models::host_weight_quant(&raw, bits_w);
+            let nw = (2f32.powf(bits_w) - 1.0).max(1.0);
+            let (tmax, wmax) = crate::models::weight_quant_scales(&raw.data);
+            let mut codes = Vec::new();
+            let csr = Bcsr::build(
+                cout,
+                k * k * cin,
+                |oc, r| {
+                    let tn = raw.data[r * cout + oc].tanh() / (2.0 * tmax) + 0.5;
+                    (2.0 * (tn * nw).round() - nw) as i8
+                },
+                |c| c != 0,
+                &mut codes,
+            );
+            let want = kernels::naive_conv2d(&x, &wq, s).unwrap();
+            let s_a = x.data.iter().fold(0.0f32, |m, &xv| m.max(xv.abs()));
+            let tol = 1e-5 + (k * k * cin) as f32 * wmax * s_a * 1e-5;
+            let mut sc = Scratch::default();
+            let one = qconv2d(&x, &csr, &codes, wmax / nw, k, s, bits_a, 1, &mut sc).unwrap();
+            for (i, (&g, &d)) in one.data.iter().zip(&want.data).enumerate() {
+                if (g - d).abs() > tol {
+                    return Err(format!(
+                        "qconv2d off at {i}: {g} vs {d} (tol {tol}, cin={cin} cout={cout} k={k})"
+                    ));
+                }
+            }
+            for threads in [2usize, 3] {
+                let mut sc = Scratch::default();
+                let got =
+                    qconv2d(&x, &csr, &codes, wmax / nw, k, s, bits_a, threads, &mut sc).unwrap();
+                if got.data != one.data {
+                    return Err(format!("qconv2d changed bits at {threads} threads"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn rmsnorm_live_matches_dense_lanes_on_embedded_map() {
+        let mut rng = Rng::new(0x60d);
+        for (cfull, h, w) in [(8usize, 3usize, 3usize), (11, 4, 2), (5, 2, 5)] {
+            let out_live = rand_live(cfull, &mut rng);
+            let live = out_live.len() as f32;
+            let x_live = rand_tensor(&[2, h, w, out_live.len()], &mut rng);
+            // Dense path: embedded map (dead channels +0.0), flat lanes.
+            let mut full = embed(&x_live, &out_live, cfull);
+            kernels::rmsnorm_inplace(&mut full, live);
+            let want = restrict(&full, &out_live);
+            let mut got = x_live.clone();
+            rmsnorm_live_inplace(&mut got, &out_live, cfull, live);
+            assert_eq!(got.data, want.data, "cfull={cfull} live={}", out_live.len());
+        }
+    }
+
+    #[test]
+    fn act_codes_recover_exactly() {
+        let mut rng = Rng::new(77);
+        for bits in [1.0f32, 2.0, 4.0, 8.0] {
+            let na = (bits.exp2() - 1.0).max(1.0);
+            let mut t = rand_tensor(&[4, 9], &mut rng);
+            for v in &mut t.data {
+                *v = v.abs();
+            }
+            kernels::act_quant_inplace(&mut t, bits);
+            let mut sc = Scratch::default();
+            let (codes, s_a) = act_codes(&t.data, bits, &mut sc);
+            // Rebuild every element from its code: must be bit-exact.
+            for (&c, &v) in codes.iter().zip(&t.data) {
+                assert!(c as f32 <= na);
+                let rebuilt = c as f32 / na * s_a;
+                assert_eq!(rebuilt.to_bits(), v.to_bits(), "bits={bits} code={c}");
+            }
+        }
+    }
+}

@@ -40,9 +40,12 @@ use super::scratch::Scratch;
 use crate::tensor::Tensor;
 
 /// Output pixels per register tile (conv) / rows per tile (matmul).
-const MR: usize = 4;
-/// Output channels per register tile.
-const NR: usize = 8;
+/// `models::compressed::BLOCK_R` must stay equal to this (pinned by a
+/// test in `refback::compressed`): packed sparse blocks are sized to
+/// the register tiles.
+pub(crate) const MR: usize = 4;
+/// Output channels per register tile (`models::compressed::BLOCK_C`).
+pub(crate) const NR: usize = 8;
 
 /// XLA SAME padding: total = max((out-1)·stride + k - in, 0), low = total/2.
 pub fn same_pad_lo(inp: usize, out: usize, k: usize, stride: usize) -> usize {
@@ -144,11 +147,11 @@ impl ConvGeom {
         Ok(ConvGeom::new(b, h, wd, c, k, c, stride))
     }
 
-    fn in_len(&self) -> usize {
+    pub(crate) fn in_len(&self) -> usize {
         self.h * self.w * self.cin
     }
 
-    fn out_len(&self) -> usize {
+    pub(crate) fn out_len(&self) -> usize {
         self.ho * self.wo * self.cout
     }
 }

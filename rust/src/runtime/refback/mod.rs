@@ -67,6 +67,7 @@
 //! gradient-check unit test pins the derivation against finite
 //! differences.
 
+mod compressed;
 pub mod kernels;
 pub mod pool;
 pub mod scratch;
@@ -133,6 +134,14 @@ impl Backend for RefBackend {
 
     fn upload(&self, _t: &Tensor) -> Result<DeviceBuffer> {
         Err(ResidencyUnsupported("ref backend keeps all state host-side (no device)".into()).into())
+    }
+
+    fn load_compressed(
+        &self,
+        cm: &Arc<crate::models::compressed::CompressedModel>,
+        tag: &str,
+    ) -> Result<Box<dyn GraphExec>> {
+        compressed::load(cm, tag, self.stats.clone(), self.threads)
     }
 }
 

@@ -38,6 +38,7 @@ use std::time::Instant;
 use anyhow::{ensure, Context, Result};
 
 use crate::data::Dataset;
+use crate::models::compressed::CompressedModel;
 use crate::models::{ArchManifest, ModelState};
 use crate::runtime::{self, DeviceBuffer, Engine, Executable};
 use crate::tensor::{argmax_slice, Tensor};
@@ -156,6 +157,10 @@ pub struct StageRunner<'e> {
     /// not one per request.  `Cell` because a `StageRunner` is a
     /// per-thread object (its executables already pin it to one engine).
     resident_ok: Cell<bool>,
+    /// Lowered packed form when the runner executes compressed graphs.
+    /// Compressed graphs bake params/masks/qbits, take `x` as their only
+    /// operand, and never use the resident-prefix transport.
+    compressed: Option<Arc<CompressedModel>>,
 }
 
 impl<'e> StageRunner<'e> {
@@ -166,12 +171,37 @@ impl<'e> StageRunner<'e> {
         state: Arc<ModelState>,
         max_batch: usize,
     ) -> Result<StageRunner<'e>> {
+        Self::build(engine, state, max_batch, None)
+    }
+
+    /// Lower `state` to its packed compressed form and load the staged
+    /// graphs over it.  Same exit semantics and batch ladder as the dense
+    /// runner; only the per-stage kernels differ.
+    pub fn new_compressed(
+        engine: &'e Engine,
+        state: Arc<ModelState>,
+        max_batch: usize,
+    ) -> Result<StageRunner<'e>> {
+        let cm = Arc::new(
+            CompressedModel::lower(&state).context("lowering model for compressed serving")?,
+        );
+        Self::build(engine, state, max_batch, Some(cm))
+    }
+
+    fn build(
+        engine: &'e Engine,
+        state: Arc<ModelState>,
+        max_batch: usize,
+        cm: Option<Arc<CompressedModel>>,
+    ) -> Result<StageRunner<'e>> {
         let arch = &state.arch;
-        let b1 = [
-            engine.load_graph(arch, "stage1")?,
-            engine.load_graph(arch, "stage2")?,
-            engine.load_graph(arch, "stage3")?,
-        ];
+        let load = |tag: &str| -> Result<Arc<Executable>> {
+            match &cm {
+                Some(cm) => engine.load_compressed_graph(cm, tag),
+                None => engine.load_graph(arch, tag),
+            }
+        };
+        let b1 = [load("stage1")?, load("stage2")?, load("stage3")?];
         // Walk the declared batch ladder downward: a half-lowered batch
         // (e.g. stage1_b8 present but stage2_b8 missing from partially
         // regenerated artifacts) must fall back to the next smaller fully
@@ -183,7 +213,18 @@ impl<'e> StageRunner<'e> {
             if best <= 1 {
                 break;
             }
-            match Self::load_batched(engine, arch, best) {
+            let loaded = (|| -> Result<[Arc<Executable>; 3]> {
+                let mut exes = Vec::with_capacity(3);
+                for s in 1..=3u8 {
+                    let tag = ArchManifest::stage_graph_tag(s, best);
+                    exes.push(
+                        load(&tag)
+                            .with_context(|| format!("loading batched stage graph `{tag}`"))?,
+                    );
+                }
+                Ok([exes[0].clone(), exes[1].clone(), exes[2].clone()])
+            })();
+            match loaded {
                 Ok(exes) => {
                     batched = Some(BatchedStages { batch: best, exes });
                     break;
@@ -201,11 +242,17 @@ impl<'e> StageRunner<'e> {
         let qba = Tensor::scalar(state.qbits.act);
         // Hoist the invariant prefix onto the device once; per request only
         // the input rows are uploaded.  Unavailable -> literal fallback.
-        let resident = match runtime::upload_eval_prefix(engine, &state) {
-            Ok(prefix) => Some(prefix),
-            Err(e) => {
-                runtime::note_residency_fallback("serve", &e);
-                None
+        // Compressed graphs have no prefix at all: everything invariant is
+        // baked into the packed layers.
+        let resident = if cm.is_some() {
+            None
+        } else {
+            match runtime::upload_eval_prefix(engine, &state) {
+                Ok(prefix) => Some(prefix),
+                Err(e) => {
+                    runtime::note_residency_fallback("serve", &e);
+                    None
+                }
             }
         };
         let resident_ok = Cell::new(resident.is_some());
@@ -217,7 +264,13 @@ impl<'e> StageRunner<'e> {
             qba,
             resident,
             resident_ok,
+            compressed: cm,
         })
+    }
+
+    /// The packed form this runner executes, when lowered.
+    pub fn compressed_model(&self) -> Option<&Arc<CompressedModel>> {
+        self.compressed.as_ref()
     }
 
     /// Force the legacy literal transport (equivalence tests and the
@@ -229,23 +282,6 @@ impl<'e> StageRunner<'e> {
     /// Whether stage executions currently run over the resident prefix.
     pub fn residency_active(&self) -> bool {
         self.resident_ok.get() && self.resident.is_some()
-    }
-
-    fn load_batched(
-        engine: &Engine,
-        arch: &Arc<ArchManifest>,
-        batch: usize,
-    ) -> Result<[Arc<Executable>; 3]> {
-        let mut exes = Vec::with_capacity(3);
-        for s in 1..=3u8 {
-            let tag = ArchManifest::stage_graph_tag(s, batch);
-            exes.push(
-                engine
-                    .load_graph(arch, &tag)
-                    .with_context(|| format!("loading batched stage graph `{tag}`"))?,
-            );
-        }
-        Ok([exes[0].clone(), exes[1].clone(), exes[2].clone()])
     }
 
     /// The stage batch the runner actually executes at (1 = unbatched).
@@ -281,6 +317,11 @@ impl<'e> StageRunner<'e> {
     /// flips the sticky switch and re-runs the same call on the literal
     /// path, so one bad transport costs one retry ever.
     fn run_stage(&self, exe: &Executable, x: &Tensor, min_outputs: usize) -> Result<Vec<Tensor>> {
+        if self.compressed.is_some() {
+            // Packed graphs take the batch input alone; params/masks/qbits
+            // no longer exist as operands.
+            return exe.run(&[x]);
+        }
         if self.resident_ok.get() {
             if let Some(prefix) = &self.resident {
                 match self.run_stage_resident(exe, prefix, x, min_outputs) {

@@ -79,6 +79,11 @@ pub struct PoolOpts {
     /// Thread counts never change results — the ref backend is
     /// thread-count invariant by contract.
     pub ref_threads: usize,
+    /// Lower the model to its packed compressed form at worker startup
+    /// and execute the compressed stage graphs (`--compressed`).  Workers
+    /// fail ready if the state cannot be lowered or the backend cannot
+    /// execute packed forms.
+    pub compressed: bool,
 }
 
 impl PoolOpts {
@@ -91,6 +96,7 @@ impl PoolOpts {
             thresholds,
             backend: BackendChoice::Pjrt,
             ref_threads: crate::runtime::default_ref_threads(),
+            compressed: false,
         }
     }
 }
@@ -307,9 +313,12 @@ fn worker_main(
         Err(e) => return Err(fail(e)),
     };
     // Arc clone: all workers share one copy of the weights.
-    let runner = match StageRunner::new(&engine, state.clone(), opts.batch.max_batch)
-        .with_context(|| format!("worker {w}: loading staged graphs"))
-    {
+    let made_runner = if opts.compressed {
+        StageRunner::new_compressed(&engine, state.clone(), opts.batch.max_batch)
+    } else {
+        StageRunner::new(&engine, state.clone(), opts.batch.max_batch)
+    };
+    let runner = match made_runner.with_context(|| format!("worker {w}: loading staged graphs")) {
         Ok(r) => {
             lock.lock().unwrap().ready += 1;
             cv.notify_all();

@@ -1,0 +1,180 @@
+//! Hermetic integration tests for compressed execution: the lowered
+//! sparse/int8 graphs (`Engine::load_compressed_graph`, serve's
+//! `--compressed` path) against the dense reference graphs on the
+//! built-in mini_vgg.
+//!
+//! Parity contract under test (see runtime/refback/compressed.rs):
+//! - pruned fp32 leaves execute *bit-identically* to the dense masked
+//!   graph, at every thread count and batch decomposition;
+//! - int8 leaves track the dense fake-quant output to tolerance and are
+//!   exactly deterministic across `--ref-threads`;
+//! - a save/load roundtrip of the packed artifact changes nothing.
+
+use std::sync::Arc;
+
+use coc::data::{Dataset, DatasetKind};
+use coc::models::compressed::CompressedModel;
+use coc::models::{builtin_ref_manifest, ModelState, QBits};
+use coc::runtime::Engine;
+use coc::serve::StageRunner;
+use coc::tensor::Tensor;
+use coc::train;
+
+/// Built-in mini_vgg state with every mask slot half-zeroed (a pruned
+/// leaf without the training budget) and the given qbits.
+fn leaf_state(seed: u64, qbits: QBits) -> ModelState {
+    let engine = Engine::new_ref_with_threads(1).unwrap();
+    let arch = builtin_ref_manifest().arch("mini_vgg").unwrap();
+    let mut st = train::init_state(&engine, arch, seed).unwrap();
+    for (mi, m) in st.masks.iter_mut().enumerate() {
+        for (i, v) in m.data.iter_mut().enumerate() {
+            if (i + mi) % 2 == 1 {
+                *v = 0.0;
+            }
+        }
+    }
+    st.qbits = qbits;
+    st
+}
+
+fn eval_input(st: &ModelState, seed: u64) -> (Dataset, Tensor) {
+    let ds = Dataset::generate(DatasetKind::SynthC10, 128, seed, 0);
+    let idx: Vec<usize> = (0..st.arch.eval_batch).collect();
+    let (x, _) = ds.batch(&idx);
+    (ds, x)
+}
+
+fn dense_eval(threads: usize, st: &ModelState, x: &Tensor) -> Vec<Tensor> {
+    let engine = Engine::new_ref_with_threads(threads).unwrap();
+    let exe = engine.load_graph(&st.arch, "eval").unwrap();
+    let qbw = Tensor::scalar(st.qbits.weight);
+    let qba = Tensor::scalar(st.qbits.act);
+    let mut inputs: Vec<&Tensor> = Vec::with_capacity(st.params.len() + st.masks.len() + 3);
+    inputs.extend(st.params.iter());
+    inputs.extend(st.masks.iter());
+    inputs.push(&qbw);
+    inputs.push(&qba);
+    inputs.push(x);
+    exe.run(&inputs).unwrap()
+}
+
+fn compressed_eval(threads: usize, cm: &Arc<CompressedModel>, x: &Tensor) -> Vec<Tensor> {
+    let engine = Engine::new_ref_with_threads(threads).unwrap();
+    engine.load_compressed_graph(cm, "eval").unwrap().run(&[x]).unwrap()
+}
+
+#[test]
+fn ref_pruned_fp32_compressed_eval_is_bitwise_dense() {
+    let st = leaf_state(7, QBits::FP32);
+    let (_ds, x) = eval_input(&st, 3);
+    let cm = Arc::new(CompressedModel::lower(&st).unwrap());
+    assert!(cm.packed_bytes() < CompressedModel::dense_bytes(&st.arch));
+    let want = dense_eval(2, &st, &x);
+    let got = compressed_eval(2, &cm, &x);
+    assert_eq!(want.len(), 3);
+    assert_eq!(got.len(), 3);
+    for (name, (w, g)) in ["logits", "exit1", "exit2"].iter().zip(want.iter().zip(&got)) {
+        assert_eq!(w.shape, g.shape, "{name} shape");
+        assert_eq!(w.data, g.data, "{name}: pruned-fp32 compressed eval must be bit-identical");
+    }
+}
+
+#[test]
+fn ref_int8_compressed_eval_tracks_dense_and_is_thread_invariant() {
+    let st = leaf_state(11, QBits { weight: 2.0, act: 8.0 });
+    let (_ds, x) = eval_input(&st, 5);
+    let cm = Arc::new(CompressedModel::lower(&st).unwrap());
+    // Every conv/dense layer of mini_vgg qualifies for int8 at {2, 8}.
+    assert!(
+        cm.layers.iter().any(|l| l.form.tag() == "int8"),
+        "expected int8-packed layers, got {:?}",
+        cm.layers.iter().map(|l| l.form.tag()).collect::<Vec<_>>()
+    );
+
+    let want = compressed_eval(1, &cm, &x);
+    for threads in [2usize, 4] {
+        let got = compressed_eval(threads, &cm, &x);
+        for (w, g) in want.iter().zip(&got) {
+            assert_eq!(w.data, g.data, "int8 eval changed bits at {threads} threads");
+        }
+    }
+
+    // Tolerance-level agreement with the dense fake-quant graph: the
+    // integer path only differs by f32 accumulation rounding (and the
+    // act-quant code flips it can induce downstream).  Random logits sit
+    // at O(1) relative distance, so 10% cleanly separates broken from ok.
+    let dense = dense_eval(2, &st, &x);
+    for (name, (w, g)) in ["logits", "exit1", "exit2"].iter().zip(dense.iter().zip(&want)) {
+        let scale = w.data.iter().fold(0.0f32, |a, v| a.max(v.abs())).max(1e-6);
+        let diff = w
+            .data
+            .iter()
+            .zip(&g.data)
+            .fold(0.0f32, |a, (x, y)| a.max((x - y).abs()));
+        assert!(
+            diff / scale < 0.1,
+            "{name}: int8 drifted {diff} (scale {scale}) from the dense fake-quant output"
+        );
+    }
+}
+
+#[test]
+fn ref_compressed_stage_composition_matches_eval() {
+    let st = leaf_state(13, QBits::FP32);
+    let (ds, x) = eval_input(&st, 9);
+    let cm = Arc::new(CompressedModel::lower(&st).unwrap());
+    let engine = Engine::new_ref_with_threads(2).unwrap();
+    let s1 = engine.load_compressed_graph(&cm, "stage1").unwrap();
+    let s2 = engine.load_compressed_graph(&cm, "stage2").unwrap();
+    let s3 = engine.load_compressed_graph(&cm, "stage3").unwrap();
+    let eval = engine.load_compressed_graph(&cm, "eval").unwrap().run(&[&x]).unwrap();
+    let nc = st.arch.num_classes;
+    for i in 0..3usize {
+        let (xi, _) = ds.batch(&[i]);
+        let o1 = s1.run(&[&xi]).unwrap();
+        assert_eq!(o1.len(), 2, "stage1 returns [e1, h1]");
+        let o2 = s2.run(&[&o1[1]]).unwrap();
+        assert_eq!(o2.len(), 2, "stage2 returns [e2, h2]");
+        let o3 = s3.run(&[&o2[1]]).unwrap();
+        assert_eq!(o3.len(), 1, "stage3 returns [logits]");
+        // Row i of the batched eval vs the single-row staged pipeline:
+        // kernels are batch-decomposition invariant, so bits must match.
+        assert_eq!(o3[0].data[..], eval[0].data[i * nc..(i + 1) * nc], "logits row {i}");
+        assert_eq!(o1[0].data[..], eval[1].data[i * nc..(i + 1) * nc], "exit1 row {i}");
+        assert_eq!(o2[0].data[..], eval[2].data[i * nc..(i + 1) * nc], "exit2 row {i}");
+    }
+}
+
+#[test]
+fn ref_compressed_roundtrip_serves_identically() {
+    let st = leaf_state(17, QBits { weight: 2.0, act: 8.0 });
+    let (_ds, x) = eval_input(&st, 21);
+    let cm = Arc::new(CompressedModel::lower(&st).unwrap());
+    let path = std::env::temp_dir().join(format!("coc_cmp_roundtrip_{}.cmp", std::process::id()));
+    cm.save(&path).unwrap();
+    let back = Arc::new(CompressedModel::load(&path, st.arch.clone()).unwrap());
+    std::fs::remove_file(&path).ok();
+    let want = compressed_eval(2, &cm, &x);
+    let got = compressed_eval(2, &back, &x);
+    for (w, g) in want.iter().zip(&got) {
+        assert_eq!(w.data, g.data, "save/load roundtrip changed the packed execution");
+    }
+}
+
+#[test]
+fn ref_serve_runner_compressed_matches_dense_pruned_fp32() {
+    let st = Arc::new(leaf_state(19, QBits::FP32));
+    let ds = Dataset::generate(DatasetKind::SynthC10, 64, 23, 0);
+    let engine = Engine::new_ref_with_threads(2).unwrap();
+    // max_batch 8 exercises the batched stage ladder (stage*_b8 graphs)
+    // on both runners; 19 requests leave a ragged tail for the batch-1
+    // fallback path.
+    let dense = StageRunner::new(&engine, st.clone(), 8).unwrap();
+    let packed = StageRunner::new_compressed(&engine, st.clone(), 8).unwrap();
+    assert!(packed.compressed_model().is_some());
+    let xs: Vec<Tensor> = (0..19).map(|i| ds.batch(&[i]).0).collect();
+    let refs: Vec<&Tensor> = xs.iter().collect();
+    let want = dense.infer_many(&refs, 0.6, 0.6).unwrap();
+    let got = packed.infer_many(&refs, 0.6, 0.6).unwrap();
+    assert_eq!(want, got, "compressed serving diverged from dense on a pruned fp32 leaf");
+}
