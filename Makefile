@@ -6,11 +6,12 @@
 #   make verify      tier-1 (release build + cargo test) + pytest python/tests
 #   make bench       rust micro/e2e benches (needs artifacts)
 #   make bench-diff  gate results/ against the committed BENCH_*.json ledgers
+#   make bench-simd  hermetic scalar-vs-SIMD kernel tiers (refback_kernels)
 #   make serve-bench-compressed  hermetic dense-vs-compressed serving comparison
 
 ARTIFACTS := artifacts
 
-.PHONY: artifacts build test verify bench bench-diff serve-bench-compressed
+.PHONY: artifacts build test verify bench bench-diff bench-simd serve-bench-compressed
 
 artifacts:
 	cd python && python -m compile.aot --out ../$(ARTIFACTS)
@@ -35,6 +36,13 @@ verify:
 
 bench: build
 	cd rust && cargo bench
+
+# Hermetic (no artifacts): the refback kernel bench alone, which carries
+# the scalar-vs-SIMD tiers and writes simd_speedup_* into
+# results/refback_kernels.json.  The run also bit-checks every vector
+# path against the scalar walk before timing anything.
+bench-simd:
+	cd rust && cargo bench -- refback_kernels
 
 # Compare the latest results/*.json against the committed BENCH_*.json
 # ledgers; exits nonzero on a regression past per-metric tolerance.

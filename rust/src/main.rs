@@ -15,7 +15,9 @@
 //! --backend pjrt|ref (ref = hermetic pure-rust interpreter, no
 //! artifacts needed — falls back to the built-in mini_vgg manifest),
 //! --ref-threads N (ref kernel thread budget; default available
-//! parallelism, bit-identical results at every N).
+//! parallelism, bit-identical results at every N),
+//! --simd auto|scalar|sse2|avx2|neon (ref kernel ISA path; env
+//! `COC_REF_SIMD`; every path produces identical bits).
 //! Plan-executor flags (chain/exp/toposort): --jobs N runs independent
 //! chain branches on N worker engines; --no-cache disables the
 //! content-addressed stage cache under results/cache/; --lower packs
@@ -91,6 +93,12 @@ fn real_main() -> Result<()> {
     let trace_out = args.get("trace-out").map(std::path::PathBuf::from);
     if trace_out.is_some() {
         coc::obs::trace::enable();
+    }
+    // --simd (any subcommand): pin the ref-backend kernel ISA path,
+    // overriding COC_REF_SIMD.  Purely a performance knob — every path
+    // produces identical bits (pinned by the digest suite).
+    if let Some(v) = args.get("simd") {
+        coc::runtime::refback::simd::set_policy(v)?;
     }
     let result = dispatch(&args);
     if let Some(path) = &trace_out {
@@ -242,7 +250,9 @@ fn print_usage() {
     println!("    (--backend ref interprets feed-forward manifests; builtin arch: mini_vgg.");
     println!("     mini_resnet/mini_mobilenet drivers need the pjrt backend + artifacts.");
     println!("     --ref-threads N caps its kernel threads — results are bit-identical");
-    println!("     at every N; serve/plan workers split the budget automatically.)");
+    println!("     at every N; serve/plan workers split the budget automatically.");
+    println!("     --simd auto|scalar|sse2|avx2|neon pins the kernel ISA path, env");
+    println!("     COC_REF_SIMD — every path produces identical bits.)");
 }
 
 fn cmd_info(args: &Args) -> Result<()> {

@@ -292,6 +292,20 @@ pub fn extract(area: &str, results_dir: &Path) -> Result<BenchArea> {
                         60.0,
                     ),
                     entry("bytes_ratio", pull(&j, &["bytes_ratio"])?, Direction::Lower, 5.0),
+                    // Scalar-vs-SIMD ratios: same process, same operands —
+                    // steadier than raw latency, but still wall-clock.
+                    entry(
+                        "simd_speedup_conv_fwd",
+                        pull(&j, &["simd_speedup_conv_fwd"])?,
+                        Direction::Higher,
+                        40.0,
+                    ),
+                    entry(
+                        "simd_speedup_matmul",
+                        pull(&j, &["simd_speedup_matmul"])?,
+                        Direction::Higher,
+                        40.0,
+                    ),
                 ],
             })
         }

@@ -22,6 +22,12 @@
 //! i32 accumulation is associative, so there is nothing threading can
 //! re-order.
 //!
+//! Block walks dispatch through the shared [`super::simd`] lane ops:
+//! the f32 paths keep one accumulation chain per output row in
+//! ascending stored-column order on every ISA (bit-identical to the
+//! scalar walk), and the int8 path uses widening vector sums freely
+//! because i32 math is order-free.
+//!
 //! Activation codes are *recovered*, not re-derived: lowering admits a
 //! layer to int8 only when its runtime input is an exact `act_quant`
 //! image — post-relu, so the quant scale equals the tensor max and
@@ -44,6 +50,7 @@ use crate::tensor::Tensor;
 use super::kernels::{self, ConvGeom};
 use super::pool;
 use super::scratch::Scratch;
+use super::simd;
 use super::{recycle_cow, GraphKind, RefNet};
 use crate::runtime::{DeviceBuffer, GraphExec, ResidencyUnsupported, StatsCell};
 
@@ -443,6 +450,12 @@ fn conv_rtab(cols: usize, k: usize, cin: usize, scratch: &mut Scratch) -> Vec<u3
     rtab
 }
 
+/// Decode matrix column `r` of a [`conv_rtab`] table back to
+/// `(ky, kx, live input channel)`.
+fn rtab_at(rtab: &[u32], r: usize) -> (usize, usize, usize) {
+    (rtab[3 * r] as usize, rtab[3 * r + 1] as usize, rtab[3 * r + 2] as usize)
+}
+
 /// Blocked-CSR sparse conv2d over a channel-compacted NHWC input.  Each
 /// live output channel's accumulator runs over the stored entries of its
 /// block-row in ascending column order — the dense canonical `(ky, kx,
@@ -496,20 +509,29 @@ fn sparse_conv2d_item(
                     let r0 = csr.col_idx[bi] as usize * BLOCK_C;
                     let blk = &values[bi * BLOCK_LEN..][..BLOCK_LEN];
                     let ncc = BLOCK_C.min(csr.cols - r0);
+                    if interior {
+                        // Every tap is in bounds: gather the window
+                        // values for this block's columns and run the
+                        // shared 4-row lane op.  Each output row's chain
+                        // is still ascending stored columns, so the bits
+                        // cannot move (see simd.rs).
+                        let mut xv = [0.0f32; BLOCK_C];
+                        for (cc, v) in xv[..ncc].iter_mut().enumerate() {
+                            let r = r0 + cc;
+                            let (ky, kx, ic) = rtab_at(rtab, r);
+                            *v = x[((oy * s + ky - g.ph) * g.w + (ox * s + kx - g.pw)) * cin + ic];
+                        }
+                        simd::sparse_block(&mut acc, blk, &xv[..ncc]);
+                        continue;
+                    }
                     for cc in 0..ncc {
-                        let r = r0 + cc;
-                        let (ky, kx, ic) =
-                            (rtab[3 * r] as usize, rtab[3 * r + 1] as usize, rtab[3 * r + 2] as usize);
-                        let xv = if interior {
-                            x[((oy * s + ky - g.ph) * g.w + (ox * s + kx - g.pw)) * cin + ic]
-                        } else {
-                            let iy = (oy * s + ky) as isize - g.ph as isize;
-                            let ix = (ox * s + kx) as isize - g.pw as isize;
-                            if iy < 0 || iy >= g.h as isize || ix < 0 || ix >= g.w as isize {
-                                continue;
-                            }
-                            x[((iy as usize) * g.w + ix as usize) * cin + ic]
-                        };
+                        let (ky, kx, ic) = rtab_at(rtab, r0 + cc);
+                        let iy = (oy * s + ky) as isize - g.ph as isize;
+                        let ix = (ox * s + kx) as isize - g.pw as isize;
+                        if iy < 0 || iy >= g.h as isize || ix < 0 || ix >= g.w as isize {
+                            continue;
+                        }
+                        let xv = x[((iy as usize) * g.w + ix as usize) * cin + ic];
                         for (rr, a) in acc.iter_mut().enumerate() {
                             *a += blk[rr * BLOCK_C + cc] * xv;
                         }
@@ -541,12 +563,7 @@ fn sparse_matmul(a: &Tensor, csr: &Bcsr, values: &[f32], scratch: &mut Scratch) 
                 let r0 = csr.col_idx[bi] as usize * BLOCK_C;
                 let blk = &values[bi * BLOCK_LEN..][..BLOCK_LEN];
                 let ncc = BLOCK_C.min(kdim - r0);
-                for cc in 0..ncc {
-                    let av = arow[r0 + cc];
-                    for (rr, accv) in acc.iter_mut().enumerate() {
-                        *accv += blk[rr * BLOCK_C + cc] * av;
-                    }
-                }
+                simd::sparse_block(&mut acc, blk, &arow[r0..r0 + ncc]);
             }
             let c0 = br * BLOCK_R;
             let nr = BLOCK_R.min(n - c0);
@@ -635,24 +652,26 @@ fn qconv2d_item(
                     let r0 = csr.col_idx[bi] as usize * BLOCK_C;
                     let blk = &codes_w[bi * BLOCK_LEN..][..BLOCK_LEN];
                     let ncc = BLOCK_C.min(csr.cols - r0);
-                    for cc in 0..ncc {
-                        let r = r0 + cc;
-                        let (ky, kx, ic) =
-                            (rtab[3 * r] as usize, rtab[3 * r + 1] as usize, rtab[3 * r + 2] as usize);
-                        let av = if interior {
-                            ac[((oy * s + ky - g.ph) * g.w + (ox * s + kx - g.pw)) * cin + ic]
-                        } else {
-                            let iy = (oy * s + ky) as isize - g.ph as isize;
-                            let ix = (ox * s + kx) as isize - g.pw as isize;
-                            if iy < 0 || iy >= g.h as isize || ix < 0 || ix >= g.w as isize {
-                                continue;
-                            }
-                            ac[((iy as usize) * g.w + ix as usize) * cin + ic]
-                        } as i32;
-                        for (rr, a) in acc.iter_mut().enumerate() {
-                            *a += blk[rr * BLOCK_C + cc] as i32 * av;
+                    // Zero-padded code gather: out-of-bounds taps and
+                    // tail lanes contribute exact 0 products, and i32
+                    // accumulation is order-free, so one widening lane
+                    // op covers interior, border and tail alike.
+                    let mut av = [0i32; BLOCK_C];
+                    for (cc, a) in av[..ncc].iter_mut().enumerate() {
+                        let (ky, kx, ic) = rtab_at(rtab, r0 + cc);
+                        if interior {
+                            let iy = oy * s + ky - g.ph;
+                            let ix = ox * s + kx - g.pw;
+                            *a = ac[(iy * g.w + ix) * cin + ic] as i32;
+                            continue;
+                        }
+                        let iy = (oy * s + ky) as isize - g.ph as isize;
+                        let ix = (ox * s + kx) as isize - g.pw as isize;
+                        if iy >= 0 && iy < g.h as isize && ix >= 0 && ix < g.w as isize {
+                            *a = ac[((iy as usize) * g.w + ix as usize) * cin + ic] as i32;
                         }
                     }
+                    simd::qblock(&mut acc, blk, &av);
                 }
                 let oc0 = br * BLOCK_R;
                 let nr = BLOCK_R.min(g.cout - oc0);
@@ -691,12 +710,11 @@ fn qmatmul(
                 let r0 = csr.col_idx[bi] as usize * BLOCK_C;
                 let blk = &codes_w[bi * BLOCK_LEN..][..BLOCK_LEN];
                 let ncc = BLOCK_C.min(kdim - r0);
-                for cc in 0..ncc {
-                    let av = arow[r0 + cc] as i32;
-                    for (rr, accv) in acc.iter_mut().enumerate() {
-                        *accv += blk[rr * BLOCK_C + cc] as i32 * av;
-                    }
+                let mut av = [0i32; BLOCK_C];
+                for (a, &c) in av[..ncc].iter_mut().zip(&arow[r0..r0 + ncc]) {
+                    *a = c as i32;
                 }
+                simd::qblock(&mut acc, blk, &av);
             }
             let c0 = br * BLOCK_R;
             let nr = BLOCK_R.min(n - c0);
@@ -1114,6 +1132,55 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn compressed_kernels_bitwise_invariant_across_isa_paths() {
+        // Every compressed kernel, forced onto each ISA path the host
+        // supports, must reproduce the scalar path's bits exactly — f32
+        // by the stripe argument, int8 because i32 sums are exact on
+        // every path.
+        let (b, h, w, cin, cout, k, s) = (2usize, 6, 7, 5, 11, 3, 1);
+        let mut rng = Rng::new(0xc0de);
+        let in_live = rand_live(cin, &mut rng);
+        let out_live = rand_live(cout, &mut rng);
+        let x_live = rand_tensor(&[b, h, w, in_live.len()], &mut rng);
+        let wt = rand_tensor(&[k, k, cin, cout], &mut rng);
+        let folded = fold_conv_weight(&wt, &in_live, &out_live);
+        let (csr, vals) = pack_conv(&folded, &in_live, &out_live);
+        let am = rand_tensor(&[3, csr.cols], &mut rng);
+        let mut xq = rand_tensor(&[b, h, w, cin], &mut rng);
+        for v in &mut xq.data {
+            *v = v.abs();
+        }
+        kernels::act_quant_inplace(&mut xq, 8.0);
+        let mut aq = rand_tensor(&[3, k * k * cin], &mut rng);
+        for v in &mut aq.data {
+            *v = v.abs();
+        }
+        kernels::act_quant_inplace(&mut aq, 8.0);
+        let mut codes = Vec::new();
+        let qcsr = Bcsr::build(
+            cout,
+            k * k * cin,
+            |oc, r| (((oc * 37 + r * 11) % 17) as i32 - 8) as i8,
+            |c| c != 0,
+            &mut codes,
+        );
+        let run = |isa: simd::Isa| {
+            simd::with_forced(isa, || {
+                let mut sc = Scratch::default();
+                let sp = sparse_conv2d(&x_live, &csr, &vals, k, s, 2, &mut sc).unwrap();
+                let sm = sparse_matmul(&am, &csr, &vals, &mut sc);
+                let qc = qconv2d(&xq, &qcsr, &codes, 0.01, k, s, 8.0, 2, &mut sc).unwrap();
+                let qm = qmatmul(&aq, &qcsr, &codes, 0.01, 8.0, &mut sc);
+                (sp.data, sm.data, qc.data, qm.data)
+            })
+        };
+        let want = run(simd::Isa::Scalar);
+        for isa in simd::available() {
+            assert_eq!(run(isa), want, "isa {} changed compressed kernel bits", isa.name());
+        }
     }
 
     #[test]

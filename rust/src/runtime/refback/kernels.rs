@@ -28,15 +28,24 @@
 //! Blocked kernels peel interior from border (no per-tap padding branch
 //! in the interior), register-block the inner `cout` loops ([`MR`] x
 //! [`NR`] accumulator tiles), parallelize over batch items (`pool`), and
-//! draw every temporary from the caller's [`Scratch`] arena.  The
+//! draw every temporary from the caller's [`Scratch`] arena.  The hot
+//! inner loops — the MR x NR tiles, the backward taps, the lane-order
+//! reductions — run through [`super::simd`], which dispatches to
+//! explicit AVX2/SSE2/NEON code producing the **same bits** as these
+//! scalar loops (DESIGN.md §Backends, "SIMD tier"); big interior convs
+//! additionally take an im2col+GEMM route through a packed scratch
+//! panel, chosen by the shape-only heuristic [`im2col_pays`].  The
 //! `naive_*` kernels implement the same canonical math in the plainest
-//! textbook form; `cargo bench -- refback_kernels` measures the gap and
-//! the property tests below pin bit-equality on random shapes/strides.
+//! textbook form (and stay scalar on purpose — they are the reference
+//! the SIMD paths are pinned against); `cargo bench -- refback_kernels`
+//! measures the gap and the property tests below pin bit-equality on
+//! random shapes/strides.
 
 use anyhow::{ensure, Result};
 
 use super::pool;
 use super::scratch::Scratch;
+use super::simd;
 use crate::tensor::Tensor;
 
 /// Output pixels per register tile (conv) / rows per tile (matmul).
@@ -178,10 +187,42 @@ pub fn conv2d(
     let g = ConvGeom::of_conv(x, w, stride)?;
     let mut out = scratch.take_full(g.b * g.out_len());
     let flops = g.out_len() * g.k * g.k * g.cin;
-    pool::for_each_item(threads, flops, &mut out, g.out_len(), |bi, chunk| {
-        conv2d_item(&g, &x.data[bi * g.in_len()..][..g.in_len()], &w.data, chunk);
-    });
+    if im2col_pays(&g) {
+        let kdim = g.k * g.k * g.cin;
+        let plen = (g.oy1 - g.oy0) * (g.ox1 - g.ox0) * kdim;
+        // One panel per batch item, all from the arena: zero steady-state
+        // allocation once the shelf is warm.  The panel is recycled before
+        // returning, so it never outlives the call (see scratch.rs).
+        let mut panel = scratch.take_full(g.b * plen);
+        pool::for_each_item2(
+            threads,
+            flops,
+            g.b,
+            (out.as_mut_slice(), g.out_len()),
+            (panel.as_mut_slice(), plen),
+            |bi, chunk, pnl| {
+                let xi = &x.data[bi * g.in_len()..][..g.in_len()];
+                conv2d_item_im2col(&g, xi, &w.data, chunk, pnl);
+            },
+        );
+        scratch.recycle(panel);
+    } else {
+        pool::for_each_item(threads, flops, &mut out, g.out_len(), |bi, chunk| {
+            conv2d_item(&g, &x.data[bi * g.in_len()..][..g.in_len()], &w.data, chunk);
+        });
+    }
     Ok(Tensor::new(vec![g.b, g.ho, g.wo, g.cout], out))
+}
+
+/// Shape-only heuristic for the im2col+GEMM route: pays when the
+/// interior is big enough to amortize the pack and the GEMM runs full
+/// tiles.  Deterministic in the geometry alone, so the route choice can
+/// never depend on data — and both routes produce identical bits anyway
+/// (pinned by `im2col_route_matches_direct_route_bitwise`).
+fn im2col_pays(g: &ConvGeom) -> bool {
+    let kdim = g.k * g.k * g.cin;
+    let prows = g.oy1.saturating_sub(g.oy0) * g.ox1.saturating_sub(g.ox0);
+    g.k > 1 && g.cout >= NR && prows >= 4 * MR && kdim >= 32
 }
 
 fn conv2d_item(g: &ConvGeom, x: &[f32], w: &[f32], out: &mut [f32]) {
@@ -197,6 +238,107 @@ fn conv2d_item(g: &ConvGeom, x: &[f32], w: &[f32], out: &mut [f32]) {
         } else {
             conv_edge_pixels(g, x, w, out, oy, 0, g.wo);
         }
+    }
+}
+
+/// im2col+GEMM route for one batch item: edges take the peeled edge
+/// kernel; every interior pixel's receptive field is packed into one
+/// `kdim`-long panel row in canonical `(ky, kx, ic)` tap order, then the
+/// panel multiplies the HWIO weight matrix (`kdim x cout`) through the
+/// shared 4x8 microkernel.  Packing reorders *reads* only — each output
+/// element's accumulation chain is still the dense tap order, so the
+/// bits match [`conv2d_item`] exactly.
+fn conv2d_item_im2col(g: &ConvGeom, x: &[f32], w: &[f32], out: &mut [f32], panel: &mut [f32]) {
+    for oy in 0..g.ho {
+        if oy >= g.oy0 && oy < g.oy1 {
+            if g.ox0 > 0 {
+                conv_edge_pixels(g, x, w, out, oy, 0, g.ox0);
+            }
+            if g.ox1 < g.wo {
+                conv_edge_pixels(g, x, w, out, oy, g.ox1, g.wo);
+            }
+        } else {
+            conv_edge_pixels(g, x, w, out, oy, 0, g.wo);
+        }
+    }
+    pack_interior(g, x, panel);
+    gemm_interior(g, w, panel, out);
+}
+
+/// Fill panel row `p` (interior pixel `(oy0 + p/icols, ox0 + p%icols)`)
+/// with its `k*k*cin` taps, `(ky, kx, ic)` ascending.  Stride 1 copies
+/// each `ky` row as one contiguous `k*cin` run.
+fn pack_interior(g: &ConvGeom, x: &[f32], panel: &mut [f32]) {
+    let (s, k, cin) = (g.stride, g.k, g.cin);
+    let kdim = k * k * cin;
+    let icols = g.ox1 - g.ox0;
+    for oy in g.oy0..g.oy1 {
+        for ox in g.ox0..g.ox1 {
+            let p = (oy - g.oy0) * icols + (ox - g.ox0);
+            let prow = &mut panel[p * kdim..(p + 1) * kdim];
+            let mut o = 0;
+            for ky in 0..k {
+                let iy = oy * s + ky - g.ph; // in bounds: interior invariant
+                if s == 1 {
+                    let start = (iy * g.w + ox - g.pw) * cin;
+                    prow[o..o + k * cin].copy_from_slice(&x[start..start + k * cin]);
+                    o += k * cin;
+                } else {
+                    for kx in 0..k {
+                        let start = (iy * g.w + ox * s + kx - g.pw) * cin;
+                        prow[o..o + cin].copy_from_slice(&x[start..start + cin]);
+                        o += cin;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Panel `[prows x kdim]` times HWIO weights `[kdim x cout]` into the
+/// interior rectangle of `out`.  Full MR x NR tiles go through
+/// [`simd::gemm4x8`]; remainder rows/channels run the same ascending-k
+/// scalar loop as `matmul_into`'s remainder branch.
+fn gemm_interior(g: &ConvGeom, w: &[f32], panel: &[f32], out: &mut [f32]) {
+    let cout = g.cout;
+    let kdim = g.k * g.k * g.cin;
+    let icols = g.ox1 - g.ox0;
+    let prows = (g.oy1 - g.oy0) * icols;
+    let out_off = |p: usize| {
+        let oy = g.oy0 + p / icols;
+        let ox = g.ox0 + p % icols;
+        (oy * g.wo + ox) * cout
+    };
+    let mut p0 = 0;
+    while p0 < prows {
+        let mr = MR.min(prows - p0);
+        let mut oc0 = 0;
+        while oc0 < cout {
+            let nc = NR.min(cout - oc0);
+            if mr == MR && nc == NR {
+                let mut acc = [[0.0f32; NR]; MR];
+                let abase = [p0 * kdim, (p0 + 1) * kdim, (p0 + 2) * kdim, (p0 + 3) * kdim];
+                simd::gemm4x8(&mut acc, panel, abase, kdim, &w[oc0..], cout);
+                for (m, am) in acc.iter().enumerate() {
+                    out[out_off(p0 + m) + oc0..][..NR].copy_from_slice(am);
+                }
+            } else {
+                for p in p0..p0 + mr {
+                    let prow = &panel[p * kdim..(p + 1) * kdim];
+                    let off = out_off(p) + oc0;
+                    out[off..off + nc].fill(0.0);
+                    for (ki, &av) in prow.iter().enumerate() {
+                        let wrow = &w[ki * cout + oc0..][..nc];
+                        let orow = &mut out[off..off + nc];
+                        for (o, &wv) in orow.iter_mut().zip(wrow) {
+                            *o += av * wv;
+                        }
+                    }
+                }
+            }
+            oc0 += nc;
+        }
+        p0 += mr;
     }
 }
 
@@ -286,16 +428,10 @@ fn conv_tile(
                 *xb = rowbase + ((ox + m) * s + kx - g.pw) * cin;
             }
             let wbase = (ky * k + kx) * cin * cout + oc0;
-            for ic in 0..cin {
-                let wrow = &w[wbase + ic * cout..wbase + ic * cout + NR];
-                let xs = [x[xbase[0] + ic], x[xbase[1] + ic], x[xbase[2] + ic], x[xbase[3] + ic]];
-                for m in 0..MR {
-                    let am = &mut acc[m];
-                    for n in 0..NR {
-                        am[n] += xs[m] * wrow[n];
-                    }
-                }
-            }
+            // The accumulators persist across taps, so chaining one
+            // cin-deep microkernel call per (ky, kx) is the same single
+            // per-element chain as the fused loop it replaces.
+            simd::gemm4x8(&mut acc, x, xbase, cin, &w[wbase..], cout);
         }
     }
     for (m, am) in acc.iter().enumerate() {
@@ -421,15 +557,13 @@ fn conv_bwd_tap(
     xbase: usize,
     wbase: usize,
 ) {
-    for ic in 0..cin {
-        let xv = x[xbase + ic];
-        let wrow = &w[wbase + ic * cout..][..cout];
-        let dwrow = &mut dw[wbase + ic * cout..][..cout];
-        for (dv, &gv) in dwrow.iter_mut().zip(grow) {
-            *dv += xv * gv;
-        }
-        dx[xbase + ic] += lane_dot(wrow, grow);
-    }
+    simd::bwd_tap(
+        &x[xbase..xbase + cin],
+        &w[wbase..wbase + cin * cout],
+        grow,
+        &mut dx[xbase..xbase + cin],
+        &mut dw[wbase..wbase + cin * cout],
+    );
 }
 
 fn conv2d_bwd_item(
@@ -654,21 +788,8 @@ pub fn matmul_into(m: usize, kdim: usize, n: usize, a: &[f32], w: &[f32], out: &
             let nc = NR.min(n - c0);
             if mr == MR && nc == NR {
                 let mut acc = [[0.0f32; NR]; MR];
-                for ki in 0..kdim {
-                    let wrow = &w[ki * n + c0..ki * n + c0 + NR];
-                    let av = [
-                        a[r0 * kdim + ki],
-                        a[(r0 + 1) * kdim + ki],
-                        a[(r0 + 2) * kdim + ki],
-                        a[(r0 + 3) * kdim + ki],
-                    ];
-                    for mi in 0..MR {
-                        let am = &mut acc[mi];
-                        for ni in 0..NR {
-                            am[ni] += av[mi] * wrow[ni];
-                        }
-                    }
-                }
+                let abase = [r0 * kdim, (r0 + 1) * kdim, (r0 + 2) * kdim, (r0 + 3) * kdim];
+                simd::gemm4x8(&mut acc, a, abase, kdim, &w[c0..], n);
                 for (mi, am) in acc.iter().enumerate() {
                     out[(r0 + mi) * n + c0..][..NR].copy_from_slice(am);
                 }
@@ -793,7 +914,7 @@ fn rms_dims(x: &Tensor, live: f32) -> (usize, usize, f32) {
 
 #[inline]
 fn rms_factor(row: &[f32], d: f32) -> f32 {
-    let ms = lane_dot(row, row) / d;
+    let ms = simd::dot(row, row) / d;
     1.0 / (ms + 1e-6).sqrt()
 }
 
@@ -813,7 +934,7 @@ pub fn rmsnorm_backward(
         let grow = &g.data[bi * spl..(bi + 1) * spl];
         let xrow = &x_pre.data[bi * spl..(bi + 1) * spl];
         let r = rs[bi];
-        let kf = lane_dot(grow, xrow) * r * r * r / d;
+        let kf = simd::dot(grow, xrow) * r * r * r / d;
         for ((o, &gv), &xv) in out[bi * spl..(bi + 1) * spl].iter_mut().zip(grow).zip(xrow) {
             *o = r * gv - kf * xv;
         }
@@ -1276,6 +1397,99 @@ mod tests {
             let got = lane_dot(&a, &b) as f64;
             let want: f64 = a.iter().zip(&b).map(|(&x, &y)| x as f64 * y as f64).sum();
             assert!((got - want).abs() <= 1e-4 * (1.0 + want.abs()), "n={n}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn lane_dot_tail_matches_naive_stripe() {
+        // The stripe remainder at every non-multiple-of-8 length 0..=17,
+        // pinned bitwise against the plainest possible transcription of
+        // the stripe rule: lane j sums elements with index ≡ j (mod 8).
+        let mut rng = Rng::new(0x7a11);
+        for n in 0..=17usize {
+            let a: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let b: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let mut l = [0.0f32; 8];
+            for i in 0..n {
+                l[i % 8] += a[i] * b[i];
+            }
+            let want = ((l[0] + l[4]) + (l[1] + l[5])) + ((l[2] + l[6]) + (l[3] + l[7]));
+            assert_eq!(lane_dot(&a, &b).to_bits(), want.to_bits(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn prop_kernels_bitwise_invariant_across_isa_paths() {
+        // Every vectorized kernel, forced onto each ISA path the host
+        // supports, must reproduce the scalar path's bits exactly.
+        prop::check("kernels isa-invariant", 12, gen_dims, |v| {
+            let Some((b, h, w, cin, cout, k, s, seed)) = conv_case(v) else {
+                return Ok(());
+            };
+            let mut rng = Rng::new(seed ^ 0x51d);
+            let x = rand_tensor(&[b, h, w, cin], &mut rng);
+            let wt = rand_tensor(&[k, k, cin, cout], &mut rng);
+            let ho = h.div_ceil(s);
+            let wo = w.div_ceil(s);
+            let gy = rand_tensor(&[b, ho, wo, cout], &mut rng);
+            let gx = rand_tensor(&[b, h, w, cin], &mut rng);
+            let a = rand_tensor(&[5, 37], &mut rng);
+            let wm = rand_tensor(&[37, 13], &mut rng);
+            let run = |isa: simd::Isa| {
+                simd::with_forced(isa, || {
+                    let mut sc = Scratch::default();
+                    let f = conv2d(&x, &wt, s, 1, &mut sc).unwrap();
+                    let bwd = conv2d_backward(&x, &wt, &gy, s, 1, &mut sc);
+                    let mm = matmul(&a, &wm, &mut sc);
+                    let (nrm, rs, d) = rmsnorm(&x, cin as f32, &mut sc);
+                    let nb = rmsnorm_backward(&gx, &x, &rs, d, &mut sc);
+                    (f.data, bwd.dx, bwd.dw, bwd.db, mm.data, nrm.data, nb.data)
+                })
+            };
+            let want = run(simd::Isa::Scalar);
+            for isa in simd::available() {
+                if run(isa) != want {
+                    return Err(format!(
+                        "isa {} changed kernel bits (b={b} h={h} w={w} cin={cin} cout={cout} \
+                         k={k} s={s})",
+                        isa.name()
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn im2col_route_matches_direct_route_bitwise() {
+        // Shapes chosen to clear `im2col_pays` (big interior, kdim >= 32,
+        // cout >= NR), compared against the direct per-item path.
+        let mut rng = Rng::new(0x12c01);
+        let cases = [
+            (12usize, 12usize, 8usize, 16usize, 3usize, 1usize),
+            (13, 11, 4, 9, 3, 1),
+            (16, 16, 2, 8, 5, 2),
+        ];
+        for (h, w, cin, cout, k, s) in cases {
+            let g = ConvGeom::new(2, h, w, cin, k, cout, s);
+            assert!(im2col_pays(&g), "case h={h} w={w} must route through im2col");
+            let x = rand_tensor(&[2, h, w, cin], &mut rng);
+            let wt = rand_tensor(&[k, k, cin, cout], &mut rng);
+            let mut sc = Scratch::default();
+            let got = conv2d(&x, &wt, s, 2, &mut sc).unwrap();
+            let mut direct = vec![0.0f32; 2 * g.out_len()];
+            for bi in 0..2 {
+                conv2d_item(
+                    &g,
+                    &x.data[bi * g.in_len()..][..g.in_len()],
+                    &wt.data,
+                    &mut direct[bi * g.out_len()..][..g.out_len()],
+                );
+            }
+            assert_eq!(
+                got.data, direct,
+                "im2col route diverged (h={h} w={w} cin={cin} cout={cout} k={k} s={s})"
+            );
         }
     }
 

@@ -71,6 +71,7 @@ mod compressed;
 pub mod kernels;
 pub mod pool;
 pub mod scratch;
+pub mod simd;
 
 pub use pool::{default_threads, threads_per_worker};
 pub use scratch::Scratch;
@@ -965,7 +966,7 @@ impl RefNet {
             let grow = &g.data[mi * n..(mi + 1) * n];
             for ki in 0..k {
                 let wrow = &tr.wq.data[ki * n..(ki + 1) * n];
-                let dv = kernels::lane_dot(wrow, grow) * scale;
+                let dv = simd::dot(wrow, grow) * scale;
                 // Broadcast to every spatial position of channel ki.
                 for p in 0..hw {
                     dfeat[(mi * hw + p) * k + ki] += dv;

@@ -108,6 +108,53 @@ pub fn for_each_item<F>(
     });
 }
 
+/// Two-buffer variant: each item owns a disjoint chunk of `a` and `b`
+/// (e.g. the im2col conv route: output slice + per-item packed panel).
+pub fn for_each_item2<F>(
+    threads: usize,
+    flops_per_item: usize,
+    items: usize,
+    a: (&mut [f32], usize),
+    b: (&mut [f32], usize),
+    f: F,
+) where
+    F: Fn(usize, &mut [f32], &mut [f32]) + Sync,
+{
+    let (a, alen) = a;
+    let (b, blen) = b;
+    if items == 0 {
+        return;
+    }
+    debug_assert_eq!(a.len(), items * alen);
+    debug_assert_eq!(b.len(), items * blen);
+    if !worth_threading(threads, items, flops_per_item) {
+        for i in 0..items {
+            f(i, &mut a[i * alen..(i + 1) * alen], &mut b[i * blen..(i + 1) * blen]);
+        }
+        return;
+    }
+    let rs = ranges(items, threads);
+    std::thread::scope(|s| {
+        let (mut ra, mut rb) = (a, b);
+        for r in rs {
+            let (ha, ta) = ra.split_at_mut(r.len() * alen);
+            ra = ta;
+            let (hb, tb) = rb.split_at_mut(r.len() * blen);
+            rb = tb;
+            let f = &f;
+            s.spawn(move || {
+                for j in 0..r.len() {
+                    f(
+                        r.start + j,
+                        &mut ha[j * alen..(j + 1) * alen],
+                        &mut hb[j * blen..(j + 1) * blen],
+                    );
+                }
+            });
+        }
+    });
+}
+
 /// Three-output variant: each item owns disjoint chunks of `a`, `b` and
 /// `c` (e.g. conv backward: `dx` slice + per-item `dw` and `db` partials).
 pub fn for_each_item3<F>(
@@ -220,6 +267,24 @@ mod tests {
         for t in [2, 3, 5, 16] {
             assert_eq!(a, run(t), "thread count {t} changed bits");
         }
+    }
+
+    #[test]
+    fn for_each_item2_disjoint_chunks() {
+        let items = 6;
+        let run = |threads: usize| {
+            let mut a = vec![0.0f32; items * 2];
+            let mut b = vec![0.0f32; items * 3];
+            for_each_item2(threads, usize::MAX, items, (&mut a, 2), (&mut b, 3), |i, ca, cb| {
+                ca.fill(i as f32);
+                cb.fill(i as f32 * 10.0);
+            });
+            (a, b)
+        };
+        let one = run(1);
+        assert_eq!(one, run(4));
+        assert_eq!(one.0[..4], [0.0, 0.0, 1.0, 1.0]);
+        assert_eq!(one.1[..6], [0.0, 0.0, 0.0, 10.0, 10.0, 10.0]);
     }
 
     #[test]

@@ -22,6 +22,10 @@
 //!   [`Scratch::recycle`]d, and callers recycle exactly the intermediates
 //!   they own (traces, activations, partials).
 //! * Shelves are bounded ([`MAX_SHELF`]); overflow buffers drop and free.
+//! * The im2col GEMM panel (`kernels::conv2d`) follows the same rules:
+//!   taken via `take_full` *before* the parallel section, handed to the
+//!   batch items as disjoint per-item chunks, recycled after the join —
+//!   it never outlives the call and never crosses graphs.
 
 use crate::tensor::Tensor;
 

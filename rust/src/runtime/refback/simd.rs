@@ -1,0 +1,1044 @@
+//! Explicit 8-lane SIMD tier for the reference-backend kernels.
+//!
+//! Every f32 entry point here computes the **same bits** as the scalar
+//! canonical-order kernels in [`super::kernels`] — SIMD is a throughput
+//! choice, never a semantics choice (DESIGN.md §Backends, "SIMD tier").
+//! The contract that makes this possible:
+//!
+//! * **Stripe-shaped reductions** ([`dot`]) keep `lane_dot`'s exact
+//!   semantics: lane `j` accumulates elements with index ≡ j (mod 8), the
+//!   tail tops up lanes `0..n%8`, and the lanes combine by the fixed tree
+//!   `((l0+l4)+(l1+l5)) + ((l2+l6)+(l3+l7))`.  An 8-wide vector
+//!   accumulator *is* the eight stripe lanes, so a vector `add` per step
+//!   reproduces the per-lane chains verbatim; narrower ISAs split the
+//!   stripe into two 4-lane halves, which changes nothing — each lane is
+//!   still its own sequential chain.
+//! * **Independent-chain kernels** ([`gemm4x8`], [`axpy`] inside
+//!   [`bwd_tap`], [`sparse_block`]) vectorize across *outputs*: each
+//!   output element keeps its own sequential accumulation chain in its
+//!   own lane, in the canonical order, so there is no horizontal f32 sum
+//!   at all.  Multiply-then-add only — never FMA: a fused op rounds once
+//!   where the scalar kernels round twice, and `#[target_feature]` never
+//!   enables contraction on its own.
+//! * **Integer kernels** ([`qblock`]) accumulate in i32, which is
+//!   associative — any order (including true horizontal vector sums) is
+//!   exact, so the int8 path is exempt from the stripe rule.
+//!
+//! ISA selection is runtime feature detection (`auto`), overridable with
+//! `--simd` / `COC_REF_SIMD` (`scalar|sse2|avx2|neon`); the chosen path
+//! is logged once per process so bench JSONs record which path ran.  The
+//! scalar fallback compiles on every architecture and is itself pinned
+//! bitwise against `lane_dot` and the blocked kernels by the property
+//! tests below and in `kernels`/`compressed`.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+use anyhow::{bail, Result};
+
+/// One instruction-set path.  All variants exist on every architecture
+/// (so CLI parsing and tests are portable); [`available`] reports which
+/// ones the host can actually run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Isa {
+    /// Portable scalar loops — the canonical-order reference, compiled
+    /// everywhere.
+    Scalar,
+    /// x86-64 baseline 4-wide f32 / `pmaddwd` int8 (always available on
+    /// x86-64; forcing it on an AVX2 host exercises the narrow path).
+    Sse2,
+    /// x86-64 8-wide f32 and widening int8 (runtime-detected).
+    Avx2,
+    /// aarch64 baseline 4-wide NEON (always available on aarch64).
+    Neon,
+}
+
+impl Isa {
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Sse2 => "sse2",
+            Isa::Avx2 => "avx2",
+            Isa::Neon => "neon",
+        }
+    }
+
+    fn code(self) -> u8 {
+        match self {
+            Isa::Scalar => 1,
+            Isa::Sse2 => 2,
+            Isa::Avx2 => 3,
+            Isa::Neon => 4,
+        }
+    }
+
+    fn from_code(v: u8) -> Isa {
+        match v {
+            2 => Isa::Sse2,
+            3 => Isa::Avx2,
+            4 => Isa::Neon,
+            _ => Isa::Scalar,
+        }
+    }
+}
+
+/// A parsed `--simd` / `COC_REF_SIMD` value.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    /// Pick the widest ISA the host supports (the default).
+    Auto,
+    /// Force one path (errors at [`set_policy`] if the host lacks it).
+    Fixed(Isa),
+}
+
+pub fn parse_policy(s: &str) -> Option<Policy> {
+    match s.to_ascii_lowercase().as_str() {
+        "auto" => Some(Policy::Auto),
+        "scalar" => Some(Policy::Fixed(Isa::Scalar)),
+        "sse2" => Some(Policy::Fixed(Isa::Sse2)),
+        "avx2" => Some(Policy::Fixed(Isa::Avx2)),
+        "neon" => Some(Policy::Fixed(Isa::Neon)),
+        _ => None,
+    }
+}
+
+/// Can the host execute this path?  `Scalar` always; baseline ISAs by
+/// target architecture; AVX2 by runtime detection (cached by std).
+pub fn detect(isa: Isa) -> bool {
+    match isa {
+        Isa::Scalar => true,
+        #[cfg(target_arch = "x86_64")]
+        Isa::Sse2 => true,
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => std::arch::is_x86_feature_detected!("avx2"),
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => true,
+        _ => false,
+    }
+}
+
+/// Every path the host can run, scalar first — the ISA matrix the
+/// property and digest tests sweep.
+pub fn available() -> Vec<Isa> {
+    [Isa::Scalar, Isa::Sse2, Isa::Avx2, Isa::Neon]
+        .into_iter()
+        .filter(|&isa| detect(isa))
+        .collect()
+}
+
+fn detect_best() -> Isa {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            Isa::Avx2
+        } else {
+            Isa::Sse2
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        Isa::Neon
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        Isa::Scalar
+    }
+}
+
+/// Process default, resolved once from `COC_REF_SIMD` (else auto-detect)
+/// and logged — so every run records which path produced its numbers.
+static DEFAULT: OnceLock<Isa> = OnceLock::new();
+/// CLI / test override: 0 = none, else `Isa::code`.
+static OVERRIDE: AtomicU8 = AtomicU8::new(0);
+
+fn announce(isa: Isa, why: &str) -> Isa {
+    crate::obs::log!(crate::obs::Level::Info, "[refback] simd path: {} ({why})", isa.name());
+    isa
+}
+
+fn default_isa() -> Isa {
+    *DEFAULT.get_or_init(|| match std::env::var("COC_REF_SIMD") {
+        Ok(raw) => match parse_policy(raw.trim()) {
+            Some(Policy::Auto) => announce(detect_best(), "auto"),
+            Some(Policy::Fixed(isa)) if detect(isa) => announce(isa, "COC_REF_SIMD"),
+            Some(Policy::Fixed(isa)) => {
+                crate::obs::log!(
+                    crate::obs::Level::Warn,
+                    "[refback] COC_REF_SIMD={} is unavailable on this host; using auto",
+                    isa.name()
+                );
+                announce(detect_best(), "auto")
+            }
+            None => {
+                crate::obs::log!(
+                    crate::obs::Level::Warn,
+                    "[refback] COC_REF_SIMD=`{}` unrecognized (auto|scalar|sse2|avx2|neon); \
+                     using auto",
+                    raw.trim()
+                );
+                announce(detect_best(), "auto")
+            }
+        },
+        Err(_) => announce(detect_best(), "auto"),
+    })
+}
+
+/// The ISA every dispatching entry point uses right now.
+pub fn active() -> Isa {
+    match OVERRIDE.load(Ordering::Relaxed) {
+        0 => default_isa(),
+        v => Isa::from_code(v),
+    }
+}
+
+/// Apply a `--simd` flag value: `auto` clears any override, a fixed ISA
+/// must be available on this host.  Threaded from the CLI exactly like
+/// `--ref-threads` — results are bit-identical at every setting.
+pub fn set_policy(s: &str) -> Result<()> {
+    match parse_policy(s) {
+        Some(Policy::Auto) => {
+            OVERRIDE.store(0, Ordering::SeqCst);
+            Ok(())
+        }
+        Some(Policy::Fixed(isa)) => {
+            if !detect(isa) {
+                let have: Vec<&str> = available().iter().map(|i| i.name()).collect();
+                bail!(
+                    "--simd {}: not available on this host (available: {})",
+                    isa.name(),
+                    have.join("|")
+                );
+            }
+            OVERRIDE.store(isa.code(), Ordering::SeqCst);
+            crate::obs::log!(
+                crate::obs::Level::Info,
+                "[refback] simd path forced: {}",
+                isa.name()
+            );
+            Ok(())
+        }
+        None => bail!("--simd must be auto|scalar|sse2|avx2|neon, got `{s}`"),
+    }
+}
+
+/// Run `f` with the active ISA forced to `isa`, restoring the previous
+/// override afterwards (panic-safe).  Serialized by a lock: the override
+/// is process-global, so path-comparing tests and bench tiers must not
+/// interleave flips.  Concurrent *unguarded* work is unaffected in
+/// results — every path is bit-identical — it just momentarily runs on
+/// the forced path.
+pub fn with_forced<R>(isa: Isa, f: impl FnOnce() -> R) -> R {
+    static LOCK: Mutex<()> = Mutex::new(());
+    let _guard = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    struct Restore(u8);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            OVERRIDE.store(self.0, Ordering::SeqCst);
+        }
+    }
+    let _restore = Restore(OVERRIDE.swap(isa.code(), Ordering::SeqCst));
+    f()
+}
+
+// ---------------------------------------------------------------------------
+// Dispatching entry points
+//
+// Every op has a `<name>_with(isa, ...)` form (the property tests sweep
+// it over `available()`) and a `<name>(...)` form reading `active()`.
+// An ISA the host cannot run falls back to scalar — identical bits, so
+// degradation is invisible except in speed.
+// ---------------------------------------------------------------------------
+
+/// Striped dot product — bitwise equal to [`super::kernels::lane_dot`]
+/// on every path.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    dot_with(active(), a, b)
+}
+
+pub fn dot_with(isa: Isa, a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `detect` verified the feature at policy time; the guard
+        // re-checks so a stale Isa value can never reach an unsupported
+        // instruction.
+        Isa::Avx2 if detect(Isa::Avx2) => unsafe { x86::dot_avx2(a, b) },
+        #[cfg(target_arch = "x86_64")]
+        Isa::Sse2 => unsafe { x86::dot_sse2(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { neon::dot_neon(a, b) },
+        _ => scalar::dot(a, b),
+    }
+}
+
+/// The 4x8 register-tile microkernel shared by `conv_tile`,
+/// `matmul_into` and the im2col GEMM: for `kk` ascending,
+/// `acc[m] += a[abase[m] + kk] * b[kk*ldb .. kk*ldb+8]`.
+/// Each `acc[m][n]` keeps its own sequential chain — identical bits to
+/// the scalar tile loop.
+#[inline]
+pub fn gemm4x8(
+    acc: &mut [[f32; 8]; 4],
+    a: &[f32],
+    abase: [usize; 4],
+    kc: usize,
+    b: &[f32],
+    ldb: usize,
+) {
+    gemm4x8_with(active(), acc, a, abase, kc, b, ldb)
+}
+
+pub fn gemm4x8_with(
+    isa: Isa,
+    acc: &mut [[f32; 8]; 4],
+    a: &[f32],
+    abase: [usize; 4],
+    kc: usize,
+    b: &[f32],
+    ldb: usize,
+) {
+    debug_assert!(kc == 0 || (kc - 1) * ldb + 8 <= b.len());
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: availability re-checked; see `dot_with`.
+        Isa::Avx2 if detect(Isa::Avx2) => unsafe { x86::gemm4x8_avx2(acc, a, abase, kc, b, ldb) },
+        #[cfg(target_arch = "x86_64")]
+        Isa::Sse2 => unsafe { x86::gemm4x8_sse2(acc, a, abase, kc, b, ldb) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { neon::gemm4x8_neon(acc, a, abase, kc, b, ldb) },
+        _ => scalar::gemm4x8(acc, a, abase, kc, b, ldb),
+    }
+}
+
+/// One conv-backward tap over all its input channels: for each `ic`,
+/// `dwtap[ic*cout..][..cout] += xrow[ic] * grow` (independent per-element
+/// chains) and `dxrow[ic] += dot(wtap[ic*cout..][..cout], grow)` (stripe
+/// order).  Fused so the per-call dispatch cost is paid once per tap,
+/// not once per channel.
+#[inline]
+pub fn bwd_tap(xrow: &[f32], wtap: &[f32], grow: &[f32], dxrow: &mut [f32], dwtap: &mut [f32]) {
+    bwd_tap_with(active(), xrow, wtap, grow, dxrow, dwtap)
+}
+
+pub fn bwd_tap_with(
+    isa: Isa,
+    xrow: &[f32],
+    wtap: &[f32],
+    grow: &[f32],
+    dxrow: &mut [f32],
+    dwtap: &mut [f32],
+) {
+    debug_assert_eq!(xrow.len(), dxrow.len());
+    debug_assert_eq!(wtap.len(), dwtap.len());
+    debug_assert_eq!(wtap.len(), xrow.len() * grow.len());
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: availability re-checked; see `dot_with`.
+        Isa::Avx2 if detect(Isa::Avx2) => unsafe {
+            x86::bwd_tap_avx2(xrow, wtap, grow, dxrow, dwtap)
+        },
+        #[cfg(target_arch = "x86_64")]
+        Isa::Sse2 => unsafe { x86::bwd_tap_sse2(xrow, wtap, grow, dxrow, dwtap) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { neon::bwd_tap_neon(xrow, wtap, grow, dxrow, dwtap) },
+        _ => scalar::bwd_tap(xrow, wtap, grow, dxrow, dwtap),
+    }
+}
+
+/// One 4x8 BCSR block: for `cc` ascending over `xv`,
+/// `acc[rr] += blk[rr*8 + cc] * xv[cc]` — the per-row chains stay
+/// sequential in `cc` (the canonical block walk), vectorized across the
+/// four rows.  `blk` holds at least 32 values (row-major 4x8).
+#[inline]
+pub fn sparse_block(acc: &mut [f32; 4], blk: &[f32], xv: &[f32]) {
+    sparse_block_with(active(), acc, blk, xv)
+}
+
+pub fn sparse_block_with(isa: Isa, acc: &mut [f32; 4], blk: &[f32], xv: &[f32]) {
+    debug_assert!(blk.len() >= 32 && xv.len() <= 8);
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: SSE2 is x86-64 baseline (AVX2 implies it).
+        Isa::Sse2 | Isa::Avx2 => unsafe { x86::sparse_block_sse2(acc, blk, xv) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { neon::sparse_block_neon(acc, blk, xv) },
+        _ => scalar::sparse_block(acc, blk, xv),
+    }
+}
+
+/// One 4x8 int8 BCSR block: `acc[rr] += Σ_cc blk[rr*8+cc] as i32 *
+/// av[cc]`.  i32 sums are associative, so this path may use widening
+/// i8→i16→i32 vector math and true horizontal sums — exact in any
+/// order.  Callers zero-pad `av` past the block's live columns (a 0
+/// product is exact) and guarantee every entry fits in i16 (activation
+/// codes are ≤ 255).
+#[inline]
+pub fn qblock(acc: &mut [i32; 4], blk: &[i8], av: &[i32; 8]) {
+    qblock_with(active(), acc, blk, av)
+}
+
+pub fn qblock_with(isa: Isa, acc: &mut [i32; 4], blk: &[i8], av: &[i32; 8]) {
+    debug_assert!(blk.len() >= 32);
+    debug_assert!(av.iter().all(|&v| (-32768..=32767).contains(&v)));
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: availability re-checked; see `dot_with`.
+        Isa::Avx2 if detect(Isa::Avx2) => unsafe { x86::qblock_avx2(acc, blk, av) },
+        #[cfg(target_arch = "x86_64")]
+        Isa::Sse2 => unsafe { x86::qblock_sse2(acc, blk, av) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { neon::qblock_neon(acc, blk, av) },
+        _ => scalar::qblock(acc, blk, av),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scalar reference path (compiled everywhere)
+// ---------------------------------------------------------------------------
+
+mod scalar {
+    /// Verbatim `lane_dot` semantics (kernels.rs is the canonical copy;
+    /// `prop_dot_matches_lane_dot` pins the two together).
+    pub(super) fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let main = n - n % 8;
+        let mut l = [0.0f32; 8];
+        let mut i = 0;
+        while i < main {
+            for j in 0..8 {
+                l[j] += a[i + j] * b[i + j];
+            }
+            i += 8;
+        }
+        for (j, i) in (main..n).enumerate() {
+            l[j] += a[i] * b[i];
+        }
+        ((l[0] + l[4]) + (l[1] + l[5])) + ((l[2] + l[6]) + (l[3] + l[7]))
+    }
+
+    pub(super) fn gemm4x8(
+        acc: &mut [[f32; 8]; 4],
+        a: &[f32],
+        abase: [usize; 4],
+        kc: usize,
+        b: &[f32],
+        ldb: usize,
+    ) {
+        for kk in 0..kc {
+            let brow = &b[kk * ldb..kk * ldb + 8];
+            let av = [a[abase[0] + kk], a[abase[1] + kk], a[abase[2] + kk], a[abase[3] + kk]];
+            for (m, am) in acc.iter_mut().enumerate() {
+                let xv = av[m];
+                for (c, &wv) in am.iter_mut().zip(brow) {
+                    *c += xv * wv;
+                }
+            }
+        }
+    }
+
+    pub(super) fn bwd_tap(
+        xrow: &[f32],
+        wtap: &[f32],
+        grow: &[f32],
+        dxrow: &mut [f32],
+        dwtap: &mut [f32],
+    ) {
+        let cout = grow.len();
+        for (ic, (&xv, dx)) in xrow.iter().zip(dxrow.iter_mut()).enumerate() {
+            let wrow = &wtap[ic * cout..(ic + 1) * cout];
+            let dwrow = &mut dwtap[ic * cout..(ic + 1) * cout];
+            for (dv, &gv) in dwrow.iter_mut().zip(grow) {
+                *dv += xv * gv;
+            }
+            *dx += dot(wrow, grow);
+        }
+    }
+
+    pub(super) fn sparse_block(acc: &mut [f32; 4], blk: &[f32], xv: &[f32]) {
+        for (cc, &v) in xv.iter().enumerate() {
+            for (rr, a) in acc.iter_mut().enumerate() {
+                *a += blk[rr * 8 + cc] * v;
+            }
+        }
+    }
+
+    pub(super) fn qblock(acc: &mut [i32; 4], blk: &[i8], av: &[i32; 8]) {
+        for (rr, a) in acc.iter_mut().enumerate() {
+            let row = &blk[rr * 8..rr * 8 + 8];
+            let mut s = 0i32;
+            for (&wv, &v) in row.iter().zip(av) {
+                s += wv as i32 * v;
+            }
+            *a += s;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// x86-64: SSE2 (baseline) and AVX2 (runtime-detected)
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use std::arch::x86_64::{
+        __m128i, _mm256_add_ps, _mm256_castsi256_si128, _mm256_cvtepi8_epi32,
+        _mm256_extracti128_si256, _mm256_loadu_ps, _mm256_loadu_si256, _mm256_mul_ps,
+        _mm256_mullo_epi32, _mm256_set1_ps, _mm256_setzero_ps, _mm256_storeu_ps, _mm_add_epi32,
+        _mm_add_ps, _mm_cvtsi128_si32, _mm_loadl_epi64, _mm_loadu_ps, _mm_loadu_si128,
+        _mm_madd_epi16, _mm_mul_ps, _mm_packs_epi32, _mm_set1_ps, _mm_set_ps, _mm_setzero_ps,
+        _mm_shuffle_epi32, _mm_srai_epi16, _mm_storeu_ps, _mm_unpacklo_epi8,
+    };
+
+    // ----- dot: the stripe lanes live in the vector accumulator(s) -----
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn dot_avx2(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let main = n - n % 8;
+        let mut v = _mm256_setzero_ps();
+        let mut i = 0;
+        while i < main {
+            let av = _mm256_loadu_ps(a[i..i + 8].as_ptr());
+            let bv = _mm256_loadu_ps(b[i..i + 8].as_ptr());
+            v = _mm256_add_ps(v, _mm256_mul_ps(av, bv));
+            i += 8;
+        }
+        let mut l = [0.0f32; 8];
+        _mm256_storeu_ps(l.as_mut_ptr(), v);
+        for (j, i) in (main..n).enumerate() {
+            l[j] += a[i] * b[i];
+        }
+        ((l[0] + l[4]) + (l[1] + l[5])) + ((l[2] + l[6]) + (l[3] + l[7]))
+    }
+
+    #[target_feature(enable = "sse2")]
+    pub(super) unsafe fn dot_sse2(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let main = n - n % 8;
+        let mut v0 = _mm_setzero_ps();
+        let mut v1 = _mm_setzero_ps();
+        let mut i = 0;
+        while i < main {
+            let a0 = _mm_loadu_ps(a[i..i + 4].as_ptr());
+            let b0 = _mm_loadu_ps(b[i..i + 4].as_ptr());
+            let a1 = _mm_loadu_ps(a[i + 4..i + 8].as_ptr());
+            let b1 = _mm_loadu_ps(b[i + 4..i + 8].as_ptr());
+            v0 = _mm_add_ps(v0, _mm_mul_ps(a0, b0));
+            v1 = _mm_add_ps(v1, _mm_mul_ps(a1, b1));
+            i += 8;
+        }
+        let mut l = [0.0f32; 8];
+        _mm_storeu_ps(l.as_mut_ptr(), v0);
+        _mm_storeu_ps(l[4..].as_mut_ptr(), v1);
+        for (j, i) in (main..n).enumerate() {
+            l[j] += a[i] * b[i];
+        }
+        ((l[0] + l[4]) + (l[1] + l[5])) + ((l[2] + l[6]) + (l[3] + l[7]))
+    }
+
+    // ----- gemm4x8: one 8-wide accumulator per tile row -----
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn gemm4x8_avx2(
+        acc: &mut [[f32; 8]; 4],
+        a: &[f32],
+        abase: [usize; 4],
+        kc: usize,
+        b: &[f32],
+        ldb: usize,
+    ) {
+        let mut c0 = _mm256_loadu_ps(acc[0].as_ptr());
+        let mut c1 = _mm256_loadu_ps(acc[1].as_ptr());
+        let mut c2 = _mm256_loadu_ps(acc[2].as_ptr());
+        let mut c3 = _mm256_loadu_ps(acc[3].as_ptr());
+        for kk in 0..kc {
+            let bv = _mm256_loadu_ps(b[kk * ldb..kk * ldb + 8].as_ptr());
+            // mul then add — no FMA, matching the scalar two-rounding chain.
+            c0 = _mm256_add_ps(c0, _mm256_mul_ps(_mm256_set1_ps(a[abase[0] + kk]), bv));
+            c1 = _mm256_add_ps(c1, _mm256_mul_ps(_mm256_set1_ps(a[abase[1] + kk]), bv));
+            c2 = _mm256_add_ps(c2, _mm256_mul_ps(_mm256_set1_ps(a[abase[2] + kk]), bv));
+            c3 = _mm256_add_ps(c3, _mm256_mul_ps(_mm256_set1_ps(a[abase[3] + kk]), bv));
+        }
+        _mm256_storeu_ps(acc[0].as_mut_ptr(), c0);
+        _mm256_storeu_ps(acc[1].as_mut_ptr(), c1);
+        _mm256_storeu_ps(acc[2].as_mut_ptr(), c2);
+        _mm256_storeu_ps(acc[3].as_mut_ptr(), c3);
+    }
+
+    #[target_feature(enable = "sse2")]
+    pub(super) unsafe fn gemm4x8_sse2(
+        acc: &mut [[f32; 8]; 4],
+        a: &[f32],
+        abase: [usize; 4],
+        kc: usize,
+        b: &[f32],
+        ldb: usize,
+    ) {
+        let mut lo = [_mm_setzero_ps(); 4];
+        let mut hi = [_mm_setzero_ps(); 4];
+        for m in 0..4 {
+            lo[m] = _mm_loadu_ps(acc[m][..4].as_ptr());
+            hi[m] = _mm_loadu_ps(acc[m][4..].as_ptr());
+        }
+        for kk in 0..kc {
+            let b0 = _mm_loadu_ps(b[kk * ldb..kk * ldb + 4].as_ptr());
+            let b1 = _mm_loadu_ps(b[kk * ldb + 4..kk * ldb + 8].as_ptr());
+            for m in 0..4 {
+                let xs = _mm_set1_ps(a[abase[m] + kk]);
+                lo[m] = _mm_add_ps(lo[m], _mm_mul_ps(xs, b0));
+                hi[m] = _mm_add_ps(hi[m], _mm_mul_ps(xs, b1));
+            }
+        }
+        for m in 0..4 {
+            _mm_storeu_ps(acc[m][..4].as_mut_ptr(), lo[m]);
+            _mm_storeu_ps(acc[m][4..].as_mut_ptr(), hi[m]);
+        }
+    }
+
+    // ----- bwd_tap: vector axpy over cout + striped dot per channel -----
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn bwd_tap_avx2(
+        xrow: &[f32],
+        wtap: &[f32],
+        grow: &[f32],
+        dxrow: &mut [f32],
+        dwtap: &mut [f32],
+    ) {
+        let cout = grow.len();
+        let main = cout - cout % 8;
+        for (ic, &xv) in xrow.iter().enumerate() {
+            let wrow = &wtap[ic * cout..(ic + 1) * cout];
+            let dwrow = &mut dwtap[ic * cout..(ic + 1) * cout];
+            let xs = _mm256_set1_ps(xv);
+            let mut c = 0;
+            while c < main {
+                let dv = _mm256_loadu_ps(dwrow[c..c + 8].as_ptr());
+                let gv = _mm256_loadu_ps(grow[c..c + 8].as_ptr());
+                _mm256_storeu_ps(
+                    dwrow[c..c + 8].as_mut_ptr(),
+                    _mm256_add_ps(dv, _mm256_mul_ps(xs, gv)),
+                );
+                c += 8;
+            }
+            for (dv, &gv) in dwrow[main..].iter_mut().zip(&grow[main..]) {
+                *dv += xv * gv;
+            }
+            dxrow[ic] += dot_avx2(wrow, grow);
+        }
+    }
+
+    #[target_feature(enable = "sse2")]
+    pub(super) unsafe fn bwd_tap_sse2(
+        xrow: &[f32],
+        wtap: &[f32],
+        grow: &[f32],
+        dxrow: &mut [f32],
+        dwtap: &mut [f32],
+    ) {
+        let cout = grow.len();
+        let main = cout - cout % 4;
+        for (ic, &xv) in xrow.iter().enumerate() {
+            let wrow = &wtap[ic * cout..(ic + 1) * cout];
+            let dwrow = &mut dwtap[ic * cout..(ic + 1) * cout];
+            let xs = _mm_set1_ps(xv);
+            let mut c = 0;
+            while c < main {
+                let dv = _mm_loadu_ps(dwrow[c..c + 4].as_ptr());
+                let gv = _mm_loadu_ps(grow[c..c + 4].as_ptr());
+                _mm_storeu_ps(dwrow[c..c + 4].as_mut_ptr(), _mm_add_ps(dv, _mm_mul_ps(xs, gv)));
+                c += 4;
+            }
+            for (dv, &gv) in dwrow[main..].iter_mut().zip(&grow[main..]) {
+                *dv += xv * gv;
+            }
+            dxrow[ic] += dot_sse2(wrow, grow);
+        }
+    }
+
+    // ----- sparse 4x8 block: vectorized over the 4 block rows -----
+
+    #[target_feature(enable = "sse2")]
+    pub(super) unsafe fn sparse_block_sse2(acc: &mut [f32; 4], blk: &[f32], xv: &[f32]) {
+        let mut c = _mm_loadu_ps(acc.as_ptr());
+        for (cc, &v) in xv.iter().enumerate() {
+            // Column cc of the row-major 4x8 block, one element per lane.
+            let col = _mm_set_ps(blk[24 + cc], blk[16 + cc], blk[8 + cc], blk[cc]);
+            c = _mm_add_ps(c, _mm_mul_ps(col, _mm_set1_ps(v)));
+        }
+        _mm_storeu_ps(acc.as_mut_ptr(), c);
+    }
+
+    // ----- int8 4x8 block: widening multiplies, horizontal i32 sums -----
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn qblock_avx2(acc: &mut [i32; 4], blk: &[i8], av: &[i32; 8]) {
+        let avv = _mm256_loadu_si256(av.as_ptr().cast());
+        for (rr, a) in acc.iter_mut().enumerate() {
+            let row: *const __m128i = blk[rr * 8..rr * 8 + 8].as_ptr().cast();
+            let wide = _mm256_cvtepi8_epi32(_mm_loadl_epi64(row));
+            let prod = _mm256_mullo_epi32(wide, avv);
+            // i32 addition is associative: any horizontal order is exact.
+            let lo = _mm256_castsi256_si128(prod);
+            let s4 = _mm_add_epi32(lo, _mm256_extracti128_si256::<1>(prod));
+            let s2 = _mm_add_epi32(s4, _mm_shuffle_epi32::<0b0100_1110>(s4));
+            let s1 = _mm_add_epi32(s2, _mm_shuffle_epi32::<0b1011_0001>(s2));
+            *a += _mm_cvtsi128_si32(s1);
+        }
+    }
+
+    #[target_feature(enable = "sse2")]
+    pub(super) unsafe fn qblock_sse2(acc: &mut [i32; 4], blk: &[i8], av: &[i32; 8]) {
+        // Activation codes fit i16 (≤ 255), so pack them down and use
+        // pmaddwd: 8 widening i16 multiplies + pairwise i32 adds per row.
+        let a16 = _mm_packs_epi32(
+            _mm_loadu_si128(av[..4].as_ptr().cast()),
+            _mm_loadu_si128(av[4..].as_ptr().cast()),
+        );
+        for (rr, a) in acc.iter_mut().enumerate() {
+            let row: *const __m128i = blk[rr * 8..rr * 8 + 8].as_ptr().cast();
+            // Sign-extend 8 x i8 -> 8 x i16: interleave with self, then
+            // arithmetic shift each 16-bit lane down by 8.
+            let w16 = {
+                let raw = _mm_loadl_epi64(row);
+                _mm_srai_epi16::<8>(_mm_unpacklo_epi8(raw, raw))
+            };
+            let pr = _mm_madd_epi16(w16, a16);
+            let s2 = _mm_add_epi32(pr, _mm_shuffle_epi32::<0b0100_1110>(pr));
+            let s1 = _mm_add_epi32(s2, _mm_shuffle_epi32::<0b1011_0001>(s2));
+            *a += _mm_cvtsi128_si32(s1);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// aarch64: NEON (baseline)
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use std::arch::aarch64::{
+        vaddq_f32, vaddq_s32, vaddvq_s32, vdupq_n_f32, vget_high_s16, vget_low_s16, vld1_s8,
+        vld1q_f32, vld1q_s32, vmovl_s16, vmovl_s8, vmulq_f32, vmulq_s32, vst1q_f32,
+    };
+
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn dot_neon(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let main = n - n % 8;
+        let mut v0 = vdupq_n_f32(0.0);
+        let mut v1 = vdupq_n_f32(0.0);
+        let mut i = 0;
+        while i < main {
+            let a0 = vld1q_f32(a[i..i + 4].as_ptr());
+            let b0 = vld1q_f32(b[i..i + 4].as_ptr());
+            let a1 = vld1q_f32(a[i + 4..i + 8].as_ptr());
+            let b1 = vld1q_f32(b[i + 4..i + 8].as_ptr());
+            v0 = vaddq_f32(v0, vmulq_f32(a0, b0));
+            v1 = vaddq_f32(v1, vmulq_f32(a1, b1));
+            i += 8;
+        }
+        let mut l = [0.0f32; 8];
+        vst1q_f32(l.as_mut_ptr(), v0);
+        vst1q_f32(l[4..].as_mut_ptr(), v1);
+        for (j, i) in (main..n).enumerate() {
+            l[j] += a[i] * b[i];
+        }
+        ((l[0] + l[4]) + (l[1] + l[5])) + ((l[2] + l[6]) + (l[3] + l[7]))
+    }
+
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn gemm4x8_neon(
+        acc: &mut [[f32; 8]; 4],
+        a: &[f32],
+        abase: [usize; 4],
+        kc: usize,
+        b: &[f32],
+        ldb: usize,
+    ) {
+        let mut lo = [vdupq_n_f32(0.0); 4];
+        let mut hi = [vdupq_n_f32(0.0); 4];
+        for m in 0..4 {
+            lo[m] = vld1q_f32(acc[m][..4].as_ptr());
+            hi[m] = vld1q_f32(acc[m][4..].as_ptr());
+        }
+        for kk in 0..kc {
+            let b0 = vld1q_f32(b[kk * ldb..kk * ldb + 4].as_ptr());
+            let b1 = vld1q_f32(b[kk * ldb + 4..kk * ldb + 8].as_ptr());
+            for m in 0..4 {
+                let xs = vdupq_n_f32(a[abase[m] + kk]);
+                // mul then add — no vmlaq/FMA, matching scalar rounding.
+                lo[m] = vaddq_f32(lo[m], vmulq_f32(xs, b0));
+                hi[m] = vaddq_f32(hi[m], vmulq_f32(xs, b1));
+            }
+        }
+        for m in 0..4 {
+            vst1q_f32(acc[m][..4].as_mut_ptr(), lo[m]);
+            vst1q_f32(acc[m][4..].as_mut_ptr(), hi[m]);
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn bwd_tap_neon(
+        xrow: &[f32],
+        wtap: &[f32],
+        grow: &[f32],
+        dxrow: &mut [f32],
+        dwtap: &mut [f32],
+    ) {
+        let cout = grow.len();
+        let main = cout - cout % 4;
+        for (ic, &xv) in xrow.iter().enumerate() {
+            let wrow = &wtap[ic * cout..(ic + 1) * cout];
+            let dwrow = &mut dwtap[ic * cout..(ic + 1) * cout];
+            let xs = vdupq_n_f32(xv);
+            let mut c = 0;
+            while c < main {
+                let dv = vld1q_f32(dwrow[c..c + 4].as_ptr());
+                let gv = vld1q_f32(grow[c..c + 4].as_ptr());
+                vst1q_f32(dwrow[c..c + 4].as_mut_ptr(), vaddq_f32(dv, vmulq_f32(xs, gv)));
+                c += 4;
+            }
+            for (dv, &gv) in dwrow[main..].iter_mut().zip(&grow[main..]) {
+                *dv += xv * gv;
+            }
+            dxrow[ic] += dot_neon(wrow, grow);
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn sparse_block_neon(acc: &mut [f32; 4], blk: &[f32], xv: &[f32]) {
+        let mut c = vld1q_f32(acc.as_ptr());
+        for (cc, &v) in xv.iter().enumerate() {
+            let colv = [blk[cc], blk[8 + cc], blk[16 + cc], blk[24 + cc]];
+            c = vaddq_f32(c, vmulq_f32(vld1q_f32(colv.as_ptr()), vdupq_n_f32(v)));
+        }
+        vst1q_f32(acc.as_mut_ptr(), c);
+    }
+
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn qblock_neon(acc: &mut [i32; 4], blk: &[i8], av: &[i32; 8]) {
+        let a_lo = vld1q_s32(av[..4].as_ptr());
+        let a_hi = vld1q_s32(av[4..].as_ptr());
+        for (rr, a) in acc.iter_mut().enumerate() {
+            let w16 = vmovl_s8(vld1_s8(blk[rr * 8..rr * 8 + 8].as_ptr()));
+            let w_lo = vmovl_s16(vget_low_s16(w16));
+            let w_hi = vmovl_s16(vget_high_s16(w16));
+            let s = vaddq_s32(vmulq_s32(w_lo, a_lo), vmulq_s32(w_hi, a_hi));
+            *a += vaddvq_s32(s);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Property tests: every available ISA == scalar, bit for bit
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn rand_vec(n: usize, rng: &mut Rng) -> Vec<f32> {
+        (0..n).map(|_| rng.normal()).collect()
+    }
+
+    fn gen_len_seed(r: &mut Rng) -> (usize, usize) {
+        (r.below(70), r.below(1 << 20))
+    }
+
+    fn gen_cols_seed(r: &mut Rng) -> (usize, usize) {
+        (r.below(9), r.below(1 << 20))
+    }
+
+    fn gen_kc_ldb_seed(r: &mut Rng) -> (usize, usize, usize) {
+        (r.below(40), r.below(9), r.below(1 << 20))
+    }
+
+    fn gen_cin_cout_seed(r: &mut Rng) -> (usize, usize, usize) {
+        (r.below(9), r.below(40), r.below(1 << 20))
+    }
+
+    #[test]
+    fn available_includes_scalar_and_detected_paths() {
+        let have = available();
+        assert_eq!(have[0], Isa::Scalar);
+        for isa in &have {
+            assert!(detect(*isa), "{} listed but not detected", isa.name());
+        }
+        assert!(detect(active()), "active isa must be runnable");
+    }
+
+    #[test]
+    fn policy_parses_and_rejects() {
+        assert_eq!(parse_policy("auto"), Some(Policy::Auto));
+        assert_eq!(parse_policy("scalar"), Some(Policy::Fixed(Isa::Scalar)));
+        assert_eq!(parse_policy("AVX2"), Some(Policy::Fixed(Isa::Avx2)));
+        assert_eq!(parse_policy("sse2"), Some(Policy::Fixed(Isa::Sse2)));
+        assert_eq!(parse_policy("neon"), Some(Policy::Fixed(Isa::Neon)));
+        assert_eq!(parse_policy("avx512"), None);
+        assert!(set_policy("definitely-not-an-isa").is_err());
+    }
+
+    #[test]
+    fn with_forced_restores_previous_path() {
+        // `active()` outside a forced section races other tests' forced
+        // windows (the override is process-global), so only lock-held
+        // facts are asserted: the forced path inside the section, and —
+        // nested via the raw cell, because the lock is not reentrant —
+        // that a swap/restore pair brings the forced path back exactly
+        // the way `with_forced`'s own `Restore` does on exit.
+        with_forced(Isa::Scalar, || {
+            assert_eq!(active(), Isa::Scalar);
+            let prev = OVERRIDE.swap(0, Ordering::SeqCst);
+            assert_eq!(Isa::from_code(prev), Isa::Scalar);
+            assert_eq!(active(), default_isa(), "cleared override reads the default");
+            OVERRIDE.store(prev, Ordering::SeqCst);
+            assert_eq!(active(), Isa::Scalar, "restore brings the forced path back");
+        });
+    }
+
+    #[test]
+    fn prop_dot_matches_scalar_on_every_isa() {
+        prop::check("simd dot == scalar", 120, gen_len_seed, |&(n, seed)| {
+            let mut rng = Rng::new(seed as u64 ^ 0x51);
+            let a = rand_vec(n, &mut rng);
+            let b = rand_vec(n, &mut rng);
+            let want = dot_with(Isa::Scalar, &a, &b);
+            for isa in available() {
+                let got = dot_with(isa, &a, &b);
+                if got.to_bits() != want.to_bits() {
+                    return Err(format!(
+                        "dot diverged on isa {} at n={n}: {got} vs {want}",
+                        isa.name()
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn dot_matches_lane_dot_at_all_tail_lengths() {
+        let mut rng = Rng::new(0xd07);
+        for n in 0..=33usize {
+            let a = rand_vec(n, &mut rng);
+            let b = rand_vec(n, &mut rng);
+            let want = super::super::kernels::lane_dot(&a, &b);
+            for isa in available() {
+                let got = dot_with(isa, &a, &b);
+                assert_eq!(got.to_bits(), want.to_bits(), "n={n} isa={}", isa.name());
+            }
+        }
+    }
+
+    #[test]
+    fn prop_gemm4x8_matches_scalar_on_every_isa() {
+        prop::check("simd gemm4x8 == scalar", 80, gen_kc_ldb_seed, |&(kcr, extra, seed)| {
+            let kc = kcr + 1;
+            let ldb = 8 + extra;
+            let mut rng = Rng::new(seed as u64 ^ 0x93);
+            let a = rand_vec(4 * kc, &mut rng);
+            let abase = [0, kc, 2 * kc, 3 * kc];
+            let b = rand_vec(kc * ldb, &mut rng);
+            let acc0: Vec<f32> = rand_vec(32, &mut rng);
+            let mut want = [[0.0f32; 8]; 4];
+            for (m, am) in want.iter_mut().enumerate() {
+                am.copy_from_slice(&acc0[m * 8..(m + 1) * 8]);
+            }
+            let mut got0 = want;
+            gemm4x8_with(Isa::Scalar, &mut got0, &a, abase, kc, &b, ldb);
+            for isa in available() {
+                let mut got = want;
+                gemm4x8_with(isa, &mut got, &a, abase, kc, &b, ldb);
+                for m in 0..4 {
+                    for n in 0..8 {
+                        if got[m][n].to_bits() != got0[m][n].to_bits() {
+                            return Err(format!(
+                                "gemm4x8 diverged on {} at kc={kc} ldb={ldb} [{m}][{n}]",
+                                isa.name()
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_bwd_tap_matches_scalar_on_every_isa() {
+        prop::check("simd bwd_tap == scalar", 60, gen_cin_cout_seed, |&(cinr, coutr, seed)| {
+            let (cin, cout) = (cinr + 1, coutr + 1);
+            let mut rng = Rng::new(seed as u64 ^ 0xb4d);
+            let xrow = rand_vec(cin, &mut rng);
+            let wtap = rand_vec(cin * cout, &mut rng);
+            let grow = rand_vec(cout, &mut rng);
+            let dx0 = rand_vec(cin, &mut rng);
+            let dw0 = rand_vec(cin * cout, &mut rng);
+            let (mut dxw, mut dww) = (dx0.clone(), dw0.clone());
+            bwd_tap_with(Isa::Scalar, &xrow, &wtap, &grow, &mut dxw, &mut dww);
+            for isa in available() {
+                let (mut dx, mut dw) = (dx0.clone(), dw0.clone());
+                bwd_tap_with(isa, &xrow, &wtap, &grow, &mut dx, &mut dw);
+                if dx != dxw || dw != dww {
+                    return Err(format!(
+                        "bwd_tap diverged on {} at cin={cin} cout={cout}",
+                        isa.name()
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_sparse_block_matches_scalar_on_every_isa() {
+        prop::check("simd sparse_block == scalar", 80, gen_cols_seed, |&(ncc, seed)| {
+            let mut rng = Rng::new(seed as u64 ^ 0x5b);
+            let blk = rand_vec(32, &mut rng);
+            let xv = rand_vec(ncc, &mut rng);
+            let acc0 = [rng.normal(), rng.normal(), rng.normal(), rng.normal()];
+            let mut want = acc0;
+            sparse_block_with(Isa::Scalar, &mut want, &blk, &xv);
+            for isa in available() {
+                let mut got = acc0;
+                sparse_block_with(isa, &mut got, &blk, &xv);
+                if got.map(f32::to_bits) != want.map(f32::to_bits) {
+                    return Err(format!("sparse_block diverged on {} at ncc={ncc}", isa.name()));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_qblock_matches_scalar_on_every_isa() {
+        prop::check("simd qblock == scalar", 80, gen_cols_seed, |&(ncc, seed)| {
+            let mut rng = Rng::new(seed as u64 ^ 0x18);
+            let blk: Vec<i8> = (0..32).map(|_| (rng.below(256) as i32 - 128) as i8).collect();
+            let mut av = [0i32; 8];
+            for v in av.iter_mut().take(ncc) {
+                *v = rng.below(256) as i32; // activation codes are 0..=255
+            }
+            let acc0 = [
+                rng.below(1000) as i32,
+                rng.below(1000) as i32,
+                rng.below(1000) as i32,
+                rng.below(1000) as i32,
+            ];
+            let mut want = acc0;
+            qblock_with(Isa::Scalar, &mut want, &blk, &av);
+            for isa in available() {
+                let mut got = acc0;
+                qblock_with(isa, &mut got, &blk, &av);
+                if got != want {
+                    return Err(format!("qblock diverged on {} at ncc={ncc}", isa.name()));
+                }
+            }
+            Ok(())
+        });
+    }
+}

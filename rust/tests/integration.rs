@@ -490,45 +490,11 @@ fn ref_builtin_manifest_serves_mini_vgg() {
 /// changes a result, the two CI runs disagree and the diff fails.
 #[test]
 fn ref_golden_digest_is_thread_count_invariant() {
-    fn digest_of(threads: Option<usize>) -> u64 {
-        let engine = match threads {
-            Some(t) => Engine::new_ref_with_threads(t).unwrap(),
-            None => Engine::new_ref().unwrap(), // COC_REF_THREADS / parallelism
-        };
-        let arch = builtin_ref_manifest().arch("mini_vgg").unwrap();
-        let train_ds = Dataset::generate(DatasetKind::SynthC10, 96, 21, 0);
-        let test_ds = Dataset::generate(DatasetKind::SynthC10, 48, 21, 1);
-        let mut st = train::init_state(&engine, arch, 21).unwrap();
-        let opts = TrainOpts { steps: 6, seed: 21, exit_w: [0.3, 0.3], ..Default::default() };
-        let log = train::train(&engine, &mut st, &train_ds, None, &opts).unwrap();
-        let (logits, e1, e2) = train::eval_logits(&engine, &st, &test_ds).unwrap();
-
-        // FNV-1a over the exact f32 bit patterns of everything the flow
-        // produced: params, momenta, losses, all three logit heads.
-        let mut h = 0xcbf29ce484222325u64;
-        let mut eat = |data: &[f32]| {
-            for v in data {
-                for byte in v.to_bits().to_le_bytes() {
-                    h ^= byte as u64;
-                    h = h.wrapping_mul(0x100000001b3);
-                }
-            }
-        };
-        for t in st.params.iter().chain(st.momenta.iter()) {
-            eat(&t.data);
-        }
-        eat(&log.losses);
-        eat(&logits.data);
-        eat(&e1.data);
-        eat(&e2.data);
-        h
-    }
-
-    let d1 = digest_of(Some(1));
+    let d1 = golden_digest(Some(1));
     for t in [2usize, 3] {
-        assert_eq!(d1, digest_of(Some(t)), "{t} kernel threads changed the golden digest");
+        assert_eq!(d1, golden_digest(Some(t)), "{t} kernel threads changed the golden digest");
     }
-    let denv = digest_of(None);
+    let denv = golden_digest(None);
     assert_eq!(d1, denv, "default thread count changed the golden digest");
 
     // The observability overhead contract: tracing records timings, never
@@ -536,7 +502,7 @@ fn ref_golden_digest_is_thread_count_invariant() {
     // and exporting a real Chrome trace) must produce bit-identical
     // results.
     coc::obs::trace::enable();
-    let dtraced = digest_of(Some(2));
+    let dtraced = golden_digest(Some(2));
     coc::obs::trace::disable();
     let trace_path =
         std::env::temp_dir().join(format!("coc_golden_trace_{}.json", std::process::id()));
@@ -550,4 +516,56 @@ fn ref_golden_digest_is_thread_count_invariant() {
         std::fs::write(&path, format!("{denv:016x}\n")).unwrap();
         eprintln!("golden digest {denv:016x} -> {path}");
     }
+}
+
+/// The SIMD twin of the thread-count digest: the same canonical flow,
+/// forced onto every ISA path this host supports, must match the scalar
+/// path bit for bit (DESIGN.md §Backends).  CI additionally diffs
+/// `$COC_REF_DIGEST_OUT` across `COC_REF_SIMD=scalar` and the default
+/// run, pinning the equivalence across processes too.
+#[test]
+fn ref_golden_digest_is_simd_isa_invariant() {
+    use coc::runtime::refback::simd;
+    let want = simd::with_forced(simd::Isa::Scalar, || golden_digest(Some(2)));
+    for isa in simd::available() {
+        let got = simd::with_forced(isa, || golden_digest(Some(2)));
+        assert_eq!(got, want, "isa {} changed the golden digest", isa.name());
+    }
+}
+
+/// One canonical train -> eval flow on the ref backend, hashed to a
+/// single value (FNV-1a over exact f32 bit patterns).  Shared by the
+/// thread-count and SIMD-ISA digest tests above.
+fn golden_digest(threads: Option<usize>) -> u64 {
+    let engine = match threads {
+        Some(t) => Engine::new_ref_with_threads(t).unwrap(),
+        None => Engine::new_ref().unwrap(), // COC_REF_THREADS / parallelism
+    };
+    let arch = builtin_ref_manifest().arch("mini_vgg").unwrap();
+    let train_ds = Dataset::generate(DatasetKind::SynthC10, 96, 21, 0);
+    let test_ds = Dataset::generate(DatasetKind::SynthC10, 48, 21, 1);
+    let mut st = train::init_state(&engine, arch, 21).unwrap();
+    let opts = TrainOpts { steps: 6, seed: 21, exit_w: [0.3, 0.3], ..Default::default() };
+    let log = train::train(&engine, &mut st, &train_ds, None, &opts).unwrap();
+    let (logits, e1, e2) = train::eval_logits(&engine, &st, &test_ds).unwrap();
+
+    // FNV-1a over the exact f32 bit patterns of everything the flow
+    // produced: params, momenta, losses, all three logit heads.
+    let mut h = 0xcbf29ce484222325u64;
+    let mut eat = |data: &[f32]| {
+        for v in data {
+            for byte in v.to_bits().to_le_bytes() {
+                h ^= byte as u64;
+                h = h.wrapping_mul(0x100000001b3);
+            }
+        }
+    };
+    for t in st.params.iter().chain(st.momenta.iter()) {
+        eat(&t.data);
+    }
+    eat(&log.losses);
+    eat(&logits.data);
+    eat(&e1.data);
+    eat(&e2.data);
+    h
 }
