@@ -280,40 +280,138 @@ impl CompressedModel {
             .filter_map(|(i, l)| (!l.segment.starts_with("exit")).then_some(i))
             .collect();
         ensure!(!body.is_empty(), "arch `{}` has no body layers", arch.name);
-        ensure!(
-            arch.layers[body[0]].in_mask < 0,
-            "stem layer `{}` has a masked input; cannot lower",
-            arch.layers[body[0]].name
-        );
+        // Legacy chain manifests (no joins, no declared edges) consume in
+        // declaration order; DAG manifests name every producer edge.
+        let legacy =
+            arch.joins.is_empty() && body.iter().all(|&i| arch.layers[i].input.is_empty());
+        // Effective out-mask per producer name: body layers and joins
+        // (a join's output carries its own `out_mask` slot).
+        let out_mask_of = |name: &str| -> Option<i64> {
+            if let Some(&i) = body.iter().find(|&&i| arch.layers[i].name == name) {
+                return Some(arch.layers[i].out_mask);
+            }
+            arch.joins.iter().find(|j| j.name == name).map(|j| j.out_mask)
+        };
         // Compaction drops dead channels from the feature map, so every
-        // consumer must agree with its producer on the mask slot.
-        for w in body.windows(2) {
-            let (p, l) = (&arch.layers[w[0]], &arch.layers[w[1]]);
+        // consumer must agree with its producer on the mask slot, and a
+        // join's operands must both carry the join's own slot (the add
+        // only makes sense over one shared live set).
+        if legacy {
             ensure!(
-                l.in_mask == p.out_mask,
-                "layer `{}` in_mask {} != producer `{}` out_mask {}; cannot lower",
-                l.name,
-                l.in_mask,
-                p.name,
-                p.out_mask
+                arch.layers[body[0]].in_mask < 0,
+                "stem layer `{}` has a masked input; cannot lower",
+                arch.layers[body[0]].name
             );
+            for w in body.windows(2) {
+                let (p, l) = (&arch.layers[w[0]], &arch.layers[w[1]]);
+                ensure!(
+                    l.in_mask == p.out_mask,
+                    "layer `{}` in_mask {} != producer `{}` out_mask {}; cannot lower",
+                    l.name,
+                    l.in_mask,
+                    p.name,
+                    p.out_mask
+                );
+            }
+        } else {
+            for &i in &body {
+                let l = &arch.layers[i];
+                if l.input == "@input" {
+                    ensure!(
+                        l.in_mask < 0,
+                        "stem layer `{}` has a masked input; cannot lower",
+                        l.name
+                    );
+                    continue;
+                }
+                let pm = out_mask_of(&l.input).ok_or_else(|| {
+                    anyhow!("layer `{}`: unknown producer `{}`; cannot lower", l.name, l.input)
+                })?;
+                ensure!(
+                    l.in_mask == pm,
+                    "layer `{}` in_mask {} != producer `{}` out_mask {}; cannot lower",
+                    l.name,
+                    l.in_mask,
+                    l.input,
+                    pm
+                );
+            }
+            for j in &arch.joins {
+                let am = out_mask_of(&j.a).ok_or_else(|| {
+                    anyhow!("join `{}`: unknown operand `{}`; cannot lower", j.name, j.a)
+                })?;
+                ensure!(
+                    am == j.out_mask,
+                    "join `{}`: operand `{}` out_mask {} != join out_mask {}; cannot lower",
+                    j.name,
+                    j.a,
+                    am,
+                    j.out_mask
+                );
+                if let Some(b) = &j.b {
+                    let bm = out_mask_of(b).ok_or_else(|| {
+                        anyhow!("join `{}`: unknown operand `{}`; cannot lower", j.name, b)
+                    })?;
+                    ensure!(
+                        bm == j.out_mask,
+                        "join `{}`: operands `{}` (out_mask {am}) and `{b}` (out_mask {bm}) \
+                         disagree at the skip join; cannot lower",
+                        j.name,
+                        j.a
+                    );
+                }
+            }
         }
         for l in &arch.layers {
             if let Some(seg) = l.segment.strip_prefix("exit") {
                 ensure!(l.kind == LayerKind::Dense, "exit head `{}` is not dense", l.name);
-                let cut = body
-                    .iter()
-                    .rev()
-                    .find(|&&i| arch.layers[i].segment == format!("seg{seg}"))
-                    .copied()
-                    .ok_or_else(|| anyhow!("exit head `{}` cuts a missing segment", l.name))?;
+                // The stage output's mask slot: for legacy chains the last
+                // body layer of the segment; for DAG manifests the segment
+                // terminal — the one node (layer or join) in the segment
+                // nothing else in the segment consumes.
+                let segname = format!("seg{seg}");
+                let cut: Option<(String, i64)> = if legacy {
+                    body.iter()
+                        .rev()
+                        .find(|&&i| arch.layers[i].segment == segname)
+                        .map(|&i| (arch.layers[i].name.clone(), arch.layers[i].out_mask))
+                } else {
+                    let mut nodes: Vec<(&str, i64)> = body
+                        .iter()
+                        .filter(|&&i| arch.layers[i].segment == segname)
+                        .map(|&i| (arch.layers[i].name.as_str(), arch.layers[i].out_mask))
+                        .collect();
+                    nodes.extend(
+                        arch.joins
+                            .iter()
+                            .filter(|j| j.segment == segname)
+                            .map(|j| (j.name.as_str(), j.out_mask)),
+                    );
+                    let consumed: Vec<&str> = body
+                        .iter()
+                        .filter(|&&i| arch.layers[i].segment == segname)
+                        .map(|&i| arch.layers[i].input.as_str())
+                        .chain(arch.joins.iter().filter(|j| j.segment == segname).flat_map(
+                            |j| {
+                                std::iter::once(j.a.as_str())
+                                    .chain(j.b.as_deref().into_iter())
+                            },
+                        ))
+                        .collect();
+                    nodes
+                        .iter()
+                        .find(|(n, _)| !consumed.contains(n))
+                        .map(|&(n, m)| (n.to_string(), m))
+                };
+                let (cut_name, cut_mask) =
+                    cut.ok_or_else(|| anyhow!("exit head `{}` cuts a missing segment", l.name))?;
                 ensure!(
-                    l.in_mask == arch.layers[cut].out_mask,
-                    "exit head `{}` in_mask {} != cut layer `{}` out_mask {}; cannot lower",
+                    l.in_mask == cut_mask,
+                    "exit head `{}` in_mask {} != cut `{}` out_mask {}; cannot lower",
                     l.name,
                     l.in_mask,
-                    arch.layers[cut].name,
-                    arch.layers[cut].out_mask
+                    cut_name,
+                    cut_mask
                 );
             }
         }
@@ -364,7 +462,13 @@ impl CompressedModel {
                         LayerKind::Dense => in_live.len(),
                         _ => l.k * l.k * in_live.len(),
                     };
-                    if int8_ok(l, &qb, li == body[0], kdim) {
+                    // "First body" = consumes the raw image (no act_quant
+                    // grid to recover codes from): the declared `@input`
+                    // consumers in a DAG manifest, the chain head in a
+                    // legacy one.
+                    let raw_input =
+                        if legacy { li == body[0] } else { l.input == "@input" };
+                    if int8_ok(l, &qb, raw_input, kdim) {
                         // Integer codes from the *raw* weights with the
                         // same (tmax, wmax) scan host_weight_quant uses,
                         // so fake-quant value = code * scale_w up to one

@@ -44,6 +44,34 @@ pub struct LayerDesc {
     pub out_mask: i64,
     /// "seg1" | "seg2" | "seg3" | "exit1" | "exit2".
     pub segment: String,
+    /// Producer node this layer consumes: `""` means the previous body
+    /// layer in declaration order (the legacy feed-forward chain),
+    /// `"@input"` the raw graph input, otherwise a layer or join name.
+    pub input: String,
+    /// Conv activation flag: `false` stops the op pipeline after the
+    /// norm (no relu, no activation quantization) — used by pre-join
+    /// convs and 1x1 projections whose non-linearity lives in the join.
+    pub act: bool,
+}
+
+/// A DAG join node: `b: Some` computes `relu(a + b)` then activation
+/// quantization then the `out_mask` multiply (the residual add of
+/// `archs.py::finish_block`); `b: None` is a unary terminal (act-quant +
+/// mask only — the MobileNet linear-bottleneck block output).  Joins own
+/// no parameters and appear only in `ArchManifest::joins`, so the
+/// params-are-(w,b)-pairs-in-layer-order contract is untouched.
+#[derive(Debug, Clone)]
+pub struct JoinDesc {
+    pub name: String,
+    /// Primary operand (the block body's last conv), by node name.
+    pub a: String,
+    /// Skip operand (identity or 1x1 projection output), by node name.
+    pub b: Option<String>,
+    /// Mask slot applied after the join's activation quantization
+    /// (-1 = unmasked).
+    pub out_mask: i64,
+    /// "seg1" | "seg2" | "seg3" — joins never live in exit heads.
+    pub segment: String,
 }
 
 #[derive(Debug, Clone)]
@@ -70,6 +98,8 @@ pub struct ArchManifest {
     pub stage_batches: Vec<usize>,
     pub stage_h1_shape: Vec<usize>,
     pub stage_h2_shape: Vec<usize>,
+    /// Skip/terminal join nodes (empty = pure feed-forward chain).
+    pub joins: Vec<JoinDesc>,
 }
 
 #[derive(Debug, Clone)]
@@ -168,6 +198,22 @@ fn parse_arch(j: &Json) -> Result<ArchManifest> {
             .filter_map(|d| d.as_usize())
             .collect())
     };
+    // Absent in pre-DAG manifests: feed-forward chain.
+    let joins = match j.get("joins").and_then(|a| a.as_arr()) {
+        Some(arr) => arr
+            .iter()
+            .map(|jj| {
+                Ok(JoinDesc {
+                    name: jj.req("name")?.as_str().unwrap_or("").to_string(),
+                    a: jj.req("a")?.as_str().unwrap_or("").to_string(),
+                    b: jj.get("b").and_then(|s| s.as_str()).map(String::from),
+                    out_mask: jj.get("out_mask").and_then(|v| v.as_i64()).unwrap_or(-1),
+                    segment: jj.req("segment")?.as_str().unwrap_or("seg1").to_string(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?,
+        None => Vec::new(),
+    };
     Ok(ArchManifest {
         name: j.req("name")?.as_str().unwrap_or("").to_string(),
         num_classes: j.req("num_classes")?.as_usize().unwrap_or(20),
@@ -186,6 +232,7 @@ fn parse_arch(j: &Json) -> Result<ArchManifest> {
             .unwrap_or_else(|| vec![1]),
         stage_h1_shape: usz_arr("stage_h1_shape")?,
         stage_h2_shape: usz_arr("stage_h2_shape")?,
+        joins,
     })
 }
 
@@ -208,6 +255,10 @@ fn parse_layer(j: &Json) -> Result<LayerDesc> {
         in_mask: j.req("in_mask")?.as_i64().unwrap_or(-1),
         out_mask: j.req("out_mask")?.as_i64().unwrap_or(-1),
         segment: j.req("segment")?.as_str().unwrap_or("seg1").to_string(),
+        // Absent in pre-DAG manifests: chain from the previous layer,
+        // full activation pipeline.
+        input: j.get("input").and_then(|s| s.as_str()).unwrap_or("").to_string(),
+        act: j.get("act").and_then(|b| b.as_bool()).unwrap_or(true),
     })
 }
 
@@ -260,19 +311,38 @@ impl ArchManifest {
 // Built-in reference manifest.
 // ---------------------------------------------------------------------------
 
-/// Host-side replica of the MiniVGG manifest (`python/compile/archs.py::
-/// MiniVGG` + the aot.py manifest fields), so the reference backend can
-/// drive the whole CLI with no `make artifacts` step.  The graph map
-/// declares every tag the AOT path would lower (the ref backend resolves
-/// tags against this map; the `ref://` values are never opened).
-///
-/// One geometry difference from the AOT lowering is deliberate: the ref
-/// backend pools lazily *before* the conv that needs a smaller input, so
-/// its exit-cut features are the pre-pool segment outputs
-/// (`stage_h1_shape` [1, 16, 16, 16] instead of the JAX cut's
-/// [1, 8, 8, 16]).  Stage graphs and eval share the cut by construction,
-/// so the serving contract is unaffected.
-pub fn builtin_ref_manifest() -> Manifest {
+/// Per-layer weight+bias shapes in layer order (the (w, b) pair contract).
+fn ref_param_shapes(layers: &[LayerDesc]) -> Vec<Vec<usize>> {
+    layers
+        .iter()
+        .flat_map(|l| {
+            let w = match l.kind {
+                LayerKind::Dense => vec![l.cin, l.cout],
+                LayerKind::DwConv => vec![l.k, l.k, 1, l.cout],
+                LayerKind::Conv => vec![l.k, l.k, l.cin, l.cout],
+            };
+            [w, vec![l.cout]]
+        })
+        .collect()
+}
+
+/// Every graph tag the AOT path would lower for `arch` (batch 1 and 8
+/// staged variants); the `ref://` values are never opened.
+fn ref_graph_map(arch: &str) -> BTreeMap<String, String> {
+    let mut graphs = BTreeMap::new();
+    for tag in ["init", "train", "eval"] {
+        graphs.insert(tag.to_string(), format!("ref://{arch}/{tag}"));
+    }
+    for stage in 1..=3u8 {
+        for batch in [1usize, 8] {
+            let tag = ArchManifest::stage_graph_tag(stage, batch);
+            graphs.insert(tag.clone(), format!("ref://{arch}/{tag}"));
+        }
+    }
+    graphs
+}
+
+fn mini_vgg_arch() -> ArchManifest {
     let conv = |name: &str,
                 cin: usize,
                 cout: usize,
@@ -291,6 +361,8 @@ pub fn builtin_ref_manifest() -> Manifest {
         in_mask,
         out_mask,
         segment: segment.into(),
+        input: String::new(),
+        act: true,
     };
     let dense = |name: &str, cin: usize, in_mask: i64, segment: &str| LayerDesc {
         name: name.into(),
@@ -304,6 +376,8 @@ pub fn builtin_ref_manifest() -> Manifest {
         in_mask,
         out_mask: -1,
         segment: segment.into(),
+        input: String::new(),
+        act: true,
     };
     let layers = vec![
         conv("c1", 3, 16, 16, -1, 0, "seg1"),
@@ -321,43 +395,295 @@ pub fn builtin_ref_manifest() -> Manifest {
         .zip([16usize, 16, 32, 32, 64, 64])
         .map(|(name, channels)| MaskSlot { name: (*name).into(), channels })
         .collect();
-    let param_shapes = layers
-        .iter()
-        .flat_map(|l| {
-            let w = match l.kind {
-                LayerKind::Dense => vec![l.cin, l.cout],
-                LayerKind::DwConv => vec![l.k, l.k, 1, l.cout],
-                LayerKind::Conv => vec![l.k, l.k, l.cin, l.cout],
-            };
-            [w, vec![l.cout]]
-        })
-        .collect();
-    let mut graphs = BTreeMap::new();
-    for tag in ["init", "train", "eval"] {
-        graphs.insert(tag.to_string(), format!("ref://mini_vgg/{tag}"));
-    }
-    for stage in 1..=3u8 {
-        for batch in [1usize, 8] {
-            let tag = ArchManifest::stage_graph_tag(stage, batch);
-            graphs.insert(tag.clone(), format!("ref://mini_vgg/{tag}"));
-        }
-    }
-    let arch = ArchManifest {
+    let param_shapes = ref_param_shapes(&layers);
+    ArchManifest {
         name: "mini_vgg".into(),
         num_classes: 20,
         layers,
         mask_slots,
         param_shapes,
-        graphs,
+        graphs: ref_graph_map("mini_vgg"),
         train_batch: 32,
         eval_batch: 64,
         stage_batch: 1,
         stage_batches: vec![1, 8],
         stage_h1_shape: vec![1, 16, 16, 16],
         stage_h2_shape: vec![1, 8, 8, 32],
+        joins: Vec::new(),
+    }
+}
+
+/// Host-side MiniResNet (`archs.py::MiniResNet`): three stages of two
+/// basic blocks on a 16x16x3 input.  Residual joins carry the *stage*
+/// mask slot and every pre-join conv (`*b`) and 1x1 projection (`*p`)
+/// writes into that same slot (`act: false` — their non-linearity lives
+/// in the join), so both operands of every skip add share one live set —
+/// the coupled-channel constraint residual pruning always imposes.
+/// Interior `*a` convs own independent block mask slots.
+fn mini_resnet_arch() -> ArchManifest {
+    let conv = |name: &str,
+                k: usize,
+                cin: usize,
+                cout: usize,
+                stride: usize,
+                hout: usize,
+                in_mask: i64,
+                out_mask: i64,
+                segment: &str,
+                input: &str,
+                act: bool| LayerDesc {
+        name: name.into(),
+        kind: LayerKind::Conv,
+        k,
+        cin,
+        cout,
+        stride,
+        hout,
+        wout: hout,
+        in_mask,
+        out_mask,
+        segment: segment.into(),
+        input: input.into(),
+        act,
     };
+    let dense = |name: &str, cin: usize, in_mask: i64, segment: &str, input: &str| LayerDesc {
+        name: name.into(),
+        kind: LayerKind::Dense,
+        k: 1,
+        cin,
+        cout: 20,
+        stride: 1,
+        hout: 1,
+        wout: 1,
+        in_mask,
+        out_mask: -1,
+        segment: segment.into(),
+        input: input.into(),
+        act: true,
+    };
+    let join = |name: &str, a: &str, b: &str, out_mask: i64, segment: &str| JoinDesc {
+        name: name.into(),
+        a: a.into(),
+        b: Some(b.into()),
+        out_mask,
+        segment: segment.into(),
+    };
+    // Mask slots: 0=s1 1=b11 2=b12 3=s2 4=b21 5=b22 6=s3 7=b31 8=b32.
+    let layers = vec![
+        conv("stem", 3, 3, 16, 1, 16, -1, 0, "seg1", "@input", true),
+        conv("b11a", 3, 16, 16, 1, 16, 0, 1, "seg1", "stem", true),
+        conv("b11b", 3, 16, 16, 1, 16, 1, 0, "seg1", "b11a", false),
+        conv("b12a", 3, 16, 16, 1, 16, 0, 2, "seg1", "j11", true),
+        conv("b12b", 3, 16, 16, 1, 16, 2, 0, "seg1", "b12a", false),
+        conv("b21a", 3, 16, 32, 2, 8, 0, 4, "seg2", "j12", true),
+        conv("b21b", 3, 32, 32, 1, 8, 4, 3, "seg2", "b21a", false),
+        conv("b21p", 1, 16, 32, 2, 8, 0, 3, "seg2", "j12", false),
+        conv("b22a", 3, 32, 32, 1, 8, 3, 5, "seg2", "j21", true),
+        conv("b22b", 3, 32, 32, 1, 8, 5, 3, "seg2", "b22a", false),
+        conv("b31a", 3, 32, 64, 2, 4, 3, 7, "seg3", "j22", true),
+        conv("b31b", 3, 64, 64, 1, 4, 7, 6, "seg3", "b31a", false),
+        conv("b31p", 1, 32, 64, 2, 4, 3, 6, "seg3", "j22", false),
+        conv("b32a", 3, 64, 64, 1, 4, 6, 8, "seg3", "j31", true),
+        conv("b32b", 3, 64, 64, 1, 4, 8, 6, "seg3", "b32a", false),
+        dense("fc", 64, 6, "seg3", "j32"),
+        dense("exit1_fc", 16, 0, "exit1", ""),
+        dense("exit2_fc", 32, 3, "exit2", ""),
+    ];
+    let joins = vec![
+        join("j11", "b11b", "stem", 0, "seg1"),
+        join("j12", "b12b", "j11", 0, "seg1"),
+        join("j21", "b21b", "b21p", 3, "seg2"),
+        join("j22", "b22b", "j21", 3, "seg2"),
+        join("j31", "b31b", "b31p", 6, "seg3"),
+        join("j32", "b32b", "j31", 6, "seg3"),
+    ];
+    let mask_slots = ["s1", "b11", "b12", "s2", "b21", "b22", "s3", "b31", "b32"]
+        .iter()
+        .zip([16usize, 16, 16, 32, 32, 32, 64, 64, 64])
+        .map(|(name, channels)| MaskSlot { name: (*name).into(), channels })
+        .collect();
+    let param_shapes = ref_param_shapes(&layers);
+    ArchManifest {
+        name: "mini_resnet".into(),
+        num_classes: 20,
+        layers,
+        mask_slots,
+        param_shapes,
+        graphs: ref_graph_map("mini_resnet"),
+        train_batch: 32,
+        eval_batch: 64,
+        stage_batch: 1,
+        stage_batches: vec![1, 8],
+        stage_h1_shape: vec![1, 16, 16, 16],
+        stage_h2_shape: vec![1, 8, 8, 32],
+        joins,
+    }
+}
+
+/// Host-side MiniMobileNet (`archs.py::MiniMobileNet`): inverted
+/// residual bottlenecks — 1x1 expand, 3x3 depthwise, 1x1 linear project
+/// (`act: false`).  Blocks 1-4 change channel counts so their outputs
+/// are *unary* terminals (`b: None` — act-quant + mask, no relu, no
+/// add); block 5 projects back to block 4's width and is the one true
+/// residual join.  Depthwise convs share their expand slot's mask
+/// (depthwise channels are structurally coupled to their inputs).
+fn mini_mobilenet_arch() -> ArchManifest {
+    let conv = |name: &str,
+                kind: LayerKind,
+                k: usize,
+                cin: usize,
+                cout: usize,
+                stride: usize,
+                hout: usize,
+                in_mask: i64,
+                out_mask: i64,
+                segment: &str,
+                input: &str,
+                act: bool| LayerDesc {
+        name: name.into(),
+        kind,
+        k,
+        cin,
+        cout,
+        stride,
+        hout,
+        wout: hout,
+        in_mask,
+        out_mask,
+        segment: segment.into(),
+        input: input.into(),
+        act,
+    };
+    let unary = |name: &str, a: &str, out_mask: i64, segment: &str| JoinDesc {
+        name: name.into(),
+        a: a.into(),
+        b: None,
+        out_mask,
+        segment: segment.into(),
+    };
+    use LayerKind::{Conv, DwConv};
+    // Mask slots: 0=stem 1=e1 2=o1 3=e2 4=o2 5=e3 6=o3 7=e4 8=o4 9=e5.
+    let layers = vec![
+        conv("stem", Conv, 3, 3, 16, 1, 16, -1, 0, "seg1", "@input", true),
+        conv("b1e", Conv, 1, 16, 32, 1, 16, 0, 1, "seg1", "stem", true),
+        conv("b1d", DwConv, 3, 32, 32, 1, 16, 1, 1, "seg1", "b1e", true),
+        conv("b1p", Conv, 1, 32, 24, 1, 16, 1, 2, "seg1", "b1d", false),
+        conv("b2e", Conv, 1, 24, 48, 1, 16, 2, 3, "seg1", "t1", true),
+        conv("b2d", DwConv, 3, 48, 48, 2, 8, 3, 3, "seg1", "b2e", true),
+        conv("b2p", Conv, 1, 48, 32, 1, 8, 3, 4, "seg1", "b2d", false),
+        conv("b3e", Conv, 1, 32, 64, 1, 8, 4, 5, "seg2", "t2", true),
+        conv("b3d", DwConv, 3, 64, 64, 2, 4, 5, 5, "seg2", "b3e", true),
+        conv("b3p", Conv, 1, 64, 64, 1, 4, 5, 6, "seg2", "b3d", false),
+        conv("b4e", Conv, 1, 64, 128, 1, 4, 6, 7, "seg3", "t3", true),
+        conv("b4d", DwConv, 3, 128, 128, 1, 4, 7, 7, "seg3", "b4e", true),
+        conv("b4p", Conv, 1, 128, 96, 1, 4, 7, 8, "seg3", "b4d", false),
+        conv("b5e", Conv, 1, 96, 192, 1, 4, 8, 9, "seg3", "t4", true),
+        conv("b5d", DwConv, 3, 192, 192, 1, 4, 9, 9, "seg3", "b5e", true),
+        conv("b5p", Conv, 1, 192, 96, 1, 4, 9, 8, "seg3", "b5d", false),
+        LayerDesc {
+            name: "fc".into(),
+            kind: LayerKind::Dense,
+            k: 1,
+            cin: 96,
+            cout: 20,
+            stride: 1,
+            hout: 1,
+            wout: 1,
+            in_mask: 8,
+            out_mask: -1,
+            segment: "seg3".into(),
+            input: "j5".into(),
+            act: true,
+        },
+        LayerDesc {
+            name: "exit1_fc".into(),
+            kind: LayerKind::Dense,
+            k: 1,
+            cin: 32,
+            cout: 20,
+            stride: 1,
+            hout: 1,
+            wout: 1,
+            in_mask: 4,
+            out_mask: -1,
+            segment: "exit1".into(),
+            input: String::new(),
+            act: true,
+        },
+        LayerDesc {
+            name: "exit2_fc".into(),
+            kind: LayerKind::Dense,
+            k: 1,
+            cin: 64,
+            cout: 20,
+            stride: 1,
+            hout: 1,
+            wout: 1,
+            in_mask: 6,
+            out_mask: -1,
+            segment: "exit2".into(),
+            input: String::new(),
+            act: true,
+        },
+    ];
+    let joins = vec![
+        unary("t1", "b1p", 2, "seg1"),
+        unary("t2", "b2p", 4, "seg1"),
+        unary("t3", "b3p", 6, "seg2"),
+        unary("t4", "b4p", 8, "seg3"),
+        JoinDesc {
+            name: "j5".into(),
+            a: "b5p".into(),
+            b: Some("t4".into()),
+            out_mask: 8,
+            segment: "seg3".into(),
+        },
+    ];
+    let mask_slots = ["stem", "e1", "o1", "e2", "o2", "e3", "o3", "e4", "o4", "e5"]
+        .iter()
+        .zip([16usize, 32, 24, 48, 32, 64, 64, 128, 96, 192])
+        .map(|(name, channels)| MaskSlot { name: (*name).into(), channels })
+        .collect();
+    let param_shapes = ref_param_shapes(&layers);
+    ArchManifest {
+        name: "mini_mobilenet".into(),
+        num_classes: 20,
+        layers,
+        mask_slots,
+        param_shapes,
+        graphs: ref_graph_map("mini_mobilenet"),
+        train_batch: 32,
+        eval_batch: 64,
+        stage_batch: 1,
+        stage_batches: vec![1, 8],
+        stage_h1_shape: vec![1, 8, 8, 32],
+        stage_h2_shape: vec![1, 4, 4, 64],
+        joins,
+    }
+}
+
+/// Arch names served by [`builtin_ref_manifest`] — the hermetic test
+/// matrix iterates exactly this list.
+pub const BUILTIN_REF_ARCHS: [&str; 3] = ["mini_vgg", "mini_resnet", "mini_mobilenet"];
+
+/// Host-side replica of the MiniVGG / MiniResNet / MiniMobileNet
+/// manifests (`python/compile/archs.py` + the aot.py manifest fields),
+/// so the reference backend can drive the whole CLI with no
+/// `make artifacts` step.  The graph maps declare every tag the AOT path
+/// would lower (the ref backend resolves tags against these maps; the
+/// `ref://` values are never opened).
+///
+/// One geometry difference from the AOT lowering is deliberate: the ref
+/// backend pools lazily *before* the conv that needs a smaller input, so
+/// its exit-cut features are the pre-pool segment outputs
+/// (`stage_h1_shape` [1, 16, 16, 16] instead of the JAX cut's
+/// [1, 8, 8, 16] for mini_vgg).  Stage graphs and eval share the cut by
+/// construction, so the serving contract is unaffected.
+pub fn builtin_ref_manifest() -> Manifest {
     let mut archs = BTreeMap::new();
-    archs.insert("mini_vgg".to_string(), Arc::new(arch));
+    archs.insert("mini_vgg".to_string(), Arc::new(mini_vgg_arch()));
+    archs.insert("mini_resnet".to_string(), Arc::new(mini_resnet_arch()));
+    archs.insert("mini_mobilenet".to_string(), Arc::new(mini_mobilenet_arch()));
     Manifest {
         num_classes: 20,
         input_hw: 16,
@@ -880,6 +1206,8 @@ mod tests {
                 in_mask: -1,
                 out_mask: 0,
                 segment: "seg1".into(),
+                input: String::new(),
+                act: true,
             },
             LayerDesc {
                 name: "fc".into(),
@@ -893,6 +1221,8 @@ mod tests {
                 in_mask: 0,
                 out_mask: -1,
                 segment: "seg3".into(),
+                input: String::new(),
+                act: true,
             },
             LayerDesc {
                 name: "exit1_fc".into(),
@@ -906,6 +1236,8 @@ mod tests {
                 in_mask: 0,
                 out_mask: -1,
                 segment: "exit1".into(),
+                input: String::new(),
+                act: true,
             },
         ];
         Arc::new(ArchManifest {
@@ -928,6 +1260,7 @@ mod tests {
             stage_batches: vec![1],
             stage_h1_shape: vec![1, 8, 8, 8],
             stage_h2_shape: vec![1, 8, 8, 8],
+            joins: Vec::new(),
         })
     }
 
@@ -1077,24 +1410,59 @@ mod tests {
     #[test]
     fn ref_builtin_manifest_is_consistent() {
         let m = builtin_ref_manifest();
-        let arch = m.arch("mini_vgg").unwrap();
-        assert_eq!(arch.param_shapes.len(), 2 * arch.layers.len());
-        for l in &arch.layers {
-            if l.out_mask >= 0 {
-                assert_eq!(arch.mask_slots[l.out_mask as usize].channels, l.cout);
+        for name in BUILTIN_REF_ARCHS {
+            let arch = m.arch(name).unwrap();
+            assert_eq!(arch.name, name);
+            assert_eq!(arch.param_shapes.len(), 2 * arch.layers.len());
+            for l in &arch.layers {
+                if l.out_mask >= 0 {
+                    assert_eq!(
+                        arch.mask_slots[l.out_mask as usize].channels,
+                        l.cout,
+                        "{name}/{}",
+                        l.name
+                    );
+                }
+                if l.in_mask >= 0 {
+                    assert_eq!(
+                        arch.mask_slots[l.in_mask as usize].channels,
+                        l.cin,
+                        "{name}/{}",
+                        l.name
+                    );
+                }
             }
+            for j in &arch.joins {
+                assert!(j.out_mask >= 0, "{name}/{}: builtin joins are masked", j.name);
+                // Join operands must resolve to a declared node.
+                for op in std::iter::once(&j.a).chain(j.b.as_ref()) {
+                    assert!(
+                        arch.layers.iter().any(|l| &l.name == op)
+                            || arch.joins.iter().any(|jj| &jj.name == op),
+                        "{name}/{}: unknown operand {op}",
+                        j.name
+                    );
+                }
+            }
+            for tag in [
+                "init", "train", "eval", "stage1", "stage2", "stage3", "stage1_b8", "stage2_b8",
+                "stage3_b8",
+            ] {
+                assert!(arch.graphs.contains_key(tag), "{name}: missing graph tag {tag}");
+            }
+            assert_eq!(arch.best_stage_batch(8), 8);
+            assert_eq!(arch.best_stage_batch(7), 1);
+            let st = ModelState::init_host(arch.clone(), 1);
+            assert_eq!(st.params.len(), arch.num_params());
+            assert_eq!(st.masks.len(), arch.mask_slots.len());
         }
-        for tag in [
-            "init", "train", "eval", "stage1", "stage2", "stage3", "stage1_b8", "stage2_b8",
-            "stage3_b8",
-        ] {
-            assert!(arch.graphs.contains_key(tag), "missing graph tag {tag}");
-        }
-        assert_eq!(arch.best_stage_batch(8), 8);
-        assert_eq!(arch.best_stage_batch(7), 1);
-        let st = ModelState::init_host(arch.clone(), 1);
-        assert_eq!(st.params.len(), arch.num_params());
-        assert_eq!(st.masks.len(), 6);
+        assert_eq!(
+            m.arch("mini_resnet").unwrap().joins.len(),
+            6,
+            "mini_resnet has one join per basic block"
+        );
+        assert_eq!(m.arch("mini_vgg").unwrap().joins.len(), 0);
+        assert_eq!(m.arch("mini_mobilenet").unwrap().mask_slots.len(), 10);
     }
 
     #[test]

@@ -51,7 +51,7 @@ use super::kernels::{self, ConvGeom};
 use super::pool;
 use super::scratch::Scratch;
 use super::simd;
-use super::{recycle_cow, GraphKind, RefNet};
+use super::{dag, peek_value, recycle_cow, release_value, take_value, GraphKind, RefNet};
 use crate::runtime::{DeviceBuffer, GraphExec, ResidencyUnsupported, StatsCell};
 
 /// Load one compressed graph (`eval` or `stageN[_bB]`), mirroring
@@ -219,25 +219,73 @@ impl CompressedNet {
             };
             ensure!(ok, "layer `{}`: inconsistent packed form `{}`", l.name, pl.form.tag());
         }
-        // Compaction must agree along the chain: each consumer's live
-        // input set is its producer's live output set.
-        for w in base.body.windows(2) {
-            let (p, l) = (w[0], w[1]);
-            ensure!(
-                cm.layers[l].in_live == cm.layers[p].out_live,
-                "layer `{}` live inputs disagree with `{}` live outputs",
-                arch.layers[l].name,
-                arch.layers[p].name
-            );
+        // Compaction must agree along every declared edge: a consumer's
+        // live input set is its producer's live output set, and both
+        // operands of a join carry the same live set (the dense path's
+        // mask-slot agreement, restated structurally).  `node_src[ni]`
+        // names the layer whose `out_live` defines node `ni`'s channels
+        // (joins propagate their operand's source).
+        let d = &base.dag;
+        let mut node_src: Vec<Option<usize>> = vec![None; d.nodes.len()];
+        for seg in 0..3 {
+            // Live set flowing in with the stage input: the previous
+            // effective terminal's (None for the raw seg1 image).
+            let seg_src: Option<usize> = if seg == 0 {
+                None
+            } else {
+                d.effective_terminal(seg - 1).and_then(|t| node_src[t])
+            };
+            let src_of = |r: dag::NodeRef, node_src: &[Option<usize>]| match r {
+                dag::NodeRef::Input => seg_src,
+                dag::NodeRef::Node(p) => node_src[p],
+            };
+            for &ni in d.seg_range(seg) {
+                let node = &d.nodes[ni];
+                match node.op {
+                    dag::NodeOp::Conv { li } | dag::NodeOp::Dense { li } => {
+                        if let Some(p) = src_of(node.inputs[0], &node_src) {
+                            ensure!(
+                                cm.layers[li].in_live == cm.layers[p].out_live,
+                                "layer `{}` live inputs disagree with `{}` live outputs",
+                                arch.layers[li].name,
+                                arch.layers[p].name
+                            );
+                        }
+                        node_src[ni] = Some(li);
+                    }
+                    dag::NodeOp::Join { .. } => {
+                        let a = src_of(node.inputs[0], &node_src);
+                        let b = src_of(node.inputs[1], &node_src);
+                        if let (Some(pa), Some(pb)) = (a, b) {
+                            ensure!(
+                                cm.layers[pa].out_live == cm.layers[pb].out_live,
+                                "join `{}`: operands `{}` and `{}` disagree on live channels",
+                                node.name,
+                                arch.layers[pa].name,
+                                arch.layers[pb].name
+                            );
+                        }
+                        node_src[ni] = a.or(b);
+                    }
+                    dag::NodeOp::Output { .. } => {
+                        node_src[ni] = src_of(node.inputs[0], &node_src);
+                    }
+                }
+            }
         }
-        for (head, cut) in [(base.exit1, base.n1), (base.exit2, base.n2)] {
+        for (head, seg) in [(base.exit1, 0usize), (base.exit2, 1)] {
             if let Some(li) = head {
-                let cut_li = base.body[cut - 1];
+                let cut = d.effective_terminal(seg).and_then(|t| node_src[t]).ok_or_else(|| {
+                    anyhow!(
+                        "exit head `{}` cuts a segment with no live-set producer",
+                        arch.layers[li].name
+                    )
+                })?;
                 ensure!(
-                    cm.layers[li].in_live == cm.layers[cut_li].out_live,
+                    cm.layers[li].in_live == cm.layers[cut].out_live,
                     "exit head `{}` live inputs disagree with cut layer `{}`",
                     arch.layers[li].name,
-                    arch.layers[cut_li].name
+                    arch.layers[cut].name
                 );
             }
         }
@@ -302,8 +350,12 @@ impl CompressedNet {
         } else {
             rmsnorm_live_inplace(&mut y, &pl.out_live, l.cout, pl.live_divisor);
         }
-        kernels::relu_inplace(&mut y);
-        kernels::act_quant_inplace(&mut y, self.cm.qbits.act);
+        if l.act {
+            // `act: false` layers (pre-join convs / projections) stop at
+            // the norm; their join applies relu + act_quant.
+            kernels::relu_inplace(&mut y);
+            kernels::act_quant_inplace(&mut y, self.cm.qbits.act);
+        }
         Ok(y)
     }
 
@@ -352,54 +404,104 @@ impl CompressedNet {
         }
     }
 
-    fn forward_range(
-        &self,
-        input: &Tensor,
-        range: std::ops::Range<usize>,
-        scratch: &mut Scratch,
-    ) -> Result<Tensor> {
-        let mut cur: Option<Tensor> = None;
-        for bi in range {
-            let li = self.base.body[bi];
-            match self.cm.arch.layers[li].kind {
-                LayerKind::Dense => {
-                    let out = {
-                        let xr = cur.as_ref().unwrap_or(input);
-                        self.dense_forward(li, xr, scratch)?
-                    };
-                    if let Some(old) = cur.replace(out) {
-                        scratch.recycle_tensor(old);
-                    }
-                }
-                _ => {
-                    let xin = match cur.take() {
-                        Some(t) => Cow::Owned(t),
-                        None => Cow::Borrowed(input),
-                    };
-                    cur = Some(self.conv_forward(li, xin, scratch)?);
-                }
+    /// Own a (possibly borrowed) operand value so a join can accumulate
+    /// into it in place.
+    fn own(a: Cow<'_, Tensor>, scratch: &mut Scratch) -> Tensor {
+        match a {
+            Cow::Owned(t) => t,
+            Cow::Borrowed(t) => {
+                let mut buf = Tensor::new(t.shape.clone(), scratch.take_full(t.len()));
+                buf.data.copy_from_slice(&t.data);
+                buf
             }
         }
-        Ok(match cur {
-            Some(t) => t,
-            None => input.clone(),
-        })
+    }
+
+    /// Execute one segment of the DAG over compacted feature maps: the
+    /// dense `forward_segment` minus traces (inference-only) and mask
+    /// multiplies (structural — dead channels no longer exist).  Same
+    /// canonical node order, same refcounted buffer hand-off.
+    fn forward_segment(&self, seg: usize, input: &Tensor, scratch: &mut Scratch) -> Result<Tensor> {
+        let d = &self.base.dag;
+        let range = d.seg_range(seg);
+        if range.is_empty() {
+            // Empty segment: the stage carries its input through unchanged.
+            return Ok(input.clone());
+        }
+        let term = d.terminal[seg].expect("non-empty segment has a terminal");
+        let n = d.nodes.len();
+        let mut values: Vec<Option<Tensor>> = (0..n).map(|_| None).collect();
+        let mut refs: Vec<usize> = vec![0; n];
+        for &ni in range {
+            refs[ni] = d.consumers[ni].len();
+        }
+        refs[term] += 1;
+        for &ni in range {
+            let node = &d.nodes[ni];
+            let out = match node.op {
+                dag::NodeOp::Conv { li } => {
+                    let xin = take_value(&mut values, &mut refs, node.inputs[0], input);
+                    self.conv_forward(li, xin, scratch)?
+                }
+                dag::NodeOp::Dense { li } => {
+                    let out = {
+                        let feat = peek_value(&values, node.inputs[0], input);
+                        self.dense_forward(li, feat, scratch)?
+                    };
+                    release_value(&mut values, &mut refs, node.inputs[0], scratch);
+                    out
+                }
+                dag::NodeOp::Join { .. } => {
+                    let a = take_value(&mut values, &mut refs, node.inputs[0], input);
+                    let mut z = Self::own(a, scratch);
+                    {
+                        let bt = peek_value(&values, node.inputs[1], input);
+                        ensure!(
+                            z.len() == bt.len(),
+                            "join `{}`: operand sizes {} vs {} (batch mismatch)",
+                            node.name,
+                            z.len(),
+                            bt.len()
+                        );
+                        kernels::add_assign(&mut z, bt);
+                    }
+                    release_value(&mut values, &mut refs, node.inputs[1], scratch);
+                    kernels::relu_inplace(&mut z);
+                    kernels::act_quant_inplace(&mut z, self.cm.qbits.act);
+                    z
+                }
+                dag::NodeOp::Output { .. } => {
+                    let a = take_value(&mut values, &mut refs, node.inputs[0], input);
+                    let mut z = Self::own(a, scratch);
+                    kernels::act_quant_inplace(&mut z, self.cm.qbits.act);
+                    z
+                }
+            };
+            values[ni] = Some(out);
+        }
+        let out = values[term].take().expect("terminal value computed");
+        for v in values.iter_mut() {
+            if let Some(t) = v.take() {
+                scratch.recycle_tensor(t);
+            }
+        }
+        Ok(out)
     }
 
     fn stage1(&self, x: &Tensor, scratch: &mut Scratch) -> Result<(Tensor, Tensor)> {
-        let h1 = self.forward_range(x, 0..self.base.n1, scratch)?;
+        let h1 = self.forward_segment(0, x, scratch)?;
         let e1 = self.exit_forward(self.base.exit1, &h1, scratch)?;
         Ok((h1, e1))
     }
 
     fn stage2(&self, h1: &Tensor, scratch: &mut Scratch) -> Result<(Tensor, Tensor)> {
-        let h2 = self.forward_range(h1, self.base.n1..self.base.n2, scratch)?;
+        let h2 = self.forward_segment(1, h1, scratch)?;
         let e2 = self.exit_forward(self.base.exit2, &h2, scratch)?;
         Ok((h2, e2))
     }
 
     fn stage3(&self, h2: &Tensor, scratch: &mut Scratch) -> Result<Tensor> {
-        self.forward_range(h2, self.base.n2..self.base.body.len(), scratch)
+        self.forward_segment(2, h2, scratch)
     }
 }
 

@@ -1,0 +1,476 @@
+//! Manifest topology for the reference backend: the DAG of conv/dense
+//! layers and join nodes, topologically ordered and validated at load
+//! time.
+//!
+//! The manifest declares edges two ways:
+//!
+//! * `LayerDesc::input` names the producer node a body layer consumes
+//!   (`"@input"` = the raw graph input, legal only in seg1; `""` = the
+//!   previous body layer in declaration order — the legacy feed-forward
+//!   chain, kept bit-identical for pre-DAG manifests).
+//! * `ArchManifest::joins` declares parameter-free join nodes:
+//!   `b: Some` is the residual add `relu(a + b)` -> act_quant -> mask
+//!   (`archs.py::finish_block`), `b: None` the unary linear-bottleneck
+//!   terminal (act_quant -> mask, no relu).
+//!
+//! [`Dag::build`] resolves every edge, Kahn-sorts the nodes with a
+//! deterministic (segment, declaration-index) priority — so there is
+//! exactly **one** canonical execution order per manifest — and
+//! validates:
+//!
+//! * acyclicity (a cycle names a concrete unsatisfiable edge),
+//! * channel agreement along every edge and across join operands,
+//! * spatial agreement across join operands,
+//! * mask-slot width at every masked join,
+//! * segment structure: edges never point backward, each non-empty
+//!   segment has exactly one terminal node, and only that terminal may
+//!   feed a later segment (it becomes the h1/h2 stage cut — references
+//!   to it from later segments are rewritten to [`NodeRef::Input`] so
+//!   each segment executes self-contained against its stage input),
+//! * the body holds exactly one dense classifier and it is the seg3
+//!   terminal.
+//!
+//! Execution (forward in `order`, backward in exact reverse, gradient
+//! fan-in accumulated in reverse-topological consumer order) lives in
+//! the parent module; this file is pure topology.
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use crate::models::{ArchManifest, LayerKind};
+
+/// Reference to a node's producer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeRef {
+    /// The executed segment's external input: the raw image for seg1,
+    /// the previous stage's carried feature map (h1/h2) for seg2/seg3.
+    Input,
+    /// Another node, by id (index into [`Dag::nodes`]).
+    Node(usize),
+}
+
+/// What a node computes; geometry lives on the [`Node`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeOp {
+    /// The conv/dwconv pipeline of `arch.layers[li]`.
+    Conv { li: usize },
+    /// The dense classifier pipeline of `arch.layers[li]`.
+    Dense { li: usize },
+    /// `relu(a + b)` -> act_quant -> mask (residual join).
+    Join { out_mask: i64 },
+    /// act_quant -> mask (unary terminal, no relu — linear bottleneck).
+    Output { out_mask: i64 },
+}
+
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub name: String,
+    pub op: NodeOp,
+    /// Producer refs: one for conv/dense/output, two for a binary join.
+    pub inputs: Vec<NodeRef>,
+    /// Segment rank 1..=3.
+    pub seg: u8,
+    /// Output channels (for joins: the agreed operand width).
+    pub cout: usize,
+    pub hout: usize,
+    pub wout: usize,
+}
+
+/// The validated topology (see module docs for the invariants).
+pub struct Dag {
+    pub nodes: Vec<Node>,
+    /// The canonical topological order over all nodes — segment-
+    /// contiguous (all seg1 nodes, then seg2, then seg3), declaration
+    /// index breaking ties.
+    pub order: Vec<usize>,
+    /// `order[..seg_end[0]]` is seg1, `order[seg_end[0]..seg_end[1]]`
+    /// seg2, the rest seg3.
+    pub seg_end: [usize; 3],
+    /// Node id of each non-empty segment's terminal (the h1 / h2 /
+    /// logits producer); `None` for an empty segment.
+    pub terminal: [Option<usize>; 3],
+    /// Same-segment consumers of each node, in topological order — the
+    /// forward refcount source, and (reversed) the canonical gradient
+    /// fan-in accumulation order.
+    pub consumers: Vec<Vec<usize>>,
+}
+
+fn seg_rank(s: &str) -> Option<u8> {
+    match s {
+        "seg1" => Some(1),
+        "seg2" => Some(2),
+        "seg3" => Some(3),
+        _ => None,
+    }
+}
+
+impl Dag {
+    /// Build and validate the topology for `arch`'s body layers
+    /// (`body` holds layer indices in declaration order, exit heads
+    /// excluded — those hang off the stage cuts, not the DAG).
+    pub fn build(arch: &ArchManifest, body: &[usize]) -> Result<Dag> {
+        ensure!(!body.is_empty(), "arch `{}` has no body layers", arch.name);
+        let nb = body.len();
+        let n = nb + arch.joins.len();
+
+        // ---- nodes (body layers first, joins after, declaration order) ----
+        let mut nodes: Vec<Node> = Vec::with_capacity(n);
+        let mut by_name = std::collections::BTreeMap::<&str, usize>::new();
+        for (i, &li) in body.iter().enumerate() {
+            let l = &arch.layers[li];
+            ensure!(l.name != "@input", "layer name `@input` is reserved");
+            ensure!(
+                by_name.insert(l.name.as_str(), i).is_none(),
+                "duplicate node name `{}`",
+                l.name
+            );
+            let op = match l.kind {
+                LayerKind::Dense => NodeOp::Dense { li },
+                _ => NodeOp::Conv { li },
+            };
+            nodes.push(Node {
+                name: l.name.clone(),
+                op,
+                inputs: Vec::new(),
+                seg: seg_rank(&l.segment)
+                    .ok_or_else(|| anyhow!("layer `{}`: unknown segment `{}`", l.name, l.segment))?,
+                cout: l.cout,
+                hout: l.hout,
+                wout: l.wout,
+            });
+        }
+        for (ji, j) in arch.joins.iter().enumerate() {
+            ensure!(j.name != "@input", "join name `@input` is reserved");
+            ensure!(
+                by_name.insert(j.name.as_str(), nb + ji).is_none(),
+                "duplicate node name `{}`",
+                j.name
+            );
+            let op = match j.b {
+                Some(_) => NodeOp::Join { out_mask: j.out_mask },
+                None => NodeOp::Output { out_mask: j.out_mask },
+            };
+            nodes.push(Node {
+                name: j.name.clone(),
+                op,
+                inputs: Vec::new(),
+                seg: seg_rank(&j.segment)
+                    .ok_or_else(|| anyhow!("join `{}`: unknown segment `{}`", j.name, j.segment))?,
+                // Filled from the operands once the order is known.
+                cout: 0,
+                hout: 0,
+                wout: 0,
+            });
+        }
+
+        // ---- edge resolution ----
+        // Legacy chain mode (pre-DAG manifests): no joins, no explicit
+        // inputs — compile the declaration-order chain, bit-identical to
+        // the former feed-forward walker.
+        let legacy =
+            arch.joins.is_empty() && body.iter().all(|&li| arch.layers[li].input.is_empty());
+        if legacy {
+            for (i, node) in nodes.iter_mut().enumerate() {
+                node.inputs = if i == 0 { vec![NodeRef::Input] } else { vec![NodeRef::Node(i - 1)] };
+            }
+        } else {
+            for (i, &li) in body.iter().enumerate() {
+                let l = &arch.layers[li];
+                ensure!(
+                    !l.input.is_empty(),
+                    "layer `{}`: missing `input` edge (a manifest with joins or explicit \
+                     edges must declare every producer)",
+                    l.name
+                );
+                let r = if l.input == "@input" {
+                    ensure!(
+                        nodes[i].seg == 1,
+                        "layer `{}` (seg{}) cannot consume `@input` (only seg1 reads the raw \
+                         input)",
+                        l.name,
+                        nodes[i].seg
+                    );
+                    NodeRef::Input
+                } else {
+                    match by_name.get(l.input.as_str()) {
+                        Some(&p) => NodeRef::Node(p),
+                        None => bail!("layer `{}`: unknown input node `{}`", l.name, l.input),
+                    }
+                };
+                nodes[i].inputs = vec![r];
+            }
+            for (ji, j) in arch.joins.iter().enumerate() {
+                let mut ins = Vec::new();
+                for opn in std::iter::once(&j.a).chain(j.b.as_ref()) {
+                    ensure!(
+                        opn != "@input",
+                        "join `{}`: operand `@input` is not a node (join operands must be \
+                         declared layers or joins)",
+                        j.name
+                    );
+                    match by_name.get(opn.as_str()) {
+                        Some(&p) => ins.push(NodeRef::Node(p)),
+                        None => bail!("join `{}`: unknown operand node `{}`", j.name, opn),
+                    }
+                }
+                nodes[nb + ji].inputs = ins;
+            }
+        }
+
+        // ---- edges never point backward across segments ----
+        for c in 0..n {
+            for ii in 0..nodes[c].inputs.len() {
+                if let NodeRef::Node(p) = nodes[c].inputs[ii] {
+                    ensure!(
+                        nodes[p].seg <= nodes[c].seg,
+                        "edge `{} -> {}`: producer in seg{} follows consumer in seg{}",
+                        nodes[p].name,
+                        nodes[c].name,
+                        nodes[p].seg,
+                        nodes[c].seg
+                    );
+                }
+            }
+        }
+
+        // ---- Kahn topological sort, (segment, declaration-index) priority ----
+        let mut indeg = vec![0usize; n];
+        for (c, node) in nodes.iter().enumerate() {
+            indeg[c] = node.inputs.iter().filter(|r| matches!(r, NodeRef::Node(_))).count();
+        }
+        let mut emitted = vec![false; n];
+        let mut order = Vec::with_capacity(n);
+        for _ in 0..n {
+            let mut pick: Option<usize> = None;
+            for i in 0..n {
+                if !emitted[i] && indeg[i] == 0 {
+                    let better = match pick {
+                        None => true,
+                        Some(b) => (nodes[i].seg, i) < (nodes[b].seg, b),
+                    };
+                    if better {
+                        pick = Some(i);
+                    }
+                }
+            }
+            let Some(i) = pick else { break };
+            emitted[i] = true;
+            order.push(i);
+            for c in 0..n {
+                if !emitted[c] {
+                    let hits = nodes[c]
+                        .inputs
+                        .iter()
+                        .filter(|r| matches!(r, NodeRef::Node(p) if *p == i))
+                        .count();
+                    indeg[c] -= hits;
+                }
+            }
+        }
+        if order.len() < n {
+            // Deterministic diagnostic: the first stuck node (declaration
+            // order) and its first unsatisfied producer name the cycle.
+            let c = (0..n).find(|&i| !emitted[i]).unwrap();
+            let p = nodes[c]
+                .inputs
+                .iter()
+                .find_map(|r| match r {
+                    NodeRef::Node(p) if !emitted[*p] => Some(*p),
+                    _ => None,
+                })
+                .unwrap_or(c);
+            bail!(
+                "arch `{}`: dependency cycle: edge `{} -> {}` can never be satisfied",
+                arch.name,
+                nodes[p].name,
+                nodes[c].name
+            );
+        }
+
+        // ---- per-edge shape validation; join geometry from operands ----
+        for &i in &order {
+            match nodes[i].op {
+                NodeOp::Conv { li } | NodeOp::Dense { li } => {
+                    let l = &arch.layers[li];
+                    if let NodeRef::Node(p) = nodes[i].inputs[0] {
+                        ensure!(
+                            nodes[p].cout == l.cin,
+                            "edge `{} -> {}`: `{}` expects cin {}, `{}` produces cout {}",
+                            nodes[p].name,
+                            nodes[i].name,
+                            nodes[i].name,
+                            l.cin,
+                            nodes[p].name,
+                            nodes[p].cout
+                        );
+                    }
+                }
+                NodeOp::Join { out_mask } | NodeOp::Output { out_mask } => {
+                    let a = match nodes[i].inputs[0] {
+                        NodeRef::Node(p) => p,
+                        NodeRef::Input => unreachable!("join operands resolve to nodes"),
+                    };
+                    let (cout, hout, wout) = (nodes[a].cout, nodes[a].hout, nodes[a].wout);
+                    if let Some(NodeRef::Node(b)) = nodes[i].inputs.get(1).copied() {
+                        ensure!(
+                            nodes[b].cout == cout,
+                            "join `{}`: operands `{}` (cout {}) and `{}` (cout {}) disagree",
+                            nodes[i].name,
+                            nodes[a].name,
+                            cout,
+                            nodes[b].name,
+                            nodes[b].cout
+                        );
+                        ensure!(
+                            nodes[b].hout == hout && nodes[b].wout == wout,
+                            "join `{}`: operands `{}` ({}x{}) and `{}` ({}x{}) differ spatially",
+                            nodes[i].name,
+                            nodes[a].name,
+                            hout,
+                            wout,
+                            nodes[b].name,
+                            nodes[b].hout,
+                            nodes[b].wout
+                        );
+                    }
+                    if out_mask >= 0 {
+                        let slot = arch.mask_slots.get(out_mask as usize).ok_or_else(|| {
+                            anyhow!("join `{}`: mask slot {} undeclared", nodes[i].name, out_mask)
+                        })?;
+                        ensure!(
+                            slot.channels == cout,
+                            "join `{}`: mask slot {} covers {} channels, join has {}",
+                            nodes[i].name,
+                            out_mask,
+                            slot.channels,
+                            cout
+                        );
+                    }
+                    nodes[i].cout = cout;
+                    nodes[i].hout = hout;
+                    nodes[i].wout = wout;
+                }
+            }
+        }
+
+        // ---- segment structure: consumers, terminals, stage cuts ----
+        let mut consumers: Vec<Vec<usize>> = vec![Vec::new(); n];
+        let mut cross: Vec<(usize, usize)> = Vec::new();
+        for &c in &order {
+            for r in &nodes[c].inputs {
+                if let NodeRef::Node(p) = *r {
+                    if nodes[p].seg == nodes[c].seg {
+                        consumers[p].push(c);
+                    } else {
+                        cross.push((p, c));
+                    }
+                }
+            }
+        }
+        let mut seg_n = [0usize; 3];
+        for node in &nodes {
+            seg_n[(node.seg - 1) as usize] += 1;
+        }
+        let mut terminal: [Option<usize>; 3] = [None; 3];
+        for &i in &order {
+            if consumers[i].is_empty() {
+                let s = (nodes[i].seg - 1) as usize;
+                if let Some(t) = terminal[s] {
+                    bail!(
+                        "seg{}: multiple terminal nodes (`{}`, `{}`): exactly one node may \
+                         produce the stage output",
+                        nodes[i].seg,
+                        nodes[t].name,
+                        nodes[i].name
+                    );
+                }
+                terminal[s] = Some(i);
+            }
+        }
+        for &(p, c) in &cross {
+            let ps = (nodes[p].seg - 1) as usize;
+            ensure!(
+                terminal[ps] == Some(p),
+                "edge `{} -> {}`: only the seg{} terminal may feed a later segment",
+                nodes[p].name,
+                nodes[c].name,
+                nodes[p].seg
+            );
+            for s in ps + 1..(nodes[c].seg - 1) as usize {
+                ensure!(
+                    seg_n[s] == 0,
+                    "edge `{} -> {}` skips non-empty seg{}",
+                    nodes[p].name,
+                    nodes[c].name,
+                    s + 1
+                );
+            }
+        }
+        // The classifier: exactly one dense node, and it is the seg3
+        // terminal (so `stage3` always produces logits).
+        let dense: Vec<usize> = (0..n)
+            .filter(|&i| matches!(nodes[i].op, NodeOp::Dense { .. }))
+            .collect();
+        ensure!(
+            dense.len() == 1,
+            "arch `{}`: the body must contain exactly one dense classifier (found {})",
+            arch.name,
+            dense.len()
+        );
+        ensure!(
+            terminal[2] == Some(dense[0]),
+            "arch `{}`: the dense classifier `{}` must be the seg3 terminal",
+            arch.name,
+            nodes[dense[0]].name
+        );
+
+        // ---- rewrite cross-segment refs to the stage input ----
+        // Each segment now executes self-contained: the previous stage's
+        // carried feature map arrives as `NodeRef::Input`.
+        for c in 0..n {
+            let cs = nodes[c].seg;
+            let mut new_inputs = std::mem::take(&mut nodes[c].inputs);
+            for r in &mut new_inputs {
+                if let NodeRef::Node(p) = *r {
+                    if nodes[p].seg < cs {
+                        *r = NodeRef::Input;
+                    }
+                }
+            }
+            nodes[c].inputs = new_inputs;
+        }
+
+        let seg_end = [
+            order.iter().take_while(|&&i| nodes[i].seg == 1).count(),
+            order.iter().take_while(|&&i| nodes[i].seg <= 2).count(),
+            n,
+        ];
+        Ok(Dag { nodes, order, seg_end, terminal, consumers })
+    }
+
+    /// Topologically ordered node ids of one segment (0-based: 0 = seg1).
+    pub fn seg_range(&self, seg: usize) -> &[usize] {
+        let start = if seg == 0 { 0 } else { self.seg_end[seg - 1] };
+        &self.order[start..self.seg_end[seg]]
+    }
+
+    /// Terminal of `seg` or, when that segment is empty, of the nearest
+    /// earlier non-empty segment (the value a stage cut carries forward).
+    pub fn effective_terminal(&self, seg: usize) -> Option<usize> {
+        (0..=seg).rev().find_map(|s| self.terminal[s])
+    }
+
+    /// Layer indices of nodes reading the *raw* graph input (seg1
+    /// `@input` consumers — the stem).  Rewritten stage inputs in later
+    /// segments do not count: those carry quantized activations, while
+    /// the raw image is never quantized (int8 packing exclusion).
+    pub fn input_layers(&self) -> Vec<usize> {
+        self.nodes
+            .iter()
+            .filter(|nd| nd.seg == 1 && nd.inputs.contains(&NodeRef::Input))
+            .filter_map(|nd| match nd.op {
+                NodeOp::Conv { li } | NodeOp::Dense { li } => Some(li),
+                _ => None,
+            })
+            .collect()
+    }
+}

@@ -36,14 +36,22 @@
 //!   same operands are bit-identical at *every* `--ref-threads` setting
 //!   including 1.  This is what the hermetic CI suites (and the golden
 //!   digest diff) pin.
-//! * **Feed-forward interpretation** — the network is rebuilt from the
-//!   manifest's `LayerDesc` list alone, as a chain: body layers
-//!   (`seg1`..`seg3`, in declaration order) must chain `cin == prev.cout`
-//!   and end in a dense classifier; 2x2 max-pools are inserted lazily
-//!   whenever a conv's declared output geometry requires a smaller input
-//!   (`ceil(h/stride) > hout`).  Residual/projection topologies are not
-//!   expressible in a `LayerDesc` list and are rejected at load time —
-//!   the PJRT backend remains the path for those.
+//! * **DAG interpretation** — the network is rebuilt from the manifest's
+//!   `LayerDesc` list plus its declared `joins`: every edge (layer
+//!   `input` fields, join operands) is resolved and validated at load
+//!   time — cycles and shape mismatches are rejected with a diagnostic
+//!   naming the offending edge (see [`dag`]) — and execution follows the
+//!   one canonical topological order (segment-contiguous, declaration
+//!   index breaking ties).  Forward hands intermediates between nodes
+//!   through reference-counted scratch-arena buffers; backward runs in
+//!   exact reverse, with gradient fan-in accumulated in reverse-
+//!   topological consumer order — a fixed mul+add chain per element, so
+//!   the determinism contract above is untouched by fan-out.  Manifests
+//!   with no joins and no explicit `input` edges compile as the legacy
+//!   feed-forward chain (declaration order), bit-identical to the
+//!   pre-DAG interpreter.  2x2 max-pools are still inserted lazily
+//!   whenever a conv's declared output geometry requires a smaller
+//!   input (`ceil(h/stride) > hout`).
 //! * **Stage composition** — `eval` is *implemented as* stage1 ∘ stage2 ∘
 //!   stage3, so staged execution reproduces an eval of the same batch
 //!   composition bit-identically by construction.  Across *different*
@@ -68,6 +76,7 @@
 //! differences.
 
 mod compressed;
+pub mod dag;
 pub mod kernels;
 pub mod pool;
 pub mod scratch;
@@ -274,15 +283,92 @@ fn recycle_cow(xin: Cow<'_, Tensor>, scratch: &mut Scratch) {
     }
 }
 
-/// The feed-forward interpretation of one `ArchManifest` (validated at
-/// load time — see the module docs for the contract).
+// ---------------------------------------------------------------------------
+// DAG value plumbing (forward refcounts, backward fan-in)
+// ---------------------------------------------------------------------------
+
+/// Hand a producer's value to a consumer, decrementing its refcount: the
+/// last consumer takes ownership (`Cow::Owned` — the buffer is recycled
+/// or kept as a trace downstream), every earlier one borrows.  The stage
+/// input is always borrowed (it belongs to the caller).
+fn take_value<'a>(
+    values: &'a mut [Option<Tensor>],
+    refs: &mut [usize],
+    r: dag::NodeRef,
+    input: &'a Tensor,
+) -> Cow<'a, Tensor> {
+    match r {
+        dag::NodeRef::Input => Cow::Borrowed(input),
+        dag::NodeRef::Node(p) => {
+            refs[p] -= 1;
+            if refs[p] == 0 {
+                Cow::Owned(values[p].take().expect("producer value live"))
+            } else {
+                Cow::Borrowed(values[p].as_ref().expect("producer value live"))
+            }
+        }
+    }
+}
+
+/// Borrow a producer's value without consuming a reference (pair with
+/// [`release_value`] once the consumer is done with it).
+fn peek_value<'a>(values: &'a [Option<Tensor>], r: dag::NodeRef, input: &'a Tensor) -> &'a Tensor {
+    match r {
+        dag::NodeRef::Input => input,
+        dag::NodeRef::Node(p) => values[p].as_ref().expect("producer value live"),
+    }
+}
+
+/// Drop one reference to a producer's value; the last release recycles
+/// the buffer into the arena.
+fn release_value(
+    values: &mut [Option<Tensor>],
+    refs: &mut [usize],
+    r: dag::NodeRef,
+    scratch: &mut Scratch,
+) {
+    if let dag::NodeRef::Node(p) = r {
+        refs[p] -= 1;
+        if refs[p] == 0 {
+            if let Some(t) = values[p].take() {
+                scratch.recycle_tensor(t);
+            }
+        }
+    }
+}
+
+/// Route a gradient contribution to its producer during the backward
+/// pass: the first contribution becomes the accumulator, later ones are
+/// added element-wise.  Called in reverse-topological consumer order, so
+/// the fan-in accumulation order is canonical (thread-count invariant
+/// and bit-identical across runs).
+fn route_grad(
+    node_g: &mut [Option<Tensor>],
+    g_in: &mut Option<Tensor>,
+    r: dag::NodeRef,
+    g: Tensor,
+    scratch: &mut Scratch,
+) {
+    let slot = match r {
+        dag::NodeRef::Input => g_in,
+        dag::NodeRef::Node(p) => &mut node_g[p],
+    };
+    match slot {
+        None => *slot = Some(g),
+        Some(acc) => {
+            kernels::add_assign(acc, &g);
+            scratch.recycle_tensor(g);
+        }
+    }
+}
+
+/// The DAG interpretation of one `ArchManifest` (validated at load
+/// time — see the module docs and [`dag`] for the contract).
 struct RefNet {
     arch: Arc<ArchManifest>,
-    /// Body layer indices (manifest order, seg1 ++ seg2 ++ seg3).
-    body: Vec<usize>,
-    /// Body prefix lengths: seg1 ends at `body[..n1]`, seg2 at `body[..n2]`.
-    n1: usize,
-    n2: usize,
+    /// The validated topology: canonical execution order, stage cuts,
+    /// per-node consumer lists (forward refcounts / backward fan-in).
+    dag: dag::Dag,
     /// Layer indices of the exit heads, when declared.
     exit1: Option<usize>,
     exit2: Option<usize>,
@@ -348,24 +434,6 @@ impl RefNet {
                         l.name
                     );
                     last_rank = rank;
-                    if let Some(&prev) = body.last() {
-                        let p = &arch.layers[prev];
-                        ensure!(
-                            p.kind != LayerKind::Dense,
-                            "layer `{}`: a dense layer must be the final body layer",
-                            l.name
-                        );
-                        ensure!(
-                            l.cin == p.cout,
-                            "layer `{}` (cin {}) does not chain from `{}` (cout {}): the ref \
-                             backend interprets manifests as a feed-forward chain; use the pjrt \
-                             backend for residual/projection topologies",
-                            l.name,
-                            l.cin,
-                            p.name,
-                            p.cout
-                        );
-                    }
                     body.push(li);
                 }
                 "exit1" | "exit2" => {
@@ -385,24 +453,26 @@ impl RefNet {
             }
         }
         ensure!(!body.is_empty(), "arch `{}` has no body layers", arch.name);
-        let last = *body.last().unwrap();
+        // Topology: resolve and validate every edge, order the nodes.
+        // (Cycles / shape mismatches are rejected here, naming the edge.)
+        let net_dag = dag::Dag::build(&arch, &body)?;
+        let fc = net_dag.terminal[2].expect("dag guarantees a seg3 terminal");
+        let fc_li = match net_dag.nodes[fc].op {
+            dag::NodeOp::Dense { li } => li,
+            _ => unreachable!("dag guarantees the seg3 terminal is the dense classifier"),
+        };
         ensure!(
-            arch.layers[last].kind == LayerKind::Dense && arch.layers[last].segment == "seg3",
-            "arch `{}`: the body must end in a seg3 dense classifier head",
-            arch.name
-        );
-        ensure!(
-            arch.layers[last].cout == arch.num_classes,
+            arch.layers[fc_li].cout == arch.num_classes,
             "arch `{}`: classifier emits {} classes, arch declares {}",
             arch.name,
-            arch.layers[last].cout,
+            arch.layers[fc_li].cout,
             arch.num_classes
         );
-        let n1 = body.iter().filter(|&&li| arch.layers[li].segment == "seg1").count();
-        let n2 = n1 + body.iter().filter(|&&li| arch.layers[li].segment == "seg2").count();
         if let Some(x1) = exit1 {
-            ensure!(n1 > 0, "exit1 head declared but seg1 has no layers");
-            let feed = arch.layers[body[n1 - 1]].cout;
+            let t = net_dag
+                .terminal[0]
+                .ok_or_else(|| anyhow!("exit1 head declared but seg1 has no layers"))?;
+            let feed = net_dag.nodes[t].cout;
             ensure!(
                 arch.layers[x1].cin == feed,
                 "exit1 head fan-in {} != seg1 output channels {feed}",
@@ -410,15 +480,17 @@ impl RefNet {
             );
         }
         if let Some(x2) = exit2 {
-            ensure!(n2 > 0, "exit2 head declared but seg1/seg2 have no layers");
-            let feed = arch.layers[body[n2 - 1]].cout;
+            let t = net_dag
+                .effective_terminal(1)
+                .ok_or_else(|| anyhow!("exit2 head declared but seg1/seg2 have no layers"))?;
+            let feed = net_dag.nodes[t].cout;
             ensure!(
                 arch.layers[x2].cin == feed,
                 "exit2 head fan-in {} != seg2 output channels {feed}",
                 arch.layers[x2].cin
             );
         }
-        Ok(RefNet { arch, body, n1, n2, exit1, exit2, threads: threads.max(1) })
+        Ok(RefNet { arch, dag: net_dag, exit1, exit2, threads: threads.max(1) })
     }
 
     // ----- operand plumbing -------------------------------------------------
@@ -482,65 +554,128 @@ impl RefNet {
 
     // ----- forward ----------------------------------------------------------
 
-    /// Run body layers `range` (indices into `self.body`) from `input`.
-    /// `record` keeps the per-layer traces the train backward pass
-    /// consumes; eval/stage/serve callers pass `false`, skip trace
-    /// retention entirely, and every consumed intermediate returns to the
-    /// arena.  Both modes run the same ops in the same order, so
-    /// recording never perturbs a value.
+    /// Execute one segment (0-based) of the DAG in the canonical
+    /// topological order from its stage input.  Intermediates are
+    /// reference-counted: a producer's buffer is borrowed by every
+    /// consumer but the last, which takes ownership (so it is either
+    /// recycled into the arena or kept as a trace — never cloned).
+    /// `record` keeps the per-node traces the train backward pass
+    /// consumes; eval/stage/serve callers pass `false`.  Both modes run
+    /// the same ops in the same order, so recording never perturbs a
+    /// value.  Returns the segment terminal's value plus the traces in
+    /// execution order.
     #[allow(clippy::too_many_arguments)]
-    fn forward_range(
+    fn forward_segment(
         &self,
+        seg: usize,
         params: &[&Tensor],
         masks: &[&Tensor],
         qbw: f32,
         qba: f32,
         input: &Tensor,
-        range: std::ops::Range<usize>,
         record: bool,
         scratch: &mut Scratch,
-    ) -> Result<(Tensor, Vec<ConvTrace>, Option<DenseTrace>)> {
-        let mut cur: Option<Tensor> = None;
-        let mut convs = Vec::new();
-        let mut dense = None;
-        for bi in range {
-            let li = self.body[bi];
-            let l = &self.arch.layers[li];
-            match l.kind {
-                LayerKind::Dense => {
-                    let (out, tr) = {
-                        let xr = cur.as_ref().unwrap_or(input);
-                        self.dense_forward(li, xr, params, qbw, qba, record, scratch)?
-                    };
-                    // The head consumed its feature map; no trace keeps
-                    // its values (GAP backward is a uniform broadcast).
-                    if let Some(old) = cur.replace(out) {
-                        scratch.recycle_tensor(old);
-                    }
-                    dense = tr;
-                }
-                _ => {
-                    let xin = match cur.take() {
-                        Some(t) => Cow::Owned(t),
-                        None => Cow::Borrowed(input),
-                    };
+    ) -> Result<(Tensor, Vec<(usize, NodeTrace)>)> {
+        let d = &self.dag;
+        let range = d.seg_range(seg);
+        if range.is_empty() {
+            // Empty segment: the stage carries its input through unchanged.
+            return Ok((input.clone(), Vec::new()));
+        }
+        let term = d.terminal[seg].expect("non-empty segment has a terminal");
+        let n = d.nodes.len();
+        let mut values: Vec<Option<Tensor>> = (0..n).map(|_| None).collect();
+        // Consumer refcounts; the terminal escapes to the caller (+1) so
+        // it is never moved into (or recycled by) a same-segment consumer.
+        let mut refs: Vec<usize> = (0..n).map(|i| d.consumers[i].len()).collect();
+        refs[term] += 1;
+        let mut traces: Vec<(usize, NodeTrace)> = Vec::new();
+        for &ni in range {
+            let node = &d.nodes[ni];
+            let (out, tr) = match node.op {
+                dag::NodeOp::Conv { li } => {
+                    let xin = take_value(&mut values, &mut refs, node.inputs[0], input);
                     let (out, tr) =
                         self.conv_forward(li, xin, params, masks, qbw, qba, record, scratch)?;
-                    cur = Some(out);
-                    if let Some(tr) = tr {
-                        convs.push(tr);
-                    }
+                    (out, tr.map(NodeTrace::Conv))
                 }
+                dag::NodeOp::Dense { li } => {
+                    let (out, tr) = {
+                        let xr = peek_value(&values, node.inputs[0], input);
+                        self.dense_forward(li, xr, params, qbw, qba, record, scratch)?
+                    };
+                    release_value(&mut values, &mut refs, node.inputs[0], scratch);
+                    (out, tr.map(NodeTrace::Dense))
+                }
+                dag::NodeOp::Join { out_mask } => {
+                    // z = relu(a + b) -> act_quant -> mask (finish_block).
+                    let (ra, rb) = (node.inputs[0], node.inputs[1]);
+                    let mut z = match take_value(&mut values, &mut refs, ra, input) {
+                        Cow::Owned(t) => t,
+                        Cow::Borrowed(t) => {
+                            let mut zb = scratch.take_full(t.len());
+                            zb.copy_from_slice(&t.data);
+                            Tensor::new(t.shape.clone(), zb)
+                        }
+                    };
+                    {
+                        let bt = peek_value(&values, rb, input);
+                        ensure!(
+                            bt.len() == z.len(),
+                            "join `{}`: operand sizes {} vs {} (batch mismatch)",
+                            node.name,
+                            z.len(),
+                            bt.len()
+                        );
+                        kernels::add_assign(&mut z, bt);
+                    }
+                    release_value(&mut values, &mut refs, rb, scratch);
+                    kernels::relu_inplace(&mut z);
+                    let tr = record.then(|| {
+                        let mut nr = scratch.take_full(z.len());
+                        nr.copy_from_slice(&z.data);
+                        NodeTrace::Join {
+                            relu_out: Tensor::new(z.shape.clone(), nr),
+                            out_mask,
+                        }
+                    });
+                    kernels::act_quant_inplace(&mut z, qba);
+                    if out_mask >= 0 {
+                        kernels::mul_channel_mask(&mut z, &masks[out_mask as usize].data);
+                    }
+                    (z, tr)
+                }
+                dag::NodeOp::Output { out_mask } => {
+                    // Unary terminal: act_quant -> mask (linear bottleneck —
+                    // no relu, the non-linearity lives in the block).
+                    let mut z = match take_value(&mut values, &mut refs, node.inputs[0], input) {
+                        Cow::Owned(t) => t,
+                        Cow::Borrowed(t) => {
+                            let mut zb = scratch.take_full(t.len());
+                            zb.copy_from_slice(&t.data);
+                            Tensor::new(t.shape.clone(), zb)
+                        }
+                    };
+                    let tr = record.then(|| NodeTrace::Output { out_mask });
+                    kernels::act_quant_inplace(&mut z, qba);
+                    if out_mask >= 0 {
+                        kernels::mul_channel_mask(&mut z, &masks[out_mask as usize].data);
+                    }
+                    (z, tr)
+                }
+            };
+            values[ni] = Some(out);
+            if let Some(tr) = tr {
+                traces.push((ni, tr));
             }
         }
-        Ok((
-            match cur {
-                Some(t) => t,
-                None => input.clone(),
-            },
-            convs,
-            dense,
-        ))
+        let out = values[term].take().expect("terminal value live");
+        // Defensive: every non-terminal value was moved or recycled when
+        // its refcount hit zero (dead nodes are rejected at load).
+        for v in values.into_iter().flatten() {
+            scratch.recycle_tensor(v);
+        }
+        Ok((out, traces))
     }
 
     /// Pools (lazy, geometry-driven) + conv -> bias -> mask -> live-RMS
@@ -603,20 +738,28 @@ impl RefNet {
             scratch.recycle_tensor(wq);
             // In-place norm: identical arithmetic to the recorded path.
             kernels::rmsnorm_inplace(&mut y, live);
-            kernels::relu_inplace(&mut y);
-            kernels::act_quant_inplace(&mut y, qba);
+            // `act: false` stops after the norm (pre-join convs and 1x1
+            // projections — the relu and act_quant live in the join).
+            if l.act {
+                kernels::relu_inplace(&mut y);
+                kernels::act_quant_inplace(&mut y, qba);
+            }
             return Ok((y, None));
         }
         let x = xin.into_owned();
         let masked = y;
         let (mut normed, rs, d) = kernels::rmsnorm(&masked, live, scratch);
-        kernels::relu_inplace(&mut normed);
-        let normed_relu = {
+        let normed_relu = if l.act {
+            kernels::relu_inplace(&mut normed);
             let mut nr = scratch.take_full(normed.len());
             nr.copy_from_slice(&normed.data);
-            Tensor::new(normed.shape.clone(), nr)
+            Some(Tensor::new(normed.shape.clone(), nr))
+        } else {
+            None
         };
-        kernels::act_quant_inplace(&mut normed, qba);
+        if l.act {
+            kernels::act_quant_inplace(&mut normed, qba);
+        }
         Ok((normed, Some(ConvTrace { li, pools, x, wq, masked, rs, d, normed_relu })))
     }
 
@@ -686,8 +829,7 @@ impl RefNet {
         x: &Tensor,
         scratch: &mut Scratch,
     ) -> Result<(Tensor, Tensor)> {
-        let (h1, _, _) =
-            self.forward_range(params, masks, qbw, qba, x, 0..self.n1, false, scratch)?;
+        let (h1, _) = self.forward_segment(0, params, masks, qbw, qba, x, false, scratch)?;
         let (e1, _) = self.exit_forward(self.exit1, &h1, params, qbw, qba, false, scratch)?;
         Ok((h1, e1))
     }
@@ -701,8 +843,7 @@ impl RefNet {
         h1: &Tensor,
         scratch: &mut Scratch,
     ) -> Result<(Tensor, Tensor)> {
-        let (h2, _, _) =
-            self.forward_range(params, masks, qbw, qba, h1, self.n1..self.n2, false, scratch)?;
+        let (h2, _) = self.forward_segment(1, params, masks, qbw, qba, h1, false, scratch)?;
         let (e2, _) = self.exit_forward(self.exit2, &h2, params, qbw, qba, false, scratch)?;
         Ok((h2, e2))
     }
@@ -716,13 +857,9 @@ impl RefNet {
         h2: &Tensor,
         scratch: &mut Scratch,
     ) -> Result<Tensor> {
-        // `RefNet::compile` guarantees the body ends in a seg3 dense
-        // classifier, so this range always reaches it.  (The seed checked
-        // `dense.is_some()` here, but the trace-free pass intentionally
-        // returns no trace — that check failed every eval/stage3 call.)
-        let range = self.n2..self.body.len();
-        let (logits, _, _) =
-            self.forward_range(params, masks, qbw, qba, h2, range, false, scratch)?;
+        // `RefNet::compile` guarantees the seg3 terminal is the dense
+        // classifier, so this segment always produces logits.
+        let (logits, _) = self.forward_segment(2, params, masks, qbw, qba, h2, false, scratch)?;
         Ok(logits)
     }
 
@@ -840,16 +977,11 @@ impl RefNet {
         );
 
         // ---- forward (with traces) ----
-        let (h1, convs1, _) =
-            self.forward_range(params, masks, qbw, qba, x, 0..self.n1, true, scratch)?;
+        let (h1, tr1) = self.forward_segment(0, params, masks, qbw, qba, x, true, scratch)?;
         let (e1, tr_e1) = self.exit_forward(self.exit1, &h1, params, qbw, qba, true, scratch)?;
-        let (h2, convs2, _) =
-            self.forward_range(params, masks, qbw, qba, &h1, self.n1..self.n2, true, scratch)?;
+        let (h2, tr2) = self.forward_segment(1, params, masks, qbw, qba, &h1, true, scratch)?;
         let (e2, tr_e2) = self.exit_forward(self.exit2, &h2, params, qbw, qba, true, scratch)?;
-        let seg3 = self.n2..self.body.len();
-        let (logits, convs3, tr_fc) =
-            self.forward_range(params, masks, qbw, qba, &h2, seg3, true, scratch)?;
-        let tr_fc = tr_fc.ok_or_else(|| anyhow!("seg3 did not reach the classifier head"))?;
+        let (logits, tr3) = self.forward_segment(2, params, masks, qbw, qba, &h2, true, scratch)?;
 
         // ---- loss + logit cotangents ----
         let (ce, d_ce) = cross_entropy(&logits, y, nc, 1.0 - kd_alpha);
@@ -879,29 +1011,23 @@ impl RefNet {
         if let Some(d) = &d_kd {
             kernels::add_assign(&mut d_logits, d);
         }
-        // seg3: classifier, then its convs, back to h2.
-        let mut g = self.dense_backward(tr_fc, &d_logits, &mut grads, scratch);
-        for tr in convs3.into_iter().rev() {
-            g = self.conv_backward(tr, g, masks, &mut grads, scratch);
-        }
+        // seg3: reverse-topo walk from the classifier back to h2
+        // (backward_segment consumes the terminal cotangent).
+        let mut g = self.backward_segment(2, tr3, d_logits, masks, &mut grads, scratch);
         // exit2 contributes at h2.
         if let (Some(tr), Some(d)) = (tr_e2, &d_e2) {
             let ge = self.dense_backward(tr, d, &mut grads, scratch);
             kernels::add_assign(&mut g, &ge);
             scratch.recycle_tensor(ge);
         }
-        for tr in convs2.into_iter().rev() {
-            g = self.conv_backward(tr, g, masks, &mut grads, scratch);
-        }
+        let mut g = self.backward_segment(1, tr2, g, masks, &mut grads, scratch);
         // exit1 contributes at h1.
         if let (Some(tr), Some(d)) = (tr_e1, &d_e1) {
             let ge = self.dense_backward(tr, d, &mut grads, scratch);
             kernels::add_assign(&mut g, &ge);
             scratch.recycle_tensor(ge);
         }
-        for tr in convs1.into_iter().rev() {
-            g = self.conv_backward(tr, g, masks, &mut grads, scratch);
-        }
+        let g = self.backward_segment(0, tr1, g, masks, &mut grads, scratch);
         // g is now d loss / d x — discarded into the arena.
         scratch.recycle_tensor(g);
 
@@ -915,13 +1041,87 @@ impl RefNet {
         }
 
         // Retire the forward/cotangent intermediates.
-        for t in [h1, h2, logits, e1, e2, d_logits] {
+        for t in [h1, h2, logits, e1, e2] {
             scratch.recycle_tensor(t);
         }
         for d in [d_ce, d_kd, d_e1, d_e2].into_iter().flatten() {
             scratch.recycle_tensor(d);
         }
         Ok((loss, acc, grads))
+    }
+
+    /// Backward through one segment: reverse canonical order over the
+    /// recorded traces, each node's cotangent fully fan-in-accumulated
+    /// (in reverse-topological consumer order — fixed, deterministic)
+    /// before the node itself runs.  Consumes `g_out` (the cotangent at
+    /// the segment terminal) and returns the cotangent at the segment's
+    /// stage input.
+    fn backward_segment(
+        &self,
+        seg: usize,
+        traces: Vec<(usize, NodeTrace)>,
+        g_out: Tensor,
+        masks: &[&Tensor],
+        grads: &mut [Tensor],
+        scratch: &mut Scratch,
+    ) -> Tensor {
+        let d = &self.dag;
+        if d.seg_range(seg).is_empty() {
+            // Empty segment forwarded its input unchanged — identity VJP.
+            return g_out;
+        }
+        let term = d.terminal[seg].expect("non-empty segment has a terminal");
+        let n = d.nodes.len();
+        let mut node_g: Vec<Option<Tensor>> = (0..n).map(|_| None).collect();
+        node_g[term] = Some(g_out);
+        let mut g_in: Option<Tensor> = None;
+        for (ni, tr) in traces.into_iter().rev() {
+            let g = node_g[ni].take().expect("consumer cotangents accumulated");
+            match tr {
+                NodeTrace::Conv(tr) => {
+                    let r = d.nodes[ni].inputs[0];
+                    let gx = self.conv_backward(tr, g, masks, grads, scratch);
+                    route_grad(&mut node_g, &mut g_in, r, gx, scratch);
+                }
+                NodeTrace::Dense(tr) => {
+                    let r = d.nodes[ni].inputs[0];
+                    let gx = self.dense_backward(tr, &g, grads, scratch);
+                    scratch.recycle_tensor(g);
+                    route_grad(&mut node_g, &mut g_in, r, gx, scratch);
+                }
+                NodeTrace::Join { relu_out, out_mask } => {
+                    // mask -> act_quant (STE) -> relu gate; then d(a+b)
+                    // hands the same gated cotangent to both operands.
+                    let mut g = g;
+                    if out_mask >= 0 {
+                        kernels::mul_channel_mask(&mut g, &masks[out_mask as usize].data);
+                    }
+                    for (gv, &ov) in g.data.iter_mut().zip(&relu_out.data) {
+                        if ov <= 0.0 {
+                            *gv = 0.0;
+                        }
+                    }
+                    scratch.recycle_tensor(relu_out);
+                    let (ra, rb) = (d.nodes[ni].inputs[0], d.nodes[ni].inputs[1]);
+                    let ga = {
+                        let mut buf = scratch.take_full(g.len());
+                        buf.copy_from_slice(&g.data);
+                        Tensor::new(g.shape.clone(), buf)
+                    };
+                    route_grad(&mut node_g, &mut g_in, ra, ga, scratch);
+                    route_grad(&mut node_g, &mut g_in, rb, g, scratch);
+                }
+                NodeTrace::Output { out_mask } => {
+                    // mask -> act_quant (STE); no relu in the unary path.
+                    let mut g = g;
+                    if out_mask >= 0 {
+                        kernels::mul_channel_mask(&mut g, &masks[out_mask as usize].data);
+                    }
+                    route_grad(&mut node_g, &mut g_in, d.nodes[ni].inputs[0], g, scratch);
+                }
+            }
+        }
+        g_in.expect("segment consumes its stage input")
     }
 
     /// Backward through one dense head (straight-through quantizers, the
@@ -995,9 +1195,13 @@ impl RefNet {
         // act_quant: straight-through.
         let mut g = g_out;
         // relu: pass where the (pre-quant) activation was positive.
-        for (gv, &ov) in g.data.iter_mut().zip(&tr.normed_relu.data) {
-            if ov <= 0.0 {
-                *gv = 0.0;
+        // `act: false` layers recorded no gate — their pipeline stopped
+        // at the norm, so the cotangent passes through untouched.
+        if let Some(nr) = &tr.normed_relu {
+            for (gv, &ov) in g.data.iter_mut().zip(&nr.data) {
+                if ov <= 0.0 {
+                    *gv = 0.0;
+                }
             }
         }
         // live-RMS norm backward.
@@ -1045,7 +1249,9 @@ impl RefNet {
         scratch.recycle_tensor(tr.x);
         scratch.recycle_tensor(tr.wq);
         scratch.recycle_tensor(tr.masked);
-        scratch.recycle_tensor(tr.normed_relu);
+        if let Some(nr) = tr.normed_relu {
+            scratch.recycle_tensor(nr);
+        }
         Tensor::new(shape, dx)
     }
 }
@@ -1071,8 +1277,9 @@ struct ConvTrace {
     /// Per-sample rsqrt factors and the live-channel divisor.
     rs: Vec<f32>,
     d: f32,
-    /// Post-relu, pre-quant (the relu gradient gate).
-    normed_relu: Tensor,
+    /// Post-relu, pre-quant (the relu gradient gate); `None` for
+    /// `act: false` layers, whose pipeline stops at the norm.
+    normed_relu: Option<Tensor>,
 }
 
 struct DenseTrace {
@@ -1082,6 +1289,18 @@ struct DenseTrace {
     /// act_quant(GAP(feat)) — the quantized matmul LHS.
     aq: Tensor,
     wq: Tensor,
+}
+
+/// One recorded forward step of the DAG walk, keyed by node id in
+/// [`RefNet::forward_segment`]'s trace list (execution order; the
+/// backward pass walks it in exact reverse).
+enum NodeTrace {
+    Conv(ConvTrace),
+    Dense(DenseTrace),
+    /// Residual join: the post-relu pre-quant values gate the relu VJP.
+    Join { relu_out: Tensor, out_mask: i64 },
+    /// Unary terminal: mask/STE only — no relu, nothing to record.
+    Output { out_mask: i64 },
 }
 
 // ---------------------------------------------------------------------------
@@ -1184,7 +1403,7 @@ fn accuracy(logits: &Tensor, y: &Tensor, nc: usize) -> f32 {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::models::{LayerDesc, MaskSlot};
+    use crate::models::{JoinDesc, LayerDesc, MaskSlot};
     use std::collections::BTreeMap;
 
     fn layer(
@@ -1210,7 +1429,31 @@ mod tests {
             in_mask: -1,
             out_mask,
             segment: segment.into(),
+            input: String::new(),
+            act: true,
         }
+    }
+
+    /// `layer` with an explicit producer edge and activation flag (the
+    /// DAG-manifest spelling).
+    #[allow(clippy::too_many_arguments)]
+    fn dlayer(
+        name: &str,
+        kind: LayerKind,
+        k: usize,
+        cin: usize,
+        cout: usize,
+        stride: usize,
+        hout: usize,
+        out_mask: i64,
+        segment: &str,
+        input: &str,
+        act: bool,
+    ) -> LayerDesc {
+        let mut l = layer(name, kind, k, cin, cout, stride, hout, out_mask, segment);
+        l.input = input.into();
+        l.act = act;
+        l
     }
 
     /// Tiny feed-forward arch: conv(2->3) @4x4 -> dense(3->4), one exit
@@ -1245,6 +1488,7 @@ mod tests {
             stage_batches: vec![1],
             stage_h1_shape: vec![1, 4, 4, 3],
             stage_h2_shape: vec![1, 4, 4, 3],
+            joins: Vec::new(),
         })
     }
 
@@ -1276,28 +1520,31 @@ mod tests {
         assert_eq!(GraphKind::parse("bogus"), None);
     }
 
-    #[test]
-    fn ref_rejects_non_feedforward_manifests() {
-        // A projection-style layer whose cin does not chain from the
-        // previous body layer's cout must be rejected at load time.
-        let layers = vec![
-            layer("c1", LayerKind::Conv, 3, 3, 8, 1, 8, -1, "seg1"),
-            layer("proj", LayerKind::Conv, 1, 3, 8, 1, 8, -1, "seg2"),
-            layer("fc", LayerKind::Dense, 1, 8, 4, 1, 1, -1, "seg3"),
-        ];
-        let arch = Arc::new(ArchManifest {
-            name: "resnetish".into(),
+    /// Boilerplate around a layer list: consistent param shapes, no
+    /// graphs — enough to compile a `RefNet` directly.
+    fn arch_of(
+        name: &str,
+        layers: Vec<LayerDesc>,
+        joins: Vec<JoinDesc>,
+        mask_slots: Vec<MaskSlot>,
+    ) -> Arc<ArchManifest> {
+        let param_shapes = layers
+            .iter()
+            .flat_map(|l| {
+                let w = match l.kind {
+                    LayerKind::Dense => vec![l.cin, l.cout],
+                    LayerKind::DwConv => vec![l.k, l.k, 1, l.cout],
+                    LayerKind::Conv => vec![l.k, l.k, l.cin, l.cout],
+                };
+                [w, vec![l.cout]]
+            })
+            .collect();
+        Arc::new(ArchManifest {
+            name: name.into(),
             num_classes: 4,
             layers,
-            mask_slots: vec![],
-            param_shapes: vec![
-                vec![3, 3, 3, 8],
-                vec![8],
-                vec![1, 1, 3, 8],
-                vec![8],
-                vec![8, 4],
-                vec![4],
-            ],
+            mask_slots,
+            param_shapes,
             graphs: BTreeMap::new(),
             train_batch: 2,
             eval_batch: 2,
@@ -1305,9 +1552,321 @@ mod tests {
             stage_batches: vec![1],
             stage_h1_shape: vec![],
             stage_h2_shape: vec![],
-        });
-        let err = RefNet::compile(arch, 1).unwrap_err();
-        assert!(err.to_string().contains("feed-forward"), "{err}");
+            joins,
+        })
+    }
+
+    /// Small residual block: stem -> a1 -> a2 (act=false), joined with a
+    /// skip (identity when the widths agree, 1x1 projection otherwise),
+    /// then a dense head — fan-out 2 at the stem, one skip join: the
+    /// minimal topology the old chain walker could not express.
+    fn residual_arch(c1: usize, c2: usize, masked: bool) -> Arc<ArchManifest> {
+        let mut layers = vec![
+            dlayer("stem", LayerKind::Conv, 3, 3, c1, 1, 8, -1, "seg1", "@input", true),
+            dlayer("a1", LayerKind::Conv, 3, c1, c2, 1, 8, -1, "seg1", "stem", true),
+            dlayer("a2", LayerKind::Conv, 3, c2, c2, 1, 8, -1, "seg1", "a1", false),
+        ];
+        let skip = if c1 == c2 {
+            "stem".to_string()
+        } else {
+            layers
+                .push(dlayer("proj", LayerKind::Conv, 1, c1, c2, 1, 8, -1, "seg1", "stem", false));
+            "proj".to_string()
+        };
+        layers.push(dlayer("fc", LayerKind::Dense, 1, c2, 4, 1, 1, -1, "seg3", "j", true));
+        let joins = vec![JoinDesc {
+            name: "j".into(),
+            a: "a2".into(),
+            b: Some(skip),
+            out_mask: if masked { 0 } else { -1 },
+            segment: "seg1".into(),
+        }];
+        let mask_slots =
+            if masked { vec![MaskSlot { name: "mj".into(), channels: c2 }] } else { vec![] };
+        arch_of("resblock", layers, joins, mask_slots)
+    }
+
+    /// Recompute-everything reference walker: every producer is
+    /// recomputed for every consumer — no sharing, no refcounts, no
+    /// buffer hand-off (exponential in fan-out; fine at this size).
+    /// Bitwise agreement with `forward_segment` pins that the executor's
+    /// buffer machinery never perturbs a value.
+    #[allow(clippy::too_many_arguments)]
+    fn naive_value(
+        net: &RefNet,
+        ni: usize,
+        params: &[&Tensor],
+        masks: &[&Tensor],
+        qbw: f32,
+        qba: f32,
+        input: &Tensor,
+        scratch: &mut Scratch,
+    ) -> Tensor {
+        let op = net.dag.nodes[ni].op;
+        let ins: Vec<dag::NodeRef> = net.dag.nodes[ni].inputs.clone();
+        let arg = |r: dag::NodeRef, scratch: &mut Scratch| match r {
+            dag::NodeRef::Input => input.clone(),
+            dag::NodeRef::Node(p) => {
+                naive_value(net, p, params, masks, qbw, qba, input, scratch)
+            }
+        };
+        match op {
+            dag::NodeOp::Conv { li } => {
+                let xin = arg(ins[0], scratch);
+                net.conv_forward(li, Cow::Owned(xin), params, masks, qbw, qba, false, scratch)
+                    .unwrap()
+                    .0
+            }
+            dag::NodeOp::Dense { li } => {
+                let xin = arg(ins[0], scratch);
+                let (out, _) =
+                    net.dense_forward(li, &xin, params, qbw, qba, false, scratch).unwrap();
+                out
+            }
+            dag::NodeOp::Join { out_mask } => {
+                let a = arg(ins[0], scratch);
+                let b = arg(ins[1], scratch);
+                let z: Vec<f32> = a.data.iter().zip(&b.data).map(|(&av, &bv)| av + bv).collect();
+                let mut t = Tensor::new(a.shape.clone(), z);
+                kernels::relu_inplace(&mut t);
+                kernels::act_quant_inplace(&mut t, qba);
+                if out_mask >= 0 {
+                    kernels::mul_channel_mask(&mut t, &masks[out_mask as usize].data);
+                }
+                t
+            }
+            dag::NodeOp::Output { out_mask } => {
+                let mut t = arg(ins[0], scratch);
+                kernels::act_quant_inplace(&mut t, qba);
+                if out_mask >= 0 {
+                    kernels::mul_channel_mask(&mut t, &masks[out_mask as usize].data);
+                }
+                t
+            }
+        }
+    }
+
+    #[test]
+    fn ref_load_error_names_shape_mismatched_edge() {
+        // A layer whose cin does not match its producer's cout must be
+        // rejected at load time with a diagnostic naming the edge —
+        // both in legacy chain mode and with explicit edges.
+        let layers = vec![
+            layer("c1", LayerKind::Conv, 3, 3, 8, 1, 8, -1, "seg1"),
+            layer("proj", LayerKind::Conv, 1, 3, 8, 1, 8, -1, "seg2"),
+            layer("fc", LayerKind::Dense, 1, 8, 4, 1, 1, -1, "seg3"),
+        ];
+        let err = RefNet::compile(arch_of("resnetish", layers, vec![], vec![]), 1).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("edge `c1 -> proj`"), "{msg}");
+        assert!(msg.contains("cin 3") && msg.contains("cout 8"), "{msg}");
+
+        let layers = vec![
+            dlayer("c1", LayerKind::Conv, 3, 3, 8, 1, 8, -1, "seg1", "@input", true),
+            dlayer("c2", LayerKind::Conv, 3, 6, 8, 1, 8, -1, "seg1", "c1", true),
+            dlayer("fc", LayerKind::Dense, 1, 8, 4, 1, 1, -1, "seg3", "c2", true),
+        ];
+        let err = RefNet::compile(arch_of("edgy", layers, vec![], vec![]), 1).unwrap_err();
+        assert!(format!("{err:#}").contains("edge `c1 -> c2`"), "{err:#}");
+    }
+
+    #[test]
+    fn ref_load_error_names_cyclic_edge() {
+        // Two convs consuming each other can never be scheduled; the
+        // diagnostic must name a concrete unsatisfiable edge.
+        let layers = vec![
+            dlayer("a", LayerKind::Conv, 3, 4, 4, 1, 8, -1, "seg1", "b", true),
+            dlayer("b", LayerKind::Conv, 3, 4, 4, 1, 8, -1, "seg1", "a", true),
+            dlayer("fc", LayerKind::Dense, 1, 4, 4, 1, 1, -1, "seg3", "b", true),
+        ];
+        let err = RefNet::compile(arch_of("cyclic", layers, vec![], vec![]), 1).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("cycle"), "{msg}");
+        assert!(msg.contains("edge `b -> a`"), "{msg}");
+    }
+
+    #[test]
+    fn ref_load_error_names_disagreeing_join_operands() {
+        // Join operands with different widths name both offenders.
+        let layers = vec![
+            dlayer("stem", LayerKind::Conv, 3, 3, 4, 1, 8, -1, "seg1", "@input", true),
+            dlayer("a1", LayerKind::Conv, 3, 4, 6, 1, 8, -1, "seg1", "stem", false),
+            dlayer("fc", LayerKind::Dense, 1, 6, 4, 1, 1, -1, "seg3", "j1", true),
+        ];
+        let joins = vec![JoinDesc {
+            name: "j1".into(),
+            a: "a1".into(),
+            b: Some("stem".into()),
+            out_mask: -1,
+            segment: "seg1".into(),
+        }];
+        let err = RefNet::compile(arch_of("mismatch", layers, joins, vec![]), 1).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("join `j1`"), "{msg}");
+        assert!(msg.contains("`a1` (cout 6)") && msg.contains("`stem` (cout 4)"), "{msg}");
+    }
+
+    /// Deterministic channel mask for the join slot: roughly one in
+    /// three channels pruned, never all of them.
+    fn join_mask(c: usize, salt: u64) -> Tensor {
+        let data = (0..c)
+            .map(|i| if (i as u64 + salt) % 3 == 0 && c > 1 { 0.0 } else { 1.0 })
+            .collect();
+        Tensor::new(vec![c], data)
+    }
+
+    #[test]
+    fn ref_dag_forward_matches_naive_walker() {
+        // Random small residual DAGs (fan-out 2 at the stem, one skip
+        // join, identity or 1x1 projection): the refcounted executor
+        // must agree bitwise with the recompute-everything walker, at
+        // fp32 and under weight+activation fake-quant.
+        crate::util::prop::check(
+            "ref_dag_forward_matches_naive_walker",
+            8,
+            |rng| (rng.below(3), rng.below(3), rng.next_u64()),
+            |&(w1, w2, salt)| {
+                // Map shrink-safe offsets to valid widths: w1 == w2
+                // exercises the identity skip, otherwise a projection.
+                let (c1, c2) = (3 + w1, 3 + w2);
+                let masked = salt % 2 == 1;
+                let arch = residual_arch(c1, c2, masked);
+                let net = RefNet::compile(arch.clone(), 1)
+                    .map_err(|e| format!("compile: {e:#}"))?;
+                let params: Vec<Tensor> = arch
+                    .param_shapes
+                    .iter()
+                    .enumerate()
+                    .map(|(i, s)| det_tensor(s, salt ^ (i as u64)))
+                    .collect();
+                let pref: Vec<&Tensor> = params.iter().collect();
+                let masks = if masked { vec![join_mask(c2, salt)] } else { vec![] };
+                let mref: Vec<&Tensor> = masks.iter().collect();
+                let x = det_tensor(&[2, 8, 8, 3], salt.wrapping_add(17));
+                let mut sc = Scratch::default();
+                for (qbw, qba) in [(0.0f32, 0.0f32), (4.0, 8.0)] {
+                    let (h1, _) = net
+                        .forward_segment(0, &pref, &mref, qbw, qba, &x, false, &mut sc)
+                        .map_err(|e| format!("seg1 forward: {e:#}"))?;
+                    let t0 = net.dag.terminal[0].expect("seg1 terminal");
+                    let n1 = naive_value(&net, t0, &pref, &mref, qbw, qba, &x, &mut sc);
+                    if h1.data != n1.data {
+                        return Err(format!("seg1 diverged from naive walker (qb {qbw}/{qba})"));
+                    }
+                    let (logits, _) = net
+                        .forward_segment(2, &pref, &mref, qbw, qba, &h1, false, &mut sc)
+                        .map_err(|e| format!("seg3 forward: {e:#}"))?;
+                    let t2 = net.dag.terminal[2].expect("seg3 terminal");
+                    let n3 = naive_value(&net, t2, &pref, &mref, qbw, qba, &h1, &mut sc);
+                    if logits.data != n3.data {
+                        return Err(format!("seg3 diverged from naive walker (qb {qbw}/{qba})"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn ref_dag_gradients_match_finite_differences() {
+        // The backward fan-in through a skip join: one cotangent routed
+        // to both operands, accumulated in canonical order.  Checked
+        // against central differences for the identity-skip (masked)
+        // and 1x1-projection (unmasked) shapes.
+        for (c1, c2, masked) in [(4usize, 4usize, true), (3, 5, false)] {
+            let arch = residual_arch(c1, c2, masked);
+            let net = RefNet::compile(arch.clone(), 1).unwrap();
+            let params: Vec<Tensor> = arch
+                .param_shapes
+                .iter()
+                .enumerate()
+                .map(|(i, s)| det_tensor(s, 60 + i as u64))
+                .collect();
+            let masks = if masked { vec![join_mask(c2, 1)] } else { vec![] };
+            let mref: Vec<&Tensor> = masks.iter().collect();
+            let x = det_tensor(&[2, 8, 8, 3], 200);
+            let mut y = Tensor::zeros(&[2, 4]);
+            y.data[1] = 1.0;
+            y.data[4 + 2] = 1.0;
+            let tlog = Tensor::zeros(&[2, 4]);
+            let loss_of = |ps: &[Tensor]| -> f32 {
+                let pref: Vec<&Tensor> = ps.iter().collect();
+                let mut sc = Scratch::default();
+                net.loss_and_grads(
+                    &pref, &mref, 0.0, 0.0, &x, &y, &tlog, 0.0, 4.0, [0.0, 0.0], 0.0, &mut sc,
+                )
+                .unwrap()
+                .0
+            };
+            let pref: Vec<&Tensor> = params.iter().collect();
+            let mut sc = Scratch::default();
+            let (_, _, grads) = net
+                .loss_and_grads(
+                    &pref, &mref, 0.0, 0.0, &x, &y, &tlog, 0.0, 4.0, [0.0, 0.0], 0.0, &mut sc,
+                )
+                .unwrap();
+            for (pi, p) in params.iter().enumerate() {
+                for probe in 0..3.min(p.len()) {
+                    let ci = (probe * 13 + pi * 5) % p.len();
+                    let eps = 5e-3f32;
+                    let mut plus = params.clone();
+                    plus[pi].data[ci] += eps;
+                    let mut minus = params.clone();
+                    minus[pi].data[ci] -= eps;
+                    let numeric = (loss_of(&plus) - loss_of(&minus)) / (2.0 * eps);
+                    let analytic = grads[pi].data[ci];
+                    let tol = 2e-2f32.max(0.05 * numeric.abs());
+                    assert!(
+                        (numeric - analytic).abs() <= tol,
+                        "dag grad mismatch at param {pi}[{ci}] (c1={c1}, c2={c2}, \
+                         masked={masked}): analytic {analytic} vs numeric {numeric}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ref_dag_train_thread_count_invariance() {
+        // Same loss and gradients, bit for bit, at 1/2/3 kernel threads
+        // — the PR 5 contract carried over to residual topologies.
+        let arch = residual_arch(3, 5, true);
+        let params: Vec<Tensor> = arch
+            .param_shapes
+            .iter()
+            .enumerate()
+            .map(|(i, s)| det_tensor(s, 80 + i as u64))
+            .collect();
+        let pref: Vec<&Tensor> = params.iter().collect();
+        let masks = [join_mask(5, 2)];
+        let mref: Vec<&Tensor> = masks.iter().collect();
+        let x = det_tensor(&[3, 8, 8, 3], 300);
+        let mut y = Tensor::zeros(&[3, 4]);
+        y.data[0] = 1.0;
+        y.data[4 + 1] = 1.0;
+        y.data[8 + 3] = 1.0;
+        let tlog = det_tensor(&[3, 4], 301);
+        let mut base: Option<(f32, Vec<Tensor>, Tensor)> = None;
+        for threads in [1usize, 2, 3] {
+            let net = RefNet::compile(arch.clone(), threads).unwrap();
+            let mut sc = Scratch::default();
+            let (loss, _, grads) = net
+                .loss_and_grads(
+                    &pref, &mref, 0.0, 0.0, &x, &y, &tlog, 0.3, 2.0, [0.0, 0.0], 1e-4, &mut sc,
+                )
+                .unwrap();
+            let (h1, _) = net.stage1(&pref, &mref, 0.0, 0.0, &x, &mut sc).unwrap();
+            match &base {
+                None => base = Some((loss, grads, h1)),
+                Some((l0, g0, h0)) => {
+                    assert_eq!(loss.to_bits(), l0.to_bits(), "loss differs at {threads} threads");
+                    for (ga, gb) in grads.iter().zip(g0) {
+                        assert_eq!(ga.data, gb.data, "grads differ at {threads} threads");
+                    }
+                    assert_eq!(h1.data, h0.data, "stage1 differs at {threads} threads");
+                }
+            }
+        }
     }
 
     #[test]

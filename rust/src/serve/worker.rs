@@ -431,6 +431,8 @@ mod tests {
             in_mask: -1,
             out_mask: -1,
             segment: "seg3".into(),
+            input: String::new(),
+            act: true,
         }];
         let arch = Arc::new(crate::models::ArchManifest {
             name: "toy".into(),
@@ -445,6 +447,7 @@ mod tests {
             stage_batches: vec![1],
             stage_h1_shape: vec![1, 4],
             stage_h2_shape: vec![1, 4],
+            joins: Vec::new(),
         });
         let state = Arc::new(ModelState::init_host(arch, 0));
         let pool = WorkerPool::start(

@@ -38,6 +38,8 @@ fn rand_arch(rng: &mut coc::util::rng::Rng) -> Arc<ArchManifest> {
             in_mask,
             out_mask: i as i64,
             segment: if i < nconv / 2 { "seg1" } else { "seg2" }.into(),
+            input: String::new(),
+            act: true,
         });
         param_shapes.push(vec![3, 3, cin, cout]);
         param_shapes.push(vec![cout]);
@@ -59,6 +61,8 @@ fn rand_arch(rng: &mut coc::util::rng::Rng) -> Arc<ArchManifest> {
         in_mask,
         out_mask: -1,
         segment: "seg3".into(),
+        input: String::new(),
+        act: true,
     });
     param_shapes.push(vec![cin, 20]);
     param_shapes.push(vec![20]);
@@ -75,6 +79,7 @@ fn rand_arch(rng: &mut coc::util::rng::Rng) -> Arc<ArchManifest> {
         stage_batches: vec![1],
         stage_h1_shape: vec![1],
         stage_h2_shape: vec![1],
+        joins: Vec::new(),
     })
 }
 

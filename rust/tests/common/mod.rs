@@ -1,0 +1,64 @@
+//! Shared helpers for the hermetic ref-backend suites: the builtin
+//! architecture matrix and the canonical golden-digest flow.  Each test
+//! binary pulls this in with `mod common;` and uses its own subset.
+#![allow(dead_code)]
+
+use std::sync::Arc;
+
+use coc::data::{Dataset, DatasetKind};
+use coc::models::{builtin_ref_manifest, ArchManifest, BUILTIN_REF_ARCHS};
+use coc::runtime::Engine;
+use coc::train::{self, TrainOpts};
+
+/// The architecture matrix every hermetic suite runs over: the legacy
+/// feed-forward chain plus the two DAG topologies (residual joins and
+/// depthwise towers with a skip join).
+pub const REF_ARCHS: [&str; 3] = BUILTIN_REF_ARCHS;
+
+/// Builtin arch by name (panics on unknown names — test-only).
+pub fn builtin_arch(name: &str) -> Arc<ArchManifest> {
+    builtin_ref_manifest().arch(name).unwrap()
+}
+
+/// One canonical train -> eval flow on the ref backend, hashed to a
+/// single value (FNV-1a over the exact f32 bit patterns of params,
+/// momenta, losses, and all three logit heads).  Shared by the
+/// thread-count and SIMD-ISA digest tests; CI additionally diffs the
+/// per-arch digest lines across `COC_REF_THREADS` / `COC_REF_SIMD`
+/// settings, pinning the invariance across processes too.
+pub fn golden_digest(arch_name: &str, threads: Option<usize>) -> u64 {
+    let engine = match threads {
+        Some(t) => Engine::new_ref_with_threads(t).unwrap(),
+        None => Engine::new_ref().unwrap(), // COC_REF_THREADS / parallelism
+    };
+    let arch = builtin_arch(arch_name);
+    // mini_vgg keeps the original real-sized flow (big enough that the
+    // kernel thread pool actually engages); the deeper DAG archs use a
+    // shorter schedule so the matrixed suite stays bounded.
+    let (steps, ntrain, ntest) =
+        if arch_name == "mini_vgg" { (6usize, 96usize, 48usize) } else { (3, 48, 24) };
+    let train_ds = Dataset::generate(DatasetKind::SynthC10, ntrain, 21, 0);
+    let test_ds = Dataset::generate(DatasetKind::SynthC10, ntest, 21, 1);
+    let mut st = train::init_state(&engine, arch, 21).unwrap();
+    let opts = TrainOpts { steps, seed: 21, exit_w: [0.3, 0.3], ..Default::default() };
+    let log = train::train(&engine, &mut st, &train_ds, None, &opts).unwrap();
+    let (logits, e1, e2) = train::eval_logits(&engine, &st, &test_ds).unwrap();
+
+    let mut h = 0xcbf29ce484222325u64;
+    let mut eat = |data: &[f32]| {
+        for v in data {
+            for byte in v.to_bits().to_le_bytes() {
+                h ^= byte as u64;
+                h = h.wrapping_mul(0x100000001b3);
+            }
+        }
+    };
+    for t in st.params.iter().chain(st.momenta.iter()) {
+        eat(&t.data);
+    }
+    eat(&log.losses);
+    eat(&logits.data);
+    eat(&e1.data);
+    eat(&e2.data);
+    h
+}

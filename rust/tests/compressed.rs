@@ -10,21 +10,25 @@
 //!   exactly deterministic across `--ref-threads`;
 //! - a save/load roundtrip of the packed artifact changes nothing.
 
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use coc::data::{Dataset, DatasetKind};
 use coc::models::compressed::CompressedModel;
-use coc::models::{builtin_ref_manifest, ModelState, QBits};
+use coc::models::{
+    builtin_ref_manifest, ArchManifest, JoinDesc, LayerDesc, LayerKind, MaskSlot, ModelState,
+    QBits,
+};
 use coc::runtime::Engine;
 use coc::serve::StageRunner;
 use coc::tensor::Tensor;
 use coc::train;
 
-/// Built-in mini_vgg state with every mask slot half-zeroed (a pruned
-/// leaf without the training budget) and the given qbits.
-fn leaf_state(seed: u64, qbits: QBits) -> ModelState {
+/// Built-in state with every mask slot half-zeroed (a pruned leaf
+/// without the training budget) and the given qbits.
+fn leaf_state_for(arch_name: &str, seed: u64, qbits: QBits) -> ModelState {
     let engine = Engine::new_ref_with_threads(1).unwrap();
-    let arch = builtin_ref_manifest().arch("mini_vgg").unwrap();
+    let arch = builtin_ref_manifest().arch(arch_name).unwrap();
     let mut st = train::init_state(&engine, arch, seed).unwrap();
     for (mi, m) in st.masks.iter_mut().enumerate() {
         for (i, v) in m.data.iter_mut().enumerate() {
@@ -35,6 +39,10 @@ fn leaf_state(seed: u64, qbits: QBits) -> ModelState {
     }
     st.qbits = qbits;
     st
+}
+
+fn leaf_state(seed: u64, qbits: QBits) -> ModelState {
+    leaf_state_for("mini_vgg", seed, qbits)
 }
 
 fn eval_input(st: &ModelState, seed: u64) -> (Dataset, Tensor) {
@@ -177,4 +185,152 @@ fn ref_serve_runner_compressed_matches_dense_pruned_fp32() {
     let want = dense.infer_many(&refs, 0.6, 0.6).unwrap();
     let got = packed.infer_many(&refs, 0.6, 0.6).unwrap();
     assert_eq!(want, got, "compressed serving diverged from dense on a pruned fp32 leaf");
+}
+
+/// The DAG archs under the compressed umbrella: pruned fp32 lowering of
+/// mini_resnet (skip joins over a shared live set) and mini_mobilenet
+/// (depthwise towers + unary joins) executes bit-identically to the
+/// dense masked graph.  Dead channels contribute exactly +0.0 at every
+/// join, so compaction must not move a single bit.
+#[test]
+fn ref_dag_archs_pruned_fp32_compressed_eval_is_bitwise_dense() {
+    for arch_name in ["mini_resnet", "mini_mobilenet"] {
+        let st = leaf_state_for(arch_name, 7, QBits::FP32);
+        let (_ds, x) = eval_input(&st, 3);
+        let cm = Arc::new(CompressedModel::lower(&st).unwrap());
+        assert!(
+            cm.packed_bytes() < CompressedModel::dense_bytes(&st.arch),
+            "{arch_name}: packed form did not shrink"
+        );
+        let want = dense_eval(2, &st, &x);
+        let got = compressed_eval(2, &cm, &x);
+        assert_eq!(want.len(), 3);
+        for (name, (w, g)) in ["logits", "exit1", "exit2"].iter().zip(want.iter().zip(&got)) {
+            assert_eq!(w.shape, g.shape, "{arch_name}: {name} shape");
+            assert_eq!(
+                w.data, g.data,
+                "{arch_name}: {name}: pruned-fp32 compressed eval must be bit-identical"
+            );
+        }
+    }
+}
+
+/// int8 lowering of mini_resnet: exactly deterministic across thread
+/// counts, and tracking the dense fake-quant graph to tolerance through
+/// the skip joins (the integer path only differs by accumulation
+/// rounding and the act-quant code flips it induces downstream).
+#[test]
+fn ref_resnet_int8_compressed_eval_is_thread_invariant() {
+    let st = leaf_state_for("mini_resnet", 11, QBits { weight: 2.0, act: 8.0 });
+    let (_ds, x) = eval_input(&st, 5);
+    let cm = Arc::new(CompressedModel::lower(&st).unwrap());
+    assert!(
+        cm.layers.iter().any(|l| l.form.tag() == "int8"),
+        "expected int8-packed layers on mini_resnet, got {:?}",
+        cm.layers.iter().map(|l| l.form.tag()).collect::<Vec<_>>()
+    );
+
+    let want = compressed_eval(1, &cm, &x);
+    for threads in [2usize, 4] {
+        let got = compressed_eval(threads, &cm, &x);
+        for (w, g) in want.iter().zip(&got) {
+            assert_eq!(w.data, g.data, "int8 resnet eval changed bits at {threads} threads");
+        }
+    }
+
+    let dense = dense_eval(2, &st, &x);
+    for (name, (w, g)) in ["logits", "exit1", "exit2"].iter().zip(dense.iter().zip(&want)) {
+        let scale = w.data.iter().fold(0.0f32, |a, v| a.max(v.abs())).max(1e-6);
+        let diff =
+            w.data.iter().zip(&g.data).fold(0.0f32, |a, (x, y)| a.max((x - y).abs()));
+        assert!(
+            diff / scale < 0.1,
+            "{name}: int8 resnet drifted {diff} (scale {scale}) from dense fake-quant"
+        );
+    }
+}
+
+/// Negative: a manifest whose projection writes a different mask slot
+/// than its skip join must be rejected at `lower` with a diagnostic
+/// naming the join — compaction over disagreeing live sets would
+/// silently misalign the add.
+#[test]
+fn lower_rejects_disagreeing_masks_at_skip_join() {
+    let conv = |name: &str, k: usize, cin: usize, im: i64, om: i64, input: &str| LayerDesc {
+        name: name.into(),
+        kind: LayerKind::Conv,
+        k,
+        cin,
+        cout: 8,
+        stride: 1,
+        hout: 8,
+        wout: 8,
+        in_mask: im,
+        out_mask: om,
+        segment: "seg1".into(),
+        input: input.into(),
+        act: false,
+    };
+    let mut stem = conv("stem", 3, 3, -1, 0, "@input");
+    stem.act = true;
+    let layers = vec![
+        stem,
+        conv("a1", 3, 8, 0, 2, "stem"),
+        // Wrong slot: the projection writes m1 while the join owns m2.
+        conv("proj", 1, 8, 0, 1, "stem"),
+        LayerDesc {
+            name: "fc".into(),
+            kind: LayerKind::Dense,
+            k: 1,
+            cin: 8,
+            cout: 4,
+            stride: 1,
+            hout: 1,
+            wout: 1,
+            in_mask: 2,
+            out_mask: -1,
+            segment: "seg3".into(),
+            input: "j".into(),
+            act: true,
+        },
+    ];
+    let arch = Arc::new(ArchManifest {
+        name: "bad_join".into(),
+        num_classes: 4,
+        layers,
+        mask_slots: (0..3)
+            .map(|i| MaskSlot { name: format!("m{i}"), channels: 8 })
+            .collect(),
+        param_shapes: vec![
+            vec![3, 3, 3, 8],
+            vec![8],
+            vec![3, 3, 8, 8],
+            vec![8],
+            vec![1, 1, 8, 8],
+            vec![8],
+            vec![8, 4],
+            vec![4],
+        ],
+        graphs: BTreeMap::new(),
+        train_batch: 2,
+        eval_batch: 2,
+        stage_batch: 1,
+        stage_batches: vec![1],
+        stage_h1_shape: vec![1, 8, 8, 8],
+        stage_h2_shape: vec![1, 8, 8, 8],
+        joins: vec![JoinDesc {
+            name: "j".into(),
+            a: "a1".into(),
+            b: Some("proj".into()),
+            out_mask: 2,
+            segment: "seg1".into(),
+        }],
+    });
+    let st = ModelState::init_host(arch, 3);
+    let err = CompressedModel::lower(&st).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("disagree at the skip join") && msg.contains("`j`"),
+        "diagnostic must name the offending join: {msg}"
+    );
 }

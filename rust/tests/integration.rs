@@ -20,6 +20,8 @@ use coc::runtime::Engine;
 use coc::serve::Server;
 use coc::train::{self, TrainOpts};
 
+mod common;
+
 fn artifacts_ok() -> bool {
     Path::new("artifacts/manifest.json").exists()
 }
@@ -41,6 +43,8 @@ fn ref_arch() -> Arc<ArchManifest> {
             in_mask: im,
             out_mask: om,
             segment: seg.into(),
+            input: String::new(),
+            act: true,
         }
     };
     let dense = |name: &str, cin: usize, im: i64, seg: &str| LayerDesc {
@@ -55,6 +59,8 @@ fn ref_arch() -> Arc<ArchManifest> {
         in_mask: im,
         out_mask: -1,
         segment: seg.into(),
+        input: String::new(),
+        act: true,
     };
     let layers = vec![
         conv("c1", 3, 8, 16, -1, 0, "seg1"),
@@ -98,6 +104,7 @@ fn ref_arch() -> Arc<ArchManifest> {
         stage_batches: vec![1, 4],
         stage_h1_shape: vec![1, 16, 16, 8],
         stage_h2_shape: vec![1, 8, 8, 16],
+        joins: Vec::new(),
     })
 }
 
@@ -450,13 +457,13 @@ fn ref_training_is_bit_deterministic() {
     assert_eq!(a.5, b.5);
 }
 
-/// The built-in mini_vgg manifest drives the ref backend end to end (the
-/// `--backend ref` CLI path with no artifacts directory at all).
-#[test]
-fn ref_builtin_manifest_serves_mini_vgg() {
+/// A built-in manifest drives the ref backend end to end (the
+/// `--backend ref` CLI path with no artifacts directory at all): eval on
+/// a ragged dataset, then staged serving agreeing with the full eval.
+fn builtin_manifest_serves(arch_name: &str) {
     let m = builtin_ref_manifest();
     assert_eq!(m.num_classes, 20);
-    let arch = m.arch("mini_vgg").unwrap();
+    let arch = m.arch(arch_name).unwrap();
     let engine = Engine::new_ref().unwrap();
     let state = train::init_state(&engine, arch.clone(), 3).unwrap();
     assert_eq!(state.params.len(), arch.num_params());
@@ -480,92 +487,106 @@ fn ref_builtin_manifest_serves_mini_vgg() {
     }
 }
 
+#[test]
+fn ref_builtin_manifest_serves_mini_vgg() {
+    builtin_manifest_serves("mini_vgg");
+}
+
+#[test]
+fn ref_builtin_manifest_serves_mini_resnet() {
+    builtin_manifest_serves("mini_resnet");
+}
+
+#[test]
+fn ref_builtin_manifest_serves_mini_mobilenet() {
+    builtin_manifest_serves("mini_mobilenet");
+}
+
+/// The DAG archs train for real on the ref backend: the loss moves and
+/// stays finite through residual / depthwise-tower topologies (the
+/// mini_vgg variant of this guarantee lives in `ref_end_to_end`).
+#[test]
+fn ref_builtin_dag_archs_train() {
+    for arch_name in ["mini_resnet", "mini_mobilenet"] {
+        let engine = Engine::new_ref().unwrap();
+        let arch = common::builtin_arch(arch_name);
+        let ds = Dataset::generate(DatasetKind::SynthC10, 64, 7, 0);
+        let mut state = train::init_state(&engine, arch, 7).unwrap();
+        let opts = TrainOpts { steps: 6, seed: 7, ..Default::default() };
+        let log = train::train(&engine, &mut state, &ds, None, &opts).unwrap();
+        assert!(
+            log.losses.iter().all(|l| l.is_finite()),
+            "{arch_name}: non-finite loss {:?}",
+            log.losses
+        );
+        for p in &state.params {
+            assert!(p.data.iter().all(|v| v.is_finite()), "{arch_name}: non-finite params");
+        }
+    }
+}
+
 /// Golden determinism digest: a canonical train -> eval flow on the
-/// ref backend over the real-sized built-in mini_vgg (big enough that the
-/// kernel thread pool actually engages), hashed to one value.
+/// ref backend over every built-in arch (the real-sized mini_vgg chain
+/// plus the mini_resnet / mini_mobilenet DAG topologies), hashed to one
+/// value per arch.
 ///
 /// Asserts in-process that 1, 2 and 3 kernel threads produce the same
-/// bits, and — when `COC_REF_DIGEST_OUT` is set — writes the digest so CI
-/// can diff it across `COC_REF_THREADS` settings: if threading ever
-/// changes a result, the two CI runs disagree and the diff fails.
+/// bits, and — when `COC_REF_DIGEST_OUT` is set — writes one digest line
+/// per arch so CI can diff the file across `COC_REF_THREADS` settings:
+/// if threading ever changes a result, the two CI runs disagree and the
+/// diff fails.
 #[test]
 fn ref_golden_digest_is_thread_count_invariant() {
-    let d1 = golden_digest(Some(1));
-    for t in [2usize, 3] {
-        assert_eq!(d1, golden_digest(Some(t)), "{t} kernel threads changed the golden digest");
+    let mut lines = String::new();
+    for arch in common::REF_ARCHS {
+        let d1 = common::golden_digest(arch, Some(1));
+        for t in [2usize, 3] {
+            assert_eq!(
+                d1,
+                common::golden_digest(arch, Some(t)),
+                "{arch}: {t} kernel threads changed the golden digest"
+            );
+        }
+        let denv = common::golden_digest(arch, None);
+        assert_eq!(d1, denv, "{arch}: default thread count changed the golden digest");
+        lines.push_str(&format!("{arch} {denv:016x}\n"));
     }
-    let denv = golden_digest(None);
-    assert_eq!(d1, denv, "default thread count changed the golden digest");
 
     // The observability overhead contract: tracing records timings, never
     // numerics.  The same flow run with tracing enabled (spans recording
     // and exporting a real Chrome trace) must produce bit-identical
     // results.
+    let want = common::golden_digest("mini_vgg", Some(2));
     coc::obs::trace::enable();
-    let dtraced = golden_digest(Some(2));
+    let dtraced = common::golden_digest("mini_vgg", Some(2));
     coc::obs::trace::disable();
     let trace_path =
         std::env::temp_dir().join(format!("coc_golden_trace_{}.json", std::process::id()));
     coc::obs::trace::export(&trace_path).unwrap();
-    assert_eq!(d1, dtraced, "tracing changed the golden digest");
+    assert_eq!(want, dtraced, "tracing changed the golden digest");
     let text = std::fs::read_to_string(&trace_path).unwrap();
     assert!(text.contains("refback.conv2d"), "trace should contain kernel spans");
     std::fs::remove_file(&trace_path).ok();
 
     if let Ok(path) = std::env::var("COC_REF_DIGEST_OUT") {
-        std::fs::write(&path, format!("{denv:016x}\n")).unwrap();
-        eprintln!("golden digest {denv:016x} -> {path}");
+        std::fs::write(&path, &lines).unwrap();
+        eprintln!("golden digests -> {path}\n{lines}");
     }
 }
 
-/// The SIMD twin of the thread-count digest: the same canonical flow,
+/// The SIMD twin of the thread-count digest: the same canonical flows,
 /// forced onto every ISA path this host supports, must match the scalar
-/// path bit for bit (DESIGN.md §Backends).  CI additionally diffs
-/// `$COC_REF_DIGEST_OUT` across `COC_REF_SIMD=scalar` and the default
-/// run, pinning the equivalence across processes too.
+/// path bit for bit (DESIGN.md §Backends) on every built-in arch.  CI
+/// additionally diffs `$COC_REF_DIGEST_OUT` across `COC_REF_SIMD=scalar`
+/// and the default run, pinning the equivalence across processes too.
 #[test]
 fn ref_golden_digest_is_simd_isa_invariant() {
     use coc::runtime::refback::simd;
-    let want = simd::with_forced(simd::Isa::Scalar, || golden_digest(Some(2)));
-    for isa in simd::available() {
-        let got = simd::with_forced(isa, || golden_digest(Some(2)));
-        assert_eq!(got, want, "isa {} changed the golden digest", isa.name());
-    }
-}
-
-/// One canonical train -> eval flow on the ref backend, hashed to a
-/// single value (FNV-1a over exact f32 bit patterns).  Shared by the
-/// thread-count and SIMD-ISA digest tests above.
-fn golden_digest(threads: Option<usize>) -> u64 {
-    let engine = match threads {
-        Some(t) => Engine::new_ref_with_threads(t).unwrap(),
-        None => Engine::new_ref().unwrap(), // COC_REF_THREADS / parallelism
-    };
-    let arch = builtin_ref_manifest().arch("mini_vgg").unwrap();
-    let train_ds = Dataset::generate(DatasetKind::SynthC10, 96, 21, 0);
-    let test_ds = Dataset::generate(DatasetKind::SynthC10, 48, 21, 1);
-    let mut st = train::init_state(&engine, arch, 21).unwrap();
-    let opts = TrainOpts { steps: 6, seed: 21, exit_w: [0.3, 0.3], ..Default::default() };
-    let log = train::train(&engine, &mut st, &train_ds, None, &opts).unwrap();
-    let (logits, e1, e2) = train::eval_logits(&engine, &st, &test_ds).unwrap();
-
-    // FNV-1a over the exact f32 bit patterns of everything the flow
-    // produced: params, momenta, losses, all three logit heads.
-    let mut h = 0xcbf29ce484222325u64;
-    let mut eat = |data: &[f32]| {
-        for v in data {
-            for byte in v.to_bits().to_le_bytes() {
-                h ^= byte as u64;
-                h = h.wrapping_mul(0x100000001b3);
-            }
+    for arch in common::REF_ARCHS {
+        let want = simd::with_forced(simd::Isa::Scalar, || common::golden_digest(arch, Some(2)));
+        for isa in simd::available() {
+            let got = simd::with_forced(isa, || common::golden_digest(arch, Some(2)));
+            assert_eq!(got, want, "{arch}: isa {} changed the golden digest", isa.name());
         }
-    };
-    for t in st.params.iter().chain(st.momenta.iter()) {
-        eat(&t.data);
     }
-    eat(&log.losses);
-    eat(&logits.data);
-    eat(&e1.data);
-    eat(&e2.data);
-    h
 }

@@ -25,6 +25,8 @@ use coc::models::{
 use coc::runtime::Engine;
 use coc::train::{self, TrainOpts};
 
+mod common;
+
 // ---------------------------------------------------------------------------
 // Engine-free substrate
 // ---------------------------------------------------------------------------
@@ -46,6 +48,8 @@ fn toy_arch() -> Arc<ArchManifest> {
                 in_mask: -1,
                 out_mask: 0,
                 segment: "seg1".into(),
+                input: String::new(),
+                act: true,
             },
             LayerDesc {
                 name: "fc".into(),
@@ -59,6 +63,8 @@ fn toy_arch() -> Arc<ArchManifest> {
                 in_mask: 0,
                 out_mask: -1,
                 segment: "seg3".into(),
+                input: String::new(),
+                act: true,
             },
         ],
         mask_slots: vec![MaskSlot { name: "m0".into(), channels: 8 }],
@@ -70,6 +76,7 @@ fn toy_arch() -> Arc<ArchManifest> {
         stage_batches: vec![1],
         stage_h1_shape: vec![1, 8, 8, 8],
         stage_h2_shape: vec![1, 8, 8, 8],
+        joins: Vec::new(),
     })
 }
 
@@ -355,6 +362,8 @@ fn ref_plan_arch() -> Arc<ArchManifest> {
             in_mask: -1,
             out_mask: 0,
             segment: "seg1".into(),
+            input: String::new(),
+            act: true,
         },
         LayerDesc {
             name: "fc".into(),
@@ -368,6 +377,8 @@ fn ref_plan_arch() -> Arc<ArchManifest> {
             in_mask: 0,
             out_mask: -1,
             segment: "seg3".into(),
+            input: String::new(),
+            act: true,
         },
     ];
     let mut graphs = BTreeMap::new();
@@ -387,6 +398,7 @@ fn ref_plan_arch() -> Arc<ArchManifest> {
         stage_batches: vec![1],
         stage_h1_shape: vec![1, 8, 8, 6],
         stage_h2_shape: vec![1, 8, 8, 6],
+        joins: Vec::new(),
     })
 }
 
@@ -523,5 +535,42 @@ fn ref_parallel_plan_matches_serial() {
     for (a, b) in serial.outcomes.iter().zip(&parallel.outcomes) {
         assert_eq!(a.final_state.params, b.final_state.params);
         assert_eq!(a.final_state.qbits, b.final_state.qbits);
+    }
+}
+
+/// Snapshot/replay over the full builtin arch matrix: plan-cache
+/// serialization round-trips the DAG archs' states (including their
+/// join-declaring manifests) bit-identically — warm replays equal the
+/// cold run on mini_vgg, mini_resnet and mini_mobilenet alike.
+#[test]
+fn ref_plan_cache_round_trips_builtin_archs() {
+    for arch_name in common::REF_ARCHS {
+        let arch = common::builtin_arch(arch_name);
+        let base = ModelState::init_host(arch, 5);
+        let mut plan = Planner::new(PlanKey {
+            arch: arch_name.into(),
+            dataset: "c10".into(),
+            scale: "smoke".into(),
+            base_steps: 6,
+            seed: 5,
+        });
+        let p = || Box::new(stages::Prune { ratio: 0.4, ..Default::default() });
+        let q = || Box::new(stages::Quantize { bits_w: 2.0, bits_a: 8.0, ..Default::default() });
+        plan.submit(Chain::new().push(p()), "P", "rung0");
+        plan.submit(Chain::new().push(p()).push(q()), "PQ", "rung0");
+        assert_eq!(plan.unique_nodes(), 2, "{arch_name}: PQ must ride on the P node");
+
+        let cache = tmp_dir(&format!("cache_matrix_{arch_name}"));
+        let cold = exec(&plan, &base, 1, Some(&cache));
+        assert_eq!(cold.stats.executed, 2);
+        let warm = exec(&plan, &base, 1, Some(&cache));
+        assert_eq!(warm.stats.cache_hits, 2, "{arch_name}: warm run must replay every node");
+        assert_eq!(warm.points, cold.points, "{arch_name}: replayed points diverged");
+        for (a, b) in cold.outcomes.iter().zip(&warm.outcomes) {
+            assert_eq!(a.final_state.params, b.final_state.params, "{arch_name}: params diverged");
+            assert_eq!(a.final_state.masks, b.final_state.masks, "{arch_name}: masks diverged");
+            assert_eq!(a.final_state.qbits, b.final_state.qbits, "{arch_name}: qbits diverged");
+        }
+        std::fs::remove_dir_all(&cache).ok();
     }
 }

@@ -15,6 +15,8 @@ use coc::runtime::Engine;
 use coc::serve::Server;
 use coc::train::{self, TrainOpts};
 
+mod common;
+
 fn artifacts_ok() -> bool {
     Path::new("artifacts/manifest.json").exists()
 }
@@ -212,6 +214,8 @@ fn ref_arch() -> Arc<ArchManifest> {
             in_mask: -1,
             out_mask: 0,
             segment: "seg1".into(),
+            input: String::new(),
+            act: true,
         },
         LayerDesc {
             name: "fc".into(),
@@ -225,6 +229,8 @@ fn ref_arch() -> Arc<ArchManifest> {
             in_mask: 0,
             out_mask: -1,
             segment: "seg3".into(),
+            input: String::new(),
+            act: true,
         },
         LayerDesc {
             name: "x1".into(),
@@ -238,6 +244,8 @@ fn ref_arch() -> Arc<ArchManifest> {
             in_mask: 0,
             out_mask: -1,
             segment: "exit1".into(),
+            input: String::new(),
+            act: true,
         },
     ];
     let mut graphs = BTreeMap::new();
@@ -264,6 +272,7 @@ fn ref_arch() -> Arc<ArchManifest> {
         stage_batches: vec![1],
         stage_h1_shape: vec![1, 8, 8, 8],
         stage_h2_shape: vec![1, 8, 8, 8],
+        joins: Vec::new(),
     })
 }
 
@@ -377,6 +386,61 @@ fn ref_serve_has_no_residency_and_transports_agree() {
                 b.infer(&x, t1, t2).unwrap(),
                 "prediction diverged at thresholds ({t1}, {t2})"
             );
+        }
+    }
+}
+
+/// The transport-equivalence guarantee over the full builtin arch matrix:
+/// resident-attempting and marshalled eval entry points agree bit-for-bit
+/// on a ragged dataset, and padded rows never leak — including through
+/// the mini_resnet / mini_mobilenet DAG topologies.
+#[test]
+fn ref_eval_transports_agree_on_builtin_archs() {
+    for arch_name in common::REF_ARCHS {
+        let engine = Engine::new_ref().unwrap();
+        let arch = common::builtin_arch(arch_name);
+        let nc = arch.num_classes;
+        // Ragged: one full eval batch plus a padded remainder.
+        let n = arch.eval_batch + arch.eval_batch / 2 + 1;
+        let ds = Dataset::generate(DatasetKind::SynthC10, n, 29, 1);
+        let state = train::init_state(&engine, arch, 29).unwrap();
+
+        let (m_f, e1_f, e2_f) = train::eval_logits(&engine, &state, &ds).unwrap();
+        let (m_d, e1_d, e2_d) = train::eval_logits_marshalled(&engine, &state, &ds).unwrap();
+        assert_eq!(m_f, m_d, "{arch_name}: main logits diverged across transports");
+        assert_eq!(e1_f, e1_d, "{arch_name}: exit1 logits diverged across transports");
+        assert_eq!(e2_f, e2_d, "{arch_name}: exit2 logits diverged across transports");
+        assert_eq!(m_f.shape, vec![n, nc], "{arch_name}: padding leaked into the row count");
+        assert!(m_f.data.iter().all(|v| v.is_finite()), "{arch_name}: non-finite logits");
+    }
+}
+
+/// Serving the builtin matrix on the ref backend: no resident prefix ever
+/// comes up, and the literal-vs-disabled transports agree per request.
+#[test]
+fn ref_serve_transports_agree_on_builtin_archs() {
+    for arch_name in common::REF_ARCHS {
+        let engine = Engine::new_ref().unwrap();
+        let arch = common::builtin_arch(arch_name);
+        let ds = Dataset::generate(DatasetKind::SynthC10, 6, 31, 1);
+        let state = train::init_state(&engine, arch, 31).unwrap();
+
+        let a = Server::new(&engine, state.clone()).unwrap();
+        assert!(
+            !a.runner().residency_active(),
+            "{arch_name}: ref backend must have no resident prefix"
+        );
+        let b = Server::new(&engine, state).unwrap();
+        b.runner().disable_residency();
+        for (t1, t2) in [(0.0f32, 0.0f32), (1.01, 1.01)] {
+            for i in 0..ds.len() {
+                let (x, _) = ds.batch(&[i]);
+                assert_eq!(
+                    a.infer(&x, t1, t2).unwrap(),
+                    b.infer(&x, t1, t2).unwrap(),
+                    "{arch_name}: prediction diverged at thresholds ({t1}, {t2})"
+                );
+            }
         }
     }
 }

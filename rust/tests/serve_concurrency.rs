@@ -16,6 +16,8 @@ use coc::serve::queue::Queue;
 use coc::serve::worker::{PoolOpts, ServeJob, WorkerPool};
 use coc::serve::Server;
 
+mod common;
+
 fn artifacts_ok() -> bool {
     Path::new("artifacts/manifest.json").exists()
 }
@@ -268,6 +270,8 @@ fn ref_arch(with_full_b4: bool) -> Arc<ArchManifest> {
             in_mask: im,
             out_mask: om,
             segment: seg.into(),
+            input: String::new(),
+            act: true,
         }
     };
     let dense = |name: &str, cin: usize, seg: &str| LayerDesc {
@@ -282,6 +286,8 @@ fn ref_arch(with_full_b4: bool) -> Arc<ArchManifest> {
         in_mask: -1,
         out_mask: -1,
         segment: seg.into(),
+        input: String::new(),
+        act: true,
     };
     let layers = vec![
         conv("c1", 3, 8, 8, -1, 0, "seg1"),
@@ -327,6 +333,7 @@ fn ref_arch(with_full_b4: bool) -> Arc<ArchManifest> {
         stage_batches: vec![1, 4],
         stage_h1_shape: vec![1, 8, 8, 8],
         stage_h2_shape: vec![1, 8, 8, 12],
+        joins: Vec::new(),
     })
 }
 
@@ -495,4 +502,56 @@ fn ref_loadgen_same_seed_same_schedule_and_report() {
     assert_eq!(a.accuracy, b.accuracy, "same seed + deterministic backend => same accuracy");
     assert_eq!(a.p_exit1, b.p_exit1, "exit-1 distribution diverged across same-seed runs");
     assert_eq!(a.p_exit2, b.p_exit2, "exit-2 distribution diverged across same-seed runs");
+}
+
+/// The concurrent pool over the full builtin arch matrix: two ref
+/// workers reproduce the sequential server's per-request results exactly
+/// on mini_vgg, mini_resnet and mini_mobilenet — the DAG stage graphs
+/// micro-batch and split across workers like the legacy chain.
+#[test]
+fn ref_pool_serves_builtin_arch_matrix() {
+    for arch_name in common::REF_ARCHS {
+        let arch = common::builtin_arch(arch_name);
+        let test_ds = Dataset::generate(DatasetKind::SynthC10, 12, 47, 1);
+        let engine = Engine::new_ref().unwrap();
+        let mut state = coc::train::init_state(&engine, arch, 47).unwrap();
+        state.exits.trained = true;
+        state.exits.thresholds = Some((0.5, 0.5));
+
+        let t = 0.5f32;
+        let server = Server::new(&engine, state.clone()).unwrap();
+        let mut want = Vec::new();
+        for i in 0..test_ds.len() {
+            let (x, _) = test_ds.batch(&[i]);
+            want.push(server.infer(&x, t, t).unwrap());
+        }
+
+        let mut opts = PoolOpts::new("unused-by-ref-backend", 2, (t, t));
+        opts.backend = BackendChoice::Ref;
+        opts.batch = BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) };
+        let pool = WorkerPool::start(Arc::new(state), opts);
+        let up = pool.wait_ready(Duration::from_secs(60)).unwrap();
+        assert_eq!(up, 2, "{arch_name}: both ref workers must come up");
+
+        for i in 0..test_ds.len() {
+            let (x, _) = test_ds.batch(&[i]);
+            pool.submit(ServeJob::new(i as u64, x, Some(test_ds.labels[i]))).unwrap();
+        }
+        let mut got: Vec<Option<(usize, u8)>> = vec![None; test_ds.len()];
+        for _ in 0..test_ds.len() {
+            let o = pool.outcomes().pop().expect("pool dropped a request");
+            got[o.id as usize] = Some((o.pred, o.stage));
+        }
+        let outcome = pool.shutdown();
+        assert!(outcome.errors.is_empty(), "{arch_name}: worker errors: {:?}", outcome.errors);
+        let processed: u64 = outcome.stats.iter().map(|w| w.processed).sum();
+        assert_eq!(processed, test_ds.len() as u64);
+        for (i, w) in want.iter().enumerate() {
+            assert_eq!(
+                got[i].expect("request never completed"),
+                *w,
+                "{arch_name}: request {i} diverged under concurrency"
+            );
+        }
+    }
 }
