@@ -8,10 +8,12 @@
 #   make bench-diff  gate results/ against the committed BENCH_*.json ledgers
 #   make bench-simd  hermetic scalar-vs-SIMD kernel tiers (refback_kernels)
 #   make serve-bench-compressed  hermetic dense-vs-compressed serving comparison
+#   make chaos       deterministic fault-injection soak (hermetic ref backend)
+#   make bless       re-bless BENCH_*.json ledgers from the current results/
 
 ARTIFACTS := artifacts
 
-.PHONY: artifacts build test verify bench bench-diff bench-simd serve-bench-compressed
+.PHONY: artifacts build test verify bench bench-diff bench-simd serve-bench-compressed chaos bless
 
 artifacts:
 	cd python && python -m compile.aot --out ../$(ARTIFACTS)
@@ -55,3 +57,16 @@ bench-diff: build
 serve-bench-compressed: build
 	cd rust && cargo run --release -q -- serve-bench --backend ref --arch mini_vgg \
 		--scale smoke --requests 400 --workers 2 --out ../results --compressed
+
+# Deterministic fault-injection soak on the hermetic ref backend: panic
+# storms, slow batches vs deadlines, plan quarantine, cache corruption —
+# every test asserts the exactly-one-terminal-outcome invariant and the
+# same-seed schedule-determinism contract (see DESIGN.md "Failure
+# domains & fault injection").
+chaos:
+	cd rust && cargo test --test chaos -- --nocapture
+
+# Re-bless the committed BENCH_*.json ledgers from the latest results/
+# run (after an intentional perf change); review the diff like code.
+bless: build
+	cd rust && cargo run --release -q -- bench-diff --root .. --results ../results --update

@@ -85,7 +85,7 @@ fn main() -> Result<()> {
         let mut pool_opts = PoolOpts::new(coc::DEFAULT_ARTIFACTS, workers, (t, t));
         pool_opts.batch = BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(500) };
         let pool = WorkerPool::start(Arc::new(state.clone()), pool_opts);
-        let up = pool.wait_ready(Duration::from_secs(300))?;
+        let up = pool.wait_ready(Duration::from_secs(300))?.ready;
         let rep = loadgen::run(
             &pool,
             &test_ds,

@@ -36,7 +36,7 @@ use std::collections::BTreeMap;
 use std::fmt;
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Context, Result};
 
@@ -223,6 +223,18 @@ impl Planner {
     pub fn chain_node_ids(&self, chain: usize) -> Vec<NodeId> {
         self.chains[chain].path.iter().map(|&i| self.nodes[i].id).collect()
     }
+
+    /// All nodes strictly below `root` in the trie — the subtree that is
+    /// skipped when `root` is quarantined.
+    fn descendants(&self, root: usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        let mut stack = self.nodes[root].children.clone();
+        while let Some(i) = stack.pop() {
+            out.push(i);
+            stack.extend_from_slice(&self.nodes[i].children);
+        }
+        out
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -370,11 +382,24 @@ pub struct ExecOpts {
     /// after the run (`--lower`): logs packed-vs-dense bytes and, with a
     /// cache dir, publishes the artifact as `<node_id>.cmp`.
     pub lower: bool,
+    /// Extra attempts a failing node gets (doubling backoff) before it is
+    /// quarantined and its subtree skipped.
+    pub retries: u32,
+    /// Base sleep between node retry attempts.
+    pub retry_backoff: Duration,
 }
 
 impl Default for ExecOpts {
     fn default() -> Self {
-        ExecOpts { jobs: 1, cache_dir: None, extras: true, verbose: false, lower: false }
+        ExecOpts {
+            jobs: 1,
+            cache_dir: None,
+            extras: true,
+            verbose: false,
+            lower: false,
+            retries: 2,
+            retry_backoff: Duration::from_millis(10),
+        }
     }
 }
 
@@ -394,6 +419,22 @@ pub struct PlanStats {
     /// just wall time.
     pub bytes_uploaded: u64,
     pub bytes_downloaded: u64,
+    /// Nodes that exhausted their retries and were quarantined.
+    pub quarantined: usize,
+    /// Nodes never attempted because a quarantined ancestor cut them off.
+    pub skipped: usize,
+}
+
+/// One quarantined node in a partial run: the content address (which is
+/// also the resume key — a rerun over the same cache re-attempts exactly
+/// this node), the stage, the error that exhausted its retries, and the
+/// submitted chains it cut off.
+#[derive(Debug, Clone)]
+pub struct NodeFailure {
+    pub node: String,
+    pub stage: String,
+    pub error: String,
+    pub chains: Vec<String>,
 }
 
 /// One submitted chain after execution: the per-stage reports (same shape
@@ -409,12 +450,19 @@ pub struct ChainOutcome {
 
 /// Everything an experiment driver needs back from one plan execution.
 pub struct PlanRun {
+    /// Completed chains only — a chain cut off by a quarantined node is
+    /// reported in `failures` instead.
     pub outcomes: Vec<ChainOutcome>,
-    /// `SweepPoint`s in submission order: final measurement per chain plus
-    /// runtime-threshold extras for trained-exit final states — exactly
-    /// what the pre-planner `run_chain_points` emitted per chain.
+    /// `SweepPoint`s in submission order (completed chains): final
+    /// measurement per chain plus runtime-threshold extras for
+    /// trained-exit final states — exactly what the pre-planner
+    /// `run_chain_points` emitted per chain.
     pub points: Vec<SweepPoint>,
     pub stats: PlanStats,
+    /// Quarantined nodes, if any: empty means every chain completed.
+    /// Non-empty runs are resumable — completed nodes are cached, so a
+    /// rerun over the same cache dir re-attempts only the failures.
+    pub failures: Vec<NodeFailure>,
 }
 
 /// `state` is `Arc`ed so worker threads can take a cheap handle under the
@@ -434,6 +482,12 @@ struct Sched {
     /// Children not yet executed, per node; at zero a non-leaf state drops.
     pending: Vec<usize>,
     done: usize,
+    /// Per-node quarantine record: the error that exhausted its retries.
+    failed: Vec<Option<String>>,
+    /// Nodes never attempted because a quarantined ancestor cut them off.
+    skipped: Vec<bool>,
+    /// Fatal only (worker panic, runner setup failure) — node failures
+    /// quarantine instead so sibling branches finish.
     error: Option<String>,
     /// (bytes_uploaded, bytes_downloaded) credited by each retiring
     /// worker from its per-thread engine.
@@ -521,33 +575,70 @@ impl Planner {
         }
         let pending: Vec<usize> = self.nodes.iter().map(|n| n.children.len()).collect();
 
-        let (results, worker_transfer) = if opts.jobs > 1 && self.nodes.len() > 1 {
+        let (results, failed, worker_transfer) = if opts.jobs > 1 && self.nodes.len() > 1 {
             self.execute_parallel(base, opts, cache_dir, &leaf, pending, &factory)?
         } else {
-            (self.execute_serial(base, main, cache_dir, &leaf, pending, opts.verbose)?, (0, 0))
+            let (r, f) = self.execute_serial(base, main, cache_dir, &leaf, pending, opts)?;
+            (r, f, (0, 0))
         };
 
-        let cache_hits = results.iter().filter(|r| r.hit).count();
+        let cache_hits = results.iter().filter(|r| r.as_ref().is_some_and(|r| r.hit)).count();
+        let quarantined = failed.iter().filter(|f| f.is_some()).count();
+        let unavailable = results.iter().filter(|r| r.is_none()).count();
         let mut stats = PlanStats {
             chains: self.chains.len(),
             total_stages: self.total_stages(),
             unique_nodes: self.nodes.len(),
             cache_hits,
-            executed: self.nodes.len() - cache_hits,
+            executed: self.nodes.len() - cache_hits - unavailable,
             wall_ms: t0.elapsed().as_secs_f64() * 1e3,
             bytes_uploaded: worker_transfer.0,
             bytes_downloaded: worker_transfer.1,
+            quarantined,
+            skipped: unavailable - quarantined,
         };
+        // Resumable failure report: every quarantined node with the
+        // chains it cut off.  The node id doubles as the resume key —
+        // rerunning over the same cache re-attempts exactly these nodes.
+        let failures: Vec<NodeFailure> = failed
+            .iter()
+            .enumerate()
+            .filter_map(|(i, e)| {
+                e.as_ref().map(|err| NodeFailure {
+                    node: self.nodes[i].id.to_string(),
+                    stage: self.nodes[i].stage.name(),
+                    error: err.clone(),
+                    chains: self
+                        .chains
+                        .iter()
+                        .filter(|c| c.path.contains(&i))
+                        .map(|c| c.label.clone())
+                        .collect(),
+                })
+            })
+            .collect();
         crate::obs::log!(
             crate::obs::Level::Info,
-            "[plan] {} chains / {} stage applications -> {} unique nodes ({} cache hits, {} executed) in {:.1}s",
+            "[plan] {} chains / {} stage applications -> {} unique nodes ({} cache hits, {} executed, {} quarantined, {} skipped) in {:.1}s",
             stats.chains,
             stats.total_stages,
             stats.unique_nodes,
             stats.cache_hits,
             stats.executed,
+            stats.quarantined,
+            stats.skipped,
             stats.wall_ms / 1e3
         );
+        for f in &failures {
+            crate::obs::log!(
+                crate::obs::Level::Warn,
+                "[plan] quarantined node {} ({}) cut chains [{}]: {}",
+                f.node,
+                f.stage,
+                f.chains.join(","),
+                f.error
+            );
+        }
 
         // Synthesize per-chain outcomes and sweep points.  Leaf extras
         // (the runtime threshold sweep) are content-addressed too:
@@ -555,19 +646,30 @@ impl Planner {
         // once per distinct leaf otherwise.
         let mut extras_memo: BTreeMap<NodeId, Vec<(String, Measurement)>> = BTreeMap::new();
         let mut outcomes = Vec::with_capacity(self.chains.len());
+        let mut outcome_leaves: Vec<Option<NodeId>> = Vec::with_capacity(self.chains.len());
         let mut points = Vec::new();
         for ch in &self.chains {
+            // A chain through a quarantined (or skipped-descendant) node
+            // has no complete result — it is reported via `failures`.
+            if ch.path.iter().any(|&i| results[i].is_none()) {
+                continue;
+            }
             let reports: Vec<StageReport> = ch
                 .path
                 .iter()
                 .map(|&i| StageReport {
                     stage: self.nodes[i].stage.name(),
                     technique: self.nodes[i].stage.technique(),
-                    measurement: results[i].meas.clone(),
+                    measurement: results[i].as_ref().expect("complete chain").meas.clone(),
                 })
                 .collect();
             let final_state: Arc<ModelState> = match ch.path.last() {
-                Some(&i) => results[i].state.clone().expect("leaf state retained"),
+                Some(&i) => results[i]
+                    .as_ref()
+                    .expect("complete chain")
+                    .state
+                    .clone()
+                    .expect("leaf state retained"),
                 None => Arc::new(base.clone()),
             };
             let last = match reports.last() {
@@ -602,6 +704,7 @@ impl Planner {
                 reports,
                 final_state,
             });
+            outcome_leaves.push(ch.path.last().map(|&i| self.nodes[i].id));
         }
         if opts.lower {
             // Lower-at-leaf hook (`--lower`): pack every distinct leaf
@@ -610,21 +713,20 @@ impl Planner {
             // cache dir publish the packed artifact as `<node_id>.cmp`.
             // A leaf the packed kernels cannot represent is a real error.
             let mut lowered: std::collections::BTreeSet<NodeId> = std::collections::BTreeSet::new();
-            for (ch, out) in self.chains.iter().zip(&outcomes) {
-                let Some(&i) = ch.path.last() else { continue };
-                let id = self.nodes[i].id;
+            for (out, leaf_id) in outcomes.iter().zip(&outcome_leaves) {
+                let Some(id) = *leaf_id else { continue };
                 if !lowered.insert(id) {
                     continue;
                 }
                 let cm = crate::models::compressed::CompressedModel::lower(&out.final_state)
-                    .with_context(|| format!("lowering leaf {id} ({})", ch.label))?;
+                    .with_context(|| format!("lowering leaf {id} ({})", out.label))?;
                 let packed = cm.packed_bytes();
                 let dense =
                     crate::models::compressed::CompressedModel::dense_bytes(&out.final_state.arch);
                 crate::obs::log!(
                     crate::obs::Level::Info,
                     "[plan] leaf {id} ({}) lowered: {dense} -> {packed} bytes ({:.2}x)",
-                    ch.label,
+                    out.label,
                     dense as f64 / packed.max(1) as f64
                 );
                 if let Some(dir) = cache_dir {
@@ -639,7 +741,7 @@ impl Planner {
             stats.bytes_uploaded += a.bytes_uploaded.saturating_sub(b.bytes_uploaded);
             stats.bytes_downloaded += a.bytes_downloaded.saturating_sub(b.bytes_downloaded);
         }
-        Ok(PlanRun { outcomes, points, stats })
+        Ok(PlanRun { outcomes, points, stats, failures })
     }
 
     fn execute_serial<R: NodeRunner>(
@@ -649,12 +751,18 @@ impl Planner {
         cache_dir: Option<&Path>,
         leaf: &[bool],
         mut pending: Vec<usize>,
-        verbose: bool,
-    ) -> Result<Vec<NodeResult>> {
+        opts: &ExecOpts,
+    ) -> Result<(Vec<Option<NodeResult>>, Vec<Option<String>>)> {
         // Submission order is topological: parents are interned before
         // their children.
-        let mut results: Vec<Option<NodeResult>> = (0..self.nodes.len()).map(|_| None).collect();
+        let n = self.nodes.len();
+        let mut results: Vec<Option<NodeResult>> = (0..n).map(|_| None).collect();
+        let mut failed: Vec<Option<String>> = vec![None; n];
+        let mut skip = vec![false; n];
         for (i, node) in self.nodes.iter().enumerate() {
+            if skip[i] {
+                continue;
+            }
             let parent_state = match node.parent {
                 Some(p) => results[p]
                     .as_ref()
@@ -662,11 +770,21 @@ impl Planner {
                     .expect("parent state retained"),
                 None => base,
             };
-            let res = run_node(runner, node, parent_state, cache_dir, verbose)?;
-            results[i] = Some(res);
+            match run_node(runner, node, parent_state, cache_dir, opts) {
+                Ok(res) => results[i] = Some(res),
+                Err(e) => {
+                    // Quarantine: this node's whole subtree is cut off,
+                    // sibling branches keep executing.
+                    crate::obs::metrics::counter("plan.node.quarantined").incr();
+                    failed[i] = Some(format!("{e:#}"));
+                    for d in self.descendants(i) {
+                        skip[d] = true;
+                    }
+                }
+            }
             release_parent(node.parent, &mut results, &mut pending, leaf);
         }
-        Ok(results.into_iter().map(|r| r.expect("all nodes executed")).collect())
+        Ok((results, failed))
     }
 
     fn execute_parallel<R2, F>(
@@ -677,7 +795,7 @@ impl Planner {
         leaf: &[bool],
         pending: Vec<usize>,
         factory: &F,
-    ) -> Result<(Vec<NodeResult>, (u64, u64))>
+    ) -> Result<(Vec<Option<NodeResult>>, Vec<Option<String>>, (u64, u64))>
     where
         R2: NodeRunner,
         F: Fn() -> Result<R2> + Sync,
@@ -688,6 +806,8 @@ impl Planner {
             results: (0..n).map(|_| None).collect(),
             pending,
             done: 0,
+            failed: vec![None; n],
+            skipped: vec![false; n],
             error: None,
             transfer: (0, 0),
         };
@@ -699,7 +819,6 @@ impl Planner {
         // how large --jobs is.
         let width = self.nodes.iter().filter(|nd| nd.children.is_empty()).count().max(1);
         let jobs = opts.jobs.min(n).min(width);
-        let verbose = opts.verbose;
 
         std::thread::scope(|s| {
             for _ in 0..jobs {
@@ -766,7 +885,7 @@ impl Planner {
                             &self.nodes[idx],
                             parent_state,
                             cache_dir,
-                            verbose,
+                            opts,
                         ) {
                             Ok(res) => {
                                 let mut g = sched.lock().unwrap();
@@ -778,11 +897,25 @@ impl Planner {
                                 cv.notify_all();
                             }
                             Err(e) => {
-                                sched.lock().unwrap().error = Some(format!("{e:#}"));
+                                // Quarantine the node and account its
+                                // whole subtree as done-without-result;
+                                // descendants were never enqueued (only a
+                                // successful parent pushes children), so
+                                // sibling branches keep running and the
+                                // done==n termination still holds.
+                                crate::obs::metrics::counter("plan.node.quarantined").incr();
+                                let mut g = sched.lock().unwrap();
+                                g.failed[idx] = Some(format!("{e:#}"));
+                                g.done += 1;
+                                for d in self.descendants(idx) {
+                                    if !g.skipped[d] {
+                                        g.skipped[d] = true;
+                                        g.done += 1;
+                                    }
+                                }
+                                let Sched { results, pending, .. } = &mut *g;
+                                release_parent(self.nodes[idx].parent, results, pending, leaf);
                                 cv.notify_all();
-                                credit(&runner);
-                                guard.armed = false;
-                                return;
                             }
                         }
                     }
@@ -790,35 +923,37 @@ impl Planner {
             }
         });
 
-        let g = sched.into_inner().unwrap();
+        let g = sched.into_inner().unwrap_or_else(|e| e.into_inner());
         if let Some(e) = g.error {
             return Err(anyhow!("plan execution failed: {e}"));
         }
         if g.done != n {
             return Err(anyhow!("plan execution stalled at {}/{n} nodes", g.done));
         }
-        let transfer = g.transfer;
-        Ok((
-            g.results.into_iter().map(|r| r.expect("scheduled node completed")).collect(),
-            transfer,
-        ))
+        Ok((g.results, g.failed, g.transfer))
     }
 }
 
 /// Run one trie node: replay from the content-addressed cache when both
 /// the tagged state snapshot and the measurement sidecar are valid, else
 /// apply the stage to a clone of the parent state and snapshot the result.
+///
+/// Failure domains: a corrupt snapshot (checksum mismatch, truncation) is
+/// rotated aside to `.corrupt` and treated as a miss; a failing stage is
+/// retried `opts.retries` times with doubling backoff before the error
+/// propagates (and the caller quarantines the node).
 fn run_node<R: NodeRunner>(
     runner: &R,
     node: &Node,
     parent: &ModelState,
     cache_dir: Option<&Path>,
-    verbose: bool,
+    opts: &ExecOpts,
 ) -> Result<NodeResult> {
     // One span per node lifecycle: covers the cache probe and, on a miss,
     // the apply + measure + snapshot.  Hits/misses also land in the
     // metrics registry so plan reuse is visible without a trace file.
     let _span = crate::obs::trace::span_with(|| format!("plan.node.{}", node.stage.name()));
+    let verbose = opts.verbose;
     let tag = node.id.to_string();
     let paths = cache_dir.map(|d| (d.join(format!("{tag}.state")), d.join(format!("{tag}.meas.json"))));
     if let Some((sp, mp)) = &paths {
@@ -841,13 +976,28 @@ fn run_node<R: NodeRunner>(
                     return Ok(NodeResult { state: Some(Arc::new(state)), meas, hit: true });
                 }
                 Err(e) => {
-                    crate::obs::metrics::counter("plan.cache.stale").incr();
-                    if verbose {
+                    let msg = format!("{e:#}");
+                    if msg.contains("corrupt") || msg.contains("checksum") {
+                        // Keep the bad bytes for forensics but get them
+                        // out of the probe path: rotate to `.corrupt` so
+                        // the recompute below can republish cleanly.
+                        crate::obs::metrics::counter("plan.cache.corrupt").incr();
+                        let rotated = std::fs::rename(sp, sp.with_extension("state.corrupt"));
                         crate::obs::log!(
                             crate::obs::Level::Warn,
-                            "[plan] stale cache entry {}: {e:#}",
-                            node.id
+                            "[plan] corrupt cache entry {}{}: {msg}",
+                            node.id,
+                            if rotated.is_ok() { " (rotated to .corrupt)" } else { "" }
                         );
+                    } else {
+                        crate::obs::metrics::counter("plan.cache.stale").incr();
+                        if verbose {
+                            crate::obs::log!(
+                                crate::obs::Level::Warn,
+                                "[plan] stale cache entry {}: {msg}",
+                                node.id
+                            );
+                        }
                     }
                 }
             }
@@ -863,14 +1013,26 @@ fn run_node<R: NodeRunner>(
             node.stage.name()
         );
     }
-    let mut state = parent.clone();
-    runner
-        .apply(node.stage.as_ref(), &mut state)
-        .with_context(|| format!("plan node {} ({})", node.id, node.stage.name()))?;
-    state.history.push(node.stage.name());
-    let meas = runner
-        .measure(&state)
-        .with_context(|| format!("measuring plan node {}", node.id))?;
+    let mut attempt: u32 = 0;
+    let (state, meas) = loop {
+        match exec_node_once(runner, node, parent) {
+            Ok(ok) => break ok,
+            Err(e) if attempt < opts.retries => {
+                attempt += 1;
+                crate::obs::metrics::counter("plan.node.retries").incr();
+                let backoff = opts.retry_backoff.saturating_mul(1u32 << (attempt - 1).min(6));
+                crate::obs::log!(
+                    crate::obs::Level::Warn,
+                    "[plan] node {} attempt {attempt}/{} failed: {e:#} (retrying in {:?})",
+                    node.id,
+                    opts.retries,
+                    backoff
+                );
+                std::thread::sleep(backoff);
+            }
+            Err(e) => return Err(e),
+        }
+    };
 
     if let Some((sp, mp)) = &paths {
         // Write-then-rename so an interrupted run can never leave a
@@ -884,8 +1046,47 @@ fn run_node<R: NodeRunner>(
             .with_context(|| format!("publishing snapshot {}", sp.display()))?;
         std::fs::write(mp, meas.to_json().to_string())
             .with_context(|| format!("writing {}", mp.display()))?;
+        // Injected corruption (chaos tests): flip the first payload byte
+        // of the just-published snapshot so the next probe exercises the
+        // checksum-detect + rotate + recompute path.
+        if crate::faults::fire(crate::faults::CACHE_CORRUPT) {
+            if let Ok(mut b) = std::fs::read(sp) {
+                let off = b.iter().position(|&x| x == b'\n').map(|p| p + 1).unwrap_or(0);
+                if off < b.len() {
+                    b[off] ^= 0xff;
+                    let _ = std::fs::write(sp, &b);
+                } else {
+                    let _ = std::fs::write(sp, b"");
+                }
+            }
+        }
     }
     Ok(NodeResult { state: Some(Arc::new(state)), meas, hit: false })
+}
+
+/// One attempt at a node: the [`faults::NODE_FAIL`](crate::faults) site,
+/// the stage apply, and the measurement.
+fn exec_node_once<R: NodeRunner>(
+    runner: &R,
+    node: &Node,
+    parent: &ModelState,
+) -> Result<(ModelState, Measurement)> {
+    if crate::faults::fire(crate::faults::NODE_FAIL) {
+        return Err(anyhow!(
+            "injected fault: node_fail at {} ({})",
+            node.id,
+            node.stage.name()
+        ));
+    }
+    let mut state = parent.clone();
+    runner
+        .apply(node.stage.as_ref(), &mut state)
+        .with_context(|| format!("plan node {} ({})", node.id, node.stage.name()))?;
+    state.history.push(node.stage.name());
+    let meas = runner
+        .measure(&state)
+        .with_context(|| format!("measuring plan node {}", node.id))?;
+    Ok((state, meas))
 }
 
 /// Threshold-sweep extras for one leaf state, replayed from

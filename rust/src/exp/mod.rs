@@ -236,6 +236,7 @@ impl ExpCtx {
             extras,
             verbose: self.verbose,
             lower: self.lower,
+            ..Default::default()
         };
         let artifacts = self.engine.artifacts_dir().to_path_buf();
         let backend = self.backend;
@@ -253,6 +254,21 @@ impl ExpCtx {
                 Err(e) => Err(e),
             }
         })?;
+        if !run.failures.is_empty() {
+            // Experiment drivers need every submitted chain: surface the
+            // quarantine report as the run error.  Everything that did
+            // complete is cached, so a rerun resumes from here.
+            let f = &run.failures[0];
+            return Err(anyhow::anyhow!(
+                "plan quarantined {} node(s); first: {} ({}) cutting chains [{}]: {} \
+                 — completed nodes are cached, rerun to resume",
+                run.failures.len(),
+                f.node,
+                f.stage,
+                f.chains.join(","),
+                f.error
+            ));
+        }
         let st = &run.stats;
         self.reporter.append_row(
             "plan_stats.csv",

@@ -1,0 +1,452 @@
+//! Deterministic fault injection — failure as a first-class, testable input.
+//!
+//! The determinism contract (PR 5) makes thread count a non-observable; this
+//! module does the same for *failure*.  A fault spec names sites and an
+//! activation rule per site:
+//!
+//! ```text
+//! COC_FAULTS="worker_panic@p=0.01,cache_corrupt@n=3,slow_batch@p=0.05:arg=20"
+//! coc serve-bench --faults "worker_panic@n=2" --fault-seed 7
+//! ```
+//!
+//! Forms: `site@p=F` (fire with probability F per evaluation), `site@n=N`
+//! (fire on the first N evaluations), `site@every=K` (fire on every K-th
+//! evaluation), bare `site` (fire always).  An optional `:arg=F` rides along
+//! as a payload (e.g. slow-batch milliseconds).
+//!
+//! **Determinism.**  Each evaluation of a site atomically takes the next
+//! per-site index; the fire/no-fire decision is a pure hash of
+//! `(fault_seed, site, index)` — no shared RNG stream, so the schedule (the
+//! set of `(site, index)` pairs that fire) is bit-identical across reruns of
+//! the same workload and seed even when sites are evaluated from many
+//! threads.  `fired_sorted()` / `schedule_digest()` expose the schedule for
+//! the chaos soak to compare across runs.
+//!
+//! Sites are plain `&str` names with an `area_event` taxonomy (see
+//! DESIGN.md): `worker_panic`, `worker_start_fail`, `slow_batch`,
+//! `node_fail`, `cache_corrupt`.  Production code asks `faults::fire(SITE)`
+//! at the site; when no spec is installed the check is one relaxed atomic
+//! load.  Every injected fault emits a `fault.<site>` trace span, a
+//! `fault.<site>` counter tick, and a Warn log line through the PR 6
+//! observability layer.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::obs;
+use crate::obs::Level;
+use crate::util::sync::lock;
+
+/// Serve: panic mid-batch inside a worker's inference call.
+pub const WORKER_PANIC: &str = "worker_panic";
+/// Serve: a worker's engine fails to construct at pool start.
+pub const WORKER_START_FAIL: &str = "worker_start_fail";
+/// Serve: a batch takes `arg` extra milliseconds (deadline pressure).
+pub const SLOW_BATCH: &str = "slow_batch";
+/// Plan: a node's apply step returns a (transient) error.
+pub const NODE_FAIL: &str = "node_fail";
+/// Plan: a just-published cache snapshot is corrupted on disk.
+pub const CACHE_CORRUPT: &str = "cache_corrupt";
+
+/// How an active site decides whether evaluation `idx` (0-based) fires.
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum Mode {
+    /// Fire with probability `p` per evaluation (hash-thresholded).
+    Prob(f64),
+    /// Fire on evaluations 0..n.
+    FirstN(u64),
+    /// Fire on every k-th evaluation (idx % k == k-1).
+    Every(u64),
+    /// Fire on every evaluation.
+    Always,
+}
+
+struct SiteState {
+    name: String,
+    name_hash: u64,
+    mode: Mode,
+    arg: Option<f64>,
+    evals: AtomicU64,
+    fires: AtomicU64,
+}
+
+struct Config {
+    seed: u64,
+    sites: Vec<SiteState>,
+}
+
+/// One injected fault: which site fired, at which per-site evaluation index.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct FireEvent {
+    pub site: String,
+    pub index: u64,
+}
+
+/// Per-site counters, for reports and tests.
+#[derive(Clone, Debug)]
+pub struct SiteStats {
+    pub site: String,
+    pub evals: u64,
+    pub fires: u64,
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+fn registry() -> &'static Mutex<Option<Arc<Config>>> {
+    static REG: Mutex<Option<Arc<Config>>> = Mutex::new(None);
+    &REG
+}
+
+fn fired_log() -> &'static Mutex<Vec<FireEvent>> {
+    static LOG: Mutex<Vec<FireEvent>> = Mutex::new(Vec::new());
+    &LOG
+}
+
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// splitmix64 finalizer — decision hash for (seed, site, index).
+fn mix(seed: u64, site_hash: u64, idx: u64) -> u64 {
+    let mut z = seed
+        .wrapping_mul(0x9e3779b97f4a7c15)
+        .wrapping_add(site_hash)
+        .wrapping_mul(0xbf58476d1ce4e5b9)
+        .wrapping_add(idx.wrapping_mul(0x94d049bb133111eb));
+    z ^= z >> 30;
+    z = z.wrapping_mul(0xbf58476d1ce4e5b9);
+    z ^= z >> 27;
+    z = z.wrapping_mul(0x94d049bb133111eb);
+    z ^ (z >> 31)
+}
+
+fn parse_site(part: &str) -> Result<SiteState> {
+    let (name, rules) = match part.split_once('@') {
+        Some((n, r)) => (n.trim(), Some(r.trim())),
+        None => (part.trim(), None),
+    };
+    if name.is_empty() {
+        bail!("fault spec: empty site name in `{part}`");
+    }
+    if !name
+        .chars()
+        .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '.')
+    {
+        bail!("fault spec: bad site name `{name}` (want [a-z0-9_.])");
+    }
+    let mut mode: Option<Mode> = None;
+    let mut arg: Option<f64> = None;
+    if let Some(rules) = rules {
+        for kv in rules.split(':') {
+            let (k, v) = kv
+                .split_once('=')
+                .ok_or_else(|| anyhow!("fault spec: `{kv}` is not key=value (site `{name}`)"))?;
+            match k.trim() {
+                "p" => {
+                    let p: f64 = v.parse().map_err(|_| anyhow!("fault spec: bad p `{v}`"))?;
+                    if !(0.0..=1.0).contains(&p) {
+                        bail!("fault spec: p={p} out of [0,1] (site `{name}`)");
+                    }
+                    mode = Some(Mode::Prob(p));
+                }
+                "n" => {
+                    let n: u64 = v.parse().map_err(|_| anyhow!("fault spec: bad n `{v}`"))?;
+                    mode = Some(Mode::FirstN(n));
+                }
+                "every" => {
+                    let k: u64 = v
+                        .parse()
+                        .map_err(|_| anyhow!("fault spec: bad every `{v}`"))?;
+                    if k == 0 {
+                        bail!("fault spec: every=0 (site `{name}`)");
+                    }
+                    mode = Some(Mode::Every(k));
+                }
+                "arg" => {
+                    arg = Some(v.parse().map_err(|_| anyhow!("fault spec: bad arg `{v}`"))?);
+                }
+                other => bail!("fault spec: unknown key `{other}` (site `{name}`)"),
+            }
+        }
+    }
+    Ok(SiteState {
+        name_hash: fnv1a64(name.as_bytes()),
+        name: name.to_string(),
+        mode: mode.unwrap_or(Mode::Always),
+        arg,
+        evals: AtomicU64::new(0),
+        fires: AtomicU64::new(0),
+    })
+}
+
+/// Parse and install a fault spec.  Replaces any previous spec and resets
+/// all per-site counters and the fired log.
+pub fn configure(spec: &str, seed: u64) -> Result<()> {
+    let parsed = (|| -> Result<Vec<SiteState>> {
+        let mut sites = Vec::new();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let site = parse_site(part)?;
+            if sites.iter().any(|s: &SiteState| s.name == site.name) {
+                bail!("fault spec: duplicate site `{}`", site.name);
+            }
+            sites.push(site);
+        }
+        Ok(sites)
+    })();
+    let sites = match parsed {
+        Ok(s) => s,
+        Err(e) => {
+            // A bad spec must leave the layer disarmed, not half-armed.
+            clear();
+            return Err(e);
+        }
+    };
+    lock(fired_log()).clear();
+    let enabled = !sites.is_empty();
+    *lock(registry()) = if enabled {
+        Some(Arc::new(Config { seed, sites }))
+    } else {
+        None
+    };
+    ENABLED.store(enabled, Ordering::Release);
+    if enabled {
+        obs::log!(Level::Info, "faults: armed `{spec}` (seed {seed})");
+    }
+    Ok(())
+}
+
+/// Install from `COC_FAULTS` / `COC_FAULT_SEED` if set (no-op otherwise).
+pub fn configure_from_env() -> Result<()> {
+    if let Ok(spec) = std::env::var("COC_FAULTS") {
+        let seed = std::env::var("COC_FAULT_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0);
+        configure(&spec, seed)?;
+    }
+    Ok(())
+}
+
+/// Disarm all fault sites and clear the fired log.
+pub fn clear() {
+    ENABLED.store(false, Ordering::Release);
+    *lock(registry()) = None;
+    lock(fired_log()).clear();
+}
+
+/// True if any fault site is armed.
+pub fn active() -> bool {
+    ENABLED.load(Ordering::Acquire)
+}
+
+fn config() -> Option<Arc<Config>> {
+    if !active() {
+        return None;
+    }
+    lock(registry()).clone()
+}
+
+/// Evaluate a fault site: takes the next per-site index and returns whether
+/// this evaluation fires.  One atomic load when no faults are armed.
+pub fn fire(site: &str) -> bool {
+    let Some(cfg) = config() else { return false };
+    let Some(s) = cfg.sites.iter().find(|s| s.name == site) else {
+        return false;
+    };
+    let idx = s.evals.fetch_add(1, Ordering::Relaxed);
+    let hit = match s.mode {
+        Mode::Always => true,
+        Mode::FirstN(n) => idx < n,
+        Mode::Every(k) => idx % k == k - 1,
+        Mode::Prob(p) => {
+            // 53 uniform bits -> [0,1); pure in (seed, site, idx).
+            let u = (mix(cfg.seed, s.name_hash, idx) >> 11) as f64 / (1u64 << 53) as f64;
+            u < p
+        }
+    };
+    if hit {
+        s.fires.fetch_add(1, Ordering::Relaxed);
+        let _sp = obs::trace::span_with(|| format!("fault.{site}"));
+        obs::metrics::counter(&format!("fault.{site}")).incr();
+        obs::log!(Level::Warn, "fault injected: {site} (eval #{idx})");
+        let mut log = lock(fired_log());
+        if log.len() < 65_536 {
+            log.push(FireEvent {
+                site: site.to_string(),
+                index: idx,
+            });
+        }
+    }
+    hit
+}
+
+/// The payload argument configured for a site (`:arg=F`), if armed.
+pub fn arg(site: &str) -> Option<f64> {
+    let cfg = config()?;
+    cfg.sites.iter().find(|s| s.name == site).and_then(|s| s.arg)
+}
+
+/// All injected faults so far, sorted by (site, index) so the schedule
+/// compares equal across runs regardless of thread interleaving.
+pub fn fired_sorted() -> Vec<FireEvent> {
+    let mut v = lock(fired_log()).clone();
+    v.sort();
+    v
+}
+
+/// Order-insensitive digest of the fault schedule (FNV over sorted events).
+pub fn schedule_digest() -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for e in fired_sorted() {
+        h = fnv1a64(format!("{}#{}|{h:016x}", e.site, e.index).as_bytes());
+    }
+    h
+}
+
+/// Per-site evaluation/fire counters.
+pub fn stats() -> Vec<SiteStats> {
+    match config() {
+        None => Vec::new(),
+        Some(cfg) => cfg
+            .sites
+            .iter()
+            .map(|s| SiteStats {
+                site: s.name.clone(),
+                evals: s.evals.load(Ordering::Relaxed),
+                fires: s.fires.load(Ordering::Relaxed),
+            })
+            .collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The registry is process-global; tests that arm it must not run
+    // concurrently with each other.  A local mutex serializes them.
+    fn serial() -> std::sync::MutexGuard<'static, ()> {
+        static GATE: Mutex<()> = Mutex::new(());
+        GATE.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn inactive_by_default_and_after_clear() {
+        let _g = serial();
+        clear();
+        assert!(!active());
+        assert!(!fire("worker_panic"));
+        configure("worker_panic@n=1", 0).unwrap();
+        assert!(active());
+        clear();
+        assert!(!active());
+        assert!(!fire("worker_panic"));
+    }
+
+    #[test]
+    fn first_n_fires_exactly_n() {
+        let _g = serial();
+        configure("cache_corrupt@n=3", 9).unwrap();
+        let hits: Vec<bool> = (0..6).map(|_| fire("cache_corrupt")).collect();
+        assert_eq!(hits, vec![true, true, true, false, false, false]);
+        let st = &stats()[0];
+        assert_eq!((st.evals, st.fires), (6, 3));
+        clear();
+    }
+
+    #[test]
+    fn every_k_fires_periodically() {
+        let _g = serial();
+        configure("node_fail@every=3", 0).unwrap();
+        let hits: Vec<bool> = (0..9).map(|_| fire("node_fail")).collect();
+        assert_eq!(
+            hits,
+            vec![false, false, true, false, false, true, false, false, true]
+        );
+        clear();
+    }
+
+    #[test]
+    fn prob_schedule_is_seed_deterministic() {
+        let _g = serial();
+        configure("worker_panic@p=0.3", 42).unwrap();
+        for _ in 0..200 {
+            fire("worker_panic");
+        }
+        let a = fired_sorted();
+        let da = schedule_digest();
+        assert!(!a.is_empty() && a.len() < 200, "p=0.3 over 200: {}", a.len());
+
+        configure("worker_panic@p=0.3", 42).unwrap();
+        for _ in 0..200 {
+            fire("worker_panic");
+        }
+        assert_eq!(a, fired_sorted());
+        assert_eq!(da, schedule_digest());
+
+        configure("worker_panic@p=0.3", 43).unwrap();
+        for _ in 0..200 {
+            fire("worker_panic");
+        }
+        assert_ne!(a, fired_sorted(), "different seed, same schedule");
+        clear();
+    }
+
+    #[test]
+    fn arg_payload_and_bare_site() {
+        let _g = serial();
+        configure("slow_batch@p=1.0:arg=25,worker_panic", 0).unwrap();
+        assert_eq!(arg("slow_batch"), Some(25.0));
+        assert_eq!(arg("worker_panic"), None);
+        assert!(fire("worker_panic"), "bare site means always");
+        assert!(fire("slow_batch"));
+        clear();
+    }
+
+    #[test]
+    fn unarmed_site_never_fires() {
+        let _g = serial();
+        configure("worker_panic@n=100", 0).unwrap();
+        assert!(!fire("cache_corrupt"));
+        clear();
+    }
+
+    #[test]
+    fn spec_errors_are_rejected() {
+        let _g = serial();
+        for bad in [
+            "worker_panic@p=1.5",
+            "x@q=3",
+            "x@p",
+            "x@every=0",
+            "a@n=1,a@n=2",
+            "bad name@n=1",
+            "@n=1",
+        ] {
+            assert!(configure(bad, 0).is_err(), "accepted `{bad}`");
+        }
+        // A failed configure must leave faults disarmed.
+        assert!(!active());
+        clear();
+    }
+
+    #[test]
+    fn empty_spec_disarms() {
+        let _g = serial();
+        configure("worker_panic@n=1", 0).unwrap();
+        configure("", 0).unwrap();
+        assert!(!active());
+        clear();
+    }
+}

@@ -25,6 +25,7 @@ pub mod chain;
 pub mod data;
 pub mod exits;
 pub mod exp;
+pub mod faults;
 pub mod metrics;
 pub mod models;
 pub mod obs;

@@ -100,6 +100,14 @@ fn real_main() -> Result<()> {
     if let Some(v) = args.get("simd") {
         coc::runtime::refback::simd::set_policy(v)?;
     }
+    // --faults SPEC / --fault-seed N (any subcommand): arm the
+    // deterministic fault-injection layer, overriding COC_FAULTS /
+    // COC_FAULT_SEED.  `coc serve-bench --faults "worker_panic@p=0.01"`
+    // is the chaos-soak entrypoint; see `coc::faults` for the spec forms.
+    match args.get("faults") {
+        Some(spec) => coc::faults::configure(spec, args.get_u64("fault-seed", 0)?)?,
+        None => coc::faults::configure_from_env()?,
+    }
     let result = dispatch(&args);
     if let Some(path) = &trace_out {
         coc::obs::trace::disable();
@@ -454,6 +462,12 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     pool_opts.queue_capacity = queue_capacity;
     pool_opts.batch =
         BatchPolicy { max_batch, max_wait: Duration::from_micros(batch_wait_us) };
+    // --deadline-ms: per-request latency budget; expired work is shed
+    // with a terminal Timeout outcome instead of executed (0 = off).
+    let deadline_ms = args.get_f64("deadline-ms", 0.0)?;
+    if deadline_ms > 0.0 {
+        pool_opts.deadline = Some(Duration::from_secs_f64(deadline_ms / 1000.0));
+    }
     let load_opts = LoadOpts {
         mode,
         requests,
@@ -462,7 +476,7 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         ..Default::default()
     };
     let state = Arc::new(state);
-    let (report, outcome) = run_pool_bench(&state, &test_ds, &pool_opts, &load_opts, workers)?;
+    let (report, outcome) = run_pool_bench(&state, &test_ds, &pool_opts, &load_opts)?;
 
     println!("{}", report.summary_line());
     if let Some(base) = &baseline {
@@ -539,8 +553,7 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         let bytes_packed = cm.packed_bytes() as f64;
         let mut cmp_opts = pool_opts.clone();
         cmp_opts.compressed = true;
-        let (creport, _coutcome) =
-            run_pool_bench(&state, &test_ds, &cmp_opts, &load_opts, workers)?;
+        let (creport, _coutcome) = run_pool_bench(&state, &test_ds, &cmp_opts, &load_opts)?;
         let speedup = creport.throughput_rps / report.throughput_rps.max(1e-9);
         println!("compressed: {}", creport.summary_line());
         println!(
@@ -582,17 +595,29 @@ fn run_pool_bench(
     test_ds: &coc::data::Dataset,
     pool_opts: &PoolOpts,
     load_opts: &LoadOpts,
-    workers: usize,
 ) -> Result<(loadgen::BenchReport, coc::serve::worker::PoolOutcome)> {
     let pool = WorkerPool::start(state.clone(), pool_opts.clone());
     let up = pool.wait_ready(Duration::from_secs(600))?;
-    if up < workers {
-        coc::obs::log!(coc::obs::Level::Warn, "warning: only {up}/{workers} workers came up");
+    if !up.all_up() {
+        coc::obs::log!(
+            coc::obs::Level::Warn,
+            "warning: partial pool start — {}",
+            up.describe()
+        );
     }
     let report = loadgen::run(&pool, test_ds, load_opts)?;
     let outcome = pool.shutdown();
     for e in &outcome.errors {
         coc::obs::log!(coc::obs::Level::Error, "worker error: {e}");
+    }
+    // The terminal-outcome invariant is a hard contract: an accepted
+    // request that never reached done/timeout/failed means the pool
+    // dropped it, and no bench number from such a run can be trusted.
+    if report.lost > 0 {
+        anyhow::bail!(
+            "{} accepted request(s) reached no terminal outcome — serve accounting broken",
+            report.lost
+        );
     }
     Ok((report, outcome))
 }

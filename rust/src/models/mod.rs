@@ -827,6 +827,19 @@ impl ModelState {
 /// load; files newer than this are rejected instead of misparsed.
 pub const STATE_FORMAT_VERSION: u32 = 2;
 
+/// FNV-1a 64 over the raw f32 payload — the integrity checksum written
+/// into the state header.  Stored as a hex string because a u64 does not
+/// survive a JSON f64 round-trip.  Headers without the field (files
+/// written before the checksum existed) load unverified.
+fn payload_fnv64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
 impl ModelState {
     pub fn save<P: AsRef<Path>>(&self, path: P) -> Result<()> {
         self.save_tagged(path, None)
@@ -867,14 +880,17 @@ impl ModelState {
         if let Some(tag) = node {
             fields.push(("node", s(tag)));
         }
+        let mut payload = Vec::new();
+        for t in self.params.iter().chain(&self.momenta).chain(&self.masks) {
+            for v in &t.data {
+                payload.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        fields.push(("checksum", s(&format!("{:016x}", payload_fnv64(&payload)))));
         let header = obj(fields);
         let mut bytes = header.to_string().into_bytes();
         bytes.push(b'\n');
-        for t in self.params.iter().chain(&self.momenta).chain(&self.masks) {
-            for v in &t.data {
-                bytes.extend_from_slice(&v.to_le_bytes());
-            }
-        }
+        bytes.extend_from_slice(&payload);
         if let Some(dir) = path.as_ref().parent() {
             std::fs::create_dir_all(dir).ok();
         }
@@ -909,6 +925,18 @@ impl ModelState {
             return Err(anyhow!(
                 "state file is format v{version}, newer than supported v{STATE_FORMAT_VERSION}"
             ));
+        }
+        // Payload integrity: headers written with a checksum must match
+        // the bytes that follow — a truncated or bit-flipped snapshot is
+        // an error here, not a garbage model later.  Checksum-less
+        // headers (older files) still load.
+        if let Some(want) = header.get("checksum").and_then(|v| v.as_str()) {
+            let got = format!("{:016x}", payload_fnv64(&bytes[nl + 1..]));
+            if got != want {
+                return Err(anyhow!(
+                    "corrupt state file: payload checksum {got} != header {want}"
+                ));
+            }
         }
         if let Some(want) = node {
             let got = header.get("node").and_then(|v| v.as_str()).unwrap_or("");
@@ -1378,6 +1406,47 @@ mod tests {
         std::fs::write(&path, &bytes).unwrap();
         let err = ModelState::load(&path, arch).unwrap_err();
         assert!(err.to_string().contains("newer"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn corrupt_snapshots_fail_cleanly() {
+        let arch = toy_arch();
+        let st = ModelState::init_host(arch.clone(), 5);
+        let path =
+            std::env::temp_dir().join(format!("coc_state_corrupt_{}.bin", std::process::id()));
+        st.save_tagged(&path, Some("feedc0de")).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        let nl = full.iter().position(|&b| b == b'\n').unwrap();
+
+        // Truncated payload: the checksum reports corruption before shape
+        // parsing can walk off the end.
+        std::fs::write(&path, &full[..full.len() - 7]).unwrap();
+        let err = ModelState::load_tagged(&path, arch.clone(), Some("feedc0de")).unwrap_err();
+        assert!(err.to_string().contains("checksum"), "{err}");
+
+        // A single flipped bit deep in the payload — valid lengths, valid
+        // header, silently different weights without the checksum.
+        let mut flipped = full.clone();
+        let mid = nl + 1 + (full.len() - nl - 1) / 2;
+        flipped[mid] ^= 0x40;
+        std::fs::write(&path, &flipped).unwrap();
+        let err = ModelState::load_tagged(&path, arch.clone(), Some("feedc0de")).unwrap_err();
+        assert!(err.to_string().contains("checksum"), "{err}");
+
+        // Zero-length file: a clean error, never a panic.
+        std::fs::write(&path, b"").unwrap();
+        assert!(ModelState::load_tagged(&path, arch.clone(), Some("feedc0de")).is_err());
+
+        // A checksum-less header (written before the field existed) still
+        // loads — old caches stay valid.
+        let header = String::from_utf8(full[..nl].to_vec()).unwrap();
+        let pos = header.rfind(",\"checksum\"").unwrap();
+        let mut legacy = format!("{}}}", &header[..pos]).into_bytes();
+        legacy.extend_from_slice(&full[nl..]);
+        std::fs::write(&path, &legacy).unwrap();
+        let st2 = ModelState::load_tagged(&path, arch.clone(), Some("feedc0de")).unwrap();
+        assert_eq!(st.params, st2.params);
         std::fs::remove_file(&path).ok();
     }
 

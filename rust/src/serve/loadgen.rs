@@ -24,7 +24,7 @@ use anyhow::{anyhow, Result};
 
 use super::queue::{Pop, QueueStats};
 use super::slo::{self, Slo, SloReport};
-use super::worker::{ServeJob, ServeOutcome, WorkerPool};
+use super::worker::{OutcomeStatus, ServeJob, ServeOutcome, WorkerPool};
 use crate::data::Dataset;
 use crate::util::json::{num, obj, s, Json};
 use crate::util::rng::Rng;
@@ -116,7 +116,12 @@ pub struct BenchReport {
     pub accepted: usize,
     pub rejected: usize,
     pub completed: usize,
-    /// Accepted but never completed (a worker died mid-run).
+    /// Deadline-expired requests shed with a terminal `Timeout` outcome.
+    pub timed_out: usize,
+    /// Requests whose batch died (panic/error) — terminal `Failed`.
+    pub failed: usize,
+    /// Accepted but never reached *any* terminal outcome (should be 0:
+    /// the terminal-outcome accounting invariant).
     pub lost: usize,
     pub accuracy: f64,
     pub p_exit1: f64,
@@ -159,6 +164,8 @@ impl BenchReport {
             ("accepted", num(self.accepted as f64)),
             ("rejected", num(self.rejected as f64)),
             ("completed", num(self.completed as f64)),
+            ("timed_out", num(self.timed_out as f64)),
+            ("failed", num(self.failed as f64)),
             ("lost", num(self.lost as f64)),
             ("accuracy", num(self.accuracy)),
             ("p_exit1", num(self.p_exit1)),
@@ -173,7 +180,8 @@ impl BenchReport {
 
     pub fn summary_line(&self) -> String {
         format!(
-            "{} load, {} workers: {}/{} ok ({} shed, {} lost)  acc {:.2}%  exit1 {:.0}% exit2 {:.0}%  \
+            "{} load, {} workers: {}/{} ok ({} shed, {} timed out, {} failed, {} lost)  \
+             acc {:.2}%  exit1 {:.0}% exit2 {:.0}%  \
              p50 {:.0}µs p95 {:.0}µs p99 {:.0}µs  {:.0} rps  goodput {:.0} rps @ {:.0}ms SLO  \
              queue depth mean {:.1} max {}",
             self.mode,
@@ -181,6 +189,8 @@ impl BenchReport {
             self.completed,
             self.offered,
             self.rejected,
+            self.timed_out,
+            self.failed,
             self.lost,
             self.accuracy * 100.0,
             self.p_exit1 * 100.0,
@@ -200,6 +210,8 @@ impl BenchReport {
 struct Recorder {
     latency_us: Summary,
     completed: usize,
+    timed_out: usize,
+    failed: usize,
     correct: usize,
     labelled: usize,
     n1: usize,
@@ -211,21 +223,41 @@ impl Recorder {
         // Bounded summary: open-loop soaks record one latency per request
         // for the whole run — the exact representation grows without bound
         // at high rates, the histogram-backed one is O(1).
-        Recorder { latency_us: Summary::bounded(), completed: 0, correct: 0, labelled: 0, n1: 0, n2: 0 }
+        Recorder {
+            latency_us: Summary::bounded(),
+            completed: 0,
+            timed_out: 0,
+            failed: 0,
+            correct: 0,
+            labelled: 0,
+            n1: 0,
+            n2: 0,
+        }
     }
 
     fn record(&mut self, o: &ServeOutcome) {
-        self.completed += 1;
-        self.latency_us.push(o.latency_us);
-        if let Some(label) = o.label {
-            self.labelled += 1;
-            self.correct += (o.pred == label) as usize;
+        match o.status {
+            OutcomeStatus::Done => {
+                self.completed += 1;
+                self.latency_us.push(o.latency_us);
+                if let Some(label) = o.label {
+                    self.labelled += 1;
+                    self.correct += (o.pred == label) as usize;
+                }
+                match o.stage {
+                    1 => self.n1 += 1,
+                    2 => self.n2 += 1,
+                    _ => {}
+                }
+            }
+            OutcomeStatus::Timeout => self.timed_out += 1,
+            OutcomeStatus::Failed => self.failed += 1,
         }
-        match o.stage {
-            1 => self.n1 += 1,
-            2 => self.n2 += 1,
-            _ => {}
-        }
+    }
+
+    /// Requests that reached any terminal outcome.
+    fn terminal(&self) -> usize {
+        self.completed + self.timed_out + self.failed
     }
 }
 
@@ -340,14 +372,14 @@ pub fn run(pool: &WorkerPool, ds: &Dataset, opts: &LoadOpts) -> Result<BenchRepo
 
     // Drain stragglers (open loop; closed loop exits drained, and after a
     // timeout there is no point waiting the full window a second time).
-    while !gave_up && rec.completed < accepted {
+    while !gave_up && rec.terminal() < accepted {
         match pool.outcomes().pop_timeout(opts.drain_timeout) {
             Pop::Item(o) => rec.record(&o),
             Pop::TimedOut => {
                 crate::obs::log!(
                     crate::obs::Level::Warn,
                     "[loadgen] gave up on {} in-flight requests after {:?}",
-                    accepted - rec.completed,
+                    accepted - rec.terminal(),
                     opts.drain_timeout
                 );
                 break;
@@ -357,10 +389,11 @@ pub fn run(pool: &WorkerPool, ds: &Dataset, opts: &LoadOpts) -> Result<BenchRepo
     }
 
     let wall_secs = start.elapsed().as_secs_f64();
-    let lost = accepted.saturating_sub(rec.completed);
-    // Lost requests violate the SLO exactly like shed ones — both count
-    // against attainment (see slo::report).
-    let slo_report = slo::report(&rec.latency_us, rejected + lost, wall_secs, opts.slo);
+    let lost = accepted.saturating_sub(rec.terminal());
+    // Requests that never produced a served answer — shed, timed out,
+    // failed, or lost — all violate the SLO alike (see slo::report).
+    let unserved = rejected + lost + rec.timed_out + rec.failed;
+    let slo_report = slo::report(&rec.latency_us, unserved, wall_secs, opts.slo);
     Ok(BenchReport {
         mode: opts.mode.name().to_string(),
         workers: pool.live_workers(),
@@ -368,6 +401,8 @@ pub fn run(pool: &WorkerPool, ds: &Dataset, opts: &LoadOpts) -> Result<BenchRepo
         accepted,
         rejected,
         completed: rec.completed,
+        timed_out: rec.timed_out,
+        failed: rec.failed,
         lost,
         accuracy: if rec.labelled == 0 { 0.0 } else { rec.correct as f64 / rec.labelled as f64 },
         p_exit1: if rec.completed == 0 { 0.0 } else { rec.n1 as f64 / rec.completed as f64 },
@@ -419,6 +454,8 @@ mod tests {
             accepted: 100,
             rejected: 5,
             completed: 100,
+            timed_out: 0,
+            failed: 0,
             lost: 0,
             accuracy: 0.9,
             p_exit1: 0.5,

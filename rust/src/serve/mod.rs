@@ -44,6 +44,17 @@ use crate::runtime::{self, DeviceBuffer, Engine, Executable};
 use crate::tensor::{argmax_slice, Tensor};
 use crate::util::stats::Summary;
 
+/// Per-row terminal result of a deadline-aware batch: the row either
+/// completed the exit ladder, or its deadline passed at a stage boundary
+/// and it was shed instead of executed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RowOutcome {
+    /// (prediction, exit stage 1|2|3).
+    Done(usize, u8),
+    /// Deadline expired before completion; no prediction was computed.
+    Expired,
+}
+
 #[derive(Debug, Clone)]
 pub struct ServeReport {
     pub requests: usize,
@@ -478,6 +489,118 @@ impl<'e> StageRunner<'e> {
             off += c;
         }
         Ok(out)
+    }
+
+    /// Deadline-aware [`StageRunner::infer_many`]: a row whose deadline
+    /// has passed is shed — before stage 1 and again at each stage-ladder
+    /// boundary — instead of executed.  `deadlines[i] == None` means row
+    /// `i` never expires; when no row carries a deadline this is exactly
+    /// `infer_many` (so the deadline-free path stays bit-identical).
+    pub fn infer_many_deadline(
+        &self,
+        xs: &[&Tensor],
+        t1: f32,
+        t2: f32,
+        deadlines: &[Option<Instant>],
+    ) -> Result<Vec<RowOutcome>> {
+        debug_assert_eq!(xs.len(), deadlines.len());
+        if deadlines.iter().all(|d| d.is_none()) {
+            return Ok(self
+                .infer_many(xs, t1, t2)?
+                .into_iter()
+                .map(|(p, s)| RowOutcome::Done(p, s))
+                .collect());
+        }
+        let b = self.stage_batch();
+        let mut out = Vec::with_capacity(xs.len());
+        let mut off = 0;
+        for c in batcher::plan_chunks(xs.len(), b) {
+            out.extend(self.infer_chunk_deadline(
+                &xs[off..off + c],
+                t1,
+                t2,
+                &deadlines[off..off + c],
+            )?);
+            off += c;
+        }
+        Ok(out)
+    }
+
+    /// One chunk of the deadline-aware ladder (see `infer_many_deadline`).
+    fn infer_chunk_deadline(
+        &self,
+        xs: &[&Tensor],
+        t1: f32,
+        t2: f32,
+        deadlines: &[Option<Instant>],
+    ) -> Result<Vec<RowOutcome>> {
+        let n = xs.len();
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        let expired = |i: usize, now: Instant| deadlines[i].is_some_and(|d| now >= d);
+        // Rows start Expired; every row that reaches a verdict overwrites.
+        let mut results = vec![RowOutcome::Expired; n];
+        let now = Instant::now();
+        let live: Vec<usize> = (0..n).filter(|&i| !expired(i, now)).collect();
+        if live.is_empty() {
+            return Ok(results);
+        }
+        if live.len() == 1 || self.stages.batched.is_none() {
+            // Batch-1 ladder: re-check each row at its own start (the
+            // preceding rows' execution time counts against its budget).
+            for &i in &live {
+                if expired(i, Instant::now()) {
+                    continue;
+                }
+                let (p, s) = self.infer_one(xs[i], t1, t2)?;
+                results[i] = RowOutcome::Done(p, s);
+            }
+            return Ok(results);
+        }
+
+        // Batched ladder with mid-ladder shedding at each stage boundary.
+        let xsel: Vec<&Tensor> = live.iter().map(|&i| xs[i]).collect();
+        let xb = concat_rows(&xsel);
+        let outs1 = self.exec_stage(0, &xb)?;
+        ensure!(outs1.len() == 2, "stage1 returned {} outputs", outs1.len());
+        let mut undecided: Vec<(usize, usize)> = Vec::new(); // (row in outs1, request idx)
+        for (pos, &i) in live.iter().enumerate() {
+            let row = outs1[0].row(pos);
+            if max_conf(row) >= t1 {
+                results[i] = RowOutcome::Done(argmax_slice(row), 1);
+            } else {
+                undecided.push((pos, i));
+            }
+        }
+        let now = Instant::now();
+        undecided.retain(|&(_, i)| !expired(i, now)); // shed stays Expired
+        if !undecided.is_empty() {
+            let rows: Vec<usize> = undecided.iter().map(|&(p, _)| p).collect();
+            let h1 = gather_rows(&outs1[1], &rows);
+            let outs2 = self.exec_stage(1, &h1)?;
+            ensure!(outs2.len() == 2, "stage2 returned {} outputs", outs2.len());
+            let mut undecided2: Vec<(usize, usize)> = Vec::new(); // (row in outs2, request idx)
+            for (pos, &(_, i)) in undecided.iter().enumerate() {
+                let row = outs2[0].row(pos);
+                if max_conf(row) >= t2 {
+                    results[i] = RowOutcome::Done(argmax_slice(row), 2);
+                } else {
+                    undecided2.push((pos, i));
+                }
+            }
+            let now = Instant::now();
+            undecided2.retain(|&(_, i)| !expired(i, now));
+            if !undecided2.is_empty() {
+                let rows2: Vec<usize> = undecided2.iter().map(|&(p, _)| p).collect();
+                let h2 = gather_rows(&outs2[1], &rows2);
+                let outs3 = self.exec_stage(2, &h2)?;
+                for (pos3, &(_, i)) in undecided2.iter().enumerate() {
+                    results[i] = RowOutcome::Done(argmax_slice(outs3[0].row(pos3)), 3);
+                }
+            }
+        }
+        Ok(results)
     }
 }
 

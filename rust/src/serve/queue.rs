@@ -16,6 +16,8 @@ use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::util::sync::{lock, wait, wait_timeout};
+
 /// Outcome of a timed pop.
 #[derive(Debug)]
 pub enum Pop<T> {
@@ -114,7 +116,7 @@ impl<T> Queue<T> {
     /// full or closed (the item is handed back so the caller can count or
     /// retry it).
     pub fn try_push(&self, t: T) -> Result<(), T> {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = lock(&self.inner);
         if inner.closed {
             return Err(t);
         }
@@ -132,9 +134,9 @@ impl<T> Queue<T> {
     /// Blocking push: waits for space; `Err(t)` only if the queue closes
     /// while waiting.
     pub fn push(&self, t: T) -> Result<(), T> {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = lock(&self.inner);
         while inner.q.len() >= self.capacity && !inner.closed {
-            inner = self.not_full.wait(inner).unwrap();
+            inner = wait(&self.not_full, inner);
         }
         if inner.closed {
             return Err(t);
@@ -148,7 +150,7 @@ impl<T> Queue<T> {
 
     /// Blocking pop; `None` once the queue is closed *and* drained.
     pub fn pop(&self) -> Option<T> {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = lock(&self.inner);
         loop {
             if let Some(t) = inner.q.pop_front() {
                 drop(inner);
@@ -158,14 +160,14 @@ impl<T> Queue<T> {
             if inner.closed {
                 return None;
             }
-            inner = self.not_empty.wait(inner).unwrap();
+            inner = wait(&self.not_empty, inner);
         }
     }
 
     /// Pop with a deadline, for micro-batch accumulation.
     pub fn pop_timeout(&self, timeout: Duration) -> Pop<T> {
         let deadline = Instant::now() + timeout;
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = lock(&self.inner);
         loop {
             if let Some(t) = inner.q.pop_front() {
                 drop(inner);
@@ -179,9 +181,9 @@ impl<T> Queue<T> {
             if now >= deadline {
                 return Pop::TimedOut;
             }
-            let (guard, res) = self.not_empty.wait_timeout(inner, deadline - now).unwrap();
+            let (guard, timed_out) = wait_timeout(&self.not_empty, inner, deadline - now);
             inner = guard;
-            if res.timed_out() && inner.q.is_empty() {
+            if timed_out && inner.q.is_empty() {
                 return if inner.closed { Pop::Closed } else { Pop::TimedOut };
             }
         }
@@ -190,17 +192,17 @@ impl<T> Queue<T> {
     /// Close the queue: pending items stay poppable, new pushes fail, and
     /// blocked poppers wake up.
     pub fn close(&self) {
-        self.inner.lock().unwrap().closed = true;
+        lock(&self.inner).closed = true;
         self.not_empty.notify_all();
         self.not_full.notify_all();
     }
 
     pub fn is_closed(&self) -> bool {
-        self.inner.lock().unwrap().closed
+        lock(&self.inner).closed
     }
 
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().q.len()
+        lock(&self.inner).q.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -208,7 +210,7 @@ impl<T> Queue<T> {
     }
 
     pub fn stats(&self) -> QueueStats {
-        let inner = self.inner.lock().unwrap();
+        let inner = lock(&self.inner);
         QueueStats {
             accepted: inner.accepted,
             rejected: inner.rejected,

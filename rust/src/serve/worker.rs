@@ -13,6 +13,26 @@
 //! (`batcher::drain_batch`) and run them through `StageRunner::infer_many`,
 //! so requests grouped in one drain share padded stage executes and
 //! early-exiting requests genuinely skip later stages.
+//!
+//! ## Failure domains
+//!
+//! The failure domain is one micro-batch on one engine generation, never
+//! the pool:
+//!
+//! * batch execution runs under `catch_unwind`, so a panicking batch fails
+//!   *its* requests with a terminal [`OutcomeStatus::Failed`] outcome
+//!   instead of hanging their waiters;
+//! * after a crash the worker respawns a replacement engine in place
+//!   (engines are not `Send`, so supervision is in-thread) with capped
+//!   exponential backoff, up to [`PoolOpts::max_restarts`] — counted by
+//!   the `serve.worker.restarts` metric;
+//! * an optional per-request deadline ([`PoolOpts::deadline`]) is enforced
+//!   at dequeue and mid-ladder: expired work is shed with a terminal
+//!   [`OutcomeStatus::Timeout`] outcome (`serve.req.timeout`), not
+//!   executed;
+//! * every submitted request reaches **exactly one** terminal outcome —
+//!   done, rejected at admission, timeout, or failed; [`WorkerPool::
+//!   shutdown`] fails any requests stranded in the queue by dead workers.
 
 use std::path::PathBuf;
 use std::sync::{Arc, Condvar, Mutex};
@@ -23,12 +43,14 @@ use anyhow::{anyhow, Context, Result};
 
 use super::batcher::{drain_batch, plan_chunks, plan_rows, BatchPolicy};
 use super::queue::{Queue, QueueStats};
-use super::StageRunner;
+use super::{RowOutcome, StageRunner};
+use crate::faults;
 use crate::models::ModelState;
 use crate::obs::metrics::{self, Counter, Gauge};
 use crate::obs::trace;
 use crate::runtime::{BackendChoice, Engine};
 use crate::tensor::Tensor;
+use crate::util::sync;
 
 /// One enqueued inference request.
 #[derive(Debug)]
@@ -48,16 +70,65 @@ impl ServeJob {
     }
 }
 
+/// How a request terminated.  Together with admission rejection these are
+/// the only ends a submitted request can meet, and it meets exactly one.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OutcomeStatus {
+    /// Served: `pred`/`stage` are meaningful.
+    Done,
+    /// Deadline expired before or mid-ladder; shed, never fully executed.
+    Timeout,
+    /// The batch executing this request died (panic or execute error), or
+    /// the request was stranded in the queue when the pool shut down.
+    Failed,
+}
+
 /// One completed request.
 #[derive(Debug, Clone)]
 pub struct ServeOutcome {
     pub id: u64,
+    /// Meaningful only when `status == Done` (0 otherwise).
     pub pred: usize,
+    /// Exit stage 1|2|3 when `status == Done` (0 otherwise).
     pub stage: u8,
     pub label: Option<usize>,
     /// Queue wait + execution, measured from submission.
     pub latency_us: f64,
+    /// Serving worker; `usize::MAX` for requests failed at shutdown.
     pub worker: usize,
+    pub status: OutcomeStatus,
+}
+
+impl ServeOutcome {
+    fn terminal(
+        job: &ServeJob,
+        worker: usize,
+        status: OutcomeStatus,
+        pred: usize,
+        stage: u8,
+    ) -> ServeOutcome {
+        ServeOutcome {
+            id: job.id,
+            pred,
+            stage,
+            label: job.label,
+            latency_us: job.submitted.elapsed().as_micros() as f64,
+            worker,
+            status,
+        }
+    }
+
+    pub fn done(job: &ServeJob, pred: usize, stage: u8, worker: usize) -> ServeOutcome {
+        Self::terminal(job, worker, OutcomeStatus::Done, pred, stage)
+    }
+
+    pub fn timeout(job: &ServeJob, worker: usize) -> ServeOutcome {
+        Self::terminal(job, worker, OutcomeStatus::Timeout, 0, 0)
+    }
+
+    pub fn failed(job: &ServeJob, worker: usize) -> ServeOutcome {
+        Self::terminal(job, worker, OutcomeStatus::Failed, 0, 0)
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -84,6 +155,15 @@ pub struct PoolOpts {
     /// fail ready if the state cannot be lowered or the backend cannot
     /// execute packed forms.
     pub compressed: bool,
+    /// Per-request latency budget from submission.  Expired requests are
+    /// shed at dequeue and at stage-ladder boundaries with a terminal
+    /// `Timeout` outcome.  `None` (the default) disables shedding.
+    pub deadline: Option<Duration>,
+    /// How many times a worker may respawn a replacement engine after a
+    /// mid-run crash before giving up and going to `failed`.
+    pub max_restarts: u32,
+    /// Base respawn backoff; doubles per consecutive restart (capped).
+    pub restart_backoff: Duration,
 }
 
 impl PoolOpts {
@@ -97,6 +177,9 @@ impl PoolOpts {
             backend: BackendChoice::Pjrt,
             ref_threads: crate::runtime::default_ref_threads(),
             compressed: false,
+            deadline: None,
+            max_restarts: 3,
+            restart_backoff: Duration::from_millis(50),
         }
     }
 }
@@ -115,12 +198,15 @@ pub struct WorkerStats {
     pub rows_useful: u64,
     pub rows_executed: u64,
     /// Host<->device transfer volume over this worker's engine lifetime
-    /// (includes the one-time resident-prefix upload).  With the
-    /// device-resident operand prefix, the per-request upload share is
-    /// just the input rows — `serve_bench.json` surfaces these so BENCH
-    /// trajectories capture transfer volume alongside latency.
+    /// (includes the one-time resident-prefix upload; summed over engine
+    /// generations when the worker respawned).  With the device-resident
+    /// operand prefix, the per-request upload share is just the input
+    /// rows — `serve_bench.json` surfaces these so BENCH trajectories
+    /// capture transfer volume alongside latency.
     pub bytes_uploaded: u64,
     pub bytes_downloaded: u64,
+    /// Engine respawns this worker performed after mid-run crashes.
+    pub restarts: u32,
 }
 
 impl WorkerStats {
@@ -134,8 +220,9 @@ impl WorkerStats {
     }
 }
 
-/// Pool result: per-worker stats plus any worker failures (a failed
-/// worker's in-flight jobs are lost; loadgen reports the shortfall).
+/// Pool result: per-worker stats plus any worker failures.  A failed
+/// worker's in-flight batch gets terminal `Failed` outcomes; requests
+/// stranded in the queue are failed by [`WorkerPool::shutdown`].
 #[derive(Debug, Default)]
 pub struct PoolOutcome {
     pub stats: Vec<WorkerStats>,
@@ -146,6 +233,42 @@ pub struct PoolOutcome {
 struct Ready {
     ready: usize,
     failed: usize,
+    /// Startup/death errors of the workers that failed, in arrival order.
+    errors: Vec<String>,
+}
+
+/// How the pool start settled, from [`WorkerPool::wait_ready`].
+#[derive(Debug, Clone, Default)]
+pub struct ReadyReport {
+    /// Configured pool size.
+    pub workers: usize,
+    /// Workers that came up.
+    pub ready: usize,
+    /// Workers that failed to start.
+    pub failed: usize,
+    /// The failed workers' startup errors, in arrival order.
+    pub errors: Vec<String>,
+}
+
+impl ReadyReport {
+    pub fn all_up(&self) -> bool {
+        self.failed == 0 && self.ready == self.workers
+    }
+
+    /// Human summary: "N of M up" or "N of M up, K failed: <first error>".
+    pub fn describe(&self) -> String {
+        if self.failed == 0 {
+            format!("{} of {} up", self.ready, self.workers)
+        } else {
+            format!(
+                "{} of {} up, {} failed: {}",
+                self.ready,
+                self.workers,
+                self.failed,
+                self.errors.first().map(String::as_str).unwrap_or("unknown error")
+            )
+        }
+    }
 }
 
 pub struct WorkerPool {
@@ -200,32 +323,46 @@ impl WorkerPool {
     /// Reports must use this, not the configured size — throughput
     /// achieved by 2 survivors of a 4-worker pool is 2-worker throughput.
     pub fn live_workers(&self) -> usize {
-        self.ready.0.lock().unwrap().ready
+        sync::lock(&self.ready.0).ready
     }
 
     /// Block until every worker has either compiled its engine or failed.
-    /// Returns the number of live workers; errors if none survived or the
-    /// timeout lapsed.
-    pub fn wait_ready(&self, timeout: Duration) -> Result<usize> {
+    /// Partial starts succeed: the report carries how many workers came
+    /// up, how many failed, and the failed workers' startup errors.
+    /// Errors only when *no* worker survived or the timeout lapsed (both
+    /// messages name the partial state and the first startup error).
+    pub fn wait_ready(&self, timeout: Duration) -> Result<ReadyReport> {
         let (lock, cv) = &*self.ready;
         let deadline = Instant::now() + timeout;
-        let mut st = lock.lock().unwrap();
+        let mut st = sync::lock(lock);
         while st.ready + st.failed < self.workers {
             let now = Instant::now();
             if now >= deadline {
                 return Err(anyhow!(
-                    "worker pool not ready after {timeout:?} ({}/{} up)",
+                    "worker pool not ready after {timeout:?}: {} of {} up, {} failed{}",
                     st.ready,
-                    self.workers
+                    self.workers,
+                    st.failed,
+                    st.errors.first().map(|e| format!(": {e}")).unwrap_or_default()
                 ));
             }
-            let (guard, _) = cv.wait_timeout(st, deadline - now).unwrap();
+            let (guard, _) = sync::wait_timeout(cv, st, deadline - now);
             st = guard;
         }
-        if st.ready == 0 {
-            return Err(anyhow!("all {} workers failed to start", self.workers));
+        let report = ReadyReport {
+            workers: self.workers,
+            ready: st.ready,
+            failed: st.failed,
+            errors: st.errors.clone(),
+        };
+        if report.ready == 0 {
+            return Err(anyhow!(
+                "all {} workers failed to start{}",
+                self.workers,
+                report.errors.first().map(|e| format!(": {e}")).unwrap_or_default()
+            ));
         }
-        Ok(st.ready)
+        Ok(report)
     }
 
     /// Admission-controlled submit (load shedding when the queue is full).
@@ -268,7 +405,9 @@ impl WorkerPool {
     }
 
     /// Close the request queue, join every worker, and return the pool
-    /// outcome.  Pending queued jobs are still drained before workers exit.
+    /// outcome.  Pending queued jobs are still drained before workers
+    /// exit; if every worker died, the stranded jobs are accounted with
+    /// terminal `Failed` outcomes so no accepted request simply vanishes.
     pub fn shutdown(self) -> PoolOutcome {
         self.jobs.close();
         let mut out = PoolOutcome::default();
@@ -279,8 +418,39 @@ impl WorkerPool {
                 Err(_) => out.errors.push("worker panicked".to_string()),
             }
         }
+        // Workers are gone; anything still queued would otherwise be lost
+        // without a terminal outcome.
+        let m_failed = metrics::counter("serve.req.failed");
+        while let Some(job) = self.jobs.pop() {
+            m_failed.incr();
+            if self.outcomes.push(ServeOutcome::failed(&job, usize::MAX)).is_err() {
+                break;
+            }
+        }
         self.outcomes.close();
         out
+    }
+}
+
+/// Why one engine generation's serve loop ended.
+enum ServeExit {
+    /// Queue closed and drained: clean shutdown.
+    Drained,
+    /// Outcome side closed: the consumer is gone, stop serving.
+    OutcomesClosed,
+    /// The in-flight batch died (panic or execute error).  Its requests
+    /// already got terminal `Failed` outcomes; the engine generation must
+    /// be replaced before serving again.
+    Crashed(String),
+}
+
+fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
     }
 }
 
@@ -292,66 +462,166 @@ fn worker_main(
     outcomes: Arc<Queue<ServeOutcome>>,
     ready: Arc<(Mutex<Ready>, Condvar)>,
 ) -> Result<WorkerStats> {
-    // Per-worker engine: compile once, then serve (see module docs).  The
-    // runner borrows the engine (its executables and resident prefix
-    // buffers), so "engine outlives the runner" is compile-enforced and
-    // the two are constructed as separate locals rather than returned
-    // together.
     let (lock, cv) = &*ready;
-    let fail = |e: anyhow::Error| -> anyhow::Error {
-        lock.lock().unwrap().failed += 1;
+    // Startup failure: this worker never counted ready.
+    let start_fail = |e: anyhow::Error| -> anyhow::Error {
+        let mut st = sync::lock(lock);
+        st.failed += 1;
+        st.errors.push(format!("worker {w}: {e:#}"));
+        drop(st);
         cv.notify_all();
         e
     };
+    // Death after being ready: move ready -> failed so reports attribute
+    // throughput to the survivors and the `ready + failed == workers`
+    // settlement invariant that wait_ready blocks on stays intact.
+    let die = |e: &anyhow::Error| {
+        let mut st = sync::lock(lock);
+        st.ready -= 1;
+        st.failed += 1;
+        st.errors.push(format!("worker {w}: {e:#}"));
+        drop(st);
+        cv.notify_all();
+    };
+
     // Each worker engine gets its share of the pool's kernel-thread
     // budget (ref backend only; PJRT ignores it).
     let kernel_threads = crate::runtime::threads_per_worker(opts.ref_threads, opts.workers);
-    let made = Engine::with_backend_threads(opts.backend, &opts.artifacts_dir, kernel_threads)
-        .with_context(|| format!("worker {w}: creating {} engine", opts.backend.name()));
-    let engine = match made {
-        Ok(e) => e,
-        Err(e) => return Err(fail(e)),
-    };
-    // Arc clone: all workers share one copy of the weights.
-    let made_runner = if opts.compressed {
-        StageRunner::new_compressed(&engine, state.clone(), opts.batch.max_batch)
-    } else {
-        StageRunner::new(&engine, state.clone(), opts.batch.max_batch)
-    };
-    let runner = match made_runner.with_context(|| format!("worker {w}: loading staged graphs")) {
-        Ok(r) => {
-            lock.lock().unwrap().ready += 1;
+    let mut stats = WorkerStats { worker: w, ..Default::default() };
+    let m_restarts = metrics::counter("serve.worker.restarts");
+    // Supervision loop: one engine generation per iteration.  Engines are
+    // not `Send`, so the replacement for a crashed engine is built right
+    // here in the worker's own thread.
+    let mut generation: u32 = 0;
+    loop {
+        // Per-worker engine: compile once, then serve (see module docs).
+        // The runner borrows the engine (its executables and resident
+        // prefix buffers), so "engine outlives the runner" is
+        // compile-enforced and the two are constructed as separate locals
+        // rather than returned together.
+        let made = (|| -> Result<Engine> {
+            if faults::fire(faults::WORKER_START_FAIL) {
+                anyhow::bail!("injected fault: worker_start_fail");
+            }
+            Engine::with_backend_threads(opts.backend, &opts.artifacts_dir, kernel_threads)
+                .with_context(|| format!("worker {w}: creating {} engine", opts.backend.name()))
+        })();
+        let engine = match made {
+            Ok(e) => e,
+            Err(e) if generation == 0 => return Err(start_fail(e)),
+            Err(e) => {
+                let e = e.context(format!("worker {w}: engine respawn {generation} failed"));
+                die(&e);
+                return Err(e);
+            }
+        };
+        // Arc clone: all workers share one copy of the weights.
+        let made_runner = if opts.compressed {
+            StageRunner::new_compressed(&engine, state.clone(), opts.batch.max_batch)
+        } else {
+            StageRunner::new(&engine, state.clone(), opts.batch.max_batch)
+        };
+        let made_runner =
+            made_runner.with_context(|| format!("worker {w}: loading staged graphs"));
+        let runner = match made_runner {
+            Ok(r) => r,
+            Err(e) if generation == 0 => return Err(start_fail(e)),
+            Err(e) => {
+                die(&e);
+                return Err(e);
+            }
+        };
+        if generation == 0 {
+            sync::lock(lock).ready += 1;
             cv.notify_all();
-            r
         }
-        Err(e) => return Err(fail(e)),
-    };
+        stats.stage_batch = runner.stage_batch();
 
-    let (t1, t2) = opts.thresholds;
-    let mut stats = WorkerStats { worker: w, stage_batch: runner.stage_batch(), ..Default::default() };
-    // Transfer-volume snapshot on every successful exit path.
-    let finish = |mut stats: WorkerStats| -> WorkerStats {
+        let exit = serve_generation(w, &runner, &opts, &jobs, &outcomes, &mut stats);
+
+        // Fold this generation's transfer volume into the lifetime stats
+        // before the engine is dropped.
         let rs = engine.stats();
-        stats.bytes_uploaded = rs.bytes_uploaded;
-        stats.bytes_downloaded = rs.bytes_downloaded;
-        stats
-    };
-    // Resolve registry handles once per worker; the loop touches only Arcs.
+        stats.bytes_uploaded += rs.bytes_uploaded;
+        stats.bytes_downloaded += rs.bytes_downloaded;
+
+        match exit {
+            ServeExit::Drained | ServeExit::OutcomesClosed => return Ok(stats),
+            ServeExit::Crashed(desc) => {
+                generation += 1;
+                if generation > opts.max_restarts {
+                    let e = anyhow!(
+                        "worker {w}: {desc} (restart budget {} exhausted)",
+                        opts.max_restarts
+                    );
+                    die(&e);
+                    return Err(e);
+                }
+                stats.restarts += 1;
+                m_restarts.incr();
+                let _sp = trace::span("serve.worker.respawn");
+                // Capped exponential backoff before the replacement engine.
+                let backoff = opts.restart_backoff.saturating_mul(1u32 << (generation - 1).min(6));
+                crate::obs::log!(
+                    crate::obs::Level::Warn,
+                    "worker {w}: {desc}; respawning engine (restart {generation}/{}, backoff {backoff:?})",
+                    opts.max_restarts
+                );
+                std::thread::sleep(backoff);
+            }
+        }
+    }
+}
+
+/// Serve micro-batches on one engine generation until the queue drains,
+/// the outcome side closes, or the batch in flight dies.
+fn serve_generation(
+    w: usize,
+    runner: &StageRunner<'_>,
+    opts: &PoolOpts,
+    jobs: &Queue<ServeJob>,
+    outcomes: &Queue<ServeOutcome>,
+    stats: &mut WorkerStats,
+) -> ServeExit {
+    let (t1, t2) = opts.thresholds;
+    // Resolve registry handles once per generation; the loop touches only
+    // Arcs.
     let m_drains = metrics::counter("serve.batch.drains");
     let m_rows_useful = metrics::counter("serve.batch.rows_useful");
     let m_rows_executed = metrics::counter("serve.batch.rows_executed");
+    let m_timeout = metrics::counter("serve.req.timeout");
+    let m_failed = metrics::counter("serve.req.failed");
     loop {
-        let batch = {
+        let mut batch = {
             // Span covers the micro-batch assembly wait (arrival gaps +
             // linger), distinct from the execute below.
             let _s = trace::span("serve.drain_batch");
-            drain_batch(&jobs, &opts.batch)
+            drain_batch(jobs, &opts.batch)
         };
         if batch.is_empty() {
-            break; // queue closed and drained
+            return ServeExit::Drained; // queue closed and drained
         }
         stats.drains += 1;
         m_drains.incr();
+        // Deadline check at dequeue: expired work is answered, not run.
+        if let Some(budget) = opts.deadline {
+            let now = Instant::now();
+            let mut kept = Vec::with_capacity(batch.len());
+            for job in batch {
+                if now.duration_since(job.submitted) >= budget {
+                    m_timeout.incr();
+                    if outcomes.push(ServeOutcome::timeout(&job, w)).is_err() {
+                        return ServeExit::OutcomesClosed;
+                    }
+                } else {
+                    kept.push(job);
+                }
+            }
+            batch = kept;
+            if batch.is_empty() {
+                continue;
+            }
+        }
         stats.max_chunk = stats.max_chunk.max(batch.len());
         let (useful, executed) =
             plan_rows(&plan_chunks(batch.len(), stats.stage_batch), stats.stage_batch);
@@ -359,44 +629,71 @@ fn worker_main(
         stats.rows_executed += executed as u64;
         m_rows_useful.add(useful as u64);
         m_rows_executed.add(executed as u64);
+        // Injected slowness: builds deadline pressure for the chaos soak.
+        if faults::fire(faults::SLOW_BATCH) {
+            let ms = faults::arg(faults::SLOW_BATCH).unwrap_or(10.0);
+            std::thread::sleep(Duration::from_micros((ms * 1000.0) as u64));
+        }
+        let deadlines: Vec<Option<Instant>> =
+            batch.iter().map(|j| opts.deadline.map(|d| j.submitted + d)).collect();
         let xs: Vec<&Tensor> = batch.iter().map(|j| &j.x).collect();
-        let results = {
+        // The batch is the failure domain: a panic (injected or real) in
+        // the stage ladder fails these requests terminally and ends the
+        // engine generation; it never propagates past this frame, so no
+        // waiter hangs and no lock stays poisoned on this path.
+        let ran = {
             let _s = trace::span("serve.infer_batch");
-            runner.infer_many(&xs, t1, t2)
-        };
-        let results = match results {
-            Ok(r) => r,
-            Err(e) => {
-                // Dying mid-run: move ourselves from `ready` to `failed`
-                // so reports attribute throughput to the survivors and the
-                // `ready + failed == workers` settlement invariant that
-                // wait_ready blocks on stays intact.
-                {
-                    let mut st = lock.lock().unwrap();
-                    st.ready -= 1;
-                    st.failed += 1;
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                if faults::fire(faults::WORKER_PANIC) {
+                    panic!("injected fault: worker_panic");
                 }
-                cv.notify_all();
-                return Err(e)
-                    .with_context(|| format!("worker {w}: micro-batch of {}", batch.len()));
-            }
+                runner.infer_many_deadline(&xs, t1, t2, &deadlines)
+            }))
         };
-        for (job, (pred, stage)) in batch.into_iter().zip(results) {
-            stats.processed += 1;
-            let outcome = ServeOutcome {
-                id: job.id,
-                pred,
-                stage,
-                label: job.label,
-                latency_us: job.submitted.elapsed().as_micros() as f64,
-                worker: w,
+        let rows = match ran {
+            Err(p) => {
+                for job in &batch {
+                    m_failed.incr();
+                    if outcomes.push(ServeOutcome::failed(job, w)).is_err() {
+                        return ServeExit::OutcomesClosed;
+                    }
+                }
+                return ServeExit::Crashed(format!(
+                    "panicked during micro-batch of {}: {}",
+                    batch.len(),
+                    panic_msg(&*p)
+                ));
+            }
+            Ok(Err(e)) => {
+                for job in &batch {
+                    m_failed.incr();
+                    if outcomes.push(ServeOutcome::failed(job, w)).is_err() {
+                        return ServeExit::OutcomesClosed;
+                    }
+                }
+                return ServeExit::Crashed(format!(
+                    "micro-batch of {} failed: {e:#}",
+                    batch.len()
+                ));
+            }
+            Ok(Ok(rows)) => rows,
+        };
+        for (job, row) in batch.iter().zip(rows) {
+            let outcome = match row {
+                RowOutcome::Done(pred, stage) => {
+                    stats.processed += 1;
+                    ServeOutcome::done(job, pred, stage, w)
+                }
+                RowOutcome::Expired => {
+                    m_timeout.incr();
+                    ServeOutcome::timeout(job, w)
+                }
             };
             if outcomes.push(outcome).is_err() {
-                return Ok(finish(stats)); // result side closed: shutting down
+                return ServeExit::OutcomesClosed; // result side closed
             }
         }
     }
-    Ok(finish(stats))
 }
 
 #[cfg(test)]
@@ -412,6 +709,21 @@ mod tests {
         assert_send::<Arc<Queue<ServeJob>>>();
         assert_send::<Arc<ModelState>>();
         assert_send::<PoolOpts>();
+    }
+
+    #[test]
+    fn ready_report_describes_partial_starts() {
+        let rep = ReadyReport {
+            workers: 4,
+            ready: 3,
+            failed: 1,
+            errors: vec!["worker 2: engine exploded".into()],
+        };
+        assert!(!rep.all_up());
+        assert_eq!(rep.describe(), "3 of 4 up, 1 failed: worker 2: engine exploded");
+        let ok = ReadyReport { workers: 2, ready: 2, failed: 0, errors: vec![] };
+        assert!(ok.all_up());
+        assert_eq!(ok.describe(), "2 of 2 up");
     }
 
     #[test]
@@ -455,7 +767,9 @@ mod tests {
             PoolOpts::new("/nonexistent/artifacts", 2, (0.8, 0.8)),
         );
         let res = pool.wait_ready(Duration::from_secs(30));
-        assert!(res.is_err(), "expected startup failure, got {res:?}");
+        let err = format!("{:#}", res.expect_err("expected startup failure"));
+        assert!(err.contains("all 2 workers failed to start"), "{err}");
+        assert!(err.contains("worker"), "error should carry a startup cause: {err}");
         let outcome = pool.shutdown();
         assert_eq!(outcome.stats.len(), 0);
         assert_eq!(outcome.errors.len(), 2);

@@ -14,3 +14,4 @@ pub mod kmeans;
 pub mod prop;
 pub mod rng;
 pub mod stats;
+pub mod sync;

@@ -1,0 +1,69 @@
+//! Poison-recovering lock/condvar helpers.
+//!
+//! `std`'s `Mutex` poisons when a holder panics; with fault injection (and
+//! `catch_unwind` worker isolation) a panic near a lock is a *routine*
+//! event, and `.lock().unwrap()` would cascade one injected panic into a
+//! panic in every thread that touches the lock afterwards.  All the data
+//! these locks guard is valid at every instruction boundary (queues push
+//! or pop whole elements; counters are plain integers), so recovery is
+//! simply taking the guard — the idiom `chain::plan` and `obs` already
+//! use, centralized here for the serve subsystem and everything else.
+
+use std::sync::{Condvar, Mutex, MutexGuard};
+use std::time::Duration;
+
+/// Lock, recovering from poison (see module docs for why this is sound).
+pub fn lock<'a, T>(m: &'a Mutex<T>) -> MutexGuard<'a, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Condvar wait, recovering from poison.
+pub fn wait<'a, T>(cv: &Condvar, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(guard).unwrap_or_else(|e| e.into_inner())
+}
+
+/// Condvar wait with timeout, recovering from poison.  Returns the guard
+/// and whether the wait timed out.
+pub fn wait_timeout<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+    dur: Duration,
+) -> (MutexGuard<'a, T>, bool) {
+    match cv.wait_timeout(guard, dur) {
+        Ok((g, r)) => (g, r.timed_out()),
+        Err(e) => {
+            let (g, r) = e.into_inner();
+            (g, r.timed_out())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn lock_recovers_from_poison() {
+        let m = Arc::new(Mutex::new(7u32));
+        let mc = m.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = mc.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.lock().is_err(), "mutex should be poisoned");
+        assert_eq!(*lock(&m), 7, "helper must recover the guarded value");
+        *lock(&m) = 9;
+        assert_eq!(*lock(&m), 9);
+    }
+
+    #[test]
+    fn wait_timeout_reports_timeout() {
+        let m = Mutex::new(());
+        let cv = Condvar::new();
+        let g = lock(&m);
+        let (_g, timed_out) = wait_timeout(&cv, g, Duration::from_millis(1));
+        assert!(timed_out);
+    }
+}

@@ -1,0 +1,479 @@
+//! Chaos soak: the serving pool and the plan executor under injected
+//! faults — hermetic (ref backend + engine-free plan runners), driven by
+//! the deterministic `coc::faults` layer.
+//!
+//! What these tests pin down:
+//!
+//! * **No lost request**: every submitted request reaches exactly one
+//!   terminal outcome (done / timeout / failed) under panics, slowness,
+//!   and deadlines — the pool never hangs and never double-answers.
+//! * **Failure isolation**: a panicking micro-batch fails only its own
+//!   requests; the worker respawns a replacement engine and keeps
+//!   serving.  A failing plan node is quarantined with its subtree while
+//!   sibling branches complete, and the run reports partial results.
+//! * **Determinism**: the same workload + fault seed reproduces the
+//!   identical fault schedule and identical surviving-request results,
+//!   across every builtin architecture.
+//!
+//! The fault registry is process-global, so every test serializes on one
+//! gate and disarms it before returning.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Duration;
+
+use anyhow::Result;
+
+use coc::chain::plan::{ExecOpts, NodeRunner, PlanKey, Planner};
+use coc::chain::{stages, Chain, CompressionStage};
+use coc::data::{Dataset, DatasetKind};
+use coc::faults;
+use coc::metrics::Measurement;
+use coc::models::{ArchManifest, LayerDesc, LayerKind, MaskSlot, ModelState};
+use coc::runtime::{BackendChoice, Engine};
+use coc::serve::batcher::BatchPolicy;
+use coc::serve::worker::{OutcomeStatus, PoolOpts, ServeJob, WorkerPool};
+use coc::serve::Server;
+
+mod common;
+
+/// Faults are process-global; tests that arm them must not overlap.
+fn serial() -> MutexGuard<'static, ()> {
+    static GATE: Mutex<()> = Mutex::new(());
+    GATE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("coc_chaos_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    d
+}
+
+// ---------------------------------------------------------------------------
+// Serve-side chaos
+// ---------------------------------------------------------------------------
+
+/// One chaos run through a ref-backend pool: fault schedule + per-request
+/// terminal outcomes + pool accounting, for cross-run comparison.
+struct ChaosRun {
+    digest: u64,
+    fired: Vec<faults::FireEvent>,
+    /// id -> terminal (status, pred, stage); insertion asserts uniqueness.
+    outcomes: BTreeMap<u64, (OutcomeStatus, usize, u8)>,
+    restarts: u32,
+    errors: Vec<String>,
+}
+
+/// Single worker + batch-1 so the micro-batch composition (and therefore
+/// the per-site evaluation sequence) is identical across same-seed runs.
+fn run_pool_chaos(arch_name: &str, spec: &str, seed: u64, requests: usize) -> ChaosRun {
+    faults::configure(spec, seed).unwrap();
+    let arch = common::builtin_arch(arch_name);
+    let ds = Dataset::generate(DatasetKind::SynthC10, requests, 53, 1);
+    let engine = Engine::new_ref().unwrap();
+    let mut state = coc::train::init_state(&engine, arch, 53).unwrap();
+    state.exits.trained = true;
+    state.exits.thresholds = Some((0.5, 0.5));
+
+    let mut opts = PoolOpts::new("unused-by-ref-backend", 1, (0.5, 0.5));
+    opts.backend = BackendChoice::Ref;
+    opts.batch = BatchPolicy { max_batch: 1, max_wait: Duration::from_millis(1) };
+    opts.max_restarts = 1000;
+    opts.restart_backoff = Duration::from_millis(1);
+    let pool = WorkerPool::start(Arc::new(state), opts);
+    pool.wait_ready(Duration::from_secs(60)).unwrap();
+    for i in 0..requests {
+        let (x, _) = ds.batch(&[i]);
+        pool.submit(ServeJob::new(i as u64, x, Some(ds.labels[i]))).unwrap();
+    }
+    let mut outcomes = BTreeMap::new();
+    for _ in 0..requests {
+        let o = pool.outcomes().pop().expect("pool dropped a request");
+        let prev = outcomes.insert(o.id, (o.status, o.pred, o.stage));
+        assert!(prev.is_none(), "request {} got two terminal outcomes", o.id);
+    }
+    let out = pool.shutdown();
+    let fired = faults::fired_sorted();
+    let digest = faults::schedule_digest();
+    faults::clear();
+    ChaosRun {
+        digest,
+        fired,
+        outcomes,
+        restarts: out.stats.iter().map(|w| w.restarts).sum(),
+        errors: out.errors,
+    }
+}
+
+/// The headline soak: every builtin architecture, panics + slowness
+/// injected, two same-seed runs — identical fault schedule, identical
+/// terminal outcome for every request, no lost request, no hang.
+#[test]
+fn ref_chaos_soak_matrix_same_seed_identical() {
+    let _g = serial();
+    // every=6 over 20 single-request batches -> panics at evals 5, 11, 17
+    // (deterministic by construction); slow_batch exercises the
+    // hash-scheduled probabilistic path on top.
+    let spec = "worker_panic@every=6,slow_batch@p=0.2:arg=2";
+    for arch_name in common::REF_ARCHS {
+        let a = run_pool_chaos(arch_name, spec, 1234, 20);
+        let b = run_pool_chaos(arch_name, spec, 1234, 20);
+        assert!(a.errors.is_empty(), "{arch_name}: pool should absorb panics: {:?}", a.errors);
+        assert_eq!(a.restarts, 3, "{arch_name}: one respawn per injected panic");
+        assert_eq!(a.outcomes.len(), 20, "{arch_name}: every request terminal");
+
+        let panics: Vec<u64> =
+            a.fired.iter().filter(|e| e.site == "worker_panic").map(|e| e.index).collect();
+        assert_eq!(panics, vec![5, 11, 17], "{arch_name}: panic schedule moved");
+        let failed = a.outcomes.values().filter(|(s, _, _)| *s == OutcomeStatus::Failed).count();
+        assert_eq!(failed, 3, "{arch_name}: one failed request per panicked batch-of-1");
+
+        assert_eq!(a.fired, b.fired, "{arch_name}: fault schedule diverged across reruns");
+        assert_eq!(a.digest, b.digest, "{arch_name}: schedule digest diverged");
+        assert_eq!(
+            a.outcomes, b.outcomes,
+            "{arch_name}: surviving-request results diverged across same-seed reruns"
+        );
+    }
+}
+
+/// Two workers, micro-batches up to 4, two injected panics: each panic
+/// fails only its own batch, both workers respawn within budget, and the
+/// surviving requests still match the sequential server bit-for-bit.
+#[test]
+fn ref_panic_storm_isolates_batches_and_respawns() {
+    let _g = serial();
+    let arch = common::builtin_arch("mini_vgg");
+    let ds = Dataset::generate(DatasetKind::SynthC10, 40, 59, 1);
+    let engine = Engine::new_ref().unwrap();
+    let mut state = coc::train::init_state(&engine, arch, 59).unwrap();
+    state.exits.trained = true;
+    state.exits.thresholds = Some((0.5, 0.5));
+    let server = Server::new(&engine, state.clone()).unwrap();
+    let mut want = Vec::new();
+    for i in 0..ds.len() {
+        let (x, _) = ds.batch(&[i]);
+        want.push(server.infer(&x, 0.5, 0.5).unwrap());
+    }
+
+    faults::configure("worker_panic@n=2", 77).unwrap();
+    let mut opts = PoolOpts::new("unused-by-ref-backend", 2, (0.5, 0.5));
+    opts.backend = BackendChoice::Ref;
+    opts.batch = BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) };
+    opts.restart_backoff = Duration::from_millis(1);
+    let pool = WorkerPool::start(Arc::new(state), opts);
+    assert!(pool.wait_ready(Duration::from_secs(60)).unwrap().all_up());
+    for i in 0..ds.len() {
+        let (x, _) = ds.batch(&[i]);
+        pool.submit(ServeJob::new(i as u64, x, Some(ds.labels[i]))).unwrap();
+    }
+    let mut got: Vec<Option<(OutcomeStatus, usize, u8)>> = vec![None; ds.len()];
+    for _ in 0..ds.len() {
+        let o = pool.outcomes().pop().expect("pool dropped a request");
+        assert!(got[o.id as usize].is_none(), "duplicate outcome for {}", o.id);
+        got[o.id as usize] = Some((o.status, o.pred, o.stage));
+    }
+    let out = pool.shutdown();
+    faults::clear();
+
+    assert!(out.errors.is_empty(), "respawn should absorb both panics: {:?}", out.errors);
+    let restarts: u32 = out.stats.iter().map(|w| w.restarts).sum();
+    assert_eq!(restarts, 2, "each injected panic costs exactly one respawn");
+    let (mut done, mut failed) = (0usize, 0usize);
+    for (i, g) in got.iter().enumerate() {
+        match g.expect("request never completed") {
+            (OutcomeStatus::Done, pred, stage) => {
+                done += 1;
+                assert_eq!((pred, stage), want[i], "surviving request {i} diverged under chaos");
+            }
+            (OutcomeStatus::Failed, _, _) => failed += 1,
+            (OutcomeStatus::Timeout, _, _) => panic!("no deadline configured"),
+        }
+    }
+    assert!((2..=8).contains(&failed), "two panicked micro-batches of <=4 requests: {failed}");
+    assert_eq!(done + failed, ds.len());
+}
+
+/// Injected slowness + a tight deadline: expired requests are shed with a
+/// terminal `Timeout` at dequeue or mid-ladder — answered, never lost,
+/// never executed to completion past their budget.
+#[test]
+fn ref_deadline_sheds_expired_requests_terminally() {
+    let _g = serial();
+    faults::configure("slow_batch@p=1.0:arg=50", 0).unwrap();
+    let arch = common::builtin_arch("mini_vgg");
+    let ds = Dataset::generate(DatasetKind::SynthC10, 6, 61, 1);
+    let engine = Engine::new_ref().unwrap();
+    let mut state = coc::train::init_state(&engine, arch, 61).unwrap();
+    state.exits.trained = true;
+    state.exits.thresholds = Some((0.5, 0.5));
+
+    let mut opts = PoolOpts::new("unused-by-ref-backend", 1, (0.5, 0.5));
+    opts.backend = BackendChoice::Ref;
+    opts.batch = BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) };
+    opts.deadline = Some(Duration::from_millis(5));
+    let pool = WorkerPool::start(Arc::new(state), opts);
+    pool.wait_ready(Duration::from_secs(60)).unwrap();
+    for i in 0..ds.len() {
+        let (x, _) = ds.batch(&[i]);
+        pool.submit(ServeJob::new(i as u64, x, Some(ds.labels[i]))).unwrap();
+    }
+    let mut statuses = Vec::new();
+    for _ in 0..ds.len() {
+        let o = pool.outcomes().pop().expect("pool dropped a request");
+        statuses.push(o.status);
+    }
+    let out = pool.shutdown();
+    faults::clear();
+
+    assert!(out.errors.is_empty(), "slowness is not a crash: {:?}", out.errors);
+    assert_eq!(statuses.len(), ds.len());
+    // Every batch sleeps 50ms against a 5ms budget: nothing can finish.
+    assert!(
+        statuses.iter().all(|s| *s == OutcomeStatus::Timeout),
+        "expected all-timeout under 50ms slowness vs 5ms deadline: {statuses:?}"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Plan-side chaos (engine-free runner, same pattern as tests/plan_cache.rs)
+// ---------------------------------------------------------------------------
+
+fn toy_arch() -> Arc<ArchManifest> {
+    Arc::new(ArchManifest {
+        name: "toy".into(),
+        num_classes: 4,
+        layers: vec![
+            LayerDesc {
+                name: "c1".into(),
+                kind: LayerKind::Conv,
+                k: 3,
+                cin: 3,
+                cout: 8,
+                stride: 1,
+                hout: 8,
+                wout: 8,
+                in_mask: -1,
+                out_mask: 0,
+                segment: "seg1".into(),
+                input: String::new(),
+                act: true,
+            },
+            LayerDesc {
+                name: "fc".into(),
+                kind: LayerKind::Dense,
+                k: 1,
+                cin: 8,
+                cout: 4,
+                stride: 1,
+                hout: 1,
+                wout: 1,
+                in_mask: 0,
+                out_mask: -1,
+                segment: "seg3".into(),
+                input: String::new(),
+                act: true,
+            },
+        ],
+        mask_slots: vec![MaskSlot { name: "m0".into(), channels: 8 }],
+        param_shapes: vec![vec![3, 3, 3, 8], vec![8], vec![8, 4], vec![4]],
+        graphs: BTreeMap::new(),
+        train_batch: 2,
+        eval_batch: 2,
+        stage_batch: 1,
+        stage_batches: vec![1],
+        stage_h1_shape: vec![1, 8, 8, 8],
+        stage_h2_shape: vec![1, 8, 8, 8],
+        joins: Vec::new(),
+    })
+}
+
+/// Deterministic pure-function stage application, no engine.
+struct HostRunner;
+
+fn fp_hash(s: &str) -> u64 {
+    s.bytes().fold(0u64, |h, b| h.wrapping_mul(31).wrapping_add(b as u64))
+}
+
+impl NodeRunner for HostRunner {
+    fn apply(&self, stage: &dyn CompressionStage, state: &mut ModelState) -> Result<()> {
+        state.params[0].data[0] += (fp_hash(&stage.fingerprint()) % 97) as f32;
+        Ok(())
+    }
+
+    fn measure(&self, state: &ModelState) -> Result<Measurement> {
+        Ok(Measurement {
+            accuracy: state.params[0].data[0] as f64 / 1e3,
+            bitops_cr: 1.0,
+            storage_cr: 1.0,
+            bitops: 0.0,
+            storage_bits: 0.0,
+            exit_probs: (0.0, 0.0),
+        })
+    }
+
+    fn extra_measurements(&self, _state: &ModelState) -> Result<Vec<(String, Measurement)>> {
+        Ok(Vec::new())
+    }
+}
+
+/// Two independent root branches: `A` alone, `B`/`C` sharing a prefix —
+/// 4 unique nodes, so quarantining one root leaves a whole sibling
+/// subtree that must still complete.
+fn chaos_plan() -> Planner {
+    let mut plan = Planner::new(PlanKey {
+        arch: "toy".into(),
+        dataset: "c10".into(),
+        scale: "chaos".into(),
+        base_steps: 4,
+        seed: 5,
+    });
+    let p3 = || Box::new(stages::Prune { ratio: 0.3, ..Default::default() });
+    let p6 = || Box::new(stages::Prune { ratio: 0.6, ..Default::default() });
+    let q = || Box::new(stages::Quantize { bits_w: 2.0, bits_a: 8.0, ..Default::default() });
+    plan.submit(Chain::new().push(p3()), "A", "x");
+    plan.submit(Chain::new().push(p6()).push(q()), "B", "x");
+    plan.submit(
+        Chain::new().push(p6()).push(q()).push(Box::new(stages::Prune {
+            ratio: 0.7,
+            ..Default::default()
+        })),
+        "C",
+        "x",
+    );
+    assert_eq!(plan.unique_nodes(), 4);
+    plan
+}
+
+fn fast_opts(cache: Option<PathBuf>, jobs: usize) -> ExecOpts {
+    ExecOpts {
+        jobs,
+        cache_dir: cache,
+        retry_backoff: Duration::from_millis(1),
+        ..Default::default()
+    }
+}
+
+/// A node that fails every attempt is quarantined with its chain while
+/// sibling branches complete; the run returns partial results plus a
+/// resumable failure report, and a fault-free rerun over the same cache
+/// finishes the job.
+#[test]
+fn ref_plan_quarantines_failing_node_and_resumes() {
+    let _g = serial();
+    faults::clear();
+    let base = ModelState::init_host(toy_arch(), 1);
+    let plan = chaos_plan();
+    let cache = tmp_dir("quarantine");
+
+    // Fault-free reference for the final equivalence check.
+    let want = plan.execute(&base, &HostRunner, &fast_opts(None, 1), || Ok(HostRunner)).unwrap();
+    assert_eq!(want.points.len(), 3);
+
+    // node_fail on the first 3 attempts: node A burns 1 try + 2 retries
+    // and is quarantined; B and C (executed after) never see a fault.
+    faults::configure("node_fail@n=3", 0).unwrap();
+    let opts = fast_opts(Some(cache.clone()), 1);
+    let partial = plan.execute(&base, &HostRunner, &opts, || Ok(HostRunner)).unwrap();
+    let fs = faults::stats();
+    faults::clear();
+
+    assert_eq!(partial.failures.len(), 1, "exactly one quarantined node");
+    assert_eq!(partial.failures[0].chains, vec!["A".to_string()]);
+    assert!(partial.failures[0].error.contains("node_fail"), "{}", partial.failures[0].error);
+    assert_eq!(partial.stats.quarantined, 1);
+    assert_eq!(partial.stats.skipped, 0, "A is a leaf; nothing below it");
+    let labels: Vec<&str> = partial.outcomes.iter().map(|o| o.label.as_str()).collect();
+    assert_eq!(labels, ["B", "C"], "sibling branches must complete");
+    assert_eq!(partial.points[..], want.points[1..], "partial results are the real results");
+    let nf = fs.iter().find(|s| s.site == "node_fail").unwrap();
+    assert_eq!((nf.evals, nf.fires), (6, 3), "3 attempts on A + 1 clean attempt each on B/C");
+
+    // Resume over the same cache with faults gone: only A re-executes.
+    let resumed = plan.execute(&base, &HostRunner, &opts, || Ok(HostRunner)).unwrap();
+    assert!(resumed.failures.is_empty());
+    assert_eq!(resumed.stats.cache_hits, 3);
+    assert_eq!(resumed.stats.executed, 1);
+    assert_eq!(resumed.points, want.points);
+    std::fs::remove_dir_all(&cache).ok();
+}
+
+/// A single transient failure is absorbed by the bounded-backoff retry:
+/// no quarantine, identical results to the fault-free run.
+#[test]
+fn ref_plan_transient_fault_retries_to_success() {
+    let _g = serial();
+    faults::clear();
+    let base = ModelState::init_host(toy_arch(), 1);
+    let plan = chaos_plan();
+    let opts = fast_opts(None, 1);
+    let want = plan.execute(&base, &HostRunner, &opts, || Ok(HostRunner)).unwrap();
+
+    faults::configure("node_fail@n=1", 0).unwrap();
+    let run = plan.execute(&base, &HostRunner, &opts, || Ok(HostRunner)).unwrap();
+    let fs = faults::stats();
+    faults::clear();
+
+    assert!(run.failures.is_empty(), "one transient failure must be retried away");
+    assert_eq!(run.stats.quarantined, 0);
+    assert_eq!(run.points, want.points);
+    let nf = fs.iter().find(|s| s.site == "node_fail").unwrap();
+    assert_eq!((nf.evals, nf.fires), (5, 1), "4 nodes + exactly one retry");
+}
+
+/// The cache_corrupt fault flips a published snapshot on disk; the rerun
+/// detects it through the state-header checksum, rotates it to
+/// `.corrupt`, recomputes the node, and replays the rest.
+#[test]
+fn ref_cache_corrupt_fault_is_detected_and_rotated() {
+    let _g = serial();
+    let base = ModelState::init_host(toy_arch(), 1);
+    let plan = chaos_plan();
+    let cache = tmp_dir("corrupt");
+    faults::configure("cache_corrupt@n=1", 0).unwrap();
+    let opts = fast_opts(Some(cache.clone()), 1);
+    let cold = plan.execute(&base, &HostRunner, &opts, || Ok(HostRunner)).unwrap();
+    faults::clear();
+    assert!(cold.failures.is_empty(), "on-disk corruption must not touch the in-memory run");
+    assert_eq!(cold.stats.executed, 4);
+
+    let resumed = plan.execute(&base, &HostRunner, &opts, || Ok(HostRunner)).unwrap();
+    assert!(resumed.failures.is_empty());
+    assert_eq!(resumed.stats.cache_hits, 3, "three snapshots replay clean");
+    assert_eq!(resumed.stats.executed, 1, "the corrupted node recomputes");
+    assert_eq!(resumed.points, cold.points);
+    let corrupt_files = std::fs::read_dir(&cache)
+        .unwrap()
+        .filter(|e| e.as_ref().unwrap().path().extension().is_some_and(|x| x == "corrupt"))
+        .count();
+    assert_eq!(corrupt_files, 1, "corrupt snapshot rotated aside for forensics");
+    std::fs::remove_dir_all(&cache).ok();
+}
+
+/// Worst case on the parallel executor: every node fails every attempt.
+/// The scheduler must still terminate (no stall, no hang), quarantine
+/// both roots, skip their subtrees, and report every chain cut off.
+#[test]
+fn ref_parallel_executor_survives_total_node_failure() {
+    let _g = serial();
+    let base = ModelState::init_host(toy_arch(), 1);
+    let plan = chaos_plan();
+    faults::configure("node_fail", 0).unwrap();
+    let opts = ExecOpts {
+        jobs: 2,
+        retries: 1,
+        retry_backoff: Duration::from_millis(1),
+        ..Default::default()
+    };
+    let run = plan.execute(&base, &HostRunner, &opts, || Ok(HostRunner)).unwrap();
+    faults::clear();
+
+    assert!(run.outcomes.is_empty());
+    assert!(run.points.is_empty());
+    assert_eq!(run.stats.quarantined, 2, "both root nodes quarantined");
+    assert_eq!(run.stats.skipped, 2, "downstream nodes cut off without execution");
+    let mut cut: Vec<String> = run.failures.iter().flat_map(|f| f.chains.clone()).collect();
+    cut.sort();
+    assert_eq!(cut, ["A", "B", "C"], "every chain is accounted for in the failure report");
+}

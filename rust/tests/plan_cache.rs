@@ -252,6 +252,44 @@ fn parallel_execution_matches_serial() {
 }
 
 #[test]
+fn corrupt_snapshot_is_rotated_and_recomputed() {
+    let base = ModelState::init_host(toy_arch(), 3);
+    let plan = overlapping_plan();
+    let cache = tmp_dir("cache_corrupt");
+    let cold = exec(&plan, &base, 1, Some(&cache));
+    assert_eq!(cold.stats.executed, 3);
+
+    // Flip one payload bit of the shared P node's snapshot — valid file
+    // length, valid header, silently different weights without the
+    // header checksum.
+    let id = plan.chain_node_ids(0)[0];
+    let sp = cache.join(format!("{id}.state"));
+    let mut bytes = std::fs::read(&sp).unwrap();
+    let off = bytes.iter().position(|&b| b == b'\n').unwrap() + 1;
+    bytes[off] ^= 0xff;
+    std::fs::write(&sp, &bytes).unwrap();
+
+    // The corrupt entry is detected, rotated aside to `.corrupt`, and
+    // recomputed; the two downstream nodes still replay from cache and
+    // every output matches the cold run bit-for-bit.
+    let resumed = exec(&plan, &base, 1, Some(&cache));
+    assert!(resumed.failures.is_empty());
+    assert_eq!(resumed.stats.cache_hits, 2);
+    assert_eq!(resumed.stats.executed, 1);
+    assert_eq!(resumed.points, cold.points);
+    assert!(
+        cache.join(format!("{id}.state.corrupt")).exists(),
+        "corrupt snapshot rotated aside for forensics"
+    );
+
+    // The republished snapshot is a clean hit on the next run.
+    let warm = exec(&plan, &base, 1, Some(&cache));
+    assert_eq!(warm.stats.cache_hits, 3);
+    assert_eq!(warm.points, cold.points);
+    std::fs::remove_dir_all(&cache).ok();
+}
+
+#[test]
 fn stale_tag_is_a_miss_not_a_wrong_answer() {
     let base = ModelState::init_host(toy_arch(), 3);
     let plan = overlapping_plan();

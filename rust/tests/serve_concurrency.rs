@@ -130,7 +130,7 @@ fn two_workers_match_sequential_serving() {
     opts.batch = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) };
     let pool = WorkerPool::start(Arc::new(state), opts);
     let up = pool.wait_ready(Duration::from_secs(600)).unwrap();
-    assert_eq!(up, 2, "both workers must come up");
+    assert_eq!(up.ready, 2, "both workers must come up");
 
     for i in 0..test_ds.len() {
         let (x, _) = test_ds.batch(&[i]);
@@ -379,7 +379,7 @@ fn ref_two_workers_match_sequential() {
     opts.batch = BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) };
     let pool = WorkerPool::start(Arc::new(state), opts);
     let up = pool.wait_ready(Duration::from_secs(60)).unwrap();
-    assert_eq!(up, 2, "both ref workers must come up");
+    assert_eq!(up.ready, 2, "both ref workers must come up");
 
     for i in 0..test_ds.len() {
         let (x, _) = test_ds.batch(&[i]);
@@ -531,7 +531,7 @@ fn ref_pool_serves_builtin_arch_matrix() {
         opts.batch = BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) };
         let pool = WorkerPool::start(Arc::new(state), opts);
         let up = pool.wait_ready(Duration::from_secs(60)).unwrap();
-        assert_eq!(up, 2, "{arch_name}: both ref workers must come up");
+        assert_eq!(up.ready, 2, "{arch_name}: both ref workers must come up");
 
         for i in 0..test_ds.len() {
             let (x, _) = test_ds.batch(&[i]);
